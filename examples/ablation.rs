@@ -1,0 +1,112 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. Per-move contribution: each transform applied alone vs the full
+//!    composition (which Figure 2-5 strategy buys what).
+//! 2. Test-suite quality: the §5.2 bias mechanism isolated — the same
+//!    planner with representative vs unrepresentative profiling shapes.
+//! 3. Round budget: speedup as a function of R (the paper fixes R = 5).
+//! 4. Failure injection: the correctness gate under rising coding-agent
+//!    bug rates (candidates must never ship incorrect).
+//!
+//! ```bash
+//! cargo run --release --example ablation
+//! ```
+
+use astra::coordinator::{optimize, AgentMode, Config};
+use astra::kernels;
+use astra::sim::{self, GpuModel};
+use astra::transforms::{self, Move};
+
+fn main() {
+    let model = GpuModel::h100();
+
+    // ---- 1. per-move contribution ---------------------------------------
+    println!("== Ablation 1: single-move speedups (geomean over Table-4 shapes) ==");
+    println!(
+        "{:<24} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "kernel", "hoist", "vector", "shuffle", "fastmath", "unroll8", "ALL"
+    );
+    for spec in kernels::all_specs() {
+        let base = (spec.build_baseline)();
+        let shapes = (spec.representative_shapes)();
+        let b = sim::profile_shapes(&model, &base, &shapes);
+        let single = |mv: Move| -> String {
+            match transforms::apply(&base, mv) {
+                Ok(k) => {
+                    let o = sim::profile_shapes(&model, &k, &shapes);
+                    format!("{:.2}x", sim::geomean_speedup(&b, &o))
+                }
+                Err(_) => "n/a".to_string(),
+            }
+        };
+        let all = {
+            let k = transforms::optimized_reference(&base);
+            let o = sim::profile_shapes(&model, &k, &shapes);
+            format!("{:.2}x", sim::geomean_speedup(&b, &o))
+        };
+        println!(
+            "{:<24} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+            spec.paper_name,
+            single(Move::Hoist),
+            single(Move::Vectorize),
+            single(Move::WarpShuffle),
+            single(Move::FastMath),
+            single(Move::Unroll(8)),
+            all
+        );
+    }
+
+    // ---- 2. test-suite quality (the §5.2 mechanism, isolated) -----------
+    println!("\n== Ablation 2: profiling-shape quality (same planner) ==");
+    for (label, mode, temp) in [
+        ("multi-agent + representative", AgentMode::Multi, 0.0f32),
+        ("single-agent + tiny shapes", AgentMode::Single, 0.0),
+    ] {
+        print!("{label:<32}");
+        for spec in kernels::all_specs() {
+            let cfg = Config {
+                mode,
+                temperature: temp,
+                bug_rate: 0.0,
+                ..Config::multi_agent()
+            };
+            let o = optimize(&spec, &cfg);
+            print!("  K{} {:.2}x", spec.index, o.final_speedup);
+        }
+        println!();
+    }
+
+    // ---- 3. round budget --------------------------------------------------
+    println!("\n== Ablation 3: speedup vs optimization rounds R (kernel 1) ==");
+    let spec = kernels::merge::spec();
+    for rounds in [1usize, 2, 3, 5, 8] {
+        let cfg = Config {
+            rounds,
+            bug_rate: 0.0,
+            temperature: 0.0,
+            ..Config::multi_agent()
+        };
+        let o = optimize(&spec, &cfg);
+        println!("  R = {rounds}: {:.2}x", o.final_speedup);
+    }
+
+    // ---- 4. failure injection ---------------------------------------------
+    println!("\n== Ablation 4: correctness gate under coding-agent bug rates ==");
+    for bug_rate in [0.0f32, 0.25, 0.5, 0.9] {
+        let cfg = Config {
+            bug_rate,
+            ..Config::multi_agent()
+        };
+        let mut all_correct = true;
+        let mut worst: f64 = f64::INFINITY;
+        for spec in kernels::all_specs() {
+            let o = optimize(&spec, &cfg);
+            all_correct &= o.final_correct;
+            worst = worst.min(o.final_speedup);
+        }
+        println!(
+            "  bug_rate {bug_rate:.2}: shipped kernels correct = {all_correct}, \
+             worst speedup {worst:.2}x"
+        );
+    }
+}

@@ -1,0 +1,206 @@
+"""AOT driver: lower every (kernel, variant, shape) to HLO *text*.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Outputs (under --outdir, default ../artifacts):
+  <name>.hlo.txt   one per manifest entry
+  manifest.json    input/output shapes+dtypes per entry, consumed by the
+                   Rust artifact registry (rust/src/runtime/registry.rs)
+
+Run via `make artifacts`; a no-op when inputs are unchanged (make-level
+stamp). Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import merge_attn, rmsnorm, silu
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _meta(specs):
+    return [
+        {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Manifest construction
+# ---------------------------------------------------------------------------
+
+# Per-kernel shape roles. `oracle` shapes are small (fast ground-truth
+# validation on the Rust side); `serve` shapes feed the decode-layer
+# serving pipeline.
+MERGE_SHAPES = {"oracle": (8, 4, 64), "serve": (32, 8, 64)}
+RMSNORM_SHAPES = {"oracle": (8, 256), "serve": (32, 512)}
+SILU_SHAPES = {"oracle": (8, 256), "serve": (32, 1024)}  # (batch, D); in = 2D
+SERVE_CFG = dict(batch=32, heads=8, head_dim=64, inter=1024)
+
+
+def entries():
+    """Yield (name, jitted_fn, input_specs, metadata) for every artifact."""
+    variants = {"base": "baseline", "opt": "optimized"}
+
+    for tag, variant in variants.items():
+        fn = getattr(merge_attn, variant)
+        for role, (s, h, d) in MERGE_SHAPES.items():
+            specs = [
+                _spec((s, h, d)),
+                _spec((s, h)),
+                _spec((s, h, d)),
+                _spec((s, h)),
+            ]
+            yield (
+                f"merge_{tag}_{role}",
+                fn,
+                specs,
+                {
+                    "kernel": "merge_attn_states_lse",
+                    "variant": variant,
+                    "role": role,
+                },
+            )
+
+    for tag, variant in variants.items():
+        fn = getattr(rmsnorm, variant)
+        for role, (b, d) in RMSNORM_SHAPES.items():
+            specs = [_spec((b, d)), _spec((b, d)), _spec((d,))]
+            yield (
+                f"rmsnorm_{tag}_{role}",
+                fn,
+                specs,
+                {
+                    "kernel": "fused_add_rmsnorm",
+                    "variant": variant,
+                    "role": role,
+                },
+            )
+
+    for tag, variant in variants.items():
+        fn = getattr(silu, variant)
+        for role, (b, d) in SILU_SHAPES.items():
+            specs = [_spec((b, 2 * d))]
+            yield (
+                f"silu_{tag}_{role}",
+                fn,
+                specs,
+                {"kernel": "silu_and_mul", "variant": variant, "role": role},
+            )
+
+    cfg = SERVE_CFG
+    hidden = cfg["heads"] * cfg["head_dim"]
+    layer_specs = [
+        _spec((cfg["batch"], hidden)),  # x
+        _spec((cfg["batch"], hidden)),  # r
+        _spec((cfg["batch"], cfg["heads"], cfg["head_dim"])),  # v_a
+        _spec((cfg["batch"], cfg["heads"])),  # s_a
+        _spec((cfg["batch"], cfg["heads"], cfg["head_dim"])),  # v_b
+        _spec((cfg["batch"], cfg["heads"])),  # s_b
+        _spec((hidden,)),  # w_norm
+        _spec((hidden, hidden)),  # w_o
+        _spec((hidden, 2 * cfg["inter"])),  # w_gateup
+        _spec((cfg["inter"], hidden)),  # w_down
+    ]
+    for tag, variant in variants.items():
+
+        def layer_fn(*args, _v=variant):
+            return model.decode_layer(*args, variant=_v)
+
+        yield (
+            f"decode_layer_{tag}_serve",
+            jax.jit(layer_fn),
+            layer_specs,
+            {"kernel": "decode_layer", "variant": variant, "role": "serve"},
+        )
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--outdir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="substring filter on artifact names"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = []
+    for name, fn, specs, meta in entries():
+        if args.only and args.only not in name:
+            continue
+        lowered = fn.lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_meta = _meta(jax.tree_util.tree_leaves(lowered.out_info))
+        manifest.append(
+            {
+                "name": name,
+                "file": fname,
+                **meta,
+                "inputs": _meta(specs),
+                "outputs": out_meta,
+                "tuple_output": True,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest)} artifacts)")
+
+    # Line-based twin for the Rust registry (the offline build carries no
+    # JSON parser): name|file|kernel|variant|role|in=shape:dtype,...|out=...
+    def fmt(metas):
+        return ",".join(
+            "x".join(str(d) for d in m["shape"]) + ":" + m["dtype"]
+            for m in metas
+        )
+
+    tpath = os.path.join(args.outdir, "manifest.txt")
+    with open(tpath, "w") as f:
+        for e in manifest:
+            f.write(
+                "|".join(
+                    [
+                        e["name"],
+                        e["file"],
+                        e["kernel"],
+                        e["variant"],
+                        e["role"],
+                        "in=" + fmt(e["inputs"]),
+                        "out=" + fmt(e["outputs"]),
+                    ]
+                )
+                + "\n"
+            )
+    print(f"wrote {tpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime).
+
+Each module exposes `baseline` and `optimized` jitted entry points plus the
+pure-jnp oracles in `ref`.
+"""
+
+from . import merge_attn, ref, rmsnorm, silu  # noqa: F401

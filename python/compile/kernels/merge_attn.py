@@ -1,0 +1,105 @@
+"""Pallas implementations of merge_attn_states_lse (Kernel 1).
+
+Two variants mirror the paper's Figure 2 case study, translated to TPU
+(DESIGN.md §Hardware-Adaptation):
+
+  baseline  — the mixing weights are materialized and re-derived at full
+              [rows, H, D] rank, i.e. the exponentials/normalization are
+              recomputed "per element" exactly like the un-hoisted CUDA
+              loop body.
+  optimized — the weights are computed once per (row, head) at [rows, H]
+              rank and broadcast over the head dimension, leaving the
+              element body a single fused multiply-add; rows are blocked
+              so each grid step moves one contiguous tile HBM->VMEM.
+
+Both run under interpret=True (CPU PJRT can not execute Mosaic
+custom-calls) and are validated against ref.merge_attn_states_lse.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MERGE_EPS
+
+# Rows handled per grid step. 8 keeps VMEM usage tiny at every shape we AOT
+# while still amortizing grid overhead; see DESIGN.md §Perf for the sweep.
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _baseline_kernel(va_ref, sa_ref, vb_ref, sb_ref, vo_ref, so_ref):
+    va = va_ref[...]
+    vb = vb_ref[...]
+    sa = sa_ref[...]
+    sb = sb_ref[...]
+    # Un-hoisted: broadcast the scores to full rank FIRST, then take the
+    # exponentials / reciprocal at [rows, H, D] — the TPU rendition of
+    # recomputing smax/wa/wb/inv inside the inner element loop (Fig. 2a).
+    sa3 = jnp.broadcast_to(sa[:, :, None], va.shape)
+    sb3 = jnp.broadcast_to(sb[:, :, None], vb.shape)
+    m3 = jnp.maximum(sa3, sb3)
+    wa3 = jnp.exp(sa3 - m3)
+    wb3 = jnp.exp(sb3 - m3)
+    inv3 = 1.0 / (wa3 + wb3 + MERGE_EPS)
+    vo_ref[...] = (wa3 * inv3) * va + (wb3 * inv3) * vb
+    # Score output (computed once per (row, head) even in the baseline —
+    # the paper's baseline hot loop is only the V merge).
+    m = jnp.maximum(sa, sb)
+    wa = jnp.exp(sa - m)
+    wb = jnp.exp(sb - m)
+    so_ref[...] = m + jnp.log(wa + wb)
+
+
+def _optimized_kernel(va_ref, sa_ref, vb_ref, sb_ref, vo_ref, so_ref):
+    va = va_ref[...]
+    vb = vb_ref[...]
+    sa = sa_ref[...]
+    sb = sb_ref[...]
+    # Hoisted: all transcendental work happens once per (row, head) at
+    # [rows, H] rank; the element body is one fused multiply-add (Fig. 2b).
+    m = jnp.maximum(sa, sb)
+    wa = jnp.exp(sa - m)
+    wb = jnp.exp(sb - m)
+    inv = 1.0 / (wa + wb + MERGE_EPS)
+    a = (wa * inv)[:, :, None]
+    b = (wb * inv)[:, :, None]
+    vo_ref[...] = a * va + b * vb
+    so_ref[...] = m + jnp.log(wa + wb)
+
+
+def _call(kernel, v_a, s_a, v_b, s_b, block_rows):
+    seq, heads, dim = v_a.shape
+    rows = min(block_rows, seq)
+    assert seq % rows == 0, f"seq={seq} not a multiple of block_rows={rows}"
+    grid = (seq // rows,)
+    v_spec = pl.BlockSpec((rows, heads, dim), lambda i: (i, 0, 0))
+    s_spec = pl.BlockSpec((rows, heads), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[v_spec, s_spec, v_spec, s_spec],
+        out_specs=[v_spec, s_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((seq, heads, dim), v_a.dtype),
+            jax.ShapeDtypeStruct((seq, heads), s_a.dtype),
+        ],
+        interpret=True,
+    )(v_a, s_a, v_b, s_b)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def baseline(v_a, s_a, v_b, s_b, block_rows=DEFAULT_BLOCK_ROWS):
+    """Baseline merge_attn_states_lse: per-element weight recomputation."""
+    v, s = _call(_baseline_kernel, v_a, s_a, v_b, s_b, block_rows)
+    return v, s
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def optimized(v_a, s_a, v_b, s_b, block_rows=DEFAULT_BLOCK_ROWS):
+    """Optimized merge_attn_states_lse: hoisted per-(row,head) weights."""
+    v, s = _call(_optimized_kernel, v_a, s_a, v_b, s_b, block_rows)
+    return v, s

@@ -1,0 +1,66 @@
+"""Pure-jnp correctness oracles for the three SGLang kernels.
+
+These are the ground truth every Pallas variant (and, transitively, every
+Rust-side candidate kernel produced by the Astra agents) is validated
+against.  They mirror Table 1 of the paper:
+
+  merge_attn_states_lse :  V = (e^Sa Va + e^Sb Vb) / (e^Sa + e^Sb)
+                           S = log(e^Sa + e^Sb)
+  fused_add_rmsnorm     :  y = (x + r) / sqrt(mean((x+r)^2) + eps) * w
+  silu_and_mul          :  out = SiLU(x) * g,  SiLU(z) = z / (1 + e^-z)
+
+All I/O is float32 (the interchange dtype with the Rust PJRT runtime); the
+half-precision memory-traffic story lives in the Rust IR / simulator layer.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Matches the epsilon the paper's Figure 2 baseline adds to the weight sum.
+MERGE_EPS = 1e-12
+RMSNORM_EPS = 1e-6
+
+
+def merge_attn_states_lse(v_a, s_a, v_b, s_b):
+    """Merge two partial attention states with their log-sum-exp scores.
+
+    Args:
+      v_a, v_b: [S, H, D] partial attention outputs.
+      s_a, s_b: [S, H] log-sum-exp scores.
+    Returns:
+      (v_out [S, H, D], s_out [S, H])
+    """
+    m = jnp.maximum(s_a, s_b)
+    w_a = jnp.exp(s_a - m)
+    w_b = jnp.exp(s_b - m)
+    inv = 1.0 / (w_a + w_b + MERGE_EPS)
+    a = (w_a * inv)[:, :, None]
+    b = (w_b * inv)[:, :, None]
+    v_out = a * v_a + b * v_b
+    s_out = m + jnp.log(w_a + w_b)
+    return v_out, s_out
+
+
+def fused_add_rmsnorm(x, r, w, eps=RMSNORM_EPS):
+    """Residual-add + RMSNorm, SGLang semantics.
+
+    Args:
+      x: [B, D] hidden states.
+      r: [B, D] residual.
+      w: [D] norm weight.
+    Returns:
+      (y [B, D] normalized output, r_new [B, D] updated residual = x + r)
+    """
+    h = x + r
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    y = h * (1.0 / jnp.sqrt(var + eps)) * w[None, :]
+    return y, h
+
+
+def silu_and_mul(xg):
+    """Fused SiLU-gate: input is [B, 2*D] with x = xg[:, :D], g = xg[:, D:]."""
+    d = xg.shape[-1] // 2
+    x = xg[:, :d]
+    g = xg[:, d:]
+    return (x / (1.0 + jnp.exp(-x))) * g

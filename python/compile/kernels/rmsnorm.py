@@ -1,0 +1,117 @@
+"""Pallas implementations of fused_add_rmsnorm (Kernel 2).
+
+Two variants mirror the paper's Figure 3 case study, translated to TPU
+(DESIGN.md §Hardware-Adaptation):
+
+  baseline  — the row reduction is a *serial chunk loop* (lax.fori_loop over
+              fixed-size slices of the row), the TPU rendition of the
+              shared-memory tree reduction that progressively idles lanes
+              and synchronizes between steps.
+  optimized — the reduction is a single register/VMEM-resident vectorized
+              jnp.sum over the whole row tile (the VPU cross-lane analogue
+              of the __shfl_down_sync warp reduction), and the division is
+              replaced by reciprocal-multiply (rsqrt).
+
+Both run under interpret=True and are validated against
+ref.fused_add_rmsnorm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import RMSNORM_EPS
+
+DEFAULT_BLOCK_ROWS = 8
+# Chunk width of the baseline's serial reduction loop (must divide D).
+BASELINE_CHUNK = 128
+
+
+def _baseline_kernel(x_ref, r_ref, w_ref, y_ref, rn_ref, *, eps, chunk):
+    x = x_ref[...]
+    r = r_ref[...]
+    w = w_ref[...]
+    h = x + r
+    rows, d = h.shape
+    steps = d // chunk
+
+    # Serial tree-reduction stand-in: accumulate sum-of-squares chunk by
+    # chunk with a loop-carried accumulator (Fig. 3a: stepwise reduction
+    # with a barrier per step).
+    def body(i, acc):
+        c = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+        return acc + jnp.sum(c * c, axis=1)
+
+    ss = jax.lax.fori_loop(0, steps, body, jnp.zeros((rows,), h.dtype))
+    # Baseline normalizes with an explicit divide (no reciprocal trick).
+    y_ref[...] = h / jnp.sqrt(ss / d + eps)[:, None] * w[None, :]
+    rn_ref[...] = h
+
+
+def _optimized_kernel(x_ref, r_ref, w_ref, y_ref, rn_ref, *, eps):
+    x = x_ref[...]
+    r = r_ref[...]
+    w = w_ref[...]
+    h = x + r
+    d = h.shape[-1]
+    # Register-resident vectorized reduction (Fig. 3b) + rsqrt
+    # (reciprocal-multiply instead of divide).
+    ss = jnp.sum(h * h, axis=1)
+    inv = jax.lax.rsqrt(ss / d + eps)
+    y_ref[...] = h * inv[:, None] * w[None, :]
+    rn_ref[...] = h
+
+
+def _specs(batch, d, rows):
+    grid = (batch // rows,)
+    row_spec = pl.BlockSpec((rows, d), lambda i: (i, 0))
+    w_spec = pl.BlockSpec((d,), lambda i: (0,))
+    return grid, row_spec, w_spec
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def baseline(x, r, w, block_rows=DEFAULT_BLOCK_ROWS):
+    """Baseline fused_add_rmsnorm: serial chunked reduction, divide."""
+    batch, d = x.shape
+    rows = min(block_rows, batch)
+    assert batch % rows == 0 and d % BASELINE_CHUNK == 0
+    grid, row_spec, w_spec = _specs(batch, d, rows)
+    kernel = functools.partial(
+        _baseline_kernel, eps=RMSNORM_EPS, chunk=BASELINE_CHUNK
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, w_spec],
+        out_specs=[row_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, d), x.dtype),
+            jax.ShapeDtypeStruct((batch, d), x.dtype),
+        ],
+        interpret=True,
+    )(x, r, w)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def optimized(x, r, w, block_rows=DEFAULT_BLOCK_ROWS):
+    """Optimized fused_add_rmsnorm: vectorized reduction, rsqrt."""
+    batch, d = x.shape
+    rows = min(block_rows, batch)
+    assert batch % rows == 0
+    grid, row_spec, w_spec = _specs(batch, d, rows)
+    kernel = functools.partial(_optimized_kernel, eps=RMSNORM_EPS)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, w_spec],
+        out_specs=[row_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, d), x.dtype),
+            jax.ShapeDtypeStruct((batch, d), x.dtype),
+        ],
+        interpret=True,
+    )(x, r, w)

@@ -1,0 +1,92 @@
+"""Pallas implementations of silu_and_mul (Kernel 3).
+
+Two variants mirror the paper's Figures 4-5 case study, translated to TPU
+(DESIGN.md §Hardware-Adaptation):
+
+  baseline  — processes the row in a serial chunk loop (the scalar-load
+              analogue of Fig. 4a) and computes SiLU with an explicit
+              division x / (1 + exp(-x)) (Fig. 5a).
+  optimized — a single vectorized pass over the whole row tile (the
+              half2/one-DMA analogue of Fig. 4b) with the division replaced
+              by a reciprocal-multiply sequence (Fig. 5b).
+
+Both run under interpret=True and are validated against ref.silu_and_mul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8
+# Chunk width of the baseline's serial loop (must divide D).
+BASELINE_CHUNK = 128
+
+
+def _baseline_kernel(xg_ref, o_ref, *, d, chunk):
+    xg = xg_ref[...]
+    x = xg[:, :d]
+    g = xg[:, d:]
+    rows = x.shape[0]
+    steps = d // chunk
+
+    # Serial chunked pass with explicit division (Figs. 4a + 5a).
+    def body(i, out):
+        xc = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+        gc = jax.lax.dynamic_slice_in_dim(g, i * chunk, chunk, axis=1)
+        s = xc / (1.0 + jnp.exp(-xc))
+        return jax.lax.dynamic_update_slice(out, s * gc, (0, i * chunk))
+
+    o_ref[...] = jax.lax.fori_loop(
+        0, steps, body, jnp.zeros((rows, d), x.dtype)
+    )
+
+
+def _optimized_kernel(xg_ref, o_ref, *, d):
+    xg = xg_ref[...]
+    x = xg[:, :d]
+    g = xg[:, d:]
+    # Whole-tile vectorized pass; reciprocal-multiply instead of divide
+    # (Figs. 4b + 5b).
+    s = x * (1.0 / (1.0 + jnp.exp(-x)))
+    o_ref[...] = s * g
+
+
+def _call(kernel, xg, d, rows):
+    batch = xg.shape[0]
+    grid = (batch // rows,)
+    in_spec = pl.BlockSpec((rows, 2 * d), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((rows, d), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, d), xg.dtype),
+        interpret=True,
+    )(xg)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def baseline(xg, block_rows=DEFAULT_BLOCK_ROWS):
+    """Baseline silu_and_mul: serial chunk loop, explicit division."""
+    batch, dd = xg.shape
+    d = dd // 2
+    rows = min(block_rows, batch)
+    assert batch % rows == 0 and d % BASELINE_CHUNK == 0
+    kernel = functools.partial(_baseline_kernel, d=d, chunk=BASELINE_CHUNK)
+    return _call(kernel, xg, d, rows)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def optimized(xg, block_rows=DEFAULT_BLOCK_ROWS):
+    """Optimized silu_and_mul: vectorized pass, reciprocal-multiply."""
+    batch, dd = xg.shape
+    d = dd // 2
+    rows = min(block_rows, batch)
+    assert batch % rows == 0
+    kernel = functools.partial(_optimized_kernel, d=d)
+    return _call(kernel, xg, d, rows)

@@ -1,0 +1,80 @@
+"""Layer-2 JAX model: a decode-layer compute graph composing the kernels.
+
+This is the SGLang-reintegration stand-in (DESIGN.md §6): the three Astra
+kernels embedded in the dataflow of one transformer decode step —
+
+    h, r' = fused_add_rmsnorm(x, r, w_norm)          (Kernel 2)
+    v, s  = merge_attn_states_lse(v_a, s_a, v_b, s_b) (Kernel 1, the
+            two partial attention states of a chunked-prefill/split-KV step)
+    attn  = v flattened per row, projected by w_o
+    u     = (h + attn) @ w_gateup
+    mlp   = silu_and_mul(u)                           (Kernel 3)
+    out   = mlp @ w_down
+
+`decode_layer` is lowered AOT for both kernel variants; the Rust serving
+pipeline (rust/src/pipeline/) executes the artifacts via PJRT and measures
+end-to-end latency/throughput, baseline vs optimized.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import merge_attn, rmsnorm, silu
+
+
+@functools.partial(jax.jit, static_argnames=("variant",))
+def decode_layer(
+    x, r, v_a, s_a, v_b, s_b, w_norm, w_o, w_gateup, w_down, variant="optimized"
+):
+    """One decode-layer step over a batch of requests.
+
+    Shapes (B = batch of decode tokens, H = heads, D = head dim,
+    Dh = hidden = H*D, Di = intermediate):
+      x, r            [B, Dh]
+      v_a, v_b        [B, H, D]   partial attention outputs
+      s_a, s_b        [B, H]      partial log-sum-exp scores
+      w_norm          [Dh]
+      w_o             [Dh, Dh]
+      w_gateup        [Dh, 2*Di]
+      w_down          [Di, Dh]
+    Returns:
+      (out [B, Dh], r_new [B, Dh], s_out [B, H])
+    """
+    k = {
+        "baseline": (merge_attn.baseline, rmsnorm.baseline, silu.baseline),
+        "optimized": (merge_attn.optimized, rmsnorm.optimized, silu.optimized),
+    }[variant]
+    merge_fn, rmsnorm_fn, silu_fn = k
+
+    h, r_new = rmsnorm_fn(x, r, w_norm)
+    v, s_out = merge_fn(v_a, s_a, v_b, s_b)
+    b = x.shape[0]
+    attn = v.reshape(b, -1) @ w_o
+    u = (h + attn) @ w_gateup
+    mlp = silu_fn(u)
+    out = mlp @ w_down
+    return out, r_new, s_out
+
+
+def example_inputs(batch=64, heads=8, head_dim=128, inter=2048, seed=0):
+    """Deterministic example inputs for AOT lowering and tests."""
+    hidden = heads * head_dim
+    keys = jax.random.split(jax.random.PRNGKey(seed), 10)
+    f = jnp.float32
+    return dict(
+        x=jax.random.normal(keys[0], (batch, hidden), f),
+        r=jax.random.normal(keys[1], (batch, hidden), f),
+        v_a=jax.random.normal(keys[2], (batch, heads, head_dim), f),
+        s_a=jax.random.normal(keys[3], (batch, heads), f),
+        v_b=jax.random.normal(keys[4], (batch, heads, head_dim), f),
+        s_b=jax.random.normal(keys[5], (batch, heads), f),
+        w_norm=1.0 + 0.1 * jax.random.normal(keys[6], (hidden,), f),
+        w_o=jax.random.normal(keys[7], (hidden, hidden), f) / hidden**0.5,
+        w_gateup=jax.random.normal(keys[8], (hidden, 2 * inter), f)
+        / hidden**0.5,
+        w_down=jax.random.normal(keys[9], (inter, hidden), f) / inter**0.5,
+    )

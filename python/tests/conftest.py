@@ -1,0 +1,16 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile.*` importable when pytest is run from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# Keep jax on CPU and quiet.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,86 @@
+"""Kernel 1 (merge_attn_states_lse): Pallas variants vs pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import merge_attn, ref
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _inputs(rng, s, h, d, scale=3.0):
+    v_a = rng.standard_normal((s, h, d), dtype=np.float32)
+    v_b = rng.standard_normal((s, h, d), dtype=np.float32)
+    s_a = (scale * rng.standard_normal((s, h))).astype(np.float32)
+    s_b = (scale * rng.standard_normal((s, h))).astype(np.float32)
+    return v_a, s_a, v_b, s_b
+
+
+@pytest.mark.parametrize("variant", [merge_attn.baseline, merge_attn.optimized])
+def test_matches_oracle(rng, variant):
+    args = _inputs(rng, 8, 4, 64)
+    v, s = variant(*args)
+    v_ref, s_ref = ref.merge_attn_states_lse(*args)
+    np.testing.assert_allclose(v, v_ref, **TOL)
+    np.testing.assert_allclose(s, s_ref, **TOL)
+
+
+def test_variants_agree(rng):
+    args = _inputs(rng, 16, 8, 128)
+    vb, sb = merge_attn.baseline(*args)
+    vo, so = merge_attn.optimized(*args)
+    np.testing.assert_allclose(vb, vo, **TOL)
+    np.testing.assert_allclose(sb, so, **TOL)
+
+
+def test_extreme_scores_stable(rng):
+    """Large score gaps must not overflow (log-sum-exp trick)."""
+    v_a, s_a, v_b, s_b = _inputs(rng, 4, 2, 32)
+    s_a = s_a + 80.0
+    s_b = s_b - 80.0
+    for variant in (merge_attn.baseline, merge_attn.optimized):
+        v, s = variant(v_a, s_a, v_b, s_b)
+        assert np.all(np.isfinite(np.asarray(v)))
+        assert np.all(np.isfinite(np.asarray(s)))
+        # With s_a >> s_b the merge must collapse to state a.
+        np.testing.assert_allclose(v, v_a, rtol=1e-4, atol=1e-4)
+
+
+def test_equal_scores_average(rng):
+    v_a, s_a, v_b, _ = _inputs(rng, 4, 2, 32)
+    v, s = merge_attn.optimized(v_a, s_a, v_b, s_a)
+    np.testing.assert_allclose(v, 0.5 * (v_a + v_b), **TOL)
+    np.testing.assert_allclose(s, s_a + np.log(2.0), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.sampled_from([4, 8, 16]),
+    h=st.sampled_from([1, 2, 8]),
+    d=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_matches_oracle(s, h, d, seed):
+    rng = np.random.default_rng(seed)
+    args = _inputs(rng, s, h, d)
+    v, sc = merge_attn.optimized(*args, block_rows=4)
+    v_ref, s_ref = ref.merge_attn_states_lse(*args)
+    np.testing.assert_allclose(v, v_ref, **TOL)
+    np.testing.assert_allclose(sc, s_ref, **TOL)
+
+
+def test_block_rows_invariance(rng):
+    """Result must not depend on the BlockSpec row blocking."""
+    args = _inputs(rng, 16, 4, 64)
+    v1, s1 = merge_attn.optimized(*args, block_rows=2)
+    v2, s2 = merge_attn.optimized(*args, block_rows=16)
+    np.testing.assert_allclose(v1, v2, **TOL)
+    np.testing.assert_allclose(s1, s2, **TOL)
+
+
+def test_output_dtypes(rng):
+    args = _inputs(rng, 4, 2, 32)
+    v, s = merge_attn.optimized(*args)
+    assert v.dtype == jnp.float32 and s.dtype == jnp.float32

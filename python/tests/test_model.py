@@ -1,0 +1,44 @@
+"""L2 decode layer: variant equivalence and shape checks."""
+
+import numpy as np
+
+from compile import model
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _cfg():
+    return dict(batch=8, heads=4, head_dim=64, inter=256)
+
+
+def test_decode_layer_shapes():
+    cfg = _cfg()
+    inputs = model.example_inputs(**cfg)
+    out, r_new, s_out = model.decode_layer(*inputs.values(), variant="optimized")
+    hidden = cfg["heads"] * cfg["head_dim"]
+    assert out.shape == (cfg["batch"], hidden)
+    assert r_new.shape == (cfg["batch"], hidden)
+    assert s_out.shape == (cfg["batch"], cfg["heads"])
+
+
+def test_variants_equivalent():
+    """Baseline and optimized kernel stacks compute the same layer."""
+    inputs = model.example_inputs(**_cfg())
+    base = model.decode_layer(*inputs.values(), variant="baseline")
+    opt = model.decode_layer(*inputs.values(), variant="optimized")
+    for b, o in zip(base, opt):
+        np.testing.assert_allclose(b, o, **TOL)
+
+
+def test_outputs_finite():
+    inputs = model.example_inputs(**_cfg(), seed=3)
+    for t in model.decode_layer(*inputs.values(), variant="optimized"):
+        assert np.all(np.isfinite(np.asarray(t)))
+
+
+def test_deterministic():
+    inputs = model.example_inputs(**_cfg())
+    a = model.decode_layer(*inputs.values(), variant="optimized")
+    b = model.decode_layer(*inputs.values(), variant="optimized")
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,79 @@
+"""Kernel 2 (fused_add_rmsnorm): Pallas variants vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, rmsnorm
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _inputs(rng, b, d):
+    x = rng.standard_normal((b, d), dtype=np.float32)
+    r = rng.standard_normal((b, d), dtype=np.float32)
+    w = (1.0 + 0.1 * rng.standard_normal(d)).astype(np.float32)
+    return x, r, w
+
+
+@pytest.mark.parametrize("variant", [rmsnorm.baseline, rmsnorm.optimized])
+def test_matches_oracle(rng, variant):
+    x, r, w = _inputs(rng, 8, 256)
+    y, rn = variant(x, r, w)
+    y_ref, rn_ref = ref.fused_add_rmsnorm(x, r, w)
+    np.testing.assert_allclose(y, y_ref, **TOL)
+    np.testing.assert_allclose(rn, rn_ref, **TOL)
+
+
+def test_variants_agree(rng):
+    x, r, w = _inputs(rng, 16, 512)
+    yb, rb = rmsnorm.baseline(x, r, w)
+    yo, ro = rmsnorm.optimized(x, r, w)
+    np.testing.assert_allclose(yb, yo, **TOL)
+    np.testing.assert_allclose(rb, ro, **TOL)
+
+
+def test_residual_is_sum(rng):
+    x, r, w = _inputs(rng, 8, 256)
+    _, rn = rmsnorm.optimized(x, r, w)
+    np.testing.assert_allclose(rn, x + r, **TOL)
+
+
+def test_unit_norm_rows(rng):
+    """Each output row of y/w has RMS 1 (up to eps)."""
+    x, r, w = _inputs(rng, 8, 256)
+    y, _ = rmsnorm.optimized(x, r, w)
+    z = np.asarray(y) / w[None, :]
+    rms = np.sqrt(np.mean(z * z, axis=1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_zero_input_finite():
+    x = np.zeros((8, 256), np.float32)
+    w = np.ones(256, np.float32)
+    y, rn = rmsnorm.optimized(x, x, w)
+    assert np.all(np.isfinite(np.asarray(y)))
+    np.testing.assert_allclose(rn, 0.0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.sampled_from([4, 8, 16]),
+    d=st.sampled_from([128, 256, 512, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_matches_oracle(b, d, seed):
+    rng = np.random.default_rng(seed)
+    x, r, w = _inputs(rng, b, d)
+    for variant in (rmsnorm.baseline, rmsnorm.optimized):
+        y, rn = variant(x, r, w, block_rows=4)
+        y_ref, rn_ref = ref.fused_add_rmsnorm(x, r, w)
+        np.testing.assert_allclose(y, y_ref, **TOL)
+        np.testing.assert_allclose(rn, rn_ref, **TOL)
+
+
+def test_block_rows_invariance(rng):
+    x, r, w = _inputs(rng, 16, 256)
+    y1, _ = rmsnorm.optimized(x, r, w, block_rows=2)
+    y2, _ = rmsnorm.optimized(x, r, w, block_rows=16)
+    np.testing.assert_allclose(y1, y2, **TOL)

@@ -1,0 +1,64 @@
+"""Kernel 3 (silu_and_mul): Pallas variants vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, silu
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _inputs(rng, b, d):
+    return rng.standard_normal((b, 2 * d), dtype=np.float32)
+
+
+@pytest.mark.parametrize("variant", [silu.baseline, silu.optimized])
+def test_matches_oracle(rng, variant):
+    xg = _inputs(rng, 8, 256)
+    out = variant(xg)
+    np.testing.assert_allclose(out, ref.silu_and_mul(xg), **TOL)
+
+
+def test_variants_agree(rng):
+    xg = _inputs(rng, 16, 512)
+    np.testing.assert_allclose(silu.baseline(xg), silu.optimized(xg), **TOL)
+
+
+def test_zero_gate_zero_output(rng):
+    xg = _inputs(rng, 4, 256)
+    xg[:, 256:] = 0.0
+    np.testing.assert_allclose(silu.optimized(xg), 0.0, atol=1e-6)
+
+
+def test_silu_saturation():
+    """SiLU(z) -> z for large z, -> 0 for very negative z."""
+    b, d = 4, 256
+    xg = np.zeros((b, 2 * d), np.float32)
+    xg[:, :d] = 30.0
+    xg[:, d:] = 1.0
+    np.testing.assert_allclose(silu.optimized(xg), 30.0, rtol=1e-5)
+    xg[:, :d] = -30.0
+    np.testing.assert_allclose(silu.optimized(xg), 0.0, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.sampled_from([4, 8, 16]),
+    d=st.sampled_from([128, 256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_matches_oracle(b, d, seed):
+    rng = np.random.default_rng(seed)
+    xg = _inputs(rng, b, d)
+    for variant in (silu.baseline, silu.optimized):
+        np.testing.assert_allclose(
+            variant(xg, block_rows=4), ref.silu_and_mul(xg), **TOL
+        )
+
+
+def test_block_rows_invariance(rng):
+    xg = _inputs(rng, 16, 256)
+    o1 = silu.optimized(xg, block_rows=2)
+    o2 = silu.optimized(xg, block_rows=16)
+    np.testing.assert_allclose(o1, o2, **TOL)

@@ -1,0 +1,88 @@
+//! L3 performance bench: the coordinator's hot paths in isolation.
+//!
+//! These are the numbers the §Perf pass in EXPERIMENTS.md optimizes:
+//!   * simulator throughput (dominates profiling),
+//!   * interpreter throughput (dominates testing),
+//!   * transform application (dominates coding),
+//!   * one full coordinator round trip per kernel.
+//!
+//! ```bash
+//! cargo bench --bench coordinator_hotpath
+//! ```
+
+use astra::coordinator::{optimize, Config};
+use astra::interp;
+use astra::kernels;
+use astra::sim::{self, GpuModel};
+use astra::transforms::{self, Move};
+use astra::util::timing::bench;
+
+fn main() {
+    let model = GpuModel::h100();
+
+    println!("== L3 hot-path microbenchmarks ==\n");
+
+    // Simulator: one launch estimate (called ~dozens of times per round).
+    for spec in kernels::all_specs() {
+        let k = (spec.build_baseline)();
+        let d = &(spec.representative_shapes)()[0];
+        let s = bench(20, 200, || sim::simulate(&model, &k, d));
+        println!(
+            "simulate {:<24} median {:>8.1} us/call",
+            spec.paper_name,
+            s.median_us()
+        );
+    }
+    println!();
+
+    // Interpreter: one correctness case (the testing agent's unit of work).
+    for spec in kernels::all_specs() {
+        let k = (spec.build_baseline)();
+        let dims = &(spec.test_shapes)()[0];
+        let inputs = (spec.gen_inputs)(dims, 1);
+        let refs: Vec<(&str, Vec<f32>)> =
+            inputs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+        let s = bench(2, 10, || {
+            interp::run_with_inputs(&k, dims, &refs).unwrap()
+        });
+        println!(
+            "interpret {:<23} median {:>8.2} ms/case",
+            spec.paper_name,
+            s.median_ms()
+        );
+    }
+    println!();
+
+    // Transforms: full optimized composition.
+    for spec in kernels::all_specs() {
+        let k = (spec.build_baseline)();
+        let s = bench(10, 100, || transforms::optimized_reference(&k));
+        println!(
+            "transform-all {:<19} median {:>8.1} us",
+            spec.paper_name,
+            s.median_us()
+        );
+    }
+    // Single moves on silu.
+    let k = kernels::silu::build_baseline();
+    for mv in [Move::Vectorize, Move::FastMath, Move::Unroll(8)] {
+        let s = bench(10, 200, || transforms::apply(&k, mv));
+        println!("apply {:<27} median {:>8.1} us", mv.name(), s.median_us());
+    }
+    println!();
+
+    // Full coordinator runs (the end-to-end L3 unit).
+    let cfg = Config {
+        bug_rate: 0.0,
+        temperature: 0.0,
+        ..Config::multi_agent()
+    };
+    for spec in kernels::all_specs() {
+        let s = bench(1, 5, || optimize(&spec, &cfg));
+        println!(
+            "optimize {:<24} median {:>8.1} ms/run (R=5)",
+            spec.paper_name,
+            s.median_ms()
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate Table 2 (baseline vs optimized kernels) and time the
+//! full multi-agent optimization that produces it.
+//!
+//! ```bash
+//! cargo bench --bench table2
+//! ```
+
+use astra::coordinator::{optimize_all_parallel, Config};
+use astra::report;
+use astra::util::timing::bench;
+
+fn main() {
+    let cfg = Config {
+        bug_rate: 0.0,
+        temperature: 0.0,
+        ..Config::multi_agent()
+    };
+    let outcomes = optimize_all_parallel(&cfg);
+    println!("{}", report::table2(&outcomes));
+
+    // Harness cost: one full 3-kernel multi-agent optimization run.
+    let stats = bench(1, 5, || optimize_all_parallel(&cfg));
+    println!(
+        "harness: full 3-kernel optimization run: median {:.1} ms (p10 {:.1} / p90 {:.1})",
+        stats.median_ms(),
+        stats.p10_ns / 1e6,
+        stats.p90_ns / 1e6
+    );
+}

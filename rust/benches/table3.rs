@@ -1,0 +1,39 @@
+//! Bench: regenerate Table 3 (single-agent vs multi-agent comparison).
+//!
+//! ```bash
+//! cargo bench --bench table3
+//! ```
+
+use astra::coordinator::{optimize_all_parallel, Config};
+use astra::report;
+
+fn main() {
+    let ma_cfg = Config {
+        bug_rate: 0.0,
+        ..Config::multi_agent()
+    };
+    let sa_cfg = Config {
+        bug_rate: 0.0,
+        ..Config::single_agent()
+    };
+    let sa = optimize_all_parallel(&sa_cfg);
+    let ma = optimize_all_parallel(&ma_cfg);
+    println!("{}", report::table3(&sa, &ma));
+
+    // §5.2 analysis: show the SA's internal (biased) view vs reality.
+    println!("single-agent internal vs final (the §5.2 bias, per kernel):");
+    for o in &sa {
+        let last_internal = o
+            .records
+            .iter()
+            .rev()
+            .find(|r| r.accepted)
+            .map(|r| r.speedup_internal)
+            .unwrap_or(1.0);
+        println!(
+            "  {:<24} believed {:.2}x on its tiny shapes -> actually {:.2}x on \
+             representative shapes",
+            o.kernel_name, last_internal, o.final_speedup
+        );
+    }
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate Table 4 (impact of tensor shapes on speedup).
+//!
+//! ```bash
+//! cargo bench --bench table4
+//! ```
+
+use astra::coordinator::{optimize_all_parallel, Config};
+use astra::report;
+
+fn main() {
+    let cfg = Config {
+        bug_rate: 0.0,
+        temperature: 0.0,
+        ..Config::multi_agent()
+    };
+    let outcomes = optimize_all_parallel(&cfg);
+    println!("{}", report::table4(&outcomes));
+
+    // §6.1: the same kernel is used at every shape — no per-shape tuning.
+    println!("generality check (§6.1): per-kernel speedup spread across shapes");
+    for o in &outcomes {
+        let speedups: Vec<f64> = o.per_shape.iter().map(|(_, _, _, s)| *s).collect();
+        let min = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = speedups.iter().cloned().fold(0.0, f64::max);
+        println!(
+            "  {:<24} min {:.2}x  max {:.2}x  (single kernel, all shapes)",
+            o.kernel_name, min, max
+        );
+    }
+}

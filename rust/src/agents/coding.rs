@@ -1,0 +1,172 @@
+//! Coding agent: applies the planner's suggestions to produce a new
+//! candidate kernel (Algorithm 1 line 10).
+//!
+//! Like an LLM code edit, application can fail two ways: the transform may
+//! be inapplicable (a "compile error" — reported back), or — with a small
+//! configurable probability — the agent fumbles the edit and produces a
+//! *plausible but wrong* kernel (an index off-by-one), which the testing
+//! agent must catch. That failure loop is the core of Figure 1.
+
+use crate::ir::expr::IExpr;
+use crate::ir::stmt::Stmt;
+use crate::ir::Kernel;
+use crate::transforms::{self, Move};
+use crate::util::Prng;
+
+use super::planning::Suggestion;
+
+/// Result of one coding attempt.
+#[derive(Debug, Clone)]
+pub enum CodingOutcome {
+    /// A new candidate, and which move produced it.
+    Candidate { kernel: Kernel, applied: Move },
+    /// Nothing in the suggestion list was applicable.
+    NothingApplicable { reasons: Vec<String> },
+}
+
+/// The coding agent.
+#[derive(Debug, Clone)]
+pub struct CodingAgent {
+    /// Probability of fumbling an edit into an off-by-one bug.
+    pub bug_rate: f32,
+    rng: Prng,
+}
+
+impl CodingAgent {
+    pub fn new(bug_rate: f32, seed: u64) -> Self {
+        CodingAgent {
+            bug_rate,
+            rng: Prng::seed(seed),
+        }
+    }
+
+    /// Apply the highest-priority applicable suggestion.
+    pub fn apply(&mut self, kernel: &Kernel, suggestions: &[Suggestion]) -> CodingOutcome {
+        let mut reasons = Vec::new();
+        for s in suggestions {
+            match transforms::apply(kernel, s.mv) {
+                Ok(mut k) => {
+                    if self.rng.chance(self.bug_rate) {
+                        inject_off_by_one(&mut k, &mut self.rng);
+                    }
+                    return CodingOutcome::Candidate {
+                        kernel: k,
+                        applied: s.mv,
+                    };
+                }
+                Err(e) => reasons.push(format!("{}: {e}", s.mv)),
+            }
+        }
+        CodingOutcome::NothingApplicable { reasons }
+    }
+}
+
+/// Fumbled edit: shift the first global-store index by one — the classic
+/// LLM codegen slip that still compiles but mangles an output row.
+fn inject_off_by_one(kernel: &mut Kernel, _rng: &mut Prng) {
+    fn visit(stmts: &mut [Stmt], done: &mut bool) {
+        for s in stmts {
+            if *done {
+                return;
+            }
+            match s {
+                Stmt::Store {
+                    space: crate::ir::MemSpace::Global,
+                    idx,
+                    ..
+                } => {
+                    *idx = IExpr::bin(
+                        crate::ir::IBinOp::Add,
+                        idx.clone(),
+                        IExpr::Const(1),
+                    );
+                    *done = true;
+                }
+                Stmt::For(l) => visit(&mut l.body, done),
+                Stmt::If { then, els, .. } => {
+                    visit(then, done);
+                    visit(els, done);
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut done = false;
+    visit(&mut kernel.body, &mut done);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::testing::{TestQuality, TestingAgent};
+    use crate::kernels;
+
+    fn sugg(mv: Move) -> Suggestion {
+        Suggestion {
+            mv,
+            rationale: "test".into(),
+            priority: 1.0,
+        }
+    }
+
+    #[test]
+    fn applies_first_applicable() {
+        let k = kernels::silu::build_baseline();
+        let mut agent = CodingAgent::new(0.0, 1);
+        // Hoist is inapplicable to silu; falls through to vectorize.
+        let out = agent.apply(&k, &[sugg(Move::Hoist), sugg(Move::Vectorize)]);
+        match out {
+            CodingOutcome::Candidate { applied, kernel } => {
+                assert_eq!(applied, Move::Vectorize);
+                assert_ne!(kernel, k);
+            }
+            _ => panic!("expected candidate"),
+        }
+    }
+
+    #[test]
+    fn reports_when_nothing_applies() {
+        let k = kernels::silu::build_baseline();
+        let mut agent = CodingAgent::new(0.0, 1);
+        let out = agent.apply(&k, &[sugg(Move::Hoist), sugg(Move::WarpShuffle)]);
+        match out {
+            CodingOutcome::NothingApplicable { reasons } => {
+                assert_eq!(reasons.len(), 2);
+            }
+            _ => panic!("expected nothing-applicable"),
+        }
+    }
+
+    #[test]
+    fn injected_bugs_are_caught_by_testing_agent() {
+        let spec = kernels::silu::spec();
+        let k = (spec.build_baseline)();
+        let mut agent = CodingAgent::new(1.0, 7); // always fumble
+        let out = agent.apply(&k, &[sugg(Move::FastMath)]);
+        let buggy = match out {
+            CodingOutcome::Candidate { kernel, .. } => kernel,
+            _ => panic!(),
+        };
+        let tester = TestingAgent::new(TestQuality::Representative, 1);
+        let suite = tester.generate_tests(&spec);
+        let r = tester.validate(&spec, &buggy, &suite);
+        assert!(!r.pass, "off-by-one must fail validation");
+    }
+
+    #[test]
+    fn zero_bug_rate_is_clean() {
+        let spec = kernels::silu::spec();
+        let k = (spec.build_baseline)();
+        let mut agent = CodingAgent::new(0.0, 7);
+        for _ in 0..5 {
+            let out = agent.apply(&k, &[sugg(Move::FastMath)]);
+            let cand = match out {
+                CodingOutcome::Candidate { kernel, .. } => kernel,
+                _ => panic!(),
+            };
+            let tester = TestingAgent::new(TestQuality::Representative, 1);
+            let suite = tester.generate_tests(&spec);
+            assert!(tester.validate(&spec, &cand, &suite).pass);
+        }
+    }
+}

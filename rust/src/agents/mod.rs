@@ -1,0 +1,20 @@
+//! The four specialized agents of Figure 1 — testing, profiling, planning,
+//! coding — plus the single-agent baseline of §5.2.
+//!
+//! The paper powers these roles with OpenAI o4-mini; here the role
+//! *interfaces* are identical but the intelligence is a policy engine
+//! ([`planning::MockLlm`]) over the transform catalog. The
+//! [`planning::PlannerPolicy`] trait is the seam where a real LLM client
+//! would plug in (DESIGN.md §9).
+
+pub mod coding;
+pub mod planning;
+pub mod profiling;
+pub mod single_agent;
+pub mod testing;
+
+pub use coding::{CodingAgent, CodingOutcome};
+pub use planning::{MockLlm, PlannerPolicy, Suggestion};
+pub use profiling::{ProfileReport, ProfilingAgent};
+pub use single_agent::SingleAgentPlanner;
+pub use testing::{TestQuality, TestReport, TestSuite, TestingAgent};

@@ -1,0 +1,310 @@
+//! Planning agent: combines correctness and performance signals into
+//! ranked optimization suggestions (Algorithm 1 line 9).
+//!
+//! The paper's planner is o4-mini; ours is [`MockLlm`], a bottleneck-
+//! driven policy over the transform catalog that encodes the same playbook
+//! the paper's case studies document (§5.3):
+//!
+//! * issue-bound + redundant transcendentals  → hoist (Fig. 2),
+//! * issue-bound + libm/divides               → fast math (Fig. 5),
+//! * latency/memory-bound + scalar accesses   → vectorize (Fig. 4),
+//! * sync-heavy tree reduction                → warp shuffle (Fig. 3),
+//! * latency-bound, nothing else left         → unroll / block retune.
+//!
+//! `temperature` injects ranking noise (a deliberately flawed reviewer);
+//! [`PlannerPolicy`] is the seam where a real LLM client would plug in.
+
+use crate::ir::Kernel;
+use crate::sim::Bottleneck;
+use crate::transforms::{self, Move};
+use crate::util::Prng;
+
+use super::profiling::ProfileReport;
+use super::testing::TestReport;
+
+/// One ranked suggestion from the planner.
+#[derive(Debug, Clone)]
+pub struct Suggestion {
+    pub mv: Move,
+    pub rationale: String,
+    /// Higher = try first.
+    pub priority: f64,
+}
+
+/// Planner interface (LLM seam).
+pub trait PlannerPolicy {
+    /// Propose ranked modifications for the current candidate.
+    fn suggest(
+        &mut self,
+        kernel: &Kernel,
+        tests: &TestReport,
+        profile: &ProfileReport,
+    ) -> Vec<Suggestion>;
+    fn name(&self) -> &'static str;
+}
+
+/// The shipped policy engine.
+#[derive(Debug, Clone)]
+pub struct MockLlm {
+    pub temperature: f32,
+    rng: Prng,
+}
+
+impl MockLlm {
+    pub fn new(temperature: f32, seed: u64) -> Self {
+        MockLlm {
+            temperature,
+            rng: Prng::seed(seed),
+        }
+    }
+}
+
+impl PlannerPolicy for MockLlm {
+    fn name(&self) -> &'static str {
+        "mock-llm"
+    }
+
+    fn suggest(
+        &mut self,
+        kernel: &Kernel,
+        tests: &TestReport,
+        profile: &ProfileReport,
+    ) -> Vec<Suggestion> {
+        let mut out = Vec::new();
+        let f = &profile.features;
+        let applicable = transforms::applicable_moves(kernel);
+        let has = |m: &Move| applicable.contains(m);
+
+        if !tests.pass {
+            // A failing candidate is handled by the coordinator (revert to
+            // the best known good); the planner proposes safe moves only.
+            if has(&Move::Hoist) {
+                out.push(Suggestion {
+                    mv: Move::Hoist,
+                    rationale: "tests failing; only bit-exact code motion is safe"
+                        .into(),
+                    priority: 1.0,
+                });
+            }
+            return out;
+        }
+
+        // Issue-bound playbook (Figures 2 & 5).
+        let issue_frac = frac(profile, Bottleneck::Issue);
+        if f.hoistable_stmts > 0 && has(&Move::Hoist) {
+            out.push(Suggestion {
+                mv: Move::Hoist,
+                rationale: format!(
+                    "{} loop-invariant statements recomputed per element \
+                     (issue fraction {:.2})",
+                    f.hoistable_stmts, issue_frac
+                ),
+                priority: 9.0 + 4.0 * issue_frac,
+            });
+        }
+        if (f.slow_math_calls > 0 || f.divisions > 0) && has(&Move::FastMath) {
+            out.push(Suggestion {
+                mv: Move::FastMath,
+                rationale: format!(
+                    "{} libm calls + {} divides in hot code; __expf/__frcp_rn \
+                     cut issue cost",
+                    f.slow_math_calls, f.divisions
+                ),
+                priority: 7.0 + 5.0 * issue_frac,
+            });
+        }
+
+        // Memory/latency playbook (Figure 4).
+        let lat_frac = frac(profile, Bottleneck::Latency)
+            + frac(profile, Bottleneck::Memory);
+        if f.max_vector_width == 1 && has(&Move::Vectorize) {
+            out.push(Suggestion {
+                mv: Move::Vectorize,
+                rationale: format!(
+                    "{} scalar global accesses per trip; vector loads halve \
+                     transactions (mem+lat fraction {:.2})",
+                    f.scalar_loads_in_loops, lat_frac
+                ),
+                priority: 8.0 + 4.0 * lat_frac,
+            });
+        }
+
+        // Reduction playbook (Figure 3).
+        if f.has_tree_reduction && has(&Move::WarpShuffle) {
+            let sync_frac = frac(profile, Bottleneck::Sync);
+            out.push(Suggestion {
+                mv: Move::WarpShuffle,
+                rationale: format!(
+                    "shared-memory tree reduction with {} barriers; \
+                     __shfl_down_sync keeps partials in registers",
+                    f.syncs
+                ),
+                priority: 6.5 + 6.0 * sync_frac + 2.0 * lat_frac,
+            });
+        }
+
+        // Aggressive latency moves — real trade-offs the profiler must
+        // arbitrate (the coordinator keeps them only if measured faster).
+        if profile.bottleneck == Bottleneck::Latency {
+            for fac in [4u8, 8] {
+                if has(&Move::Unroll(fac)) {
+                    out.push(Suggestion {
+                        mv: Move::Unroll(fac),
+                        rationale: format!(
+                            "latency-bound; unroll x{fac} to overlap loads \
+                             (register pressure risk)"
+                        ),
+                        priority: 3.0 + fac as f64 * 0.1,
+                    });
+                }
+            }
+            let bs = kernel.launch.block;
+            for cand in [bs / 2, bs * 2] {
+                if has(&Move::BlockSize(cand)) {
+                    out.push(Suggestion {
+                        mv: Move::BlockSize(cand),
+                        rationale: format!(
+                            "latency-bound; retune block {bs} -> {cand}"
+                        ),
+                        priority: 2.0,
+                    });
+                }
+            }
+        }
+
+        // Temperature noise: a hotter planner shuffles its ranking.
+        if self.temperature > 0.0 {
+            for s in &mut out {
+                s.priority +=
+                    (self.rng.uniform() - 0.5) as f64 * 10.0 * self.temperature as f64;
+            }
+        }
+        out.sort_by(|a, b| b.priority.total_cmp(&a.priority));
+        out
+    }
+}
+
+fn frac(profile: &ProfileReport, which: Bottleneck) -> f64 {
+    let mut acc = 0.0;
+    for r in &profile.per_shape {
+        for (b, f) in r.breakdown() {
+            if b == which {
+                acc += f;
+            }
+        }
+    }
+    (acc / profile.per_shape.len() as f64).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::profiling::ProfilingAgent;
+    use crate::agents::testing::{TestQuality, TestingAgent};
+    use crate::kernels;
+    use crate::sim::GpuModel;
+
+    fn profile_of(spec: &kernels::KernelSpec, k: &Kernel) -> (TestReport, ProfileReport) {
+        let tester = TestingAgent::new(TestQuality::Representative, 1);
+        let suite = tester.generate_tests(spec);
+        let t = tester.validate(spec, k, &suite);
+        let p = ProfilingAgent::new(GpuModel::h100()).profile(k, &suite, None);
+        (t, p)
+    }
+
+    #[test]
+    fn merge_planner_leads_with_hoist() {
+        let spec = kernels::merge::spec();
+        let k = (spec.build_baseline)();
+        let (t, p) = profile_of(&spec, &k);
+        let mut llm = MockLlm::new(0.0, 1);
+        let s = llm.suggest(&k, &t, &p);
+        assert!(!s.is_empty());
+        assert_eq!(s[0].mv, Move::Hoist, "{s:?}");
+        assert!(s.iter().any(|x| x.mv == Move::FastMath));
+        assert!(s.iter().any(|x| x.mv == Move::Vectorize));
+    }
+
+    #[test]
+    fn rmsnorm_planner_proposes_warp_shuffle() {
+        let spec = kernels::rmsnorm::spec();
+        let k = (spec.build_baseline)();
+        let (t, p) = profile_of(&spec, &k);
+        let mut llm = MockLlm::new(0.0, 1);
+        let s = llm.suggest(&k, &t, &p);
+        assert!(s.iter().any(|x| x.mv == Move::WarpShuffle), "{s:?}");
+    }
+
+    #[test]
+    fn silu_planner_proposes_vectorize_and_fastmath() {
+        let spec = kernels::silu::spec();
+        let k = (spec.build_baseline)();
+        let (t, p) = profile_of(&spec, &k);
+        let mut llm = MockLlm::new(0.0, 1);
+        let s = llm.suggest(&k, &t, &p);
+        let moves: Vec<Move> = s.iter().map(|x| x.mv).collect();
+        assert!(moves.contains(&Move::Vectorize));
+        assert!(moves.contains(&Move::FastMath));
+        assert!(!moves.contains(&Move::Hoist), "nothing hoistable in silu");
+    }
+
+    #[test]
+    fn zero_temperature_is_deterministic() {
+        let spec = kernels::silu::spec();
+        let k = (spec.build_baseline)();
+        let (t, p) = profile_of(&spec, &k);
+        let a: Vec<Move> = MockLlm::new(0.0, 1)
+            .suggest(&k, &t, &p)
+            .iter()
+            .map(|s| s.mv)
+            .collect();
+        let b: Vec<Move> = MockLlm::new(0.0, 999)
+            .suggest(&k, &t, &p)
+            .iter()
+            .map(|s| s.mv)
+            .collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn temperature_can_reorder() {
+        let spec = kernels::merge::spec();
+        let k = (spec.build_baseline)();
+        let (t, p) = profile_of(&spec, &k);
+        let base: Vec<Move> = MockLlm::new(0.0, 1)
+            .suggest(&k, &t, &p)
+            .iter()
+            .map(|s| s.mv)
+            .collect();
+        let mut reordered = false;
+        for seed in 0..20 {
+            let hot: Vec<Move> = MockLlm::new(1.5, seed)
+                .suggest(&k, &t, &p)
+                .iter()
+                .map(|s| s.mv)
+                .collect();
+            if hot != base {
+                reordered = true;
+                break;
+            }
+        }
+        assert!(reordered, "high temperature should shuffle rankings");
+    }
+
+    #[test]
+    fn failing_tests_restrict_to_safe_moves() {
+        let spec = kernels::merge::spec();
+        let k = (spec.build_baseline)();
+        let (_, p) = profile_of(&spec, &k);
+        let failing = TestReport {
+            pass: false,
+            max_rel_err: 1.0,
+            max_abs_err: 1.0,
+            failure: None,
+            cases: 3,
+        };
+        let mut llm = MockLlm::new(0.0, 1);
+        let s = llm.suggest(&k, &failing, &p);
+        assert!(s.iter().all(|x| x.mv == Move::Hoist));
+    }
+}

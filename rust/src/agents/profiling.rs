@@ -1,0 +1,156 @@
+//! Profiling agent: measures candidates on the test suite's perf shapes
+//! and produces the report the planner consumes (the "Nsight Compute"
+//! role of §5.3).
+
+use crate::ir::analysis::{self, Features};
+use crate::ir::Kernel;
+use crate::sim::{self, Bottleneck, CostReport, GpuModel};
+
+use super::testing::TestSuite;
+
+/// Profile of one candidate over the suite's perf shapes.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub per_shape: Vec<CostReport>,
+    pub mean_us: f64,
+    /// Geomean speedup vs the baseline profile (1.0 for the baseline).
+    pub speedup_vs_baseline: f64,
+    /// Majority bottleneck across shapes.
+    pub bottleneck: Bottleneck,
+    /// Structural code features (the planner's static signal).
+    pub features: Features,
+}
+
+/// The profiling agent.
+#[derive(Debug, Clone)]
+pub struct ProfilingAgent {
+    pub model: GpuModel,
+}
+
+impl ProfilingAgent {
+    pub fn new(model: GpuModel) -> Self {
+        ProfilingAgent { model }
+    }
+
+    /// Algorithm 1 lines 2 & 12: profile a kernel on the suite.
+    pub fn profile(
+        &self,
+        kernel: &Kernel,
+        suite: &TestSuite,
+        baseline: Option<&ProfileReport>,
+    ) -> ProfileReport {
+        let per_shape = sim::profile_shapes(&self.model, kernel, &suite.perf_shapes);
+        let mean_us =
+            per_shape.iter().map(|r| r.total_us).sum::<f64>() / per_shape.len() as f64;
+        let speedup = match baseline {
+            Some(b) => sim::geomean_speedup(&b.per_shape, &per_shape),
+            None => 1.0,
+        };
+        let bottleneck = majority_bottleneck(&per_shape);
+        ProfileReport {
+            per_shape,
+            mean_us,
+            speedup_vs_baseline: speedup,
+            bottleneck,
+            features: analysis::features(kernel),
+        }
+    }
+}
+
+fn majority_bottleneck(reports: &[CostReport]) -> Bottleneck {
+    let mut counts = [0usize; 4];
+    for r in reports {
+        let i = match r.bottleneck {
+            Bottleneck::Memory => 0,
+            Bottleneck::Issue => 1,
+            Bottleneck::Latency => 2,
+            Bottleneck::Sync => 3,
+        };
+        counts[i] += 1;
+    }
+    let best = counts
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, c)| **c)
+        .map(|(i, _)| i)
+        .unwrap();
+    [
+        Bottleneck::Memory,
+        Bottleneck::Issue,
+        Bottleneck::Latency,
+        Bottleneck::Sync,
+    ][best]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::testing::{TestQuality, TestingAgent};
+    use crate::kernels;
+    use crate::transforms;
+
+    #[test]
+    fn profiles_baseline_at_speedup_one() {
+        let spec = kernels::silu::spec();
+        let suite = TestingAgent::new(TestQuality::Representative, 1)
+            .generate_tests(&spec);
+        let agent = ProfilingAgent::new(GpuModel::h100());
+        let p = agent.profile(&(spec.build_baseline)(), &suite, None);
+        assert_eq!(p.per_shape.len(), 4);
+        assert!((p.speedup_vs_baseline - 1.0).abs() < 1e-12);
+        assert!(p.mean_us > 0.0);
+    }
+
+    #[test]
+    fn optimized_shows_speedup_vs_baseline() {
+        let spec = kernels::silu::spec();
+        let suite = TestingAgent::new(TestQuality::Representative, 1)
+            .generate_tests(&spec);
+        let agent = ProfilingAgent::new(GpuModel::h100());
+        let base = (spec.build_baseline)();
+        let p0 = agent.profile(&base, &suite, None);
+        let opt = transforms::optimized_reference(&base);
+        let p1 = agent.profile(&opt, &suite, Some(&p0));
+        assert!(p1.speedup_vs_baseline > 1.2, "{}", p1.speedup_vs_baseline);
+    }
+
+    #[test]
+    fn tiny_suite_biases_the_profile() {
+        // The §5.2 mechanism: on unrepresentative shapes, everything is
+        // overhead-dominated and candidate differences vanish.
+        let spec = kernels::merge::spec();
+        let tiny = TestingAgent::new(TestQuality::Unrepresentative, 2)
+            .generate_tests(&spec);
+        let agent = ProfilingAgent::new(GpuModel::h100());
+        let base = (spec.build_baseline)();
+        let p0 = agent.profile(&base, &tiny, None);
+        let trapped =
+            transforms::apply(&base, transforms::Move::Unroll(8)).unwrap();
+        let p1 = agent.profile(&trapped, &tiny, Some(&p0));
+        assert!(
+            (p1.speedup_vs_baseline - 1.0).abs() < 0.05,
+            "aggressive unroll looks harmless on tiny shapes: {}",
+            p1.speedup_vs_baseline
+        );
+        // ... but regresses on representative ones.
+        let repr = TestingAgent::new(TestQuality::Representative, 2)
+            .generate_tests(&spec);
+        let q0 = agent.profile(&base, &repr, None);
+        let q1 = agent.profile(&trapped, &repr, Some(&q0));
+        assert!(
+            q1.speedup_vs_baseline < 0.9,
+            "unroll trap must regress on real shapes: {}",
+            q1.speedup_vs_baseline
+        );
+    }
+
+    #[test]
+    fn features_travel_with_profile() {
+        let spec = kernels::rmsnorm::spec();
+        let suite = TestingAgent::new(TestQuality::Representative, 3)
+            .generate_tests(&spec);
+        let agent = ProfilingAgent::new(GpuModel::h100());
+        let p = agent.profile(&(spec.build_baseline)(), &suite, None);
+        assert!(p.features.has_tree_reduction);
+    }
+}

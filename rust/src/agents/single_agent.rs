@@ -1,0 +1,166 @@
+//! Single-agent baseline (§5.2): one agent juggles testing, profiling,
+//! planning and coding.
+//!
+//! Two degradations relative to the multi-agent setup, both taken from the
+//! paper's analysis of why the single agent underperforms:
+//!
+//! 1. Its *test inputs are unrepresentative* ([`TestQuality::Unrepresentative`]
+//!    in the coordinator config) — tiny smoke shapes reused for profiling,
+//!    which hides shape-dependent regressions.
+//! 2. Its *planning is profile-blind*: instead of reading the bottleneck
+//!    breakdown, it ranks moves by static priors ("the generic CUDA
+//!    optimization playbook"), reaching for aggressive unrolling first on
+//!    kernels whose loop bodies look heavy — exactly the move whose cost
+//!    only shows up at representative shapes.
+//!
+//! Together these reproduce Table 3's pattern: comparable results on the
+//! simple kernel, a regression on the complex one.
+
+use crate::ir::Kernel;
+use crate::transforms::{self, Move};
+use crate::util::Prng;
+
+use super::planning::{PlannerPolicy, Suggestion};
+use super::profiling::ProfileReport;
+use super::testing::TestReport;
+
+/// Profile-blind static-prior planner used in single-agent mode.
+#[derive(Debug, Clone)]
+pub struct SingleAgentPlanner {
+    pub temperature: f32,
+    rng: Prng,
+}
+
+impl SingleAgentPlanner {
+    pub fn new(temperature: f32, seed: u64) -> Self {
+        SingleAgentPlanner {
+            temperature,
+            rng: Prng::seed(seed),
+        }
+    }
+}
+
+impl PlannerPolicy for SingleAgentPlanner {
+    fn name(&self) -> &'static str {
+        "single-agent"
+    }
+
+    fn suggest(
+        &mut self,
+        kernel: &Kernel,
+        tests: &TestReport,
+        profile: &ProfileReport,
+    ) -> Vec<Suggestion> {
+        if !tests.pass {
+            return vec![];
+        }
+        let f = &profile.features; // static code features only — the SA
+                                   // never cross-references the timing
+                                   // breakdown the way the dedicated
+                                   // profiling+planning pair does.
+        let applicable = transforms::applicable_moves(kernel);
+        let mut out = Vec::new();
+        let mut push = |mv: Move, priority: f64, rationale: &str| {
+            out.push(Suggestion {
+                mv,
+                rationale: rationale.into(),
+                priority,
+            });
+        };
+        if applicable.contains(&Move::Vectorize) {
+            push(Move::Vectorize, 8.0, "playbook: vectorize global accesses");
+        }
+        if applicable.contains(&Move::FastMath) {
+            push(Move::FastMath, 7.0, "playbook: fast-math intrinsics");
+        }
+        if applicable.contains(&Move::Hoist) {
+            push(Move::Hoist, 6.0, "playbook: hoist invariants");
+        }
+        if applicable.contains(&Move::WarpShuffle) {
+            push(Move::WarpShuffle, 5.0, "playbook: warp-shuffle reduction");
+        }
+        if applicable.contains(&Move::Unroll(8)) {
+            // The heavier the loop body looks, the harder the overloaded
+            // agent reaches for the big-hammer unroll — without the
+            // profiling depth to see its occupancy cost.
+            let complexity_bonus = 1.5 * f.hoistable_stmts as f64;
+            push(
+                Move::Unroll(8),
+                4.0 + complexity_bonus,
+                "playbook: heavy loop body, unroll aggressively",
+            );
+        }
+        if self.temperature > 0.0 {
+            for s in &mut out {
+                s.priority += (self.rng.uniform() - 0.5) as f64
+                    * 10.0
+                    * self.temperature as f64;
+            }
+        }
+        out.sort_by(|a, b| b.priority.total_cmp(&a.priority));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::profiling::ProfilingAgent;
+    use crate::agents::testing::{TestQuality, TestingAgent};
+    use crate::kernels;
+    use crate::sim::GpuModel;
+
+    fn setup(
+        spec: &kernels::KernelSpec,
+    ) -> (Kernel, TestReport, ProfileReport) {
+        let k = (spec.build_baseline)();
+        let tester = TestingAgent::new(TestQuality::Unrepresentative, 3);
+        let suite = tester.generate_tests(spec);
+        let t = tester.validate(spec, &k, &suite);
+        let p = ProfilingAgent::new(GpuModel::h100()).profile(&k, &suite, None);
+        (k, t, p)
+    }
+
+    #[test]
+    fn complex_kernel_attracts_the_unroll_trap() {
+        let spec = kernels::merge::spec();
+        let (k, t, p) = setup(&spec);
+        let mut sa = SingleAgentPlanner::new(0.0, 1);
+        let s = sa.suggest(&k, &t, &p);
+        assert_eq!(
+            s[0].mv,
+            Move::Unroll(8),
+            "merge looks complex -> unroll ranked first: {s:?}"
+        );
+    }
+
+    #[test]
+    fn simple_kernels_follow_the_safe_playbook() {
+        for spec in [kernels::silu::spec(), kernels::rmsnorm::spec()] {
+            let (k, t, p) = setup(&spec);
+            let mut sa = SingleAgentPlanner::new(0.0, 1);
+            let s = sa.suggest(&k, &t, &p);
+            assert_eq!(
+                s[0].mv,
+                Move::Vectorize,
+                "{}: vectorize first: {s:?}",
+                spec.paper_name
+            );
+        }
+    }
+
+    #[test]
+    fn failing_tests_stop_the_single_agent() {
+        let spec = kernels::silu::spec();
+        let (k, _, p) = setup(&spec);
+        let failing = TestReport {
+            pass: false,
+            max_rel_err: 1.0,
+            max_abs_err: 1.0,
+            failure: None,
+            cases: 1,
+        };
+        let mut sa = SingleAgentPlanner::new(0.0, 1);
+        assert!(sa.suggest(&k, &failing, &p).is_empty());
+    }
+}

@@ -1,0 +1,225 @@
+//! Testing agent: builds a test suite from the baseline kernel and
+//! validates candidates against the SGLang-semantics oracle.
+//!
+//! The *quality* of the generated suite is the §5.2 variable: the
+//! dedicated multi-agent tester produces representative shapes (drawn
+//! from the LLaMA-family dimensions the kernel actually serves), while
+//! the overloaded single agent produces tiny, unrepresentative shapes —
+//! which bias every downstream profiling decision.
+
+use std::collections::BTreeMap;
+
+use crate::interp;
+use crate::ir::{DimEnv, Kernel};
+use crate::kernels::KernelSpec;
+use crate::util::Prng;
+
+/// How representative the generated test inputs are (§5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TestQuality {
+    /// Dedicated testing agent: correctness shapes that exercise real
+    /// aspect ratios, perf shapes from the serving workloads (Table 4).
+    Representative,
+    /// Single agent under cognitive load: tiny smoke shapes reused for
+    /// both correctness *and* profiling.
+    Unrepresentative,
+}
+
+/// A generated suite: correctness cases (small enough to interpret) and
+/// the shapes used for performance profiling.
+#[derive(Debug, Clone)]
+pub struct TestSuite {
+    pub correctness_shapes: Vec<DimEnv>,
+    pub perf_shapes: Vec<DimEnv>,
+    pub seed: u64,
+    pub quality: TestQuality,
+}
+
+/// Validation outcome for one candidate kernel.
+#[derive(Debug, Clone)]
+pub struct TestReport {
+    pub pass: bool,
+    pub max_rel_err: f32,
+    pub max_abs_err: f32,
+    /// Compile/run-style failure (interpreter error), if any.
+    pub failure: Option<String>,
+    pub cases: usize,
+}
+
+/// The testing agent.
+#[derive(Debug, Clone)]
+pub struct TestingAgent {
+    pub quality: TestQuality,
+    pub seed: u64,
+}
+
+impl TestingAgent {
+    pub fn new(quality: TestQuality, seed: u64) -> Self {
+        TestingAgent { quality, seed }
+    }
+
+    /// Algorithm 1 line 1: generate the suite from the baseline spec.
+    pub fn generate_tests(&self, spec: &KernelSpec) -> TestSuite {
+        match self.quality {
+            TestQuality::Representative => TestSuite {
+                correctness_shapes: (spec.test_shapes)(),
+                perf_shapes: (spec.representative_shapes)(),
+                seed: self.seed,
+                quality: self.quality,
+            },
+            TestQuality::Unrepresentative => {
+                // Tiny smoke shapes: every dim collapsed toward the
+                // smallest "it runs" size, then reused for profiling.
+                let mut rng = Prng::seed(self.seed);
+                let mut shapes = Vec::new();
+                for _ in 0..2 {
+                    let mut d = DimEnv::new();
+                    for name in spec.dims {
+                        let v = match *name {
+                            "D" => *rng.choose(&[32i64, 64]),
+                            "H" => 2,
+                            _ => *rng.choose(&[2i64, 4]),
+                        };
+                        d.insert(name.to_string(), v);
+                    }
+                    shapes.push(d);
+                }
+                TestSuite {
+                    correctness_shapes: shapes.clone(),
+                    perf_shapes: shapes,
+                    seed: self.seed,
+                    quality: self.quality,
+                }
+            }
+        }
+    }
+
+    /// Algorithm 1 line 11: validate a candidate against the oracle.
+    pub fn validate(&self, spec: &KernelSpec, kernel: &Kernel, suite: &TestSuite) -> TestReport {
+        let mut max_rel = 0f32;
+        let mut max_abs = 0f32;
+        let mut cases = 0usize;
+        for dims in &suite.correctness_shapes {
+            let inputs = (spec.gen_inputs)(dims, suite.seed ^ 0xA5A5);
+            let refs: Vec<(&str, Vec<f32>)> = inputs
+                .iter()
+                .map(|(n, v)| (n.as_str(), v.clone()))
+                .collect();
+            let env = match interp::run_with_inputs(kernel, dims, &refs) {
+                Ok(env) => env,
+                Err(e) => {
+                    return TestReport {
+                        pass: false,
+                        max_rel_err: f32::INFINITY,
+                        max_abs_err: f32::INFINITY,
+                        failure: Some(e.to_string()),
+                        cases,
+                    }
+                }
+            };
+            let input_map: BTreeMap<String, Vec<f32>> =
+                inputs.iter().cloned().collect();
+            let want = (spec.reference)(dims, &input_map);
+            for buf in spec.out_bufs {
+                let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
+                max_abs = max_abs.max(abs);
+                max_rel = max_rel.max(rel);
+            }
+            cases += 1;
+        }
+        let pass = max_rel < spec.rel_tol || max_abs < spec.abs_tol;
+        TestReport {
+            pass,
+            max_rel_err: max_rel,
+            max_abs_err: max_abs,
+            failure: None,
+            cases,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels;
+    use crate::transforms::{self, Move};
+
+    #[test]
+    fn representative_suite_uses_table4_shapes() {
+        let agent = TestingAgent::new(TestQuality::Representative, 1);
+        let spec = kernels::merge::spec();
+        let suite = agent.generate_tests(&spec);
+        assert_eq!(suite.perf_shapes, (spec.representative_shapes)());
+        assert!(!suite.correctness_shapes.is_empty());
+    }
+
+    #[test]
+    fn unrepresentative_suite_is_tiny() {
+        let agent = TestingAgent::new(TestQuality::Unrepresentative, 2);
+        let spec = kernels::merge::spec();
+        let suite = agent.generate_tests(&spec);
+        for d in &suite.perf_shapes {
+            assert!(d["S"] <= 4 && d["D"] <= 64, "tiny shapes only: {d:?}");
+        }
+    }
+
+    #[test]
+    fn baseline_passes_validation() {
+        let agent = TestingAgent::new(TestQuality::Representative, 3);
+        for spec in kernels::all_specs() {
+            let suite = agent.generate_tests(&spec);
+            let r = agent.validate(&spec, &(spec.build_baseline)(), &suite);
+            assert!(r.pass, "{}: {r:?}", spec.paper_name);
+            assert!(r.cases >= 2);
+        }
+    }
+
+    #[test]
+    fn optimized_reference_passes_validation() {
+        let agent = TestingAgent::new(TestQuality::Representative, 4);
+        for spec in kernels::all_specs() {
+            let suite = agent.generate_tests(&spec);
+            let opt = transforms::optimized_reference(&(spec.build_baseline)());
+            let r = agent.validate(&spec, &opt, &suite);
+            assert!(r.pass, "{}: {r:?}", spec.paper_name);
+        }
+    }
+
+    #[test]
+    fn broken_kernel_fails_validation() {
+        let agent = TestingAgent::new(TestQuality::Representative, 5);
+        let spec = kernels::silu::spec();
+        let suite = agent.generate_tests(&spec);
+        // Corrupt: multiply output by 2 via a bogus extra store.
+        let mut k = (spec.build_baseline)();
+        use crate::ir::build::*;
+        k.body.push(store("out", c(0), fc(1234.5)));
+        let r = agent.validate(&spec, &k, &suite);
+        assert!(!r.pass);
+        assert!(r.failure.is_none(), "numerical failure, not a crash");
+    }
+
+    #[test]
+    fn oob_kernel_reports_failure() {
+        let agent = TestingAgent::new(TestQuality::Representative, 6);
+        let spec = kernels::silu::spec();
+        let suite = agent.generate_tests(&spec);
+        let mut k = (spec.build_baseline)();
+        use crate::ir::build::*;
+        k.body.push(store("out", imul(dim("B"), dim("D")), fc(0.0)));
+        let r = agent.validate(&spec, &k, &suite);
+        assert!(!r.pass);
+        assert!(r.failure.is_some(), "OOB surfaces as a runtime failure");
+    }
+
+    #[test]
+    fn block_size_move_still_validates() {
+        let agent = TestingAgent::new(TestQuality::Representative, 7);
+        let spec = kernels::rmsnorm::spec();
+        let suite = agent.generate_tests(&spec);
+        let k =
+            transforms::apply(&(spec.build_baseline)(), Move::BlockSize(128))
+                .unwrap();
+        assert!(agent.validate(&spec, &k, &suite).pass);
+    }
+}

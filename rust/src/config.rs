@@ -1,0 +1,123 @@
+//! Configuration system: a small key = value file format (the offline
+//! vendor set carries no TOML crate) plus CLI-style overrides.
+//!
+//! Example `astra.toml`:
+//!
+//! ```text
+//! # agent loop
+//! rounds = 5
+//! seed = 42
+//! bug_rate = 0.1
+//! temperature = 0.1
+//! mode = "multi"
+//!
+//! # simulator overrides
+//! launch_overhead_us = 7.0
+//! dram_bw = 3.0e12
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{AgentMode, Config};
+use crate::sim::GpuModel;
+
+/// Parse a config file into a coordinator [`Config`], starting from the
+/// mode's defaults.
+pub fn load_file(path: &str) -> Result<Config> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {path}"))?;
+    parse(&text)
+}
+
+/// Parse config text.
+pub fn parse(text: &str) -> Result<Config> {
+    let mut cfg = Config::multi_agent();
+    let mut model = GpuModel::h100();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() || line.starts_with('[') {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        let value = value.trim().trim_matches('"');
+        apply(&mut cfg, &mut model, key, value)
+            .with_context(|| format!("line {}: {key}", lineno + 1))?;
+    }
+    cfg.model = model;
+    Ok(cfg)
+}
+
+/// Apply one key/value override.
+pub fn apply(
+    cfg: &mut Config,
+    model: &mut GpuModel,
+    key: &str,
+    value: &str,
+) -> Result<()> {
+    match key {
+        "rounds" => cfg.rounds = value.parse()?,
+        "seed" => cfg.seed = value.parse()?,
+        "bug_rate" => cfg.bug_rate = value.parse()?,
+        "temperature" => cfg.temperature = value.parse()?,
+        "mode" => {
+            cfg.mode = match value {
+                "multi" | "multi-agent" => AgentMode::Multi,
+                "single" | "single-agent" => AgentMode::Single,
+                other => return Err(anyhow!("unknown mode {other}")),
+            };
+            // Mode-appropriate default temperature unless overridden later.
+            if cfg.mode == AgentMode::Single {
+                cfg.temperature = Config::single_agent().temperature;
+            }
+        }
+        "launch_overhead_us" => model.launch_overhead_us = value.parse()?,
+        "dram_bw" => model.dram_bw = value.parse()?,
+        "sms" => model.sms = value.parse()?,
+        "freq_hz" => model.freq_hz = value.parse()?,
+        "mem_latency_cycles" => model.mem_latency_cycles = value.parse()?,
+        other => return Err(anyhow!("unknown config key {other}")),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = parse(
+            "# comment\nrounds = 7\nseed = 9\nmode = \"single\"\n\
+             temperature = 0.5\nbug_rate = 0.0\nlaunch_overhead_us = 5.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.rounds, 7);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.mode, AgentMode::Single);
+        assert!((cfg.temperature - 0.5).abs() < 1e-6);
+        assert!((cfg.model.launch_overhead_us - 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_lines() {
+        assert!(parse("bogus = 1\n").is_err());
+        assert!(parse("rounds\n").is_err());
+        assert!(parse("mode = \"quantum\"\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_sections_are_ignored(){
+        let cfg = parse("[agents]\n# hi\nrounds = 3 # trailing\n").unwrap();
+        assert_eq!(cfg.rounds, 3);
+    }
+
+    #[test]
+    fn defaults_are_multi_agent() {
+        let cfg = parse("").unwrap();
+        assert_eq!(cfg.mode, AgentMode::Multi);
+        assert_eq!(cfg.rounds, 5);
+    }
+}

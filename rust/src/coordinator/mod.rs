@@ -1,0 +1,21 @@
+//! The Astra coordinator — Algorithm 1 of the paper.
+//!
+//! Runs R rounds of the plan → code → test → profile loop over one
+//! kernel, recording a `(round, code, correctness, performance)` log
+//! tuple per iteration, then selects the best *correct* candidate and
+//! post-processes it: re-validation and final performance measurement on
+//! the representative (paper Table 4) shapes, independent of whatever
+//! shapes the agents used internally — that is the paper's "validate
+//! against the original framework implementation" step.
+//!
+//! One deviation from the literal pseudo-code, noted in DESIGN.md: when a
+//! candidate fails testing or regresses on the agents' own measurements,
+//! the next round continues from the best known-good kernel rather than
+//! the broken one (the paper's log-based selection implies the same
+//! end result; carrying a broken kernel forward would waste rounds).
+
+pub mod run;
+
+pub use run::{
+    optimize, optimize_all_parallel, AgentMode, Config, Outcome, RoundRecord,
+};

@@ -1,0 +1,365 @@
+//! Expression evaluation: integer, boolean and floating expressions over a
+//! thread context, with CUDA-faithful fast-math precision emulation.
+
+use std::collections::HashMap;
+
+use crate::ir::expr::{
+    eval_cmp, eval_ibin, BExpr, FBinOp, IExpr, MathFn, ThreadVar, VExpr,
+};
+use crate::ir::types::MemSpace;
+
+pub const WARP_SIZE: i64 = 32;
+
+/// Small linear-probed map: for the handful of registers a kernel thread
+/// carries, a Vec scan beats hashing and avoids per-insert String clones —
+/// this sits on the interpreter's innermost loop (see EXPERIMENTS.md
+/// §Perf, L3 iteration 2).
+#[derive(Debug, Clone, Default)]
+pub struct SmallMap<V: Copy> {
+    entries: Vec<(String, V)>,
+}
+
+impl<V: Copy> SmallMap<V> {
+    #[inline]
+    pub fn get(&self, k: &str) -> Option<V> {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == k)
+            .map(|(_, v)| *v)
+    }
+
+    /// Insert or overwrite; returns the previous value. Only allocates
+    /// when the key is new.
+    #[inline]
+    pub fn set(&mut self, k: &str, v: V) -> Option<V> {
+        for e in &mut self.entries {
+            if e.0 == k {
+                let old = e.1;
+                e.1 = v;
+                return Some(old);
+            }
+        }
+        self.entries.push((k.to_string(), v));
+        None
+    }
+
+    #[inline]
+    pub fn remove(&mut self, k: &str) -> Option<V> {
+        let idx = self.entries.iter().position(|(n, _)| n == k)?;
+        Some(self.entries.swap_remove(idx).1)
+    }
+}
+
+/// Per-thread register file.
+#[derive(Debug, Clone, Default)]
+pub struct Regs {
+    pub f: SmallMap<f32>,
+    pub i: SmallMap<i64>,
+}
+
+/// Identity of one thread within the launch.
+#[derive(Debug, Clone, Copy)]
+pub struct ThreadId {
+    pub tx: i64,
+    pub bx: i64,
+    pub bdim: i64,
+    pub gdim: i64,
+}
+
+impl ThreadId {
+    pub fn lane(&self) -> i64 {
+        self.tx % WARP_SIZE
+    }
+    pub fn warp(&self) -> i64 {
+        self.tx / WARP_SIZE
+    }
+}
+
+/// Read-only view of the memories an expression may load from.
+pub struct MemView<'a> {
+    pub global: &'a std::collections::BTreeMap<String, super::machine::Buffer>,
+    pub shared: &'a HashMap<String, Vec<f32>>,
+}
+
+/// Evaluation error (out-of-bounds and friends) — surfaced to the testing
+/// agent as a *failing* candidate rather than a panic.
+#[derive(Debug, Clone)]
+pub enum EvalError {
+    OutOfBounds {
+        buf: String,
+        idx: i64,
+        len: usize,
+    },
+    UnknownBuffer(String),
+    UnknownVar(String),
+    /// A shuffle reached the private (per-thread) evaluator.
+    ShuffleOutsideCollective,
+}
+
+impl std::fmt::Display for EvalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EvalError::OutOfBounds { buf, idx, len } => {
+                write!(f, "out-of-bounds access {buf}[{idx}] (len {len})")
+            }
+            EvalError::UnknownBuffer(b) => write!(f, "unknown buffer {b}"),
+            EvalError::UnknownVar(v) => write!(f, "unknown variable {v}"),
+            EvalError::ShuffleOutsideCollective => {
+                write!(f, "__shfl_down_sync outside collective context")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EvalError {}
+
+/// Evaluate an integer expression.
+pub fn eval_i(
+    e: &IExpr,
+    dims: &crate::ir::DimEnv,
+    t: ThreadId,
+    regs: &Regs,
+) -> Result<i64, EvalError> {
+    Ok(match e {
+        IExpr::Const(c) => *c,
+        IExpr::Dim(d) => *dims
+            .get(d)
+            .ok_or_else(|| EvalError::UnknownVar(d.clone()))?,
+        IExpr::Var(v) => regs
+            .i
+            .get(v)
+            .ok_or_else(|| EvalError::UnknownVar(v.clone()))?,
+        IExpr::Thread(tv) => match tv {
+            ThreadVar::ThreadIdx => t.tx,
+            ThreadVar::BlockIdx => t.bx,
+            ThreadVar::BlockDim => t.bdim,
+            ThreadVar::GridDim => t.gdim,
+            ThreadVar::LaneId => t.lane(),
+            ThreadVar::WarpId => t.warp(),
+        },
+        IExpr::Bin(op, a, b) => eval_ibin(
+            *op,
+            eval_i(a, dims, t, regs)?,
+            eval_i(b, dims, t, regs)?,
+        ),
+    })
+}
+
+/// Evaluate a boolean expression.
+pub fn eval_b(
+    e: &BExpr,
+    dims: &crate::ir::DimEnv,
+    t: ThreadId,
+    regs: &Regs,
+) -> Result<bool, EvalError> {
+    Ok(match e {
+        BExpr::Cmp(op, a, b) => eval_cmp(
+            *op,
+            eval_i(a, dims, t, regs)?,
+            eval_i(b, dims, t, regs)?,
+        ),
+        BExpr::And(a, b) => eval_b(a, dims, t, regs)? && eval_b(b, dims, t, regs)?,
+        BExpr::Or(a, b) => eval_b(a, dims, t, regs)? || eval_b(b, dims, t, regs)?,
+        BExpr::Not(a) => !eval_b(a, dims, t, regs)?,
+    })
+}
+
+/// Deterministic precision loss of CUDA fast-math intrinsics: truncate the
+/// mantissa to `keep_bits`. `__expf`/`__frcp_rn` keep ~16 good bits, which
+/// is far inside the 1e-3 relative tolerance production kernels use but
+/// far outside f32 round-off — so a too-strict tolerance catches it.
+pub fn fastmath_quantize(v: f32, keep_bits: u32) -> f32 {
+    if !v.is_finite() || v == 0.0 {
+        return v;
+    }
+    let drop = 23 - keep_bits;
+    let mask = !((1u32 << drop) - 1);
+    f32::from_bits(v.to_bits() & mask)
+}
+
+const FAST_BITS: u32 = 16;
+
+/// Shuffle resolver: given (current thread, offset), produce the value of
+/// the shuffled expression evaluated in the source lane's context. Only
+/// provided in collective execution.
+pub type ShflFn<'a> = dyn Fn(&VExpr, i64) -> Result<f32, EvalError> + 'a;
+
+/// Evaluate a floating expression.
+///
+/// `shfl` is `Some` only in collective (lockstep) execution; private
+/// statements containing shuffles are a legality violation surfaced as an
+/// error (the coding agent produced a racy kernel).
+pub fn eval_v(
+    e: &VExpr,
+    dims: &crate::ir::DimEnv,
+    t: ThreadId,
+    regs: &Regs,
+    mem: &MemView,
+    shfl: Option<&ShflFn>,
+) -> Result<f32, EvalError> {
+    Ok(match e {
+        VExpr::Const(c) => *c as f32,
+        VExpr::Var(v) => regs
+            .f
+            .get(v)
+            .ok_or_else(|| EvalError::UnknownVar(v.clone()))?,
+        VExpr::FromInt(i) => eval_i(i, dims, t, regs)? as f32,
+        VExpr::Bin(op, a, b) => {
+            let x = eval_v(a, dims, t, regs, mem, shfl)?;
+            let y = eval_v(b, dims, t, regs, mem, shfl)?;
+            match op {
+                FBinOp::Add => x + y,
+                FBinOp::Sub => x - y,
+                FBinOp::Mul => x * y,
+                FBinOp::Div => x / y,
+                FBinOp::Min => x.min(y),
+                FBinOp::Max => x.max(y),
+            }
+        }
+        VExpr::Call(f, a) => {
+            let x = eval_v(a, dims, t, regs, mem, shfl)?;
+            match f {
+                MathFn::Exp => x.exp(),
+                MathFn::Log => x.ln(),
+                MathFn::Sqrt => x.sqrt(),
+                MathFn::Rsqrt => 1.0 / x.sqrt(),
+                MathFn::Abs => x.abs(),
+                MathFn::FastExp => fastmath_quantize(x.exp(), FAST_BITS),
+                MathFn::FastLog => fastmath_quantize(x.ln(), FAST_BITS),
+                MathFn::FastRecip => fastmath_quantize(1.0 / x, FAST_BITS),
+            }
+        }
+        VExpr::Load {
+            space, buf, idx, ..
+        } => {
+            let i = eval_i(idx, dims, t, regs)?;
+            match space {
+                MemSpace::Global => {
+                    let b = mem
+                        .global
+                        .get(buf)
+                        .ok_or_else(|| EvalError::UnknownBuffer(buf.clone()))?;
+                    *b.data.get(i as usize).ok_or(EvalError::OutOfBounds {
+                        buf: buf.clone(),
+                        idx: i,
+                        len: b.data.len(),
+                    })?
+                }
+                MemSpace::Shared => {
+                    let b = mem
+                        .shared
+                        .get(buf)
+                        .ok_or_else(|| EvalError::UnknownBuffer(buf.clone()))?;
+                    *b.get(i as usize).ok_or(EvalError::OutOfBounds {
+                        buf: buf.clone(),
+                        idx: i,
+                        len: b.len(),
+                    })?
+                }
+            }
+        }
+        VExpr::ShflDown { value, offset } => {
+            let off = eval_i(offset, dims, t, regs)?;
+            let f = shfl.ok_or(EvalError::ShuffleOutsideCollective)?;
+            f(value, off)?
+        }
+        VExpr::Select(c, a, b) => {
+            if eval_b(c, dims, t, regs)? {
+                eval_v(a, dims, t, regs, mem, shfl)?
+            } else {
+                eval_v(b, dims, t, regs, mem, shfl)?
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use std::collections::BTreeMap;
+
+    fn ctx() -> (crate::ir::DimEnv, ThreadId, Regs) {
+        let mut dims = crate::ir::DimEnv::new();
+        dims.insert("D".into(), 64);
+        let t = ThreadId {
+            tx: 35,
+            bx: 2,
+            bdim: 128,
+            gdim: 4,
+        };
+        (dims, t, Regs::default())
+    }
+
+    #[test]
+    fn thread_vars_and_lanes() {
+        let (dims, t, regs) = ctx();
+        assert_eq!(eval_i(&tx(), &dims, t, &regs).unwrap(), 35);
+        assert_eq!(eval_i(&lane(), &dims, t, &regs).unwrap(), 3);
+        assert_eq!(eval_i(&warp(), &dims, t, &regs).unwrap(), 1);
+        assert_eq!(eval_i(&dim("D"), &dims, t, &regs).unwrap(), 64);
+    }
+
+    #[test]
+    fn fastmath_is_lossy_but_close() {
+        let v = 1.234567f32;
+        let q = fastmath_quantize(v, 16);
+        assert_ne!(q, v);
+        assert!((q - v).abs() / v < 2e-5);
+        assert_eq!(fastmath_quantize(0.0, 16), 0.0);
+        assert!(fastmath_quantize(f32::INFINITY, 16).is_infinite());
+    }
+
+    #[test]
+    fn float_eval_math() {
+        let (dims, t, regs) = ctx();
+        let mem = MemView {
+            global: &BTreeMap::new(),
+            shared: &HashMap::new(),
+        };
+        let e = exp(fc(1.0));
+        let v = eval_v(&e, &dims, t, &regs, &mem, None).unwrap();
+        assert!((v - std::f32::consts::E).abs() < 1e-6);
+        // fast recip is quantized
+        let e = VExpr::call(MathFn::FastRecip, fc(3.0));
+        let v = eval_v(&e, &dims, t, &regs, &mem, None).unwrap();
+        assert!((v - 1.0 / 3.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn shuffle_without_context_errors() {
+        let (dims, t, regs) = ctx();
+        let mem = MemView {
+            global: &BTreeMap::new(),
+            shared: &HashMap::new(),
+        };
+        let e = shfl_down(fc(1.0), c(16));
+        assert!(matches!(
+            eval_v(&e, &dims, t, &regs, &mem, None),
+            Err(EvalError::ShuffleOutsideCollective)
+        ));
+    }
+
+    #[test]
+    fn oob_load_reports() {
+        let (dims, t, mut regs) = ctx();
+        regs.i.set("i", 99);
+        let mut global = BTreeMap::new();
+        global.insert(
+            "x".to_string(),
+            super::super::machine::Buffer {
+                dtype: crate::ir::DType::F32,
+                data: vec![0.0; 10],
+            },
+        );
+        let mem = MemView {
+            global: &global,
+            shared: &HashMap::new(),
+        };
+        let e = load("x", iv("i"));
+        assert!(matches!(
+            eval_v(&e, &dims, t, &regs, &mem, None),
+            Err(EvalError::OutOfBounds { .. })
+        ));
+    }
+}

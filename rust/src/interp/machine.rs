@@ -1,0 +1,743 @@
+//! Grid/block execution machine: private per-thread recursion + lockstep
+//! two-phase collective execution.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::ir::analysis::is_collective;
+use crate::ir::expr::VExpr;
+use crate::ir::kernel::{eval_static, BufIo};
+use crate::ir::stmt::{ForLoop, Stmt, Update};
+use crate::ir::types::{f32_to_f16_round, DType, MemSpace};
+use crate::ir::{DimEnv, Kernel};
+
+use super::eval::{
+    eval_b, eval_i, eval_v, EvalError, MemView, Regs, ThreadId, WARP_SIZE,
+};
+
+/// Hard cap on interpreted statement executions per launch — transforms
+/// gone wrong (e.g. a broken loop update) fail fast instead of hanging the
+/// testing agent.
+const STEP_LIMIT: u64 = 200_000_000;
+
+/// A named global buffer.
+#[derive(Debug, Clone)]
+pub struct Buffer {
+    pub dtype: DType,
+    pub data: Vec<f32>,
+}
+
+/// The global-memory environment a kernel launch reads and writes.
+#[derive(Debug, Clone, Default)]
+pub struct ExecEnv {
+    pub bufs: BTreeMap<String, Buffer>,
+}
+
+impl ExecEnv {
+    /// Allocate zeroed buffers for every parameter of `kernel`.
+    pub fn for_kernel(kernel: &Kernel, dims: &DimEnv) -> ExecEnv {
+        let mut bufs = BTreeMap::new();
+        for p in &kernel.params {
+            let len = kernel.buf_len(&p.name, dims) as usize;
+            bufs.insert(
+                p.name.clone(),
+                Buffer {
+                    dtype: p.dtype,
+                    data: vec![0.0; len],
+                },
+            );
+        }
+        ExecEnv { bufs }
+    }
+
+    /// Replace the contents of a buffer (length-checked at `run`).
+    pub fn set(&mut self, name: &str, data: Vec<f32>) {
+        let b = self
+            .bufs
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("unknown buffer {name}"));
+        b.data = data;
+    }
+
+    pub fn get(&self, name: &str) -> &[f32] {
+        &self
+            .bufs
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown buffer {name}"))
+            .data
+    }
+}
+
+/// Interpreter failure — reported to the testing agent as a candidate
+/// failure (compile/run error in the paper's pipeline), not a panic.
+#[derive(Debug, Clone)]
+pub enum InterpError {
+    Eval(EvalError),
+    /// A collective loop's trip metadata diverged across the block.
+    NonUniformLoop(String),
+    /// STEP_LIMIT exceeded.
+    IterationLimit,
+    /// A buffer has the wrong length for the dims.
+    BadBufferLen {
+        buf: String,
+        expect: usize,
+        got: usize,
+    },
+}
+
+impl std::fmt::Display for InterpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InterpError::Eval(e) => write!(f, "eval error: {e}"),
+            InterpError::NonUniformLoop(v) => {
+                write!(f, "non-uniform collective loop over {v}")
+            }
+            InterpError::IterationLimit => write!(f, "iteration limit exceeded"),
+            InterpError::BadBufferLen { buf, expect, got } => write!(
+                f,
+                "buffer {buf} has length {got}, dims imply {expect}"
+            ),
+        }
+    }
+}
+impl std::error::Error for InterpError {}
+
+impl From<EvalError> for InterpError {
+    fn from(e: EvalError) -> Self {
+        InterpError::Eval(e)
+    }
+}
+
+/// Execute one kernel launch over `env`.
+pub fn run(
+    kernel: &Kernel,
+    dims: &DimEnv,
+    env: &mut ExecEnv,
+) -> Result<(), InterpError> {
+    // Validate buffer lengths.
+    for p in &kernel.params {
+        let expect = kernel.buf_len(&p.name, dims) as usize;
+        let got = env.get(&p.name).len();
+        if expect != got {
+            return Err(InterpError::BadBufferLen {
+                buf: p.name.clone(),
+                expect,
+                got,
+            });
+        }
+    }
+    // Input data of f16 buffers is f16 in memory: round on entry.
+    for p in &kernel.params {
+        if p.dtype == DType::F16 && matches!(p.io, BufIo::In | BufIo::InOut) {
+            let b = env.bufs.get_mut(&p.name).unwrap();
+            for v in &mut b.data {
+                *v = f32_to_f16_round(*v);
+            }
+        }
+    }
+
+    let grid = kernel.grid_size(dims);
+    let block = kernel.launch.block as i64;
+    // One body clone per launch (not per block): the machine needs the
+    // statements unborrowed from `kernel` while it mutates buffers.
+    let body = kernel.body.clone();
+    let mut m = Machine {
+        kernel,
+        dims,
+        env,
+        steps: 0,
+    };
+    for bx in 0..grid {
+        m.run_block(&body, bx, block, grid)?;
+    }
+    Ok(())
+}
+
+struct Machine<'a> {
+    kernel: &'a Kernel,
+    dims: &'a DimEnv,
+    env: &'a mut ExecEnv,
+    steps: u64,
+}
+
+/// Mutable state of one block in flight.
+struct BlockState {
+    threads: Vec<Regs>,
+    shared: HashMap<String, Vec<f32>>,
+    bx: i64,
+    bdim: i64,
+    gdim: i64,
+}
+
+impl BlockState {
+    fn tid(&self, t: usize) -> ThreadId {
+        ThreadId {
+            tx: t as i64,
+            bx: self.bx,
+            bdim: self.bdim,
+            gdim: self.gdim,
+        }
+    }
+}
+
+impl<'a> Machine<'a> {
+    fn tick(&mut self) -> Result<(), InterpError> {
+        self.steps += 1;
+        if self.steps > STEP_LIMIT {
+            return Err(InterpError::IterationLimit);
+        }
+        Ok(())
+    }
+
+    fn run_block(
+        &mut self,
+        body: &[Stmt],
+        bx: i64,
+        block: i64,
+        grid: i64,
+    ) -> Result<(), InterpError> {
+        let mut shared = HashMap::new();
+        for s in &self.kernel.shared {
+            let len =
+                eval_static(&s.len, self.dims, self.kernel.launch.block) as usize;
+            shared.insert(s.name.clone(), vec![0.0f32; len]);
+        }
+        let mut bs = BlockState {
+            threads: vec![Regs::default(); block as usize],
+            shared,
+            bx,
+            bdim: block,
+            gdim: grid,
+        };
+        let active: Vec<usize> = (0..block as usize).collect();
+        self.exec_stmts(body, &mut bs, &active)
+    }
+
+    fn exec_stmts(
+        &mut self,
+        stmts: &[Stmt],
+        bs: &mut BlockState,
+        active: &[usize],
+    ) -> Result<(), InterpError> {
+        for s in stmts {
+            if is_collective(s) {
+                self.exec_collective(s, bs, active)?;
+            } else {
+                for &t in active {
+                    self.exec_private(s, bs, t)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- private (per-thread) execution ---------------------------------
+
+    fn exec_private(
+        &mut self,
+        s: &Stmt,
+        bs: &mut BlockState,
+        t: usize,
+    ) -> Result<(), InterpError> {
+        self.tick()?;
+        let tid = bs.tid(t);
+        match s {
+            Stmt::Comment(_) => {}
+            Stmt::DeclF { name, init } | Stmt::AssignF { name, value: init } => {
+                let v = {
+                    let mem = MemView {
+                        global: &self.env.bufs,
+                        shared: &bs.shared,
+                    };
+                    eval_v(init, self.dims, tid, &bs.threads[t], &mem, None)?
+                };
+                bs.threads[t].f.set(name, v);
+            }
+            Stmt::DeclI { name, init } | Stmt::AssignI { name, value: init } => {
+                let v = eval_i(init, self.dims, tid, &bs.threads[t])?;
+                bs.threads[t].i.set(name, v);
+            }
+            Stmt::Store {
+                space,
+                buf,
+                idx,
+                value,
+                ..
+            } => {
+                let (i, v) = {
+                    let mem = MemView {
+                        global: &self.env.bufs,
+                        shared: &bs.shared,
+                    };
+                    let i = eval_i(idx, self.dims, tid, &bs.threads[t])?;
+                    let v = eval_v(
+                        value,
+                        self.dims,
+                        tid,
+                        &bs.threads[t],
+                        &mem,
+                        None,
+                    )?;
+                    (i, v)
+                };
+                self.commit_store(*space, buf, i, v, bs)?;
+            }
+            Stmt::SyncThreads => {
+                // Private sync is unreachable (sync is collective); no-op.
+            }
+            Stmt::If { cond, then, els } => {
+                let c = eval_b(cond, self.dims, tid, &bs.threads[t])?;
+                let branch = if c { then } else { els };
+                for s in branch {
+                    self.exec_private(s, bs, t)?;
+                }
+            }
+            Stmt::For(l) => {
+                let init = eval_i(&l.init, self.dims, tid, &bs.threads[t])?;
+                let saved = bs.threads[t].i.set(&l.var, init);
+                loop {
+                    self.tick()?;
+                    let cur = bs.threads[t].i.get(&l.var).unwrap();
+                    let bound =
+                        eval_i(&l.bound, self.dims, tid, &bs.threads[t])?;
+                    if !crate::ir::expr::eval_cmp(l.cmp, cur, bound) {
+                        break;
+                    }
+                    for s in &l.body {
+                        self.exec_private(s, bs, t)?;
+                    }
+                    let next = step_var(&l.update, cur, self.dims, tid, &bs.threads[t])?;
+                    bs.threads[t].i.set(&l.var, next);
+                }
+                restore_var(&mut bs.threads[t], &l.var, saved);
+            }
+        }
+        Ok(())
+    }
+
+    // ---- collective (lockstep) execution ---------------------------------
+
+    fn exec_collective(
+        &mut self,
+        s: &Stmt,
+        bs: &mut BlockState,
+        active: &[usize],
+    ) -> Result<(), InterpError> {
+        self.tick()?;
+        match s {
+            Stmt::SyncThreads => { /* lockstep => barrier is implicit */ }
+            Stmt::Comment(_) => {}
+            Stmt::DeclF { name, init } | Stmt::AssignF { name, value: init } => {
+                let results = self.eval_lockstep(init, bs, active)?;
+                for (&t, v) in active.iter().zip(results) {
+                    bs.threads[t].f.set(name, v);
+                }
+            }
+            Stmt::DeclI { name, init } | Stmt::AssignI { name, value: init } => {
+                for &t in active {
+                    let v = eval_i(init, self.dims, bs.tid(t), &bs.threads[t])?;
+                    bs.threads[t].i.set(name, v);
+                }
+            }
+            Stmt::Store {
+                space,
+                buf,
+                idx,
+                value,
+                ..
+            } => {
+                // Two-phase: evaluate every thread's (index, value) against
+                // the pre-statement state, then commit — exact semantics for
+                // the disjoint read/write sets of reduction trees.
+                let vals = self.eval_lockstep(value, bs, active)?;
+                let mut writes = Vec::with_capacity(active.len());
+                for (&t, v) in active.iter().zip(vals) {
+                    let i = eval_i(idx, self.dims, bs.tid(t), &bs.threads[t])?;
+                    writes.push((i, v));
+                }
+                for (i, v) in writes {
+                    self.commit_store(*space, buf, i, v, bs)?;
+                }
+            }
+            Stmt::If { cond, then, els } => {
+                let mut t_act = Vec::new();
+                let mut e_act = Vec::new();
+                for &t in active {
+                    if eval_b(cond, self.dims, bs.tid(t), &bs.threads[t])? {
+                        t_act.push(t);
+                    } else {
+                        e_act.push(t);
+                    }
+                }
+                if !t_act.is_empty() {
+                    self.exec_stmts(then, bs, &t_act)?;
+                }
+                if !e_act.is_empty() && !els.is_empty() {
+                    self.exec_stmts(els, bs, &e_act)?;
+                }
+            }
+            Stmt::For(l) => self.exec_collective_for(l, bs, active)?,
+        }
+        Ok(())
+    }
+
+    /// Lockstep loop: trip metadata must be uniform across active threads.
+    fn exec_collective_for(
+        &mut self,
+        l: &ForLoop,
+        bs: &mut BlockState,
+        active: &[usize],
+    ) -> Result<(), InterpError> {
+        let mut saved = Vec::with_capacity(active.len());
+        let mut first: Option<i64> = None;
+        for &t in active {
+            let v = eval_i(&l.init, self.dims, bs.tid(t), &bs.threads[t])?;
+            match first {
+                None => first = Some(v),
+                Some(f) if f != v => {
+                    return Err(InterpError::NonUniformLoop(l.var.clone()))
+                }
+                _ => {}
+            }
+            saved.push(bs.threads[t].i.set(&l.var, v));
+        }
+        loop {
+            self.tick()?;
+            // Uniform condition check.
+            let mut cont: Option<bool> = None;
+            for &t in active {
+                let cur = bs.threads[t].i.get(&l.var).unwrap();
+                let bound = eval_i(&l.bound, self.dims, bs.tid(t), &bs.threads[t])?;
+                let c = crate::ir::expr::eval_cmp(l.cmp, cur, bound);
+                match cont {
+                    None => cont = Some(c),
+                    Some(p) if p != c => {
+                        return Err(InterpError::NonUniformLoop(l.var.clone()))
+                    }
+                    _ => {}
+                }
+            }
+            if !cont.unwrap_or(false) {
+                break;
+            }
+            self.exec_stmts(&l.body, bs, active)?;
+            for &t in active {
+                let cur = bs.threads[t].i.get(&l.var).unwrap();
+                let next = step_var(&l.update, cur, self.dims, bs.tid(t), &bs.threads[t])?;
+                bs.threads[t].i.set(&l.var, next);
+            }
+        }
+        for (&t, s) in active.iter().zip(saved) {
+            restore_var(&mut bs.threads[t], &l.var, s);
+        }
+        Ok(())
+    }
+
+    /// Evaluate `e` for every active thread against the pre-statement
+    /// state, resolving `__shfl_down_sync` against peer lanes.
+    fn eval_lockstep(
+        &self,
+        e: &VExpr,
+        bs: &BlockState,
+        active: &[usize],
+    ) -> Result<Vec<f32>, InterpError> {
+        let mem = MemView {
+            global: &self.env.bufs,
+            shared: &bs.shared,
+        };
+        let mut out = Vec::with_capacity(active.len());
+        for &t in active {
+            let tid = bs.tid(t);
+            let threads = &bs.threads;
+            let dims = self.dims;
+            let memr = &mem;
+            // Shuffle resolver: value of the expression in lane (lane+off)
+            // of the same warp; out-of-range lanes return the caller's own.
+            let shfl = move |inner: &VExpr, off: i64| {
+                let src_lane = tid.lane() + off;
+                let src = if (0..WARP_SIZE).contains(&src_lane) {
+                    let cand = tid.warp() * WARP_SIZE + src_lane;
+                    if cand < threads.len() as i64 {
+                        cand as usize
+                    } else {
+                        t
+                    }
+                } else {
+                    t
+                };
+                let stid = ThreadId {
+                    tx: src as i64,
+                    ..tid
+                };
+                eval_v(inner, dims, stid, &threads[src], memr, None)
+            };
+            out.push(eval_v(e, self.dims, tid, &bs.threads[t], &mem, Some(&shfl))?);
+        }
+        Ok(out)
+    }
+
+    fn commit_store(
+        &mut self,
+        space: MemSpace,
+        buf: &str,
+        i: i64,
+        v: f32,
+        bs: &mut BlockState,
+    ) -> Result<(), InterpError> {
+        match space {
+            MemSpace::Global => {
+                let b = self
+                    .env
+                    .bufs
+                    .get_mut(buf)
+                    .ok_or_else(|| EvalError::UnknownBuffer(buf.into()))?;
+                let len = b.data.len();
+                let slot = b.data.get_mut(i as usize).ok_or(
+                    EvalError::OutOfBounds {
+                        buf: buf.into(),
+                        idx: i,
+                        len,
+                    },
+                )?;
+                *slot = if b.dtype == DType::F16 {
+                    f32_to_f16_round(v)
+                } else {
+                    v
+                };
+            }
+            MemSpace::Shared => {
+                let b = bs
+                    .shared
+                    .get_mut(buf)
+                    .ok_or_else(|| EvalError::UnknownBuffer(buf.into()))?;
+                let len = b.len();
+                let slot =
+                    b.get_mut(i as usize).ok_or(EvalError::OutOfBounds {
+                        buf: buf.into(),
+                        idx: i,
+                        len,
+                    })?;
+                *slot = v;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn step_var(
+    u: &Update,
+    cur: i64,
+    dims: &DimEnv,
+    tid: ThreadId,
+    regs: &Regs,
+) -> Result<i64, InterpError> {
+    Ok(match u {
+        Update::AddAssign(e) => cur + eval_i(e, dims, tid, regs)?,
+        Update::ShrAssign(k) => cur >> k,
+    })
+}
+
+fn restore_var(regs: &mut Regs, var: &str, saved: Option<i64>) {
+    match saved {
+        Some(v) => {
+            regs.i.set(var, v);
+        }
+        None => {
+            regs.i.remove(var);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::ir::kernel::{BufParam, Launch};
+
+    /// y[i] = 2*x[i] with a grid-stride loop.
+    fn scale_kernel(block: u32) -> Kernel {
+        Kernel {
+            name: "scale".into(),
+            dims: vec!["N".into()],
+            params: vec![
+                BufParam {
+                    name: "x".into(),
+                    dtype: DType::F32,
+                    len: dim("N"),
+                    io: BufIo::In,
+                },
+                BufParam {
+                    name: "y".into(),
+                    dtype: DType::F32,
+                    len: dim("N"),
+                    io: BufIo::Out,
+                },
+            ],
+            shared: vec![],
+            launch: Launch {
+                grid: c(2),
+                block,
+            },
+            body: vec![for_up(
+                "i",
+                iadd(imul(bx(), bdim()), tx()),
+                dim("N"),
+                imul(bdim(), gdim()),
+                vec![store("y", iv("i"), fmul(load("x", iv("i")), fc(2.0)))],
+            )],
+        }
+    }
+
+    #[test]
+    fn grid_stride_scale() {
+        let k = scale_kernel(32);
+        let mut dims = DimEnv::new();
+        dims.insert("N".into(), 100);
+        let x: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let env = super::super::run_with_inputs(&k, &dims, &[("x", x.clone())])
+            .unwrap();
+        let y = env.get("y");
+        for i in 0..100 {
+            assert_eq!(y[i], 2.0 * x[i]);
+        }
+    }
+
+    /// Block-wide shared-memory tree reduction: out[bx] = sum(x[bx*B..]).
+    fn reduce_kernel() -> Kernel {
+        Kernel {
+            name: "reduce".into(),
+            dims: vec!["N".into()],
+            params: vec![
+                BufParam {
+                    name: "x".into(),
+                    dtype: DType::F32,
+                    len: dim("N"),
+                    io: BufIo::In,
+                },
+                BufParam {
+                    name: "out".into(),
+                    dtype: DType::F32,
+                    len: c(2),
+                    io: BufIo::Out,
+                },
+            ],
+            shared: vec![SharedAllocT()],
+            launch: Launch { grid: c(2), block: 64 },
+            body: vec![
+                store_sh("sm", tx(), load("x", iadd(imul(bx(), bdim()), tx()))),
+                sync(),
+                for_shr(
+                    "off",
+                    ishr(bdim(), 1),
+                    vec![
+                        if_(
+                            lt(tx(), iv("off")),
+                            vec![store_sh(
+                                "sm",
+                                tx(),
+                                fadd(
+                                    load_sh("sm", tx()),
+                                    load_sh("sm", iadd(tx(), iv("off"))),
+                                ),
+                            )],
+                        ),
+                        sync(),
+                    ],
+                ),
+                if_(eq(tx(), c(0)), vec![store("out", bx(), load_sh("sm", c(0)))]),
+            ],
+        }
+    }
+
+    #[allow(non_snake_case)]
+    fn SharedAllocT() -> crate::ir::SharedAlloc {
+        crate::ir::SharedAlloc {
+            name: "sm".into(),
+            len: bdim(),
+        }
+    }
+
+    #[test]
+    fn shared_tree_reduction() {
+        let k = reduce_kernel();
+        let mut dims = DimEnv::new();
+        dims.insert("N".into(), 128);
+        let x: Vec<f32> = (0..128).map(|i| (i % 7) as f32).collect();
+        let env =
+            super::super::run_with_inputs(&k, &dims, &[("x", x.clone())]).unwrap();
+        let out = env.get("out");
+        let s0: f32 = x[..64].iter().sum();
+        let s1: f32 = x[64..].iter().sum();
+        assert_eq!(out[0], s0);
+        assert_eq!(out[1], s1);
+    }
+
+    /// Warp shuffle reduction within one warp.
+    fn shfl_kernel() -> Kernel {
+        Kernel {
+            name: "warp_sum".into(),
+            dims: vec![],
+            params: vec![
+                BufParam {
+                    name: "x".into(),
+                    dtype: DType::F32,
+                    len: c(32),
+                    io: BufIo::In,
+                },
+                BufParam {
+                    name: "out".into(),
+                    dtype: DType::F32,
+                    len: c(1),
+                    io: BufIo::Out,
+                },
+            ],
+            shared: vec![],
+            launch: Launch { grid: c(1), block: 32 },
+            body: vec![
+                declf("s", load("x", tx())),
+                for_shr(
+                    "off",
+                    c(16),
+                    vec![assignf("s", fadd(fv("s"), shfl_down(fv("s"), iv("off"))))],
+                ),
+                if_(eq(tx(), c(0)), vec![store("out", c(0), fv("s"))]),
+            ],
+        }
+    }
+
+    #[test]
+    fn warp_shuffle_reduction() {
+        let k = shfl_kernel();
+        let dims = DimEnv::new();
+        let x: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let env =
+            super::super::run_with_inputs(&k, &dims, &[("x", x.clone())]).unwrap();
+        assert_eq!(env.get("out")[0], x.iter().sum::<f32>());
+    }
+
+    #[test]
+    fn f16_buffers_round_on_store_and_input() {
+        let mut k = scale_kernel(32);
+        k.params[0].dtype = DType::F16;
+        k.params[1].dtype = DType::F16;
+        let mut dims = DimEnv::new();
+        dims.insert("N".into(), 4);
+        let x = vec![1.0f32 + 2.0_f32.powi(-11); 4]; // not f16-exact
+        let env = super::super::run_with_inputs(&k, &dims, &[("x", x)]).unwrap();
+        let y = env.get("y")[0];
+        // Input rounds to 1.0 (nearest even), doubled = 2.0, store exact.
+        assert_eq!(y, 2.0);
+    }
+
+    #[test]
+    fn oob_surfaces_as_error() {
+        let k = scale_kernel(32);
+        let mut dims = DimEnv::new();
+        dims.insert("N".into(), 100);
+        let mut env = ExecEnv::for_kernel(&k, &dims);
+        env.set("x", vec![0.0; 50]); // wrong length
+        assert!(matches!(
+            run(&k, &dims, &mut env),
+            Err(InterpError::BadBufferLen { .. })
+        ));
+    }
+}

@@ -1,0 +1,54 @@
+//! Functional interpreter for the kernel IR.
+//!
+//! This is the *correctness* half of the execution substrate (the
+//! performance half is [`crate::sim`]): it executes a kernel over concrete
+//! buffers with CUDA-faithful semantics —
+//!
+//! * grid of independent blocks, threads executed per block;
+//! * *private* statements (no shared memory, no shuffles, no barriers) run
+//!   per-thread, so divergent control flow is exact;
+//! * *collective* statements run in lockstep across the block with
+//!   two-phase evaluate/commit, which gives exact semantics for
+//!   `__syncthreads()`, shared-memory tree reductions and
+//!   `__shfl_down_sync` warp reductions in the (race-free) kernels the
+//!   agents produce;
+//! * f16 buffers round on store (bit-exact IEEE binary16, see
+//!   [`crate::ir::types`]);
+//! * fast-math intrinsics are deterministically *lossy* (mantissa
+//!   truncation) so the testing agent's tolerance check is meaningful.
+
+mod eval;
+mod machine;
+
+pub use eval::{fastmath_quantize, WARP_SIZE};
+pub use machine::{run, ExecEnv, InterpError};
+
+use crate::ir::{DimEnv, Kernel};
+
+/// Convenience: run `kernel` over named buffers, returning the environment.
+pub fn run_with_inputs(
+    kernel: &Kernel,
+    dims: &DimEnv,
+    inputs: &[(&str, Vec<f32>)],
+) -> Result<ExecEnv, InterpError> {
+    let mut env = ExecEnv::for_kernel(kernel, dims);
+    for (name, data) in inputs {
+        env.set(name, data.clone());
+    }
+    run(kernel, dims, &mut env)?;
+    Ok(env)
+}
+
+/// Max absolute and max relative error between two buffers.
+pub fn max_errors(got: &[f32], want: &[f32]) -> (f32, f32) {
+    assert_eq!(got.len(), want.len());
+    let mut abs = 0f32;
+    let mut rel = 0f32;
+    for (g, w) in got.iter().zip(want) {
+        let a = (g - w).abs();
+        abs = abs.max(a);
+        let denom = w.abs().max(1e-6);
+        rel = rel.max(a / denom);
+    }
+    (abs, rel)
+}

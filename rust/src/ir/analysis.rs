@@ -1,0 +1,395 @@
+//! Structural analyses over the IR: dependence queries used by the
+//! transformation legality checks, and the feature extraction the planning
+//! agent reads (its "Nsight report" of the code structure).
+
+use std::collections::BTreeSet;
+
+
+use super::expr::{BExpr, IExpr, MathFn, VExpr};
+use super::kernel::Kernel;
+use super::stmt::{ForLoop, Stmt, Update};
+use super::types::{DType, MemSpace};
+
+/// Collect integer variables referenced by an index expression.
+pub fn ivars(e: &IExpr, out: &mut BTreeSet<String>) {
+    match e {
+        IExpr::Var(v) => {
+            out.insert(v.clone());
+        }
+        IExpr::Bin(_, a, b) => {
+            ivars(a, out);
+            ivars(b, out);
+        }
+        _ => {}
+    }
+}
+
+/// Collect integer variables referenced by a boolean expression.
+pub fn bvars(e: &BExpr, out: &mut BTreeSet<String>) {
+    match e {
+        BExpr::Cmp(_, a, b) => {
+            ivars(a, out);
+            ivars(b, out);
+        }
+        BExpr::And(a, b) | BExpr::Or(a, b) => {
+            bvars(a, out);
+            bvars(b, out);
+        }
+        BExpr::Not(a) => bvars(a, out),
+    }
+}
+
+/// Variables (int and float) referenced by a value expression, plus
+/// whether it contains any memory load or shuffle.
+pub struct VUse {
+    pub vars: BTreeSet<String>,
+    pub has_load: bool,
+    pub has_shuffle: bool,
+}
+
+pub fn vuse(e: &VExpr) -> VUse {
+    let mut u = VUse {
+        vars: BTreeSet::new(),
+        has_load: false,
+        has_shuffle: false,
+    };
+    collect_vuse(e, &mut u);
+    u
+}
+
+fn collect_vuse(e: &VExpr, u: &mut VUse) {
+    match e {
+        VExpr::Const(_) => {}
+        VExpr::Var(v) => {
+            u.vars.insert(v.clone());
+        }
+        VExpr::FromInt(i) => ivars(i, &mut u.vars),
+        VExpr::Bin(_, a, b) => {
+            collect_vuse(a, u);
+            collect_vuse(b, u);
+        }
+        VExpr::Call(_, a) => collect_vuse(a, u),
+        VExpr::Load { idx, .. } => {
+            u.has_load = true;
+            ivars(idx, &mut u.vars);
+        }
+        VExpr::ShflDown { value, offset } => {
+            u.has_shuffle = true;
+            collect_vuse(value, u);
+            ivars(offset, &mut u.vars);
+        }
+        VExpr::Select(c, a, b) => {
+            bvars(c, &mut u.vars);
+            collect_vuse(a, u);
+            collect_vuse(b, u);
+        }
+    }
+}
+
+/// True if the statement (or any nested statement) touches shared memory,
+/// shuffles, or synchronizes — i.e. requires lockstep (collective)
+/// execution in the interpreter.
+pub fn is_collective(s: &Stmt) -> bool {
+    let mut found = false;
+    s.walk(&mut |s| match s {
+        Stmt::SyncThreads => found = true,
+        Stmt::Store {
+            space: MemSpace::Shared,
+            ..
+        } => found = true,
+        Stmt::DeclF { init: v, .. } | Stmt::AssignF { value: v, .. } => {
+            if expr_collective(v) {
+                found = true;
+            }
+        }
+        Stmt::Store { value: v, .. } => {
+            if expr_collective(v) {
+                found = true;
+            }
+        }
+        _ => {}
+    });
+    found
+}
+
+fn expr_collective(e: &VExpr) -> bool {
+    match e {
+        VExpr::ShflDown { .. } => true,
+        VExpr::Load {
+            space: MemSpace::Shared,
+            ..
+        } => true,
+        VExpr::Bin(_, a, b) => expr_collective(a) || expr_collective(b),
+        VExpr::Call(_, a) => expr_collective(a),
+        VExpr::Select(_, a, b) => expr_collective(a) || expr_collective(b),
+        _ => false,
+    }
+}
+
+/// Structural features of a kernel — the code-shape half of the profiling
+/// report the planning agent consumes (Figure 1's "profiling" arrow).
+#[derive(Debug, Clone, Default)]
+pub struct Features {
+    /// IEEE divisions in loop bodies.
+    pub divisions: usize,
+    /// Slow libm calls (expf/logf/sqrtf) anywhere.
+    pub slow_math_calls: usize,
+    /// Slow libm calls *inside* loops (hoisting / fast-math candidates).
+    pub slow_math_in_loops: usize,
+    /// Fast intrinsic calls (__expf, __frcp_rn, ...).
+    pub fast_math_calls: usize,
+    /// Scalar (width-1) global loads of f16 buffers inside loops.
+    pub scalar_f16_loads_in_loops: usize,
+    /// Scalar global loads of any dtype inside loops.
+    pub scalar_loads_in_loops: usize,
+    /// Widest vectorized access in the kernel (1 = none).
+    pub max_vector_width: u8,
+    /// `__syncthreads()` statements (statically; tree loops count once).
+    pub syncs: usize,
+    /// A shared-memory tree-reduction pattern is present
+    /// (`for (off = N; off > 0; off >>= 1) { if (tx < off) sm[tx] += ... }`).
+    pub has_tree_reduction: bool,
+    /// Warp-shuffle reduction present.
+    pub has_warp_shuffle: bool,
+    /// Number of loop-invariant float statements inside loops (hoistable).
+    pub hoistable_stmts: usize,
+    /// Total loops.
+    pub loops: usize,
+    /// Unrolled loops.
+    pub unrolled_loops: usize,
+}
+
+/// Extract structural features from a kernel.
+pub fn features(k: &Kernel) -> Features {
+    let mut f = Features {
+        max_vector_width: 1,
+        ..Default::default()
+    };
+    scan_stmts(k, &k.body, &mut f, &mut Vec::new());
+    f
+}
+
+fn scan_stmts(
+    k: &Kernel,
+    stmts: &[Stmt],
+    f: &mut Features,
+    loop_stack: &mut Vec<String>,
+) {
+    // Names pinned inside the current loop nest: loop vars plus anything
+    // declared or assigned within it (matches transforms::hoist legality).
+    let mut pinned: std::collections::BTreeSet<String> =
+        loop_stack.iter().cloned().collect();
+    if !loop_stack.is_empty() {
+        for s in stmts {
+            s.walk(&mut |s| match s {
+                Stmt::AssignF { name, .. }
+                | Stmt::AssignI { name, .. }
+                | Stmt::DeclI { name, .. } => {
+                    pinned.insert(name.clone());
+                }
+                Stmt::For(l) => {
+                    pinned.insert(l.var.clone());
+                }
+                _ => {}
+            });
+        }
+    }
+    for s in stmts {
+        match s {
+            Stmt::DeclF { init: v, .. }
+            | Stmt::AssignF { value: v, .. }
+            | Stmt::Store { value: v, .. } => {
+                scan_vexpr(k, v, f, !loop_stack.is_empty());
+                if let Stmt::Store { vector_width, .. } = s {
+                    f.max_vector_width = f.max_vector_width.max(*vector_width);
+                }
+                // Hoistable: a float decl/assign inside a loop whose RHS does
+                // not depend on any enclosing loop variable, loads, shuffles
+                // or loop-carried floats.
+                if !loop_stack.is_empty() {
+                    if let Stmt::DeclF { name, init } = s {
+                        let u = vuse(init);
+                        let dep = u.has_load
+                            || u.has_shuffle
+                            || u.vars.iter().any(|v| pinned.contains(v));
+                        if dep {
+                            // Loop-dependent: nothing reading it can hoist.
+                            pinned.insert(name.clone());
+                        } else if count_math(init) > 0 {
+                            // Invariant AND carries real math — worth
+                            // reporting to the planner.
+                            f.hoistable_stmts += 1;
+                        }
+                        // Invariant-but-trivial decls stay unpinned: they
+                        // hoist along with their consumers.
+                    }
+                }
+            }
+            Stmt::SyncThreads => f.syncs += 1,
+            Stmt::For(l) => {
+                f.loops += 1;
+                if matches!(l.kind, super::stmt::LoopKind::Unrolled(_)) {
+                    f.unrolled_loops += 1;
+                }
+                if is_tree_reduction(l) {
+                    f.has_tree_reduction = true;
+                }
+                loop_stack.push(l.var.clone());
+                scan_stmts(k, &l.body, f, loop_stack);
+                loop_stack.pop();
+            }
+            Stmt::If { then, els, .. } => {
+                scan_stmts(k, then, f, loop_stack);
+                scan_stmts(k, els, f, loop_stack);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn count_math(e: &VExpr) -> usize {
+    match e {
+        VExpr::Call(_, a) => 1 + count_math(a),
+        VExpr::Bin(op, a, b) => {
+            let d = usize::from(matches!(op, super::expr::FBinOp::Div));
+            d + count_math(a) + count_math(b)
+        }
+        VExpr::Select(_, a, b) => count_math(a) + count_math(b),
+        VExpr::ShflDown { value, .. } => count_math(value),
+        _ => 0,
+    }
+}
+
+fn scan_vexpr(k: &Kernel, e: &VExpr, f: &mut Features, in_loop: bool) {
+    match e {
+        VExpr::Bin(op, a, b) => {
+            if matches!(op, super::expr::FBinOp::Div) && in_loop {
+                f.divisions += 1;
+            }
+            scan_vexpr(k, a, f, in_loop);
+            scan_vexpr(k, b, f, in_loop);
+        }
+        VExpr::Call(m, a) => {
+            match m {
+                MathFn::Exp | MathFn::Log | MathFn::Sqrt => {
+                    f.slow_math_calls += 1;
+                    if in_loop {
+                        f.slow_math_in_loops += 1;
+                    }
+                }
+                MathFn::FastExp | MathFn::FastLog | MathFn::FastRecip => {
+                    f.fast_math_calls += 1
+                }
+                _ => {}
+            }
+            scan_vexpr(k, a, f, in_loop);
+        }
+        VExpr::Load {
+            space: MemSpace::Global,
+            buf,
+            vector_width,
+            ..
+        } => {
+            f.max_vector_width = f.max_vector_width.max(*vector_width);
+            if in_loop && *vector_width == 1 {
+                f.scalar_loads_in_loops += 1;
+                if k.param(buf).map(|p| p.dtype) == Some(DType::F16) {
+                    f.scalar_f16_loads_in_loops += 1;
+                }
+            }
+        }
+        VExpr::ShflDown { value, .. } => {
+            f.has_warp_shuffle = true;
+            scan_vexpr(k, value, f, in_loop);
+        }
+        VExpr::Select(_, a, b) => {
+            scan_vexpr(k, a, f, in_loop);
+            scan_vexpr(k, b, f, in_loop);
+        }
+        _ => {}
+    }
+}
+
+/// Detect the shared-memory tree-reduction idiom the paper's Figure 3a
+/// shows: a `>>=` loop whose body guards `tx < off` and accumulates
+/// `sm[tx] += sm[tx + off]`, with a barrier each step.
+pub fn is_tree_reduction(l: &ForLoop) -> bool {
+    if !matches!(l.update, Update::ShrAssign(1)) {
+        return false;
+    }
+    let mut has_guarded_shared_accum = false;
+    let mut has_sync = false;
+    for s in &l.body {
+        match s {
+            Stmt::SyncThreads => has_sync = true,
+            Stmt::If { then, .. } => {
+                for t in then {
+                    if let Stmt::Store {
+                        space: MemSpace::Shared,
+                        value,
+                        ..
+                    } = t
+                    {
+                        let u = vuse(value);
+                        if u.has_load {
+                            has_guarded_shared_accum = true;
+                        }
+                    }
+                    if matches!(t, Stmt::SyncThreads) {
+                        has_sync = true;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    has_guarded_shared_accum && has_sync
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+
+    #[test]
+    fn vuse_tracks_vars_and_loads() {
+        let e = fadd(fv("acc"), fmul(load("x", iv("d")), fc(2.0)));
+        let u = vuse(&e);
+        assert!(u.has_load);
+        assert!(u.vars.contains("acc"));
+        assert!(u.vars.contains("d"));
+    }
+
+    #[test]
+    fn tree_reduction_detected() {
+        let l = match for_shr(
+            "off",
+            ishr(bdim(), 1),
+            vec![
+                if_(
+                    lt(tx(), iv("off")),
+                    vec![store_sh(
+                        "sm",
+                        tx(),
+                        fadd(load_sh("sm", tx()), load_sh("sm", iadd(tx(), iv("off")))),
+                    )],
+                ),
+                sync(),
+            ],
+        ) {
+            Stmt::For(l) => l,
+            _ => unreachable!(),
+        };
+        assert!(is_tree_reduction(&l));
+    }
+
+    #[test]
+    fn collective_classification() {
+        let private = store("y", iv("i"), fmul(load("x", iv("i")), fc(2.0)));
+        assert!(!is_collective(&private));
+        assert!(is_collective(&sync()));
+        assert!(is_collective(&store_sh("sm", tx(), fv("s"))));
+        let shfl = declf("t", shfl_down(fv("s"), c(16)));
+        assert!(is_collective(&shfl));
+    }
+}

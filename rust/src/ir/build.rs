@@ -1,0 +1,246 @@
+//! Ergonomic construction helpers — a small DSL so kernel definitions in
+//! `crate::kernels` read close to the CUDA they model.
+
+use super::expr::{
+    BExpr, CmpOp, FBinOp, IBinOp, IExpr, MathFn, ThreadVar, VExpr,
+};
+use super::stmt::{ForLoop, LoopKind, Stmt, Update};
+use super::types::MemSpace;
+
+// ---- index expressions ----------------------------------------------------
+
+pub fn c(v: i64) -> IExpr {
+    IExpr::Const(v)
+}
+pub fn dim(name: &str) -> IExpr {
+    IExpr::Dim(name.into())
+}
+pub fn iv(name: &str) -> IExpr {
+    IExpr::Var(name.into())
+}
+pub fn tx() -> IExpr {
+    IExpr::Thread(ThreadVar::ThreadIdx)
+}
+pub fn bx() -> IExpr {
+    IExpr::Thread(ThreadVar::BlockIdx)
+}
+pub fn bdim() -> IExpr {
+    IExpr::Thread(ThreadVar::BlockDim)
+}
+pub fn gdim() -> IExpr {
+    IExpr::Thread(ThreadVar::GridDim)
+}
+pub fn lane() -> IExpr {
+    IExpr::Thread(ThreadVar::LaneId)
+}
+pub fn warp() -> IExpr {
+    IExpr::Thread(ThreadVar::WarpId)
+}
+
+pub fn iadd(a: IExpr, b: IExpr) -> IExpr {
+    IExpr::bin(IBinOp::Add, a, b)
+}
+pub fn isub(a: IExpr, b: IExpr) -> IExpr {
+    IExpr::bin(IBinOp::Sub, a, b)
+}
+pub fn imul(a: IExpr, b: IExpr) -> IExpr {
+    IExpr::bin(IBinOp::Mul, a, b)
+}
+pub fn idiv(a: IExpr, b: IExpr) -> IExpr {
+    IExpr::bin(IBinOp::Div, a, b)
+}
+pub fn ishr(a: IExpr, k: i64) -> IExpr {
+    IExpr::bin(IBinOp::Shr, a, c(k))
+}
+pub fn iand(a: IExpr, b: IExpr) -> IExpr {
+    IExpr::bin(IBinOp::And, a, b)
+}
+
+// ---- boolean expressions ---------------------------------------------------
+
+pub fn lt(a: IExpr, b: IExpr) -> BExpr {
+    BExpr::Cmp(CmpOp::Lt, a, b)
+}
+pub fn gt(a: IExpr, b: IExpr) -> BExpr {
+    BExpr::Cmp(CmpOp::Gt, a, b)
+}
+pub fn eq(a: IExpr, b: IExpr) -> BExpr {
+    BExpr::Cmp(CmpOp::Eq, a, b)
+}
+
+// ---- value expressions ------------------------------------------------------
+
+pub fn fc(v: f64) -> VExpr {
+    VExpr::Const(v)
+}
+pub fn fv(name: &str) -> VExpr {
+    VExpr::Var(name.into())
+}
+pub fn from_int(e: IExpr) -> VExpr {
+    VExpr::FromInt(e)
+}
+
+pub fn fadd(a: VExpr, b: VExpr) -> VExpr {
+    VExpr::bin(FBinOp::Add, a, b)
+}
+pub fn fsub(a: VExpr, b: VExpr) -> VExpr {
+    VExpr::bin(FBinOp::Sub, a, b)
+}
+pub fn fmul(a: VExpr, b: VExpr) -> VExpr {
+    VExpr::bin(FBinOp::Mul, a, b)
+}
+pub fn fdiv(a: VExpr, b: VExpr) -> VExpr {
+    VExpr::bin(FBinOp::Div, a, b)
+}
+pub fn fmaxe(a: VExpr, b: VExpr) -> VExpr {
+    VExpr::bin(FBinOp::Max, a, b)
+}
+pub fn fneg(a: VExpr) -> VExpr {
+    fsub(fc(0.0), a)
+}
+
+pub fn exp(a: VExpr) -> VExpr {
+    VExpr::call(MathFn::Exp, a)
+}
+pub fn log(a: VExpr) -> VExpr {
+    VExpr::call(MathFn::Log, a)
+}
+pub fn sqrt(a: VExpr) -> VExpr {
+    VExpr::call(MathFn::Sqrt, a)
+}
+
+pub fn load(buf: &str, idx: IExpr) -> VExpr {
+    VExpr::Load {
+        space: MemSpace::Global,
+        buf: buf.into(),
+        idx,
+        vector_width: 1,
+    }
+}
+pub fn load_sh(buf: &str, idx: IExpr) -> VExpr {
+    VExpr::Load {
+        space: MemSpace::Shared,
+        buf: buf.into(),
+        idx,
+        vector_width: 1,
+    }
+}
+pub fn shfl_down(value: VExpr, offset: IExpr) -> VExpr {
+    VExpr::ShflDown {
+        value: Box::new(value),
+        offset,
+    }
+}
+pub fn select(cond: BExpr, a: VExpr, b: VExpr) -> VExpr {
+    VExpr::Select(cond, Box::new(a), Box::new(b))
+}
+
+// ---- statements -------------------------------------------------------------
+
+pub fn declf(name: &str, init: VExpr) -> Stmt {
+    Stmt::DeclF {
+        name: name.into(),
+        init,
+    }
+}
+pub fn assignf(name: &str, value: VExpr) -> Stmt {
+    Stmt::AssignF {
+        name: name.into(),
+        value,
+    }
+}
+pub fn decli(name: &str, init: IExpr) -> Stmt {
+    Stmt::DeclI {
+        name: name.into(),
+        init,
+    }
+}
+pub fn store(buf: &str, idx: IExpr, value: VExpr) -> Stmt {
+    Stmt::Store {
+        space: MemSpace::Global,
+        buf: buf.into(),
+        idx,
+        value,
+        vector_width: 1,
+    }
+}
+pub fn store_sh(buf: &str, idx: IExpr, value: VExpr) -> Stmt {
+    Stmt::Store {
+        space: MemSpace::Shared,
+        buf: buf.into(),
+        idx,
+        value,
+        vector_width: 1,
+    }
+}
+pub fn sync() -> Stmt {
+    Stmt::SyncThreads
+}
+pub fn comment(s: &str) -> Stmt {
+    Stmt::Comment(s.into())
+}
+
+/// `for (var = init; var < bound; var += step) body`
+pub fn for_up(
+    var: &str,
+    init: IExpr,
+    bound: IExpr,
+    step: IExpr,
+    body: Vec<Stmt>,
+) -> Stmt {
+    Stmt::For(ForLoop {
+        var: var.into(),
+        init,
+        cmp: CmpOp::Lt,
+        bound,
+        update: Update::AddAssign(step),
+        kind: LoopKind::Serial,
+        body,
+    })
+}
+
+/// `for (var = init; var > 0; var >>= 1) body` — reduction-tree loop.
+pub fn for_shr(var: &str, init: IExpr, body: Vec<Stmt>) -> Stmt {
+    Stmt::For(ForLoop {
+        var: var.into(),
+        init,
+        cmp: CmpOp::Gt,
+        bound: c(0),
+        update: Update::ShrAssign(1),
+        kind: LoopKind::Serial,
+        body,
+    })
+}
+
+pub fn if_(cond: BExpr, then: Vec<Stmt>) -> Stmt {
+    Stmt::If {
+        cond,
+        then,
+        els: vec![],
+    }
+}
+pub fn if_else(cond: BExpr, then: Vec<Stmt>, els: Vec<Stmt>) -> Stmt {
+    Stmt::If { cond, then, els }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::stmt::Stmt;
+
+    #[test]
+    fn builders_compose() {
+        let s = for_up(
+            "d",
+            tx(),
+            dim("D"),
+            bdim(),
+            vec![store("out", iv("d"), fmul(load("in", iv("d")), fc(2.0)))],
+        );
+        assert_eq!(s.count(), 2); // for + store
+        match &s {
+            Stmt::For(l) => assert_eq!(l.var, "d"),
+            _ => panic!(),
+        }
+    }
+}

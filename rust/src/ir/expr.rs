@@ -1,0 +1,276 @@
+//! Expressions of the kernel IR.
+//!
+//! The IR is two-sorted: integer *index* expressions ([`IExpr`]) for thread
+//! coordinates, loop variables and buffer indices, and floating *value*
+//! expressions ([`VExpr`]) for the arithmetic the kernel performs.
+//! Booleans ([`BExpr`]) compare index expressions (guards, reduction trees).
+
+
+use super::types::MemSpace;
+
+/// Built-in thread-coordinate variables (1-D launch, like the paper's
+/// kernels; `LaneId`/`WarpId` are derived from `threadIdx.x`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ThreadVar {
+    ThreadIdx,
+    BlockIdx,
+    BlockDim,
+    GridDim,
+    LaneId,
+    WarpId,
+}
+
+/// Integer binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IBinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Min,
+    Max,
+    Shl,
+    Shr,
+    And,
+}
+
+/// Integer (index) expressions.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum IExpr {
+    Const(i64),
+    /// Runtime scalar kernel parameter (a problem dimension such as `D`).
+    Dim(String),
+    /// Loop variable or integer local.
+    Var(String),
+    Thread(ThreadVar),
+    Bin(IBinOp, Box<IExpr>, Box<IExpr>),
+}
+
+/// Comparison operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+/// Boolean expressions over index expressions.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum BExpr {
+    Cmp(CmpOp, IExpr, IExpr),
+    And(Box<BExpr>, Box<BExpr>),
+    Or(Box<BExpr>, Box<BExpr>),
+    Not(Box<BExpr>),
+}
+
+/// Floating binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FBinOp {
+    Add,
+    Sub,
+    Mul,
+    /// IEEE division — the expensive operation fast-math replaces.
+    Div,
+    Min,
+    Max,
+}
+
+/// Math functions, including the CUDA fast-math intrinsics the paper's
+/// case studies exploit (Figure 5). Fast variants are numerically looser
+/// (and far cheaper in the cost model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MathFn {
+    /// libm `expf` — accurate, slow (software sequence).
+    Exp,
+    /// `__expf` — SFU fast exponential.
+    FastExp,
+    /// libm `logf`.
+    Log,
+    /// `__logf`.
+    FastLog,
+    /// libm `sqrtf`.
+    Sqrt,
+    /// `rsqrtf` (reciprocal square root).
+    Rsqrt,
+    /// `__frcp_rn` — fast reciprocal.
+    FastRecip,
+    Abs,
+}
+
+impl MathFn {
+    pub fn cuda_name(self) -> &'static str {
+        match self {
+            MathFn::Exp => "expf",
+            MathFn::FastExp => "__expf",
+            MathFn::Log => "logf",
+            MathFn::FastLog => "__logf",
+            MathFn::Sqrt => "sqrtf",
+            MathFn::Rsqrt => "rsqrtf",
+            MathFn::FastRecip => "__frcp_rn",
+            MathFn::Abs => "fabsf",
+        }
+    }
+
+    /// Whether this is one of the fast-math intrinsics.
+    pub fn is_fast(self) -> bool {
+        matches!(self, MathFn::FastExp | MathFn::FastLog | MathFn::FastRecip)
+    }
+}
+
+/// Floating (value) expressions. Registers are f32; loads from F16 buffers
+/// widen, stores round (handled by the interpreter via the buffer dtype).
+#[derive(Debug, Clone, PartialEq)]
+pub enum VExpr {
+    Const(f64),
+    /// Float register local.
+    Var(String),
+    /// Integer expression converted to float (e.g. `(float)D`).
+    FromInt(IExpr),
+    Bin(FBinOp, Box<VExpr>, Box<VExpr>),
+    Call(MathFn, Box<VExpr>),
+    /// Load one element. `vector_width` > 1 marks the access as part of a
+    /// vectorized (`__half2`/`float4`) transaction: semantics are the plain
+    /// scalar load; the printer and cost model treat `vector_width`
+    /// consecutive lanes as one instruction/transaction.
+    Load {
+        space: MemSpace,
+        buf: String,
+        idx: IExpr,
+        vector_width: u8,
+    },
+    /// `__shfl_down_sync(0xffffffff, value, offset)` — the value the lane
+    /// `laneId + offset` computed for `value`.
+    ShflDown { value: Box<VExpr>, offset: IExpr },
+    /// Ternary select on an index predicate.
+    Select(BExpr, Box<VExpr>, Box<VExpr>),
+}
+
+impl IExpr {
+    pub fn bin(op: IBinOp, a: IExpr, b: IExpr) -> IExpr {
+        IExpr::Bin(op, Box::new(a), Box::new(b))
+    }
+
+    /// Constant-fold trivial identities to keep printed code readable.
+    pub fn simplified(self) -> IExpr {
+        use IBinOp::*;
+        match self {
+            IExpr::Bin(op, a, b) => {
+                let a = a.simplified();
+                let b = b.simplified();
+                match (op, &a, &b) {
+                    (Add, IExpr::Const(0), _) => b,
+                    (Add, _, IExpr::Const(0)) => a,
+                    (Sub, _, IExpr::Const(0)) => a,
+                    (Mul, IExpr::Const(1), _) => b,
+                    (Mul, _, IExpr::Const(1)) => a,
+                    (Mul, IExpr::Const(0), _) | (Mul, _, IExpr::Const(0)) => {
+                        IExpr::Const(0)
+                    }
+                    (_, IExpr::Const(x), IExpr::Const(y)) => {
+                        IExpr::Const(eval_ibin(op, *x, *y))
+                    }
+                    _ => IExpr::Bin(op, Box::new(a), Box::new(b)),
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+/// Evaluate an integer binary op (shared by simplifier and interpreter).
+pub fn eval_ibin(op: IBinOp, a: i64, b: i64) -> i64 {
+    match op {
+        IBinOp::Add => a + b,
+        IBinOp::Sub => a - b,
+        IBinOp::Mul => a * b,
+        IBinOp::Div => {
+            if b == 0 {
+                0
+            } else {
+                a / b
+            }
+        }
+        IBinOp::Mod => {
+            if b == 0 {
+                0
+            } else {
+                a % b
+            }
+        }
+        IBinOp::Min => a.min(b),
+        IBinOp::Max => a.max(b),
+        IBinOp::Shl => a << (b & 63),
+        IBinOp::Shr => a >> (b & 63),
+        IBinOp::And => a & b,
+    }
+}
+
+/// Evaluate a comparison (shared by interpreter and analyses).
+pub fn eval_cmp(op: CmpOp, a: i64, b: i64) -> bool {
+    match op {
+        CmpOp::Lt => a < b,
+        CmpOp::Le => a <= b,
+        CmpOp::Gt => a > b,
+        CmpOp::Ge => a >= b,
+        CmpOp::Eq => a == b,
+        CmpOp::Ne => a != b,
+    }
+}
+
+impl VExpr {
+    pub fn bin(op: FBinOp, a: VExpr, b: VExpr) -> VExpr {
+        VExpr::Bin(op, Box::new(a), Box::new(b))
+    }
+
+    pub fn call(f: MathFn, a: VExpr) -> VExpr {
+        VExpr::Call(f, Box::new(a))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simplify_folds_identities() {
+        let e = IExpr::bin(
+            IBinOp::Add,
+            IExpr::Var("i".into()),
+            IExpr::Const(0),
+        );
+        assert_eq!(e.simplified(), IExpr::Var("i".into()));
+
+        let e = IExpr::bin(IBinOp::Mul, IExpr::Const(4), IExpr::Const(8));
+        assert_eq!(e.simplified(), IExpr::Const(32));
+
+        let e = IExpr::bin(IBinOp::Mul, IExpr::Dim("D".into()), IExpr::Const(0));
+        assert_eq!(e.simplified(), IExpr::Const(0));
+    }
+
+    #[test]
+    fn eval_ibin_ops() {
+        assert_eq!(eval_ibin(IBinOp::Shr, 256, 1), 128);
+        assert_eq!(eval_ibin(IBinOp::And, 0b1101, 31), 13);
+        assert_eq!(eval_ibin(IBinOp::Mod, 7, 3), 1);
+        assert_eq!(eval_ibin(IBinOp::Div, 1, 0), 0, "div-by-zero guarded");
+        assert_eq!(eval_ibin(IBinOp::Min, -2, 5), -2);
+    }
+
+    #[test]
+    fn eval_cmp_ops() {
+        assert!(eval_cmp(CmpOp::Lt, 1, 2));
+        assert!(eval_cmp(CmpOp::Ge, 2, 2));
+        assert!(!eval_cmp(CmpOp::Ne, 3, 3));
+    }
+
+    #[test]
+    fn mathfn_names_and_fastness() {
+        assert_eq!(MathFn::FastExp.cuda_name(), "__expf");
+        assert!(MathFn::FastExp.is_fast());
+        assert!(!MathFn::Exp.is_fast());
+    }
+}

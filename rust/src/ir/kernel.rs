@@ -1,0 +1,155 @@
+//! Kernel container: parameters, launch geometry, shared allocations, body.
+
+use std::collections::BTreeMap;
+
+
+use super::expr::IExpr;
+use super::stmt::Stmt;
+use super::types::DType;
+
+/// Direction of a global buffer parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufIo {
+    In,
+    Out,
+    InOut,
+}
+
+/// A global-memory buffer parameter. Buffers are flat (row-major flattened),
+/// CUDA style; `len` is a symbolic expression over the kernel's dims.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufParam {
+    pub name: String,
+    pub dtype: DType,
+    pub len: IExpr,
+    pub io: BufIo,
+}
+
+/// A block-scoped shared-memory allocation (f32 elements).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SharedAlloc {
+    pub name: String,
+    /// May reference `BlockDim` (e.g. `sm[BLOCK_SIZE]`, `ws[BLOCK_SIZE/32]`).
+    pub len: IExpr,
+}
+
+/// Launch geometry: 1-D grid of 1-D blocks, like the paper's kernels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Launch {
+    /// Number of blocks, symbolic over dims.
+    pub grid: IExpr,
+    /// Threads per block. A transform-tunable constant.
+    pub block: u32,
+}
+
+/// Concrete values for the symbolic dims, e.g. `{S: 512, H: 32, D: 128}`.
+pub type DimEnv = BTreeMap<String, i64>;
+
+/// A complete kernel in the IR.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    /// Integer scalar parameters (problem dimensions), in signature order.
+    pub dims: Vec<String>,
+    pub params: Vec<BufParam>,
+    pub shared: Vec<SharedAlloc>,
+    pub launch: Launch,
+    pub body: Vec<Stmt>,
+}
+
+impl Kernel {
+    pub fn param(&self, name: &str) -> Option<&BufParam> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    pub fn shared_alloc(&self, name: &str) -> Option<&SharedAlloc> {
+        self.shared.iter().find(|s| s.name == name)
+    }
+
+    /// Evaluate a dim-only index expression with concrete dims (no thread
+    /// context, no locals). Panics on thread vars — use only for lens/grids.
+    pub fn eval_static(&self, e: &IExpr, dims: &DimEnv, block: u32) -> i64 {
+        eval_static(e, dims, block)
+    }
+
+    /// Number of blocks for a concrete problem size.
+    pub fn grid_size(&self, dims: &DimEnv) -> i64 {
+        eval_static(&self.launch.grid, dims, self.launch.block)
+    }
+
+    /// Length in elements of a buffer parameter for concrete dims.
+    pub fn buf_len(&self, name: &str, dims: &DimEnv) -> i64 {
+        let p = self
+            .param(name)
+            .unwrap_or_else(|| panic!("no buffer {name} in {}", self.name));
+        eval_static(&p.len, dims, self.launch.block)
+    }
+
+    /// Visit every statement pre-order.
+    pub fn walk<'a>(&'a self, f: &mut impl FnMut(&'a Stmt)) {
+        super::stmt::walk_stmts(&self.body, f);
+    }
+}
+
+/// Evaluate an index expression containing only constants, dims and
+/// `BlockDim`/`GridDim`-independent terms. Used for buffer lengths, grid
+/// sizes and shared-memory extents.
+pub fn eval_static(e: &IExpr, dims: &DimEnv, block: u32) -> i64 {
+    use super::expr::{eval_ibin, IExpr::*, ThreadVar};
+    match e {
+        Const(c) => *c,
+        Dim(d) => *dims
+            .get(d)
+            .unwrap_or_else(|| panic!("dim {d} not bound in DimEnv")),
+        Var(v) => panic!("loop var {v} in static context"),
+        Thread(ThreadVar::BlockDim) => block as i64,
+        Thread(t) => panic!("thread var {t:?} in static context"),
+        Bin(op, a, b) => {
+            eval_ibin(*op, eval_static(a, dims, block), eval_static(b, dims, block))
+        }
+    }
+}
+
+/// Integer ceiling division as an [`IExpr`] — `(n + d - 1) / d`.
+pub fn ceil_div(n: IExpr, d: IExpr) -> IExpr {
+    use super::expr::IBinOp::*;
+    IExpr::bin(
+        Div,
+        IExpr::bin(Add, n, IExpr::bin(Sub, d.clone(), IExpr::Const(1))),
+        d,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::{IBinOp, IExpr};
+
+    fn dims(pairs: &[(&str, i64)]) -> DimEnv {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn eval_static_dims_and_block() {
+        let e = IExpr::bin(
+            IBinOp::Mul,
+            IExpr::Dim("B".into()),
+            IExpr::Dim("D".into()),
+        );
+        assert_eq!(eval_static(&e, &dims(&[("B", 4), ("D", 8)]), 128), 32);
+    }
+
+    #[test]
+    fn ceil_div_expr() {
+        let e = ceil_div(IExpr::Dim("N".into()), IExpr::Const(128));
+        assert_eq!(eval_static(&e, &dims(&[("N", 129)]), 1), 2);
+        assert_eq!(eval_static(&e, &dims(&[("N", 128)]), 1), 1);
+        assert_eq!(eval_static(&e, &dims(&[("N", 1)]), 1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not bound")]
+    fn eval_static_missing_dim_panics() {
+        eval_static(&IExpr::Dim("Z".into()), &DimEnv::new(), 1);
+    }
+}

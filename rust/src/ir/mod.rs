@@ -1,0 +1,24 @@
+//! CUDA-like kernel IR — the substrate the Astra agents read, transform
+//! and re-emit.
+//!
+//! The paper's agents operate on CUDA source text; here the same move
+//! space (loop transformations, memory-access restructuring, intrinsics,
+//! fast math — §5.3) is exposed over a typed IR with:
+//!
+//! * [`expr`]/[`stmt`]/[`kernel`] — the IR itself,
+//! * [`build`] — construction DSL,
+//! * [`printer`] — CUDA-style rendering (Figures 2–5, Table 2 LoC),
+//! * [`analysis`] — dependence + feature extraction for planning/legality.
+
+pub mod analysis;
+pub mod build;
+pub mod expr;
+pub mod kernel;
+pub mod printer;
+pub mod stmt;
+pub mod types;
+
+pub use expr::{BExpr, CmpOp, FBinOp, IBinOp, IExpr, MathFn, ThreadVar, VExpr};
+pub use kernel::{BufIo, BufParam, DimEnv, Kernel, Launch, SharedAlloc};
+pub use stmt::{ForLoop, LoopKind, Stmt, Update};
+pub use types::{DType, MemSpace};

@@ -1,0 +1,151 @@
+//! Statements of the kernel IR.
+
+
+use super::expr::{BExpr, CmpOp, IExpr, VExpr};
+use super::types::MemSpace;
+
+/// How a `for` loop advances its variable each iteration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Update {
+    /// `var += step` (grid-stride and element loops).
+    AddAssign(IExpr),
+    /// `var >>= k` (tree-reduction and shuffle-offset loops).
+    ShrAssign(u32),
+}
+
+/// Loop annotation: affects codegen/printing and the cost model, never the
+/// semantics (a `Vector(w)` loop still executes element-wise in the
+/// interpreter; the simulator counts one memory transaction per `w` lanes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopKind {
+    Serial,
+    /// `#pragma unroll` by the given factor.
+    Unrolled(u8),
+    /// Vectorized body (`__half2` / `float4` style), width in elements.
+    Vector(u8),
+}
+
+/// Canonical counted loop: `for (var = init; var <cmp> bound; update)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForLoop {
+    pub var: String,
+    pub init: IExpr,
+    pub cmp: CmpOp,
+    pub bound: IExpr,
+    pub update: Update,
+    pub kind: LoopKind,
+    pub body: Vec<Stmt>,
+}
+
+/// IR statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// Declare + initialize a float register.
+    DeclF { name: String, init: VExpr },
+    /// Assign to an existing float register.
+    AssignF { name: String, value: VExpr },
+    /// Declare + initialize an integer register.
+    DeclI { name: String, init: IExpr },
+    /// Assign to an existing integer register.
+    AssignI { name: String, value: IExpr },
+    /// Store one element. `vector_width` mirrors [`VExpr::Load`].
+    Store {
+        space: MemSpace,
+        buf: String,
+        idx: IExpr,
+        value: VExpr,
+        vector_width: u8,
+    },
+    For(ForLoop),
+    If {
+        cond: BExpr,
+        then: Vec<Stmt>,
+        els: Vec<Stmt>,
+    },
+    /// `__syncthreads()` — block-wide barrier.
+    SyncThreads,
+    /// Source comment, kept so printed kernels read like the paper's
+    /// figures (and count toward LoC like real code comments do not).
+    Comment(String),
+}
+
+impl Stmt {
+    /// Visit this statement and all nested statements, pre-order.
+    pub fn walk<'a>(&'a self, f: &mut impl FnMut(&'a Stmt)) {
+        f(self);
+        match self {
+            Stmt::For(l) => {
+                for s in &l.body {
+                    s.walk(f);
+                }
+            }
+            Stmt::If { then, els, .. } => {
+                for s in then.iter().chain(els.iter()) {
+                    s.walk(f);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Count statements (self + nested), ignoring comments.
+    pub fn count(&self) -> usize {
+        let mut n = 0;
+        self.walk(&mut |s| {
+            if !matches!(s, Stmt::Comment(_)) {
+                n += 1;
+            }
+        });
+        n
+    }
+}
+
+/// Walk a statement list pre-order.
+pub fn walk_stmts<'a>(stmts: &'a [Stmt], f: &mut impl FnMut(&'a Stmt)) {
+    for s in stmts {
+        s.walk(f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::{CmpOp, IExpr, VExpr};
+
+    fn sample_loop() -> Stmt {
+        Stmt::For(ForLoop {
+            var: "d".into(),
+            init: IExpr::Const(0),
+            cmp: CmpOp::Lt,
+            bound: IExpr::Dim("D".into()),
+            update: Update::AddAssign(IExpr::Const(1)),
+            kind: LoopKind::Serial,
+            body: vec![
+                Stmt::DeclF {
+                    name: "x".into(),
+                    init: VExpr::Const(1.0),
+                },
+                Stmt::Comment("hi".into()),
+            ],
+        })
+    }
+
+    #[test]
+    fn walk_visits_nested() {
+        let mut names = vec![];
+        sample_loop().walk(&mut |s| {
+            names.push(match s {
+                Stmt::For(_) => "for",
+                Stmt::DeclF { .. } => "decl",
+                Stmt::Comment(_) => "comment",
+                _ => "other",
+            })
+        });
+        assert_eq!(names, vec!["for", "decl", "comment"]);
+    }
+
+    #[test]
+    fn count_ignores_comments() {
+        assert_eq!(sample_loop().count(), 2);
+    }
+}

@@ -1,0 +1,179 @@
+//! Scalar types and memory spaces of the CUDA-like kernel IR.
+
+
+/// Element type of a buffer. Registers always hold f32 (CUDA `__half` is
+/// widened to `float` on load and rounded on store, exactly like the
+/// SGLang kernels the paper optimizes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F16,
+    F32,
+}
+
+impl DType {
+    /// Width in bytes of one element in memory.
+    pub fn bytes(self) -> u64 {
+        match self {
+            DType::F16 => 2,
+            DType::F32 => 4,
+        }
+    }
+
+    /// CUDA spelling, used by the pretty printer.
+    pub fn cuda_name(self) -> &'static str {
+        match self {
+            DType::F16 => "__half",
+            DType::F32 => "float",
+        }
+    }
+}
+
+/// Memory space of a load/store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemSpace {
+    /// Device global memory (HBM). Buffers are kernel parameters.
+    Global,
+    /// On-chip shared memory, block-scoped.
+    Shared,
+}
+
+/// Round an f32 to the nearest representable f16 value, returned as f32.
+///
+/// IEEE 754 binary16 round-to-nearest-even, implemented bit-exactly so the
+/// Rust interpreter reproduces the precision the real half kernels have.
+pub fn f32_to_f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// f32 -> f16 bit pattern (round to nearest even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | m;
+    }
+    // Re-bias exponent: f32 bias 127 -> f16 bias 15.
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        // Subnormal or zero.
+        if e < -10 {
+            return sign; // underflow to zero
+        }
+        // Add implicit leading 1 and shift into subnormal position.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let mut v = m >> shift;
+        // round to nearest even
+        if (m & (half + half - 1)) > half || ((m & half) != 0 && (v & 1) != 0)
+        {
+            v += 1;
+        }
+        return sign | v as u16;
+    }
+    let mut v = ((e as u32) << 10) | (mant >> 13);
+    // round to nearest even on the 13 dropped bits
+    let rem = mant & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (v & 1) != 0) {
+        v += 1; // may carry into exponent; that is correct rounding
+    }
+    sign | v as u16
+}
+
+/// f16 bit pattern -> f32 value.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize. After k shifts m's leading 1 sits at
+            // bit 10 and the value is m * 2^(-24-k+10); e tracks the
+            // unbiased exponent offset so the field below lands on
+            // (127 - 15 + e + 1) = 103 + j for mant = 1.x * 2^j.
+            let mut e = 0i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            let m = (m & 0x03ff) << 13;
+            let e = (127 - 15 + e + 1) as u32;
+            sign | (e << 23) | m
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25] {
+            assert_eq!(f32_to_f16_round(v), v, "{v} should be f16-exact");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_inexact() {
+        // 1.0 + 2^-11 is not representable in f16; rounds to nearest even.
+        let x = 1.0f32 + 2.0_f32.powi(-11);
+        let r = f32_to_f16_round(x);
+        assert!(r == 1.0 || r == 1.0 + 2.0_f32.powi(-10));
+        // error bounded by half ULP = 2^-11
+        assert!((r - x).abs() <= 2.0_f32.powi(-11));
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        assert!(f32_to_f16_round(1e6).is_infinite());
+        assert!(f32_to_f16_round(-1e6).is_infinite());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 2.0_f32.powi(-24); // smallest f16 subnormal
+        assert_eq!(f32_to_f16_round(tiny), tiny);
+        assert_eq!(f32_to_f16_round(2.0_f32.powi(-30)), 0.0);
+    }
+
+    #[test]
+    fn f16_nan() {
+        assert!(f32_to_f16_round(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn f16_exhaustive_bits_roundtrip() {
+        // Every finite f16 bit pattern must survive f32 conversion.
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/nan
+            }
+            let f = f16_bits_to_f32(h);
+            assert_eq!(f32_to_f16_bits(f), h, "bits 0x{h:04x}");
+        }
+    }
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::F16.bytes(), 2);
+        assert_eq!(DType::F32.bytes(), 4);
+    }
+}

@@ -1,0 +1,218 @@
+//! Kernel 1 — `merge_attn_states_lse`, baseline IR.
+//!
+//! Mirrors the paper's Figure 2a: the mixing weights (`smax`, `wa`, `wb`,
+//! `inv`) are recomputed *inside* the per-element loop — the hot-loop
+//! redundancy the planning agent is expected to find and hoist.
+
+use std::collections::BTreeMap;
+
+use crate::ir::build::*;
+use crate::ir::{BufIo, BufParam, DType, DimEnv, Kernel, Launch};
+
+use super::{dims_of, randn, reference, seeded, KernelSpec};
+
+/// One block per (sequence, head) pair; threads stride over head_dim.
+pub const BLOCK: u32 = 128;
+
+pub fn build_baseline() -> Kernel {
+    let shd = imul(dim("S"), dim("H")); // number of (seq, head) rows
+    let len_v = imul(shd.clone(), dim("D"));
+    Kernel {
+        name: "merge_attn_states_lse".into(),
+        dims: vec!["S".into(), "H".into(), "D".into()],
+        params: vec![
+            BufParam {
+                name: "v_a".into(),
+                dtype: DType::F32,
+                len: len_v.clone(),
+                io: BufIo::In,
+            },
+            BufParam {
+                name: "s_a".into(),
+                dtype: DType::F32,
+                len: shd.clone(),
+                io: BufIo::In,
+            },
+            BufParam {
+                name: "v_b".into(),
+                dtype: DType::F32,
+                len: len_v.clone(),
+                io: BufIo::In,
+            },
+            BufParam {
+                name: "s_b".into(),
+                dtype: DType::F32,
+                len: shd.clone(),
+                io: BufIo::In,
+            },
+            BufParam {
+                name: "v_out".into(),
+                dtype: DType::F32,
+                len: len_v,
+                io: BufIo::Out,
+            },
+            BufParam {
+                name: "s_out".into(),
+                dtype: DType::F32,
+                len: shd.clone(),
+                io: BufIo::Out,
+            },
+        ],
+        shared: vec![],
+        launch: Launch {
+            grid: shd,
+            block: BLOCK,
+        },
+        body: vec![
+            comment("one block per (seq, head) pair"),
+            decli("idx", bx()),
+            declf("sa", load("s_a", iv("idx"))),
+            declf("sb", load("s_b", iv("idx"))),
+            comment("inner element loop"),
+            for_up(
+                "d",
+                tx(),
+                dim("D"),
+                bdim(),
+                vec![
+                    declf("smax", fmaxe(fv("sa"), fv("sb"))), // repeated
+                    declf("wa", exp(fsub(fv("sa"), fv("smax")))), // repeated
+                    declf("wb", exp(fsub(fv("sb"), fv("smax")))), // repeated
+                    declf(
+                        "inv",
+                        fdiv(
+                            fc(1.0),
+                            fadd(fadd(fv("wa"), fv("wb")), fc(1e-12)),
+                        ),
+                    ),
+                    declf("a", fmul(fv("wa"), fv("inv"))),
+                    declf("b", fmul(fv("wb"), fv("inv"))),
+                    store(
+                        "v_out",
+                        iadd(imul(iv("idx"), dim("D")), iv("d")),
+                        fadd(
+                            fmul(
+                                fv("a"),
+                                load("v_a", iadd(imul(iv("idx"), dim("D")), iv("d"))),
+                            ),
+                            fmul(
+                                fv("b"),
+                                load("v_b", iadd(imul(iv("idx"), dim("D")), iv("d"))),
+                            ),
+                        ),
+                    ),
+                ],
+            ),
+            comment("merged log-sum-exp score"),
+            if_(
+                eq(tx(), c(0)),
+                vec![
+                    declf("m2", fmaxe(fv("sa"), fv("sb"))),
+                    declf("wa2", exp(fsub(fv("sa"), fv("m2")))),
+                    declf("wb2", exp(fsub(fv("sb"), fv("m2")))),
+                    store(
+                        "s_out",
+                        iv("idx"),
+                        fadd(fv("m2"), log(fadd(fv("wa2"), fv("wb2")))),
+                    ),
+                ],
+            ),
+        ],
+    }
+}
+
+fn reference_fn(
+    dims: &DimEnv,
+    inputs: &BTreeMap<String, Vec<f32>>,
+) -> BTreeMap<String, Vec<f32>> {
+    let (s, h, d) = (dims["S"] as usize, dims["H"] as usize, dims["D"] as usize);
+    let (v_out, s_out) = reference::merge_attn_states_lse(
+        s,
+        h,
+        d,
+        &inputs["v_a"],
+        &inputs["s_a"],
+        &inputs["v_b"],
+        &inputs["s_b"],
+    );
+    BTreeMap::from([("v_out".to_string(), v_out), ("s_out".to_string(), s_out)])
+}
+
+fn gen_inputs(dims: &DimEnv, seed: u64) -> Vec<(String, Vec<f32>)> {
+    let (s, h, d) = (dims["S"] as usize, dims["H"] as usize, dims["D"] as usize);
+    let mut rng = seeded(seed);
+    vec![
+        ("v_a".into(), randn(&mut rng, s * h * d, 1.0)),
+        ("s_a".into(), randn(&mut rng, s * h, 3.0)),
+        ("v_b".into(), randn(&mut rng, s * h * d, 1.0)),
+        ("s_b".into(), randn(&mut rng, s * h, 3.0)),
+    ]
+}
+
+fn representative_shapes() -> Vec<DimEnv> {
+    // Table 4, kernel 1: [seq_len, num_heads, head_dim].
+    vec![
+        dims_of(&[("S", 512), ("H", 32), ("D", 256)]),
+        dims_of(&[("S", 512), ("H", 40), ("D", 128)]),
+        dims_of(&[("S", 768), ("H", 32), ("D", 256)]),
+        dims_of(&[("S", 512), ("H", 64), ("D", 128)]),
+    ]
+}
+
+fn test_shapes() -> Vec<DimEnv> {
+    vec![
+        dims_of(&[("S", 8), ("H", 4), ("D", 64)]),
+        dims_of(&[("S", 4), ("H", 2), ("D", 128)]),
+        dims_of(&[("S", 2), ("H", 1), ("D", 32)]),
+    ]
+}
+
+pub fn spec() -> KernelSpec {
+    KernelSpec {
+        paper_name: "merge_attn_states_lse",
+        index: 1,
+        dims: &["S", "H", "D"],
+        build_baseline,
+        reference: reference_fn,
+        gen_inputs,
+        out_bufs: &["v_out", "s_out"],
+        rel_tol: 1e-3,
+        abs_tol: 1e-4,
+        representative_shapes,
+        test_shapes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp;
+    use crate::ir::analysis;
+    use crate::kernels::testutil::{as_map, to_refs};
+
+    #[test]
+    fn baseline_matches_reference() {
+        let spec = spec();
+        for dims in (spec.test_shapes)() {
+            let inputs = (spec.gen_inputs)(&dims, 1);
+            let env =
+                interp::run_with_inputs(&build_baseline(), &dims, &to_refs(&inputs))
+                    .unwrap();
+            let want = (spec.reference)(&dims, &as_map(&inputs));
+            for buf in spec.out_bufs {
+                let (_, rel) = interp::max_errors(env.get(buf), &want[*buf]);
+                assert!(rel < spec.rel_tol, "{buf} rel err {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_has_hoistable_loop_invariants() {
+        let f = analysis::features(&build_baseline());
+        assert!(f.hoistable_stmts >= 3, "{f:?}");
+        assert!(f.slow_math_in_loops >= 2);
+        assert!(f.divisions >= 1);
+        assert!(!f.has_warp_shuffle);
+    }
+
+}

@@ -1,0 +1,151 @@
+//! The three SGLang kernels (Table 1), authored in the IR exactly as the
+//! paper's baseline CUDA (Figures 2a/3a/4a/5a), plus problem-level
+//! metadata: reference oracles, input generators, and the paper's shape
+//! sets (Table 4 / §4 "Performance Measurement").
+
+pub mod merge;
+pub mod reference;
+pub mod rmsnorm;
+pub mod silu;
+
+use std::collections::BTreeMap;
+
+use crate::ir::{DimEnv, Kernel};
+use crate::util::Prng;
+
+/// Compute the oracle outputs for a kernel given its flat input buffers.
+pub type RefFn = fn(&DimEnv, &BTreeMap<String, Vec<f32>>) -> BTreeMap<String, Vec<f32>>;
+
+/// Generate the flat input buffers for a shape (deterministic in seed).
+pub type GenFn = fn(&DimEnv, u64) -> Vec<(String, Vec<f32>)>;
+
+/// Problem-level description of one optimization target.
+#[derive(Clone)]
+pub struct KernelSpec {
+    /// Paper's kernel name (Table 1).
+    pub paper_name: &'static str,
+    /// Paper's index (Kernel 1..3).
+    pub index: usize,
+    /// Symbolic dimension names, in order.
+    pub dims: &'static [&'static str],
+    /// Build the baseline IR kernel.
+    pub build_baseline: fn() -> Kernel,
+    /// Ground-truth implementation (SGLang semantics).
+    pub reference: RefFn,
+    /// Test-input generator.
+    pub gen_inputs: GenFn,
+    /// Output buffers to validate.
+    pub out_bufs: &'static [&'static str],
+    /// Relative tolerance for correctness (covers f16 + fast-math).
+    pub rel_tol: f32,
+    /// Absolute tolerance floor.
+    pub abs_tol: f32,
+    /// The paper's evaluation shapes for this kernel (Table 4).
+    pub representative_shapes: fn() -> Vec<DimEnv>,
+    /// Small shapes the (interpreted) correctness harness can afford.
+    pub test_shapes: fn() -> Vec<DimEnv>,
+}
+
+impl KernelSpec {
+    pub fn shape_label(&self, dims: &DimEnv) -> String {
+        let vals: Vec<String> = self
+            .dims
+            .iter()
+            .map(|d| dims.get(*d).copied().unwrap_or(0).to_string())
+            .collect();
+        format!("[{}]", vals.join(", "))
+    }
+}
+
+/// All three kernels, in paper order.
+pub fn all_specs() -> Vec<KernelSpec> {
+    vec![merge::spec(), rmsnorm::spec(), silu::spec()]
+}
+
+/// Look up a spec by paper name (or prefix).
+pub fn spec_by_name(name: &str) -> Option<KernelSpec> {
+    all_specs()
+        .into_iter()
+        .find(|s| s.paper_name == name || s.paper_name.starts_with(name))
+}
+
+/// Build a DimEnv from (name, value) pairs.
+pub fn dims_of(pairs: &[(&str, i64)]) -> DimEnv {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+/// Standard-normal-ish deterministic buffer.
+pub(crate) fn randn(rng: &mut Prng, n: usize, scale: f32) -> Vec<f32> {
+    rng.normal_vec(n, scale)
+}
+
+pub(crate) fn seeded(seed: u64) -> Prng {
+    Prng::seed(seed)
+}
+
+
+/// Test helpers shared by the per-kernel test modules.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::collections::BTreeMap;
+
+    pub fn to_refs(inputs: &[(String, Vec<f32>)]) -> Vec<(&str, Vec<f32>)> {
+        inputs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect()
+    }
+
+    pub fn as_map(inputs: &[(String, Vec<f32>)]) -> BTreeMap<String, Vec<f32>> {
+        inputs.iter().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_enumerate_in_paper_order() {
+        let specs = all_specs();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].paper_name, "merge_attn_states_lse");
+        assert_eq!(specs[1].paper_name, "fused_add_rmsnorm");
+        assert_eq!(specs[2].paper_name, "silu_and_mul");
+        assert_eq!(
+            specs.iter().map(|s| s.index).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+    }
+
+    #[test]
+    fn lookup_by_prefix() {
+        assert!(spec_by_name("silu_and_mul").is_some());
+        assert!(spec_by_name("fused_add").is_some());
+        assert!(spec_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn each_spec_has_four_representative_shapes() {
+        for s in all_specs() {
+            assert_eq!(
+                (s.representative_shapes)().len(),
+                4,
+                "{} should carry the 4 Table-4 shapes",
+                s.paper_name
+            );
+            assert!(!(s.test_shapes)().is_empty());
+        }
+    }
+
+    #[test]
+    fn shape_labels_match_paper_format() {
+        let s = &all_specs()[0];
+        let d = dims_of(&[("S", 512), ("H", 32), ("D", 256)]);
+        assert_eq!(s.shape_label(&d), "[512, 32, 256]");
+    }
+
+    #[test]
+    fn randn_is_deterministic() {
+        let a = randn(&mut seeded(7), 16, 1.0);
+        let b = randn(&mut seeded(7), 16, 1.0);
+        assert_eq!(a, b);
+    }
+}

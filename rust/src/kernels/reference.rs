@@ -1,0 +1,166 @@
+//! Pure-Rust reference implementations (the SGLang "original framework"
+//! semantics) used as correctness oracles by the testing agent.
+//!
+//! Numerics: compute in f32; buffers declared f16 round their inputs and
+//! outputs to binary16, matching the interpreter's store semantics.
+
+use crate::ir::types::f32_to_f16_round;
+
+/// Epsilon the paper's Figure 2 adds to the merged weight sum.
+pub const MERGE_EPS: f32 = 1e-12;
+/// RMSNorm variance epsilon (SGLang default).
+pub const RMSNORM_EPS: f32 = 1e-6;
+
+/// Kernel 1 — merge_attn_states_lse.
+///
+/// Inputs are flattened `[S, H, D]` (v) and `[S, H]` (s); returns
+/// `(v_out, s_out)`.
+pub fn merge_attn_states_lse(
+    s_len: usize,
+    h: usize,
+    d: usize,
+    v_a: &[f32],
+    s_a: &[f32],
+    v_b: &[f32],
+    s_b: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(v_a.len(), s_len * h * d);
+    assert_eq!(s_a.len(), s_len * h);
+    let mut v_out = vec![0f32; s_len * h * d];
+    let mut s_out = vec![0f32; s_len * h];
+    for i in 0..s_len * h {
+        let sa = s_a[i];
+        let sb = s_b[i];
+        let m = sa.max(sb);
+        let wa = (sa - m).exp();
+        let wb = (sb - m).exp();
+        let inv = 1.0 / (wa + wb + MERGE_EPS);
+        let (a, b) = (wa * inv, wb * inv);
+        for k in 0..d {
+            v_out[i * d + k] = a * v_a[i * d + k] + b * v_b[i * d + k];
+        }
+        s_out[i] = m + (wa + wb).ln();
+    }
+    (v_out, s_out)
+}
+
+/// Kernel 2 — fused_add_rmsnorm over flattened `[B, D]` half buffers.
+///
+/// Returns `(y, r_new)` with f16 rounding applied (both outputs live in
+/// half buffers in SGLang). Inputs are rounded to f16 first, as they are
+/// f16 in memory.
+pub fn fused_add_rmsnorm(
+    b: usize,
+    d: usize,
+    x: &[f32],
+    r: &[f32],
+    w: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(x.len(), b * d);
+    assert_eq!(w.len(), d);
+    let mut y = vec![0f32; b * d];
+    let mut r_new = vec![0f32; b * d];
+    for row in 0..b {
+        let mut ss = 0f32;
+        let base = row * d;
+        for k in 0..d {
+            let h = f32_to_f16_round(x[base + k]) + f32_to_f16_round(r[base + k]);
+            r_new[base + k] = f32_to_f16_round(h);
+            ss += h * h;
+        }
+        let inv = 1.0 / (ss / d as f32 + RMSNORM_EPS).sqrt();
+        for k in 0..d {
+            let h = r_new[base + k];
+            y[base + k] =
+                f32_to_f16_round(h * inv * f32_to_f16_round(w[k]));
+        }
+    }
+    (y, r_new)
+}
+
+/// Kernel 3 — silu_and_mul over flattened `[B, 2*D]` half input.
+///
+/// `xg[row] = [x (D) | g (D)]`; returns SiLU(x) * g rounded to f16.
+pub fn silu_and_mul(b: usize, d: usize, xg: &[f32]) -> Vec<f32> {
+    assert_eq!(xg.len(), b * 2 * d);
+    let mut out = vec![0f32; b * d];
+    for row in 0..b {
+        for k in 0..d {
+            let x = f32_to_f16_round(xg[row * 2 * d + k]);
+            let g = f32_to_f16_round(xg[row * 2 * d + d + k]);
+            let s = x / (1.0 + (-x).exp());
+            out[row * d + k] = f32_to_f16_round(s * g);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_equal_scores_is_mean() {
+        let v_a = vec![2.0; 4];
+        let v_b = vec![4.0; 4];
+        let s = vec![0.5; 2];
+        let (v, so) = merge_attn_states_lse(1, 2, 2, &v_a, &s, &v_b, &s);
+        for x in v {
+            assert!((x - 3.0).abs() < 1e-6);
+        }
+        for x in so {
+            assert!((x - (0.5 + 2f32.ln())).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn merge_dominant_score_wins() {
+        let v_a = vec![1.0; 2];
+        let v_b = vec![9.0; 2];
+        let (v, _) = merge_attn_states_lse(
+            1,
+            1,
+            2,
+            &v_a,
+            &[100.0],
+            &v_b,
+            &[-100.0],
+        );
+        assert!((v[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let d = 64;
+        let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.1).sin()).collect();
+        let r = vec![0.0; d];
+        let w = vec![1.0; d];
+        let (y, rn) = fused_add_rmsnorm(1, d, &x, &r, &w);
+        let rms: f32 =
+            (y.iter().map(|v| v * v).sum::<f32>() / d as f32).sqrt();
+        assert!((rms - 1.0).abs() < 1e-2, "rms = {rms}");
+        for (a, b) in rn.iter().zip(&x) {
+            assert!((a - f32_to_f16_round(*b)).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn silu_zero_gate() {
+        let d = 4;
+        let mut xg = vec![1.0; 2 * d];
+        for k in 0..d {
+            xg[d + k] = 0.0;
+        }
+        let out = silu_and_mul(1, d, &xg);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn silu_matches_closed_form() {
+        let xg = vec![2.0, -1.0, 0.5, 3.0]; // b=1, d=2: x=[2,-1], g=[0.5,3]
+        let out = silu_and_mul(1, 2, &xg);
+        let silu = |z: f32| z / (1.0 + (-z).exp());
+        assert!((out[0] - f32_to_f16_round(silu(2.0) * 0.5)).abs() < 1e-3);
+        assert!((out[1] - f32_to_f16_round(silu(-1.0) * 3.0)).abs() < 1e-3);
+    }
+}

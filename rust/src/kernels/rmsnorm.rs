@@ -1,0 +1,213 @@
+//! Kernel 2 — `fused_add_rmsnorm`, baseline IR.
+//!
+//! Mirrors the paper's Figure 3a: the row reduction is a shared-memory
+//! tree with a `__syncthreads()` per step — the synchronization-heavy
+//! pattern the planning agent is expected to replace with a
+//! `__shfl_down_sync` warp reduction.
+
+use std::collections::BTreeMap;
+
+use crate::ir::build::*;
+use crate::ir::{BufIo, BufParam, DType, DimEnv, Kernel, Launch, SharedAlloc};
+
+use super::{dims_of, randn, reference, seeded, KernelSpec};
+
+/// One block per row; threads stride over the hidden dimension.
+pub const BLOCK: u32 = 256;
+
+pub fn build_baseline() -> Kernel {
+    let len = imul(dim("B"), dim("D"));
+    Kernel {
+        name: "fused_add_rmsnorm".into(),
+        dims: vec!["B".into(), "D".into()],
+        params: vec![
+            BufParam {
+                name: "x".into(),
+                dtype: DType::F16,
+                len: len.clone(),
+                io: BufIo::InOut,
+            },
+            BufParam {
+                name: "res".into(),
+                dtype: DType::F16,
+                len,
+                io: BufIo::InOut,
+            },
+            BufParam {
+                name: "w".into(),
+                dtype: DType::F16,
+                len: dim("D"),
+                io: BufIo::In,
+            },
+        ],
+        shared: vec![SharedAlloc {
+            name: "sm".into(),
+            len: bdim(),
+        }],
+        launch: Launch {
+            grid: dim("B"),
+            block: BLOCK,
+        },
+        body: vec![
+            comment("one block per row; residual add + sum of squares"),
+            decli("row", imul(bx(), dim("D"))),
+            declf("local", fc(0.0)),
+            for_up(
+                "d",
+                tx(),
+                dim("D"),
+                bdim(),
+                vec![
+                    declf(
+                        "h",
+                        fadd(
+                            load("x", iadd(iv("row"), iv("d"))),
+                            load("res", iadd(iv("row"), iv("d"))),
+                        ),
+                    ),
+                    store("res", iadd(iv("row"), iv("d")), fv("h")),
+                    assignf("local", fadd(fv("local"), fmul(fv("h"), fv("h")))),
+                ],
+            ),
+            comment("block-level tree reduction in shared memory"),
+            store_sh("sm", tx(), fv("local")),
+            sync(),
+            for_shr(
+                "off",
+                ishr(bdim(), 1),
+                vec![
+                    if_(
+                        lt(tx(), iv("off")),
+                        vec![store_sh(
+                            "sm",
+                            tx(),
+                            fadd(
+                                load_sh("sm", tx()),
+                                load_sh("sm", iadd(tx(), iv("off"))),
+                            ),
+                        )],
+                    ),
+                    sync(),
+                ],
+            ),
+            comment("normalize with explicit divide"),
+            declf(
+                "inv",
+                fdiv(
+                    fc(1.0),
+                    sqrt(fadd(
+                        fdiv(load_sh("sm", c(0)), from_int(dim("D"))),
+                        fc(1e-6),
+                    )),
+                ),
+            ),
+            for_up(
+                "d",
+                tx(),
+                dim("D"),
+                bdim(),
+                vec![
+                    declf("hh", load("res", iadd(iv("row"), iv("d")))),
+                    store(
+                        "x",
+                        iadd(iv("row"), iv("d")),
+                        fmul(fmul(fv("hh"), fv("inv")), load("w", iv("d"))),
+                    ),
+                ],
+            ),
+        ],
+    }
+}
+
+fn reference_fn(
+    dims: &DimEnv,
+    inputs: &BTreeMap<String, Vec<f32>>,
+) -> BTreeMap<String, Vec<f32>> {
+    let (b, d) = (dims["B"] as usize, dims["D"] as usize);
+    let (y, r_new) =
+        reference::fused_add_rmsnorm(b, d, &inputs["x"], &inputs["res"], &inputs["w"]);
+    // In-place SGLang semantics: y lands in `x`, the sum in `res`.
+    BTreeMap::from([("x".to_string(), y), ("res".to_string(), r_new)])
+}
+
+fn gen_inputs(dims: &DimEnv, seed: u64) -> Vec<(String, Vec<f32>)> {
+    let (b, d) = (dims["B"] as usize, dims["D"] as usize);
+    let mut rng = seeded(seed);
+    let w: Vec<f32> = randn(&mut rng, d, 0.1).iter().map(|v| 1.0 + v).collect();
+    vec![
+        ("x".into(), randn(&mut rng, b * d, 1.0)),
+        ("res".into(), randn(&mut rng, b * d, 1.0)),
+        ("w".into(), w),
+    ]
+}
+
+fn representative_shapes() -> Vec<DimEnv> {
+    // Table 4, kernel 2: [batch_size, hidden_size].
+    vec![
+        dims_of(&[("B", 256), ("D", 4096)]),
+        dims_of(&[("B", 1024), ("D", 4096)]),
+        dims_of(&[("B", 128), ("D", 11008)]),
+        dims_of(&[("B", 512), ("D", 14336)]),
+    ]
+}
+
+fn test_shapes() -> Vec<DimEnv> {
+    vec![
+        dims_of(&[("B", 4), ("D", 512)]),
+        dims_of(&[("B", 2), ("D", 300)]), // non-multiple of block
+        dims_of(&[("B", 8), ("D", 128)]),
+    ]
+}
+
+pub fn spec() -> KernelSpec {
+    KernelSpec {
+        paper_name: "fused_add_rmsnorm",
+        index: 2,
+        dims: &["B", "D"],
+        build_baseline,
+        reference: reference_fn,
+        gen_inputs,
+        out_bufs: &["x", "res"],
+        rel_tol: 8e-3, // f16 I/O + f16 accumulation differences
+        abs_tol: 4e-3,
+        representative_shapes,
+        test_shapes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp;
+    use crate::ir::analysis;
+    use crate::kernels::testutil::{as_map, to_refs};
+
+    #[test]
+    fn baseline_matches_reference() {
+        let spec = spec();
+        for dims in (spec.test_shapes)() {
+            let inputs = (spec.gen_inputs)(&dims, 2);
+            let env =
+                interp::run_with_inputs(&build_baseline(), &dims, &to_refs(&inputs))
+                    .unwrap();
+            let want = (spec.reference)(&dims, &as_map(&inputs));
+            for buf in spec.out_bufs {
+                let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
+                assert!(
+                    rel < spec.rel_tol || abs < spec.abs_tol,
+                    "{buf}: abs {abs} rel {rel} at {:?}",
+                    dims
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_has_tree_reduction_and_divide() {
+        let f = analysis::features(&build_baseline());
+        assert!(f.has_tree_reduction, "{f:?}");
+        assert!(!f.has_warp_shuffle);
+        assert!(f.syncs >= 2);
+        assert!(f.scalar_f16_loads_in_loops >= 2);
+    }
+}

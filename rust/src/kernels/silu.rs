@@ -1,0 +1,157 @@
+//! Kernel 3 — `silu_and_mul`, baseline IR.
+//!
+//! Mirrors the paper's Figures 4a/5a: scalar `__half` loads from global
+//! memory and SiLU computed with libm `expf` plus an IEEE division — the
+//! memory- and math-inefficiencies the planning agent is expected to fix
+//! with `__half2` vectorization and fast-math intrinsics.
+
+use std::collections::BTreeMap;
+
+use crate::ir::build::*;
+use crate::ir::{BufIo, BufParam, DType, DimEnv, Kernel, Launch};
+
+use super::{dims_of, randn, reference, seeded, KernelSpec};
+
+/// One block per row; threads stride over the intermediate dimension.
+pub const BLOCK: u32 = 256;
+
+pub fn build_baseline() -> Kernel {
+    Kernel {
+        name: "silu_and_mul".into(),
+        dims: vec!["B".into(), "D".into()],
+        params: vec![
+            BufParam {
+                name: "xg".into(),
+                dtype: DType::F16,
+                len: imul(dim("B"), imul(c(2), dim("D"))),
+                io: BufIo::In,
+            },
+            BufParam {
+                name: "out".into(),
+                dtype: DType::F16,
+                len: imul(dim("B"), dim("D")),
+                io: BufIo::Out,
+            },
+        ],
+        shared: vec![],
+        launch: Launch {
+            grid: dim("B"),
+            block: BLOCK,
+        },
+        body: vec![
+            comment("one block per row: out = SiLU(x) * g"),
+            decli("row", imul(bx(), imul(c(2), dim("D")))),
+            decli("orow", imul(bx(), dim("D"))),
+            for_up(
+                "d",
+                tx(),
+                dim("D"),
+                bdim(),
+                vec![
+                    comment("scalar half-precision loads"),
+                    declf("xv", load("xg", iadd(iv("row"), iv("d")))),
+                    declf(
+                        "gv",
+                        load("xg", iadd(iadd(iv("row"), dim("D")), iv("d"))),
+                    ),
+                    comment("standard library math + division"),
+                    declf(
+                        "s",
+                        fdiv(
+                            fv("xv"),
+                            fadd(fc(1.0), exp(fneg(fv("xv")))),
+                        ),
+                    ),
+                    store(
+                        "out",
+                        iadd(iv("orow"), iv("d")),
+                        fmul(fv("s"), fv("gv")),
+                    ),
+                ],
+            ),
+        ],
+    }
+}
+
+fn reference_fn(
+    dims: &DimEnv,
+    inputs: &BTreeMap<String, Vec<f32>>,
+) -> BTreeMap<String, Vec<f32>> {
+    let (b, d) = (dims["B"] as usize, dims["D"] as usize);
+    let out = reference::silu_and_mul(b, d, &inputs["xg"]);
+    BTreeMap::from([("out".to_string(), out)])
+}
+
+fn gen_inputs(dims: &DimEnv, seed: u64) -> Vec<(String, Vec<f32>)> {
+    let (b, d) = (dims["B"] as usize, dims["D"] as usize);
+    let mut rng = seeded(seed);
+    vec![("xg".into(), randn(&mut rng, b * 2 * d, 1.5))]
+}
+
+fn representative_shapes() -> Vec<DimEnv> {
+    // Table 4, kernel 3: [batch_size, hidden_size].
+    vec![
+        dims_of(&[("B", 16), ("D", 4096)]),
+        dims_of(&[("B", 32), ("D", 5120)]),
+        dims_of(&[("B", 64), ("D", 8192)]),
+        dims_of(&[("B", 16), ("D", 12288)]),
+    ]
+}
+
+fn test_shapes() -> Vec<DimEnv> {
+    vec![
+        dims_of(&[("B", 4), ("D", 512)]),
+        dims_of(&[("B", 2), ("D", 257)]), // odd tail exercises vector guards
+        dims_of(&[("B", 8), ("D", 128)]),
+    ]
+}
+
+pub fn spec() -> KernelSpec {
+    KernelSpec {
+        paper_name: "silu_and_mul",
+        index: 3,
+        dims: &["B", "D"],
+        build_baseline,
+        reference: reference_fn,
+        gen_inputs,
+        out_bufs: &["out"],
+        rel_tol: 8e-3, // f16 I/O + fast-math sigmoid
+        abs_tol: 4e-3,
+        representative_shapes,
+        test_shapes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp;
+    use crate::ir::analysis;
+    use crate::kernels::testutil::{as_map, to_refs};
+
+    #[test]
+    fn baseline_matches_reference() {
+        let spec = spec();
+        for dims in (spec.test_shapes)() {
+            let inputs = (spec.gen_inputs)(&dims, 3);
+            let env =
+                interp::run_with_inputs(&build_baseline(), &dims, &to_refs(&inputs))
+                    .unwrap();
+            let want = (spec.reference)(&dims, &as_map(&inputs));
+            let (abs, rel) = interp::max_errors(env.get("out"), &want["out"]);
+            assert!(
+                rel < spec.rel_tol || abs < spec.abs_tol,
+                "abs {abs} rel {rel} at {dims:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn baseline_features_show_scalar_loads_and_division() {
+        let f = analysis::features(&build_baseline());
+        assert!(f.scalar_f16_loads_in_loops >= 2, "{f:?}");
+        assert!(f.divisions >= 1);
+        assert!(f.slow_math_in_loops >= 1);
+        assert_eq!(f.max_vector_width, 1);
+    }
+}

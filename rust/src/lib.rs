@@ -1,0 +1,29 @@
+//! Astra — a multi-agent system for GPU kernel performance optimization.
+//!
+//! Full-system reproduction of the paper (Wei et al., 2025) as a
+//! three-layer Rust + JAX + Pallas stack. See DESIGN.md for the
+//! architecture and the substitution table (LLM → policy engines,
+//! H100 → calibrated analytical simulator, CUDA → kernel IR,
+//! SGLang → mini serving pipeline over PJRT-loaded Pallas artifacts).
+//!
+//! Layer map:
+//! * [`ir`], [`interp`], [`sim`], [`transforms`], [`kernels`] — the GPU
+//!   substrate the agents work on,
+//! * [`agents`], [`coordinator`] — the paper's contribution (Algorithm 1),
+//! * [`runtime`], [`pipeline`] — PJRT execution of the AOT Pallas
+//!   artifacts and the serving harness,
+//! * [`report`], [`config`] — experiment regeneration (Tables 2–4,
+//!   Figures 2–5) and configuration.
+
+pub mod agents;
+pub mod config;
+pub mod coordinator;
+pub mod interp;
+pub mod ir;
+pub mod kernels;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod transforms;
+pub mod util;

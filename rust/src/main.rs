@@ -1,0 +1,203 @@
+//! `astra` — CLI for the multi-agent GPU-kernel-optimization system.
+//!
+//! Subcommands (see README):
+//!   optimize   run Algorithm 1 on one or all kernels, print the trace
+//!   bench      regenerate a paper table (2, 3 or 4)
+//!   casestudy  print a Figure 2-5 style before/after for one kernel
+//!   validate   check every AOT artifact compiles on the PJRT client
+//!   serve      run the decode-layer serving pipeline, baseline vs optimized
+//!
+//! Argument parsing is hand-rolled (no clap in the offline vendor set).
+
+use anyhow::{anyhow, Result};
+
+use astra::coordinator::{self, AgentMode, Config};
+use astra::pipeline::DecodePipeline;
+use astra::runtime::{default_artifacts_dir, Engine};
+use astra::{config, kernels, report};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "optimize" => cmd_optimize(rest),
+        "bench" => cmd_bench(rest),
+        "casestudy" => cmd_casestudy(rest),
+        "validate" => cmd_validate(),
+        "serve" => cmd_serve(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other} (try `astra help`)")),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "astra — multi-agent GPU kernel optimization (paper reproduction)\n\n\
+         usage: astra <command> [options]\n\n\
+         commands:\n\
+         \x20 optimize  [--kernel NAME] [--mode multi|single] [--rounds N]\n\
+         \x20           [--seed N] [--temperature T] [--bug-rate P]\n\
+         \x20           [--config FILE] [--trace]\n\
+         \x20 bench     --table 2|3|4\n\
+         \x20 casestudy --kernel NAME | --list\n\
+         \x20 validate\n\
+         \x20 serve     [--steps N] [--warmup N]\n"
+    );
+}
+
+/// Pull `--key value` (or return None).
+fn opt_value(args: &[String], key: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], key: &str) -> bool {
+    args.iter().any(|a| a == key)
+}
+
+fn build_config(args: &[String]) -> Result<Config> {
+    let mut cfg = match opt_value(args, "--config") {
+        Some(path) => config::load_file(&path)?,
+        None => Config::multi_agent(),
+    };
+    let mut model = cfg.model.clone();
+    if let Some(m) = opt_value(args, "--mode") {
+        config::apply(&mut cfg, &mut model, "mode", &m)?;
+    }
+    for (flag, key) in [
+        ("--rounds", "rounds"),
+        ("--seed", "seed"),
+        ("--temperature", "temperature"),
+        ("--bug-rate", "bug_rate"),
+    ] {
+        if let Some(v) = opt_value(args, flag) {
+            config::apply(&mut cfg, &mut model, key, &v)?;
+        }
+    }
+    cfg.model = model;
+    Ok(cfg)
+}
+
+fn cmd_optimize(args: &[String]) -> Result<()> {
+    let cfg = build_config(args)?;
+    let outcomes = match opt_value(args, "--kernel") {
+        Some(name) => {
+            let spec = kernels::spec_by_name(&name)
+                .ok_or_else(|| anyhow!("unknown kernel {name}"))?;
+            vec![coordinator::optimize(&spec, &cfg)]
+        }
+        None => coordinator::optimize_all_parallel(&cfg),
+    };
+    for o in &outcomes {
+        if has_flag(args, "--trace") {
+            println!("{}", report::trace(o));
+        } else {
+            println!(
+                "{:<24} [{}] {:.2}x on representative shapes (correct: {})",
+                o.kernel_name, o.mode, o.final_speedup, o.final_correct
+            );
+        }
+    }
+    if outcomes.len() > 1 {
+        println!();
+        println!("{}", report::table2(&outcomes));
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let table = opt_value(args, "--table")
+        .ok_or_else(|| anyhow!("bench requires --table 2|3|4"))?;
+    let mut ma_cfg = build_config(args)?;
+    ma_cfg.mode = AgentMode::Multi;
+    match table.as_str() {
+        "1" => println!("{}", report::table1()),
+        "2" => {
+            let outs = coordinator::optimize_all_parallel(&ma_cfg);
+            println!("{}", report::table2(&outs));
+        }
+        "3" => {
+            let mut sa_cfg = Config::single_agent();
+            sa_cfg.rounds = ma_cfg.rounds;
+            sa_cfg.seed = ma_cfg.seed;
+            sa_cfg.bug_rate = ma_cfg.bug_rate;
+            let sa = coordinator::optimize_all_parallel(&sa_cfg);
+            let ma = coordinator::optimize_all_parallel(&ma_cfg);
+            println!("{}", report::table3(&sa, &ma));
+        }
+        "4" => {
+            let outs = coordinator::optimize_all_parallel(&ma_cfg);
+            println!("{}", report::table4(&outs));
+        }
+        other => return Err(anyhow!("unknown table {other}")),
+    }
+    Ok(())
+}
+
+fn cmd_casestudy(args: &[String]) -> Result<()> {
+    if has_flag(args, "--list") {
+        println!("{}", report::table1());
+        return Ok(());
+    }
+    let name = opt_value(args, "--kernel")
+        .ok_or_else(|| anyhow!("casestudy requires --kernel NAME or --list"))?;
+    let spec = kernels::spec_by_name(&name)
+        .ok_or_else(|| anyhow!("unknown kernel {name}"))?;
+    println!("{}", report::case_study(&spec));
+    Ok(())
+}
+
+fn cmd_validate() -> Result<()> {
+    let dir = default_artifacts_dir()?;
+    let mut eng = Engine::from_dir(&dir)?;
+    println!("platform: {}", eng.platform());
+    let names: Vec<String> = eng
+        .registry()
+        .names()
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    for name in names {
+        eng.prepare(&name)?;
+        println!("compiled {name}: OK");
+    }
+    println!("all {} artifacts compile", eng.registry().artifacts.len());
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let steps: usize = opt_value(args, "--steps")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(50);
+    let warmup: usize = opt_value(args, "--warmup")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(5);
+    let dir = default_artifacts_dir()?;
+    for variant in ["baseline", "optimized"] {
+        let eng = Engine::from_dir(&dir)?;
+        let mut pipe = DecodePipeline::new(eng, variant, 7)?;
+        let stats = pipe.serve(steps, warmup, 3)?;
+        println!(
+            "{variant:<10} batch={} steps={} mean={:.0}us p50={:.0}us p95={:.0}us throughput={:.0} tok/s",
+            stats.batch, stats.steps, stats.mean_us, stats.p50_us, stats.p95_us, stats.tokens_per_s
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Mini serving pipeline — the SGLang reintegration stand-in (§3.2
+//! post-processing, DESIGN.md §6).
+//!
+//! A batched transformer decode-layer step (fused_add_rmsnorm →
+//! merge_attn_states_lse → o-proj → gate/up matmul → silu_and_mul →
+//! down-proj) runs as ONE AOT-compiled XLA computation per kernel-variant,
+//! executed from Rust over PJRT. Swapping `baseline` for `optimized`
+//! artifacts is exactly the drop-in-replacement claim the paper validates:
+//! same weights, same requests, same outputs (within tolerance), different
+//! kernel internals.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Engine;
+use crate::util::Prng;
+
+/// Shapes of the AOT decode-layer artifact (must match
+/// `python/compile/aot.py::SERVE_CFG`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub batch: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub inter: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batch: 32,
+            heads: 8,
+            head_dim: 64,
+            inter: 1024,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn hidden(&self) -> usize {
+        self.heads * self.head_dim
+    }
+}
+
+/// Latency/throughput statistics from a serving run.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub steps: usize,
+    pub batch: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    /// Decode tokens per second (batch × steps / wall time).
+    pub tokens_per_s: f64,
+}
+
+/// Batched decode state: hidden activations + residual + the two partial
+/// attention states a split-KV decode step produces.
+pub struct BatchState {
+    pub x: Vec<f32>,
+    pub r: Vec<f32>,
+    pub v_a: Vec<f32>,
+    pub s_a: Vec<f32>,
+    pub v_b: Vec<f32>,
+    pub s_b: Vec<f32>,
+}
+
+/// The pipeline: weights + engine + chosen kernel variant.
+pub struct DecodePipeline {
+    engine: Engine,
+    cfg: ServeConfig,
+    variant: String,
+    artifact: String,
+    weights: [Vec<f32>; 4], // w_norm, w_o, w_gateup, w_down
+}
+
+impl DecodePipeline {
+    /// Build over an engine; `variant` is `"baseline"` or `"optimized"`.
+    pub fn new(engine: Engine, variant: &str, seed: u64) -> Result<DecodePipeline> {
+        let cfg = ServeConfig::default();
+        let artifact = engine
+            .registry()
+            .find("decode_layer", variant, "serve")
+            .ok_or_else(|| anyhow!("no decode_layer artifact for {variant}"))?
+            .name
+            .clone();
+        let h = cfg.hidden();
+        let mut rng = Prng::seed(seed);
+        let scale_h = 1.0 / (h as f32).sqrt();
+        let scale_i = 1.0 / (cfg.inter as f32).sqrt();
+        let weights = [
+            rng.normal_vec(h, 0.1).iter().map(|v| 1.0 + v).collect(),
+            rng.normal_vec(h * h, scale_h),
+            rng.normal_vec(h * 2 * cfg.inter, scale_h),
+            rng.normal_vec(cfg.inter * h, scale_i),
+        ];
+        Ok(DecodePipeline {
+            engine,
+            cfg,
+            variant: variant.to_string(),
+            artifact,
+            weights,
+        })
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Fresh synthetic batch state.
+    pub fn new_state(&self, seed: u64) -> BatchState {
+        let cfg = &self.cfg;
+        let h = cfg.hidden();
+        let hv = cfg.batch * cfg.heads * cfg.head_dim;
+        let hs = cfg.batch * cfg.heads;
+        let mut rng = Prng::seed(seed);
+        BatchState {
+            x: rng.normal_vec(cfg.batch * h, 1.0),
+            r: rng.normal_vec(cfg.batch * h, 1.0),
+            v_a: rng.normal_vec(hv, 1.0),
+            s_a: rng.normal_vec(hs, 2.0),
+            v_b: rng.normal_vec(hv, 1.0),
+            s_b: rng.normal_vec(hs, 2.0),
+        }
+    }
+
+    /// Warm up: compile the artifact before timed serving.
+    pub fn prepare(&mut self) -> Result<()> {
+        self.engine.prepare(&self.artifact)
+    }
+
+    /// One decode-layer step: returns (s_out, latency µs) and feeds the
+    /// layer output back into the state (x ← out, r ← r_new).
+    pub fn step(&mut self, state: &mut BatchState) -> Result<(Vec<f32>, f64)> {
+        let inputs = vec![
+            state.x.clone(),
+            state.r.clone(),
+            state.v_a.clone(),
+            state.s_a.clone(),
+            state.v_b.clone(),
+            state.s_b.clone(),
+            self.weights[0].clone(),
+            self.weights[1].clone(),
+            self.weights[2].clone(),
+            self.weights[3].clone(),
+        ];
+        let (mut out, us) = self.engine.execute_timed(&self.artifact, &inputs)?;
+        if out.len() != 3 {
+            return Err(anyhow!("decode layer returns 3 outputs, got {}", out.len()));
+        }
+        let s_out = out.pop().unwrap();
+        let r_new = out.pop().unwrap();
+        let y = out.pop().unwrap();
+        state.x = y;
+        state.r = r_new;
+        Ok((s_out, us))
+    }
+
+    /// Serve `steps` batched decode iterations; returns latency stats.
+    pub fn serve(&mut self, steps: usize, warmup: usize, seed: u64) -> Result<ServeStats> {
+        self.prepare()?;
+        let mut state = self.new_state(seed);
+        for _ in 0..warmup {
+            self.step(&mut state)?;
+        }
+        let mut lat = Vec::with_capacity(steps);
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let (_, us) = self.step(&mut state)?;
+            lat.push(us);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        lat.sort_by(|a, b| a.total_cmp(b));
+        Ok(ServeStats {
+            steps,
+            batch: self.cfg.batch,
+            mean_us: lat.iter().sum::<f64>() / steps as f64,
+            p50_us: lat[steps / 2],
+            p95_us: lat[((steps as f64 * 0.95) as usize).min(steps - 1)],
+            tokens_per_s: (self.cfg.batch * steps) as f64 / wall,
+        })
+    }
+}

@@ -1,0 +1,345 @@
+//! Experiment reporting: renders the paper's tables (1–4) and the
+//! case-study figures (2–5) from live system output, in the same row
+//! format the paper uses, with the paper's published numbers alongside
+//! for comparison.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::Outcome;
+use crate::ir::printer;
+use crate::kernels::{self, KernelSpec};
+use crate::transforms;
+use crate::util::timing::geomean;
+
+/// Paper-published numbers, for side-by-side rendering.
+pub mod paper {
+    /// Table 2: (kernel, loc_base, loc_opt, time_base_us, time_opt_us, speedup).
+    pub const TABLE2: [(&str, usize, usize, f64, f64, f64); 3] = [
+        ("merge_attn_states_lse", 124, 232, 31.4, 24.9, 1.26),
+        ("fused_add_rmsnorm", 108, 163, 41.3, 33.1, 1.25),
+        ("silu_and_mul", 99, 157, 20.1, 13.8, 1.46),
+    ];
+
+    /// Table 3: (kernel, time_base, speedup_sa, speedup_ma).
+    pub const TABLE3: [(&str, f64, f64, f64); 3] = [
+        ("merge_attn_states_lse", 31.4, 0.73, 1.26),
+        ("fused_add_rmsnorm", 41.3, 1.18, 1.25),
+        ("silu_and_mul", 20.1, 1.48, 1.46),
+    ];
+
+    /// Table 4: (kernel index, shape label, base us, opt us, speedup).
+    pub const TABLE4: [(usize, &str, f64, f64, f64); 12] = [
+        (1, "[512, 32, 256]", 32.9, 22.6, 1.46),
+        (1, "[512, 40, 128]", 32.4, 20.6, 1.57),
+        (1, "[768, 32, 256]", 32.5, 32.5, 1.00),
+        (1, "[512, 64, 128]", 32.0, 28.2, 1.14),
+        (2, "[256, 4096]", 24.3, 18.3, 1.33),
+        (2, "[1024, 4096]", 34.0, 28.3, 1.20),
+        (2, "[128, 11008]", 25.0, 19.4, 1.28),
+        (2, "[512, 14336]", 46.1, 43.0, 1.07),
+        (3, "[16, 4096]", 20.9, 14.2, 1.47),
+        (3, "[32, 5120]", 20.3, 13.7, 1.49),
+        (3, "[64, 8192]", 20.3, 13.5, 1.50),
+        (3, "[16, 12288]", 20.4, 13.6, 1.50),
+    ];
+}
+
+/// Table 1: kernel inventory.
+pub fn table1() -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Table 1 — kernels and computations");
+    let _ = writeln!(s, "{:-<72}", "");
+    for spec in kernels::all_specs() {
+        let _ = writeln!(
+            s,
+            "Kernel {}  {:<24}  dims {:?}",
+            spec.index, spec.paper_name, spec.dims
+        );
+    }
+    s
+}
+
+/// Table 2: baseline vs optimized (LoC, µs, speedup, correctness).
+pub fn table2(outcomes: &[Outcome]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Table 2 — baseline vs. optimized kernels (ours | paper)"
+    );
+    let _ = writeln!(s, "{:-<100}", "");
+    let _ = writeln!(
+        s,
+        "{:<24} {:>8} {:>8} {:>6} {:>10} {:>10} {:>9} {:>8}   paper: t_base t_opt speedup",
+        "Kernel", "LoC-Base", "LoC-Opt", "dLoC%", "Time-Base", "Time-Opt", "Speedup", "Correct"
+    );
+    let mut speedups = Vec::new();
+    for o in outcomes {
+        let p = paper::TABLE2
+            .iter()
+            .find(|(n, ..)| *n == o.kernel_name)
+            .unwrap();
+        let dloc = 100.0 * (o.best_loc as f64 - o.baseline_loc as f64)
+            / o.baseline_loc as f64;
+        let _ = writeln!(
+            s,
+            "{:<24} {:>8} {:>8} {:>5.0}% {:>9.1}u {:>9.1}u {:>8.2}x {:>8}   {:>11.1} {:>5.1} {:>6.2}x",
+            o.kernel_name,
+            o.baseline_loc,
+            o.best_loc,
+            dloc,
+            o.base_mean_us,
+            o.opt_mean_us,
+            o.final_speedup,
+            if o.final_correct { "yes" } else { "NO" },
+            p.3,
+            p.4,
+            p.5,
+        );
+        speedups.push(o.final_speedup);
+    }
+    let _ = writeln!(
+        s,
+        "{:<24} {:>59.2}x (paper avg 1.32x)",
+        "Average (geomean)",
+        geomean(&speedups)
+    );
+    s
+}
+
+/// Table 3: single-agent vs multi-agent.
+pub fn table3(sa: &[Outcome], ma: &[Outcome]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Table 3 — single-agent (SA) vs. multi-agent (MA)");
+    let _ = writeln!(s, "{:-<96}", "");
+    let _ = writeln!(
+        s,
+        "{:<24} {:>10} {:>11} {:>11} {:>11} {:>11}   paper: SA MA",
+        "Kernel", "Time-Base", "Correct-SA", "Speedup-SA", "Correct-MA", "Speedup-MA"
+    );
+    let mut sas = Vec::new();
+    let mut mas = Vec::new();
+    for (a, m) in sa.iter().zip(ma) {
+        assert_eq!(a.kernel_name, m.kernel_name);
+        let p = paper::TABLE3
+            .iter()
+            .find(|(n, ..)| *n == a.kernel_name)
+            .unwrap();
+        let _ = writeln!(
+            s,
+            "{:<24} {:>9.1}u {:>11} {:>10.2}x {:>11} {:>10.2}x   {:>9.2} {:>4.2}",
+            a.kernel_name,
+            a.base_mean_us,
+            if a.final_correct { "yes" } else { "NO" },
+            a.final_speedup,
+            if m.final_correct { "yes" } else { "NO" },
+            m.final_speedup,
+            p.2,
+            p.3,
+        );
+        sas.push(a.final_speedup);
+        mas.push(m.final_speedup);
+    }
+    let _ = writeln!(
+        s,
+        "{:<24} {:>22.2}x {:>23.2}x   (paper avg: 1.08 / 1.32)",
+        "Average (geomean)",
+        geomean(&sas),
+        geomean(&mas)
+    );
+    s
+}
+
+/// Table 4: per-shape speedups.
+pub fn table4(outcomes: &[Outcome]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "Table 4 — impact of tensor shapes (ours | paper)");
+    let _ = writeln!(s, "{:-<92}", "");
+    let _ = writeln!(
+        s,
+        "{:<10} {:<18} {:>10} {:>10} {:>8}   paper: t_base t_opt speedup",
+        "Kernel", "Shape", "Time-Base", "Time-Opt", "Speedup"
+    );
+    for o in outcomes {
+        let spec = kernels::spec_by_name(&o.kernel_name).unwrap();
+        for (label, b, t, sp) in &o.per_shape {
+            let p = paper::TABLE4
+                .iter()
+                .find(|(i, l, ..)| *i == spec.index && l == label);
+            match p {
+                Some((_, _, pb, pt, ps)) => {
+                    let _ = writeln!(
+                        s,
+                        "Kernel {}   {:<18} {:>9.1}u {:>9.1}u {:>7.2}x   {:>12.1} {:>5.1} {:>6.2}x",
+                        spec.index, label, b, t, sp, pb, pt, ps
+                    );
+                }
+                None => {
+                    let _ = writeln!(
+                        s,
+                        "Kernel {}   {:<18} {:>9.1}u {:>9.1}u {:>7.2}x",
+                        spec.index, label, b, t, sp
+                    );
+                }
+            }
+        }
+    }
+    s
+}
+
+/// Figures 2–5: the case study for one kernel — baseline and optimized
+/// CUDA-style sources side by side plus the feature delta.
+pub fn case_study(spec: &KernelSpec) -> String {
+    let base = (spec.build_baseline)();
+    let opt = transforms::optimized_reference(&base);
+    let fb = crate::ir::analysis::features(&base);
+    let fo = crate::ir::analysis::features(&opt);
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Case study — Kernel {} ({})",
+        spec.index, spec.paper_name
+    );
+    let _ = writeln!(s, "{:=<72}", "");
+    let _ = writeln!(s, "--- baseline ({} LoC) ---", printer::loc(&base));
+    s.push_str(&printer::print_kernel(&base));
+    let _ = writeln!(s, "\n--- optimized ({} LoC) ---", printer::loc(&opt));
+    s.push_str(&printer::print_kernel(&opt));
+    let _ = writeln!(s, "\n--- applied strategies (paper §5.3) ---");
+    if fb.hoistable_stmts > 0 {
+        let _ = writeln!(
+            s,
+            "* hoisted {} loop-invariant statements (Figure 2)",
+            fb.hoistable_stmts
+        );
+    }
+    if fb.has_tree_reduction && fo.has_warp_shuffle {
+        let _ = writeln!(
+            s,
+            "* tree reduction -> __shfl_down_sync warp reduction (Figure 3)"
+        );
+    }
+    if fo.max_vector_width > 1 {
+        let _ = writeln!(
+            s,
+            "* scalar -> x{} vectorized global accesses (Figure 4)",
+            fo.max_vector_width
+        );
+    }
+    if fb.slow_math_calls > 0 && fo.fast_math_calls > 0 {
+        let _ = writeln!(
+            s,
+            "* {} libm calls / {} divides -> fast-math intrinsics (Figure 5)",
+            fb.slow_math_calls, fb.divisions
+        );
+    }
+    s
+}
+
+/// Figure 1 / Algorithm 1 trace: the round-by-round optimization log.
+pub fn trace(outcome: &Outcome) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Optimization trace — {} ({}, {} rounds)",
+        outcome.kernel_name,
+        outcome.mode,
+        outcome.records.len()
+    );
+    let _ = writeln!(s, "{:-<90}", "");
+    let _ = writeln!(
+        s,
+        "round 0: baseline  loc={:<4} (internal 1.00x)",
+        outcome.baseline_loc
+    );
+    for r in &outcome.records {
+        let mv = r
+            .applied
+            .map(|m| m.name())
+            .unwrap_or_else(|| "-".to_string());
+        let _ = writeln!(
+            s,
+            "round {}: {:<28} pass={:<5} internal={:.2}x loc={:<4} {} — {}",
+            r.round,
+            mv,
+            r.pass,
+            r.speedup_internal,
+            r.loc,
+            if r.accepted { "ACCEPT" } else { "reject" },
+            r.note
+        );
+        if !r.rationale.is_empty() {
+            let _ = writeln!(s, "         rationale: {}", r.rationale);
+        }
+    }
+    let _ = writeln!(
+        s,
+        "final: {:.2}x on representative shapes, correct={}",
+        outcome.final_speedup, outcome.final_correct
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{optimize, Config};
+
+    fn quick_outcomes() -> Vec<Outcome> {
+        let cfg = Config {
+            bug_rate: 0.0,
+            temperature: 0.0,
+            ..Config::multi_agent()
+        };
+        kernels::all_specs()
+            .iter()
+            .map(|s| optimize(s, &cfg))
+            .collect()
+    }
+
+    #[test]
+    fn table1_lists_all_kernels() {
+        let t = table1();
+        assert!(t.contains("merge_attn_states_lse"));
+        assert!(t.contains("Kernel 3"));
+    }
+
+    #[test]
+    fn table2_renders_rows_and_average() {
+        let outs = quick_outcomes();
+        let t = table2(&outs);
+        assert!(t.contains("silu_and_mul"));
+        assert!(t.contains("Average"));
+        assert!(t.contains("paper avg 1.32x"));
+        for o in &outs {
+            assert!(t.contains(&o.kernel_name));
+        }
+    }
+
+    #[test]
+    fn table4_pairs_paper_shapes() {
+        let outs = quick_outcomes();
+        let t = table4(&outs);
+        assert!(t.contains("[512, 32, 256]"));
+        assert!(t.contains("[16, 12288]"));
+        // every our-row for a paper shape carries the paper columns
+        assert!(t.matches("1.46x").count() + t.matches("1.46").count() >= 1);
+    }
+
+    #[test]
+    fn case_study_shows_both_sources() {
+        let spec = kernels::silu::spec();
+        let cs = case_study(&spec);
+        assert!(cs.contains("--- baseline"));
+        assert!(cs.contains("--- optimized"));
+        assert!(cs.contains("__expf") || cs.contains("vectorized"));
+    }
+
+    #[test]
+    fn trace_is_round_by_round() {
+        let outs = quick_outcomes();
+        let tr = trace(&outs[0]);
+        assert!(tr.contains("round 0: baseline"));
+        assert!(tr.contains("round 1:"));
+        assert!(tr.contains("final:"));
+    }
+}

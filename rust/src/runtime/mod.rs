@@ -1,0 +1,147 @@
+//! PJRT runtime: load the AOT-lowered HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from Rust.
+//!
+//! This is the request path of the three-layer architecture: Python runs
+//! once at build time; everything here is the `xla` crate
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`). Interchange is HLO *text*, never a
+//! serialized proto — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns them.
+
+mod registry;
+
+pub use registry::{Artifact, Registry, TensorMeta};
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Compiled-executable cache over the artifact registry.
+pub struct Engine {
+    client: xla::PjRtClient,
+    registry: Registry,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over a registry.
+    pub fn new(registry: Registry) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            registry,
+            executables: HashMap::new(),
+        })
+    }
+
+    /// Open the default registry (`artifacts/` next to the workspace).
+    pub fn from_dir(dir: &str) -> Result<Engine> {
+        Engine::new(Registry::load(dir)?)
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact (cached).
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let art = self
+            .registry
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
+        let path = format!("{}/{}", self.registry.dir, art.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on flat f32 buffers; returns flat f32 outputs.
+    ///
+    /// Inputs must match the artifact's declared shapes (element counts
+    /// are checked; data is row-major).
+    pub fn execute(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.prepare(name)?;
+        let art = self.registry.get(name).unwrap().clone();
+        if inputs.len() != art.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                art.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, meta) in inputs.iter().zip(&art.inputs) {
+            if data.len() != meta.elements() {
+                return Err(anyhow!(
+                    "{name}: input {:?} expects {} elements, got {}",
+                    meta.shape,
+                    meta.elements(),
+                    data.len()
+                ));
+            }
+            let dims: Vec<i64> = meta.shape.iter().map(|d| *d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            let v = p
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output {i} to_vec: {e:?}"))?;
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Execute and time an artifact: returns (outputs, wall microseconds).
+    pub fn execute_timed(
+        &mut self,
+        name: &str,
+        inputs: &[Vec<f32>],
+    ) -> Result<(Vec<Vec<f32>>, f64)> {
+        self.prepare(name)?;
+        let t0 = std::time::Instant::now();
+        let out = self.execute(name, inputs)?;
+        Ok((out, t0.elapsed().as_secs_f64() * 1e6))
+    }
+}
+
+/// Locate the artifacts directory from the current or ancestor dirs.
+pub fn default_artifacts_dir() -> Result<String> {
+    for base in ["artifacts", "../artifacts", "../../artifacts"] {
+        if std::path::Path::new(base).join("manifest.txt").exists() {
+            return Ok(base.to_string());
+        }
+    }
+    Err(anyhow!(
+        "artifacts/manifest.txt not found — run `make artifacts` first"
+    ))
+    .context("locating AOT artifacts")
+}

@@ -1,0 +1,168 @@
+//! Artifact registry: parses `artifacts/manifest.txt` (emitted by
+//! `python/compile/aot.py` alongside the HLO text files).
+//!
+//! Format, one artifact per line:
+//!
+//! ```text
+//! name|file|kernel|variant|role|in=8x4x64:float32,8x4:float32|out=...
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+
+/// Shape + dtype of one tensor in an artifact's signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(s: &str) -> Result<TensorMeta> {
+        let (dims, dtype) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("tensor meta missing ':': {s}"))?;
+        let shape = dims
+            .split('x')
+            .map(|d| d.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorMeta {
+            shape,
+            dtype: dtype.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    /// Paper kernel name (or `decode_layer`).
+    pub kernel: String,
+    /// `baseline` | `optimized`.
+    pub variant: String,
+    /// `oracle` (small validation shape) | `serve` (pipeline shape).
+    pub role: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// All artifacts in a directory.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub dir: String,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Registry {
+    pub fn load(dir: &str) -> Result<Registry> {
+        let path = format!("{dir}/manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path}"))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            artifacts.push(
+                parse_line(line)
+                    .with_context(|| format!("{path}:{}", lineno + 1))?,
+            );
+        }
+        if artifacts.is_empty() {
+            return Err(anyhow!("{path} lists no artifacts"));
+        }
+        Ok(Registry {
+            dir: dir.to_string(),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find by (kernel, variant, role).
+    pub fn find(&self, kernel: &str, variant: &str, role: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| {
+            a.kernel == kernel && a.variant == variant && a.role == role
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+fn parse_line(line: &str) -> Result<Artifact> {
+    let parts: Vec<&str> = line.split('|').collect();
+    if parts.len() != 7 {
+        return Err(anyhow!("expected 7 fields, got {}", parts.len()));
+    }
+    let tensors = |field: &str, prefix: &str| -> Result<Vec<TensorMeta>> {
+        let body = field
+            .strip_prefix(prefix)
+            .ok_or_else(|| anyhow!("field should start with {prefix}"))?;
+        body.split(',').map(TensorMeta::parse).collect()
+    };
+    Ok(Artifact {
+        name: parts[0].to_string(),
+        file: parts[1].to_string(),
+        kernel: parts[2].to_string(),
+        variant: parts[3].to_string(),
+        role: parts[4].to_string(),
+        inputs: tensors(parts[5], "in=")?,
+        outputs: tensors(parts[6], "out=")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LINE: &str = "silu_opt_oracle|silu_opt_oracle.hlo.txt|silu_and_mul|optimized|oracle|in=8x512:float32|out=8x256:float32";
+
+    #[test]
+    fn parses_a_manifest_line() {
+        let a = parse_line(LINE).unwrap();
+        assert_eq!(a.name, "silu_opt_oracle");
+        assert_eq!(a.kernel, "silu_and_mul");
+        assert_eq!(a.variant, "optimized");
+        assert_eq!(a.inputs[0].shape, vec![8, 512]);
+        assert_eq!(a.inputs[0].elements(), 4096);
+        assert_eq!(a.outputs[0].shape, vec![8, 256]);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_line("too|few|fields").is_err());
+        assert!(parse_line(&LINE.replace("in=", "wrong=")).is_err());
+        assert!(parse_line(&LINE.replace("8x512", "8xbogus")).is_err());
+    }
+
+    #[test]
+    fn tensor_meta_parse() {
+        let t = TensorMeta::parse("32x8x64:float32").unwrap();
+        assert_eq!(t.shape, vec![32, 8, 64]);
+        assert_eq!(t.dtype, "float32");
+        assert_eq!(t.elements(), 32 * 8 * 64);
+    }
+
+    #[test]
+    fn loads_repo_manifest_when_present() {
+        // Runs against the real artifacts when they exist (CI: after
+        // `make artifacts`); silently skips otherwise.
+        if let Ok(dir) = crate::runtime::default_artifacts_dir() {
+            let reg = Registry::load(&dir).unwrap();
+            assert_eq!(reg.artifacts.len(), 14);
+            assert!(reg.find("silu_and_mul", "optimized", "oracle").is_some());
+            assert!(reg.find("decode_layer", "baseline", "serve").is_some());
+            assert!(reg.get("nope").is_none());
+        }
+    }
+}

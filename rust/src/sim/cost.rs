@@ -1,0 +1,674 @@
+//! Analytical cost walker: lowers a kernel + concrete dims to event counts
+//! and a time estimate.
+//!
+//! Time model (per launch):
+//!
+//! ```text
+//! t = t_fixed + max(t_mem, t_issue) + t_latency + t_sync
+//! ```
+//!
+//! * `t_mem`     — coalesced global traffic / DRAM bandwidth,
+//! * `t_issue`   — weighted instruction count / issue throughput,
+//! * `t_latency` — per-thread dependent-chain cycles × waves, discounted
+//!                 by the occupancy-dependent hiding factor,
+//! * `t_sync`    — barrier cost × waves,
+//! * `t_fixed`   — launch + harness floor.
+//!
+//! Transforms move these terms exactly the way the paper's case studies
+//! describe: hoisting cuts `t_issue`; vectorization cuts memory
+//! *instructions* and shortens the load chain; warp shuffles cut `t_sync`
+//! and shared traffic; fast math cuts the issue weights.
+
+use std::collections::HashMap;
+
+use crate::ir::expr::{BExpr, CmpOp, IExpr, MathFn, ThreadVar, VExpr};
+use crate::ir::stmt::{ForLoop, LoopKind, Stmt, Update};
+use crate::ir::types::MemSpace;
+use crate::ir::{DimEnv, Kernel};
+
+use super::model::{GpuModel, OpWeights};
+
+/// Aggregate event counts for one launch (planner-visible profile detail).
+#[derive(Debug, Clone, Default)]
+pub struct EventCounts {
+    /// Weighted instruction issue (FP32-op equivalents), whole launch.
+    pub weighted_ops: f64,
+    /// Global memory traffic in bytes.
+    pub bytes: f64,
+    /// Global load/store *instructions* (vector accesses count once).
+    pub gmem_instr: f64,
+    /// Global elements touched.
+    pub gmem_elements: f64,
+    /// IEEE divisions executed.
+    pub divisions: f64,
+    /// libm calls executed.
+    pub libm_calls: f64,
+    /// Fast-math intrinsic calls executed.
+    pub fast_calls: f64,
+    /// Shared-memory accesses executed.
+    pub shared_accesses: f64,
+    /// Warp shuffles executed.
+    pub shuffles: f64,
+    /// Barriers per block.
+    pub syncs_per_block: f64,
+    /// Dependent-chain cycles of one thread (the latency-bound core).
+    pub chain_cycles: f64,
+}
+
+/// What dominates the variable part of the runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bottleneck {
+    Memory,
+    Issue,
+    Latency,
+    Sync,
+}
+
+/// Full cost breakdown for one launch.
+#[derive(Debug, Clone)]
+pub struct CostReport {
+    pub total_us: f64,
+    pub t_fixed_us: f64,
+    pub t_mem_us: f64,
+    pub t_issue_us: f64,
+    pub t_latency_us: f64,
+    pub t_sync_us: f64,
+    pub blocks: i64,
+    pub block_size: u32,
+    pub waves: f64,
+    /// Resident warps per SM (latency-hiding capacity).
+    pub warps_per_sm: f64,
+    /// Occupancy fraction of max resident threads.
+    pub occupancy: f64,
+    /// Estimated registers per thread (occupancy input).
+    pub regs_per_thread: u32,
+    pub bottleneck: Bottleneck,
+    pub counts: EventCounts,
+}
+
+impl CostReport {
+    /// Fraction of the variable time in each bucket — the "Nsight
+    /// sections" the planning agent reads.
+    pub fn breakdown(&self) -> Vec<(Bottleneck, f64)> {
+        let var = (self.total_us - self.t_fixed_us).max(1e-9);
+        vec![
+            (Bottleneck::Memory, self.t_mem_us / var),
+            (Bottleneck::Issue, self.t_issue_us / var),
+            (Bottleneck::Latency, self.t_latency_us / var),
+            (Bottleneck::Sync, self.t_sync_us / var),
+        ]
+    }
+}
+
+/// Walker variable environment: average value + block-uniformity of each
+/// in-scope integer variable (uniform = same value for every thread of a
+/// block, so a global load indexed by it is one cached transaction per
+/// block rather than per-thread traffic).
+#[derive(Debug, Clone, Default)]
+struct VarEnv {
+    avg: HashMap<String, f64>,
+    uniform: HashMap<String, bool>,
+}
+
+/// Estimate the cost of one kernel launch.
+pub fn simulate(model: &GpuModel, kernel: &Kernel, dims: &DimEnv) -> CostReport {
+    let weights = OpWeights::h100();
+    let bs = kernel.launch.block;
+    let blocks = kernel.grid_size(dims).max(1);
+    let grid = blocks as f64;
+
+    let walker = Walker {
+        dims,
+        bs: bs as f64,
+        grid,
+        weights: &weights,
+        model,
+        dtype_bytes: kernel
+            .params
+            .iter()
+            .map(|p| (p.name.clone(), p.dtype.bytes() as f64))
+            .collect(),
+    };
+    let mut env = VarEnv::default();
+    let c = walker.walk(&kernel.body, &mut env);
+
+    // ---- occupancy ------------------------------------------------------
+    let regs_per_thread = estimate_regs(kernel);
+    let by_threads = model.max_threads_per_sm / bs.max(1);
+    let by_regs = model.regs_per_sm / (regs_per_thread * bs).max(1);
+    let blocks_per_sm = by_threads.min(by_regs).min(model.max_blocks_per_sm).max(1);
+    let slots = model.sms * blocks_per_sm as f64;
+    let waves = (blocks as f64 / slots).ceil().max(1.0);
+    let resident_blocks = (blocks as f64).min(slots);
+    let active_sms = (blocks as f64).min(model.sms);
+    let warps_per_sm =
+        resident_blocks / active_sms * (bs as f64 / 32.0);
+    let occupancy =
+        (warps_per_sm * 32.0 / model.max_threads_per_sm as f64).min(1.0);
+
+    // ---- time terms ------------------------------------------------------
+    let total_threads = blocks as f64 * bs as f64;
+    let weighted_total = c.weighted * total_threads;
+    let bytes_total = c.bytes * total_threads;
+    let issue_rate = model.freq_hz * model.fp32_lanes_per_sm * active_sms;
+    let t_issue = weighted_total / issue_rate * 1e6;
+    let t_mem = bytes_total / model.dram_bw * 1e6;
+    let hide = (warps_per_sm / model.hide_warps).clamp(1.0, 16.0);
+    let t_latency =
+        c.chain / model.freq_hz * waves / hide * 1e6;
+    let t_sync = c.syncs * model.sync_cycles * (bs as f64 / 256.0).max(0.5)
+        / model.freq_hz
+        * waves
+        * 1e6;
+    let t_fixed = model.launch_overhead_us;
+    let total = t_fixed + t_mem.max(t_issue) + t_latency + t_sync;
+
+    let bottleneck = [
+        (Bottleneck::Memory, t_mem),
+        (Bottleneck::Issue, t_issue),
+        (Bottleneck::Latency, t_latency),
+        (Bottleneck::Sync, t_sync),
+    ]
+    .into_iter()
+    .max_by(|a, b| a.1.total_cmp(&b.1))
+    .map(|(b, _)| b)
+    .unwrap();
+
+    CostReport {
+        total_us: total,
+        t_fixed_us: t_fixed,
+        t_mem_us: t_mem,
+        t_issue_us: t_issue,
+        t_latency_us: t_latency,
+        t_sync_us: t_sync,
+        blocks,
+        block_size: bs,
+        waves,
+        warps_per_sm,
+        occupancy,
+        regs_per_thread,
+        bottleneck,
+        counts: EventCounts {
+            weighted_ops: weighted_total,
+            bytes: bytes_total,
+            gmem_instr: c.gmem_instr * total_threads,
+            gmem_elements: c.gmem_elements * total_threads,
+            divisions: c.divisions * total_threads,
+            libm_calls: c.libm * total_threads,
+            fast_calls: c.fast * total_threads,
+            shared_accesses: c.shared * total_threads,
+            shuffles: c.shuffles * total_threads,
+            syncs_per_block: c.syncs,
+            chain_cycles: c.chain,
+        },
+    }
+}
+
+/// Crude register-pressure estimate: live float/int declarations plus
+/// unroll/vector amplification. Only relative effects matter (occupancy
+/// cliffs under aggressive unrolling).
+fn estimate_regs(kernel: &Kernel) -> u32 {
+    let mut decls = 0u32;
+    let mut unroll = 1u32;
+    let mut vec_extra = 0u32;
+    kernel.walk(&mut |s| match s {
+        Stmt::DeclF { .. } | Stmt::DeclI { .. } => decls += 1,
+        Stmt::For(l) => match l.kind {
+            // Unrolling replicates the loop body's live values.
+            LoopKind::Unrolled(f) => unroll = unroll.max(f as u32),
+            // A vector access needs a handful of extra registers, not a
+            // full replica of the body.
+            LoopKind::Vector(w) => vec_extra = vec_extra.max(w as u32),
+            LoopKind::Serial => {}
+        },
+        _ => {}
+    });
+    // 255 is the hardware per-thread cap (beyond it the compiler spills).
+    ((16 + decls * 2 * unroll) + vec_extra).min(255)
+}
+
+/// Per-thread (average) contribution of a statement sequence.
+#[derive(Debug, Clone, Copy, Default)]
+struct Contribution {
+    weighted: f64,
+    bytes: f64,
+    gmem_instr: f64,
+    gmem_elements: f64,
+    divisions: f64,
+    libm: f64,
+    fast: f64,
+    shared: f64,
+    shuffles: f64,
+    /// Barriers per block (not scaled by active fraction).
+    syncs: f64,
+    /// Dependent chain cycles, including load latencies charged at the
+    /// loop level.
+    chain: f64,
+    /// This sequence directly (not in a nested loop) loads global memory.
+    direct_gld: bool,
+}
+
+impl Contribution {
+    fn add(&mut self, o: &Contribution) {
+        self.weighted += o.weighted;
+        self.bytes += o.bytes;
+        self.gmem_instr += o.gmem_instr;
+        self.gmem_elements += o.gmem_elements;
+        self.divisions += o.divisions;
+        self.libm += o.libm;
+        self.fast += o.fast;
+        self.shared += o.shared;
+        self.shuffles += o.shuffles;
+        self.syncs += o.syncs;
+        self.chain += o.chain;
+        self.direct_gld |= o.direct_gld;
+    }
+
+    fn scale(&self, k: f64) -> Contribution {
+        Contribution {
+            weighted: self.weighted * k,
+            bytes: self.bytes * k,
+            gmem_instr: self.gmem_instr * k,
+            gmem_elements: self.gmem_elements * k,
+            divisions: self.divisions * k,
+            libm: self.libm * k,
+            fast: self.fast * k,
+            shared: self.shared * k,
+            shuffles: self.shuffles * k,
+            syncs: self.syncs * k,
+            chain: self.chain * k,
+            direct_gld: self.direct_gld,
+        }
+    }
+}
+
+struct Walker<'a> {
+    dims: &'a DimEnv,
+    bs: f64,
+    grid: f64,
+    weights: &'a OpWeights,
+    model: &'a GpuModel,
+    /// Element width in bytes per global buffer.
+    dtype_bytes: HashMap<String, f64>,
+}
+
+impl<'a> Walker<'a> {
+    fn walk(&self, stmts: &[Stmt], env: &mut VarEnv) -> Contribution {
+        let mut c = Contribution::default();
+        for s in stmts {
+            match s {
+                Stmt::Comment(_) => {}
+                Stmt::DeclF { init, .. } | Stmt::AssignF { value: init, .. } => {
+                    let mut e = Contribution::default();
+                    self.vexpr(init, &mut e, env);
+                    e.chain = e.weighted;
+                    c.add(&e);
+                }
+                Stmt::DeclI { name, init } | Stmt::AssignI { name, value: init } => {
+                    let n = iexpr_ops(init);
+                    c.weighted += n as f64 * self.weights.int_alu;
+                    c.chain += n as f64 * self.weights.int_alu;
+                    let uni = is_uniform(init, env);
+                    env.avg.insert(name.clone(), self.eval(init, env));
+                    env.uniform.insert(name.clone(), uni);
+                }
+                Stmt::Store {
+                    space,
+                    value,
+                    vector_width,
+                    buf,
+                    ..
+                } => {
+                    let mut e = Contribution::default();
+                    self.vexpr(value, &mut e, env);
+                    match space {
+                        MemSpace::Global => {
+                            let vw = (*vector_width).max(1) as f64;
+                            e.gmem_instr += 1.0 / vw;
+                            e.gmem_elements += 1.0;
+                            e.weighted += self.weights.gmem_issue / vw;
+                            // Stores are never coalesced away, but a
+                            // block-uniform store is still one write.
+                            let per_thread = if is_uniform_idx(s, env) {
+                                1.0 / self.bs
+                            } else {
+                                1.0
+                            };
+                            e.bytes += self.buf_bytes(buf) * per_thread;
+                        }
+                        MemSpace::Shared => {
+                            e.shared += 1.0;
+                            e.weighted += self.weights.shared;
+                        }
+                    }
+                    e.chain = e.weighted;
+                    c.add(&e);
+                }
+                Stmt::SyncThreads => {
+                    c.syncs += 1.0;
+                    c.chain += self.model.sync_cycles;
+                }
+                Stmt::If { cond, then, els } => {
+                    let frac = self.active_fraction(cond, env);
+                    let t = self.walk(then, env);
+                    c.add(&t.scale(frac));
+                    if !els.is_empty() {
+                        let e = self.walk(els, env);
+                        c.add(&e.scale(1.0 - frac));
+                    }
+                    // Condition evaluation cost.
+                    c.weighted += self.weights.int_alu * 2.0;
+                }
+                Stmt::For(l) => {
+                    let f = self.for_loop(l, env);
+                    c.add(&f);
+                }
+            }
+        }
+        c
+    }
+
+    fn for_loop(&self, l: &ForLoop, env: &mut VarEnv) -> Contribution {
+        let trips = self.trip_count(l, env);
+        if trips <= 0.0 {
+            return Contribution::default();
+        }
+        // Average loop-var value for nested guard fractions.
+        let avg = match &l.update {
+            Update::AddAssign(_) => {
+                let i0 = self.eval(&l.init, env);
+                let b0 = self.eval(&l.bound, env);
+                (i0 + b0) / 2.0
+            }
+            Update::ShrAssign(_) => {
+                let i0 = self.eval(&l.init, env);
+                i0 / trips.max(1.0)
+            }
+        };
+        let saved = env.avg.insert(l.var.clone(), avg);
+        let loop_uniform = is_uniform(&l.init, env)
+            && match &l.update {
+                Update::AddAssign(step) => is_uniform(step, env),
+                Update::ShrAssign(_) => true,
+            };
+        let saved_u = env.uniform.insert(l.var.clone(), loop_uniform);
+        let body = self.walk(&l.body, env);
+        match saved {
+            Some(v) => {
+                env.avg.insert(l.var.clone(), v);
+            }
+            None => {
+                env.avg.remove(&l.var);
+            }
+        }
+        match saved_u {
+            Some(v) => {
+                env.uniform.insert(l.var.clone(), v);
+            }
+            None => {
+                env.uniform.remove(&l.var);
+            }
+        }
+
+        let mut out = body.scale(trips);
+        // Loop bookkeeping.
+        let ovh_div = match l.kind {
+            LoopKind::Serial | LoopKind::Vector(_) => 1.0,
+            LoopKind::Unrolled(f) => f as f64,
+        };
+        out.weighted += trips * self.weights.loop_ovh / ovh_div;
+        // Latency chain uses the *longest* thread (ceil trips) — the
+        // per-wave critical path — while throughput terms use the average.
+        let chain_trips = trips.ceil();
+        let lat = self.model.mem_latency_cycles;
+        out.chain = match l.kind {
+            // One dependent load round-trip per iteration.
+            LoopKind::Serial => {
+                chain_trips
+                    * (body.chain
+                        + if body.direct_gld { lat } else { 0.0 }
+                        + self.weights.loop_ovh)
+            }
+            // Unrolling overlaps the per-iteration loads, but the
+            // register file bounds the memory-level parallelism: cap the
+            // overlap at 2 in-flight transactions.
+            LoopKind::Unrolled(f) => {
+                let ilp = (f as f64).min(2.0);
+                chain_trips
+                    * (body.chain
+                        + if body.direct_gld { lat / ilp } else { 0.0 }
+                        + self.weights.loop_ovh / f as f64)
+            }
+            // A vector micro-loop is one transaction: latency once for the
+            // whole loop, ALU per lane.
+            LoopKind::Vector(_) => {
+                chain_trips * (body.chain + self.weights.loop_ovh)
+                    + if body.direct_gld { lat } else { 0.0 }
+            }
+        };
+        out.direct_gld = false;
+        out
+    }
+
+    fn vexpr(&self, e: &VExpr, c: &mut Contribution, env: &VarEnv) {
+        match e {
+            VExpr::Const(_) | VExpr::Var(_) => {}
+            VExpr::FromInt(i) => {
+                c.weighted += self.weights.alu + iexpr_ops(i) as f64 * self.weights.int_alu;
+            }
+            VExpr::Bin(op, a, b) => {
+                self.vexpr(a, c, env);
+                self.vexpr(b, c, env);
+                use crate::ir::expr::FBinOp;
+                match op {
+                    FBinOp::Div => {
+                        c.divisions += 1.0;
+                        c.weighted += self.weights.div;
+                    }
+                    _ => c.weighted += self.weights.alu,
+                }
+            }
+            VExpr::Call(f, a) => {
+                self.vexpr(a, c, env);
+                match f {
+                    MathFn::Exp | MathFn::Log => {
+                        c.libm += 1.0;
+                        c.weighted += self.weights.libm;
+                    }
+                    MathFn::Sqrt => {
+                        c.libm += 1.0;
+                        c.weighted += self.weights.sqrt;
+                    }
+                    MathFn::Rsqrt => {
+                        c.fast += 1.0;
+                        c.weighted += self.weights.rsqrt;
+                    }
+                    MathFn::FastExp | MathFn::FastLog | MathFn::FastRecip => {
+                        c.fast += 1.0;
+                        c.weighted += self.weights.fast_sfu;
+                    }
+                    MathFn::Abs => c.weighted += self.weights.alu,
+                }
+            }
+            VExpr::Load {
+                space,
+                buf,
+                idx,
+                vector_width,
+            } => {
+                c.weighted += iexpr_ops(idx) as f64 * self.weights.int_alu;
+                match space {
+                    MemSpace::Global => {
+                        let vw = (*vector_width).max(1) as f64;
+                        c.gmem_instr += 1.0 / vw;
+                        c.gmem_elements += 1.0;
+                        c.weighted += self.weights.gmem_issue / vw;
+                        // Block-uniform loads (e.g. per-row scores read by
+                        // every thread) hit L1/L2: one DRAM transaction per
+                        // block, not per thread.
+                        let per_thread = if uniform_iexpr(idx, env) {
+                            1.0 / self.bs
+                        } else {
+                            1.0
+                        };
+                        c.bytes += self.buf_bytes(buf) * per_thread;
+                        c.direct_gld = true;
+                    }
+                    MemSpace::Shared => {
+                        c.shared += 1.0;
+                        c.weighted += self.weights.shared;
+                    }
+                }
+            }
+            VExpr::ShflDown { value, .. } => {
+                self.vexpr(value, c, env);
+                c.shuffles += 1.0;
+                c.weighted += self.weights.shuffle;
+            }
+            VExpr::Select(_, a, b) => {
+                self.vexpr(a, c, env);
+                self.vexpr(b, c, env);
+                c.weighted += self.weights.alu;
+            }
+        }
+    }
+
+    fn buf_bytes(&self, buf: &str) -> f64 {
+        // dtype width of the named parameter (shared handled elsewhere).
+        self.dtype_bytes.get(buf).copied().unwrap_or(4.0)
+    }
+
+    fn trip_count(&self, l: &ForLoop, env: &VarEnv) -> f64 {
+        match &l.update {
+            Update::AddAssign(step) => {
+                let i0 = self.eval(&l.init, env);
+                let b0 = self.eval(&l.bound, env);
+                let s0 = self.eval(step, env).max(1.0);
+                match l.cmp {
+                    CmpOp::Lt | CmpOp::Le => ((b0 - i0) / s0).max(0.0),
+                    _ => 0.0,
+                }
+            }
+            Update::ShrAssign(k) => {
+                let i0 = self.eval(&l.init, env).max(0.0);
+                if i0 < 1.0 {
+                    0.0
+                } else {
+                    (i0.log2() / *k as f64).floor() + 1.0
+                }
+            }
+        }
+    }
+
+    fn eval(&self, e: &IExpr, env: &VarEnv) -> f64 {
+        match e {
+            IExpr::Const(c) => *c as f64,
+            IExpr::Dim(d) => self.dims.get(d).copied().unwrap_or(0) as f64,
+            IExpr::Var(v) => env.avg.get(v).copied().unwrap_or(0.0),
+            IExpr::Thread(t) => match t {
+                ThreadVar::ThreadIdx
+                | ThreadVar::BlockIdx
+                | ThreadVar::LaneId
+                | ThreadVar::WarpId => 0.0,
+                ThreadVar::BlockDim => self.bs,
+                ThreadVar::GridDim => self.grid,
+            },
+            IExpr::Bin(op, a, b) => {
+                let x = self.eval(a, env);
+                let y = self.eval(b, env);
+                use crate::ir::expr::IBinOp::*;
+                match op {
+                    Add => x + y,
+                    Sub => x - y,
+                    Mul => x * y,
+                    Div => {
+                        if y == 0.0 {
+                            0.0
+                        } else {
+                            x / y
+                        }
+                    }
+                    Mod => {
+                        if y == 0.0 {
+                            0.0
+                        } else {
+                            x % y
+                        }
+                    }
+                    Min => x.min(y),
+                    Max => x.max(y),
+                    Shl => x * 2f64.powi(y as i32),
+                    Shr => x / 2f64.powi(y as i32),
+                    And => ((x as i64) & (y as i64)) as f64,
+                }
+            }
+        }
+    }
+
+    /// Average fraction of threads for which `cond` holds.
+    fn active_fraction(&self, cond: &BExpr, env: &VarEnv) -> f64 {
+        match cond {
+            BExpr::Cmp(op, lhs, rhs) => {
+                let (span, pivot) = match lhs {
+                    IExpr::Thread(ThreadVar::ThreadIdx) => {
+                        (self.bs, self.eval(rhs, env))
+                    }
+                    IExpr::Thread(ThreadVar::LaneId) => {
+                        (32.0, self.eval(rhs, env))
+                    }
+                    IExpr::Thread(ThreadVar::WarpId) => {
+                        ((self.bs / 32.0).max(1.0), self.eval(rhs, env))
+                    }
+                    _ => return 1.0,
+                };
+                match op {
+                    CmpOp::Lt => (pivot / span).clamp(0.0, 1.0),
+                    CmpOp::Le => ((pivot + 1.0) / span).clamp(0.0, 1.0),
+                    CmpOp::Eq => 1.0 / span,
+                    CmpOp::Ne => 1.0 - 1.0 / span,
+                    CmpOp::Gt => (1.0 - (pivot + 1.0) / span).clamp(0.0, 1.0),
+                    CmpOp::Ge => (1.0 - pivot / span).clamp(0.0, 1.0),
+                }
+            }
+            BExpr::And(a, b) => {
+                self.active_fraction(a, env) * self.active_fraction(b, env)
+            }
+            BExpr::Or(a, b) => (self.active_fraction(a, env)
+                + self.active_fraction(b, env))
+            .min(1.0),
+            BExpr::Not(a) => 1.0 - self.active_fraction(a, env),
+        }
+    }
+}
+
+/// Is an index expression block-uniform (same for every thread)?
+fn is_uniform(e: &IExpr, env: &VarEnv) -> bool {
+    uniform_iexpr(e, env)
+}
+
+fn uniform_iexpr(e: &IExpr, env: &VarEnv) -> bool {
+    match e {
+        IExpr::Const(_) | IExpr::Dim(_) => true,
+        IExpr::Var(v) => env.uniform.get(v).copied().unwrap_or(false),
+        IExpr::Thread(t) => matches!(
+            t,
+            ThreadVar::BlockIdx | ThreadVar::BlockDim | ThreadVar::GridDim
+        ),
+        IExpr::Bin(_, a, b) => uniform_iexpr(a, env) && uniform_iexpr(b, env),
+    }
+}
+
+/// Is a store's index block-uniform?
+fn is_uniform_idx(s: &Stmt, env: &VarEnv) -> bool {
+    match s {
+        Stmt::Store { idx, .. } => uniform_iexpr(idx, env),
+        _ => false,
+    }
+}
+
+fn iexpr_ops(e: &IExpr) -> usize {
+    match e {
+        IExpr::Bin(_, a, b) => 1 + iexpr_ops(a) + iexpr_ops(b),
+        _ => 0,
+    }
+}

@@ -1,0 +1,106 @@
+//! GPU machine model + instruction cost tables.
+//!
+//! Calibration target is an NVIDIA H100 SXM (the paper's testbed). The
+//! absolute constants were fit once against Table 2/4 baseline times (see
+//! EXPERIMENTS.md §Calibration); all *relative* effects — transaction
+//! counts, issue weights, sync trees, occupancy — come from first
+//! principles, so the speedups of the transforms are predictions, not fits.
+
+/// Machine-level parameters.
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    /// Streaming multiprocessors.
+    pub sms: f64,
+    /// Boost clock (Hz).
+    pub freq_hz: f64,
+    /// FP32 lanes per SM (issue width for weighted ops).
+    pub fp32_lanes_per_sm: f64,
+    /// Effective DRAM bandwidth (bytes/s).
+    pub dram_bw: f64,
+    /// Round-trip global-memory latency (cycles).
+    pub mem_latency_cycles: f64,
+    /// Cost of one `__syncthreads()` barrier (cycles).
+    pub sync_cycles: f64,
+    /// Fixed launch + timing-harness overhead (µs). The paper's µs-scale
+    /// numbers sit on a large constant floor (Table 4 kernel-3 times are
+    /// flat across 4x volume); this constant models it.
+    pub launch_overhead_us: f64,
+    /// Max resident threads per SM.
+    pub max_threads_per_sm: u32,
+    /// Max resident blocks per SM.
+    pub max_blocks_per_sm: u32,
+    /// Register file per SM (32-bit regs).
+    pub regs_per_sm: u32,
+    /// Warps that fully hide memory latency.
+    pub hide_warps: f64,
+}
+
+impl GpuModel {
+    pub fn h100() -> GpuModel {
+        GpuModel {
+            sms: 132.0,
+            freq_hz: 1.8e9,
+            fp32_lanes_per_sm: 128.0,
+            dram_bw: 3.0e12,
+            mem_latency_cycles: 1300.0,
+            sync_cycles: 40.0,
+            launch_overhead_us: 7.0,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            regs_per_sm: 65536,
+            hide_warps: 4.0,
+        }
+    }
+}
+
+/// Issue-cost weights (in FP32-op equivalents) of the IR operations.
+/// The gap between libm and the fast intrinsics is the Figure-5 effect;
+/// the division weight is the reciprocal-multiply effect.
+#[derive(Debug, Clone)]
+pub struct OpWeights {
+    pub alu: f64,        // add/sub/mul/min/max/abs/select/cast
+    pub int_alu: f64,    // address arithmetic
+    pub div: f64,        // IEEE divide (software sequence)
+    pub libm: f64,       // expf/logf (software polynomial)
+    pub sqrt: f64,       // sqrtf
+    pub rsqrt: f64,      // rsqrtf
+    pub fast_sfu: f64,   // __expf/__logf/__frcp_rn on the SFU
+    pub shared: f64,     // shared-memory access
+    pub shuffle: f64,    // __shfl_down_sync
+    pub gmem_issue: f64, // global LD/ST instruction issue
+    pub loop_ovh: f64,   // per-iteration compare+increment
+}
+
+impl OpWeights {
+    pub fn h100() -> OpWeights {
+        OpWeights {
+            alu: 1.0,
+            int_alu: 0.5,
+            div: 30.0,
+            libm: 60.0,
+            sqrt: 30.0,
+            rsqrt: 8.0,
+            fast_sfu: 4.0,
+            shared: 2.0,
+            shuffle: 2.0,
+            gmem_issue: 2.0,
+            loop_ovh: 2.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_parameters_sane() {
+        let m = GpuModel::h100();
+        assert_eq!(m.sms, 132.0);
+        assert!(m.dram_bw > 2e12);
+        assert!(m.launch_overhead_us > 0.0);
+        let w = OpWeights::h100();
+        assert!(w.libm > w.fast_sfu * 4.0, "libm >> fast intrinsics");
+        assert!(w.div > w.alu * 10.0, "divide is expensive");
+    }
+}

@@ -1,0 +1,151 @@
+//! Fast-math intrinsic substitution (the paper's Figure 5 optimization).
+//!
+//! * `expf`/`logf` → `__expf`/`__logf`,
+//! * `x / y` → `x * __frcp_rn(y)`,
+//! * `1 / sqrtf(x)` → `rsqrtf(x)`.
+//!
+//! Precision-relaxing by design: the interpreter models the intrinsics
+//! with deterministic mantissa truncation, so a too-tight test tolerance
+//! rejects this move — exactly the correctness/performance trade the
+//! paper's testing agent arbitrates.
+
+use crate::ir::expr::{FBinOp, MathFn, VExpr};
+use crate::ir::stmt::Stmt;
+use crate::ir::Kernel;
+
+use super::{na, NotApplicable};
+
+pub fn apply(kernel: &Kernel) -> Result<Kernel, NotApplicable> {
+    let mut k = kernel.clone();
+    let mut changed = 0usize;
+    rewrite_stmts(&mut k.body, &mut changed);
+    if changed == 0 {
+        return Err(na("no slow math to replace"));
+    }
+    Ok(k)
+}
+
+/// Number of sites fast-math would rewrite (planner signal).
+pub fn opportunity(kernel: &Kernel) -> usize {
+    let mut k = kernel.clone();
+    let mut changed = 0usize;
+    rewrite_stmts(&mut k.body, &mut changed);
+    changed
+}
+
+fn rewrite_stmts(stmts: &mut [Stmt], changed: &mut usize) {
+    for s in stmts {
+        match s {
+            Stmt::DeclF { init, .. } | Stmt::AssignF { value: init, .. } => {
+                *init = rewrite(init.clone(), changed);
+            }
+            Stmt::Store { value, .. } => {
+                *value = rewrite(value.clone(), changed);
+            }
+            Stmt::For(l) => rewrite_stmts(&mut l.body, changed),
+            Stmt::If { then, els, .. } => {
+                rewrite_stmts(then, changed);
+                rewrite_stmts(els, changed);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn rewrite(e: VExpr, changed: &mut usize) -> VExpr {
+    match e {
+        VExpr::Call(MathFn::Exp, a) => {
+            *changed += 1;
+            VExpr::Call(MathFn::FastExp, Box::new(rewrite(*a, changed)))
+        }
+        VExpr::Call(MathFn::Log, a) => {
+            *changed += 1;
+            VExpr::Call(MathFn::FastLog, Box::new(rewrite(*a, changed)))
+        }
+        VExpr::Bin(FBinOp::Div, num, den) => {
+            let num = rewrite(*num, changed);
+            let den = rewrite(*den, changed);
+            *changed += 1;
+            // 1 / sqrtf(x)  →  rsqrtf(x)
+            if matches!(num, VExpr::Const(c) if c == 1.0) {
+                if let VExpr::Call(MathFn::Sqrt, inner) = den {
+                    return VExpr::Call(MathFn::Rsqrt, inner);
+                }
+                return VExpr::Call(MathFn::FastRecip, Box::new(den));
+            }
+            // x / y  →  x * __frcp_rn(y)
+            VExpr::Bin(
+                FBinOp::Mul,
+                Box::new(num),
+                Box::new(VExpr::Call(MathFn::FastRecip, Box::new(den))),
+            )
+        }
+        VExpr::Bin(op, a, b) => VExpr::Bin(
+            op,
+            Box::new(rewrite(*a, changed)),
+            Box::new(rewrite(*b, changed)),
+        ),
+        VExpr::Call(f, a) => VExpr::Call(f, Box::new(rewrite(*a, changed))),
+        VExpr::Select(c, a, b) => VExpr::Select(
+            c,
+            Box::new(rewrite(*a, changed)),
+            Box::new(rewrite(*b, changed)),
+        ),
+        VExpr::ShflDown { value, offset } => VExpr::ShflDown {
+            value: Box::new(rewrite(*value, changed)),
+            offset,
+        },
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp;
+    use crate::ir::analysis;
+    use crate::kernels;
+
+    #[test]
+    fn rewrites_silu_to_intrinsics() {
+        let base = kernels::silu::build_baseline();
+        let fast = apply(&base).unwrap();
+        let f = analysis::features(&fast);
+        assert_eq!(f.slow_math_in_loops, 0);
+        assert_eq!(f.divisions, 0);
+        assert!(f.fast_math_calls >= 2);
+        let src = crate::ir::printer::print_kernel(&fast);
+        assert!(src.contains("__expf"));
+        assert!(src.contains("__frcp_rn"));
+    }
+
+    #[test]
+    fn rsqrt_pattern_in_rmsnorm() {
+        let fast = apply(&kernels::rmsnorm::build_baseline()).unwrap();
+        let src = crate::ir::printer::print_kernel(&fast);
+        assert!(src.contains("rsqrtf("), "1/sqrt folds to rsqrtf: {src}");
+    }
+
+    #[test]
+    fn stays_within_tolerance() {
+        let spec = kernels::silu::spec();
+        let base = kernels::silu::build_baseline();
+        let fast = apply(&base).unwrap();
+        let dims = &(spec.test_shapes)()[0];
+        let inputs = (spec.gen_inputs)(dims, 5);
+        let refs: Vec<(&str, Vec<f32>)> =
+            inputs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+        let e1 = interp::run_with_inputs(&base, dims, &refs).unwrap();
+        let e2 = interp::run_with_inputs(&fast, dims, &refs).unwrap();
+        let (_, rel) = interp::max_errors(e2.get("out"), e1.get("out"));
+        // Intrinsics are lossy pre-rounding, but must stay inside the
+        // production tolerance (f16 output rounding may even re-absorb it).
+        assert!(rel < spec.rel_tol, "fast math outside tolerance: {rel}");
+    }
+
+    #[test]
+    fn idempotent_failure_when_already_fast() {
+        let fast = apply(&kernels::silu::build_baseline()).unwrap();
+        assert!(apply(&fast).is_err(), "no slow math left");
+    }
+}

@@ -1,0 +1,165 @@
+//! Loop-invariant code motion (the paper's Figure 2 optimization).
+//!
+//! A float declaration inside a loop is hoisted before the loop when its
+//! right-hand side does not depend (transitively) on the loop variable,
+//! loop-carried registers, memory loads, or shuffles. Loads are excluded
+//! conservatively so hoisting can never introduce an out-of-bounds access
+//! when the loop would have executed zero iterations.
+
+use std::collections::BTreeSet;
+
+use crate::ir::analysis::vuse;
+use crate::ir::stmt::{ForLoop, Stmt};
+use crate::ir::Kernel;
+
+use super::{na, NotApplicable};
+
+/// Apply loop-invariant hoisting everywhere; errors if nothing moved.
+pub fn apply(kernel: &Kernel) -> Result<Kernel, NotApplicable> {
+    let mut k = kernel.clone();
+    let mut moved = 0usize;
+    k.body = hoist_in(&k.body, &mut moved);
+    if moved == 0 {
+        return Err(na("no hoistable loop-invariant statements"));
+    }
+    Ok(k)
+}
+
+/// Number of statements hoisting would move (planner signal).
+pub fn opportunity(kernel: &Kernel) -> usize {
+    let mut moved = 0usize;
+    let _ = hoist_in(&kernel.body, &mut moved);
+    moved
+}
+
+fn hoist_in(stmts: &[Stmt], moved: &mut usize) -> Vec<Stmt> {
+    let mut out = Vec::with_capacity(stmts.len());
+    for s in stmts {
+        match s {
+            Stmt::For(l) => {
+                let (pre, l2) = hoist_loop(l, moved);
+                out.extend(pre);
+                out.push(Stmt::For(l2));
+            }
+            Stmt::If { cond, then, els } => out.push(Stmt::If {
+                cond: cond.clone(),
+                then: hoist_in(then, moved),
+                els: hoist_in(els, moved),
+            }),
+            other => out.push(other.clone()),
+        }
+    }
+    out
+}
+
+fn hoist_loop(l: &ForLoop, moved: &mut usize) -> (Vec<Stmt>, ForLoop) {
+    // Loop-carried registers: anything assigned (not declared) in the body,
+    // plus every integer declared in the body, plus the loop variable.
+    let mut carried: BTreeSet<String> = BTreeSet::new();
+    carried.insert(l.var.clone());
+    for s in &l.body {
+        s.walk(&mut |s| match s {
+            Stmt::AssignF { name, .. } | Stmt::AssignI { name, .. } => {
+                carried.insert(name.clone());
+            }
+            Stmt::DeclI { name, .. } => {
+                carried.insert(name.clone());
+            }
+            Stmt::For(inner) => {
+                carried.insert(inner.var.clone());
+            }
+            _ => {}
+        });
+    }
+
+    let mut pre = Vec::new();
+    let mut body = Vec::new();
+    // Names declared in the body that were NOT hoisted — anything reading
+    // them cannot be hoisted either.
+    let mut pinned: BTreeSet<String> = carried.clone();
+    for s in &l.body {
+        if let Stmt::DeclF { name, init } = s {
+            let u = vuse(init);
+            let invariant = !u.has_load
+                && !u.has_shuffle
+                && u.vars.iter().all(|v| !pinned.contains(v));
+            if invariant && !carried.contains(name) {
+                pre.push(s.clone());
+                *moved += 1;
+                continue;
+            }
+            pinned.insert(name.clone());
+        }
+        // Recurse into nested loops within the remaining body.
+        match s {
+            Stmt::For(inner) => {
+                let (ipre, il) = hoist_loop(inner, moved);
+                // Inner hoists may only move to just-outside the inner
+                // loop (still inside this one) — they may depend on this
+                // loop's variable.
+                body.extend(ipre);
+                body.push(Stmt::For(il));
+            }
+            other => body.push(other.clone()),
+        }
+    }
+    let mut l2 = l.clone();
+    l2.body = body;
+    (pre, l2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp;
+    use crate::kernels;
+
+    #[test]
+    fn hoists_merge_kernel_weights() {
+        let base = kernels::merge::build_baseline();
+        let hoisted = apply(&base).unwrap();
+        // The six weight computations leave the loop.
+        let f_base = crate::ir::analysis::features(&base);
+        let f_opt = crate::ir::analysis::features(&hoisted);
+        assert!(f_base.slow_math_in_loops >= 2);
+        assert_eq!(f_opt.slow_math_in_loops, 0, "exp calls hoisted");
+        assert!(f_opt.hoistable_stmts == 0);
+    }
+
+    #[test]
+    fn hoisted_kernel_is_equivalent() {
+        let spec = kernels::merge::spec();
+        let base = kernels::merge::build_baseline();
+        let opt = apply(&base).unwrap();
+        let dims = &(spec.test_shapes)()[0];
+        let inputs = (spec.gen_inputs)(dims, 11);
+        let refs: Vec<(&str, Vec<f32>)> =
+            inputs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+        let e1 = interp::run_with_inputs(&base, dims, &refs).unwrap();
+        let e2 = interp::run_with_inputs(&opt, dims, &refs).unwrap();
+        for b in spec.out_bufs {
+            assert_eq!(e1.get(b), e2.get(b), "{b} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn refuses_when_nothing_to_hoist() {
+        let base = kernels::silu::build_baseline();
+        // silu's loop body is fully element-dependent.
+        assert!(apply(&base).is_err());
+    }
+
+    #[test]
+    fn does_not_hoist_loop_carried() {
+        let base = kernels::rmsnorm::build_baseline();
+        // `local` accumulates; `h` depends on loads. Only `inv` is already
+        // outside loops. Nothing hoistable.
+        assert!(apply(&base).is_err());
+    }
+
+    #[test]
+    fn opportunity_counts() {
+        assert!(opportunity(&kernels::merge::build_baseline()) >= 4);
+        assert_eq!(opportunity(&kernels::silu::build_baseline()), 0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Block-size tuning.
+//!
+//! Kernels reference `blockDim.x` symbolically, so resizing the block is a
+//! pure launch-geometry change. Legality: powers of two in [32, 1024];
+//! kernels that already use warp shuffles additionally require full warps
+//! (implied by the power-of-two floor of 32).
+//!
+//! This is the shape-sensitive move: smaller blocks win on short rows
+//! (fewer idle lanes), larger blocks win on long rows (fewer iterations,
+//! better latency hiding). The single-agent failure mode on Kernel 1
+//! (§5.2, 0.73x) comes from tuning this against unrepresentative tiny
+//! test shapes.
+
+use crate::ir::Kernel;
+
+use super::{na, NotApplicable};
+
+pub const CANDIDATES: &[u32] = &[32, 64, 128, 256, 512, 1024];
+
+pub fn apply(kernel: &Kernel, block: u32) -> Result<Kernel, NotApplicable> {
+    if !CANDIDATES.contains(&block) {
+        return Err(na(format!("block size {block} not in {CANDIDATES:?}")));
+    }
+    if kernel.launch.block == block {
+        return Err(na(format!("block size already {block}")));
+    }
+    let mut k = kernel.clone();
+    k.launch.block = block;
+    Ok(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp;
+    use crate::kernels;
+
+    #[test]
+    fn resize_preserves_semantics_elementwise() {
+        let spec = kernels::silu::spec();
+        let base = kernels::silu::build_baseline();
+        for bs in [32, 64, 512] {
+            let k = apply(&base, bs).unwrap();
+            let dims = &(spec.test_shapes)()[0];
+            let inputs = (spec.gen_inputs)(dims, 47);
+            let refs: Vec<(&str, Vec<f32>)> = inputs
+                .iter()
+                .map(|(n, v)| (n.as_str(), v.clone()))
+                .collect();
+            let e1 = interp::run_with_inputs(&base, dims, &refs).unwrap();
+            let e2 = interp::run_with_inputs(&k, dims, &refs).unwrap();
+            assert_eq!(e1.get("out"), e2.get("out"), "block {bs}");
+        }
+    }
+
+    #[test]
+    fn resize_preserves_reduction_within_tolerance() {
+        // Changing block size re-partitions the rmsnorm accumulation.
+        let spec = kernels::rmsnorm::spec();
+        let base = kernels::rmsnorm::build_baseline();
+        let k = apply(&base, 128).unwrap();
+        let dims = &(spec.test_shapes)()[0];
+        let inputs = (spec.gen_inputs)(dims, 53);
+        let refs: Vec<(&str, Vec<f32>)> =
+            inputs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+        let env = interp::run_with_inputs(&k, dims, &refs).unwrap();
+        let want = (spec.reference)(dims, &inputs.iter().cloned().collect());
+        for buf in spec.out_bufs {
+            let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
+            assert!(rel < spec.rel_tol || abs < spec.abs_tol);
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_sizes() {
+        let base = kernels::silu::build_baseline();
+        assert!(apply(&base, 48).is_err());
+        assert!(apply(&base, 2048).is_err());
+        assert!(apply(&base, 256).is_err(), "no-op resize rejected");
+    }
+}

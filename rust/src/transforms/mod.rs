@@ -1,0 +1,44 @@
+//! Transformation catalog — the coding agent's move space.
+//!
+//! Each module implements one of the optimization strategies the paper's
+//! case studies identify (§5.3):
+//!
+//! * [`hoist`]        — loop-invariant code motion (Figure 2),
+//! * [`warp_shuffle`] — shared-memory tree reduction → `__shfl_down_sync`
+//!                      warp reduction (Figure 3),
+//! * [`vectorize`]    — scalar → `__half2`/`float4` global accesses
+//!                      (Figure 4),
+//! * [`fast_math`]    — libm + division → CUDA fast-math intrinsics
+//!                      (Figure 5),
+//! * [`unroll`]       — `#pragma unroll` on element loops,
+//! * [`launch`]       — block-size tuning.
+//!
+//! All transforms are *semantics-preserving rewrites with legality checks*
+//! (fast-math is precision-relaxing by design — the testing agent's
+//! tolerance arbitrates). Property tests in `rust/tests/proptests.rs`
+//! check interpreter equivalence on random inputs for every move.
+
+pub mod catalog;
+pub mod fast_math;
+pub mod hoist;
+pub mod launch;
+pub mod unroll;
+pub mod vectorize;
+pub mod warp_shuffle;
+
+pub use catalog::{all_moves, apply, applicable_moves, optimized_reference, Move};
+
+/// Why a transform refused to apply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NotApplicable(pub String);
+
+impl std::fmt::Display for NotApplicable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "not applicable: {}", self.0)
+    }
+}
+impl std::error::Error for NotApplicable {}
+
+pub(crate) fn na(reason: impl Into<String>) -> NotApplicable {
+    NotApplicable(reason.into())
+}

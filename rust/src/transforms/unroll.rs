@@ -1,0 +1,88 @@
+//! `#pragma unroll` on grid-stride element loops.
+//!
+//! Semantics-neutral annotation: the interpreter ignores it; the cost
+//! model reduces per-iteration loop overhead and increases instruction-
+//! level parallelism, at the price of a higher register estimate (which
+//! can lower occupancy — the trade the single-agent baseline mis-judges
+//! on unrepresentative test shapes, §5.2).
+
+use crate::ir::expr::{IExpr, ThreadVar};
+use crate::ir::stmt::{LoopKind, Stmt, Update};
+use crate::ir::Kernel;
+
+use super::{na, NotApplicable};
+
+pub fn apply(kernel: &Kernel, factor: u8) -> Result<Kernel, NotApplicable> {
+    if !matches!(factor, 2 | 4 | 8) {
+        return Err(na(format!("unsupported unroll factor {factor}")));
+    }
+    let mut k = kernel.clone();
+    let mut changed = 0usize;
+    mark(&mut k.body, factor, &mut changed);
+    if changed == 0 {
+        return Err(na("no serial grid-stride loop to unroll"));
+    }
+    Ok(k)
+}
+
+fn mark(stmts: &mut [Stmt], factor: u8, changed: &mut usize) {
+    for s in stmts {
+        match s {
+            Stmt::For(l) => {
+                let grid_stride = matches!(
+                    &l.update,
+                    Update::AddAssign(IExpr::Thread(ThreadVar::BlockDim))
+                ) || matches!(
+                    &l.update,
+                    Update::AddAssign(IExpr::Bin(_, a, _))
+                        if matches!(**a, IExpr::Thread(ThreadVar::BlockDim))
+                );
+                if l.kind == LoopKind::Serial && grid_stride {
+                    l.kind = LoopKind::Unrolled(factor);
+                    *changed += 1;
+                } else {
+                    mark(&mut l.body, factor, changed);
+                }
+            }
+            Stmt::If { then, els, .. } => {
+                mark(then, factor, changed);
+                mark(els, factor, changed);
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp;
+    use crate::kernels;
+
+    #[test]
+    fn annotates_without_changing_semantics() {
+        let spec = kernels::silu::spec();
+        let base = kernels::silu::build_baseline();
+        let unrolled = apply(&base, 4).unwrap();
+        let src = crate::ir::printer::print_kernel(&unrolled);
+        assert!(src.contains("#pragma unroll 4"));
+        let dims = &(spec.test_shapes)()[0];
+        let inputs = (spec.gen_inputs)(dims, 41);
+        let refs: Vec<(&str, Vec<f32>)> =
+            inputs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+        let e1 = interp::run_with_inputs(&base, dims, &refs).unwrap();
+        let e2 = interp::run_with_inputs(&unrolled, dims, &refs).unwrap();
+        assert_eq!(e1.get("out"), e2.get("out"));
+    }
+
+    #[test]
+    fn rejects_bad_factor() {
+        assert!(apply(&kernels::silu::build_baseline(), 3).is_err());
+    }
+
+    #[test]
+    fn rejects_when_no_target() {
+        let unrolled = apply(&kernels::silu::build_baseline(), 2).unwrap();
+        assert!(apply(&unrolled, 2).is_err(), "already unrolled");
+    }
+}

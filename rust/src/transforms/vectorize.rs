@@ -1,0 +1,400 @@
+//! Vectorized global-memory access (the paper's Figure 4 optimization).
+//!
+//! Rewrites the canonical grid-stride element loop
+//!
+//! ```text
+//! for (d = threadIdx.x; d < D; d += blockDim.x) { ... x[base + d] ... }
+//! ```
+//!
+//! into a width-`W` vector loop plus a scalar tail:
+//!
+//! ```text
+//! for (d0 = threadIdx.x*W; d0 < (D/W)*W; d0 += blockDim.x*W)   // Vector(W)
+//!     for (d = d0; d < d0 + W; ++d)                            // Vector(W)
+//!         ... x[base + d] ...   (loads/stores marked vector_width = W)
+//! for (d = (D/W)*W + threadIdx.x; d < D; d += blockDim.x)      // tail
+//!     ... original scalar body ...
+//! ```
+//!
+//! Semantics are identical element-by-element; the printer renders
+//! `__half2`-style accesses and the cost model charges one memory
+//! instruction/transaction per `W` lanes. `W` = 2 when any accessed
+//! global buffer is f16 (`__half2`), else 4 (`float4`).
+//!
+//! Legality: every global access inside the loop must be unit-stride in
+//! the loop variable, the body must be thread-private, and the loop must
+//! be the canonical `init = threadIdx.x`, `step = blockDim.x` form.
+
+use crate::ir::analysis::is_collective;
+use crate::ir::build::{c, iadd, idiv, imul, iv, tx};
+use crate::ir::expr::{CmpOp, IExpr, ThreadVar, VExpr};
+use crate::ir::stmt::{ForLoop, LoopKind, Stmt, Update};
+use crate::ir::types::{DType, MemSpace};
+use crate::ir::Kernel;
+
+use super::{na, NotApplicable};
+
+pub fn apply(kernel: &Kernel) -> Result<Kernel, NotApplicable> {
+    let mut k = kernel.clone();
+    let mut changed = 0usize;
+    k.body = rewrite_stmts(&k, &k.body, &mut changed);
+    if changed == 0 {
+        return Err(na("no vectorizable grid-stride loop"));
+    }
+    Ok(k)
+}
+
+/// Number of loops vectorization would rewrite (planner signal).
+pub fn opportunity(kernel: &Kernel) -> usize {
+    let mut changed = 0usize;
+    let _ = rewrite_stmts(kernel, &kernel.body, &mut changed);
+    changed
+}
+
+fn rewrite_stmts(k: &Kernel, stmts: &[Stmt], changed: &mut usize) -> Vec<Stmt> {
+    let mut out = Vec::with_capacity(stmts.len());
+    for s in stmts {
+        match s {
+            Stmt::For(l) => match try_vectorize(k, l) {
+                Some(mut v) => {
+                    *changed += 1;
+                    out.append(&mut v);
+                }
+                None => {
+                    let mut l2 = l.clone();
+                    l2.body = rewrite_stmts(k, &l.body, changed);
+                    out.push(Stmt::For(l2));
+                }
+            },
+            Stmt::If { cond, then, els } => out.push(Stmt::If {
+                cond: cond.clone(),
+                then: rewrite_stmts(k, then, changed),
+                els: rewrite_stmts(k, els, changed),
+            }),
+            other => out.push(other.clone()),
+        }
+    }
+    out
+}
+
+fn is_tx(e: &IExpr) -> bool {
+    matches!(e, IExpr::Thread(ThreadVar::ThreadIdx))
+}
+
+fn is_bdim(e: &IExpr) -> bool {
+    matches!(e, IExpr::Thread(ThreadVar::BlockDim))
+}
+
+fn try_vectorize(k: &Kernel, l: &ForLoop) -> Option<Vec<Stmt>> {
+    if l.kind != LoopKind::Serial || l.cmp != CmpOp::Lt {
+        return None;
+    }
+    if !is_tx(&l.init) {
+        return None;
+    }
+    match &l.update {
+        Update::AddAssign(s) if is_bdim(s) => {}
+        _ => return None,
+    }
+    // Body must be private and all global accesses unit-stride in l.var.
+    let mut ok = true;
+    let mut width: Option<u8> = None;
+    for s in &l.body {
+        if is_collective(s) {
+            return None;
+        }
+        s.walk(&mut |s| match s {
+            Stmt::Store {
+                space: MemSpace::Global,
+                buf,
+                idx,
+                vector_width,
+                ..
+            } => {
+                if *vector_width != 1 || !unit_stride(idx, &l.var) {
+                    ok = false;
+                }
+                join_width(k, buf, &mut width);
+            }
+            Stmt::For(_) => ok = false, // nested loops: keep it simple
+            _ => {}
+        });
+        visit_loads(s, &mut |space, buf, idx, vw| {
+            if space == MemSpace::Global {
+                if vw != 1 || !unit_stride(idx, &l.var) {
+                    ok = false;
+                }
+                join_width(k, buf, &mut width);
+            }
+        });
+    }
+    let width = width?;
+    if !ok || width < 2 {
+        return None;
+    }
+
+    let w = width as i64;
+    // Vector main loop.
+    let d0 = format!("{}0", l.var);
+    let vec_bound = imul(idiv(l.bound.clone(), c(w)), c(w)).simplified();
+    let mut vec_body = l.body.clone();
+    mark_vector_width(&mut vec_body, width);
+    let micro = Stmt::For(ForLoop {
+        var: l.var.clone(),
+        init: iv(&d0),
+        cmp: CmpOp::Lt,
+        bound: iadd(iv(&d0), c(w)),
+        update: Update::AddAssign(c(1)),
+        kind: LoopKind::Vector(width),
+        body: vec_body,
+    });
+    let main = Stmt::For(ForLoop {
+        var: d0.clone(),
+        init: imul(tx(), c(w)),
+        cmp: CmpOp::Lt,
+        bound: vec_bound.clone(),
+        update: Update::AddAssign(imul(
+            IExpr::Thread(ThreadVar::BlockDim),
+            c(w),
+        )),
+        kind: LoopKind::Vector(width),
+        body: vec![micro],
+    });
+    // Scalar tail for bound % W.
+    let tail = Stmt::For(ForLoop {
+        var: l.var.clone(),
+        init: iadd(vec_bound, tx()),
+        cmp: CmpOp::Lt,
+        bound: l.bound.clone(),
+        update: l.update.clone(),
+        kind: LoopKind::Serial,
+        body: l.body.clone(),
+    });
+    Some(vec![
+        Stmt::Comment(format!(
+            "vectorized x{width} main loop + scalar tail"
+        )),
+        main,
+        tail,
+    ])
+}
+
+fn join_width(k: &Kernel, buf: &str, width: &mut Option<u8>) {
+    let w = match k.param(buf).map(|p| p.dtype) {
+        Some(DType::F16) => 2, // __half2
+        Some(DType::F32) => 4, // float4
+        None => return,
+    };
+    *width = Some(match width {
+        None => w,
+        Some(prev) => (*prev).min(w),
+    });
+}
+
+/// idx is `affine + var` with unit coefficient and no other occurrence.
+fn unit_stride(idx: &IExpr, var: &str) -> bool {
+    fn occurrences(e: &IExpr, var: &str) -> usize {
+        match e {
+            IExpr::Var(v) => usize::from(v == var),
+            IExpr::Bin(_, a, b) => occurrences(a, var) + occurrences(b, var),
+            _ => 0,
+        }
+    }
+    fn unit(e: &IExpr, var: &str) -> bool {
+        match e {
+            IExpr::Var(v) => v == var,
+            IExpr::Bin(crate::ir::IBinOp::Add, a, b) => {
+                (unit(a, var) && occurrences(b, var) == 0)
+                    || (unit(b, var) && occurrences(a, var) == 0)
+            }
+            _ => false,
+        }
+    }
+    occurrences(idx, var) == 1 && unit(idx, var)
+}
+
+fn mark_vector_width(stmts: &mut [Stmt], w: u8) {
+    for s in stmts {
+        match s {
+            Stmt::Store {
+                space: MemSpace::Global,
+                vector_width,
+                value,
+                ..
+            } => {
+                *vector_width = w;
+                mark_expr(value, w);
+            }
+            Stmt::DeclF { init, .. } | Stmt::AssignF { value: init, .. } => {
+                mark_expr(init, w)
+            }
+            Stmt::Store { value, .. } => mark_expr(value, w),
+            Stmt::For(l) => mark_vector_width(&mut l.body, w),
+            Stmt::If { then, els, .. } => {
+                mark_vector_width(then, w);
+                mark_vector_width(els, w);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn mark_expr(e: &mut VExpr, w: u8) {
+    match e {
+        VExpr::Load {
+            space: MemSpace::Global,
+            vector_width,
+            ..
+        } => *vector_width = w,
+        VExpr::Bin(_, a, b) => {
+            mark_expr(a, w);
+            mark_expr(b, w);
+        }
+        VExpr::Call(_, a) => mark_expr(a, w),
+        VExpr::Select(_, a, b) => {
+            mark_expr(a, w);
+            mark_expr(b, w);
+        }
+        VExpr::ShflDown { value, .. } => mark_expr(value, w),
+        _ => {}
+    }
+}
+
+fn visit_loads(
+    s: &Stmt,
+    f: &mut impl FnMut(MemSpace, &str, &IExpr, u8),
+) {
+    fn expr(e: &VExpr, f: &mut impl FnMut(MemSpace, &str, &IExpr, u8)) {
+        match e {
+            VExpr::Load {
+                space,
+                buf,
+                idx,
+                vector_width,
+            } => f(*space, buf, idx, *vector_width),
+            VExpr::Bin(_, a, b) => {
+                expr(a, f);
+                expr(b, f);
+            }
+            VExpr::Call(_, a) => expr(a, f),
+            VExpr::Select(_, a, b) => {
+                expr(a, f);
+                expr(b, f);
+            }
+            VExpr::ShflDown { value, .. } => expr(value, f),
+            _ => {}
+        }
+    }
+    s.walk(&mut |s| match s {
+        Stmt::DeclF { init, .. } | Stmt::AssignF { value: init, .. } => {
+            expr(init, f)
+        }
+        Stmt::Store { value, .. } => expr(value, f),
+        _ => {}
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp;
+    use crate::ir::analysis;
+    use crate::kernels;
+
+    fn equivalent(spec: &kernels::KernelSpec, a: &Kernel, b: &Kernel) {
+        for dims in (spec.test_shapes)() {
+            let inputs = (spec.gen_inputs)(&dims, 17);
+            let refs: Vec<(&str, Vec<f32>)> = inputs
+                .iter()
+                .map(|(n, v)| (n.as_str(), v.clone()))
+                .collect();
+            let e1 = interp::run_with_inputs(a, &dims, &refs).unwrap();
+            let e2 = interp::run_with_inputs(b, &dims, &refs).unwrap();
+            for buf in spec.out_bufs {
+                assert_eq!(
+                    e1.get(buf),
+                    e2.get(buf),
+                    "{buf} must be bit-identical at {dims:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vectorizes_silu_as_half2() {
+        let base = kernels::silu::build_baseline();
+        let vec = apply(&base).unwrap();
+        let f = analysis::features(&vec);
+        assert_eq!(f.max_vector_width, 2, "__half2");
+        equivalent(&kernels::silu::spec(), &base, &vec);
+    }
+
+    #[test]
+    fn vectorizes_merge_as_float4() {
+        let base = kernels::merge::build_baseline();
+        let vec = apply(&base).unwrap();
+        let f = analysis::features(&vec);
+        assert_eq!(f.max_vector_width, 4, "float4");
+        equivalent(&kernels::merge::spec(), &base, &vec);
+    }
+
+    #[test]
+    fn vectorizes_rmsnorm_elementwise_loops() {
+        // Vectorization re-partitions the per-thread accumulation order of
+        // the sum-of-squares, so compare against the oracle with tolerance
+        // rather than bit-exactly.
+        let spec = kernels::rmsnorm::spec();
+        let base = kernels::rmsnorm::build_baseline();
+        let vec = apply(&base).unwrap();
+        for dims in (spec.test_shapes)() {
+            let inputs = (spec.gen_inputs)(&dims, 17);
+            let refs: Vec<(&str, Vec<f32>)> = inputs
+                .iter()
+                .map(|(n, v)| (n.as_str(), v.clone()))
+                .collect();
+            let env = interp::run_with_inputs(&vec, &dims, &refs).unwrap();
+            let want =
+                (spec.reference)(&dims, &inputs.iter().cloned().collect());
+            for buf in spec.out_bufs {
+                let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
+                assert!(
+                    rel < spec.rel_tol || abs < spec.abs_tol,
+                    "{buf}: abs {abs} rel {rel}"
+                );
+            }
+        }
+        // Tree-reduction loop must be untouched.
+        assert!(analysis::features(&vec).has_tree_reduction);
+    }
+
+    #[test]
+    fn odd_tail_is_handled() {
+        // D = 257 exercises the scalar tail loop.
+        let spec = kernels::silu::spec();
+        let base = kernels::silu::build_baseline();
+        let vec = apply(&base).unwrap();
+        let dims = kernels::dims_of(&[("B", 2), ("D", 257)]);
+        let inputs = (spec.gen_inputs)(&dims, 23);
+        let refs: Vec<(&str, Vec<f32>)> =
+            inputs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+        let e1 = interp::run_with_inputs(&base, &dims, &refs).unwrap();
+        let e2 = interp::run_with_inputs(&vec, &dims, &refs).unwrap();
+        assert_eq!(e1.get("out"), e2.get("out"));
+    }
+
+    #[test]
+    fn not_applicable_twice() {
+        let vec = apply(&kernels::silu::build_baseline()).unwrap();
+        assert!(apply(&vec).is_err());
+    }
+
+    #[test]
+    fn unit_stride_detection() {
+        use crate::ir::build::*;
+        assert!(unit_stride(&iadd(imul(iv("row"), dim("D")), iv("d")), "d"));
+        assert!(unit_stride(&iv("d"), "d"));
+        assert!(!unit_stride(&imul(iv("d"), c(2)), "d"));
+        assert!(!unit_stride(&iadd(iv("d"), iv("d")), "d"));
+        assert!(!unit_stride(&dim("D"), "d"));
+    }
+}

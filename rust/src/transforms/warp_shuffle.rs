@@ -1,0 +1,327 @@
+//! Warp-shuffle reduction (the paper's Figure 3 optimization).
+//!
+//! Rewrites the shared-memory tree-reduction idiom
+//!
+//! ```text
+//! sm[tx] = local; __syncthreads();
+//! for (off = blockDim.x/2; off > 0; off >>= 1) {
+//!     if (tx < off) sm[tx] += sm[tx + off];
+//!     __syncthreads();
+//! }
+//! ... sm[0] ...
+//! ```
+//!
+//! into the register-resident two-phase form:
+//!
+//! ```text
+//! for (off = 16; off > 0; off >>= 1)
+//!     local += __shfl_down_sync(0xffffffffu, local, off);   // intra-warp
+//! __shared__ float ws[blockDim.x/32];
+//! if (lane == 0) ws[warp] = local;
+//! __syncthreads();
+//! if (warp == 0) {
+//!     float wv = (lane < blockDim.x/32) ? ws[lane] : 0.0f;
+//!     for (off = 16; off > 0; off >>= 1)
+//!         wv += __shfl_down_sync(0xffffffffu, wv, off);
+//!     if (lane == 0) ws[0] = wv;
+//! }
+//! __syncthreads();
+//! ... ws[0] ...
+//! ```
+//!
+//! Legality: block size must be a multiple of 32 (full warps) and at most
+//! 1024 (so one warp covers all partials). The accumulated value must be a
+//! register. Exact semantics under the interpreter's lockstep collective
+//! execution; the summation tree shape changes, which reassociates floats —
+//! covered by the testing agent's tolerance, like the real CUDA rewrite.
+
+use crate::ir::analysis::is_tree_reduction;
+use crate::ir::build::*;
+use crate::ir::expr::{IExpr, ThreadVar, VExpr};
+use crate::ir::stmt::Stmt;
+use crate::ir::types::MemSpace;
+use crate::ir::{Kernel, SharedAlloc};
+
+use super::{na, NotApplicable};
+
+pub fn apply(kernel: &Kernel) -> Result<Kernel, NotApplicable> {
+    let block = kernel.launch.block;
+    if block % 32 != 0 || block > 1024 || block < 32 {
+        return Err(na(format!(
+            "block size {block} not a multiple of 32 in [32, 1024]"
+        )));
+    }
+    // Locate `sm[tx] = <reg>; sync; <tree loop over sm>` at top level.
+    let body = &kernel.body;
+    let mut site = None;
+    for i in 0..body.len().saturating_sub(2) {
+        if let (
+            Stmt::Store {
+                space: MemSpace::Shared,
+                buf,
+                idx,
+                value,
+                ..
+            },
+            Stmt::SyncThreads,
+            Stmt::For(l),
+        ) = (&body[i], &body[i + 1], &body[i + 2])
+        {
+            if matches!(idx, IExpr::Thread(ThreadVar::ThreadIdx))
+                && is_tree_reduction(l)
+                && tree_buf(l) == Some(buf.clone())
+            {
+                if let VExpr::Var(acc) = value {
+                    site = Some((i, buf.clone(), acc.clone()));
+                    break;
+                }
+            }
+        }
+    }
+    let (i, sm_name, acc) =
+        site.ok_or_else(|| na("no shared-memory tree reduction found"))?;
+
+    // Symbolic warp count (blockDim.x >> 5) so a later block-size retune
+    // keeps the guard and the `ws` extent consistent.
+    let nwarps = ishr(bdim(), 5);
+    let ws = "ws";
+    let mut replacement = vec![
+        comment("intra-warp reduction in registers"),
+        for_shr(
+            "off",
+            c(16),
+            vec![assignf(
+                &acc,
+                fadd(fv(&acc), shfl_down(fv(&acc), iv("off"))),
+            )],
+        ),
+        comment("one partial per warp, then first warp reduces"),
+        if_(
+            eq(lane(), c(0)),
+            vec![store_sh(ws, warp(), fv(&acc))],
+        ),
+        sync(),
+        if_(
+            eq(warp(), c(0)),
+            vec![
+                declf(
+                    "wv",
+                    select(lt(lane(), nwarps), load_sh(ws, lane()), fc(0.0)),
+                ),
+                for_shr(
+                    "off",
+                    c(16),
+                    vec![assignf(
+                        "wv",
+                        fadd(fv("wv"), shfl_down(fv("wv"), iv("off"))),
+                    )],
+                ),
+                if_(eq(lane(), c(0)), vec![store_sh(ws, c(0), fv("wv"))]),
+            ],
+        ),
+        sync(),
+    ];
+
+    let mut k = kernel.clone();
+    let mut new_body: Vec<Stmt> = Vec::new();
+    new_body.extend_from_slice(&body[..i]);
+    new_body.append(&mut replacement);
+    // Everything after the tree loop, with sm[0] reads redirected to ws[0].
+    let mut rest: Vec<Stmt> = body[i + 3..].to_vec();
+    redirect_reads(&mut rest, &sm_name, ws);
+    new_body.extend(rest);
+    k.body = new_body;
+
+    // sm is dead now unless referenced elsewhere; ws holds the partials.
+    let still_used = uses_shared(&k.body, &sm_name);
+    if !still_used {
+        k.shared.retain(|s| s.name != sm_name);
+    }
+    k.shared.push(SharedAlloc {
+        name: ws.into(),
+        len: ishr(bdim(), 5),
+    });
+    Ok(k)
+}
+
+/// Which shared buffer a tree-reduction loop accumulates into.
+fn tree_buf(l: &crate::ir::ForLoop) -> Option<String> {
+    for s in &l.body {
+        if let Stmt::If { then, .. } = s {
+            for t in then {
+                if let Stmt::Store {
+                    space: MemSpace::Shared,
+                    buf,
+                    ..
+                } = t
+                {
+                    return Some(buf.clone());
+                }
+            }
+        }
+    }
+    None
+}
+
+fn redirect_reads(stmts: &mut [Stmt], from: &str, to: &str) {
+    fn expr(e: &mut VExpr, from: &str, to: &str) {
+        match e {
+            VExpr::Load {
+                space: MemSpace::Shared,
+                buf,
+                ..
+            } if buf == from => *buf = to.to_string(),
+            VExpr::Bin(_, a, b) => {
+                expr(a, from, to);
+                expr(b, from, to);
+            }
+            VExpr::Call(_, a) => expr(a, from, to),
+            VExpr::Select(_, a, b) => {
+                expr(a, from, to);
+                expr(b, from, to);
+            }
+            VExpr::ShflDown { value, .. } => expr(value, from, to),
+            _ => {}
+        }
+    }
+    for s in stmts {
+        match s {
+            Stmt::DeclF { init, .. } | Stmt::AssignF { value: init, .. } => {
+                expr(init, from, to)
+            }
+            Stmt::Store { value, .. } => expr(value, from, to),
+            Stmt::For(l) => redirect_reads(&mut l.body, from, to),
+            Stmt::If { then, els, .. } => {
+                redirect_reads(then, from, to);
+                redirect_reads(els, from, to);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn uses_shared(stmts: &[Stmt], name: &str) -> bool {
+    let mut used = false;
+    for s in stmts {
+        s.walk(&mut |s| {
+            let check = |e: &VExpr| {
+                let mut found = false;
+                fn scan(e: &VExpr, name: &str, found: &mut bool) {
+                    match e {
+                        VExpr::Load {
+                            space: MemSpace::Shared,
+                            buf,
+                            ..
+                        } if buf == name => *found = true,
+                        VExpr::Bin(_, a, b) => {
+                            scan(a, name, found);
+                            scan(b, name, found);
+                        }
+                        VExpr::Call(_, a) => scan(a, name, found),
+                        VExpr::Select(_, a, b) => {
+                            scan(a, name, found);
+                            scan(b, name, found);
+                        }
+                        VExpr::ShflDown { value, .. } => {
+                            scan(value, name, found)
+                        }
+                        _ => {}
+                    }
+                }
+                scan(e, name, &mut found);
+                found
+            };
+            match s {
+                Stmt::Store {
+                    space: MemSpace::Shared,
+                    buf,
+                    value,
+                    ..
+                } => {
+                    if buf == name || check(value) {
+                        used = true;
+                    }
+                }
+                Stmt::DeclF { init, .. }
+                | Stmt::AssignF { value: init, .. } => {
+                    if check(init) {
+                        used = true;
+                    }
+                }
+                Stmt::Store { value, .. } => {
+                    if check(value) {
+                        used = true;
+                    }
+                }
+                _ => {}
+            }
+        });
+    }
+    used
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp;
+    use crate::ir::analysis;
+    use crate::kernels;
+
+    #[test]
+    fn rewrites_rmsnorm_reduction() {
+        let base = kernels::rmsnorm::build_baseline();
+        let opt = apply(&base).unwrap();
+        let f = analysis::features(&opt);
+        assert!(f.has_warp_shuffle, "{f:?}");
+        assert!(!f.has_tree_reduction);
+        // 8 tree syncs -> 2 syncs.
+        assert!(f.syncs <= 3);
+        let src = crate::ir::printer::print_kernel(&opt);
+        assert!(src.contains("__shfl_down_sync"));
+        assert!(src.contains("ws[warp]"));
+    }
+
+    #[test]
+    fn stays_within_tolerance() {
+        let spec = kernels::rmsnorm::spec();
+        let base = kernels::rmsnorm::build_baseline();
+        let opt = apply(&base).unwrap();
+        for dims in (spec.test_shapes)() {
+            let inputs = (spec.gen_inputs)(&dims, 31);
+            let refs: Vec<(&str, Vec<f32>)> = inputs
+                .iter()
+                .map(|(n, v)| (n.as_str(), v.clone()))
+                .collect();
+            let env = interp::run_with_inputs(&opt, &dims, &refs).unwrap();
+            let want =
+                (spec.reference)(&dims, &inputs.iter().cloned().collect());
+            for buf in spec.out_bufs {
+                let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
+                assert!(
+                    rel < spec.rel_tol || abs < spec.abs_tol,
+                    "{buf}: abs {abs} rel {rel} at {dims:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn not_applicable_to_elementwise_kernels() {
+        assert!(apply(&kernels::silu::build_baseline()).is_err());
+        assert!(apply(&kernels::merge::build_baseline()).is_err());
+    }
+
+    #[test]
+    fn rejects_non_warp_multiple_blocks() {
+        let mut k = kernels::rmsnorm::build_baseline();
+        k.launch.block = 48;
+        assert!(apply(&k).is_err());
+    }
+
+    #[test]
+    fn dead_sm_allocation_removed() {
+        let opt = apply(&kernels::rmsnorm::build_baseline()).unwrap();
+        assert!(opt.shared_alloc("sm").is_none());
+        assert!(opt.shared_alloc("ws").is_some());
+    }
+}

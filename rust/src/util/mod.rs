@@ -1,0 +1,9 @@
+//! Self-contained utilities for the offline build: a deterministic PRNG,
+//! a micro-bench timer, and small text helpers. (The image's vendor set
+//! has no `rand`/`criterion`; everything here replaces them.)
+
+pub mod prng;
+pub mod timing;
+
+pub use prng::Prng;
+pub use timing::{bench, BenchStats};

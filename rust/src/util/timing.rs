@@ -1,0 +1,83 @@
+//! Micro-bench timer (criterion is not in the offline vendor set).
+//!
+//! `bench` runs warmups, then timed iterations, and reports robust stats.
+//! Bench binaries print the paper-table rows directly.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let n = samples.len();
+    BenchStats {
+        iters: n,
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        median_ns: samples[n / 2],
+        p10_ns: samples[n / 10],
+        p90_ns: samples[(n * 9) / 10],
+        min_ns: samples[0],
+    }
+}
+
+/// Geometric mean of ratios (the paper's speedup aggregation, §3.1).
+pub fn geomean(ratios: &[f64]) -> f64 {
+    assert!(!ratios.is_empty());
+    let log_sum: f64 = ratios.iter().map(|r| r.ln()).sum();
+    (log_sum / ratios.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordered_stats() {
+        let s = bench(2, 50, || {
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.p10_ns <= s.p90_ns);
+        assert!(s.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        assert!((geomean(&[2.0, 0.5]) - 1.0).abs() < 1e-12);
+        assert!((geomean(&[4.0]) - 4.0).abs() < 1e-12);
+        let g = geomean(&[1.46, 1.57, 1.00, 1.14]);
+        assert!(g > 1.25 && g < 1.32, "{g}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Integration tests over the PJRT runtime: the AOT Pallas artifacts are
+//! the ground-truth "original framework implementation" (§3.2), so these
+//! tests close the loop between the Python build path and the Rust
+//! request path.
+//!
+//! Requires `make artifacts` to have run (skipped otherwise).
+
+use astra::kernels;
+use astra::pipeline::DecodePipeline;
+use astra::runtime::{default_artifacts_dir, Engine};
+
+fn engine() -> Option<Engine> {
+    let dir = default_artifacts_dir().ok()?;
+    Engine::from_dir(&dir).ok()
+}
+
+fn rel_close(a: &[f32], b: &[f32], tol: f32) -> bool {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).all(|(x, y)| {
+        let d = (x - y).abs();
+        d <= tol * y.abs().max(1.0)
+    })
+}
+
+#[test]
+fn silu_artifact_matches_rust_reference() {
+    let Some(mut eng) = engine() else { return };
+    // oracle shape: [8, 512] -> [8, 256]
+    let mut rng = astra::util::Prng::seed(11);
+    let xg = rng.normal_vec(8 * 512, 1.5);
+    for name in ["silu_base_oracle", "silu_opt_oracle"] {
+        let out = eng.execute(name, &[xg.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 8 * 256);
+        let want = kernels::reference::silu_and_mul(8, 256, &xg);
+        // Pallas computes in f32 (no f16 rounding) — tolerance covers it.
+        assert!(rel_close(&out[0], &want, 2e-2), "{name} mismatch");
+    }
+}
+
+#[test]
+fn merge_artifact_matches_rust_reference() {
+    let Some(mut eng) = engine() else { return };
+    // oracle shape: [8, 4, 64]
+    let (s, h, d) = (8usize, 4usize, 64usize);
+    let mut rng = astra::util::Prng::seed(12);
+    let v_a = rng.normal_vec(s * h * d, 1.0);
+    let s_a = rng.normal_vec(s * h, 3.0);
+    let v_b = rng.normal_vec(s * h * d, 1.0);
+    let s_b = rng.normal_vec(s * h, 3.0);
+    let (v_want, s_want) =
+        kernels::reference::merge_attn_states_lse(s, h, d, &v_a, &s_a, &v_b, &s_b);
+    for name in ["merge_base_oracle", "merge_opt_oracle"] {
+        let out = eng
+            .execute(
+                name,
+                &[v_a.clone(), s_a.clone(), v_b.clone(), s_b.clone()],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(rel_close(&out[0], &v_want, 1e-4), "{name} v_out");
+        assert!(rel_close(&out[1], &s_want, 1e-4), "{name} s_out");
+    }
+}
+
+#[test]
+fn rmsnorm_artifact_matches_rust_reference() {
+    let Some(mut eng) = engine() else { return };
+    // oracle shape: [8, 256]
+    let (b, d) = (8usize, 256usize);
+    let mut rng = astra::util::Prng::seed(13);
+    let x = rng.normal_vec(b * d, 1.0);
+    let r = rng.normal_vec(b * d, 1.0);
+    let w: Vec<f32> = rng.normal_vec(d, 0.1).iter().map(|v| 1.0 + v).collect();
+    // Pallas reference semantics without f16 rounding:
+    let mut y_want = vec![0f32; b * d];
+    let mut rn_want = vec![0f32; b * d];
+    for row in 0..b {
+        let mut ss = 0f32;
+        for k in 0..d {
+            let hh = x[row * d + k] + r[row * d + k];
+            rn_want[row * d + k] = hh;
+            ss += hh * hh;
+        }
+        let inv = 1.0 / (ss / d as f32 + 1e-6).sqrt();
+        for k in 0..d {
+            y_want[row * d + k] = rn_want[row * d + k] * inv * w[k];
+        }
+    }
+    for name in ["rmsnorm_base_oracle", "rmsnorm_opt_oracle"] {
+        let out = eng
+            .execute(name, &[x.clone(), r.clone(), w.clone()])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(rel_close(&out[0], &y_want, 1e-3), "{name} y");
+        assert!(rel_close(&out[1], &rn_want, 1e-4), "{name} r_new");
+    }
+}
+
+#[test]
+fn baseline_and_optimized_artifacts_agree() {
+    // The drop-in-replacement property at the artifact level.
+    let Some(mut eng) = engine() else { return };
+    let mut rng = astra::util::Prng::seed(14);
+    let xg = rng.normal_vec(8 * 512, 1.0);
+    let a = eng.execute("silu_base_oracle", &[xg.clone()]).unwrap();
+    let b = eng.execute("silu_opt_oracle", &[xg]).unwrap();
+    assert!(rel_close(&a[0], &b[0], 1e-4));
+}
+
+#[test]
+fn engine_rejects_bad_inputs() {
+    let Some(mut eng) = engine() else { return };
+    assert!(eng.execute("no_such_artifact", &[]).is_err());
+    // Wrong arity.
+    assert!(eng.execute("silu_opt_oracle", &[]).is_err());
+    // Wrong element count.
+    assert!(eng.execute("silu_opt_oracle", &[vec![0.0; 17]]).is_err());
+}
+
+#[test]
+fn decode_pipeline_serves_and_variants_agree() {
+    let Some(eng) = engine() else { return };
+    let mut base = DecodePipeline::new(eng, "baseline", 7).unwrap();
+    let Some(eng2) = engine() else { return };
+    let mut opt = DecodePipeline::new(eng2, "optimized", 7).unwrap();
+
+    // Same weights (same seed) + same state => same outputs within fp
+    // tolerance: the paper's drop-in-replacement validation.
+    let mut sb = base.new_state(21);
+    let mut so = opt.new_state(21);
+    let (sout_b, _) = base.step(&mut sb).unwrap();
+    let (sout_o, _) = opt.step(&mut so).unwrap();
+    assert!(rel_close(&sout_b, &sout_o, 1e-3), "merged scores agree");
+    assert!(rel_close(&sb.x, &so.x, 2e-2), "layer outputs agree");
+
+    // Serving stats come out sane.
+    let stats = opt.serve(10, 2, 3).unwrap();
+    assert_eq!(stats.steps, 10);
+    assert!(stats.mean_us > 0.0);
+    assert!(stats.p95_us >= stats.p50_us);
+    assert!(stats.tokens_per_s > 0.0);
+}
