@@ -2,13 +2,20 @@
 //!
 //! These are the numbers the §Perf pass in EXPERIMENTS.md optimizes:
 //!   * simulator throughput (dominates profiling),
-//!   * interpreter throughput (dominates testing),
+//!   * interpreter throughput (dominates testing) — measured for BOTH the
+//!     tree-walking reference engine and the slot-compiled engine, so the
+//!     speedup of the compiled engine is part of every bench run,
 //!   * transform application (dominates coding),
 //!   * one full coordinator round trip per kernel.
 //!
 //! ```bash
-//! cargo bench --bench coordinator_hotpath
+//! cargo bench --bench coordinator_hotpath            # human-readable
+//! cargo bench --bench coordinator_hotpath -- --json  # + BENCH_hotpath.json
 //! ```
+//!
+//! `--json` writes `BENCH_hotpath.json` (per-kernel medians) next to the
+//! working directory so the perf trajectory is machine-readable across
+//! PRs.
 
 use astra::coordinator::{optimize, Config};
 use astra::interp;
@@ -17,16 +24,37 @@ use astra::sim::{self, GpuModel};
 use astra::transforms::{self, Move};
 use astra::util::timing::bench;
 
+/// Per-kernel medians collected for the JSON report.
+#[derive(Default, Clone)]
+struct KernelRow {
+    name: String,
+    simulate_us: f64,
+    interpret_ref_ms: f64,
+    interpret_ms: f64,
+    interpret_speedup: f64,
+    transform_all_us: f64,
+    optimize_ms: f64,
+}
+
 fn main() {
+    let json = std::env::args().any(|a| a == "--json");
     let model = GpuModel::h100();
+    let mut rows: Vec<KernelRow> = kernels::all_specs()
+        .iter()
+        .map(|s| KernelRow {
+            name: s.paper_name.to_string(),
+            ..Default::default()
+        })
+        .collect();
 
     println!("== L3 hot-path microbenchmarks ==\n");
 
     // Simulator: one launch estimate (called ~dozens of times per round).
-    for spec in kernels::all_specs() {
+    for (spec, row) in kernels::all_specs().iter().zip(&mut rows) {
         let k = (spec.build_baseline)();
         let d = &(spec.representative_shapes)()[0];
         let s = bench(20, 200, || sim::simulate(&model, &k, d));
+        row.simulate_us = s.median_us();
         println!(
             "simulate {:<24} median {:>8.1} us/call",
             spec.paper_name,
@@ -35,28 +63,38 @@ fn main() {
     }
     println!();
 
-    // Interpreter: one correctness case (the testing agent's unit of work).
-    for spec in kernels::all_specs() {
+    // Interpreter: one correctness case (the testing agent's unit of
+    // work), tree-walking reference vs slot-compiled engine.
+    for (spec, row) in kernels::all_specs().iter().zip(&mut rows) {
         let k = (spec.build_baseline)();
         let dims = &(spec.test_shapes)()[0];
         let inputs = (spec.gen_inputs)(dims, 1);
         let refs: Vec<(&str, Vec<f32>)> =
             inputs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
-        let s = bench(2, 10, || {
+        let r = bench(2, 10, || {
+            interp::reference::run_with_inputs(&k, dims, &refs).unwrap()
+        });
+        let c = bench(2, 10, || {
             interp::run_with_inputs(&k, dims, &refs).unwrap()
         });
+        row.interpret_ref_ms = r.median_ms();
+        row.interpret_ms = c.median_ms();
+        row.interpret_speedup = r.median_ms() / c.median_ms();
         println!(
-            "interpret {:<23} median {:>8.2} ms/case",
+            "interpret {:<23} ref {:>8.2} ms/case   compiled {:>8.3} ms/case   ({:.1}x)",
             spec.paper_name,
-            s.median_ms()
+            r.median_ms(),
+            c.median_ms(),
+            row.interpret_speedup
         );
     }
     println!();
 
     // Transforms: full optimized composition.
-    for spec in kernels::all_specs() {
+    for (spec, row) in kernels::all_specs().iter().zip(&mut rows) {
         let k = (spec.build_baseline)();
         let s = bench(10, 100, || transforms::optimized_reference(&k));
+        row.transform_all_us = s.median_us();
         println!(
             "transform-all {:<19} median {:>8.1} us",
             spec.paper_name,
@@ -77,12 +115,43 @@ fn main() {
         temperature: 0.0,
         ..Config::multi_agent()
     };
-    for spec in kernels::all_specs() {
-        let s = bench(1, 5, || optimize(&spec, &cfg));
+    for (spec, row) in kernels::all_specs().iter().zip(&mut rows) {
+        let s = bench(1, 5, || optimize(spec, &cfg));
+        row.optimize_ms = s.median_ms();
         println!(
             "optimize {:<24} median {:>8.1} ms/run (R=5)",
             spec.paper_name,
             s.median_ms()
         );
     }
+
+    if json {
+        let path = "BENCH_hotpath.json";
+        std::fs::write(path, render_json(&rows)).expect("write BENCH_hotpath.json");
+        println!("\nwrote {path}");
+    }
+}
+
+/// Hand-rolled JSON (no serde in the offline vendor set).
+fn render_json(rows: &[KernelRow]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n  \"schema\": \"astra-hotpath-v1\",\n  \"kernels\": {\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    \"{}\": {{\n      \"simulate_us\": {:.3},\n      \
+             \"interpret_ref_ms\": {:.4},\n      \"interpret_ms\": {:.4},\n      \
+             \"interpret_speedup\": {:.2},\n      \"transform_all_us\": {:.3},\n      \
+             \"optimize_ms\": {:.3}\n    }}{}\n",
+            r.name,
+            r.simulate_us,
+            r.interpret_ref_ms,
+            r.interpret_ms,
+            r.interpret_speedup,
+            r.transform_all_us,
+            r.optimize_ms,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  }\n}\n");
+    out
 }

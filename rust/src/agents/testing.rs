@@ -6,13 +6,70 @@
 //! from the LLaMA-family dimensions the kernel actually serves), while
 //! the overloaded single agent produces tiny, unrepresentative shapes —
 //! which bias every downstream profiling decision.
+//!
+//! Correctness cases are *independent* kernel launches, so [`validate`]
+//! fans them out over `std::thread::scope` workers (one per shape) and
+//! merges the per-case results **by index**, which keeps the report —
+//! including which failure is reported first and the `cases` count —
+//! identical to the old serial loop. Combined with the slot-compiled
+//! interpreter this is the coordinator's hot path (EXPERIMENTS.md §Perf).
+//!
+//! [`validate`]: TestingAgent::validate
 
 use std::collections::BTreeMap;
+use std::thread;
 
 use crate::interp;
 use crate::ir::{DimEnv, Kernel};
 use crate::kernels::KernelSpec;
 use crate::util::Prng;
+
+/// Result of interpreting one correctness case (one shape).
+struct CaseOutcome {
+    max_abs: f32,
+    max_rel: f32,
+    failure: Option<String>,
+}
+
+/// Run one correctness case: interpret the candidate on `dims` and
+/// compare against the oracle. Pure function of its inputs — safe to run
+/// on any worker thread.
+fn run_case(
+    spec: &KernelSpec,
+    kernel: &Kernel,
+    dims: &DimEnv,
+    seed: u64,
+) -> CaseOutcome {
+    let inputs = (spec.gen_inputs)(dims, seed ^ 0xA5A5);
+    let refs: Vec<(&str, Vec<f32>)> = inputs
+        .iter()
+        .map(|(n, v)| (n.as_str(), v.clone()))
+        .collect();
+    let env = match interp::run_with_inputs(kernel, dims, &refs) {
+        Ok(env) => env,
+        Err(e) => {
+            return CaseOutcome {
+                max_abs: f32::INFINITY,
+                max_rel: f32::INFINITY,
+                failure: Some(e.to_string()),
+            }
+        }
+    };
+    let input_map: BTreeMap<String, Vec<f32>> = inputs.iter().cloned().collect();
+    let want = (spec.reference)(dims, &input_map);
+    let mut max_abs = 0f32;
+    let mut max_rel = 0f32;
+    for buf in spec.out_bufs {
+        let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
+        max_abs = max_abs.max(abs);
+        max_rel = max_rel.max(rel);
+    }
+    CaseOutcome {
+        max_abs,
+        max_rel,
+        failure: None,
+    }
+}
 
 /// How representative the generated test inputs are (§5.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,36 +152,45 @@ impl TestingAgent {
     }
 
     /// Algorithm 1 line 11: validate a candidate against the oracle.
+    ///
+    /// Each correctness shape interprets on its own scoped worker thread;
+    /// results merge deterministically by shape index, so the report is
+    /// byte-identical to the old serial loop (first failing shape wins,
+    /// `cases` counts the shapes before it). Unlike the serial loop, all
+    /// shapes run to completion even when an early one fails: failures in
+    /// practice are immediate (OOB / unknown-name), so the extra work is
+    /// bounded by the slowest single case; a cooperative cancellation
+    /// token through the interpreter would recover the residual CPU
+    /// (ROADMAP follow-on).
     pub fn validate(&self, spec: &KernelSpec, kernel: &Kernel, suite: &TestSuite) -> TestReport {
+        let seed = suite.seed;
+        let outcomes: Vec<CaseOutcome> = thread::scope(|s| {
+            let handles: Vec<_> = suite
+                .correctness_shapes
+                .iter()
+                .map(|dims| s.spawn(move || run_case(spec, kernel, dims, seed)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("correctness-case worker panicked"))
+                .collect()
+        });
+
         let mut max_rel = 0f32;
         let mut max_abs = 0f32;
         let mut cases = 0usize;
-        for dims in &suite.correctness_shapes {
-            let inputs = (spec.gen_inputs)(dims, suite.seed ^ 0xA5A5);
-            let refs: Vec<(&str, Vec<f32>)> = inputs
-                .iter()
-                .map(|(n, v)| (n.as_str(), v.clone()))
-                .collect();
-            let env = match interp::run_with_inputs(kernel, dims, &refs) {
-                Ok(env) => env,
-                Err(e) => {
-                    return TestReport {
-                        pass: false,
-                        max_rel_err: f32::INFINITY,
-                        max_abs_err: f32::INFINITY,
-                        failure: Some(e.to_string()),
-                        cases,
-                    }
-                }
-            };
-            let input_map: BTreeMap<String, Vec<f32>> =
-                inputs.iter().cloned().collect();
-            let want = (spec.reference)(dims, &input_map);
-            for buf in spec.out_bufs {
-                let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
-                max_abs = max_abs.max(abs);
-                max_rel = max_rel.max(rel);
+        for o in &outcomes {
+            if let Some(f) = &o.failure {
+                return TestReport {
+                    pass: false,
+                    max_rel_err: f32::INFINITY,
+                    max_abs_err: f32::INFINITY,
+                    failure: Some(f.clone()),
+                    cases,
+                };
             }
+            max_abs = max_abs.max(o.max_abs);
+            max_rel = max_rel.max(o.max_rel);
             cases += 1;
         }
         let pass = max_rel < spec.rel_tol || max_abs < spec.abs_tol;
@@ -210,6 +276,40 @@ mod tests {
         let r = agent.validate(&spec, &k, &suite);
         assert!(!r.pass);
         assert!(r.failure.is_some(), "OOB surfaces as a runtime failure");
+    }
+
+    #[test]
+    fn parallel_validation_is_deterministic() {
+        // Two runs of the scoped-thread fan-out must produce identical
+        // reports (merge is by shape index, not completion order).
+        let agent = TestingAgent::new(TestQuality::Representative, 9);
+        for spec in kernels::all_specs() {
+            let suite = agent.generate_tests(&spec);
+            let k = (spec.build_baseline)();
+            let a = agent.validate(&spec, &k, &suite);
+            let b = agent.validate(&spec, &k, &suite);
+            assert_eq!(a.pass, b.pass);
+            assert_eq!(a.cases, b.cases);
+            assert_eq!(a.max_rel_err.to_bits(), b.max_rel_err.to_bits());
+            assert_eq!(a.max_abs_err.to_bits(), b.max_abs_err.to_bits());
+        }
+    }
+
+    #[test]
+    fn failure_reports_first_failing_shape_case_count() {
+        // The report's `cases` must count the shapes *before* the first
+        // failing one, like the old serial early-return did.
+        let agent = TestingAgent::new(TestQuality::Representative, 10);
+        let spec = kernels::silu::spec();
+        let suite = agent.generate_tests(&spec);
+        let mut k = (spec.build_baseline)();
+        use crate::ir::build::*;
+        // OOB store at index B*D (one past the end) fails on every shape.
+        k.body.push(store("out", imul(dim("B"), dim("D")), fc(0.0)));
+        let r = agent.validate(&spec, &k, &suite);
+        assert!(!r.pass);
+        assert!(r.failure.is_some());
+        assert_eq!(r.cases, 0, "first shape already fails");
     }
 
     #[test]

@@ -228,14 +228,26 @@ pub fn optimize(spec: &KernelSpec, cfg: &Config) -> Outcome {
 
     // Post-processing (§3.2): validate the winner against the oracle and
     // measure on the representative shapes, independent of the agents'
-    // internal suite.
-    let final_tester = TestingAgent::new(TestQuality::Representative, cfg.seed ^ 0xFEED);
-    let final_suite = final_tester.generate_tests(spec);
-    let final_correct = final_tester.validate(spec, &best, &final_suite).pass;
-
+    // internal suite. The oracle re-validation (which itself fans out one
+    // interpreter worker per shape) and the two per-shape perf sweeps are
+    // independent, so they run on concurrent scoped workers; results are
+    // picked up by name, keeping the outcome deterministic.
     let shapes = (spec.representative_shapes)();
-    let base_reports = sim::profile_shapes(&cfg.model, &baseline, &shapes);
-    let best_reports = sim::profile_shapes(&cfg.model, &best, &shapes);
+    let (final_correct, base_reports, best_reports) = thread::scope(|s| {
+        let correct = s.spawn(|| {
+            let final_tester =
+                TestingAgent::new(TestQuality::Representative, cfg.seed ^ 0xFEED);
+            let final_suite = final_tester.generate_tests(spec);
+            final_tester.validate(spec, &best, &final_suite).pass
+        });
+        let base = s.spawn(|| sim::profile_shapes(&cfg.model, &baseline, &shapes));
+        let opt = s.spawn(|| sim::profile_shapes(&cfg.model, &best, &shapes));
+        (
+            correct.join().expect("oracle re-validation worker panicked"),
+            base.join().expect("baseline profile worker panicked"),
+            opt.join().expect("optimized profile worker panicked"),
+        )
+    });
     let per_shape: Vec<(String, f64, f64, f64)> = shapes
         .iter()
         .zip(base_reports.iter().zip(&best_reports))

@@ -1,0 +1,602 @@
+//! Slot-compiling lowering pass: IR trees → a resolved, launch-ready
+//! program the execution machine can run without any name lookups.
+//!
+//! Run once per launch (kernel × concrete dims), this pass
+//!
+//! * resolves every register name to a dense `u32` slot (per-thread
+//!   register files become `Vec<f32>`/`Vec<i64>` indexed by slot instead
+//!   of string-keyed linear scans),
+//! * resolves every global buffer and shared array to an index into a
+//!   dense vector (no `BTreeMap`/`HashMap` lookups on loads/stores),
+//! * folds problem dims, `blockDim` and `gridDim` to constants (the
+//!   launch geometry is fixed) and constant-folds integer arithmetic,
+//! * flattens the `VExpr`/`IExpr`/`BExpr` trees into compact pools
+//!   addressed by `u32` ids, and the `Stmt` tree into a pool of resolved
+//!   instructions whose bodies are contiguous [`StmtRange`]s,
+//! * precomputes the collective/private classification per statement so
+//!   the machine never re-walks statement trees at runtime.
+//!
+//! Name-resolution errors (unknown vars/buffers/dims) surface at compile
+//! time as the same [`EvalError`] variants the tree-walking interpreter
+//! reported at runtime, wrapped in [`InterpError::Eval`].
+
+use crate::ir::analysis::{is_collective, SlotResolver};
+use crate::ir::expr::{
+    eval_ibin, BExpr, CmpOp, FBinOp, IBinOp, IExpr, MathFn, ThreadVar, VExpr,
+};
+use crate::ir::kernel::{eval_static, BufIo};
+use crate::ir::stmt::{Stmt, Update};
+use crate::ir::types::{DType, MemSpace};
+use crate::ir::{DimEnv, Kernel};
+
+use super::eval::EvalError;
+use super::machine::InterpError;
+
+/// Resolved integer (index) expression. Dims, `blockDim` and `gridDim`
+/// are folded to `Const` at compile time.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum CIExpr {
+    Const(i64),
+    /// Per-thread integer register slot.
+    Slot(u32),
+    ThreadIdx,
+    BlockIdx,
+    Lane,
+    Warp,
+    Bin(IBinOp, u32, u32),
+}
+
+/// Resolved floating (value) expression.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum CVExpr {
+    Const(f32),
+    /// Per-thread float register slot.
+    Slot(u32),
+    FromInt(u32),
+    Bin(FBinOp, u32, u32),
+    Call(MathFn, u32),
+    LoadGlobal { buf: u32, idx: u32 },
+    LoadShared { buf: u32, idx: u32 },
+    ShflDown { value: u32, offset: u32 },
+    Select { cond: u32, a: u32, b: u32 },
+}
+
+/// Resolved boolean expression.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum CBExpr {
+    Cmp(CmpOp, u32, u32),
+    And(u32, u32),
+    Or(u32, u32),
+    Not(u32),
+}
+
+/// Contiguous run of statements in the program's statement pool.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct StmtRange {
+    pub start: u32,
+    pub end: u32,
+}
+
+impl StmtRange {
+    pub fn is_empty(self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn len(self) -> u32 {
+        self.end - self.start
+    }
+}
+
+/// Resolved loop update.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum CUpdate {
+    /// `var += <iexpr>`
+    Add(u32),
+    /// `var >>= k`
+    Shr(u32),
+}
+
+/// Resolved statement. Comments are dropped at compile time.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum CStmt {
+    /// Decl and Assign collapse: both write the resolved slot.
+    AssignF { slot: u32, value: u32 },
+    AssignI { slot: u32, value: u32 },
+    StoreGlobal { buf: u32, idx: u32, value: u32 },
+    StoreShared { buf: u32, idx: u32, value: u32 },
+    For {
+        var: u32,
+        init: u32,
+        cmp: CmpOp,
+        bound: u32,
+        update: CUpdate,
+        body: StmtRange,
+    },
+    If {
+        cond: u32,
+        then: StmtRange,
+        els: StmtRange,
+    },
+    Sync,
+}
+
+/// One resolved global buffer parameter.
+#[derive(Debug, Clone)]
+pub struct ParamSlot {
+    pub name: String,
+    /// Rounds on store (and on input entry when `rounds_input`).
+    pub f16: bool,
+    /// f16 input data is f16 in memory: round on launch entry.
+    pub rounds_input: bool,
+    /// Concrete length in elements for the launch dims.
+    pub len: usize,
+}
+
+/// One resolved shared-memory allocation.
+#[derive(Debug, Clone)]
+pub struct SharedSlot {
+    pub name: String,
+    pub len: usize,
+}
+
+/// A kernel lowered for one launch: slot-resolved instruction pools plus
+/// concrete launch geometry. Execute with
+/// [`super::machine::run_compiled`].
+#[derive(Debug, Clone)]
+pub struct CompiledKernel {
+    pub kernel_name: String,
+    /// Threads per block.
+    pub block: i64,
+    /// Number of blocks.
+    pub grid: i64,
+    /// Float register slots per thread.
+    pub nf: usize,
+    /// Integer register slots per thread.
+    pub ni: usize,
+    /// Global buffer parameters, in `kernel.params` order (= buf index).
+    pub params: Vec<ParamSlot>,
+    /// Shared arrays, in `kernel.shared` order (= buf index).
+    pub shared: Vec<SharedSlot>,
+    /// Integer slot names (error messages: non-uniform loop vars).
+    pub(crate) i_slot_names: Vec<String>,
+    pub(crate) iexprs: Vec<CIExpr>,
+    pub(crate) vexprs: Vec<CVExpr>,
+    pub(crate) bexprs: Vec<CBExpr>,
+    pub(crate) stmts: Vec<CStmt>,
+    /// Parallel to `stmts`: statement requires lockstep execution.
+    pub(crate) collective: Vec<bool>,
+    /// The kernel body.
+    pub(crate) top: StmtRange,
+}
+
+/// Lower `kernel` for a launch over concrete `dims`.
+pub fn compile(kernel: &Kernel, dims: &DimEnv) -> Result<CompiledKernel, InterpError> {
+    let block = kernel.launch.block as i64;
+    let grid = kernel.grid_size(dims);
+
+    let params = kernel
+        .params
+        .iter()
+        .map(|p| ParamSlot {
+            name: p.name.clone(),
+            f16: p.dtype == DType::F16,
+            rounds_input: p.dtype == DType::F16
+                && matches!(p.io, BufIo::In | BufIo::InOut),
+            len: kernel.buf_len(&p.name, dims) as usize,
+        })
+        .collect();
+    let shared = kernel
+        .shared
+        .iter()
+        .map(|s| SharedSlot {
+            name: s.name.clone(),
+            len: eval_static(&s.len, dims, kernel.launch.block) as usize,
+        })
+        .collect();
+
+    let mut lo = Lowerer {
+        kernel,
+        dims,
+        block,
+        grid,
+        fres: SlotResolver::new(),
+        ires: SlotResolver::new(),
+        iexprs: Vec::new(),
+        vexprs: Vec::new(),
+        bexprs: Vec::new(),
+        stmts: Vec::new(),
+        collective: Vec::new(),
+    };
+    let top = lo.lower_body(&kernel.body)?;
+
+    Ok(CompiledKernel {
+        kernel_name: kernel.name.clone(),
+        block,
+        grid,
+        nf: lo.fres.slot_count(),
+        ni: lo.ires.slot_count(),
+        params,
+        shared,
+        i_slot_names: lo.ires.into_slot_names(),
+        iexprs: lo.iexprs,
+        vexprs: lo.vexprs,
+        bexprs: lo.bexprs,
+        stmts: lo.stmts,
+        collective: lo.collective,
+        top,
+    })
+}
+
+struct Lowerer<'a> {
+    kernel: &'a Kernel,
+    dims: &'a DimEnv,
+    block: i64,
+    grid: i64,
+    fres: SlotResolver,
+    ires: SlotResolver,
+    iexprs: Vec<CIExpr>,
+    vexprs: Vec<CVExpr>,
+    bexprs: Vec<CBExpr>,
+    stmts: Vec<CStmt>,
+    collective: Vec<bool>,
+}
+
+impl<'a> Lowerer<'a> {
+    /// Lower a body so its statements land *contiguously* in the pool
+    /// (nested bodies are emitted first, then this body's statements).
+    fn lower_body(&mut self, stmts: &[Stmt]) -> Result<StmtRange, InterpError> {
+        let mut out: Vec<(CStmt, bool)> = Vec::with_capacity(stmts.len());
+        for s in stmts {
+            if matches!(s, Stmt::Comment(_)) {
+                continue;
+            }
+            let coll = is_collective(s);
+            let cs = self.lower_stmt(s)?;
+            out.push((cs, coll));
+        }
+        let start = self.stmts.len() as u32;
+        for (cs, coll) in out {
+            self.stmts.push(cs);
+            self.collective.push(coll);
+        }
+        Ok(StmtRange {
+            start,
+            end: self.stmts.len() as u32,
+        })
+    }
+
+    fn lower_stmt(&mut self, s: &Stmt) -> Result<CStmt, InterpError> {
+        Ok(match s {
+            Stmt::Comment(_) => unreachable!("comments dropped by lower_body"),
+            // RHS is lowered *before* the target binds, so a Decl whose
+            // initializer reads the declared name fails with UnknownVar,
+            // like the tree-walking interpreter did at runtime.
+            Stmt::DeclF { name, init } | Stmt::AssignF { name, value: init } => {
+                let value = self.lower_v(init)?;
+                let slot = self.fres.resolve_or_bind(name);
+                CStmt::AssignF { slot, value }
+            }
+            Stmt::DeclI { name, init } | Stmt::AssignI { name, value: init } => {
+                let value = self.lower_i(init)?;
+                let slot = self.ires.resolve_or_bind(name);
+                CStmt::AssignI { slot, value }
+            }
+            Stmt::Store {
+                space,
+                buf,
+                idx,
+                value,
+                ..
+            } => {
+                let idx = self.lower_i(idx)?;
+                let value = self.lower_v(value)?;
+                match space {
+                    MemSpace::Global => CStmt::StoreGlobal {
+                        buf: self.global_slot(buf)?,
+                        idx,
+                        value,
+                    },
+                    MemSpace::Shared => CStmt::StoreShared {
+                        buf: self.shared_slot(buf)?,
+                        idx,
+                        value,
+                    },
+                }
+            }
+            Stmt::SyncThreads => CStmt::Sync,
+            Stmt::If { cond, then, els } => {
+                let cond = self.lower_b(cond)?;
+                let then = self.lower_body(then)?;
+                let els = self.lower_body(els)?;
+                CStmt::If { cond, then, els }
+            }
+            Stmt::For(l) => {
+                // init is evaluated in the enclosing scope; bound, body
+                // and update see the (fresh, shadowing) loop-var slot.
+                // The update expression is lowered *after* the body so a
+                // step that reads a body-declared variable resolves, like
+                // the reference machine (which evaluates the update only
+                // after the first body iteration has bound the name).
+                let init = self.lower_i(&l.init)?;
+                let (var, pos) = self.ires.bind_scoped(&l.var);
+                let bound = self.lower_i(&l.bound)?;
+                let body = self.lower_body(&l.body)?;
+                let update = match &l.update {
+                    Update::AddAssign(e) => CUpdate::Add(self.lower_i(e)?),
+                    Update::ShrAssign(k) => CUpdate::Shr(*k),
+                };
+                self.ires.unbind(pos);
+                CStmt::For {
+                    var,
+                    init,
+                    cmp: l.cmp,
+                    bound,
+                    update,
+                    body,
+                }
+            }
+        })
+    }
+
+    fn lower_i(&mut self, e: &IExpr) -> Result<u32, InterpError> {
+        let ce = match e {
+            IExpr::Const(c) => CIExpr::Const(*c),
+            IExpr::Dim(d) => CIExpr::Const(
+                *self
+                    .dims
+                    .get(d)
+                    .ok_or_else(|| EvalError::UnknownVar(d.clone()))?,
+            ),
+            IExpr::Var(v) => CIExpr::Slot(
+                self.ires
+                    .resolve(v)
+                    .ok_or_else(|| EvalError::UnknownVar(v.clone()))?,
+            ),
+            IExpr::Thread(tv) => match tv {
+                ThreadVar::ThreadIdx => CIExpr::ThreadIdx,
+                ThreadVar::BlockIdx => CIExpr::BlockIdx,
+                ThreadVar::BlockDim => CIExpr::Const(self.block),
+                ThreadVar::GridDim => CIExpr::Const(self.grid),
+                ThreadVar::LaneId => CIExpr::Lane,
+                ThreadVar::WarpId => CIExpr::Warp,
+            },
+            IExpr::Bin(op, a, b) => {
+                let ia = self.lower_i(a)?;
+                let ib = self.lower_i(b)?;
+                match (self.iexprs[ia as usize], self.iexprs[ib as usize]) {
+                    (CIExpr::Const(x), CIExpr::Const(y)) => {
+                        CIExpr::Const(eval_ibin(*op, x, y))
+                    }
+                    _ => CIExpr::Bin(*op, ia, ib),
+                }
+            }
+        };
+        Ok(self.push_i(ce))
+    }
+
+    fn lower_v(&mut self, e: &VExpr) -> Result<u32, InterpError> {
+        let ce = match e {
+            VExpr::Const(c) => CVExpr::Const(*c as f32),
+            VExpr::Var(v) => CVExpr::Slot(
+                self.fres
+                    .resolve(v)
+                    .ok_or_else(|| EvalError::UnknownVar(v.clone()))?,
+            ),
+            VExpr::FromInt(i) => CVExpr::FromInt(self.lower_i(i)?),
+            VExpr::Bin(op, a, b) => {
+                let va = self.lower_v(a)?;
+                let vb = self.lower_v(b)?;
+                CVExpr::Bin(*op, va, vb)
+            }
+            VExpr::Call(f, a) => CVExpr::Call(*f, self.lower_v(a)?),
+            VExpr::Load {
+                space, buf, idx, ..
+            } => {
+                let idx = self.lower_i(idx)?;
+                match space {
+                    MemSpace::Global => CVExpr::LoadGlobal {
+                        buf: self.global_slot(buf)?,
+                        idx,
+                    },
+                    MemSpace::Shared => CVExpr::LoadShared {
+                        buf: self.shared_slot(buf)?,
+                        idx,
+                    },
+                }
+            }
+            VExpr::ShflDown { value, offset } => {
+                let offset = self.lower_i(offset)?;
+                let value = self.lower_v(value)?;
+                CVExpr::ShflDown { value, offset }
+            }
+            VExpr::Select(c, a, b) => {
+                let cond = self.lower_b(c)?;
+                let a = self.lower_v(a)?;
+                let b = self.lower_v(b)?;
+                CVExpr::Select { cond, a, b }
+            }
+        };
+        Ok(self.push_v(ce))
+    }
+
+    fn lower_b(&mut self, e: &BExpr) -> Result<u32, InterpError> {
+        let ce = match e {
+            BExpr::Cmp(op, a, b) => {
+                let ia = self.lower_i(a)?;
+                let ib = self.lower_i(b)?;
+                CBExpr::Cmp(*op, ia, ib)
+            }
+            BExpr::And(a, b) => {
+                let ba = self.lower_b(a)?;
+                let bb = self.lower_b(b)?;
+                CBExpr::And(ba, bb)
+            }
+            BExpr::Or(a, b) => {
+                let ba = self.lower_b(a)?;
+                let bb = self.lower_b(b)?;
+                CBExpr::Or(ba, bb)
+            }
+            BExpr::Not(a) => CBExpr::Not(self.lower_b(a)?),
+        };
+        self.bexprs.push(ce);
+        Ok((self.bexprs.len() - 1) as u32)
+    }
+
+    fn push_i(&mut self, e: CIExpr) -> u32 {
+        self.iexprs.push(e);
+        (self.iexprs.len() - 1) as u32
+    }
+
+    fn push_v(&mut self, e: CVExpr) -> u32 {
+        self.vexprs.push(e);
+        (self.vexprs.len() - 1) as u32
+    }
+
+    fn global_slot(&self, name: &str) -> Result<u32, InterpError> {
+        self.kernel
+            .params
+            .iter()
+            .position(|p| p.name == name)
+            .map(|i| i as u32)
+            .ok_or_else(|| EvalError::UnknownBuffer(name.to_string()).into())
+    }
+
+    fn shared_slot(&self, name: &str) -> Result<u32, InterpError> {
+        self.kernel
+            .shared
+            .iter()
+            .position(|s| s.name == name)
+            .map(|i| i as u32)
+            .ok_or_else(|| EvalError::UnknownBuffer(name.to_string()).into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::kernels;
+
+    #[test]
+    fn compiles_all_baselines_on_their_test_shapes() {
+        for spec in kernels::all_specs() {
+            let k = (spec.build_baseline)();
+            for dims in (spec.test_shapes)() {
+                let p = compile(&k, &dims).unwrap();
+                assert!(p.grid > 0);
+                assert_eq!(p.params.len(), k.params.len());
+                assert_eq!(p.stmts.len(), p.collective.len());
+                assert!(!p.top.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn dims_and_block_geometry_fold_to_constants() {
+        // y[i] = x[i] * 2 over a grid-stride loop: after folding, the
+        // only non-constant iexpr leaves are thread coords and slots.
+        let k = Kernel {
+            name: "scale".into(),
+            dims: vec!["N".into()],
+            params: vec![
+                crate::ir::BufParam {
+                    name: "x".into(),
+                    dtype: DType::F32,
+                    len: dim("N"),
+                    io: BufIo::In,
+                },
+                crate::ir::BufParam {
+                    name: "y".into(),
+                    dtype: DType::F32,
+                    len: dim("N"),
+                    io: BufIo::Out,
+                },
+            ],
+            shared: vec![],
+            launch: crate::ir::Launch {
+                grid: c(2),
+                block: 32,
+            },
+            body: vec![for_up(
+                "i",
+                iadd(imul(bx(), bdim()), tx()),
+                dim("N"),
+                imul(bdim(), gdim()),
+                vec![store("y", iv("i"), fmul(load("x", iv("i")), fc(2.0)))],
+            )],
+        };
+        let mut dims = DimEnv::new();
+        dims.insert("N".into(), 100);
+        let p = compile(&k, &dims).unwrap();
+        assert_eq!(p.block, 32);
+        assert_eq!(p.grid, 2);
+        // The loop step blockDim*gridDim folds to the constant 64.
+        assert!(p
+            .iexprs
+            .iter()
+            .any(|e| matches!(e, CIExpr::Const(64))));
+        // The bound Dim("N") folds to 100.
+        assert!(p
+            .iexprs
+            .iter()
+            .any(|e| matches!(e, CIExpr::Const(100))));
+        assert_eq!(p.ni, 1, "one integer slot: the loop var");
+        assert_eq!(p.nf, 0);
+    }
+
+    #[test]
+    fn unknown_names_error_at_compile_time() {
+        let k = Kernel {
+            name: "bad".into(),
+            dims: vec![],
+            params: vec![crate::ir::BufParam {
+                name: "out".into(),
+                dtype: DType::F32,
+                len: c(4),
+                io: BufIo::Out,
+            }],
+            shared: vec![],
+            launch: crate::ir::Launch { grid: c(1), block: 4 },
+            body: vec![store("out", tx(), fv("nope"))],
+        };
+        let dims = DimEnv::new();
+        match compile(&k, &dims) {
+            Err(InterpError::Eval(EvalError::UnknownVar(v))) => {
+                assert_eq!(v, "nope")
+            }
+            other => panic!("expected UnknownVar, got {other:?}"),
+        }
+
+        let mut k2 = k.clone();
+        k2.body = vec![store("missing", tx(), fc(1.0))];
+        assert!(matches!(
+            compile(&k2, &dims),
+            Err(InterpError::Eval(EvalError::UnknownBuffer(_)))
+        ));
+    }
+
+    #[test]
+    fn comments_are_dropped_and_bodies_are_contiguous() {
+        let k = Kernel {
+            name: "c".into(),
+            dims: vec![],
+            params: vec![crate::ir::BufParam {
+                name: "out".into(),
+                dtype: DType::F32,
+                len: c(8),
+                io: BufIo::Out,
+            }],
+            shared: vec![],
+            launch: crate::ir::Launch { grid: c(1), block: 8 },
+            body: vec![
+                comment("hello"),
+                declf("v", fc(1.0)),
+                if_(lt(tx(), c(4)), vec![store("out", tx(), fv("v"))]),
+            ],
+        };
+        let p = compile(&k, &DimEnv::new()).unwrap();
+        // decl + if at top level; store nested: 3 statements, no comment.
+        assert_eq!(p.stmts.len(), 3);
+        assert_eq!(p.top.len(), 2);
+    }
+}

@@ -1,23 +1,49 @@
-//! Grid/block execution machine: private per-thread recursion + lockstep
-//! two-phase collective execution.
+//! Slot-indexed execution machine for compiled kernels.
+//!
+//! Executes the resolved program produced by [`super::compile`]: dense
+//! register files (`Vec<f32>`/`Vec<i64>` indexed by `thread × slot`),
+//! global buffers and shared arrays addressed by integer index, and
+//! integer/boolean evaluation that cannot fail (names were resolved at
+//! compile time), so only float evaluation carries a `Result` (for
+//! out-of-bounds loads).
+//!
+//! Semantics are identical to the tree-walking reference machine
+//! ([`super::reference`]): private statements run per-thread (batched
+//! thread-major over runs of consecutive private statements), collective
+//! statements run in lockstep with two-phase evaluate/commit, f16
+//! buffers round on store and on input entry, and the same
+//! [`InterpError`] surface (including `STEP_LIMIT`, with ticks batched
+//! per basic block instead of per statement) reports failures to the
+//! testing agent.
+//!
+//! One documented deviation: a register that is declared only inside a
+//! conditionally-executed branch and read afterwards reads `0` here
+//! (slots are zero-initialized per block), where the reference machine
+//! raises `UnknownVar` for the threads that skipped the declaration.
+//! No kernel in the baseline + transform-catalog space produces that
+//! shape — the differential suite (`rust/tests/differential.rs`) pins
+//! both engines bit-identical (results *and* errors) over that whole
+//! space; an exact match would need per-slot init tracking on the read
+//! hot path (see ROADMAP follow-ons).
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 
-use crate::ir::analysis::is_collective;
-use crate::ir::expr::VExpr;
-use crate::ir::kernel::{eval_static, BufIo};
-use crate::ir::stmt::{ForLoop, Stmt, Update};
-use crate::ir::types::{f32_to_f16_round, DType, MemSpace};
+use crate::ir::expr::{eval_cmp, eval_ibin};
+use crate::ir::types::{f32_to_f16_round, DType};
 use crate::ir::{DimEnv, Kernel};
 
-use super::eval::{
-    eval_b, eval_i, eval_v, EvalError, MemView, Regs, ThreadId, WARP_SIZE,
+use super::compile::{
+    compile, CBExpr, CIExpr, CStmt, CUpdate, CVExpr, CompiledKernel, StmtRange,
 };
+use super::eval::{fastmath_quantize, EvalError, WARP_SIZE};
 
 /// Hard cap on interpreted statement executions per launch — transforms
 /// gone wrong (e.g. a broken loop update) fail fast instead of hanging the
 /// testing agent.
 const STEP_LIMIT: u64 = 200_000_000;
+
+/// Mantissa bits the fast-math intrinsics keep (see [`super::eval`]).
+const FAST_BITS: u32 = 16;
 
 /// A named global buffer.
 #[derive(Debug, Clone)]
@@ -107,311 +133,501 @@ impl From<EvalError> for InterpError {
     }
 }
 
-/// Execute one kernel launch over `env`.
+/// Execute one kernel launch over `env`: compile for these dims, then run
+/// the resolved program.
 pub fn run(
     kernel: &Kernel,
     dims: &DimEnv,
     env: &mut ExecEnv,
 ) -> Result<(), InterpError> {
+    let prog = compile(kernel, dims)?;
+    run_compiled(&prog, env)
+}
+
+/// Execute an already-compiled launch over `env`. Buffer lengths are
+/// validated against the compiled geometry; f16 input buffers round on
+/// entry; buffers are moved into dense storage for the launch and moved
+/// back afterwards (on error too, so `env` stays usable).
+pub fn run_compiled(
+    prog: &CompiledKernel,
+    env: &mut ExecEnv,
+) -> Result<(), InterpError> {
     // Validate buffer lengths.
-    for p in &kernel.params {
-        let expect = kernel.buf_len(&p.name, dims) as usize;
+    for p in &prog.params {
         let got = env.get(&p.name).len();
-        if expect != got {
+        if p.len != got {
             return Err(InterpError::BadBufferLen {
                 buf: p.name.clone(),
-                expect,
+                expect: p.len,
                 got,
             });
         }
     }
-    // Input data of f16 buffers is f16 in memory: round on entry.
-    for p in &kernel.params {
-        if p.dtype == DType::F16 && matches!(p.io, BufIo::In | BufIo::InOut) {
-            let b = env.bufs.get_mut(&p.name).unwrap();
-            for v in &mut b.data {
-                *v = f32_to_f16_round(*v);
+    // Move buffers into slot-indexed storage for the launch.
+    let mut global: Vec<GBuf> = prog
+        .params
+        .iter()
+        .map(|p| {
+            let b = env
+                .bufs
+                .get_mut(&p.name)
+                .unwrap_or_else(|| panic!("unknown buffer {}", p.name));
+            let mut data = std::mem::take(&mut b.data);
+            // Input data of f16 buffers is f16 in memory: round on entry.
+            if p.rounds_input {
+                for v in &mut data {
+                    *v = f32_to_f16_round(*v);
+                }
             }
-        }
-    }
+            GBuf { data, f16: p.f16 }
+        })
+        .collect();
 
-    let grid = kernel.grid_size(dims);
-    let block = kernel.launch.block as i64;
-    // One body clone per launch (not per block): the machine needs the
-    // statements unborrowed from `kernel` while it mutates buffers.
-    let body = kernel.body.clone();
+    let nf = prog.nf;
+    let ni = prog.ni;
+    let block = prog.block as usize;
     let mut m = Machine {
-        kernel,
-        dims,
-        env,
+        prog,
+        global: &mut global,
+        shared: prog.shared.iter().map(|s| vec![0.0f32; s.len]).collect(),
+        fregs: vec![0.0f32; block * nf],
+        iregs: vec![0i64; block * ni],
+        bx: 0,
         steps: 0,
     };
-    for bx in 0..grid {
-        m.run_block(&body, bx, block, grid)?;
+    let result = m.run_grid();
+
+    for (p, g) in prog.params.iter().zip(global) {
+        env.bufs.get_mut(&p.name).unwrap().data = g.data;
     }
-    Ok(())
+    result
+}
+
+/// Global buffer in launch form: dense storage + store-rounding flag.
+struct GBuf {
+    data: Vec<f32>,
+    f16: bool,
 }
 
 struct Machine<'a> {
-    kernel: &'a Kernel,
-    dims: &'a DimEnv,
-    env: &'a mut ExecEnv,
+    prog: &'a CompiledKernel,
+    global: &'a mut Vec<GBuf>,
+    shared: Vec<Vec<f32>>,
+    /// Per-thread float registers, `thread * nf + slot`.
+    fregs: Vec<f32>,
+    /// Per-thread integer registers, `thread * ni + slot`.
+    iregs: Vec<i64>,
+    bx: i64,
     steps: u64,
 }
 
-/// Mutable state of one block in flight.
-struct BlockState {
-    threads: Vec<Regs>,
-    shared: HashMap<String, Vec<f32>>,
-    bx: i64,
-    bdim: i64,
-    gdim: i64,
-}
+impl<'a> Machine<'a> {
+    fn run_grid(&mut self) -> Result<(), InterpError> {
+        let active: Vec<i64> = (0..self.prog.block).collect();
+        let top = self.prog.top;
+        for bx in 0..self.prog.grid {
+            self.bx = bx;
+            self.reset_block();
+            self.exec_range(top, &active)?;
+        }
+        Ok(())
+    }
 
-impl BlockState {
-    fn tid(&self, t: usize) -> ThreadId {
-        ThreadId {
-            tx: t as i64,
-            bx: self.bx,
-            bdim: self.bdim,
-            gdim: self.gdim,
+    /// Zero registers and shared memory for a fresh block.
+    fn reset_block(&mut self) {
+        self.fregs.fill(0.0);
+        self.iregs.fill(0);
+        for s in &mut self.shared {
+            s.fill(0.0);
         }
     }
-}
 
-impl<'a> Machine<'a> {
-    fn tick(&mut self) -> Result<(), InterpError> {
-        self.steps += 1;
+    #[inline]
+    fn tick(&mut self, n: u64) -> Result<(), InterpError> {
+        self.steps += n;
         if self.steps > STEP_LIMIT {
             return Err(InterpError::IterationLimit);
         }
         Ok(())
     }
 
-    fn run_block(
-        &mut self,
-        body: &[Stmt],
-        bx: i64,
-        block: i64,
-        grid: i64,
-    ) -> Result<(), InterpError> {
-        let mut shared = HashMap::new();
-        for s in &self.kernel.shared {
-            let len =
-                eval_static(&s.len, self.dims, self.kernel.launch.block) as usize;
-            shared.insert(s.name.clone(), vec![0.0f32; len]);
-        }
-        let mut bs = BlockState {
-            threads: vec![Regs::default(); block as usize],
-            shared,
-            bx,
-            bdim: block,
-            gdim: grid,
-        };
-        let active: Vec<usize> = (0..block as usize).collect();
-        self.exec_stmts(body, &mut bs, &active)
+    // ---- register files --------------------------------------------------
+
+    #[inline]
+    fn get_i(&self, t: i64, slot: u32) -> i64 {
+        self.iregs[t as usize * self.prog.ni + slot as usize]
     }
 
-    fn exec_stmts(
-        &mut self,
-        stmts: &[Stmt],
-        bs: &mut BlockState,
-        active: &[usize],
-    ) -> Result<(), InterpError> {
-        for s in stmts {
-            if is_collective(s) {
-                self.exec_collective(s, bs, active)?;
-            } else {
-                for &t in active {
-                    self.exec_private(s, bs, t)?;
+    #[inline]
+    fn set_i(&mut self, t: i64, slot: u32, v: i64) {
+        self.iregs[t as usize * self.prog.ni + slot as usize] = v;
+    }
+
+    #[inline]
+    fn set_f(&mut self, t: i64, slot: u32, v: f32) {
+        self.fregs[t as usize * self.prog.nf + slot as usize] = v;
+    }
+
+    // ---- expression evaluation -------------------------------------------
+
+    /// Integer evaluation is infallible: every name was resolved at
+    /// compile time and there is nothing left that can fail.
+    fn eval_i(&self, id: u32, t: i64) -> i64 {
+        match self.prog.iexprs[id as usize] {
+            CIExpr::Const(c) => c,
+            CIExpr::Slot(s) => self.get_i(t, s),
+            CIExpr::ThreadIdx => t,
+            CIExpr::BlockIdx => self.bx,
+            CIExpr::Lane => t % WARP_SIZE,
+            CIExpr::Warp => t / WARP_SIZE,
+            CIExpr::Bin(op, a, b) => {
+                eval_ibin(op, self.eval_i(a, t), self.eval_i(b, t))
+            }
+        }
+    }
+
+    fn eval_b(&self, id: u32, t: i64) -> bool {
+        match self.prog.bexprs[id as usize] {
+            CBExpr::Cmp(op, a, b) => {
+                eval_cmp(op, self.eval_i(a, t), self.eval_i(b, t))
+            }
+            CBExpr::And(a, b) => self.eval_b(a, t) && self.eval_b(b, t),
+            CBExpr::Or(a, b) => self.eval_b(a, t) || self.eval_b(b, t),
+            CBExpr::Not(a) => !self.eval_b(a, t),
+        }
+    }
+
+    /// Float evaluation: only loads (OOB) and misplaced shuffles can fail.
+    /// `collective` enables `__shfl_down_sync` resolution against peer
+    /// lanes (evaluating the shuffled expression in the source thread's
+    /// context, exactly like the reference machine).
+    fn eval_v(&self, id: u32, t: i64, collective: bool) -> Result<f32, EvalError> {
+        Ok(match self.prog.vexprs[id as usize] {
+            CVExpr::Const(c) => c,
+            CVExpr::Slot(s) => {
+                self.fregs[t as usize * self.prog.nf + s as usize]
+            }
+            CVExpr::FromInt(i) => self.eval_i(i, t) as f32,
+            CVExpr::Bin(op, a, b) => {
+                let x = self.eval_v(a, t, collective)?;
+                let y = self.eval_v(b, t, collective)?;
+                match op {
+                    crate::ir::FBinOp::Add => x + y,
+                    crate::ir::FBinOp::Sub => x - y,
+                    crate::ir::FBinOp::Mul => x * y,
+                    crate::ir::FBinOp::Div => x / y,
+                    crate::ir::FBinOp::Min => x.min(y),
+                    crate::ir::FBinOp::Max => x.max(y),
                 }
+            }
+            CVExpr::Call(f, a) => {
+                let x = self.eval_v(a, t, collective)?;
+                match f {
+                    crate::ir::MathFn::Exp => x.exp(),
+                    crate::ir::MathFn::Log => x.ln(),
+                    crate::ir::MathFn::Sqrt => x.sqrt(),
+                    crate::ir::MathFn::Rsqrt => 1.0 / x.sqrt(),
+                    crate::ir::MathFn::Abs => x.abs(),
+                    crate::ir::MathFn::FastExp => {
+                        fastmath_quantize(x.exp(), FAST_BITS)
+                    }
+                    crate::ir::MathFn::FastLog => {
+                        fastmath_quantize(x.ln(), FAST_BITS)
+                    }
+                    crate::ir::MathFn::FastRecip => {
+                        fastmath_quantize(1.0 / x, FAST_BITS)
+                    }
+                }
+            }
+            CVExpr::LoadGlobal { buf, idx } => {
+                let i = self.eval_i(idx, t);
+                let d = &self.global[buf as usize].data;
+                match d.get(i as usize) {
+                    Some(v) => *v,
+                    None => {
+                        return Err(EvalError::OutOfBounds {
+                            buf: self.prog.params[buf as usize].name.clone(),
+                            idx: i,
+                            len: d.len(),
+                        })
+                    }
+                }
+            }
+            CVExpr::LoadShared { buf, idx } => {
+                let i = self.eval_i(idx, t);
+                let d = &self.shared[buf as usize];
+                match d.get(i as usize) {
+                    Some(v) => *v,
+                    None => {
+                        return Err(EvalError::OutOfBounds {
+                            buf: self.prog.shared[buf as usize].name.clone(),
+                            idx: i,
+                            len: d.len(),
+                        })
+                    }
+                }
+            }
+            CVExpr::ShflDown { value, offset } => {
+                if !collective {
+                    return Err(EvalError::ShuffleOutsideCollective);
+                }
+                let off = self.eval_i(offset, t);
+                // Value of the expression in lane (lane+off) of the same
+                // warp; out-of-range lanes return the caller's own. The
+                // shuffled expression evaluates with shuffles *disabled*,
+                // exactly like the reference machine's resolver (which
+                // passes `shfl: None` to the inner eval), so a nested
+                // shuffle is rejected identically by both engines.
+                let src_lane = t % WARP_SIZE + off;
+                let src = if (0..WARP_SIZE).contains(&src_lane) {
+                    let cand = (t / WARP_SIZE) * WARP_SIZE + src_lane;
+                    if cand < self.prog.block {
+                        cand
+                    } else {
+                        t
+                    }
+                } else {
+                    t
+                };
+                self.eval_v(value, src, false)?
+            }
+            CVExpr::Select { cond, a, b } => {
+                if self.eval_b(cond, t) {
+                    self.eval_v(a, t, collective)?
+                } else {
+                    self.eval_v(b, t, collective)?
+                }
+            }
+        })
+    }
+
+    // ---- statement execution ---------------------------------------------
+
+    /// Execute a statement range for the active threads, dispatching on
+    /// the precomputed collective flags. Runs of consecutive private
+    /// statements execute thread-major (each thread completes the whole
+    /// run before the next starts) — equivalent for the race-free kernels
+    /// the agents produce, and much kinder to the caches.
+    fn exec_range(&mut self, r: StmtRange, active: &[i64]) -> Result<(), InterpError> {
+        let mut i = r.start;
+        while i < r.end {
+            if self.prog.collective[i as usize] {
+                self.tick(1)?;
+                self.exec_collective(i, active)?;
+                i += 1;
+            } else {
+                let mut j = i + 1;
+                while j < r.end && !self.prog.collective[j as usize] {
+                    j += 1;
+                }
+                for &t in active {
+                    self.exec_private_run(StmtRange { start: i, end: j }, t)?;
+                }
+                i = j;
             }
         }
         Ok(())
     }
 
-    // ---- private (per-thread) execution ---------------------------------
+    /// Execute a run of private statements for one thread, ticking the
+    /// step counter once per basic block instead of per statement.
+    fn exec_private_run(&mut self, r: StmtRange, t: i64) -> Result<(), InterpError> {
+        self.tick(r.len() as u64)?;
+        for sid in r.start..r.end {
+            self.exec_private(sid, t)?;
+        }
+        Ok(())
+    }
 
-    fn exec_private(
-        &mut self,
-        s: &Stmt,
-        bs: &mut BlockState,
-        t: usize,
-    ) -> Result<(), InterpError> {
-        self.tick()?;
-        let tid = bs.tid(t);
-        match s {
-            Stmt::Comment(_) => {}
-            Stmt::DeclF { name, init } | Stmt::AssignF { name, value: init } => {
-                let v = {
-                    let mem = MemView {
-                        global: &self.env.bufs,
-                        shared: &bs.shared,
-                    };
-                    eval_v(init, self.dims, tid, &bs.threads[t], &mem, None)?
-                };
-                bs.threads[t].f.set(name, v);
+    fn exec_private(&mut self, sid: u32, t: i64) -> Result<(), InterpError> {
+        match self.prog.stmts[sid as usize] {
+            CStmt::AssignF { slot, value } => {
+                let v = self.eval_v(value, t, false)?;
+                self.set_f(t, slot, v);
             }
-            Stmt::DeclI { name, init } | Stmt::AssignI { name, value: init } => {
-                let v = eval_i(init, self.dims, tid, &bs.threads[t])?;
-                bs.threads[t].i.set(name, v);
+            CStmt::AssignI { slot, value } => {
+                let v = self.eval_i(value, t);
+                self.set_i(t, slot, v);
             }
-            Stmt::Store {
-                space,
-                buf,
-                idx,
-                value,
-                ..
-            } => {
-                let (i, v) = {
-                    let mem = MemView {
-                        global: &self.env.bufs,
-                        shared: &bs.shared,
-                    };
-                    let i = eval_i(idx, self.dims, tid, &bs.threads[t])?;
-                    let v = eval_v(
-                        value,
-                        self.dims,
-                        tid,
-                        &bs.threads[t],
-                        &mem,
-                        None,
-                    )?;
-                    (i, v)
-                };
-                self.commit_store(*space, buf, i, v, bs)?;
+            CStmt::StoreGlobal { buf, idx, value } => {
+                let i = self.eval_i(idx, t);
+                let v = self.eval_v(value, t, false)?;
+                self.store_global(buf, i, v)?;
             }
-            Stmt::SyncThreads => {
+            CStmt::StoreShared { buf, idx, value } => {
+                let i = self.eval_i(idx, t);
+                let v = self.eval_v(value, t, false)?;
+                self.store_shared(buf, i, v)?;
+            }
+            CStmt::Sync => {
                 // Private sync is unreachable (sync is collective); no-op.
             }
-            Stmt::If { cond, then, els } => {
-                let c = eval_b(cond, self.dims, tid, &bs.threads[t])?;
-                let branch = if c { then } else { els };
-                for s in branch {
-                    self.exec_private(s, bs, t)?;
+            CStmt::If { cond, then, els } => {
+                let branch = if self.eval_b(cond, t) { then } else { els };
+                if !branch.is_empty() {
+                    self.exec_private_run(branch, t)?;
                 }
             }
-            Stmt::For(l) => {
-                let init = eval_i(&l.init, self.dims, tid, &bs.threads[t])?;
-                let saved = bs.threads[t].i.set(&l.var, init);
+            CStmt::For {
+                var,
+                init,
+                cmp,
+                bound,
+                update,
+                body,
+            } => {
+                let v0 = self.eval_i(init, t);
+                self.set_i(t, var, v0);
                 loop {
-                    self.tick()?;
-                    let cur = bs.threads[t].i.get(&l.var).unwrap();
-                    let bound =
-                        eval_i(&l.bound, self.dims, tid, &bs.threads[t])?;
-                    if !crate::ir::expr::eval_cmp(l.cmp, cur, bound) {
+                    self.tick(1)?;
+                    let cur = self.get_i(t, var);
+                    let b = self.eval_i(bound, t);
+                    if !eval_cmp(cmp, cur, b) {
                         break;
                     }
-                    for s in &l.body {
-                        self.exec_private(s, bs, t)?;
-                    }
-                    let next = step_var(&l.update, cur, self.dims, tid, &bs.threads[t])?;
-                    bs.threads[t].i.set(&l.var, next);
+                    self.exec_private_run(body, t)?;
+                    let cur = self.get_i(t, var);
+                    let next = match update {
+                        CUpdate::Add(e) => cur + self.eval_i(e, t),
+                        CUpdate::Shr(k) => cur >> k,
+                    };
+                    self.set_i(t, var, next);
                 }
-                restore_var(&mut bs.threads[t], &l.var, saved);
             }
         }
         Ok(())
     }
 
-    // ---- collective (lockstep) execution ---------------------------------
-
-    fn exec_collective(
-        &mut self,
-        s: &Stmt,
-        bs: &mut BlockState,
-        active: &[usize],
-    ) -> Result<(), InterpError> {
-        self.tick()?;
-        match s {
-            Stmt::SyncThreads => { /* lockstep => barrier is implicit */ }
-            Stmt::Comment(_) => {}
-            Stmt::DeclF { name, init } | Stmt::AssignF { name, value: init } => {
-                let results = self.eval_lockstep(init, bs, active)?;
-                for (&t, v) in active.iter().zip(results) {
-                    bs.threads[t].f.set(name, v);
-                }
-            }
-            Stmt::DeclI { name, init } | Stmt::AssignI { name, value: init } => {
-                for &t in active {
-                    let v = eval_i(init, self.dims, bs.tid(t), &bs.threads[t])?;
-                    bs.threads[t].i.set(name, v);
-                }
-            }
-            Stmt::Store {
-                space,
-                buf,
-                idx,
-                value,
-                ..
-            } => {
-                // Two-phase: evaluate every thread's (index, value) against
-                // the pre-statement state, then commit — exact semantics for
-                // the disjoint read/write sets of reduction trees.
-                let vals = self.eval_lockstep(value, bs, active)?;
-                let mut writes = Vec::with_capacity(active.len());
+    fn exec_collective(&mut self, sid: u32, active: &[i64]) -> Result<(), InterpError> {
+        match self.prog.stmts[sid as usize] {
+            CStmt::Sync => { /* lockstep => barrier is implicit */ }
+            CStmt::AssignF { slot, value } => {
+                let vals = self.eval_lockstep(value, active)?;
                 for (&t, v) in active.iter().zip(vals) {
-                    let i = eval_i(idx, self.dims, bs.tid(t), &bs.threads[t])?;
-                    writes.push((i, v));
-                }
-                for (i, v) in writes {
-                    self.commit_store(*space, buf, i, v, bs)?;
+                    self.set_f(t, slot, v);
                 }
             }
-            Stmt::If { cond, then, els } => {
+            CStmt::AssignI { slot, value } => {
+                for &t in active {
+                    let v = self.eval_i(value, t);
+                    self.set_i(t, slot, v);
+                }
+            }
+            CStmt::StoreGlobal { buf, idx, value } => {
+                let writes = self.eval_two_phase(idx, value, active)?;
+                for (i, v) in writes {
+                    self.store_global(buf, i, v)?;
+                }
+            }
+            CStmt::StoreShared { buf, idx, value } => {
+                let writes = self.eval_two_phase(idx, value, active)?;
+                for (i, v) in writes {
+                    self.store_shared(buf, i, v)?;
+                }
+            }
+            CStmt::If { cond, then, els } => {
                 let mut t_act = Vec::new();
                 let mut e_act = Vec::new();
                 for &t in active {
-                    if eval_b(cond, self.dims, bs.tid(t), &bs.threads[t])? {
+                    if self.eval_b(cond, t) {
                         t_act.push(t);
                     } else {
                         e_act.push(t);
                     }
                 }
                 if !t_act.is_empty() {
-                    self.exec_stmts(then, bs, &t_act)?;
+                    self.exec_range(then, &t_act)?;
                 }
                 if !e_act.is_empty() && !els.is_empty() {
-                    self.exec_stmts(els, bs, &e_act)?;
+                    self.exec_range(els, &e_act)?;
                 }
             }
-            Stmt::For(l) => self.exec_collective_for(l, bs, active)?,
+            CStmt::For {
+                var,
+                init,
+                cmp,
+                bound,
+                update,
+                body,
+            } => {
+                self.exec_collective_for(var, init, cmp, bound, update, body, active)?;
+            }
         }
         Ok(())
     }
 
+    /// Two-phase collective store: evaluate every thread's (index, value)
+    /// against the pre-statement state, then commit — exact semantics for
+    /// the disjoint read/write sets of reduction trees.
+    fn eval_two_phase(
+        &self,
+        idx: u32,
+        value: u32,
+        active: &[i64],
+    ) -> Result<Vec<(i64, f32)>, InterpError> {
+        let mut writes = Vec::with_capacity(active.len());
+        for &t in active {
+            let v = self.eval_v(value, t, true)?;
+            let i = self.eval_i(idx, t);
+            writes.push((i, v));
+        }
+        Ok(writes)
+    }
+
+    /// Evaluate a value expression for every active thread against the
+    /// pre-statement state (shuffles enabled).
+    fn eval_lockstep(
+        &self,
+        value: u32,
+        active: &[i64],
+    ) -> Result<Vec<f32>, InterpError> {
+        let mut out = Vec::with_capacity(active.len());
+        for &t in active {
+            out.push(self.eval_v(value, t, true)?);
+        }
+        Ok(out)
+    }
+
     /// Lockstep loop: trip metadata must be uniform across active threads.
+    #[allow(clippy::too_many_arguments)]
     fn exec_collective_for(
         &mut self,
-        l: &ForLoop,
-        bs: &mut BlockState,
-        active: &[usize],
+        var: u32,
+        init: u32,
+        cmp: crate::ir::CmpOp,
+        bound: u32,
+        update: CUpdate,
+        body: StmtRange,
+        active: &[i64],
     ) -> Result<(), InterpError> {
-        let mut saved = Vec::with_capacity(active.len());
         let mut first: Option<i64> = None;
         for &t in active {
-            let v = eval_i(&l.init, self.dims, bs.tid(t), &bs.threads[t])?;
+            let v = self.eval_i(init, t);
             match first {
                 None => first = Some(v),
                 Some(f) if f != v => {
-                    return Err(InterpError::NonUniformLoop(l.var.clone()))
+                    return Err(InterpError::NonUniformLoop(
+                        self.prog.i_slot_names[var as usize].clone(),
+                    ))
                 }
                 _ => {}
             }
-            saved.push(bs.threads[t].i.set(&l.var, v));
+            self.set_i(t, var, v);
         }
         loop {
-            self.tick()?;
+            self.tick(1)?;
             // Uniform condition check.
             let mut cont: Option<bool> = None;
             for &t in active {
-                let cur = bs.threads[t].i.get(&l.var).unwrap();
-                let bound = eval_i(&l.bound, self.dims, bs.tid(t), &bs.threads[t])?;
-                let c = crate::ir::expr::eval_cmp(l.cmp, cur, bound);
+                let cur = self.get_i(t, var);
+                let b = self.eval_i(bound, t);
+                let c = eval_cmp(cmp, cur, b);
                 match cont {
                     None => cont = Some(c),
                     Some(p) if p != c => {
-                        return Err(InterpError::NonUniformLoop(l.var.clone()))
+                        return Err(InterpError::NonUniformLoop(
+                            self.prog.i_slot_names[var as usize].clone(),
+                        ))
                     }
                     _ => {}
                 }
@@ -419,131 +635,49 @@ impl<'a> Machine<'a> {
             if !cont.unwrap_or(false) {
                 break;
             }
-            self.exec_stmts(&l.body, bs, active)?;
+            self.exec_range(body, active)?;
             for &t in active {
-                let cur = bs.threads[t].i.get(&l.var).unwrap();
-                let next = step_var(&l.update, cur, self.dims, bs.tid(t), &bs.threads[t])?;
-                bs.threads[t].i.set(&l.var, next);
-            }
-        }
-        for (&t, s) in active.iter().zip(saved) {
-            restore_var(&mut bs.threads[t], &l.var, s);
-        }
-        Ok(())
-    }
-
-    /// Evaluate `e` for every active thread against the pre-statement
-    /// state, resolving `__shfl_down_sync` against peer lanes.
-    fn eval_lockstep(
-        &self,
-        e: &VExpr,
-        bs: &BlockState,
-        active: &[usize],
-    ) -> Result<Vec<f32>, InterpError> {
-        let mem = MemView {
-            global: &self.env.bufs,
-            shared: &bs.shared,
-        };
-        let mut out = Vec::with_capacity(active.len());
-        for &t in active {
-            let tid = bs.tid(t);
-            let threads = &bs.threads;
-            let dims = self.dims;
-            let memr = &mem;
-            // Shuffle resolver: value of the expression in lane (lane+off)
-            // of the same warp; out-of-range lanes return the caller's own.
-            let shfl = move |inner: &VExpr, off: i64| {
-                let src_lane = tid.lane() + off;
-                let src = if (0..WARP_SIZE).contains(&src_lane) {
-                    let cand = tid.warp() * WARP_SIZE + src_lane;
-                    if cand < threads.len() as i64 {
-                        cand as usize
-                    } else {
-                        t
-                    }
-                } else {
-                    t
+                let cur = self.get_i(t, var);
+                let next = match update {
+                    CUpdate::Add(e) => cur + self.eval_i(e, t),
+                    CUpdate::Shr(k) => cur >> k,
                 };
-                let stid = ThreadId {
-                    tx: src as i64,
-                    ..tid
-                };
-                eval_v(inner, dims, stid, &threads[src], memr, None)
-            };
-            out.push(eval_v(e, self.dims, tid, &bs.threads[t], &mem, Some(&shfl))?);
-        }
-        Ok(out)
-    }
-
-    fn commit_store(
-        &mut self,
-        space: MemSpace,
-        buf: &str,
-        i: i64,
-        v: f32,
-        bs: &mut BlockState,
-    ) -> Result<(), InterpError> {
-        match space {
-            MemSpace::Global => {
-                let b = self
-                    .env
-                    .bufs
-                    .get_mut(buf)
-                    .ok_or_else(|| EvalError::UnknownBuffer(buf.into()))?;
-                let len = b.data.len();
-                let slot = b.data.get_mut(i as usize).ok_or(
-                    EvalError::OutOfBounds {
-                        buf: buf.into(),
-                        idx: i,
-                        len,
-                    },
-                )?;
-                *slot = if b.dtype == DType::F16 {
-                    f32_to_f16_round(v)
-                } else {
-                    v
-                };
-            }
-            MemSpace::Shared => {
-                let b = bs
-                    .shared
-                    .get_mut(buf)
-                    .ok_or_else(|| EvalError::UnknownBuffer(buf.into()))?;
-                let len = b.len();
-                let slot =
-                    b.get_mut(i as usize).ok_or(EvalError::OutOfBounds {
-                        buf: buf.into(),
-                        idx: i,
-                        len,
-                    })?;
-                *slot = v;
+                self.set_i(t, var, next);
             }
         }
         Ok(())
     }
-}
 
-fn step_var(
-    u: &Update,
-    cur: i64,
-    dims: &DimEnv,
-    tid: ThreadId,
-    regs: &Regs,
-) -> Result<i64, InterpError> {
-    Ok(match u {
-        Update::AddAssign(e) => cur + eval_i(e, dims, tid, regs)?,
-        Update::ShrAssign(k) => cur >> k,
-    })
-}
+    // ---- memory commits --------------------------------------------------
 
-fn restore_var(regs: &mut Regs, var: &str, saved: Option<i64>) {
-    match saved {
-        Some(v) => {
-            regs.i.set(var, v);
+    fn store_global(&mut self, buf: u32, i: i64, v: f32) -> Result<(), InterpError> {
+        let len = self.global[buf as usize].data.len();
+        if i < 0 || i as usize >= len {
+            return Err(EvalError::OutOfBounds {
+                buf: self.prog.params[buf as usize].name.clone(),
+                idx: i,
+                len,
+            }
+            .into());
         }
-        None => {
-            regs.i.remove(var);
+        let g = &mut self.global[buf as usize];
+        g.data[i as usize] = if g.f16 { f32_to_f16_round(v) } else { v };
+        Ok(())
+    }
+
+    fn store_shared(&mut self, buf: u32, i: i64, v: f32) -> Result<(), InterpError> {
+        let d = &mut self.shared[buf as usize];
+        let len = d.len();
+        if i < 0 || i as usize >= len {
+            return Err(EvalError::OutOfBounds {
+                buf: self.prog.shared[buf as usize].name.clone(),
+                idx: i,
+                len,
+            }
+            .into());
         }
+        d[i as usize] = v;
+        Ok(())
     }
 }
 
@@ -551,7 +685,7 @@ fn restore_var(regs: &mut Regs, var: &str, saved: Option<i64>) {
 mod tests {
     use super::*;
     use crate::ir::build::*;
-    use crate::ir::kernel::{BufParam, Launch};
+    use crate::ir::kernel::{BufIo, BufParam, Launch};
 
     /// y[i] = 2*x[i] with a grid-stride loop.
     fn scale_kernel(block: u32) -> Kernel {
@@ -620,7 +754,10 @@ mod tests {
                     io: BufIo::Out,
                 },
             ],
-            shared: vec![SharedAllocT()],
+            shared: vec![crate::ir::SharedAlloc {
+                name: "sm".into(),
+                len: bdim(),
+            }],
             launch: Launch { grid: c(2), block: 64 },
             body: vec![
                 store_sh("sm", tx(), load("x", iadd(imul(bx(), bdim()), tx()))),
@@ -645,14 +782,6 @@ mod tests {
                 ),
                 if_(eq(tx(), c(0)), vec![store("out", bx(), load_sh("sm", c(0)))]),
             ],
-        }
-    }
-
-    #[allow(non_snake_case)]
-    fn SharedAllocT() -> crate::ir::SharedAlloc {
-        crate::ir::SharedAlloc {
-            name: "sm".into(),
-            len: bdim(),
         }
     }
 
@@ -740,4 +869,128 @@ mod tests {
             Err(InterpError::BadBufferLen { .. })
         ));
     }
+
+    #[test]
+    fn oob_store_reports_eval_error_and_env_survives() {
+        let mut k = scale_kernel(32);
+        use crate::ir::build as b;
+        k.body.push(b::store("y", b::dim("N"), b::fc(0.0))); // one past end
+        let mut dims = DimEnv::new();
+        dims.insert("N".into(), 64);
+        let mut env = ExecEnv::for_kernel(&k, &dims);
+        env.set("x", vec![1.0; 64]);
+        let err = run(&k, &dims, &mut env).unwrap_err();
+        assert!(matches!(err, InterpError::Eval(EvalError::OutOfBounds { .. })));
+        // Buffers were moved back even though the launch failed.
+        assert_eq!(env.get("x").len(), 64);
+        assert_eq!(env.get("y").len(), 64);
+    }
+
+    #[test]
+    fn nested_shuffle_rejected_like_reference() {
+        // shfl_down(shfl_down(s, off), off): the reference resolver
+        // evaluates the shuffled expression with shuffles disabled, so
+        // the inner shuffle errors; the compiled engine must agree.
+        let k = Kernel {
+            name: "nested_shfl".into(),
+            dims: vec![],
+            params: vec![
+                BufParam {
+                    name: "x".into(),
+                    dtype: DType::F32,
+                    len: c(32),
+                    io: BufIo::In,
+                },
+                BufParam {
+                    name: "out".into(),
+                    dtype: DType::F32,
+                    len: c(32),
+                    io: BufIo::Out,
+                },
+            ],
+            shared: vec![],
+            launch: Launch { grid: c(1), block: 32 },
+            body: vec![
+                declf("s", load("x", tx())),
+                assignf(
+                    "s",
+                    shfl_down(shfl_down(fv("s"), c(8)), c(16)),
+                ),
+                store("out", tx(), fv("s")),
+            ],
+        };
+        let dims = DimEnv::new();
+        let x: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let a = super::super::run_with_inputs(&k, &dims, &[("x", x.clone())])
+            .unwrap_err();
+        let b = super::super::reference::run_with_inputs(&k, &dims, &[("x", x)])
+            .unwrap_err();
+        assert_eq!(a.to_string(), b.to_string());
+        assert!(a.to_string().contains("__shfl_down_sync"));
+    }
+
+    #[test]
+    fn for_update_may_read_body_declared_var() {
+        // for (i = 0; i < 8; i += step) { step = 2; out[i] = 1 }
+        // The reference machine evaluates the update after the body has
+        // bound `step`; the compiled lowering must resolve it too.
+        let k = Kernel {
+            name: "body_step".into(),
+            dims: vec![],
+            params: vec![BufParam {
+                name: "out".into(),
+                dtype: DType::F32,
+                len: c(8),
+                io: BufIo::InOut,
+            }],
+            shared: vec![],
+            launch: Launch { grid: c(1), block: 1 },
+            body: vec![crate::ir::Stmt::For(crate::ir::ForLoop {
+                var: "i".into(),
+                init: c(0),
+                cmp: crate::ir::CmpOp::Lt,
+                bound: c(8),
+                update: crate::ir::Update::AddAssign(iv("step")),
+                kind: crate::ir::LoopKind::Serial,
+                body: vec![
+                    decli("step", c(2)),
+                    store("out", iv("i"), fc(1.0)),
+                ],
+            })],
+        };
+        let dims = DimEnv::new();
+        let a = super::super::run_with_inputs(&k, &dims, &[]).unwrap();
+        let b = super::super::reference::run_with_inputs(&k, &dims, &[]).unwrap();
+        let av: Vec<u32> = a.get("out").iter().map(|v| v.to_bits()).collect();
+        let bv: Vec<u32> = b.get("out").iter().map(|v| v.to_bits()).collect();
+        assert_eq!(av, bv);
+        // Every even index written (step 2), odd untouched.
+        assert_eq!(a.get("out"), &[1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn loop_var_shadowing_restores_outer_value() {
+        // j = 7; for (j = 0; j < 3; j += 1) {}; out[tx] = (float)j
+        // The loop var shadows; after the loop the outer j is visible.
+        let k = Kernel {
+            name: "shadow".into(),
+            dims: vec![],
+            params: vec![BufParam {
+                name: "out".into(),
+                dtype: DType::F32,
+                len: c(4),
+                io: BufIo::Out,
+            }],
+            shared: vec![],
+            launch: Launch { grid: c(1), block: 4 },
+            body: vec![
+                decli("j", c(7)),
+                for_up("j", c(0), c(3), c(1), vec![]),
+                store("out", tx(), from_int(iv("j"))),
+            ],
+        };
+        let env = super::super::run_with_inputs(&k, &DimEnv::new(), &[]).unwrap();
+        assert_eq!(env.get("out"), &[7.0; 4]);
+    }
+
 }

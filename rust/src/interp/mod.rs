@@ -16,12 +16,27 @@
 //!   [`crate::ir::types`]);
 //! * fast-math intrinsics are deterministically *lossy* (mantissa
 //!   truncation) so the testing agent's tolerance check is meaningful.
+//!
+//! Two engines implement these semantics:
+//!
+//! * [`machine`] (the default, behind [`run`]) — a **slot-compiled**
+//!   engine: [`compile`] lowers the kernel once per launch, resolving
+//!   every register/buffer name to a dense integer slot, folding dims to
+//!   constants and flattening the statement/expression trees into compact
+//!   instruction pools; execution then runs with zero name lookups.
+//! * [`reference`] — the original tree-walking machine, kept as the
+//!   bit-exact semantic baseline for differential tests and the
+//!   `coordinator_hotpath` bench's before/after comparison
+//!   (EXPERIMENTS.md §Perf).
 
+mod compile;
 mod eval;
 mod machine;
+pub mod reference;
 
+pub use compile::{compile, CompiledKernel, ParamSlot, SharedSlot};
 pub use eval::{fastmath_quantize, WARP_SIZE};
-pub use machine::{run, ExecEnv, InterpError};
+pub use machine::{run, run_compiled, Buffer, ExecEnv, InterpError};
 
 use crate::ir::{DimEnv, Kernel};
 

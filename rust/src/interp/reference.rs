@@ -1,0 +1,549 @@
+//! Tree-walking reference machine: the original string-keyed interpreter,
+//! kept as the semantic baseline for the slot-compiled engine in
+//! [`super::machine`].
+//!
+//! Differential tests (`rust/tests/differential.rs`) assert the compiled
+//! engine produces bit-identical buffers to this one on every kernel and
+//! shape, and the `coordinator_hotpath` bench reports the speedup of the
+//! compiled engine over this baseline. It is intentionally untouched by
+//! performance work: private per-thread recursion + lockstep two-phase
+//! collective execution over string-keyed registers and buffers.
+
+use std::collections::HashMap;
+
+use crate::ir::analysis::is_collective;
+use crate::ir::expr::VExpr;
+use crate::ir::kernel::{eval_static, BufIo};
+use crate::ir::stmt::{ForLoop, Stmt, Update};
+use crate::ir::types::{f32_to_f16_round, DType, MemSpace};
+use crate::ir::{DimEnv, Kernel};
+
+use super::eval::{
+    eval_b, eval_i, eval_v, EvalError, MemView, Regs, ThreadId, WARP_SIZE,
+};
+use super::machine::{ExecEnv, InterpError};
+
+/// Per-launch statement cap, same value as the compiled engine's.
+const STEP_LIMIT: u64 = 200_000_000;
+
+/// Execute one kernel launch over `env` with the tree-walking machine.
+pub fn run(
+    kernel: &Kernel,
+    dims: &DimEnv,
+    env: &mut ExecEnv,
+) -> Result<(), InterpError> {
+    // Validate buffer lengths.
+    for p in &kernel.params {
+        let expect = kernel.buf_len(&p.name, dims) as usize;
+        let got = env.get(&p.name).len();
+        if expect != got {
+            return Err(InterpError::BadBufferLen {
+                buf: p.name.clone(),
+                expect,
+                got,
+            });
+        }
+    }
+    // Input data of f16 buffers is f16 in memory: round on entry.
+    for p in &kernel.params {
+        if p.dtype == DType::F16 && matches!(p.io, BufIo::In | BufIo::InOut) {
+            let b = env.bufs.get_mut(&p.name).unwrap();
+            for v in &mut b.data {
+                *v = f32_to_f16_round(*v);
+            }
+        }
+    }
+
+    let grid = kernel.grid_size(dims);
+    let block = kernel.launch.block as i64;
+    // One body clone per launch (not per block): the machine needs the
+    // statements unborrowed from `kernel` while it mutates buffers.
+    let body = kernel.body.clone();
+    let mut m = Machine {
+        kernel,
+        dims,
+        env,
+        steps: 0,
+    };
+    for bx in 0..grid {
+        m.run_block(&body, bx, block, grid)?;
+    }
+    Ok(())
+}
+
+/// Convenience mirror of [`super::run_with_inputs`] over this machine.
+pub fn run_with_inputs(
+    kernel: &Kernel,
+    dims: &DimEnv,
+    inputs: &[(&str, Vec<f32>)],
+) -> Result<ExecEnv, InterpError> {
+    let mut env = ExecEnv::for_kernel(kernel, dims);
+    for (name, data) in inputs {
+        env.set(name, data.clone());
+    }
+    run(kernel, dims, &mut env)?;
+    Ok(env)
+}
+
+struct Machine<'a> {
+    kernel: &'a Kernel,
+    dims: &'a DimEnv,
+    env: &'a mut ExecEnv,
+    steps: u64,
+}
+
+/// Mutable state of one block in flight.
+struct BlockState {
+    threads: Vec<Regs>,
+    shared: HashMap<String, Vec<f32>>,
+    bx: i64,
+    bdim: i64,
+    gdim: i64,
+}
+
+impl BlockState {
+    fn tid(&self, t: usize) -> ThreadId {
+        ThreadId {
+            tx: t as i64,
+            bx: self.bx,
+            bdim: self.bdim,
+            gdim: self.gdim,
+        }
+    }
+}
+
+impl<'a> Machine<'a> {
+    fn tick(&mut self) -> Result<(), InterpError> {
+        self.steps += 1;
+        if self.steps > STEP_LIMIT {
+            return Err(InterpError::IterationLimit);
+        }
+        Ok(())
+    }
+
+    fn run_block(
+        &mut self,
+        body: &[Stmt],
+        bx: i64,
+        block: i64,
+        grid: i64,
+    ) -> Result<(), InterpError> {
+        let mut shared = HashMap::new();
+        for s in &self.kernel.shared {
+            let len =
+                eval_static(&s.len, self.dims, self.kernel.launch.block) as usize;
+            shared.insert(s.name.clone(), vec![0.0f32; len]);
+        }
+        let mut bs = BlockState {
+            threads: vec![Regs::default(); block as usize],
+            shared,
+            bx,
+            bdim: block,
+            gdim: grid,
+        };
+        let active: Vec<usize> = (0..block as usize).collect();
+        self.exec_stmts(body, &mut bs, &active)
+    }
+
+    fn exec_stmts(
+        &mut self,
+        stmts: &[Stmt],
+        bs: &mut BlockState,
+        active: &[usize],
+    ) -> Result<(), InterpError> {
+        for s in stmts {
+            if is_collective(s) {
+                self.exec_collective(s, bs, active)?;
+            } else {
+                for &t in active {
+                    self.exec_private(s, bs, t)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- private (per-thread) execution ---------------------------------
+
+    fn exec_private(
+        &mut self,
+        s: &Stmt,
+        bs: &mut BlockState,
+        t: usize,
+    ) -> Result<(), InterpError> {
+        self.tick()?;
+        let tid = bs.tid(t);
+        match s {
+            Stmt::Comment(_) => {}
+            Stmt::DeclF { name, init } | Stmt::AssignF { name, value: init } => {
+                let v = {
+                    let mem = MemView {
+                        global: &self.env.bufs,
+                        shared: &bs.shared,
+                    };
+                    eval_v(init, self.dims, tid, &bs.threads[t], &mem, None)?
+                };
+                bs.threads[t].f.set(name, v);
+            }
+            Stmt::DeclI { name, init } | Stmt::AssignI { name, value: init } => {
+                let v = eval_i(init, self.dims, tid, &bs.threads[t])?;
+                bs.threads[t].i.set(name, v);
+            }
+            Stmt::Store {
+                space,
+                buf,
+                idx,
+                value,
+                ..
+            } => {
+                let (i, v) = {
+                    let mem = MemView {
+                        global: &self.env.bufs,
+                        shared: &bs.shared,
+                    };
+                    let i = eval_i(idx, self.dims, tid, &bs.threads[t])?;
+                    let v = eval_v(
+                        value,
+                        self.dims,
+                        tid,
+                        &bs.threads[t],
+                        &mem,
+                        None,
+                    )?;
+                    (i, v)
+                };
+                self.commit_store(*space, buf, i, v, bs)?;
+            }
+            Stmt::SyncThreads => {
+                // Private sync is unreachable (sync is collective); no-op.
+            }
+            Stmt::If { cond, then, els } => {
+                let c = eval_b(cond, self.dims, tid, &bs.threads[t])?;
+                let branch = if c { then } else { els };
+                for s in branch {
+                    self.exec_private(s, bs, t)?;
+                }
+            }
+            Stmt::For(l) => {
+                let init = eval_i(&l.init, self.dims, tid, &bs.threads[t])?;
+                let saved = bs.threads[t].i.set(&l.var, init);
+                loop {
+                    self.tick()?;
+                    let cur = bs.threads[t].i.get(&l.var).unwrap();
+                    let bound =
+                        eval_i(&l.bound, self.dims, tid, &bs.threads[t])?;
+                    if !crate::ir::expr::eval_cmp(l.cmp, cur, bound) {
+                        break;
+                    }
+                    for s in &l.body {
+                        self.exec_private(s, bs, t)?;
+                    }
+                    let next = step_var(&l.update, cur, self.dims, tid, &bs.threads[t])?;
+                    bs.threads[t].i.set(&l.var, next);
+                }
+                restore_var(&mut bs.threads[t], &l.var, saved);
+            }
+        }
+        Ok(())
+    }
+
+    // ---- collective (lockstep) execution ---------------------------------
+
+    fn exec_collective(
+        &mut self,
+        s: &Stmt,
+        bs: &mut BlockState,
+        active: &[usize],
+    ) -> Result<(), InterpError> {
+        self.tick()?;
+        match s {
+            Stmt::SyncThreads => { /* lockstep => barrier is implicit */ }
+            Stmt::Comment(_) => {}
+            Stmt::DeclF { name, init } | Stmt::AssignF { name, value: init } => {
+                let results = self.eval_lockstep(init, bs, active)?;
+                for (&t, v) in active.iter().zip(results) {
+                    bs.threads[t].f.set(name, v);
+                }
+            }
+            Stmt::DeclI { name, init } | Stmt::AssignI { name, value: init } => {
+                for &t in active {
+                    let v = eval_i(init, self.dims, bs.tid(t), &bs.threads[t])?;
+                    bs.threads[t].i.set(name, v);
+                }
+            }
+            Stmt::Store {
+                space,
+                buf,
+                idx,
+                value,
+                ..
+            } => {
+                // Two-phase: evaluate every thread's (index, value) against
+                // the pre-statement state, then commit — exact semantics for
+                // the disjoint read/write sets of reduction trees.
+                let vals = self.eval_lockstep(value, bs, active)?;
+                let mut writes = Vec::with_capacity(active.len());
+                for (&t, v) in active.iter().zip(vals) {
+                    let i = eval_i(idx, self.dims, bs.tid(t), &bs.threads[t])?;
+                    writes.push((i, v));
+                }
+                for (i, v) in writes {
+                    self.commit_store(*space, buf, i, v, bs)?;
+                }
+            }
+            Stmt::If { cond, then, els } => {
+                let mut t_act = Vec::new();
+                let mut e_act = Vec::new();
+                for &t in active {
+                    if eval_b(cond, self.dims, bs.tid(t), &bs.threads[t])? {
+                        t_act.push(t);
+                    } else {
+                        e_act.push(t);
+                    }
+                }
+                if !t_act.is_empty() {
+                    self.exec_stmts(then, bs, &t_act)?;
+                }
+                if !e_act.is_empty() && !els.is_empty() {
+                    self.exec_stmts(els, bs, &e_act)?;
+                }
+            }
+            Stmt::For(l) => self.exec_collective_for(l, bs, active)?,
+        }
+        Ok(())
+    }
+
+    /// Lockstep loop: trip metadata must be uniform across active threads.
+    fn exec_collective_for(
+        &mut self,
+        l: &ForLoop,
+        bs: &mut BlockState,
+        active: &[usize],
+    ) -> Result<(), InterpError> {
+        let mut saved = Vec::with_capacity(active.len());
+        let mut first: Option<i64> = None;
+        for &t in active {
+            let v = eval_i(&l.init, self.dims, bs.tid(t), &bs.threads[t])?;
+            match first {
+                None => first = Some(v),
+                Some(f) if f != v => {
+                    return Err(InterpError::NonUniformLoop(l.var.clone()))
+                }
+                _ => {}
+            }
+            saved.push(bs.threads[t].i.set(&l.var, v));
+        }
+        loop {
+            self.tick()?;
+            // Uniform condition check.
+            let mut cont: Option<bool> = None;
+            for &t in active {
+                let cur = bs.threads[t].i.get(&l.var).unwrap();
+                let bound = eval_i(&l.bound, self.dims, bs.tid(t), &bs.threads[t])?;
+                let c = crate::ir::expr::eval_cmp(l.cmp, cur, bound);
+                match cont {
+                    None => cont = Some(c),
+                    Some(p) if p != c => {
+                        return Err(InterpError::NonUniformLoop(l.var.clone()))
+                    }
+                    _ => {}
+                }
+            }
+            if !cont.unwrap_or(false) {
+                break;
+            }
+            self.exec_stmts(&l.body, bs, active)?;
+            for &t in active {
+                let cur = bs.threads[t].i.get(&l.var).unwrap();
+                let next = step_var(&l.update, cur, self.dims, bs.tid(t), &bs.threads[t])?;
+                bs.threads[t].i.set(&l.var, next);
+            }
+        }
+        for (&t, s) in active.iter().zip(saved) {
+            restore_var(&mut bs.threads[t], &l.var, s);
+        }
+        Ok(())
+    }
+
+    /// Evaluate `e` for every active thread against the pre-statement
+    /// state, resolving `__shfl_down_sync` against peer lanes.
+    fn eval_lockstep(
+        &self,
+        e: &VExpr,
+        bs: &BlockState,
+        active: &[usize],
+    ) -> Result<Vec<f32>, InterpError> {
+        let mem = MemView {
+            global: &self.env.bufs,
+            shared: &bs.shared,
+        };
+        let mut out = Vec::with_capacity(active.len());
+        for &t in active {
+            let tid = bs.tid(t);
+            let threads = &bs.threads;
+            let dims = self.dims;
+            let memr = &mem;
+            // Shuffle resolver: value of the expression in lane (lane+off)
+            // of the same warp; out-of-range lanes return the caller's own.
+            let shfl = move |inner: &VExpr, off: i64| {
+                let src_lane = tid.lane() + off;
+                let src = if (0..WARP_SIZE).contains(&src_lane) {
+                    let cand = tid.warp() * WARP_SIZE + src_lane;
+                    if cand < threads.len() as i64 {
+                        cand as usize
+                    } else {
+                        t
+                    }
+                } else {
+                    t
+                };
+                let stid = ThreadId {
+                    tx: src as i64,
+                    ..tid
+                };
+                eval_v(inner, dims, stid, &threads[src], memr, None)
+            };
+            out.push(eval_v(e, self.dims, tid, &bs.threads[t], &mem, Some(&shfl))?);
+        }
+        Ok(out)
+    }
+
+    fn commit_store(
+        &mut self,
+        space: MemSpace,
+        buf: &str,
+        i: i64,
+        v: f32,
+        bs: &mut BlockState,
+    ) -> Result<(), InterpError> {
+        match space {
+            MemSpace::Global => {
+                let b = self
+                    .env
+                    .bufs
+                    .get_mut(buf)
+                    .ok_or_else(|| EvalError::UnknownBuffer(buf.into()))?;
+                let len = b.data.len();
+                let slot = b.data.get_mut(i as usize).ok_or(
+                    EvalError::OutOfBounds {
+                        buf: buf.into(),
+                        idx: i,
+                        len,
+                    },
+                )?;
+                *slot = if b.dtype == DType::F16 {
+                    f32_to_f16_round(v)
+                } else {
+                    v
+                };
+            }
+            MemSpace::Shared => {
+                let b = bs
+                    .shared
+                    .get_mut(buf)
+                    .ok_or_else(|| EvalError::UnknownBuffer(buf.into()))?;
+                let len = b.len();
+                let slot =
+                    b.get_mut(i as usize).ok_or(EvalError::OutOfBounds {
+                        buf: buf.into(),
+                        idx: i,
+                        len,
+                    })?;
+                *slot = v;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn step_var(
+    u: &Update,
+    cur: i64,
+    dims: &DimEnv,
+    tid: ThreadId,
+    regs: &Regs,
+) -> Result<i64, InterpError> {
+    Ok(match u {
+        Update::AddAssign(e) => cur + eval_i(e, dims, tid, regs)?,
+        Update::ShrAssign(k) => cur >> k,
+    })
+}
+
+fn restore_var(regs: &mut Regs, var: &str, saved: Option<i64>) {
+    match saved {
+        Some(v) => {
+            regs.i.set(var, v);
+        }
+        None => {
+            regs.i.remove(var);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ir::build::*;
+    use crate::ir::kernel::{BufIo, BufParam, Launch};
+    use crate::ir::{DimEnv, DType, Kernel};
+
+    /// The two engines must agree bit-for-bit on a shared-memory tree
+    /// reduction (lockstep two-phase semantics) — the in-crate smoke
+    /// version of the full differential suite in tests/differential.rs.
+    #[test]
+    fn reference_and_compiled_agree_bitwise() {
+        let k = Kernel {
+            name: "reduce".into(),
+            dims: vec!["N".into()],
+            params: vec![
+                BufParam {
+                    name: "x".into(),
+                    dtype: DType::F32,
+                    len: dim("N"),
+                    io: BufIo::In,
+                },
+                BufParam {
+                    name: "out".into(),
+                    dtype: DType::F32,
+                    len: c(2),
+                    io: BufIo::Out,
+                },
+            ],
+            shared: vec![crate::ir::SharedAlloc {
+                name: "sm".into(),
+                len: bdim(),
+            }],
+            launch: Launch { grid: c(2), block: 64 },
+            body: vec![
+                store_sh("sm", tx(), load("x", iadd(imul(bx(), bdim()), tx()))),
+                sync(),
+                for_shr(
+                    "off",
+                    ishr(bdim(), 1),
+                    vec![
+                        if_(
+                            lt(tx(), iv("off")),
+                            vec![store_sh(
+                                "sm",
+                                tx(),
+                                fadd(
+                                    load_sh("sm", tx()),
+                                    load_sh("sm", iadd(tx(), iv("off"))),
+                                ),
+                            )],
+                        ),
+                        sync(),
+                    ],
+                ),
+                if_(eq(tx(), c(0)), vec![store("out", bx(), load_sh("sm", c(0)))]),
+            ],
+        };
+        let mut dims = DimEnv::new();
+        dims.insert("N".into(), 128);
+        let x: Vec<f32> = (0..128).map(|i| (i as f32).sin()).collect();
+        let a = super::run_with_inputs(&k, &dims, &[("x", x.clone())]).unwrap();
+        let b = crate::interp::run_with_inputs(&k, &dims, &[("x", x)]).unwrap();
+        let av: Vec<u32> = a.get("out").iter().map(|v| v.to_bits()).collect();
+        let bv: Vec<u32> = b.get("out").iter().map(|v| v.to_bits()).collect();
+        assert_eq!(av, bv);
+    }
+}

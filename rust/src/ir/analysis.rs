@@ -126,6 +126,87 @@ fn expr_collective(e: &VExpr) -> bool {
     }
 }
 
+/// Scoped name → dense-slot resolution, used by the interpreter's
+/// slot-compiling lowering pass ([`crate::interp`]).
+///
+/// Semantics mirror the register files the tree-walking interpreter kept
+/// as flat string maps:
+/// * `Decl`/`Assign` to a name that is already bound reuses its slot
+///   (flat-map overwrite semantics);
+/// * a `for` loop variable *shadows*: it gets a fresh slot for the loop
+///   body and is unbound afterwards, which reproduces the old machine's
+///   save/restore of the outer value without any runtime work;
+/// * bindings created inside a loop or branch body persist after it,
+///   exactly like inserts into the old flat map.
+#[derive(Debug, Default)]
+pub struct SlotResolver {
+    /// Binding stack: innermost binding of a name is the latest entry.
+    bindings: Vec<(String, u32)>,
+    /// Name that introduced each slot (for error messages / debugging).
+    slot_names: Vec<String>,
+}
+
+impl SlotResolver {
+    pub fn new() -> SlotResolver {
+        SlotResolver::default()
+    }
+
+    /// Innermost slot bound to `name`, if any.
+    pub fn resolve(&self, name: &str) -> Option<u32> {
+        self.bindings
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+    }
+
+    /// Slot for a `Decl`/`Assign` target: reuse the innermost binding or
+    /// create a fresh, never-popped one.
+    pub fn resolve_or_bind(&mut self, name: &str) -> u32 {
+        if let Some(s) = self.resolve(name) {
+            return s;
+        }
+        self.fresh(name)
+    }
+
+    /// Push a *shadowing* binding (loop variable). Returns the fresh slot
+    /// and the stack position to pass to [`SlotResolver::unbind`] when the
+    /// scope closes.
+    pub fn bind_scoped(&mut self, name: &str) -> (u32, usize) {
+        let pos = self.bindings.len();
+        let slot = self.fresh(name);
+        (slot, pos)
+    }
+
+    /// Remove the binding pushed at `pos` (bindings created above it —
+    /// i.e. inside the scope — persist, matching flat-map semantics).
+    pub fn unbind(&mut self, pos: usize) {
+        self.bindings.remove(pos);
+    }
+
+    /// Total number of slots allocated.
+    pub fn slot_count(&self) -> usize {
+        self.slot_names.len()
+    }
+
+    /// Name that introduced `slot`.
+    pub fn slot_name(&self, slot: u32) -> &str {
+        &self.slot_names[slot as usize]
+    }
+
+    /// All slot names, in slot order (consumed by the compiled program).
+    pub fn into_slot_names(self) -> Vec<String> {
+        self.slot_names
+    }
+
+    fn fresh(&mut self, name: &str) -> u32 {
+        let slot = self.slot_names.len() as u32;
+        self.slot_names.push(name.to_string());
+        self.bindings.push((name.to_string(), slot));
+        slot
+    }
+}
+
 /// Structural features of a kernel — the code-shape half of the profiling
 /// report the planning agent consumes (Figure 1's "profiling" arrow).
 #[derive(Debug, Clone, Default)]
@@ -381,6 +462,35 @@ mod tests {
             _ => unreachable!(),
         };
         assert!(is_tree_reduction(&l));
+    }
+
+    #[test]
+    fn slot_resolver_scoping() {
+        let mut r = SlotResolver::new();
+        let acc = r.resolve_or_bind("acc");
+        assert_eq!(r.resolve_or_bind("acc"), acc, "re-decl reuses the slot");
+
+        let (i_inner, pos) = r.bind_scoped("i");
+        assert_ne!(i_inner, acc);
+        assert_eq!(r.resolve("i"), Some(i_inner));
+        // A binding created inside the scope persists after unbind.
+        let tmp = r.resolve_or_bind("tmp");
+        r.unbind(pos);
+        assert_eq!(r.resolve("i"), None, "loop var unbound after the loop");
+        assert_eq!(r.resolve("tmp"), Some(tmp), "body decl persists");
+        assert_eq!(r.slot_count(), 3);
+        assert_eq!(r.slot_name(i_inner), "i");
+    }
+
+    #[test]
+    fn slot_resolver_shadowing_preserves_outer_slot() {
+        let mut r = SlotResolver::new();
+        let outer = r.resolve_or_bind("i");
+        let (inner, pos) = r.bind_scoped("i");
+        assert_ne!(outer, inner);
+        assert_eq!(r.resolve("i"), Some(inner), "inner shadows");
+        r.unbind(pos);
+        assert_eq!(r.resolve("i"), Some(outer), "outer visible again");
     }
 
     #[test]

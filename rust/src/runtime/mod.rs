@@ -7,6 +7,12 @@
 //! `client.compile` → `execute`). Interchange is HLO *text*, never a
 //! serialized proto — jax ≥ 0.5 emits 64-bit instruction ids that
 //! xla_extension 0.5.1 rejects; the text parser reassigns them.
+//!
+//! The `xla` crate is not part of the offline vendor set, so the real
+//! engine is gated behind the `pjrt` cargo feature. Default builds get a
+//! same-API stub whose constructors fail with a clear message; every
+//! PJRT consumer (tests, `astra validate`, `astra serve`) already treats
+//! an engine that fails to open as "skip".
 
 mod registry;
 
@@ -17,12 +23,14 @@ use std::collections::HashMap;
 use anyhow::{anyhow, Context, Result};
 
 /// Compiled-executable cache over the artifact registry.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     registry: Registry,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create a CPU PJRT engine over a registry.
     pub fn new(registry: Registry) -> Result<Engine> {
@@ -130,6 +138,56 @@ impl Engine {
         let t0 = std::time::Instant::now();
         let out = self.execute(name, inputs)?;
         Ok((out, t0.elapsed().as_secs_f64() * 1e6))
+    }
+}
+
+/// Stub engine compiled when the `pjrt` feature is off: same API, every
+/// constructor fails, so PJRT consumers skip gracefully.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    registry: Registry,
+    // Kept so the struct shape (and dead-code analysis) matches the real
+    // engine's cache field even though the stub can never be constructed.
+    executables: HashMap<String, ()>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always fails: PJRT support is not compiled in.
+    pub fn new(_registry: Registry) -> Result<Engine> {
+        Err(anyhow!(
+            "PJRT support not compiled in (build with `--features pjrt` and \
+             the `xla` crate available)"
+        ))
+    }
+
+    /// Open the default registry (`artifacts/` next to the workspace).
+    pub fn from_dir(dir: &str) -> Result<Engine> {
+        Engine::new(Registry::load(dir)?)
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        format!("stub({})", self.executables.len())
+    }
+
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        Err(anyhow!("PJRT stub: cannot prepare {name}"))
+    }
+
+    pub fn execute(&mut self, name: &str, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!("PJRT stub: cannot execute {name}"))
+    }
+
+    pub fn execute_timed(
+        &mut self,
+        name: &str,
+        _inputs: &[Vec<f32>],
+    ) -> Result<(Vec<Vec<f32>>, f64)> {
+        Err(anyhow!("PJRT stub: cannot execute {name}"))
     }
 }
 

@@ -1,0 +1,151 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The container image vendors no crates.io mirror, so this shim
+//! provides the (small) subset of the real API the workspace uses:
+//! [`Error`], [`Result`], the [`anyhow!`] macro, and the [`Context`]
+//! extension trait for `Result` and `Option`. Error values carry a
+//! message plus a chain of context strings; `{e}` prints the outermost
+//! context, `{e:#}` prints the whole chain separated by `: `, matching
+//! the real crate closely enough for CLI error reporting.
+
+use std::fmt;
+
+/// A string-backed error with a context chain. Innermost (root) message
+/// first; contexts are appended as they wrap it.
+pub struct Error {
+    /// `chain[0]` is the root cause; later entries are contexts, outermost last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            chain: vec![msg.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context (like `anyhow::Error::context`).
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Error {
+        self.chain.push(ctx.to_string());
+        self
+    }
+
+    /// The root-cause message.
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: outermost context first, then the causes.
+            let mut first = true;
+            for part in self.chain.iter().rev() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                first = false;
+                write!(f, "{part}")?;
+            }
+            Ok(())
+        } else {
+            // `{}`: the outermost message only, like the real crate.
+            write!(f, "{}", self.chain.last().unwrap())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.last().unwrap())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for part in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {part}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that keeps this blanket conversion coherent (same trick as the real
+// crate), so `?` works on any std error type.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulting the error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Attach context to a fallible value (subset of `anyhow::Context`).
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e = anyhow!("root {}", 7).context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("doing a thing").unwrap_err();
+        assert_eq!(format!("{e}"), "doing a thing");
+
+        let o: Option<i32> = None;
+        let e = o.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing x");
+    }
+}
