@@ -7,6 +7,9 @@
 //! 3. Round budget: speedup as a function of R (the paper fixes R = 5).
 //! 4. Failure injection: the correctness gate under rising coding-agent
 //!    bug rates (candidates must never ship incorrect).
+//! 5. Speculative search: final speedup, candidates evaluated and wall
+//!    clock as the beam widens from the paper's greedy loop (B=1, K=1)
+//!    to concurrent multi-candidate rounds (EXPERIMENTS.md §Beam).
 //!
 //! ```bash
 //! cargo run --release --example ablation
@@ -108,5 +111,28 @@ fn main() {
             "  bug_rate {bug_rate:.2}: shipped kernels correct = {all_correct}, \
              worst speedup {worst:.2}x"
         );
+    }
+
+    // ---- 5. speculative beam search ---------------------------------------
+    println!("\n== Ablation 5: beam width B x candidates K (multi-agent) ==");
+    for (b, k) in [(1usize, 1usize), (1, 3), (2, 2), (2, 3), (3, 3)] {
+        print!("  B={b} K={k}:");
+        for spec in kernels::all_specs() {
+            let cfg = Config {
+                beam_width: b,
+                candidates_per_round: k,
+                bug_rate: 0.0,
+                temperature: 0.0,
+                ..Config::multi_agent()
+            };
+            let t0 = std::time::Instant::now();
+            let o = optimize(&spec, &cfg);
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            print!(
+                "  K{} {:.2}x ({} cands, {:.0} ms)",
+                spec.index, o.final_speedup, o.candidates_evaluated, ms
+            );
+        }
+        println!();
     }
 }

@@ -34,6 +34,11 @@ struct KernelRow {
     interpret_speedup: f64,
     transform_all_us: f64,
     optimize_ms: f64,
+    /// Full beam run (B=2, K=3) median.
+    beam_optimize_ms: f64,
+    /// Speculative-search throughput: candidates validated+profiled
+    /// per second in the beam run.
+    search_cps: f64,
 }
 
 fn main() {
@@ -124,6 +129,35 @@ fn main() {
             s.median_ms()
         );
     }
+    println!();
+
+    // Speculative search throughput: a full beam run (B=2, K=3), and
+    // candidates validated+profiled per second — the search-side number
+    // the CI perf-trajectory comparison tracks alongside interpreter
+    // throughput.
+    let beam_cfg = Config {
+        bug_rate: 0.0,
+        temperature: 0.0,
+        ..Config::multi_agent_beam()
+    };
+    for (spec, row) in kernels::all_specs().iter().zip(&mut rows) {
+        // The run is deterministic, so the candidate count from the
+        // last timed iteration is the count of every iteration.
+        let cands = std::cell::Cell::new(0usize);
+        let s = bench(1, 5, || {
+            cands.set(optimize(spec, &beam_cfg).candidates_evaluated)
+        });
+        let cands = cands.get();
+        row.beam_optimize_ms = s.median_ms();
+        row.search_cps = cands as f64 / (s.median_ms() / 1e3);
+        println!(
+            "beam-optimize {:<19} median {:>8.1} ms/run (B=2 K=3, {} cands, {:>6.0} cands/s)",
+            spec.paper_name,
+            s.median_ms(),
+            cands,
+            row.search_cps
+        );
+    }
 
     if json {
         let path = "BENCH_hotpath.json";
@@ -135,13 +169,14 @@ fn main() {
 /// Hand-rolled JSON (no serde in the offline vendor set).
 fn render_json(rows: &[KernelRow]) -> String {
     let mut out = String::new();
-    out.push_str("{\n  \"schema\": \"astra-hotpath-v1\",\n  \"kernels\": {\n");
+    out.push_str("{\n  \"schema\": \"astra-hotpath-v2\",\n  \"kernels\": {\n");
     for (i, r) in rows.iter().enumerate() {
         out.push_str(&format!(
             "    \"{}\": {{\n      \"simulate_us\": {:.3},\n      \
              \"interpret_ref_ms\": {:.4},\n      \"interpret_ms\": {:.4},\n      \
              \"interpret_speedup\": {:.2},\n      \"transform_all_us\": {:.3},\n      \
-             \"optimize_ms\": {:.3}\n    }}{}\n",
+             \"optimize_ms\": {:.3},\n      \"beam_optimize_ms\": {:.3},\n      \
+             \"search_cps\": {:.1}\n    }}{}\n",
             r.name,
             r.simulate_us,
             r.interpret_ref_ms,
@@ -149,6 +184,8 @@ fn render_json(rows: &[KernelRow]) -> String {
             r.interpret_speedup,
             r.transform_all_us,
             r.optimize_ms,
+            r.beam_optimize_ms,
+            r.search_cps,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }

@@ -40,24 +40,58 @@ impl CodingAgent {
         }
     }
 
-    /// Apply the highest-priority applicable suggestion.
+    /// Apply the highest-priority applicable suggestion, drawing any
+    /// fumble roll from the agent's own sequential stream.
     pub fn apply(&mut self, kernel: &Kernel, suggestions: &[Suggestion]) -> CodingOutcome {
+        let bug_rate = self.bug_rate;
         let mut reasons = Vec::new();
         for s in suggestions {
-            match transforms::apply(kernel, s.mv) {
-                Ok(mut k) => {
-                    if self.rng.chance(self.bug_rate) {
-                        inject_off_by_one(&mut k, &mut self.rng);
-                    }
+            match apply_with(bug_rate, kernel, s, &mut self.rng) {
+                Ok(k) => {
                     return CodingOutcome::Candidate {
                         kernel: k,
                         applied: s.mv,
-                    };
+                    }
                 }
-                Err(e) => reasons.push(format!("{}: {e}", s.mv)),
+                Err(e) => reasons.push(e),
             }
         }
         CodingOutcome::NothingApplicable { reasons }
+    }
+
+    /// Apply one specific suggestion — the beam-search seam. The fumble
+    /// roll comes from the caller's per-candidate PRNG stream: the K
+    /// speculative edits of one round are independent attempts, so
+    /// candidate k's roll must not depend on how many siblings
+    /// materialized before it (a sequential stream would re-order every
+    /// roll whenever K changes).
+    pub fn apply_one(
+        &self,
+        kernel: &Kernel,
+        s: &Suggestion,
+        rng: &mut Prng,
+    ) -> Result<Kernel, String> {
+        apply_with(self.bug_rate, kernel, s, rng)
+    }
+}
+
+/// Shared edit path: run the transform, then maybe fumble the edit.
+/// Inapplicable transforms report back as "compile errors" and consume
+/// no randomness.
+fn apply_with(
+    bug_rate: f32,
+    kernel: &Kernel,
+    s: &Suggestion,
+    rng: &mut Prng,
+) -> Result<Kernel, String> {
+    match transforms::apply(kernel, s.mv) {
+        Ok(mut k) => {
+            if rng.chance(bug_rate) {
+                inject_off_by_one(&mut k, rng);
+            }
+            Ok(k)
+        }
+        Err(e) => Err(format!("{}: {e}", s.mv)),
     }
 }
 
@@ -151,6 +185,24 @@ mod tests {
         let suite = tester.generate_tests(&spec);
         let r = tester.validate(&spec, &buggy, &suite);
         assert!(!r.pass, "off-by-one must fail validation");
+    }
+
+    #[test]
+    fn apply_one_is_deterministic_per_stream_and_reports_inapplicable() {
+        let k = kernels::silu::build_baseline();
+        let agent = CodingAgent::new(1.0, 0); // internal stream unused
+        let a = agent
+            .apply_one(&k, &sugg(Move::FastMath), &mut Prng::seed(7))
+            .unwrap();
+        let b = agent
+            .apply_one(&k, &sugg(Move::FastMath), &mut Prng::seed(7))
+            .unwrap();
+        assert_eq!(a, b, "same stream seed, same candidate");
+        assert_ne!(a, k, "fumble injected at bug_rate 1.0");
+        let err = agent
+            .apply_one(&k, &sugg(Move::Hoist), &mut Prng::seed(7))
+            .unwrap_err();
+        assert!(err.starts_with("hoist_loop_invariant:"), "{err}");
     }
 
     #[test]

@@ -302,6 +302,7 @@ mod tests {
             max_abs_err: 1.0,
             failure: None,
             cases: 3,
+            cancelled_cases: 0,
         };
         let mut llm = MockLlm::new(0.0, 1);
         let s = llm.suggest(&k, &failing, &p);

@@ -159,6 +159,7 @@ mod tests {
             max_abs_err: 1.0,
             failure: None,
             cases: 1,
+            cancelled_cases: 0,
         };
         let mut sa = SingleAgentPlanner::new(0.0, 1);
         assert!(sa.suggest(&k, &failing, &p).is_empty());

@@ -14,12 +14,26 @@
 //! identical to the old serial loop. Combined with the slot-compiled
 //! interpreter this is the coordinator's hot path (EXPERIMENTS.md §Perf).
 //!
+//! Two coordinator-scale refinements on top of the fan-out:
+//!
+//! * [`validate_with`] accepts a shared [`CompileCache`] so the launch
+//!   compile of a kernel the coordinator has already validated (a beam
+//!   survivor, the final winner) is reused instead of redone;
+//! * the workers share a cooperative cancellation token — the first
+//!   runtime failure raises it, peers observe it inside the compiled
+//!   machine's batched tick and stand down, and any worker cancelled
+//!   *ahead* of the first failing shape index is re-run serially so the
+//!   merged report stays byte-identical to the serial loop's.
+//!
 //! [`validate`]: TestingAgent::validate
+//! [`validate_with`]: TestingAgent::validate_with
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::thread;
 
-use crate::interp;
+use crate::interp::{self, CompileCache};
 use crate::ir::{DimEnv, Kernel};
 use crate::kernels::KernelSpec;
 use crate::util::Prng;
@@ -29,32 +43,61 @@ struct CaseOutcome {
     max_abs: f32,
     max_rel: f32,
     failure: Option<String>,
+    /// The worker observed the shared cancellation token mid-run; its
+    /// real outcome is unknown (re-run if the report needs it).
+    cancelled: bool,
 }
 
 /// Run one correctness case: interpret the candidate on `dims` and
 /// compare against the oracle. Pure function of its inputs — safe to run
-/// on any worker thread.
+/// on any worker thread. `cache` memoizes the launch compile; `cancel`
+/// is the validation's shared token — this worker polls it inside the
+/// interpreter and raises it for its peers on any failure.
 fn run_case(
     spec: &KernelSpec,
     kernel: &Kernel,
     dims: &DimEnv,
     seed: u64,
+    cache: Option<&CompileCache>,
+    cancel: &AtomicBool,
 ) -> CaseOutcome {
-    let inputs = (spec.gen_inputs)(dims, seed ^ 0xA5A5);
-    let refs: Vec<(&str, Vec<f32>)> = inputs
-        .iter()
-        .map(|(n, v)| (n.as_str(), v.clone()))
-        .collect();
-    let env = match interp::run_with_inputs(kernel, dims, &refs) {
-        Ok(env) => env,
+    let fail = |msg: String| CaseOutcome {
+        max_abs: f32::INFINITY,
+        max_rel: f32::INFINITY,
+        failure: Some(msg),
+        cancelled: false,
+    };
+    let prog = match cache {
+        Some(c) => c.get_or_compile(kernel, dims),
+        None => interp::compile(kernel, dims).map(Arc::new),
+    };
+    let prog = match prog {
+        Ok(p) => p,
         Err(e) => {
-            return CaseOutcome {
-                max_abs: f32::INFINITY,
-                max_rel: f32::INFINITY,
-                failure: Some(e.to_string()),
-            }
+            cancel.store(true, Ordering::Relaxed);
+            return fail(e.to_string());
         }
     };
+    let inputs = (spec.gen_inputs)(dims, seed ^ 0xA5A5);
+    let mut env = interp::ExecEnv::for_kernel(kernel, dims);
+    for (name, data) in &inputs {
+        env.set(name, data.clone());
+    }
+    match interp::run_compiled_with_cancel(&prog, &mut env, Some(cancel)) {
+        Ok(()) => {}
+        Err(interp::InterpError::Cancelled) => {
+            return CaseOutcome {
+                max_abs: 0.0,
+                max_rel: 0.0,
+                failure: None,
+                cancelled: true,
+            }
+        }
+        Err(e) => {
+            cancel.store(true, Ordering::Relaxed);
+            return fail(e.to_string());
+        }
+    }
     let input_map: BTreeMap<String, Vec<f32>> = inputs.iter().cloned().collect();
     let want = (spec.reference)(dims, &input_map);
     let mut max_abs = 0f32;
@@ -68,6 +111,7 @@ fn run_case(
         max_abs,
         max_rel,
         failure: None,
+        cancelled: false,
     }
 }
 
@@ -101,6 +145,10 @@ pub struct TestReport {
     /// Compile/run-style failure (interpreter error), if any.
     pub failure: Option<String>,
     pub cases: usize,
+    /// Workers that observed the cooperative cancellation token before
+    /// the report was merged (0 when every shape ran to completion).
+    /// Diagnostic only: the merged verdict is unaffected.
+    pub cancelled_cases: usize,
 }
 
 /// The testing agent.
@@ -152,29 +200,65 @@ impl TestingAgent {
     }
 
     /// Algorithm 1 line 11: validate a candidate against the oracle.
+    pub fn validate(&self, spec: &KernelSpec, kernel: &Kernel, suite: &TestSuite) -> TestReport {
+        self.validate_with(spec, kernel, suite, None)
+    }
+
+    /// [`validate`](Self::validate) with an optional shared compile
+    /// cache (the coordinator passes one per optimization run).
     ///
     /// Each correctness shape interprets on its own scoped worker thread;
     /// results merge deterministically by shape index, so the report is
     /// byte-identical to the old serial loop (first failing shape wins,
-    /// `cases` counts the shapes before it). Unlike the serial loop, all
-    /// shapes run to completion even when an early one fails: failures in
-    /// practice are immediate (OOB / unknown-name), so the extra work is
-    /// bounded by the slowest single case; a cooperative cancellation
-    /// token through the interpreter would recover the residual CPU
-    /// (ROADMAP follow-on).
-    pub fn validate(&self, spec: &KernelSpec, kernel: &Kernel, suite: &TestSuite) -> TestReport {
+    /// `cases` counts the shapes before it). The workers share a
+    /// cooperative cancellation token: the first runtime failure raises
+    /// it and still-running peers stand down inside the interpreter's
+    /// batched tick instead of running their (now moot) shapes to
+    /// completion. Because cancellation is racy — a worker *ahead* of
+    /// the first failing index may get cancelled too — any cancelled
+    /// case that the serial loop would have reached is re-run to
+    /// completion before the merge, preserving the serial report
+    /// exactly; cancelled cases past the first failure are simply never
+    /// read.
+    pub fn validate_with(
+        &self,
+        spec: &KernelSpec,
+        kernel: &Kernel,
+        suite: &TestSuite,
+        cache: Option<&CompileCache>,
+    ) -> TestReport {
         let seed = suite.seed;
-        let outcomes: Vec<CaseOutcome> = thread::scope(|s| {
+        let cancel = AtomicBool::new(false);
+        let mut outcomes: Vec<CaseOutcome> = thread::scope(|s| {
+            let cancel = &cancel;
             let handles: Vec<_> = suite
                 .correctness_shapes
                 .iter()
-                .map(|dims| s.spawn(move || run_case(spec, kernel, dims, seed)))
+                .map(|dims| {
+                    s.spawn(move || run_case(spec, kernel, dims, seed, cache, cancel))
+                })
                 .collect();
             handles
                 .into_iter()
                 .map(|h| h.join().expect("correctness-case worker panicked"))
                 .collect()
         });
+        let cancelled_cases = outcomes.iter().filter(|o| o.cancelled).count();
+
+        // Serial-equivalent repair: re-run any cancelled case that
+        // precedes the first real failure. The re-run bypasses the
+        // cache — how many workers got cancelled is a race, and routing
+        // the extra lookups through the shared counters would make a
+        // run's hit/miss stats nondeterministic; a rare spare compile
+        // (µs) is the cheaper currency.
+        for (dims, o) in suite.correctness_shapes.iter().zip(outcomes.iter_mut()) {
+            if o.cancelled {
+                *o = run_case(spec, kernel, dims, seed, None, &AtomicBool::new(false));
+            }
+            if o.failure.is_some() {
+                break;
+            }
+        }
 
         let mut max_rel = 0f32;
         let mut max_abs = 0f32;
@@ -187,8 +271,10 @@ impl TestingAgent {
                     max_abs_err: f32::INFINITY,
                     failure: Some(f.clone()),
                     cases,
+                    cancelled_cases,
                 };
             }
+            debug_assert!(!o.cancelled, "repair loop left a readable case cancelled");
             max_abs = max_abs.max(o.max_abs);
             max_rel = max_rel.max(o.max_rel);
             cases += 1;
@@ -200,6 +286,7 @@ impl TestingAgent {
             max_abs_err: max_abs,
             failure: None,
             cases,
+            cancelled_cases,
         }
     }
 }
@@ -310,6 +397,92 @@ mod tests {
         assert!(!r.pass);
         assert!(r.failure.is_some());
         assert_eq!(r.cases, 0, "first shape already fails");
+    }
+
+    #[test]
+    fn revalidating_the_same_winner_twice_compiles_once() {
+        let cache = CompileCache::with_default_capacity();
+        let agent = TestingAgent::new(TestQuality::Representative, 11);
+        let spec = kernels::silu::spec();
+        let suite = agent.generate_tests(&spec);
+        let winner = transforms::optimized_reference(&(spec.build_baseline)());
+        let a = agent.validate_with(&spec, &winner, &suite, Some(&cache));
+        assert!(a.pass);
+        let shapes = suite.correctness_shapes.len();
+        assert_eq!(cache.stats().misses as usize, shapes, "one compile per shape");
+        let b = agent.validate_with(&spec, &winner, &suite, Some(&cache));
+        assert!(b.pass);
+        assert_eq!(
+            cache.stats().misses as usize,
+            shapes,
+            "second validation must not compile at all"
+        );
+        assert_eq!(cache.stats().hits as usize, shapes);
+    }
+
+    #[test]
+    fn cached_and_uncached_validation_agree() {
+        let cache = CompileCache::with_default_capacity();
+        let agent = TestingAgent::new(TestQuality::Representative, 12);
+        for spec in kernels::all_specs() {
+            let suite = agent.generate_tests(&spec);
+            let k = (spec.build_baseline)();
+            let a = agent.validate(&spec, &k, &suite);
+            let b = agent.validate_with(&spec, &k, &suite, Some(&cache));
+            let c = agent.validate_with(&spec, &k, &suite, Some(&cache));
+            for other in [&b, &c] {
+                assert_eq!(a.pass, other.pass);
+                assert_eq!(a.cases, other.cases);
+                assert_eq!(a.max_rel_err.to_bits(), other.max_rel_err.to_bits());
+                assert_eq!(a.max_abs_err.to_bits(), other.max_abs_err.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn late_workers_observe_the_cancellation_token() {
+        // One shape fails instantly, the others are made expensive: the
+        // failing worker raises the token and at least one busy peer
+        // must stand down instead of running to completion. The merged
+        // report still matches serial semantics exactly.
+        let agent = TestingAgent::new(TestQuality::Representative, 13);
+        let spec = kernels::silu::spec();
+        let suite = agent.generate_tests(&spec);
+        // silu correctness shapes have out lengths 2048, 514, 1024: a
+        // poison store at index 1024 is OOB for the 514- and 1024-long
+        // shapes (indices 1 and 2) and in-bounds only for shape 0,
+        // where the kernel body overwrites it later so that shape stays
+        // correct. Shape 0 additionally runs a long busy loop on one
+        // thread, so it is mid-flight when a failing sibling raises the
+        // token — the "late worker" this test pins.
+        let mut k = (spec.build_baseline)();
+        use crate::ir::build::*;
+        let mut body = vec![
+            store("out", c(1024), fc(0.0)),
+            if_(
+                eq(tx(), c(0)),
+                vec![if_(
+                    eq(bx(), c(0)),
+                    vec![for_up(
+                        "busy",
+                        c(0),
+                        c(1_000_000),
+                        c(1),
+                        vec![store("out", c(0), fc(0.0))],
+                    )],
+                )],
+            ),
+        ];
+        body.append(&mut k.body);
+        k.body = body;
+        let r = agent.validate_with(&spec, &k, &suite, None);
+        assert!(!r.pass);
+        assert!(r.failure.is_some(), "OOB store surfaces as runtime failure");
+        assert_eq!(r.cases, 1, "shapes before the failing one still count");
+        assert!(
+            r.cancelled_cases >= 1,
+            "a busy peer must observe the token: {r:?}"
+        );
     }
 
     #[test]

@@ -11,6 +11,10 @@
 //! temperature = 0.1
 //! mode = "multi"
 //!
+//! # speculative beam search (1 x 1 = the paper's greedy loop)
+//! beam_width = 2
+//! candidates_per_round = 3
+//!
 //! # simulator overrides
 //! launch_overhead_us = 7.0
 //! dram_bw = 3.0e12
@@ -62,6 +66,18 @@ pub fn apply(
         "seed" => cfg.seed = value.parse()?,
         "bug_rate" => cfg.bug_rate = value.parse()?,
         "temperature" => cfg.temperature = value.parse()?,
+        "beam_width" => {
+            cfg.beam_width = value.parse()?;
+            if cfg.beam_width == 0 {
+                return Err(anyhow!("beam_width must be >= 1"));
+            }
+        }
+        "candidates_per_round" | "candidates" => {
+            cfg.candidates_per_round = value.parse()?;
+            if cfg.candidates_per_round == 0 {
+                return Err(anyhow!("candidates_per_round must be >= 1"));
+            }
+        }
         "mode" => {
             cfg.mode = match value {
                 "multi" | "multi-agent" => AgentMode::Multi,
@@ -106,6 +122,24 @@ mod tests {
         assert!(parse("bogus = 1\n").is_err());
         assert!(parse("rounds\n").is_err());
         assert!(parse("mode = \"quantum\"\n").is_err());
+    }
+
+    #[test]
+    fn parses_beam_settings_and_rejects_zero() {
+        let cfg = parse("beam_width = 2\ncandidates_per_round = 3\n").unwrap();
+        assert_eq!(cfg.beam_width, 2);
+        assert_eq!(cfg.candidates_per_round, 3);
+        let cfg = parse("candidates = 4\n").unwrap();
+        assert_eq!(cfg.candidates_per_round, 4, "short alias accepted");
+        assert!(parse("beam_width = 0\n").is_err());
+        assert!(parse("candidates_per_round = 0\n").is_err());
+    }
+
+    #[test]
+    fn defaults_are_greedy() {
+        let cfg = parse("").unwrap();
+        assert_eq!(cfg.beam_width, 1);
+        assert_eq!(cfg.candidates_per_round, 1);
     }
 
     #[test]

@@ -13,9 +13,19 @@
 //! the next round continues from the best known-good kernel rather than
 //! the broken one (the paper's log-based selection implies the same
 //! end result; carrying a broken kernel forward would waste rounds).
+//!
+//! Since the beam refactor, the loop generalizes Algorithm 1 to a
+//! speculative beam search ([`search`]): `beam_width` known-good states
+//! each speculate `candidates_per_round` planner suggestions per round,
+//! all evaluated concurrently. The defaults (`B = K = 1`) reproduce the
+//! paper's greedy trajectory bit-for-bit, so every paper-fidelity test
+//! keeps its meaning.
 
 pub mod run;
+pub mod search;
 
 pub use run::{
-    optimize, optimize_all_parallel, AgentMode, Config, Outcome, RoundRecord,
+    optimize, optimize_all_parallel, optimize_greedy, AgentMode, Config,
+    Outcome, RoundRecord,
 };
+pub use search::optimize_beam;

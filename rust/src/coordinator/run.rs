@@ -1,15 +1,22 @@
 //! The optimization loop (Algorithm 1) and its configuration.
+//!
+//! [`optimize`] runs the speculative beam engine in [`super::search`];
+//! at the default `beam_width = 1, candidates_per_round = 1` it
+//! reproduces the paper's greedy loop bit-for-bit. The literal greedy
+//! loop survives here as [`optimize_greedy`] — the differential oracle
+//! (`rust/tests/beam_differential.rs`), mirroring how
+//! `interp::reference` backs the compiled machine.
 
 use std::thread;
 
-use crate::agents::{
-    CodingAgent, CodingOutcome, MockLlm, PlannerPolicy, ProfilingAgent,
-    SingleAgentPlanner, TestQuality, TestingAgent,
-};
+use crate::agents::{CodingAgent, ProfilingAgent, TestQuality, TestingAgent};
+use crate::interp::CompileCache;
 use crate::ir::{printer, Kernel};
 use crate::kernels::KernelSpec;
-use crate::sim::{self, GpuModel};
+use crate::sim::GpuModel;
 use crate::transforms::Move;
+
+use super::search::{self, SearchTelemetry};
 
 /// Multi-agent (Figure 1) or single-agent baseline (§5.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,6 +45,12 @@ pub struct Config {
     pub bug_rate: f32,
     /// Planner ranking noise.
     pub temperature: f32,
+    /// Beam width B: known-good states carried between rounds
+    /// (1 = the paper's greedy Algorithm 1).
+    pub beam_width: usize,
+    /// Top-K planner suggestions speculatively materialized and
+    /// evaluated concurrently per beam state per round.
+    pub candidates_per_round: usize,
     pub model: GpuModel,
 }
 
@@ -49,6 +62,8 @@ impl Config {
             seed: 42,
             bug_rate: 0.1,
             temperature: 0.1,
+            beam_width: 1,
+            candidates_per_round: 1,
             model: GpuModel::h100(),
         }
     }
@@ -61,16 +76,35 @@ impl Config {
             bug_rate: 0.1,
             // One agent juggling four roles plans with more noise.
             temperature: 0.3,
+            beam_width: 1,
+            candidates_per_round: 1,
             model: GpuModel::h100(),
+        }
+    }
+
+    /// Speculative preset: the multi-agent system widened to B = 2 beam
+    /// states × K = 3 concurrent candidates per state per round.
+    pub fn multi_agent_beam() -> Config {
+        Config {
+            beam_width: 2,
+            candidates_per_round: 3,
+            ..Config::multi_agent()
         }
     }
 }
 
 /// One `(round, code, correctness, performance)` log tuple plus the
-/// coordinator's decision.
-#[derive(Debug, Clone)]
+/// coordinator's decision. Beam search logs one record per *speculated
+/// candidate* (plus one per state with nothing applicable), so a round
+/// may contribute up to `beam_width × candidates_per_round` records; in
+/// greedy mode (`B = K = 1`) this stays one record per round.
+#[derive(Debug, Clone, PartialEq)]
 pub struct RoundRecord {
     pub round: usize,
+    /// Beam state (parent) index this record belongs to (0 in greedy).
+    pub beam_state: usize,
+    /// Candidate index within the beam state (0 in greedy).
+    pub candidate: usize,
     /// Move the coding agent applied (None = nothing applicable).
     pub applied: Option<Move>,
     /// Planner rationale for the applied move.
@@ -81,7 +115,8 @@ pub struct RoundRecord {
     pub speedup_internal: f64,
     /// Mean time on the agents' perf shapes (µs).
     pub mean_us_internal: f64,
-    /// Whether the candidate was kept as the new working kernel.
+    /// Whether the candidate was kept as a working kernel (a beam state
+    /// for the next round; in greedy mode, the new current kernel).
     pub accepted: bool,
     pub loc: usize,
     pub note: String,
@@ -106,33 +141,52 @@ pub struct Outcome {
     /// Mean baseline / optimized time on representative shapes (µs).
     pub base_mean_us: f64,
     pub opt_mean_us: f64,
+    /// Total speculative candidates validated + profiled.
+    pub candidates_evaluated: usize,
+    /// Peak number of candidate evaluations in flight at once (1 in
+    /// greedy mode — the concurrency witness for the beam tests).
+    pub peak_concurrent_evals: usize,
+    /// Interpreter compile-cache counters for the run.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
 }
 
 /// Accept a candidate if its measured (internal) geomean does not regress
 /// beyond noise. The unrepresentative single-agent suite makes this gate
 /// porous — the §5.2 mechanism.
-const ACCEPT_THRESHOLD: f64 = 0.98;
+pub(crate) const ACCEPT_THRESHOLD: f64 = 0.98;
 
-/// Run Algorithm 1 on one kernel.
+/// Run the optimization loop on one kernel.
+///
+/// Always dispatches to the speculative beam engine
+/// ([`search::optimize_beam`]); at the default `beam_width = 1,
+/// candidates_per_round = 1` the engine's trajectory is bit-identical to
+/// Algorithm 1's greedy loop (pinned by `tests/beam_differential.rs`
+/// against [`optimize_greedy`]).
 pub fn optimize(spec: &KernelSpec, cfg: &Config) -> Outcome {
+    search::optimize_beam(spec, cfg)
+}
+
+/// The literal Algorithm 1 loop — one candidate per round, evaluated
+/// serially. Kept as the semantic oracle the beam engine is
+/// differentially tested against (the `interp::reference` pattern);
+/// `beam_width`/`candidates_per_round` are ignored here.
+pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
     let quality = match cfg.mode {
         AgentMode::Multi => TestQuality::Representative,
         AgentMode::Single => TestQuality::Unrepresentative,
     };
     let tester = TestingAgent::new(quality, cfg.seed);
     let profiler = ProfilingAgent::new(cfg.model.clone());
-    let mut planner: Box<dyn PlannerPolicy> = match cfg.mode {
-        AgentMode::Multi => Box::new(MockLlm::new(cfg.temperature, cfg.seed)),
-        AgentMode::Single => {
-            Box::new(SingleAgentPlanner::new(cfg.temperature, cfg.seed))
-        }
-    };
-    let mut coder = CodingAgent::new(cfg.bug_rate, cfg.seed ^ 0xC0DE);
+    let mut planner = search::make_planner(cfg);
+    let coder = CodingAgent::new(cfg.bug_rate, cfg.seed ^ 0xC0DE);
+    let cache = CompileCache::with_default_capacity();
+    let probe = search::ConcurrencyProbe::new();
 
     // Algorithm 1, lines 1-7: suite + baseline profile + log init.
     let baseline = (spec.build_baseline)();
     let suite = tester.generate_tests(spec);
-    let base_tests = tester.validate(spec, &baseline, &suite);
+    let base_tests = tester.validate_with(spec, &baseline, &suite, Some(&cache));
     let base_profile = profiler.profile(&baseline, &suite, None);
     debug_assert!(base_tests.pass, "baseline must pass its own tests");
 
@@ -143,42 +197,53 @@ pub fn optimize(spec: &KernelSpec, cfg: &Config) -> Outcome {
     let mut cur_tests = base_tests;
     let mut cur_profile = base_profile.clone();
     let mut blocked: Vec<Move> = Vec::new();
+    let mut candidates_evaluated = 0usize;
 
     // Lines 8-16: R rounds of suggest → apply → validate → profile.
     for round in 1..=cfg.rounds {
         let mut suggestions = planner.suggest(&cur, &cur_tests, &cur_profile);
         suggestions.retain(|s| !blocked.contains(&s.mv));
-        let outcome = coder.apply(&cur, &suggestions);
-        let (candidate, applied, rationale) = match outcome {
-            CodingOutcome::Candidate { kernel, applied } => {
-                let why = suggestions
-                    .iter()
-                    .find(|s| s.mv == applied)
-                    .map(|s| s.rationale.clone())
-                    .unwrap_or_default();
-                (kernel, applied, why)
+        // First applicable suggestion, fumble roll from the same derived
+        // per-candidate stream the beam engine uses for (round, 0, 0).
+        let mut materialized: Option<(Kernel, Move, String)> = None;
+        let mut reasons = Vec::new();
+        for s in &suggestions {
+            let mut stream = search::candidate_stream(cfg.seed, round, 0, 0);
+            match coder.apply_one(&cur, s, &mut stream) {
+                Ok(k) => {
+                    materialized = Some((k, s.mv, s.rationale.clone()));
+                    break;
+                }
+                Err(e) => reasons.push(e),
             }
-            CodingOutcome::NothingApplicable { reasons } => {
-                records.push(RoundRecord {
-                    round,
-                    applied: None,
-                    rationale: String::new(),
-                    pass: true,
-                    speedup_internal: best_speedup,
-                    mean_us_internal: cur_profile.mean_us,
-                    accepted: false,
-                    loc: printer::loc(&cur),
-                    note: format!(
-                        "no applicable suggestion ({})",
-                        reasons.join("; ")
-                    ),
-                });
-                continue;
-            }
+        }
+        let Some((candidate, applied, rationale)) = materialized else {
+            records.push(RoundRecord {
+                round,
+                beam_state: 0,
+                candidate: 0,
+                applied: None,
+                rationale: String::new(),
+                pass: true,
+                speedup_internal: best_speedup,
+                mean_us_internal: cur_profile.mean_us,
+                accepted: false,
+                loc: printer::loc(&cur),
+                note: format!(
+                    "no applicable suggestion ({})",
+                    reasons.join("; ")
+                ),
+            });
+            continue;
         };
 
-        let tests = tester.validate(spec, &candidate, &suite);
-        let profile = profiler.profile(&candidate, &suite, Some(&base_profile));
+        let (tests, profile) = {
+            let _in_flight = probe.enter();
+            let t = tester.validate_with(spec, &candidate, &suite, Some(&cache));
+            let p = profiler.profile(&candidate, &suite, Some(&base_profile));
+            (t, p)
+        };
+        candidates_evaluated += 1;
         let speedup = profile.speedup_vs_baseline;
         let improved = speedup >= best_speedup * ACCEPT_THRESHOLD;
         let accepted = tests.pass && improved;
@@ -203,6 +268,8 @@ pub fn optimize(spec: &KernelSpec, cfg: &Config) -> Outcome {
 
         records.push(RoundRecord {
             round,
+            beam_state: 0,
+            candidate: 0,
             applied: Some(applied),
             rationale,
             pass: tests.pass,
@@ -214,6 +281,10 @@ pub fn optimize(spec: &KernelSpec, cfg: &Config) -> Outcome {
         });
 
         if accepted {
+            // The kernel changed, so previously non-improving moves may
+            // pay again: stale blocks are dropped (they used to persist
+            // for all remaining rounds — the stale-block bug).
+            blocked.clear();
             cur = candidate;
             cur_tests = tests;
             cur_profile = profile;
@@ -226,60 +297,19 @@ pub fn optimize(spec: &KernelSpec, cfg: &Config) -> Outcome {
         // module docs for the deviation note).
     }
 
-    // Post-processing (§3.2): validate the winner against the oracle and
-    // measure on the representative shapes, independent of the agents'
-    // internal suite. The oracle re-validation (which itself fans out one
-    // interpreter worker per shape) and the two per-shape perf sweeps are
-    // independent, so they run on concurrent scoped workers; results are
-    // picked up by name, keeping the outcome deterministic.
-    let shapes = (spec.representative_shapes)();
-    let (final_correct, base_reports, best_reports) = thread::scope(|s| {
-        let correct = s.spawn(|| {
-            let final_tester =
-                TestingAgent::new(TestQuality::Representative, cfg.seed ^ 0xFEED);
-            let final_suite = final_tester.generate_tests(spec);
-            final_tester.validate(spec, &best, &final_suite).pass
-        });
-        let base = s.spawn(|| sim::profile_shapes(&cfg.model, &baseline, &shapes));
-        let opt = s.spawn(|| sim::profile_shapes(&cfg.model, &best, &shapes));
-        (
-            correct.join().expect("oracle re-validation worker panicked"),
-            base.join().expect("baseline profile worker panicked"),
-            opt.join().expect("optimized profile worker panicked"),
-        )
-    });
-    let per_shape: Vec<(String, f64, f64, f64)> = shapes
-        .iter()
-        .zip(base_reports.iter().zip(&best_reports))
-        .map(|(d, (b, o))| {
-            (
-                spec.shape_label(d),
-                b.total_us,
-                o.total_us,
-                b.total_us / o.total_us,
-            )
-        })
-        .collect();
-    let final_speedup = sim::geomean_speedup(&base_reports, &best_reports);
-    let base_mean_us =
-        base_reports.iter().map(|r| r.total_us).sum::<f64>() / shapes.len() as f64;
-    let opt_mean_us =
-        best_reports.iter().map(|r| r.total_us).sum::<f64>() / shapes.len() as f64;
-
-    Outcome {
-        kernel_name: spec.paper_name.to_string(),
-        mode: cfg.mode,
+    // Post-processing (§3.2) is shared with the beam engine.
+    search::finish_outcome(
+        spec,
+        cfg,
         records,
-        baseline_loc: printer::loc(&baseline),
-        best_loc: printer::loc(&best),
         baseline,
         best,
-        final_speedup,
-        per_shape,
-        final_correct,
-        base_mean_us,
-        opt_mean_us,
-    }
+        &cache,
+        SearchTelemetry {
+            candidates_evaluated,
+            peak_concurrent_evals: probe.peak(),
+        },
+    )
 }
 
 /// Optimize all three kernels concurrently (one coordinator per kernel on

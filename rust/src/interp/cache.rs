@@ -1,0 +1,278 @@
+//! Compile cache: `(kernel structural hash, dims) → Arc<CompiledKernel>`.
+//!
+//! The coordinator re-validates the same winner on the same shapes many
+//! times per run — beam survivors are re-validated whenever sibling
+//! states materialize the same candidate, and the final oracle pass
+//! replays the winner on shapes it was already validated on — while
+//! [`super::compile`] is per-(kernel, dims) and µs-scale but runs
+//! thousands of times at production scale (ROADMAP "Interpreter caching
+//! keyed by kernel hash"). This cache removes those recompiles: a small
+//! LRU keyed by the kernel's structural hash plus the concrete launch
+//! dims, safe to share across scoped validation workers, with hit/miss
+//! counters for tests and run reports.
+
+use std::collections::hash_map::DefaultHasher;
+use std::fmt::{self, Write as _};
+use std::hash::Hasher;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::ir::{DimEnv, Kernel};
+
+use super::compile::{compile, CompiledKernel};
+use super::machine::InterpError;
+
+/// Feeds `Debug` output straight into a hasher — no intermediate
+/// `String` on the lookup hot path.
+struct HashWriter<'a>(&'a mut DefaultHasher);
+
+impl fmt::Write for HashWriter<'_> {
+    fn write_str(&mut self, s: &str) -> fmt::Result {
+        self.0.write(s.as_bytes());
+        Ok(())
+    }
+}
+
+/// Structural hash of a kernel. Every launch-relevant detail — params,
+/// shared allocations, launch geometry, the full body — feeds the hash
+/// through the IR's `Debug` rendering, which is a faithful structural
+/// serialization (two kernels render identically iff they are
+/// structurally equal, and equal values always emit the same write
+/// sequence). `DefaultHasher::new()` instances all produce the same
+/// sequence, so hashes are stable within a process — all a per-run
+/// cache needs.
+pub fn kernel_hash(kernel: &Kernel) -> u64 {
+    let mut h = DefaultHasher::new();
+    let mut w = HashWriter(&mut h);
+    let _ = write!(w, "{kernel:?}");
+    h.finish()
+}
+
+/// Hit/miss counters, readable while the cache is in use. `misses`
+/// counts compiles actually performed: when two workers race on the
+/// same brand-new key both compile and both count, so under concurrent
+/// duplicate candidates the split can over-report misses by the number
+/// of lost races (serial callers always see exact, deterministic
+/// counts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+struct Entry {
+    khash: u64,
+    /// Concrete dims, in `DimEnv` (BTreeMap) iteration order.
+    dims: Vec<(String, i64)>,
+    prog: Arc<CompiledKernel>,
+    last_used: u64,
+}
+
+/// Positional comparison against a `DimEnv` without building a key
+/// (both sides iterate in sorted-by-name order).
+fn dims_match(stored: &[(String, i64)], dims: &DimEnv) -> bool {
+    stored.len() == dims.len()
+        && stored
+            .iter()
+            .zip(dims.iter())
+            .all(|(s, d)| &s.0 == d.0 && s.1 == *d.1)
+}
+
+struct Inner {
+    entries: Vec<Entry>,
+    tick: u64,
+}
+
+/// A small LRU over compiled launches, shareable across threads.
+/// Lookups are linear scans: capacities are tens of entries, far below
+/// the crossover where a map would pay for itself.
+pub struct CompileCache {
+    cap: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CompileCache {
+    /// Roomy enough to hold every (candidate, shape) pair of a default
+    /// beam run without eviction, which keeps per-run hit/miss stats
+    /// deterministic for a deterministic candidate sequence.
+    pub const DEFAULT_CAPACITY: usize = 256;
+
+    pub fn new(cap: usize) -> CompileCache {
+        assert!(cap > 0, "compile cache capacity must be positive");
+        CompileCache {
+            cap,
+            inner: Mutex::new(Inner {
+                entries: Vec::new(),
+                tick: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn with_default_capacity() -> CompileCache {
+        CompileCache::new(Self::DEFAULT_CAPACITY)
+    }
+
+    /// Fetch the compiled launch for `(kernel, dims)`, compiling on a
+    /// miss. Compile errors surface to the caller and are never cached
+    /// (they are immediate, so retrying them is cheap).
+    pub fn get_or_compile(
+        &self,
+        kernel: &Kernel,
+        dims: &DimEnv,
+    ) -> Result<Arc<CompiledKernel>, InterpError> {
+        let khash = kernel_hash(kernel);
+        {
+            let mut guard = self.inner.lock().expect("compile cache poisoned");
+            guard.tick += 1;
+            let tick = guard.tick;
+            if let Some(e) = guard
+                .entries
+                .iter_mut()
+                .find(|e| e.khash == khash && dims_match(&e.dims, dims))
+            {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(&e.prog));
+            }
+        }
+        // Compile outside the lock: two workers racing on the same key
+        // may both compile, but the results are identical and the second
+        // insert is dropped — only throughput (and the miss counter, see
+        // [`CacheStats`]), never correctness, is at stake.
+        let prog = Arc::new(compile(kernel, dims)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.inner.lock().expect("compile cache poisoned");
+        guard.tick += 1;
+        let tick = guard.tick;
+        if !guard
+            .entries
+            .iter()
+            .any(|e| e.khash == khash && dims_match(&e.dims, dims))
+        {
+            if guard.entries.len() >= self.cap {
+                let lru = guard
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(i, _)| i)
+                    .expect("entries non-empty at capacity");
+                guard.entries.swap_remove(lru);
+            }
+            guard.entries.push(Entry {
+                khash,
+                dims: dims.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+                prog: Arc::clone(&prog),
+                last_used: tick,
+            });
+        }
+        Ok(prog)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Entries currently resident.
+    pub fn len(&self) -> usize {
+        self.inner
+            .lock()
+            .expect("compile cache poisoned")
+            .entries
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl fmt::Debug for CompileCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.stats();
+        f.debug_struct("CompileCache")
+            .field("cap", &self.cap)
+            .field("len", &self.len())
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::*;
+    use crate::kernels;
+    use crate::transforms::{self, Move};
+
+    #[test]
+    fn second_lookup_hits_and_reuses_the_compile() {
+        let cache = CompileCache::new(8);
+        let k = kernels::silu::build_baseline();
+        let dims = &(kernels::silu::spec().test_shapes)()[0];
+        let a = cache.get_or_compile(&k, dims).unwrap();
+        let b = cache.get_or_compile(&k, dims).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the same compile");
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_dims_and_kernels_are_distinct_entries() {
+        let cache = CompileCache::new(8);
+        let spec = kernels::silu::spec();
+        let k = (spec.build_baseline)();
+        let shapes = (spec.test_shapes)();
+        cache.get_or_compile(&k, &shapes[0]).unwrap();
+        cache.get_or_compile(&k, &shapes[1]).unwrap();
+        let opt = transforms::apply(&k, Move::FastMath).unwrap();
+        cache.get_or_compile(&opt, &shapes[0]).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 3 });
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn lru_evicts_the_stalest_entry_at_capacity() {
+        let cache = CompileCache::new(2);
+        let spec = kernels::silu::spec();
+        let k = (spec.build_baseline)();
+        let shapes = (spec.test_shapes)();
+        cache.get_or_compile(&k, &shapes[0]).unwrap(); // miss: {0}
+        cache.get_or_compile(&k, &shapes[1]).unwrap(); // miss: {0, 1}
+        cache.get_or_compile(&k, &shapes[0]).unwrap(); // hit, 0 freshened
+        cache.get_or_compile(&k, &shapes[2]).unwrap(); // miss, evicts 1
+        assert_eq!(cache.len(), 2);
+        cache.get_or_compile(&k, &shapes[0]).unwrap(); // still resident
+        assert_eq!(cache.stats().hits, 2);
+        cache.get_or_compile(&k, &shapes[1]).unwrap(); // evicted: miss
+        assert_eq!(cache.stats().misses, 4);
+    }
+
+    #[test]
+    fn hash_is_structural() {
+        let k = kernels::rmsnorm::build_baseline();
+        assert_eq!(kernel_hash(&k), kernel_hash(&k.clone()));
+        let moved = transforms::apply(&k, Move::WarpShuffle).unwrap();
+        assert_ne!(kernel_hash(&k), kernel_hash(&moved));
+    }
+
+    #[test]
+    fn compile_errors_are_not_cached() {
+        let cache = CompileCache::new(8);
+        let mut k = kernels::silu::build_baseline();
+        k.body.push(store("missing_buf", c(0), fc(0.0)));
+        let dims = &(kernels::silu::spec().test_shapes)()[0];
+        assert!(cache.get_or_compile(&k, dims).is_err());
+        assert!(cache.get_or_compile(&k, dims).is_err());
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().hits, 0);
+    }
+}

@@ -14,7 +14,10 @@
 //! buffers round on store and on input entry, and the same
 //! [`InterpError`] surface (including `STEP_LIMIT`, with ticks batched
 //! per basic block instead of per statement) reports failures to the
-//! testing agent.
+//! testing agent. The batched tick also polls an optional cooperative
+//! cancellation token ([`run_compiled_with_cancel`]) so a launch whose
+//! verdict no longer matters — a sibling shape of the same candidate
+//! already failed — stands down within `CANCEL_CHECK_STEPS` steps.
 //!
 //! One documented deviation: a register that is declared only inside a
 //! conditionally-executed branch and read afterwards reads `0` here
@@ -27,6 +30,7 @@
 //! hot path (see ROADMAP follow-ons).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::ir::expr::{eval_cmp, eval_ibin};
 use crate::ir::types::{f32_to_f16_round, DType};
@@ -41,6 +45,12 @@ use super::eval::{fastmath_quantize, EvalError, WARP_SIZE};
 /// gone wrong (e.g. a broken loop update) fail fast instead of hanging the
 /// testing agent.
 const STEP_LIMIT: u64 = 200_000_000;
+
+/// How many steps may elapse between looks at the cooperative
+/// cancellation token. One relaxed atomic load every few thousand steps
+/// is invisible next to the work those steps do, and it bounds the
+/// latency between a peer's failure and this worker standing down.
+const CANCEL_CHECK_STEPS: u64 = 4_096;
 
 /// Mantissa bits the fast-math intrinsics keep (see [`super::eval`]).
 const FAST_BITS: u32 = 16;
@@ -102,6 +112,10 @@ pub enum InterpError {
     NonUniformLoop(String),
     /// STEP_LIMIT exceeded.
     IterationLimit,
+    /// The launch observed its cooperative cancellation token: some
+    /// peer (another shape of the same candidate) already failed, so
+    /// this result is moot and the worker stands down early.
+    Cancelled,
     /// A buffer has the wrong length for the dims.
     BadBufferLen {
         buf: String,
@@ -118,6 +132,7 @@ impl std::fmt::Display for InterpError {
                 write!(f, "non-uniform collective loop over {v}")
             }
             InterpError::IterationLimit => write!(f, "iteration limit exceeded"),
+            InterpError::Cancelled => write!(f, "cancelled by cooperative token"),
             InterpError::BadBufferLen { buf, expect, got } => write!(
                 f,
                 "buffer {buf} has length {got}, dims imply {expect}"
@@ -151,6 +166,22 @@ pub fn run(
 pub fn run_compiled(
     prog: &CompiledKernel,
     env: &mut ExecEnv,
+) -> Result<(), InterpError> {
+    run_compiled_with_cancel(prog, env, None)
+}
+
+/// [`run_compiled`] with an optional cooperative cancellation token.
+///
+/// The token is polled inside the machine's batched step-limit tick
+/// (every [`CANCEL_CHECK_STEPS`] steps, relaxed load); when it reads
+/// `true` the launch unwinds with [`InterpError::Cancelled`], buffers
+/// restored like any other failure. Parallel validation raises the token
+/// on the first shape failure so sibling workers stop burning CPU on a
+/// candidate whose verdict is already known.
+pub fn run_compiled_with_cancel(
+    prog: &CompiledKernel,
+    env: &mut ExecEnv,
+    cancel: Option<&AtomicBool>,
 ) -> Result<(), InterpError> {
     // Validate buffer lengths.
     for p in &prog.params {
@@ -194,6 +225,12 @@ pub fn run_compiled(
         iregs: vec![0i64; block * ni],
         bx: 0,
         steps: 0,
+        cancel,
+        cancel_check_at: if cancel.is_some() {
+            CANCEL_CHECK_STEPS
+        } else {
+            u64::MAX
+        },
     };
     let result = m.run_grid();
 
@@ -219,6 +256,11 @@ struct Machine<'a> {
     iregs: Vec<i64>,
     bx: i64,
     steps: u64,
+    /// Cooperative cancellation token (None = never polled).
+    cancel: Option<&'a AtomicBool>,
+    /// Step count at which the token is next polled (`u64::MAX` when no
+    /// token is attached, so the hot path pays a single compare).
+    cancel_check_at: u64,
 }
 
 impl<'a> Machine<'a> {
@@ -247,6 +289,14 @@ impl<'a> Machine<'a> {
         self.steps += n;
         if self.steps > STEP_LIMIT {
             return Err(InterpError::IterationLimit);
+        }
+        if self.steps >= self.cancel_check_at {
+            self.cancel_check_at = self.steps + CANCEL_CHECK_STEPS;
+            if let Some(token) = self.cancel {
+                if token.load(Ordering::Relaxed) {
+                    return Err(InterpError::Cancelled);
+                }
+            }
         }
         Ok(())
     }
@@ -966,6 +1016,80 @@ mod tests {
         assert_eq!(av, bv);
         // Every even index written (step 2), odd untouched.
         assert_eq!(a.get("out"), &[1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+    }
+
+    /// Single-thread kernel that spins `iters` loop trips accumulating
+    /// into `y[0]` — long enough that a cancellation token is observed
+    /// mid-run, far below STEP_LIMIT.
+    fn busy_kernel(iters: i64) -> Kernel {
+        Kernel {
+            name: "busy".into(),
+            dims: vec![],
+            params: vec![BufParam {
+                name: "y".into(),
+                dtype: DType::F32,
+                len: c(1),
+                io: BufIo::InOut,
+            }],
+            shared: vec![],
+            launch: Launch { grid: c(1), block: 1 },
+            body: vec![for_up(
+                "i",
+                c(0),
+                c(iters),
+                c(1),
+                vec![store("y", c(0), fadd(load("y", c(0)), fc(1.0)))],
+            )],
+        }
+    }
+
+    #[test]
+    fn preset_cancel_token_stops_the_launch() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let k = busy_kernel(30_000_000);
+        let dims = DimEnv::new();
+        let prog = compile(&k, &dims).unwrap();
+        let mut env = ExecEnv::for_kernel(&k, &dims);
+        let token = AtomicBool::new(true);
+        let err = super::run_compiled_with_cancel(&prog, &mut env, Some(&token))
+            .unwrap_err();
+        assert!(matches!(err, InterpError::Cancelled), "{err}");
+        // Buffers were restored even though the launch was cancelled.
+        assert_eq!(env.get("y").len(), 1);
+        // The launch stood down near the first poll, not at completion.
+        assert!(env.get("y")[0] < 2.0 * CANCEL_CHECK_STEPS as f32);
+        // A fresh run without a token completes normally.
+        token.store(false, Ordering::Relaxed);
+        let mut env2 = ExecEnv::for_kernel(&k, &dims);
+        let small = compile(&busy_kernel(10), &dims).unwrap();
+        assert!(super::run_compiled(&small, &mut env2).is_ok());
+        assert_eq!(env2.get("y")[0], 10.0);
+    }
+
+    #[test]
+    fn late_cancel_is_observed_by_a_running_worker() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let k = busy_kernel(30_000_000);
+        let dims = DimEnv::new();
+        let prog = compile(&k, &dims).unwrap();
+        let token = AtomicBool::new(false);
+        let result = std::thread::scope(|s| {
+            let worker = s.spawn(|| {
+                let mut env = ExecEnv::for_kernel(&k, &dims);
+                super::run_compiled_with_cancel(&prog, &mut env, Some(&token))
+            });
+            // Let the worker get going, then pull the plug.
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            token.store(true, Ordering::Relaxed);
+            worker.join().expect("cancelled worker panicked")
+        });
+        // Either the token arrived mid-run (the expected path) or the
+        // machine ran 30M trips in under 20ms, which this interpreter
+        // does not do.
+        assert!(
+            matches!(result, Err(InterpError::Cancelled)),
+            "worker must observe the late token: {result:?}"
+        );
     }
 
     #[test]

@@ -28,15 +28,26 @@
 //!   bit-exact semantic baseline for differential tests and the
 //!   `coordinator_hotpath` bench's before/after comparison
 //!   (EXPERIMENTS.md §Perf).
+//!
+//! Two coordinator-facing extensions ride on the compiled engine:
+//! [`cache`] memoizes `compile` per (kernel structural hash, dims) so
+//! re-validating a beam survivor never recompiles, and
+//! [`run_compiled_with_cancel`] threads a cooperative cancellation token
+//! through the machine's batched tick so parallel validation can stop
+//! sibling shapes once a candidate's verdict is known.
 
+pub mod cache;
 mod compile;
 mod eval;
 mod machine;
 pub mod reference;
 
+pub use cache::{kernel_hash, CacheStats, CompileCache};
 pub use compile::{compile, CompiledKernel, ParamSlot, SharedSlot};
 pub use eval::{fastmath_quantize, WARP_SIZE};
-pub use machine::{run, run_compiled, Buffer, ExecEnv, InterpError};
+pub use machine::{
+    run, run_compiled, run_compiled_with_cancel, Buffer, ExecEnv, InterpError,
+};
 
 use crate::ir::{DimEnv, Kernel};
 

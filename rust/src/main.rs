@@ -51,6 +51,7 @@ fn print_usage() {
          commands:\n\
          \x20 optimize  [--kernel NAME] [--mode multi|single] [--rounds N]\n\
          \x20           [--seed N] [--temperature T] [--bug-rate P]\n\
+         \x20           [--beam-width B] [--candidates K]\n\
          \x20           [--config FILE] [--trace]\n\
          \x20 bench     --table 2|3|4\n\
          \x20 casestudy --kernel NAME | --list\n\
@@ -84,6 +85,8 @@ fn build_config(args: &[String]) -> Result<Config> {
         ("--seed", "seed"),
         ("--temperature", "temperature"),
         ("--bug-rate", "bug_rate"),
+        ("--beam-width", "beam_width"),
+        ("--candidates", "candidates_per_round"),
     ] {
         if let Some(v) = opt_value(args, flag) {
             config::apply(&mut cfg, &mut model, key, &v)?;

@@ -236,14 +236,28 @@ pub fn case_study(spec: &KernelSpec) -> String {
 }
 
 /// Figure 1 / Algorithm 1 trace: the round-by-round optimization log.
+/// Beam runs log one line per speculated candidate, tagged with its
+/// `[s<state> c<candidate>]` coordinates; greedy runs (`B = K = 1`)
+/// render exactly as before.
 pub fn trace(outcome: &Outcome) -> String {
+    let rounds = outcome
+        .records
+        .iter()
+        .map(|r| r.round)
+        .max()
+        .unwrap_or(0);
+    let beamy = outcome
+        .records
+        .iter()
+        .any(|r| r.beam_state > 0 || r.candidate > 0);
     let mut s = String::new();
     let _ = writeln!(
         s,
-        "Optimization trace — {} ({}, {} rounds)",
+        "Optimization trace — {} ({}, {} rounds, {} candidates)",
         outcome.kernel_name,
         outcome.mode,
-        outcome.records.len()
+        rounds,
+        outcome.candidates_evaluated
     );
     let _ = writeln!(s, "{:-<90}", "");
     let _ = writeln!(
@@ -256,10 +270,16 @@ pub fn trace(outcome: &Outcome) -> String {
             .applied
             .map(|m| m.name())
             .unwrap_or_else(|| "-".to_string());
+        let tag = if beamy {
+            format!(" [s{} c{}]", r.beam_state, r.candidate)
+        } else {
+            String::new()
+        };
         let _ = writeln!(
             s,
-            "round {}: {:<28} pass={:<5} internal={:.2}x loc={:<4} {} — {}",
+            "round {}:{} {:<28} pass={:<5} internal={:.2}x loc={:<4} {} — {}",
             r.round,
+            tag,
             mv,
             r.pass,
             r.speedup_internal,
@@ -275,6 +295,14 @@ pub fn trace(outcome: &Outcome) -> String {
         s,
         "final: {:.2}x on representative shapes, correct={}",
         outcome.final_speedup, outcome.final_correct
+    );
+    let _ = writeln!(
+        s,
+        "search: {} candidates evaluated (peak {} concurrent), compile cache {} hits / {} misses",
+        outcome.candidates_evaluated,
+        outcome.peak_concurrent_evals,
+        outcome.cache_hits,
+        outcome.cache_misses
     );
     s
 }
@@ -341,5 +369,20 @@ mod tests {
         assert!(tr.contains("round 0: baseline"));
         assert!(tr.contains("round 1:"));
         assert!(tr.contains("final:"));
+        assert!(tr.contains("search: "));
+        assert!(!tr.contains("[s0 c0]"), "greedy trace carries no beam tags");
+    }
+
+    #[test]
+    fn beam_trace_tags_candidates() {
+        let cfg = Config {
+            bug_rate: 0.0,
+            temperature: 0.0,
+            ..Config::multi_agent_beam()
+        };
+        let out = optimize(&kernels::merge::spec(), &cfg);
+        let tr = trace(&out);
+        assert!(tr.contains("round 1:"), "{tr}");
+        assert!(tr.contains("[s0 c1]"), "speculated candidates are tagged: {tr}");
     }
 }

@@ -1,0 +1,88 @@
+//! Differential suite for the speculative beam engine: at
+//! `beam_width = 1, candidates_per_round = 1` it must reproduce the
+//! literal greedy Algorithm 1 loop (`optimize_greedy`, kept as the
+//! semantic oracle) **byte-for-byte** — records, kernels, speedups,
+//! telemetry — across every kernel × both agent modes × several fumble
+//! rates. This is what lets every paper-fidelity test keep its meaning
+//! after the multi-layer refactor.
+
+use astra::coordinator::{optimize, optimize_greedy, Config, Outcome};
+use astra::kernels;
+
+fn assert_outcomes_identical(a: &Outcome, b: &Outcome, label: &str) {
+    assert_eq!(a.records, b.records, "{label}: records diverge");
+    assert_eq!(a.best, b.best, "{label}: best kernel diverges");
+    assert_eq!(a.baseline, b.baseline, "{label}: baseline diverges");
+    assert_eq!(
+        a.final_speedup.to_bits(),
+        b.final_speedup.to_bits(),
+        "{label}: final_speedup {} vs {}",
+        a.final_speedup,
+        b.final_speedup
+    );
+    assert_eq!(a.final_correct, b.final_correct, "{label}: final_correct");
+    assert_eq!(a.per_shape, b.per_shape, "{label}: per-shape table");
+    assert_eq!(a.baseline_loc, b.baseline_loc, "{label}: baseline loc");
+    assert_eq!(a.best_loc, b.best_loc, "{label}: best loc");
+    assert_eq!(
+        a.base_mean_us.to_bits(),
+        b.base_mean_us.to_bits(),
+        "{label}: base mean"
+    );
+    assert_eq!(
+        a.opt_mean_us.to_bits(),
+        b.opt_mean_us.to_bits(),
+        "{label}: opt mean"
+    );
+    assert_eq!(
+        a.candidates_evaluated, b.candidates_evaluated,
+        "{label}: candidates evaluated"
+    );
+    assert_eq!(
+        a.peak_concurrent_evals, b.peak_concurrent_evals,
+        "{label}: peak concurrency"
+    );
+    assert_eq!(a.cache_hits, b.cache_hits, "{label}: cache hits");
+    assert_eq!(a.cache_misses, b.cache_misses, "{label}: cache misses");
+}
+
+#[test]
+fn beam_1x1_is_byte_identical_to_greedy_across_kernels_and_modes() {
+    for base_cfg in [Config::multi_agent(), Config::single_agent()] {
+        // Default fumble rate (0.1) plus the extremes either side.
+        for bug_rate in [0.0f32, base_cfg.bug_rate, 0.6] {
+            for spec in kernels::all_specs() {
+                let cfg = Config {
+                    bug_rate,
+                    ..base_cfg.clone()
+                };
+                assert_eq!(cfg.beam_width, 1);
+                assert_eq!(cfg.candidates_per_round, 1);
+                let label = format!(
+                    "{} / {} / bug_rate {:.1}",
+                    spec.paper_name, cfg.mode, bug_rate
+                );
+                let greedy = optimize_greedy(&spec, &cfg);
+                let beam = optimize(&spec, &cfg);
+                assert_outcomes_identical(&greedy, &beam, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn beam_1x1_differential_holds_with_planner_noise() {
+    // High temperature exercises the planner's PRNG stream alignment:
+    // both engines must consume it identically (once per round).
+    for seed in [1u64, 99] {
+        let cfg = Config {
+            seed,
+            temperature: 1.2,
+            ..Config::multi_agent()
+        };
+        let spec = kernels::rmsnorm::spec();
+        let greedy = optimize_greedy(&spec, &cfg);
+        let beam = optimize(&spec, &cfg);
+        assert_outcomes_identical(&greedy, &beam, &format!("seed {seed}"));
+    }
+}

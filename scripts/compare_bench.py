@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_hotpath.json files across CI runs.
+
+Fails (exit 1) when the slot-compiled interpreter's per-case time
+(`interpret_ms`) regresses by more than --max-regression on any kernel —
+the ROADMAP "perf trajectory in CI" gate. Search throughput
+(`search_cps`, candidates/sec; higher is better) is reported
+informationally so the trajectory is visible without flaking the build
+on scheduler noise in the end-to-end runs.
+
+Usage:
+    python3 compare_bench.py <old.json> <new.json> [--max-regression 0.15]
+
+A missing <old.json> (first run, expired artifact) skips the comparison
+cleanly.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("old", help="previous run's BENCH_hotpath.json")
+    parser.add_argument("new", help="this run's BENCH_hotpath.json")
+    parser.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.15,
+        help="tolerated fractional interpret_ms increase (default 0.15)",
+    )
+    args = parser.parse_args()
+
+    if not os.path.exists(args.old):
+        print(f"no previous bench at {args.old}; skipping comparison")
+        return 0
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+
+    failures = []
+    for name, cur in sorted(new.get("kernels", {}).items()):
+        prev = old.get("kernels", {}).get(name)
+        if not prev:
+            print(f"{name:<24} new kernel; no baseline")
+            continue
+
+        if "interpret_ms" in prev and "interpret_ms" in cur and prev["interpret_ms"] > 0:
+            base, now = prev["interpret_ms"], cur["interpret_ms"]
+            delta = (now - base) / base
+            bad = delta > args.max_regression
+            print(
+                f"{name:<24} interpret_ms   {base:>10.4f} -> {now:>10.4f}"
+                f"  ({delta:+7.1%}) {'REGRESSION' if bad else 'ok'}"
+            )
+            if bad:
+                failures.append((name, delta))
+
+        # v2 schema: speculative-search throughput, informational.
+        if prev.get("search_cps", 0) > 0 and "search_cps" in cur:
+            base, now = prev["search_cps"], cur["search_cps"]
+            delta = (now - base) / base
+            print(
+                f"{name:<24} search_cps     {base:>10.1f} -> {now:>10.1f}"
+                f"  ({delta:+7.1%}) info"
+            )
+
+    if failures:
+        worst = max(d for _, d in failures)
+        print(
+            f"\n{len(failures)} kernel(s) regressed interpreter throughput "
+            f"beyond {args.max_regression:.0%} (worst {worst:+.1%})"
+        )
+        return 1
+    print("\nbench comparison clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
