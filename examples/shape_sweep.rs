@@ -3,13 +3,16 @@
 //! Reproduces Table 4 on the paper's 12 shapes, then sweeps a wider grid
 //! to check the §6.1 claim that Astra's optimizations generalize across
 //! shapes rather than being tuned to one (speedup stays >= ~1 everywhere
-//! and varies smoothly).
+//! and varies smoothly), and finishes with the §Grid-parallel
+//! worker-count sweep (EXPERIMENTS.md): the block-parallel interpreter
+//! on each kernel's largest correctness shape at 1/2/4/8 workers.
 //!
 //! ```bash
 //! cargo run --release --example shape_sweep
 //! ```
 
 use astra::coordinator::{optimize_all_parallel, Config};
+use astra::interp::{self, RunOpts};
 use astra::kernels::{self, dims_of};
 use astra::sim::{self, GpuModel};
 use astra::transforms;
@@ -67,4 +70,45 @@ fn main() {
         "\nNo shape-specific tuning was performed (§6.1): the same \
          transformed kernel is measured at every shape."
     );
+
+    // §Grid-parallel protocol (EXPERIMENTS.md): block-parallel
+    // interpreter wall clock vs worker count on each kernel's largest
+    // correctness shape. grid_workers = 1 is the serial engine
+    // byte-for-byte; the differential wall pins every count identical,
+    // so this sweep is purely a wall-clock measurement.
+    println!("\nGrid-parallel interpreter sweep (largest correctness shape, 5-run mean):");
+    for spec in kernels::all_specs() {
+        let k = (spec.build_baseline)();
+        let dims = &spec.largest_test_shape(&k);
+        let inputs = (spec.gen_inputs)(dims, 7);
+        let refs: Vec<(&str, Vec<f32>)> = inputs
+            .iter()
+            .map(|(n, v)| (n.as_str(), v.clone()))
+            .collect();
+        let prog = interp::compile(&k, dims).expect("baseline compiles");
+        print!("{:<24}", spec.paper_name);
+        for workers in [1usize, 2, 4, 8] {
+            let t0 = std::time::Instant::now();
+            for _ in 0..5 {
+                let mut env = interp::ExecEnv::for_kernel(&k, dims);
+                for (name, data) in &refs {
+                    env.set(name, data.clone());
+                }
+                interp::run_compiled_with_opts(
+                    &prog,
+                    &mut env,
+                    RunOpts {
+                        cancel: None,
+                        grid_workers: workers,
+                    },
+                )
+                .unwrap();
+            }
+            print!(
+                "  w={workers}: {:>7.2}ms",
+                t0.elapsed().as_secs_f64() * 1e3 / 5.0
+            );
+        }
+        println!();
+    }
 }

@@ -17,12 +17,18 @@
 //! working directory so the perf trajectory is machine-readable across
 //! PRs.
 
-use astra::coordinator::{optimize, Config};
-use astra::interp;
+use std::sync::Arc;
+
+use astra::coordinator::{optimize, optimize_all_parallel_with_cache, Config};
+use astra::interp::{self, CompileCache, RunOpts};
 use astra::kernels;
 use astra::sim::{self, GpuModel};
 use astra::transforms::{self, Move};
 use astra::util::timing::bench;
+
+/// Worker count for the block-parallel interpreter rows (the smallest
+/// count the acceptance protocol sweeps; EXPERIMENTS.md §Grid-parallel).
+const GRID_BENCH_WORKERS: usize = 4;
 
 /// Per-kernel medians collected for the JSON report.
 #[derive(Default, Clone)]
@@ -32,6 +38,13 @@ struct KernelRow {
     interpret_ref_ms: f64,
     interpret_ms: f64,
     interpret_speedup: f64,
+    /// Serial compiled engine on the *largest* correctness shape (the
+    /// apples-to-apples baseline for `grid_parallel_ms`).
+    interpret_large_ms: f64,
+    /// Block-parallel compiled engine on the same shape at
+    /// `GRID_BENCH_WORKERS` workers.
+    grid_parallel_ms: f64,
+    grid_parallel_speedup: f64,
     transform_all_us: f64,
     optimize_ms: f64,
     /// Full beam run (B=2, K=3) median.
@@ -39,6 +52,16 @@ struct KernelRow {
     /// Speculative-search throughput: candidates validated+profiled
     /// per second in the beam run.
     search_cps: f64,
+}
+
+/// Cross-run shared-cache counters: two identical `optimize_all_parallel`
+/// batches over one `Arc<CompileCache>` — the second should be hit-only.
+#[derive(Default, Clone, Copy)]
+struct CrossRunCache {
+    first_misses: u64,
+    first_hits: u64,
+    second_run_hits: u64,
+    second_run_misses: u64,
 }
 
 fn main() {
@@ -91,6 +114,52 @@ fn main() {
             r.median_ms(),
             c.median_ms(),
             row.interpret_speedup
+        );
+    }
+    println!();
+
+    // Block-parallel grids: serial vs grid_workers=GRID_BENCH_WORKERS on
+    // the largest correctness shape (most blocks x threads — the case
+    // that dominates a validation fan-out's critical path).
+    for (spec, row) in kernels::all_specs().iter().zip(&mut rows) {
+        let k = (spec.build_baseline)();
+        let dims = &spec.largest_test_shape(&k);
+        let inputs = (spec.gen_inputs)(dims, 1);
+        let refs: Vec<(&str, Vec<f32>)> =
+            inputs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect();
+        let prog = interp::compile(&k, dims).expect("baseline compiles");
+        let serial = bench(2, 10, || {
+            let mut env = interp::ExecEnv::for_kernel(&k, dims);
+            for (name, data) in &refs {
+                env.set(name, data.clone());
+            }
+            interp::run_compiled(&prog, &mut env).unwrap()
+        });
+        let parallel = bench(2, 10, || {
+            let mut env = interp::ExecEnv::for_kernel(&k, dims);
+            for (name, data) in &refs {
+                env.set(name, data.clone());
+            }
+            interp::run_compiled_with_opts(
+                &prog,
+                &mut env,
+                RunOpts {
+                    cancel: None,
+                    grid_workers: GRID_BENCH_WORKERS,
+                },
+            )
+            .unwrap()
+        });
+        row.interpret_large_ms = serial.median_ms();
+        row.grid_parallel_ms = parallel.median_ms();
+        row.grid_parallel_speedup = serial.median_ms() / parallel.median_ms();
+        println!(
+            "grid-parallel {:<19} serial {:>8.3} ms   w={} {:>8.3} ms   ({:.1}x)",
+            spec.paper_name,
+            serial.median_ms(),
+            GRID_BENCH_WORKERS,
+            parallel.median_ms(),
+            row.grid_parallel_speedup
         );
     }
     println!();
@@ -159,22 +228,51 @@ fn main() {
         );
     }
 
+    // Cross-run shared compile cache: two identical optimize-all batches
+    // over one Arc'd cache — the second must be (nearly) hit-only, and
+    // the counters land in the JSON so CI can watch the reuse rate.
+    println!();
+    let shared = Arc::new(CompileCache::with_default_capacity());
+    let _ = optimize_all_parallel_with_cache(&cfg, &shared);
+    let first = shared.stats();
+    let _ = optimize_all_parallel_with_cache(&cfg, &shared);
+    let second = shared.stats();
+    let cross = CrossRunCache {
+        first_misses: first.misses,
+        first_hits: first.hits,
+        second_run_hits: second.hits - first.hits,
+        second_run_misses: second.misses - first.misses,
+    };
+    println!(
+        "cross-run cache: first batch {} misses / {} hits; \
+         second batch +{} hits, +{} misses",
+        cross.first_misses,
+        cross.first_hits,
+        cross.second_run_hits,
+        cross.second_run_misses
+    );
+
     if json {
         let path = "BENCH_hotpath.json";
-        std::fs::write(path, render_json(&rows)).expect("write BENCH_hotpath.json");
+        std::fs::write(path, render_json(&rows, cross))
+            .expect("write BENCH_hotpath.json");
         println!("\nwrote {path}");
     }
 }
 
 /// Hand-rolled JSON (no serde in the offline vendor set).
-fn render_json(rows: &[KernelRow]) -> String {
+fn render_json(rows: &[KernelRow], cross: CrossRunCache) -> String {
     let mut out = String::new();
-    out.push_str("{\n  \"schema\": \"astra-hotpath-v2\",\n  \"kernels\": {\n");
+    out.push_str("{\n  \"schema\": \"astra-hotpath-v3\",\n  \"kernels\": {\n");
     for (i, r) in rows.iter().enumerate() {
         out.push_str(&format!(
             "    \"{}\": {{\n      \"simulate_us\": {:.3},\n      \
              \"interpret_ref_ms\": {:.4},\n      \"interpret_ms\": {:.4},\n      \
-             \"interpret_speedup\": {:.2},\n      \"transform_all_us\": {:.3},\n      \
+             \"interpret_speedup\": {:.2},\n      \
+             \"interpret_large_ms\": {:.4},\n      \
+             \"grid_parallel_ms\": {:.4},\n      \
+             \"grid_parallel_speedup\": {:.2},\n      \
+             \"transform_all_us\": {:.3},\n      \
              \"optimize_ms\": {:.3},\n      \"beam_optimize_ms\": {:.3},\n      \
              \"search_cps\": {:.1}\n    }}{}\n",
             r.name,
@@ -182,6 +280,9 @@ fn render_json(rows: &[KernelRow]) -> String {
             r.interpret_ref_ms,
             r.interpret_ms,
             r.interpret_speedup,
+            r.interpret_large_ms,
+            r.grid_parallel_ms,
+            r.grid_parallel_speedup,
             r.transform_all_us,
             r.optimize_ms,
             r.beam_optimize_ms,
@@ -189,6 +290,16 @@ fn render_json(rows: &[KernelRow]) -> String {
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
-    out.push_str("  }\n}\n");
+    out.push_str("  },\n");
+    out.push_str(&format!(
+        "  \"cross_run_cache\": {{\n    \"first_misses\": {},\n    \
+         \"first_hits\": {},\n    \"second_run_hits\": {},\n    \
+         \"second_run_misses\": {}\n  }}\n",
+        cross.first_misses,
+        cross.first_hits,
+        cross.second_run_hits,
+        cross.second_run_misses
+    ));
+    out.push_str("}\n");
     out
 }

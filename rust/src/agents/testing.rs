@@ -60,6 +60,7 @@ fn run_case(
     seed: u64,
     cache: Option<&CompileCache>,
     cancel: &AtomicBool,
+    grid_workers: usize,
 ) -> CaseOutcome {
     let fail = |msg: String| CaseOutcome {
         max_abs: f32::INFINITY,
@@ -83,7 +84,11 @@ fn run_case(
     for (name, data) in &inputs {
         env.set(name, data.clone());
     }
-    match interp::run_compiled_with_cancel(&prog, &mut env, Some(cancel)) {
+    let opts = interp::RunOpts {
+        cancel: Some(cancel),
+        grid_workers,
+    };
+    match interp::run_compiled_with_opts(&prog, &mut env, opts) {
         Ok(()) => {}
         Err(interp::InterpError::Cancelled) => {
             return CaseOutcome {
@@ -156,11 +161,28 @@ pub struct TestReport {
 pub struct TestingAgent {
     pub quality: TestQuality,
     pub seed: u64,
+    /// Worker threads the interpreter fans over each launch's blocks
+    /// (`1` = the serial engine byte-for-byte, `0` = one per core; see
+    /// [`interp::RunOpts::grid_workers`]). For kernels whose blocks
+    /// never read another block's writes — the whole candidate space,
+    /// three-way-differential-wall pinned — reports are byte-identical
+    /// at every setting.
+    pub grid_workers: usize,
 }
 
 impl TestingAgent {
     pub fn new(quality: TestQuality, seed: u64) -> Self {
-        TestingAgent { quality, seed }
+        TestingAgent {
+            quality,
+            seed,
+            grid_workers: 1,
+        }
+    }
+
+    /// Builder: run each correctness launch block-parallel.
+    pub fn with_grid_workers(mut self, grid_workers: usize) -> Self {
+        self.grid_workers = grid_workers;
+        self
     }
 
     /// Algorithm 1 line 1: generate the suite from the baseline spec.
@@ -228,6 +250,7 @@ impl TestingAgent {
         cache: Option<&CompileCache>,
     ) -> TestReport {
         let seed = suite.seed;
+        let grid_workers = self.grid_workers;
         let cancel = AtomicBool::new(false);
         let mut outcomes: Vec<CaseOutcome> = thread::scope(|s| {
             let cancel = &cancel;
@@ -235,7 +258,9 @@ impl TestingAgent {
                 .correctness_shapes
                 .iter()
                 .map(|dims| {
-                    s.spawn(move || run_case(spec, kernel, dims, seed, cache, cancel))
+                    s.spawn(move || {
+                        run_case(spec, kernel, dims, seed, cache, cancel, grid_workers)
+                    })
                 })
                 .collect();
             handles
@@ -253,7 +278,15 @@ impl TestingAgent {
         // (µs) is the cheaper currency.
         for (dims, o) in suite.correctness_shapes.iter().zip(outcomes.iter_mut()) {
             if o.cancelled {
-                *o = run_case(spec, kernel, dims, seed, None, &AtomicBool::new(false));
+                *o = run_case(
+                    spec,
+                    kernel,
+                    dims,
+                    seed,
+                    None,
+                    &AtomicBool::new(false),
+                    grid_workers,
+                );
             }
             if o.failure.is_some() {
                 break;
@@ -483,6 +516,41 @@ mod tests {
             r.cancelled_cases >= 1,
             "a busy peer must observe the token: {r:?}"
         );
+    }
+
+    #[test]
+    fn reports_are_byte_identical_at_every_grid_worker_count() {
+        // Pass and fail cases both: the merged report (verdict, errors,
+        // case count, error magnitudes) must not depend on how many
+        // workers the interpreter fans each launch's blocks over.
+        let spec = kernels::silu::spec();
+        let serial = TestingAgent::new(TestQuality::Representative, 21);
+        let suite = serial.generate_tests(&spec);
+        let good = (spec.build_baseline)();
+        let mut bad = (spec.build_baseline)();
+        use crate::ir::build::*;
+        bad.body.push(store("out", imul(dim("B"), dim("D")), fc(0.0)));
+        for kernel in [&good, &bad] {
+            let want = serial.validate(&spec, kernel, &suite);
+            for gw in [2usize, 7, 0] {
+                let agent = TestingAgent::new(TestQuality::Representative, 21)
+                    .with_grid_workers(gw);
+                let got = agent.validate(&spec, kernel, &suite);
+                assert_eq!(want.pass, got.pass, "gw={gw}");
+                assert_eq!(want.cases, got.cases, "gw={gw}");
+                assert_eq!(want.failure, got.failure, "gw={gw}");
+                assert_eq!(
+                    want.max_rel_err.to_bits(),
+                    got.max_rel_err.to_bits(),
+                    "gw={gw}"
+                );
+                assert_eq!(
+                    want.max_abs_err.to_bits(),
+                    got.max_abs_err.to_bits(),
+                    "gw={gw}"
+                );
+            }
+        }
     }
 
     #[test]

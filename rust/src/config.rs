@@ -15,6 +15,10 @@
 //! beam_width = 2
 //! candidates_per_round = 3
 //!
+//! # block-parallel grid execution in the validation interpreter
+//! # (1 = serial engine byte-for-byte, 0 = one worker per core)
+//! grid_workers = 4
+//!
 //! # simulator overrides
 //! launch_overhead_us = 7.0
 //! dram_bw = 3.0e12
@@ -78,6 +82,8 @@ pub fn apply(
                 return Err(anyhow!("candidates_per_round must be >= 1"));
             }
         }
+        // 0 is meaningful here: one worker per available core.
+        "grid_workers" => cfg.grid_workers = value.parse()?,
         "mode" => {
             cfg.mode = match value {
                 "multi" | "multi-agent" => AgentMode::Multi,
@@ -140,6 +146,17 @@ mod tests {
         let cfg = parse("").unwrap();
         assert_eq!(cfg.beam_width, 1);
         assert_eq!(cfg.candidates_per_round, 1);
+    }
+
+    #[test]
+    fn parses_grid_workers_including_auto() {
+        let cfg = parse("grid_workers = 4\n").unwrap();
+        assert_eq!(cfg.grid_workers, 4);
+        let cfg = parse("grid_workers = 0\n").unwrap();
+        assert_eq!(cfg.grid_workers, 0, "0 = one worker per core");
+        let cfg = parse("").unwrap();
+        assert_eq!(cfg.grid_workers, 1, "default is the serial engine");
+        assert!(parse("grid_workers = nope\n").is_err());
     }
 
     #[test]

@@ -180,7 +180,8 @@ pub(crate) fn finish_outcome(
     let (final_correct, base_reports, best_reports) = thread::scope(|s| {
         let correct = s.spawn(|| {
             let final_tester =
-                TestingAgent::new(TestQuality::Representative, cfg.seed ^ 0xFEED);
+                TestingAgent::new(TestQuality::Representative, cfg.seed ^ 0xFEED)
+                    .with_grid_workers(cfg.grid_workers);
             let final_suite = final_tester.generate_tests(spec);
             final_tester
                 .validate_with(spec, &best, &final_suite, Some(cache))
@@ -233,26 +234,40 @@ pub(crate) fn finish_outcome(
     }
 }
 
-/// Run the speculative beam search on one kernel.
+/// Run the speculative beam search on one kernel (per-run cache).
 pub fn optimize_beam(spec: &KernelSpec, cfg: &Config) -> Outcome {
+    let cache = CompileCache::with_default_capacity();
+    optimize_beam_with_cache(spec, cfg, &cache)
+}
+
+/// [`optimize_beam`] against a caller-owned compile cache — the seam the
+/// cross-run sharing in `optimize_all_parallel` builds on (it passes a
+/// per-run front cache backed by the shared one, so `Outcome` cache
+/// counters stay per-run exact; see [`CompileCache::with_backing`]).
+/// Compiles are pure, so cache topology never changes a trajectory.
+pub fn optimize_beam_with_cache(
+    spec: &KernelSpec,
+    cfg: &Config,
+    cache: &CompileCache,
+) -> Outcome {
     let beam_width = cfg.beam_width.max(1);
     let k_per_state = cfg.candidates_per_round.max(1);
     let quality = match cfg.mode {
         AgentMode::Multi => TestQuality::Representative,
         AgentMode::Single => TestQuality::Unrepresentative,
     };
-    let tester = TestingAgent::new(quality, cfg.seed);
+    let tester =
+        TestingAgent::new(quality, cfg.seed).with_grid_workers(cfg.grid_workers);
     let profiler = ProfilingAgent::new(cfg.model.clone());
     let mut planner = make_planner(cfg);
     let coder = CodingAgent::new(cfg.bug_rate, cfg.seed ^ 0xC0DE);
-    let cache = CompileCache::with_default_capacity();
     let probe = ConcurrencyProbe::new();
 
     // Algorithm 1, lines 1-7: suite + baseline profile, now seeding the
     // one-element beam.
     let baseline = (spec.build_baseline)();
     let suite = tester.generate_tests(spec);
-    let base_tests = tester.validate_with(spec, &baseline, &suite, Some(&cache));
+    let base_tests = tester.validate_with(spec, &baseline, &suite, Some(cache));
     let base_profile = profiler.profile(&baseline, &suite, None);
     debug_assert!(base_tests.pass, "baseline must pass its own tests");
 
@@ -312,7 +327,6 @@ pub fn optimize_beam(spec: &KernelSpec, cfg: &Config) -> Outcome {
                 .map(|cand| {
                     let tester = &tester;
                     let profiler = &profiler;
-                    let cache = &cache;
                     let probe = &probe;
                     let suite = &suite;
                     let base_profile = &base_profile;
@@ -510,7 +524,7 @@ pub fn optimize_beam(spec: &KernelSpec, cfg: &Config) -> Outcome {
         records,
         baseline,
         best,
-        &cache,
+        cache,
         SearchTelemetry {
             candidates_evaluated,
             peak_concurrent_evals: probe.peak(),

@@ -86,11 +86,22 @@ struct Inner {
 /// A small LRU over compiled launches, shareable across threads.
 /// Lookups are linear scans: capacities are tens of entries, far below
 /// the crossover where a map would pay for itself.
+///
+/// A cache may be **backed** by a shared next-level cache
+/// ([`CompileCache::with_backing`]): local misses consult the backing
+/// cache before compiling, and fresh compiles publish into it through
+/// its own `get_or_compile`. This is the cross-run sharing topology —
+/// each optimization run keeps its *own* front cache, so its hit/miss
+/// counters depend only on the run's key sequence (deterministic, never
+/// perturbed by concurrent sibling runs), while the compiles themselves
+/// are shared through the backing level.
 pub struct CompileCache {
     cap: usize,
     inner: Mutex<Inner>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Shared next-level cache consulted on a local miss.
+    backing: Option<Arc<CompileCache>>,
 }
 
 impl CompileCache {
@@ -109,6 +120,7 @@ impl CompileCache {
             }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            backing: None,
         }
     }
 
@@ -116,9 +128,18 @@ impl CompileCache {
         CompileCache::new(Self::DEFAULT_CAPACITY)
     }
 
+    /// A per-run front cache layered over a shared `backing` cache (see
+    /// the type docs for the determinism rationale).
+    pub fn with_backing(cap: usize, backing: Arc<CompileCache>) -> CompileCache {
+        let mut cache = CompileCache::new(cap);
+        cache.backing = Some(backing);
+        cache
+    }
+
     /// Fetch the compiled launch for `(kernel, dims)`, compiling on a
-    /// miss. Compile errors surface to the caller and are never cached
-    /// (they are immediate, so retrying them is cheap).
+    /// miss (after consulting the backing cache, when present). Compile
+    /// errors surface to the caller and are never cached (they are
+    /// immediate, so retrying them is cheap).
     pub fn get_or_compile(
         &self,
         kernel: &Kernel,
@@ -139,11 +160,15 @@ impl CompileCache {
                 return Ok(Arc::clone(&e.prog));
             }
         }
-        // Compile outside the lock: two workers racing on the same key
-        // may both compile, but the results are identical and the second
-        // insert is dropped — only throughput (and the miss counter, see
-        // [`CacheStats`]), never correctness, is at stake.
-        let prog = Arc::new(compile(kernel, dims)?);
+        // Compile (or fetch from the backing level) outside the lock:
+        // two workers racing on the same key may both compile, but the
+        // results are identical and the second insert is dropped — only
+        // throughput (and the miss counter, see [`CacheStats`]), never
+        // correctness, is at stake.
+        let prog = match &self.backing {
+            Some(shared) => shared.get_or_compile(kernel, dims)?,
+            None => Arc::new(compile(kernel, dims)?),
+        };
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut guard = self.inner.lock().expect("compile cache poisoned");
         guard.tick += 1;
@@ -262,6 +287,35 @@ mod tests {
         assert_eq!(kernel_hash(&k), kernel_hash(&k.clone()));
         let moved = transforms::apply(&k, Move::WarpShuffle).unwrap();
         assert_ne!(kernel_hash(&k), kernel_hash(&moved));
+    }
+
+    #[test]
+    fn backed_cache_keeps_local_counters_and_shares_compiles() {
+        let shared = Arc::new(CompileCache::with_default_capacity());
+        let k = kernels::silu::build_baseline();
+        let dims = &(kernels::silu::spec().test_shapes)()[0];
+
+        // Run 1: local miss forwards to the shared level (shared miss).
+        let run1 = CompileCache::with_backing(8, Arc::clone(&shared));
+        let a = run1.get_or_compile(&k, dims).unwrap();
+        let b = run1.get_or_compile(&k, dims).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(run1.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(shared.stats(), CacheStats { hits: 0, misses: 1 });
+
+        // Run 2: fresh front cache, same key — local miss, but the
+        // shared level serves it without recompiling (shared hit), and
+        // the exact same Arc comes back.
+        let run2 = CompileCache::with_backing(8, Arc::clone(&shared));
+        let c = run2.get_or_compile(&k, dims).unwrap();
+        assert!(Arc::ptr_eq(&a, &c), "compile shared across runs");
+        assert_eq!(run2.stats(), CacheStats { hits: 0, misses: 1 });
+        assert_eq!(shared.stats(), CacheStats { hits: 1, misses: 1 });
+        // Per-run counters match an unshared run's exactly.
+        let solo = CompileCache::new(8);
+        solo.get_or_compile(&k, dims).unwrap();
+        solo.get_or_compile(&k, dims).unwrap();
+        assert_eq!(solo.stats(), run1.stats());
     }
 
     #[test]

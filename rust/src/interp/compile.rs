@@ -19,6 +19,22 @@
 //! Name-resolution errors (unknown vars/buffers/dims) surface at compile
 //! time as the same [`EvalError`] variants the tree-walking interpreter
 //! reported at runtime, wrapped in [`InterpError::Eval`].
+//!
+//! A **definite-assignment pass** rides on the lowering (ROADMAP "exact
+//! UnknownVar parity"): the lowerer threads the set of slots that are
+//! definitely assigned at each program point (`If` merges by branch
+//! intersection, a `For` body's assignments are discarded after the loop
+//! because it may run zero times). A read of a slot that is bound
+//! somewhere but *not* definitely assigned — a register declared only
+//! inside a conditionally-executed branch, or only inside a possibly
+//! zero-trip loop body — lowers to a *checked* slot read
+//! ([`CIExpr::SlotChecked`]/[`CVExpr::SlotChecked`]) that consults a
+//! per-thread init bitmap at runtime, so the machine raises `UnknownVar`
+//! exactly where the tree-walking reference does. Kernels whose reads
+//! are all definitely assigned (the whole baseline + transform-catalog
+//! space) compile with `needs_init = false` and pay nothing.
+
+use std::collections::BTreeSet;
 
 use crate::ir::analysis::{is_collective, SlotResolver};
 use crate::ir::expr::{
@@ -39,6 +55,12 @@ pub(crate) enum CIExpr {
     Const(i64),
     /// Per-thread integer register slot.
     Slot(u32),
+    /// Slot read that is not definitely assigned at this program point:
+    /// the machine consults the per-thread init bitmap and latches an
+    /// `UnknownVar` for uninitialized reads (integer evaluation stays
+    /// infallible; the latch is converted to the error at the next
+    /// statement-level guard, preserving reference error order).
+    SlotChecked(u32),
     ThreadIdx,
     BlockIdx,
     Lane,
@@ -52,6 +74,10 @@ pub(crate) enum CVExpr {
     Const(f32),
     /// Per-thread float register slot.
     Slot(u32),
+    /// Slot read that is not definitely assigned at this program point;
+    /// raises `UnknownVar` at runtime when the per-thread init bit is
+    /// unset, like the reference machine's map lookup.
+    SlotChecked(u32),
     FromInt(u32),
     Bin(FBinOp, u32, u32),
     Call(MathFn, u32),
@@ -157,8 +183,15 @@ pub struct CompiledKernel {
     pub params: Vec<ParamSlot>,
     /// Shared arrays, in `kernel.shared` order (= buf index).
     pub shared: Vec<SharedSlot>,
-    /// Integer slot names (error messages: non-uniform loop vars).
+    /// Integer slot names (error messages: non-uniform loop vars,
+    /// `UnknownVar` on checked reads).
     pub(crate) i_slot_names: Vec<String>,
+    /// Float slot names (`UnknownVar` on checked reads).
+    pub(crate) f_slot_names: Vec<String>,
+    /// At least one `SlotChecked` read exists: the machine allocates
+    /// per-thread init bitmaps and assignments set init bits. False for
+    /// every kernel in the baseline + transform-catalog space.
+    pub(crate) needs_init: bool,
     pub(crate) iexprs: Vec<CIExpr>,
     pub(crate) vexprs: Vec<CVExpr>,
     pub(crate) bexprs: Vec<CBExpr>,
@@ -201,6 +234,9 @@ pub fn compile(kernel: &Kernel, dims: &DimEnv) -> Result<CompiledKernel, InterpE
         grid,
         fres: SlotResolver::new(),
         ires: SlotResolver::new(),
+        f_assigned: BTreeSet::new(),
+        i_assigned: BTreeSet::new(),
+        any_checked: false,
         iexprs: Vec::new(),
         vexprs: Vec::new(),
         bexprs: Vec::new(),
@@ -218,6 +254,8 @@ pub fn compile(kernel: &Kernel, dims: &DimEnv) -> Result<CompiledKernel, InterpE
         params,
         shared,
         i_slot_names: lo.ires.into_slot_names(),
+        f_slot_names: lo.fres.into_slot_names(),
+        needs_init: lo.any_checked,
         iexprs: lo.iexprs,
         vexprs: lo.vexprs,
         bexprs: lo.bexprs,
@@ -234,6 +272,12 @@ struct Lowerer<'a> {
     grid: i64,
     fres: SlotResolver,
     ires: SlotResolver,
+    /// Definitely-assigned slots at the current program point (the
+    /// definite-assignment pass; see module docs).
+    f_assigned: BTreeSet<u32>,
+    i_assigned: BTreeSet<u32>,
+    /// A `SlotChecked` read was emitted somewhere in the program.
+    any_checked: bool,
     iexprs: Vec<CIExpr>,
     vexprs: Vec<CVExpr>,
     bexprs: Vec<CBExpr>,
@@ -274,11 +318,13 @@ impl<'a> Lowerer<'a> {
             Stmt::DeclF { name, init } | Stmt::AssignF { name, value: init } => {
                 let value = self.lower_v(init)?;
                 let slot = self.fres.resolve_or_bind(name);
+                self.f_assigned.insert(slot);
                 CStmt::AssignF { slot, value }
             }
             Stmt::DeclI { name, init } | Stmt::AssignI { name, value: init } => {
                 let value = self.lower_i(init)?;
                 let slot = self.ires.resolve_or_bind(name);
+                self.i_assigned.insert(slot);
                 CStmt::AssignI { slot, value }
             }
             Stmt::Store {
@@ -306,8 +352,21 @@ impl<'a> Lowerer<'a> {
             Stmt::SyncThreads => CStmt::Sync,
             Stmt::If { cond, then, els } => {
                 let cond = self.lower_b(cond)?;
+                // Only assignments made in *both* branches are definite
+                // after the If; each branch is analyzed from the pre-If
+                // state.
+                let before_f = self.f_assigned.clone();
+                let before_i = self.i_assigned.clone();
                 let then = self.lower_body(then)?;
+                let then_f = std::mem::replace(&mut self.f_assigned, before_f);
+                let then_i = std::mem::replace(&mut self.i_assigned, before_i);
                 let els = self.lower_body(els)?;
+                let els_f = std::mem::take(&mut self.f_assigned);
+                let els_i = std::mem::take(&mut self.i_assigned);
+                self.f_assigned =
+                    els_f.intersection(&then_f).copied().collect();
+                self.i_assigned =
+                    els_i.intersection(&then_i).copied().collect();
                 CStmt::If { cond, then, els }
             }
             Stmt::For(l) => {
@@ -319,6 +378,15 @@ impl<'a> Lowerer<'a> {
                 // after the first body iteration has bound the name).
                 let init = self.lower_i(&l.init)?;
                 let (var, pos) = self.ires.bind_scoped(&l.var);
+                // The loop var is always set from `init` before the
+                // first condition check; body assignments are *not*
+                // definite after the loop (it may run zero times), so
+                // the pre-body sets are restored below. The update is
+                // lowered against the post-body sets: it only ever runs
+                // after a full body iteration.
+                self.i_assigned.insert(var);
+                let before_f = self.f_assigned.clone();
+                let before_i = self.i_assigned.clone();
                 let bound = self.lower_i(&l.bound)?;
                 let body = self.lower_body(&l.body)?;
                 let update = match &l.update {
@@ -326,6 +394,8 @@ impl<'a> Lowerer<'a> {
                     Update::ShrAssign(k) => CUpdate::Shr(*k),
                 };
                 self.ires.unbind(pos);
+                self.f_assigned = before_f;
+                self.i_assigned = before_i;
                 CStmt::For {
                     var,
                     init,
@@ -347,11 +417,18 @@ impl<'a> Lowerer<'a> {
                     .get(d)
                     .ok_or_else(|| EvalError::UnknownVar(d.clone()))?,
             ),
-            IExpr::Var(v) => CIExpr::Slot(
-                self.ires
+            IExpr::Var(v) => {
+                let slot = self
+                    .ires
                     .resolve(v)
-                    .ok_or_else(|| EvalError::UnknownVar(v.clone()))?,
-            ),
+                    .ok_or_else(|| EvalError::UnknownVar(v.clone()))?;
+                if self.i_assigned.contains(&slot) {
+                    CIExpr::Slot(slot)
+                } else {
+                    self.any_checked = true;
+                    CIExpr::SlotChecked(slot)
+                }
+            }
             IExpr::Thread(tv) => match tv {
                 ThreadVar::ThreadIdx => CIExpr::ThreadIdx,
                 ThreadVar::BlockIdx => CIExpr::BlockIdx,
@@ -377,11 +454,18 @@ impl<'a> Lowerer<'a> {
     fn lower_v(&mut self, e: &VExpr) -> Result<u32, InterpError> {
         let ce = match e {
             VExpr::Const(c) => CVExpr::Const(*c as f32),
-            VExpr::Var(v) => CVExpr::Slot(
-                self.fres
+            VExpr::Var(v) => {
+                let slot = self
+                    .fres
                     .resolve(v)
-                    .ok_or_else(|| EvalError::UnknownVar(v.clone()))?,
-            ),
+                    .ok_or_else(|| EvalError::UnknownVar(v.clone()))?;
+                if self.f_assigned.contains(&slot) {
+                    CVExpr::Slot(slot)
+                } else {
+                    self.any_checked = true;
+                    CVExpr::SlotChecked(slot)
+                }
+            }
             VExpr::FromInt(i) => CVExpr::FromInt(self.lower_i(i)?),
             VExpr::Bin(op, a, b) => {
                 let va = self.lower_v(a)?;
@@ -487,8 +571,91 @@ mod tests {
                 assert_eq!(p.params.len(), k.params.len());
                 assert_eq!(p.stmts.len(), p.collective.len());
                 assert!(!p.top.is_empty());
+                assert!(
+                    !p.needs_init,
+                    "{}: baseline kernels are fully definitely-assigned",
+                    spec.paper_name
+                );
             }
         }
+    }
+
+    #[test]
+    fn catalog_space_never_needs_init_tracking() {
+        // The documented claim behind the zero-cost fast path: no kernel
+        // the transforms can produce contains a maybe-uninitialized read.
+        use crate::transforms;
+        for spec in kernels::all_specs() {
+            let base = (spec.build_baseline)();
+            for mv in transforms::all_moves() {
+                let Ok(k) = transforms::apply(&base, mv) else {
+                    continue;
+                };
+                let dims = &(spec.test_shapes)()[0];
+                let p = compile(&k, dims).unwrap();
+                assert!(!p.needs_init, "{} + {}", spec.paper_name, mv.name());
+            }
+        }
+    }
+
+    #[test]
+    fn branch_only_decl_lowers_to_checked_read() {
+        // if (tx < 2) { v = 1.0 }  out[tx] = v  — the read after the If
+        // is not definitely assigned: needs_init with a checked read.
+        let k = Kernel {
+            name: "maybe".into(),
+            dims: vec![],
+            params: vec![crate::ir::BufParam {
+                name: "out".into(),
+                dtype: DType::F32,
+                len: c(4),
+                io: BufIo::Out,
+            }],
+            shared: vec![],
+            launch: crate::ir::Launch { grid: c(1), block: 4 },
+            body: vec![
+                if_(lt(tx(), c(2)), vec![declf("v", fc(1.0))]),
+                store("out", tx(), fv("v")),
+            ],
+        };
+        let p = compile(&k, &DimEnv::new()).unwrap();
+        assert!(p.needs_init);
+        assert!(p
+            .vexprs
+            .iter()
+            .any(|e| matches!(e, CVExpr::SlotChecked(_))));
+    }
+
+    #[test]
+    fn both_branch_decl_stays_unchecked() {
+        // Assigned in both branches: the intersection keeps the slot
+        // definite, so the read stays on the fast path.
+        let k = Kernel {
+            name: "definite".into(),
+            dims: vec![],
+            params: vec![crate::ir::BufParam {
+                name: "out".into(),
+                dtype: DType::F32,
+                len: c(4),
+                io: BufIo::Out,
+            }],
+            shared: vec![],
+            launch: crate::ir::Launch { grid: c(1), block: 4 },
+            body: vec![
+                if_else(
+                    lt(tx(), c(2)),
+                    vec![declf("v", fc(1.0))],
+                    vec![declf("v", fc(2.0))],
+                ),
+                store("out", tx(), fv("v")),
+            ],
+        };
+        let p = compile(&k, &DimEnv::new()).unwrap();
+        assert!(!p.needs_init);
+        assert!(!p
+            .vexprs
+            .iter()
+            .any(|e| matches!(e, CVExpr::SlotChecked(_))));
     }
 
     #[test]

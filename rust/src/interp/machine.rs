@@ -19,18 +19,38 @@
 //! verdict no longer matters — a sibling shape of the same candidate
 //! already failed — stands down within `CANCEL_CHECK_STEPS` steps.
 //!
-//! One documented deviation: a register that is declared only inside a
-//! conditionally-executed branch and read afterwards reads `0` here
-//! (slots are zero-initialized per block), where the reference machine
-//! raises `UnknownVar` for the threads that skipped the declaration.
-//! No kernel in the baseline + transform-catalog space produces that
-//! shape — the differential suite (`rust/tests/differential.rs`) pins
-//! both engines bit-identical (results *and* errors) over that whole
-//! space; an exact match would need per-slot init tracking on the read
-//! hot path (see ROADMAP follow-ons).
+//! `UnknownVar` parity with the reference machine is exact: the
+//! compile-time definite-assignment pass (see [`super::compile`]) lowers
+//! reads of maybe-uninitialized registers to *checked* slot reads, and
+//! for those kernels only this machine keeps per-thread init bitmaps —
+//! an uninitialized read raises the same `UnknownVar` the tree-walker's
+//! map lookup did, at the same evaluation point (integer reads latch the
+//! error and every statement-level evaluation guards the latch, so the
+//! first error in evaluation order wins). Kernels with no such reads —
+//! the entire baseline + transform-catalog space — skip the bitmaps
+//! entirely.
+//!
+//! Grids can execute **block-parallel** ([`run_compiled_with_opts`] with
+//! `grid_workers > 1`): blocks are independent by construction (CUDA
+//! semantics), so contiguous chunks of block indices fan out over
+//! `std::thread::scope` workers, each against a private copy of global
+//! memory with exact per-element write tracking, and each worker's
+//! written elements merge back deterministically in block order (so even
+//! overlapping writes across chunks resolve exactly as the serial loop
+//! would — last block wins). `grid_workers = 1` runs the literal serial
+//! loop byte-for-byte, including error selection; at any worker count
+//! the reported error is the lowest failing block's (the merge stops at
+//! the first failed chunk). Two documented deviations at
+//! `grid_workers > 1`, both outside the blocks-are-independent contract
+//! and unreachable from the catalog: a block *reading* an element an
+//! earlier block wrote observes the launch-entry value instead of the
+//! earlier block's store, and the `STEP_LIMIT` budget is per worker
+//! chunk rather than cumulative over the whole grid.
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::thread;
 
 use crate::ir::expr::{eval_cmp, eval_ibin};
 use crate::ir::types::{f32_to_f16_round, DType};
@@ -183,6 +203,58 @@ pub fn run_compiled_with_cancel(
     env: &mut ExecEnv,
     cancel: Option<&AtomicBool>,
 ) -> Result<(), InterpError> {
+    run_compiled_with_opts(
+        prog,
+        env,
+        RunOpts {
+            cancel,
+            grid_workers: 1,
+        },
+    )
+}
+
+/// Per-launch execution options.
+#[derive(Debug, Clone, Copy)]
+pub struct RunOpts<'a> {
+    /// Cooperative cancellation token, polled by every grid worker
+    /// inside the batched step-limit tick.
+    pub cancel: Option<&'a AtomicBool>,
+    /// Worker threads fanned over the launch's blocks. `1` (the
+    /// default) runs the serial engine byte-for-byte; `0` means one
+    /// worker per available core; any request is clamped to the
+    /// launch's grid size.
+    pub grid_workers: usize,
+}
+
+impl Default for RunOpts<'_> {
+    fn default() -> Self {
+        RunOpts {
+            cancel: None,
+            grid_workers: 1,
+        }
+    }
+}
+
+/// Resolve a `grid_workers` request against a launch's grid: `0` means
+/// one worker per available core, and the result is clamped to the
+/// number of blocks (extra workers would have nothing to do).
+pub fn effective_grid_workers(requested: usize, grid: i64) -> usize {
+    let req = if requested == 0 {
+        thread::available_parallelism().map_or(1, |n| n.get())
+    } else {
+        requested
+    };
+    req.clamp(1, grid.max(1) as usize)
+}
+
+/// [`run_compiled`] with full execution options (cancellation token +
+/// block-parallel grid execution). See the module docs for the
+/// determinism contract of `grid_workers`.
+pub fn run_compiled_with_opts(
+    prog: &CompiledKernel,
+    env: &mut ExecEnv,
+    opts: RunOpts<'_>,
+) -> Result<(), InterpError> {
     // Validate buffer lengths.
     for p in &prog.params {
         let got = env.get(&p.name).len();
@@ -214,25 +286,13 @@ pub fn run_compiled_with_cancel(
         })
         .collect();
 
-    let nf = prog.nf;
-    let ni = prog.ni;
-    let block = prog.block as usize;
-    let mut m = Machine {
-        prog,
-        global: &mut global,
-        shared: prog.shared.iter().map(|s| vec![0.0f32; s.len]).collect(),
-        fregs: vec![0.0f32; block * nf],
-        iregs: vec![0i64; block * ni],
-        bx: 0,
-        steps: 0,
-        cancel,
-        cancel_check_at: if cancel.is_some() {
-            CANCEL_CHECK_STEPS
-        } else {
-            u64::MAX
-        },
+    let workers = effective_grid_workers(opts.grid_workers, prog.grid);
+    let result = if workers <= 1 {
+        let mut m = Machine::new(prog, &mut global, opts.cancel, false);
+        m.run_block_range(0, prog.grid)
+    } else {
+        run_grid_parallel(prog, &mut global, opts.cancel, workers)
     };
-    let result = m.run_grid();
 
     for (p, g) in prog.params.iter().zip(global) {
         env.bufs.get_mut(&p.name).unwrap().data = g.data;
@@ -240,7 +300,84 @@ pub fn run_compiled_with_cancel(
     result
 }
 
+/// Execute the launch's blocks on `workers` scoped threads — contiguous
+/// chunks of block indices, each against a private copy of global
+/// memory — then merge each worker's *written elements* back in block
+/// order.
+///
+/// Each worker tracks exactly which global elements its blocks stored
+/// (per-element dirty maps, maintained only in this mode), so the merge
+/// applies precisely the serial loop's writes in the serial loop's block
+/// order — byte-identical even when blocks of different chunks write
+/// overlapping elements (last block wins, as it would serially). The
+/// one behavior blocks must not rely on is *reading* another block's
+/// writes (the CUDA independence contract): a cross-chunk read observes
+/// the launch-entry state where serial would observe the earlier block's
+/// store. Error selection is pinned to the lowest failing block index:
+/// chunks are contiguous and ascending, every worker stops at its first
+/// failing block, and the merge stops at (and reports) the first failed
+/// worker — whose error is the lowest failing block's, exactly what the
+/// serial loop would have reported.
+fn run_grid_parallel(
+    prog: &CompiledKernel,
+    global: &mut Vec<GBuf>,
+    cancel: Option<&AtomicBool>,
+    workers: usize,
+) -> Result<(), InterpError> {
+    let grid = prog.grid as usize;
+    let w = workers.clamp(1, grid.max(1));
+    let base = grid / w;
+    let extra = grid % w;
+    let mut bounds: Vec<i64> = Vec::with_capacity(w + 1);
+    bounds.push(0);
+    for i in 0..w {
+        let len = base + usize::from(i < extra);
+        bounds.push(bounds[i] + len as i64);
+    }
+
+    let mut copies: Vec<Vec<GBuf>> = (0..w).map(|_| global.clone()).collect();
+
+    type WorkerOutcome = (Result<(), InterpError>, Vec<Vec<bool>>);
+    let results: Vec<WorkerOutcome> = thread::scope(|s| {
+        let handles: Vec<_> = copies
+            .iter_mut()
+            .enumerate()
+            .map(|(i, mem)| {
+                let (start, end) = (bounds[i], bounds[i + 1]);
+                s.spawn(move || {
+                    let mut m = Machine::new(prog, mem, cancel, true);
+                    let r = m.run_block_range(start, end);
+                    let dirty = std::mem::take(&mut m.global_dirty);
+                    (r, dirty)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("grid worker panicked"))
+            .collect()
+    });
+
+    // Deterministic merge in block order, stopping at the first failed
+    // worker (its chunk contains the lowest failing block; later chunks
+    // never ran under the serial loop).
+    for (mem, (r, dirty)) in copies.iter().zip(results) {
+        for ((dst, src), written) in global.iter_mut().zip(mem).zip(&dirty) {
+            for ((d, s), wr) in
+                dst.data.iter_mut().zip(&src.data).zip(written)
+            {
+                if *wr {
+                    *d = *s;
+                }
+            }
+        }
+        r?;
+    }
+    Ok(())
+}
+
 /// Global buffer in launch form: dense storage + store-rounding flag.
+#[derive(Clone)]
 struct GBuf {
     data: Vec<f32>,
     f16: bool,
@@ -254,6 +391,17 @@ struct Machine<'a> {
     fregs: Vec<f32>,
     /// Per-thread integer registers, `thread * ni + slot`.
     iregs: Vec<i64>,
+    /// Per-thread init bits, same indexing as the register files; empty
+    /// unless the program has checked (maybe-uninitialized) slot reads.
+    f_init: Vec<bool>,
+    i_init: Vec<bool>,
+    /// Per-buffer dirty maps recording every global element this machine
+    /// stored — maintained only for block-parallel workers (empty
+    /// otherwise), consumed by [`run_grid_parallel`]'s merge.
+    global_dirty: Vec<Vec<bool>>,
+    /// Uninitialized *integer* slot read latched during an (infallible)
+    /// integer evaluation; converted to `UnknownVar` at the next guard.
+    pending_unknown: Cell<Option<u32>>,
     bx: i64,
     steps: u64,
     /// Cooperative cancellation token (None = never polled).
@@ -264,10 +412,52 @@ struct Machine<'a> {
 }
 
 impl<'a> Machine<'a> {
-    fn run_grid(&mut self) -> Result<(), InterpError> {
+    fn new(
+        prog: &'a CompiledKernel,
+        global: &'a mut Vec<GBuf>,
+        cancel: Option<&'a AtomicBool>,
+        track_writes: bool,
+    ) -> Machine<'a> {
+        let block = prog.block as usize;
+        let global_dirty = if track_writes {
+            global.iter().map(|g| vec![false; g.data.len()]).collect()
+        } else {
+            Vec::new()
+        };
+        Machine {
+            prog,
+            global,
+            global_dirty,
+            shared: prog.shared.iter().map(|s| vec![0.0f32; s.len]).collect(),
+            fregs: vec![0.0f32; block * prog.nf],
+            iregs: vec![0i64; block * prog.ni],
+            f_init: if prog.needs_init {
+                vec![false; block * prog.nf]
+            } else {
+                Vec::new()
+            },
+            i_init: if prog.needs_init {
+                vec![false; block * prog.ni]
+            } else {
+                Vec::new()
+            },
+            pending_unknown: Cell::new(None),
+            bx: 0,
+            steps: 0,
+            cancel,
+            cancel_check_at: if cancel.is_some() {
+                CANCEL_CHECK_STEPS
+            } else {
+                u64::MAX
+            },
+        }
+    }
+
+    /// Execute blocks `start..end` of the grid, in index order.
+    fn run_block_range(&mut self, start: i64, end: i64) -> Result<(), InterpError> {
         let active: Vec<i64> = (0..self.prog.block).collect();
         let top = self.prog.top;
-        for bx in 0..self.prog.grid {
+        for bx in start..end {
             self.bx = bx;
             self.reset_block();
             self.exec_range(top, &active)?;
@@ -279,6 +469,9 @@ impl<'a> Machine<'a> {
     fn reset_block(&mut self) {
         self.fregs.fill(0.0);
         self.iregs.fill(0);
+        self.f_init.fill(false);
+        self.i_init.fill(false);
+        self.pending_unknown.set(None);
         for s in &mut self.shared {
             s.fill(0.0);
         }
@@ -310,22 +503,66 @@ impl<'a> Machine<'a> {
 
     #[inline]
     fn set_i(&mut self, t: i64, slot: u32, v: i64) {
-        self.iregs[t as usize * self.prog.ni + slot as usize] = v;
+        let idx = t as usize * self.prog.ni + slot as usize;
+        self.iregs[idx] = v;
+        if !self.i_init.is_empty() {
+            self.i_init[idx] = true;
+        }
     }
 
     #[inline]
     fn set_f(&mut self, t: i64, slot: u32, v: f32) {
-        self.fregs[t as usize * self.prog.nf + slot as usize] = v;
+        let idx = t as usize * self.prog.nf + slot as usize;
+        self.fregs[idx] = v;
+        if !self.f_init.is_empty() {
+            self.f_init[idx] = true;
+        }
+    }
+
+    // ---- UnknownVar parity guards ----------------------------------------
+
+    /// Convert a latched uninitialized-integer-register read into the
+    /// `UnknownVar` the reference machine raised at that read. Called at
+    /// every point a *different* error could be reported and after every
+    /// statement-level evaluation, so the first error in evaluation
+    /// order wins — the tree-walker's eager propagation, reproduced.
+    #[inline]
+    fn int_guard(&self) -> Result<(), EvalError> {
+        if self.prog.needs_init {
+            if let Some(s) = self.pending_unknown.take() {
+                return Err(EvalError::UnknownVar(
+                    self.prog.i_slot_names[s as usize].clone(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// [`int_guard`](Self::int_guard) at statement level.
+    #[inline]
+    fn stmt_guard(&self) -> Result<(), InterpError> {
+        self.int_guard().map_err(InterpError::from)
     }
 
     // ---- expression evaluation -------------------------------------------
 
     /// Integer evaluation is infallible: every name was resolved at
-    /// compile time and there is nothing left that can fail.
+    /// compile time and there is nothing left that can fail. The one
+    /// runtime condition — a checked read of a maybe-uninitialized slot
+    /// — latches into `pending_unknown` instead of returning a `Result`,
+    /// keeping the hot path free of error plumbing.
     fn eval_i(&self, id: u32, t: i64) -> i64 {
         match self.prog.iexprs[id as usize] {
             CIExpr::Const(c) => c,
             CIExpr::Slot(s) => self.get_i(t, s),
+            CIExpr::SlotChecked(s) => {
+                if !self.i_init[t as usize * self.prog.ni + s as usize]
+                    && self.pending_unknown.get().is_none()
+                {
+                    self.pending_unknown.set(Some(s));
+                }
+                self.get_i(t, s)
+            }
             CIExpr::ThreadIdx => t,
             CIExpr::BlockIdx => self.bx,
             CIExpr::Lane => t % WARP_SIZE,
@@ -356,6 +593,17 @@ impl<'a> Machine<'a> {
             CVExpr::Const(c) => c,
             CVExpr::Slot(s) => {
                 self.fregs[t as usize * self.prog.nf + s as usize]
+            }
+            CVExpr::SlotChecked(s) => {
+                let idx = t as usize * self.prog.nf + s as usize;
+                if !self.f_init[idx] {
+                    // An earlier uninitialized *integer* read wins.
+                    self.int_guard()?;
+                    return Err(EvalError::UnknownVar(
+                        self.prog.f_slot_names[s as usize].clone(),
+                    ));
+                }
+                self.fregs[idx]
             }
             CVExpr::FromInt(i) => self.eval_i(i, t) as f32,
             CVExpr::Bin(op, a, b) => {
@@ -391,6 +639,7 @@ impl<'a> Machine<'a> {
             }
             CVExpr::LoadGlobal { buf, idx } => {
                 let i = self.eval_i(idx, t);
+                self.int_guard()?;
                 let d = &self.global[buf as usize].data;
                 match d.get(i as usize) {
                     Some(v) => *v,
@@ -405,6 +654,7 @@ impl<'a> Machine<'a> {
             }
             CVExpr::LoadShared { buf, idx } => {
                 let i = self.eval_i(idx, t);
+                self.int_guard()?;
                 let d = &self.shared[buf as usize];
                 match d.get(i as usize) {
                     Some(v) => *v,
@@ -418,10 +668,16 @@ impl<'a> Machine<'a> {
                 }
             }
             CVExpr::ShflDown { value, offset } => {
+                // Offset first, then the collective check — the
+                // reference machine's exact order (eval.rs resolves the
+                // offset before `shfl.ok_or(ShuffleOutsideCollective)`),
+                // so an uninitialized offset register reports UnknownVar
+                // in both engines even on the private path.
+                let off = self.eval_i(offset, t);
+                self.int_guard()?;
                 if !collective {
                     return Err(EvalError::ShuffleOutsideCollective);
                 }
-                let off = self.eval_i(offset, t);
                 // Value of the expression in lane (lane+off) of the same
                 // warp; out-of-range lanes return the caller's own. The
                 // shuffled expression evaluates with shuffles *disabled*,
@@ -493,27 +749,33 @@ impl<'a> Machine<'a> {
         match self.prog.stmts[sid as usize] {
             CStmt::AssignF { slot, value } => {
                 let v = self.eval_v(value, t, false)?;
+                self.stmt_guard()?;
                 self.set_f(t, slot, v);
             }
             CStmt::AssignI { slot, value } => {
                 let v = self.eval_i(value, t);
+                self.stmt_guard()?;
                 self.set_i(t, slot, v);
             }
             CStmt::StoreGlobal { buf, idx, value } => {
                 let i = self.eval_i(idx, t);
                 let v = self.eval_v(value, t, false)?;
+                self.stmt_guard()?;
                 self.store_global(buf, i, v)?;
             }
             CStmt::StoreShared { buf, idx, value } => {
                 let i = self.eval_i(idx, t);
                 let v = self.eval_v(value, t, false)?;
+                self.stmt_guard()?;
                 self.store_shared(buf, i, v)?;
             }
             CStmt::Sync => {
                 // Private sync is unreachable (sync is collective); no-op.
             }
             CStmt::If { cond, then, els } => {
-                let branch = if self.eval_b(cond, t) { then } else { els };
+                let taken = self.eval_b(cond, t);
+                self.stmt_guard()?;
+                let branch = if taken { then } else { els };
                 if !branch.is_empty() {
                     self.exec_private_run(branch, t)?;
                 }
@@ -527,11 +789,13 @@ impl<'a> Machine<'a> {
                 body,
             } => {
                 let v0 = self.eval_i(init, t);
+                self.stmt_guard()?;
                 self.set_i(t, var, v0);
                 loop {
                     self.tick(1)?;
                     let cur = self.get_i(t, var);
                     let b = self.eval_i(bound, t);
+                    self.stmt_guard()?;
                     if !eval_cmp(cmp, cur, b) {
                         break;
                     }
@@ -541,6 +805,7 @@ impl<'a> Machine<'a> {
                         CUpdate::Add(e) => cur + self.eval_i(e, t),
                         CUpdate::Shr(k) => cur >> k,
                     };
+                    self.stmt_guard()?;
                     self.set_i(t, var, next);
                 }
             }
@@ -560,6 +825,7 @@ impl<'a> Machine<'a> {
             CStmt::AssignI { slot, value } => {
                 for &t in active {
                     let v = self.eval_i(value, t);
+                    self.stmt_guard()?;
                     self.set_i(t, slot, v);
                 }
             }
@@ -579,7 +845,9 @@ impl<'a> Machine<'a> {
                 let mut t_act = Vec::new();
                 let mut e_act = Vec::new();
                 for &t in active {
-                    if self.eval_b(cond, t) {
+                    let taken = self.eval_b(cond, t);
+                    self.stmt_guard()?;
+                    if taken {
                         t_act.push(t);
                     } else {
                         e_act.push(t);
@@ -608,17 +876,21 @@ impl<'a> Machine<'a> {
 
     /// Two-phase collective store: evaluate every thread's (index, value)
     /// against the pre-statement state, then commit — exact semantics for
-    /// the disjoint read/write sets of reduction trees.
+    /// the disjoint read/write sets of reduction trees. Evaluation order
+    /// mirrors the reference machine exactly — all threads' *values*
+    /// first (lockstep), then indices per thread — so error selection
+    /// (OOB, checked UnknownVar reads) agrees between the engines.
     fn eval_two_phase(
         &self,
         idx: u32,
         value: u32,
         active: &[i64],
     ) -> Result<Vec<(i64, f32)>, InterpError> {
+        let vals = self.eval_lockstep(value, active)?;
         let mut writes = Vec::with_capacity(active.len());
-        for &t in active {
-            let v = self.eval_v(value, t, true)?;
+        for (&t, v) in active.iter().zip(vals) {
             let i = self.eval_i(idx, t);
+            self.stmt_guard()?;
             writes.push((i, v));
         }
         Ok(writes)
@@ -633,7 +905,9 @@ impl<'a> Machine<'a> {
     ) -> Result<Vec<f32>, InterpError> {
         let mut out = Vec::with_capacity(active.len());
         for &t in active {
-            out.push(self.eval_v(value, t, true)?);
+            let v = self.eval_v(value, t, true)?;
+            self.stmt_guard()?;
+            out.push(v);
         }
         Ok(out)
     }
@@ -653,6 +927,7 @@ impl<'a> Machine<'a> {
         let mut first: Option<i64> = None;
         for &t in active {
             let v = self.eval_i(init, t);
+            self.stmt_guard()?;
             match first {
                 None => first = Some(v),
                 Some(f) if f != v => {
@@ -671,6 +946,7 @@ impl<'a> Machine<'a> {
             for &t in active {
                 let cur = self.get_i(t, var);
                 let b = self.eval_i(bound, t);
+                self.stmt_guard()?;
                 let c = eval_cmp(cmp, cur, b);
                 match cont {
                     None => cont = Some(c),
@@ -692,6 +968,7 @@ impl<'a> Machine<'a> {
                     CUpdate::Add(e) => cur + self.eval_i(e, t),
                     CUpdate::Shr(k) => cur >> k,
                 };
+                self.stmt_guard()?;
                 self.set_i(t, var, next);
             }
         }
@@ -712,6 +989,9 @@ impl<'a> Machine<'a> {
         }
         let g = &mut self.global[buf as usize];
         g.data[i as usize] = if g.f16 { f32_to_f16_round(v) } else { v };
+        if !self.global_dirty.is_empty() {
+            self.global_dirty[buf as usize][i as usize] = true;
+        }
         Ok(())
     }
 
@@ -1090,6 +1370,199 @@ mod tests {
             matches!(result, Err(InterpError::Cancelled)),
             "worker must observe the late token: {result:?}"
         );
+    }
+
+    #[test]
+    fn grid_parallel_matches_serial_bitwise_at_every_worker_count() {
+        let mut k = scale_kernel(32);
+        k.launch.grid = c(8);
+        let mut dims = DimEnv::new();
+        dims.insert("N".into(), 1000);
+        let x: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        let prog = compile(&k, &dims).unwrap();
+        let mut serial = ExecEnv::for_kernel(&k, &dims);
+        serial.set("x", x.clone());
+        super::run_compiled(&prog, &mut serial).unwrap();
+        for workers in [2usize, 3, 7, 8, 16, 0] {
+            let mut env = ExecEnv::for_kernel(&k, &dims);
+            env.set("x", x.clone());
+            super::run_compiled_with_opts(
+                &prog,
+                &mut env,
+                RunOpts {
+                    cancel: None,
+                    grid_workers: workers,
+                },
+            )
+            .unwrap();
+            for name in ["x", "y"] {
+                let a: Vec<u32> =
+                    serial.get(name).iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> =
+                    env.get(name).iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "buffer {name} at grid_workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn grid_parallel_preset_cancel_token_stops_all_workers() {
+        use std::sync::atomic::AtomicBool;
+        let mut k = busy_kernel(30_000_000);
+        k.launch.grid = c(4);
+        // Out buffer must cover all blocks' stores: widen to 4 and make
+        // each block write its own element.
+        k.params[0].len = c(4);
+        k.body = vec![for_up(
+            "i",
+            c(0),
+            c(30_000_000),
+            c(1),
+            vec![store("y", bx(), fadd(load("y", bx()), fc(1.0)))],
+        )];
+        let dims = DimEnv::new();
+        let prog = compile(&k, &dims).unwrap();
+        let mut env = ExecEnv::for_kernel(&k, &dims);
+        let token = AtomicBool::new(true);
+        let err = super::run_compiled_with_opts(
+            &prog,
+            &mut env,
+            RunOpts {
+                cancel: Some(&token),
+                grid_workers: 4,
+            },
+        )
+        .unwrap_err();
+        assert!(matches!(err, InterpError::Cancelled), "{err}");
+        // Buffers restored, env usable.
+        assert_eq!(env.get("y").len(), 4);
+    }
+
+    #[test]
+    fn effective_workers_clamp_to_grid_and_resolve_auto() {
+        assert_eq!(super::effective_grid_workers(1, 8), 1);
+        assert_eq!(super::effective_grid_workers(4, 8), 4);
+        assert_eq!(super::effective_grid_workers(16, 8), 8);
+        assert_eq!(super::effective_grid_workers(7, 2), 2);
+        assert!(super::effective_grid_workers(0, 64) >= 1);
+    }
+
+    /// if (tx < 2) { v = x[tx] }  out[tx] = v — threads 2.. read a
+    /// register they never declared: both engines must raise the same
+    /// UnknownVar (ROADMAP "exact UnknownVar parity", closed).
+    fn branch_decl_kernel() -> Kernel {
+        Kernel {
+            name: "branch_decl".into(),
+            dims: vec![],
+            params: vec![
+                BufParam {
+                    name: "x".into(),
+                    dtype: DType::F32,
+                    len: c(4),
+                    io: BufIo::In,
+                },
+                BufParam {
+                    name: "out".into(),
+                    dtype: DType::F32,
+                    len: c(4),
+                    io: BufIo::Out,
+                },
+            ],
+            shared: vec![],
+            launch: Launch { grid: c(1), block: 4 },
+            body: vec![
+                if_(lt(tx(), c(2)), vec![declf("v", load("x", tx()))]),
+                store("out", tx(), fv("v")),
+            ],
+        }
+    }
+
+    #[test]
+    fn conditionally_bound_float_register_raises_unknown_var() {
+        let k = branch_decl_kernel();
+        let dims = DimEnv::new();
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let a = super::super::run_with_inputs(&k, &dims, &[("x", x.clone())])
+            .unwrap_err();
+        let b = super::super::reference::run_with_inputs(&k, &dims, &[("x", x)])
+            .unwrap_err();
+        assert_eq!(a.to_string(), b.to_string());
+        assert!(a.to_string().contains("unknown variable v"), "{a}");
+    }
+
+    #[test]
+    fn conditionally_bound_int_register_raises_unknown_var() {
+        // if (tx < 2) { j = 1 }  out[j] = 1.0 — uninit *integer* read:
+        // exercises the latch-and-guard path (integer eval is infallible).
+        let k = Kernel {
+            name: "branch_decl_i".into(),
+            dims: vec![],
+            params: vec![BufParam {
+                name: "out".into(),
+                dtype: DType::F32,
+                len: c(4),
+                io: BufIo::Out,
+            }],
+            shared: vec![],
+            launch: Launch { grid: c(1), block: 4 },
+            body: vec![
+                if_(lt(tx(), c(2)), vec![decli("j", c(1))]),
+                store("out", iv("j"), fc(1.0)),
+            ],
+        };
+        let dims = DimEnv::new();
+        let a = super::super::run_with_inputs(&k, &dims, &[]).unwrap_err();
+        let b =
+            super::super::reference::run_with_inputs(&k, &dims, &[]).unwrap_err();
+        assert_eq!(a.to_string(), b.to_string());
+        assert!(a.to_string().contains("unknown variable j"), "{a}");
+    }
+
+    #[test]
+    fn zero_trip_loop_body_decl_raises_unknown_var() {
+        // for (i = 0; i < 0; i += 1) { w = 1.0 }  out[tx] = w — the body
+        // never ran, so w was never bound at runtime.
+        let k = Kernel {
+            name: "zero_trip".into(),
+            dims: vec![],
+            params: vec![BufParam {
+                name: "out".into(),
+                dtype: DType::F32,
+                len: c(2),
+                io: BufIo::Out,
+            }],
+            shared: vec![],
+            launch: Launch { grid: c(1), block: 2 },
+            body: vec![
+                for_up("i", c(0), c(0), c(1), vec![declf("w", fc(1.0))]),
+                store("out", tx(), fv("w")),
+            ],
+        };
+        let dims = DimEnv::new();
+        let a = super::super::run_with_inputs(&k, &dims, &[]).unwrap_err();
+        let b =
+            super::super::reference::run_with_inputs(&k, &dims, &[]).unwrap_err();
+        assert_eq!(a.to_string(), b.to_string());
+        assert!(a.to_string().contains("unknown variable w"), "{a}");
+    }
+
+    #[test]
+    fn branch_bound_register_reads_fine_for_threads_that_took_the_branch() {
+        // All threads take the branch: no error, values flow through, and
+        // both engines agree bitwise even with init tracking enabled.
+        let mut k = branch_decl_kernel();
+        // Loosen the guard so every thread declares v.
+        k.body[0] = if_(lt(tx(), c(4)), vec![declf("v", load("x", tx()))]);
+        let dims = DimEnv::new();
+        let x = vec![1.5f32, -2.0, 0.25, 4.0];
+        let a = super::super::run_with_inputs(&k, &dims, &[("x", x.clone())])
+            .unwrap();
+        let b = super::super::reference::run_with_inputs(&k, &dims, &[("x", x)])
+            .unwrap();
+        let av: Vec<u32> = a.get("out").iter().map(|v| v.to_bits()).collect();
+        let bv: Vec<u32> = b.get("out").iter().map(|v| v.to_bits()).collect();
+        assert_eq!(av, bv);
+        assert_eq!(a.get("out"), &[1.5, -2.0, 0.25, 4.0]);
     }
 
     #[test]

@@ -29,12 +29,20 @@
 //!   `coordinator_hotpath` bench's before/after comparison
 //!   (EXPERIMENTS.md §Perf).
 //!
-//! Two coordinator-facing extensions ride on the compiled engine:
+//! Three coordinator-facing extensions ride on the compiled engine:
 //! [`cache`] memoizes `compile` per (kernel structural hash, dims) so
-//! re-validating a beam survivor never recompiles, and
-//! [`run_compiled_with_cancel`] threads a cooperative cancellation token
-//! through the machine's batched tick so parallel validation can stop
-//! sibling shapes once a candidate's verdict is known.
+//! re-validating a beam survivor never recompiles (and an
+//! `Arc<CompileCache>` can be hoisted above whole optimization runs to
+//! share baseline compiles across the concurrent coordinators and the
+//! serving pipeline); [`run_compiled_with_cancel`] threads a cooperative
+//! cancellation token through the machine's batched tick so parallel
+//! validation can stop sibling shapes once a candidate's verdict is
+//! known; and [`run_compiled_with_opts`] additionally fans a launch's
+//! *blocks* over scoped worker threads ([`RunOpts::grid_workers`]) with
+//! a deterministic by-block-index merge — `grid_workers = 1` is the
+//! serial engine byte-for-byte, and the three-way differential wall
+//! (`rust/tests/differential.rs`) pins reference ≡ serial compiled ≡
+//! block-parallel compiled at every tested worker count.
 
 pub mod cache;
 mod compile;
@@ -46,7 +54,8 @@ pub use cache::{kernel_hash, CacheStats, CompileCache};
 pub use compile::{compile, CompiledKernel, ParamSlot, SharedSlot};
 pub use eval::{fastmath_quantize, WARP_SIZE};
 pub use machine::{
-    run, run_compiled, run_compiled_with_cancel, Buffer, ExecEnv, InterpError,
+    effective_grid_workers, run, run_compiled, run_compiled_with_cancel,
+    run_compiled_with_opts, Buffer, ExecEnv, InterpError, RunOpts,
 };
 
 use crate::ir::{DimEnv, Kernel};

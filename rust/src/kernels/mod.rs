@@ -55,6 +55,18 @@ impl KernelSpec {
             .collect();
         format!("[{}]", vals.join(", "))
     }
+
+    /// The spec's largest correctness shape by total launch work for
+    /// `kernel` (blocks × threads) — the single shape the grid-parallel
+    /// measurements use (`coordinator_hotpath` bench and the
+    /// `shape_sweep` example, kept in lockstep via this helper;
+    /// EXPERIMENTS.md §Grid-parallel).
+    pub fn largest_test_shape(&self, kernel: &Kernel) -> DimEnv {
+        (self.test_shapes)()
+            .into_iter()
+            .max_by_key(|d| kernel.grid_size(d) * kernel.launch.block as i64)
+            .expect("spec has correctness shapes")
+    }
 }
 
 /// All three kernels, in paper order.

@@ -12,7 +12,8 @@
 use anyhow::{anyhow, Result};
 
 use astra::coordinator::{self, AgentMode, Config};
-use astra::pipeline::DecodePipeline;
+use astra::interp::CompileCache;
+use astra::pipeline::{self, DecodePipeline};
 use astra::runtime::{default_artifacts_dir, Engine};
 use astra::{config, kernels, report};
 
@@ -52,7 +53,7 @@ fn print_usage() {
          \x20 optimize  [--kernel NAME] [--mode multi|single] [--rounds N]\n\
          \x20           [--seed N] [--temperature T] [--bug-rate P]\n\
          \x20           [--beam-width B] [--candidates K]\n\
-         \x20           [--config FILE] [--trace]\n\
+         \x20           [--grid-workers W] [--config FILE] [--trace]\n\
          \x20 bench     --table 2|3|4\n\
          \x20 casestudy --kernel NAME | --list\n\
          \x20 validate\n\
@@ -87,6 +88,7 @@ fn build_config(args: &[String]) -> Result<Config> {
         ("--bug-rate", "bug_rate"),
         ("--beam-width", "beam_width"),
         ("--candidates", "candidates_per_round"),
+        ("--grid-workers", "grid_workers"),
     ] {
         if let Some(v) = opt_value(args, flag) {
             config::apply(&mut cfg, &mut model, key, &v)?;
@@ -193,6 +195,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .transpose()?
         .unwrap_or(5);
     let dir = default_artifacts_dir()?;
+    // The pre-serve gate covers both kernel-IR variants in one pass (it
+    // is variant-agnostic: the drop-in claim needs baseline AND
+    // optimized checked), so it runs once, not per pipeline. Repeated
+    // gates sharing a cache compile nothing new — callers validating in
+    // a loop should hoist the cache accordingly.
+    let cache = CompileCache::with_default_capacity();
+    let checked =
+        pipeline::validate_serving_kernels(&pipeline::ServeConfig::default(), &cache)?;
+    println!("pre-serve gate: {checked} serving launches validated (baseline + optimized IR)");
     for variant in ["baseline", "optimized"] {
         let eng = Engine::from_dir(&dir)?;
         let mut pipe = DecodePipeline::new(eng, variant, 7)?;

@@ -11,7 +11,11 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::interp::{self, CompileCache};
+use crate::ir::DimEnv;
+use crate::kernels::{self, KernelSpec};
 use crate::runtime::Engine;
+use crate::transforms;
 use crate::util::Prng;
 
 /// Shapes of the AOT decode-layer artifact (must match
@@ -41,6 +45,72 @@ impl ServeConfig {
     }
 }
 
+/// The serving-shape dims of one optimized kernel under `cfg` — the
+/// launches the decode layer actually performs each step.
+fn serving_dims(cfg: &ServeConfig, spec: &KernelSpec) -> DimEnv {
+    match spec.paper_name {
+        "merge_attn_states_lse" => kernels::dims_of(&[
+            ("S", cfg.batch as i64),
+            ("H", cfg.heads as i64),
+            ("D", cfg.head_dim as i64),
+        ]),
+        "fused_add_rmsnorm" => kernels::dims_of(&[
+            ("B", cfg.batch as i64),
+            ("D", cfg.hidden() as i64),
+        ]),
+        "silu_and_mul" => kernels::dims_of(&[
+            ("B", cfg.batch as i64),
+            ("D", cfg.inter as i64),
+        ]),
+        other => panic!("no serving shape mapping for kernel {other}"),
+    }
+}
+
+/// Interp-backed pre-serve gate: run both kernel-IR variants (baseline
+/// and the optimized composition) of every serving kernel on `cfg`'s
+/// serving shapes and check them against the SGLang-semantics oracle,
+/// compiling through `cache`. With the cache hoisted above the two
+/// pipeline variants (and above `optimize_all_parallel`), the second
+/// caller finds every launch compile already resident — the serving
+/// side of the shared cross-run compile cache. Returns the number of
+/// launches validated.
+pub fn validate_serving_kernels(
+    cfg: &ServeConfig,
+    cache: &CompileCache,
+) -> Result<usize> {
+    let mut launches = 0usize;
+    for spec in kernels::all_specs() {
+        let dims = serving_dims(cfg, &spec);
+        let base = (spec.build_baseline)();
+        let opt = transforms::optimized_reference(&base);
+        for kernel in [&base, &opt] {
+            let prog = cache
+                .get_or_compile(kernel, &dims)
+                .map_err(|e| anyhow!("{} ({:?}): {e}", spec.paper_name, dims))?;
+            let inputs = (spec.gen_inputs)(&dims, 0x5E21);
+            let mut env = interp::ExecEnv::for_kernel(kernel, &dims);
+            for (name, data) in &inputs {
+                env.set(name, data.clone());
+            }
+            interp::run_compiled(&prog, &mut env)
+                .map_err(|e| anyhow!("{} ({:?}): {e}", spec.paper_name, dims))?;
+            let want = (spec.reference)(&dims, &inputs.iter().cloned().collect());
+            for buf in spec.out_bufs {
+                let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
+                if rel >= spec.rel_tol && abs >= spec.abs_tol {
+                    return Err(anyhow!(
+                        "{} {buf}: serving-shape mismatch (abs {abs:.2e}, \
+                         rel {rel:.2e}) at {dims:?}",
+                        spec.paper_name
+                    ));
+                }
+            }
+            launches += 1;
+        }
+    }
+    Ok(launches)
+}
+
 /// Latency/throughput statistics from a serving run.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
@@ -64,7 +134,11 @@ pub struct BatchState {
     pub s_b: Vec<f32>,
 }
 
-/// The pipeline: weights + engine + chosen kernel variant.
+/// The pipeline: weights + engine + chosen kernel variant. Interp-side
+/// correctness gating lives in the free function
+/// [`validate_serving_kernels`], which callers run once (over a shared
+/// [`CompileCache`]) before constructing pipelines — it is
+/// variant-agnostic, so it is not per-pipeline state.
 pub struct DecodePipeline {
     engine: Engine,
     cfg: ServeConfig,
@@ -182,5 +256,46 @@ impl DecodePipeline {
             p95_us: lat[((steps as f64 * 0.95) as usize).min(steps - 1)],
             tokens_per_s: (self.cfg.batch * steps) as f64 / wall,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serving_kernels_validate_on_default_config() {
+        let cache = CompileCache::with_default_capacity();
+        let n = validate_serving_kernels(&ServeConfig::default(), &cache)
+            .expect("serving kernels must pass their oracle");
+        // Three kernels x (baseline + optimized composition).
+        assert_eq!(n, 6);
+        assert_eq!(cache.stats().misses, 6);
+        assert_eq!(cache.stats().hits, 0);
+    }
+
+    #[test]
+    fn second_variant_validation_is_hit_only_on_a_shared_cache() {
+        // The cmd_serve topology: one cache hoisted above the command —
+        // any repeated validation pass recompiles nothing.
+        let cache = CompileCache::with_default_capacity();
+        let cfg = ServeConfig::default();
+        validate_serving_kernels(&cfg, &cache).unwrap();
+        let first = cache.stats();
+        validate_serving_kernels(&cfg, &cache).unwrap();
+        let second = cache.stats();
+        assert_eq!(second.misses, first.misses, "no recompiles");
+        assert_eq!(second.hits, first.hits + 6);
+    }
+
+    #[test]
+    fn serving_dims_cover_every_kernel() {
+        let cfg = ServeConfig::default();
+        for spec in kernels::all_specs() {
+            let dims = serving_dims(&cfg, &spec);
+            for name in spec.dims {
+                assert!(dims.contains_key(*name), "{}: {name}", spec.paper_name);
+            }
+        }
     }
 }

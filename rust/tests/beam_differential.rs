@@ -71,6 +71,41 @@ fn beam_1x1_is_byte_identical_to_greedy_across_kernels_and_modes() {
 }
 
 #[test]
+fn beam_1x1_matches_greedy_at_every_grid_worker_count() {
+    // Block-parallel validation is below both engines; it must be
+    // invisible to the search layer at any worker count (including the
+    // machine's real parallelism and 0 = auto).
+    let ncpu = std::thread::available_parallelism().map_or(1, |n| n.get());
+    for gw in [2usize, 7, ncpu, 0] {
+        let cfg = Config {
+            grid_workers: gw,
+            ..Config::multi_agent()
+        };
+        for spec in kernels::all_specs() {
+            let label = format!("{} / grid_workers={gw}", spec.paper_name);
+            let greedy = optimize_greedy(&spec, &cfg);
+            let beam = optimize(&spec, &cfg);
+            assert_outcomes_identical(&greedy, &beam, &label);
+        }
+    }
+}
+
+#[test]
+fn grid_workers_never_change_the_trajectory() {
+    // The same engine at different worker counts: byte-identical
+    // outcomes (the Config-level face of the differential wall).
+    let base = optimize(&kernels::merge::spec(), &Config::multi_agent());
+    for gw in [2usize, 7, 0] {
+        let cfg = Config {
+            grid_workers: gw,
+            ..Config::multi_agent()
+        };
+        let out = optimize(&kernels::merge::spec(), &cfg);
+        assert_outcomes_identical(&base, &out, &format!("grid_workers={gw}"));
+    }
+}
+
+#[test]
 fn beam_1x1_differential_holds_with_planner_noise() {
     // High temperature exercises the planner's PRNG stream alignment:
     // both engines must consume it identically (once per round).

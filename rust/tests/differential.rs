@@ -1,36 +1,64 @@
-//! Differential tests for the slot-compiled interpreter: the compiled
-//! engine (`astra::interp::run`) must produce **bit-identical** buffers to
-//! the tree-walking reference machine (`astra::interp::reference`) on
-//! every kernel, shape and transform the system can produce, and must
-//! agree with the SGLang-semantics oracle within each spec's tolerance.
+//! Three-way differential wall for the interpreter stack: the
+//! tree-walking reference machine (`astra::interp::reference`), the
+//! serial slot-compiled engine (`astra::interp::run`) and the
+//! block-parallel compiled engine (`run_compiled_with_opts` with
+//! `grid_workers > 1`, at several worker counts including `num_cpus`)
+//! must produce **bit-identical** buffers — or the **same error
+//! rendering** — on every kernel, shape and transform the system can
+//! produce, and must agree with the SGLang-semantics oracle within each
+//! spec's tolerance. Error-path cases pin the "lowest failing block
+//! index wins" contract at every worker count.
 //!
 //! Property-style cases use the in-repo deterministic PRNG (the offline
 //! vendor set carries no proptest); failing seeds are printed so every
 //! case is reproducible.
 
-use astra::interp;
+use astra::interp::{self, InterpError, RunOpts};
 use astra::ir::Kernel;
 use astra::kernels::{self, KernelSpec};
 use astra::transforms;
 use astra::util::Prng;
 
-/// Compare both engines on one (kernel, shape, seed): every buffer —
-/// inputs after f16 entry-rounding included — must match bit for bit, or
-/// both engines must fail with the same error rendering.
-fn assert_engines_bit_identical(
-    spec: &KernelSpec,
+/// Worker counts every case is exercised at (beyond serial): a small
+/// fan-out, a deliberately grid-mismatched odd count, and the machine's
+/// real parallelism.
+fn worker_counts() -> Vec<usize> {
+    let ncpu = std::thread::available_parallelism().map_or(1, |n| n.get());
+    vec![2, 7, ncpu]
+}
+
+/// Run the compiled engine block-parallel at `grid_workers`.
+fn run_parallel(
     kernel: &Kernel,
+    dims: &astra::ir::DimEnv,
+    refs: &[(&str, Vec<f32>)],
+    grid_workers: usize,
+) -> Result<interp::ExecEnv, InterpError> {
+    let prog = interp::compile(kernel, dims)?;
+    let mut env = interp::ExecEnv::for_kernel(kernel, dims);
+    for (name, data) in refs {
+        env.set(name, data.clone());
+    }
+    interp::run_compiled_with_opts(
+        &prog,
+        &mut env,
+        RunOpts {
+            cancel: None,
+            grid_workers,
+        },
+    )?;
+    Ok(env)
+}
+
+/// Both outcomes Ok with bit-identical buffers, or both Err with the
+/// same rendering.
+fn assert_same_outcome(
+    got: &Result<interp::ExecEnv, InterpError>,
+    want: &Result<interp::ExecEnv, InterpError>,
     dims: &astra::ir::DimEnv,
     seed: u64,
     ctx: &str,
 ) {
-    let inputs = (spec.gen_inputs)(dims, seed);
-    let refs: Vec<(&str, Vec<f32>)> = inputs
-        .iter()
-        .map(|(n, v)| (n.as_str(), v.clone()))
-        .collect();
-    let got = interp::run_with_inputs(kernel, dims, &refs);
-    let want = interp::reference::run_with_inputs(kernel, dims, &refs);
     match (got, want) {
         (Ok(a), Ok(b)) => {
             for (name, buf) in &a.bufs {
@@ -52,11 +80,48 @@ fn assert_engines_bit_identical(
             );
         }
         (Ok(_), Err(e)) => {
-            panic!("{ctx}: compiled engine passed, reference failed: {e}")
+            panic!("{ctx}: engine passed where reference failed: {e}")
         }
         (Err(e), Ok(_)) => {
-            panic!("{ctx}: compiled engine failed, reference passed: {e}")
+            panic!("{ctx}: engine failed where reference passed: {e}")
         }
+    }
+}
+
+/// Compare all three engines on one (kernel, shape, seed): reference ≡
+/// serial compiled ≡ block-parallel compiled at every tested worker
+/// count — buffers bit for bit (inputs after f16 entry-rounding
+/// included), errors by rendering.
+fn assert_engines_bit_identical(
+    spec: &KernelSpec,
+    kernel: &Kernel,
+    dims: &astra::ir::DimEnv,
+    seed: u64,
+    ctx: &str,
+) {
+    let inputs = (spec.gen_inputs)(dims, seed);
+    let refs: Vec<(&str, Vec<f32>)> = inputs
+        .iter()
+        .map(|(n, v)| (n.as_str(), v.clone()))
+        .collect();
+    let want = interp::reference::run_with_inputs(kernel, dims, &refs);
+    let serial = interp::run_with_inputs(kernel, dims, &refs);
+    assert_same_outcome(
+        &serial,
+        &want,
+        dims,
+        seed,
+        &format!("{ctx} [serial compiled]"),
+    );
+    for w in worker_counts() {
+        let par = run_parallel(kernel, dims, &refs, w);
+        assert_same_outcome(
+            &par,
+            &want,
+            dims,
+            seed,
+            &format!("{ctx} [grid_workers={w}]"),
+        );
     }
 }
 
@@ -170,6 +235,142 @@ fn compiled_engine_matches_oracle_within_tolerance() {
                 );
             }
         }
+    }
+}
+
+/// Error-path wall: a launch that fails mid-grid must report the SAME
+/// error — the lowest failing block's — from the reference machine, the
+/// serial compiled engine and the block-parallel engine at every worker
+/// count, including counts that split the failing blocks across chunks.
+#[test]
+fn mid_grid_failure_reports_lowest_block_error_at_every_worker_count() {
+    use astra::ir::build::*;
+    use astra::ir::{BufIo, BufParam, DType, Launch};
+
+    // Grid of 8 single-warp blocks; blocks 2 and 5 poison DIFFERENT
+    // out-of-bounds indices, so the two candidate errors render
+    // differently and the test can see which block "won".
+    let k = Kernel {
+        name: "midfail".into(),
+        dims: vec![],
+        params: vec![
+            BufParam {
+                name: "x".into(),
+                dtype: DType::F32,
+                len: c(64),
+                io: BufIo::In,
+            },
+            BufParam {
+                name: "y".into(),
+                dtype: DType::F32,
+                len: c(64),
+                io: BufIo::Out,
+            },
+        ],
+        shared: vec![],
+        launch: Launch { grid: c(8), block: 8 },
+        body: vec![
+            store(
+                "y",
+                iadd(imul(bx(), bdim()), tx()),
+                load("x", iadd(imul(bx(), bdim()), tx())),
+            ),
+            if_(
+                eq(bx(), c(5)),
+                vec![if_(eq(tx(), c(0)), vec![store("y", c(69), fc(1.0))])],
+            ),
+            if_(
+                eq(bx(), c(2)),
+                vec![if_(eq(tx(), c(0)), vec![store("y", c(66), fc(1.0))])],
+            ),
+        ],
+    };
+    let dims = astra::ir::DimEnv::new();
+    let x: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let refs: Vec<(&str, Vec<f32>)> = vec![("x", x)];
+
+    let want = interp::reference::run_with_inputs(&k, &dims, &refs)
+        .expect_err("reference must fail");
+    assert!(
+        want.to_string().contains("y[66]"),
+        "lowest failing block is 2 (index 66): {want}"
+    );
+    let serial =
+        interp::run_with_inputs(&k, &dims, &refs).expect_err("serial must fail");
+    assert_eq!(serial.to_string(), want.to_string());
+    // Sweep worker counts that place blocks 2 and 5 in the same chunk,
+    // different chunks, and one-block-per-worker.
+    let ncpu = std::thread::available_parallelism().map_or(1, |n| n.get());
+    for w in [2usize, 3, 4, 7, 8, ncpu] {
+        let got = run_parallel(&k, &dims, &refs, w)
+            .expect_err("parallel must fail too");
+        assert_eq!(
+            got.to_string(),
+            want.to_string(),
+            "grid_workers={w} must report block 2's error"
+        );
+    }
+}
+
+/// UnknownVar parity wall (ROADMAP follow-on, closed): a register bound
+/// only in a skipped branch raises the same `UnknownVar` in all three
+/// engines at every worker count.
+#[test]
+fn conditionally_bound_register_raises_unknown_var_three_way() {
+    use astra::ir::build::*;
+    use astra::ir::{BExpr, BufIo, BufParam, DType, Launch};
+
+    // Two blocks: block 0's threads all bind v, block 1's thread 2+
+    // skip the declaration and then read it — the reference machine
+    // raises UnknownVar("v") there, and so must both compiled engines
+    // (block 0 completing first must not mask block 1's error).
+    let k = Kernel {
+        name: "branch_decl_grid".into(),
+        dims: vec![],
+        params: vec![
+            BufParam {
+                name: "x".into(),
+                dtype: DType::F32,
+                len: c(8),
+                io: BufIo::In,
+            },
+            BufParam {
+                name: "out".into(),
+                dtype: DType::F32,
+                len: c(8),
+                io: BufIo::Out,
+            },
+        ],
+        shared: vec![],
+        launch: Launch { grid: c(2), block: 4 },
+        body: vec![
+            if_(
+                BExpr::Or(
+                    Box::new(eq(bx(), c(0))),
+                    Box::new(lt(tx(), c(2))),
+                ),
+                vec![declf(
+                    "v",
+                    load("x", iadd(imul(bx(), bdim()), tx())),
+                )],
+            ),
+            store("out", iadd(imul(bx(), bdim()), tx()), fv("v")),
+        ],
+    };
+    let dims = astra::ir::DimEnv::new();
+    let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+    let refs: Vec<(&str, Vec<f32>)> = vec![("x", x)];
+
+    let want = interp::reference::run_with_inputs(&k, &dims, &refs)
+        .expect_err("reference must raise UnknownVar");
+    assert!(want.to_string().contains("unknown variable v"), "{want}");
+    let serial = interp::run_with_inputs(&k, &dims, &refs)
+        .expect_err("compiled must raise UnknownVar");
+    assert_eq!(serial.to_string(), want.to_string());
+    for w in worker_counts() {
+        let got = run_parallel(&k, &dims, &refs, w)
+            .expect_err("parallel must raise UnknownVar");
+        assert_eq!(got.to_string(), want.to_string(), "grid_workers={w}");
     }
 }
 

@@ -7,12 +7,22 @@
 //!     (metamorphic equivalence through the interpreter),
 //!   * random move *sequences* preserve semantics,
 //!   * coordinator: shipped kernels are always correct; multi-agent never
-//!     ships a regression; logs are well-formed,
+//!     ships a regression; logs are well-formed — under randomized
+//!     (B, K) *and* `grid_workers`,
+//!   * cancelling a block-parallel launch mid-grid never corrupts the
+//!     merged outputs of blocks that completed,
+//!   * a shared cross-run compile cache is deterministic (identical
+//!     hit/miss counters for identical seeded batches) and a repeated
+//!     batch is hit-only,
 //!   * f16 rounding is idempotent and monotone,
 //!   * the simulator is monotone in problem volume and its breakdown is
 //!     non-negative.
 
-use astra::coordinator::{optimize, AgentMode, Config};
+use std::sync::Arc;
+
+use astra::coordinator::{
+    optimize, optimize_all_parallel_with_cache, AgentMode, Config,
+};
 use astra::interp;
 use astra::ir::types::{f32_to_f16_round, f16_bits_to_f32, f32_to_f16_bits};
 use astra::kernels::{self, KernelSpec};
@@ -132,6 +142,10 @@ fn prop_coordinator_never_ships_incorrect_kernels() {
             // settings; the gate must hold regardless.
             beam_width: 1 + rng.below(3),
             candidates_per_round: 1 + rng.below(3),
+            // Block-parallel validation at 1, 2 or 3 workers — outcomes
+            // must be identical at every setting, so the invariants
+            // below must hold at all of them.
+            grid_workers: 1 + rng.below(3),
             model: GpuModel::h100(),
         };
         let greedy = cfg.beam_width == 1 && cfg.candidates_per_round == 1;
@@ -173,6 +187,130 @@ fn prop_coordinator_never_ships_incorrect_kernels() {
                     spec.paper_name
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn prop_cancelling_mid_grid_never_corrupts_completed_blocks() {
+    // Each of 8 blocks busy-loops into a private accumulator and stores
+    // it to out[bx] only at the very end, so out[bx] is either 0.0
+    // (block cancelled before its store, or past the merge cut) or
+    // exactly `iters` (block completed and merged). Raising the token
+    // mid-grid must never produce any third value — the write-tracking
+    // merge applies exactly the stores that happened, in block order,
+    // whatever the race timing.
+    use astra::ir::build::*;
+    use astra::ir::{BufIo, BufParam, DType, Launch};
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    const ITERS: i64 = 200_000;
+    const GRID: i64 = 8;
+    let k = astra::ir::Kernel {
+        name: "busy_grid".into(),
+        dims: vec![],
+        params: vec![BufParam {
+            name: "out".into(),
+            dtype: DType::F32,
+            len: c(GRID),
+            io: BufIo::Out,
+        }],
+        shared: vec![],
+        launch: Launch { grid: c(GRID), block: 1 },
+        body: vec![
+            declf("acc", fc(0.0)),
+            for_up(
+                "i",
+                c(0),
+                c(ITERS),
+                c(1),
+                vec![assignf("acc", fadd(fv("acc"), fc(1.0)))],
+            ),
+            store("out", bx(), fv("acc")),
+        ],
+    };
+    let dims = astra::ir::DimEnv::new();
+    let prog = astra::interp::compile(&k, &dims).unwrap();
+
+    let mut rng = Prng::seed(0xCA2CE1);
+    for case in 0..8 {
+        let delay_us = rng.below(3000) as u64;
+        let token = AtomicBool::new(false);
+        let mut env = astra::interp::ExecEnv::for_kernel(&k, &dims);
+        let result = std::thread::scope(|s| {
+            let run = s.spawn(|| {
+                astra::interp::run_compiled_with_opts(
+                    &prog,
+                    &mut env,
+                    astra::interp::RunOpts {
+                        cancel: Some(&token),
+                        grid_workers: 4,
+                    },
+                )
+            });
+            std::thread::sleep(std::time::Duration::from_micros(delay_us));
+            token.store(true, Ordering::Relaxed);
+            run.join().expect("grid run panicked")
+        });
+        let out = env.get("out");
+        for (bx, v) in out.iter().enumerate() {
+            assert!(
+                *v == 0.0 || *v == ITERS as f32,
+                "case {case} (delay {delay_us}us): block {bx} merged a \
+                 partial value {v} (result {result:?})"
+            );
+        }
+        if result.is_ok() {
+            assert!(
+                out.iter().all(|v| *v == ITERS as f32),
+                "case {case}: completed run must merge every block"
+            );
+        }
+    }
+    // Never-cancelled control: all blocks complete and merge.
+    let mut env = astra::interp::ExecEnv::for_kernel(&k, &dims);
+    astra::interp::run_compiled_with_opts(
+        &prog,
+        &mut env,
+        astra::interp::RunOpts {
+            cancel: None,
+            grid_workers: 4,
+        },
+    )
+    .unwrap();
+    assert!(env.get("out").iter().all(|v| *v == ITERS as f32));
+}
+
+#[test]
+fn prop_shared_cache_counters_are_deterministic_and_second_batch_hit_only() {
+    let cfg = Config {
+        rounds: 2,
+        bug_rate: 0.0,
+        temperature: 0.0,
+        ..Config::multi_agent()
+    };
+    // Identical seeded batches over fresh caches: identical counters.
+    let c1 = Arc::new(interp::CompileCache::with_default_capacity());
+    let a = optimize_all_parallel_with_cache(&cfg, &c1);
+    let s1 = c1.stats();
+    let c2 = Arc::new(interp::CompileCache::with_default_capacity());
+    let b = optimize_all_parallel_with_cache(&cfg, &c2);
+    let s2 = c2.stats();
+    assert_eq!(s1, s2, "hit/miss counters must be deterministic");
+    assert!(s1.misses > 0);
+    // Cross-run reuse: repeating the batch on the same cache compiles
+    // nothing new.
+    let before = c1.stats();
+    let c = optimize_all_parallel_with_cache(&cfg, &c1);
+    let after = c1.stats();
+    assert_eq!(after.misses, before.misses, "second batch is hit-only");
+    assert!(after.hits > before.hits);
+    // Sharing never perturbs trajectories.
+    for other in [&b, &c] {
+        for (x, y) in a.iter().zip(other.iter()) {
+            assert_eq!(x.kernel_name, y.kernel_name);
+            assert_eq!(x.records, y.records);
+            assert_eq!(x.best, y.best);
         }
     }
 }

@@ -4,9 +4,16 @@
 Fails (exit 1) when the slot-compiled interpreter's per-case time
 (`interpret_ms`) regresses by more than --max-regression on any kernel —
 the ROADMAP "perf trajectory in CI" gate. Search throughput
-(`search_cps`, candidates/sec; higher is better) is reported
-informationally so the trajectory is visible without flaking the build
-on scheduler noise in the end-to-end runs.
+(`search_cps`, candidates/sec; higher is better), the block-parallel
+interpreter numbers (`grid_parallel_ms` / `grid_parallel_speedup`,
+schema v3) and the cross-run compile-cache counters (`cross_run_cache`)
+are reported informationally so the trajectory is visible without
+flaking the build on scheduler noise in the end-to-end runs.
+
+Older-schema files (v1 without `search_cps`, v2 without the grid and
+cache fields) compare cleanly: absent metrics are simply skipped, so the
+first run after a schema bump never fails on the artifact from before
+the bump.
 
 Usage:
     python3 compare_bench.py <old.json> <new.json> [--max-regression 0.15]
@@ -67,6 +74,37 @@ def main() -> int:
                 f"{name:<24} search_cps     {base:>10.1f} -> {now:>10.1f}"
                 f"  ({delta:+7.1%}) info"
             )
+
+        # v3 schema: block-parallel interpreter, informational.
+        if prev.get("grid_parallel_ms", 0) > 0 and "grid_parallel_ms" in cur:
+            base, now = prev["grid_parallel_ms"], cur["grid_parallel_ms"]
+            delta = (now - base) / base
+            print(
+                f"{name:<24} grid_par_ms    {base:>10.4f} -> {now:>10.4f}"
+                f"  ({delta:+7.1%}) info"
+            )
+        if prev.get("grid_parallel_speedup", 0) > 0 and "grid_parallel_speedup" in cur:
+            base, now = prev["grid_parallel_speedup"], cur["grid_parallel_speedup"]
+            delta = (now - base) / base
+            print(
+                f"{name:<24} grid_par_x     {base:>10.2f} -> {now:>10.2f}"
+                f"  ({delta:+7.1%}) info"
+            )
+        elif "grid_parallel_speedup" in cur:
+            print(
+                f"{name:<24} grid_par_x     {'':>10} -> "
+                f"{cur['grid_parallel_speedup']:>10.2f}  (vs serial) info"
+            )
+
+    # v3 schema: cross-run shared-cache counters, informational.
+    cross = new.get("cross_run_cache")
+    if isinstance(cross, dict):
+        print(
+            f"{'cross_run_cache':<24} second batch "
+            f"+{cross.get('second_run_hits', 0)} hits, "
+            f"+{cross.get('second_run_misses', 0)} misses "
+            f"(first: {cross.get('first_misses', 0)} misses) info"
+        )
 
     if failures:
         worst = max(d for _, d in failures)

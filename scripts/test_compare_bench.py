@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Unit tests for compare_bench.py — the CI perf-trajectory gate.
+
+Run directly (no pytest in the offline image):
+
+    python3 scripts/test_compare_bench.py
+
+Covers: regression above threshold fails, below passes, missing
+previous-run file skips cleanly, and older-schema (v1/v2) baselines
+compare without crashing against v3 output.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import compare_bench  # noqa: E402
+
+
+def kernel_row(interpret_ms, **extra):
+    row = {
+        "simulate_us": 10.0,
+        "interpret_ref_ms": 12.0,
+        "interpret_ms": interpret_ms,
+        "interpret_speedup": 12.0 / interpret_ms,
+        "transform_all_us": 5.0,
+        "optimize_ms": 100.0,
+    }
+    row.update(extra)
+    return row
+
+
+def bench_json(interpret_ms, schema="astra-hotpath-v3", cross=True, **extra):
+    doc = {
+        "schema": schema,
+        "kernels": {
+            "silu_and_mul": kernel_row(interpret_ms, **extra),
+            "fused_add_rmsnorm": kernel_row(interpret_ms * 2, **extra),
+        },
+    }
+    if cross:
+        doc["cross_run_cache"] = {
+            "first_misses": 36,
+            "first_hits": 12,
+            "second_run_hits": 36,
+            "second_run_misses": 0,
+        }
+    return doc
+
+
+class CompareBenchTest(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+
+    def write(self, name, doc):
+        path = os.path.join(self.dir.name, name)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return path
+
+    def run_main(self, old, new, max_regression=None):
+        argv = ["compare_bench.py", old, new]
+        if max_regression is not None:
+            argv += ["--max-regression", str(max_regression)]
+        saved = sys.argv
+        sys.argv = argv
+        try:
+            return compare_bench.main()
+        finally:
+            sys.argv = saved
+
+    def test_regression_above_threshold_fails(self):
+        old = self.write("old.json", bench_json(1.0))
+        new = self.write("new.json", bench_json(1.5))  # +50%
+        self.assertEqual(self.run_main(old, new, 0.15), 1)
+
+    def test_improvement_and_noise_pass(self):
+        old = self.write("old.json", bench_json(1.0))
+        faster = self.write("faster.json", bench_json(0.5))
+        self.assertEqual(self.run_main(old, faster, 0.15), 0)
+        noisy = self.write("noisy.json", bench_json(1.10))  # +10% < 15%
+        self.assertEqual(self.run_main(old, noisy, 0.15), 0)
+
+    def test_boundary_is_tolerated(self):
+        old = self.write("old.json", bench_json(1.0))
+        at = self.write("at.json", bench_json(1.15))  # exactly the limit
+        self.assertEqual(self.run_main(old, at, 0.15), 0)
+
+    def test_missing_previous_run_skips_cleanly(self):
+        new = self.write("new.json", bench_json(1.0))
+        missing = os.path.join(self.dir.name, "nope.json")
+        self.assertEqual(self.run_main(missing, new), 0)
+
+    def test_older_v1_schema_baseline_is_graceful(self):
+        # v1: no search_cps, no grid fields, no cross_run_cache.
+        old_doc = bench_json(1.0, schema="astra-hotpath-v1", cross=False)
+        for row in old_doc["kernels"].values():
+            row.pop("search_cps", None)
+        old = self.write("old.json", old_doc)
+        new = self.write(
+            "new.json",
+            bench_json(
+                1.0,
+                search_cps=50.0,
+                interpret_large_ms=2.0,
+                grid_parallel_ms=0.7,
+                grid_parallel_speedup=2.86,
+            ),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_older_v2_schema_baseline_is_graceful(self):
+        # v2: search_cps present, grid fields and cross_run_cache absent.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, schema="astra-hotpath-v2", cross=False,
+                       search_cps=40.0, beam_optimize_ms=300.0),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(
+                1.02,
+                search_cps=45.0,
+                beam_optimize_ms=290.0,
+                interpret_large_ms=2.0,
+                grid_parallel_ms=0.7,
+                grid_parallel_speedup=2.86,
+            ),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_new_kernel_without_baseline_passes(self):
+        old_doc = bench_json(1.0)
+        del old_doc["kernels"]["fused_add_rmsnorm"]
+        old = self.write("old.json", old_doc)
+        new = self.write("new.json", bench_json(1.0))
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_empty_or_schemaless_baseline_is_graceful(self):
+        old = self.write("old.json", {})
+        new = self.write("new.json", bench_json(1.0))
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_only_regressed_kernels_fail_the_gate(self):
+        old = self.write("old.json", bench_json(1.0))
+        new_doc = bench_json(1.0)
+        new_doc["kernels"]["silu_and_mul"]["interpret_ms"] = 5.0
+        new = self.write("new.json", new_doc)
+        self.assertEqual(self.run_main(old, new, 0.15), 1)
+
+
+if __name__ == "__main__":
+    unittest.main()
