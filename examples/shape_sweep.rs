@@ -71,12 +71,18 @@ fn main() {
          transformed kernel is measured at every shape."
     );
 
-    // §Grid-parallel protocol (EXPERIMENTS.md): block-parallel
-    // interpreter wall clock vs worker count on each kernel's largest
-    // correctness shape. grid_workers = 1 is the serial engine
-    // byte-for-byte; the differential wall pins every count identical,
-    // so this sweep is purely a wall-clock measurement.
-    println!("\nGrid-parallel interpreter sweep (largest correctness shape, 5-run mean):");
+    // §Grid-parallel / §Zero-copy protocol (EXPERIMENTS.md):
+    // block-parallel interpreter wall clock vs worker count on each
+    // kernel's largest correctness shape, on both grid engines —
+    // copy-and-merge (`w=N` columns, forced) and zero-copy sliced
+    // (`zc=N` columns, the default for the whole catalog, whose
+    // kernels all carry a slice plan). grid_workers = 1 is the serial
+    // engine byte-for-byte; the differential wall pins every count and
+    // both engines identical, so this sweep is purely wall clock.
+    println!(
+        "\nGrid-parallel interpreter sweep (largest correctness shape, \
+         5-run mean; w = copy-merge, zc = zero-copy):"
+    );
     for spec in kernels::all_specs() {
         let k = (spec.build_baseline)();
         let dims = &spec.largest_test_shape(&k);
@@ -86,8 +92,7 @@ fn main() {
             .map(|(n, v)| (n.as_str(), v.clone()))
             .collect();
         let prog = interp::compile(&k, dims).expect("baseline compiles");
-        print!("{:<24}", spec.paper_name);
-        for workers in [1usize, 2, 4, 8] {
+        let time_at = |workers: usize, allow_zero_copy: bool| {
             let t0 = std::time::Instant::now();
             for _ in 0..5 {
                 let mut env = interp::ExecEnv::for_kernel(&k, dims);
@@ -98,16 +103,24 @@ fn main() {
                     &prog,
                     &mut env,
                     RunOpts {
-                        cancel: None,
                         grid_workers: workers,
+                        allow_zero_copy,
+                        ..RunOpts::default()
                     },
                 )
                 .unwrap();
             }
-            print!(
-                "  w={workers}: {:>7.2}ms",
-                t0.elapsed().as_secs_f64() * 1e3 / 5.0
-            );
+            t0.elapsed().as_secs_f64() * 1e3 / 5.0
+        };
+        print!("{:<24}", spec.paper_name);
+        for workers in [1usize, 2, 4, 8] {
+            print!("  w={workers}: {:>7.2}ms", time_at(workers, false));
+        }
+        for workers in [4usize, 8] {
+            print!("  zc={workers}: {:>7.2}ms", time_at(workers, true));
+        }
+        if !prog.sliceable() {
+            print!("  [zc falls back: not sliceable]");
         }
         println!();
     }

@@ -39,12 +39,18 @@ struct KernelRow {
     interpret_ms: f64,
     interpret_speedup: f64,
     /// Serial compiled engine on the *largest* correctness shape (the
-    /// apples-to-apples baseline for `grid_parallel_ms`).
+    /// apples-to-apples baseline for the two grid-parallel rows).
     interpret_large_ms: f64,
-    /// Block-parallel compiled engine on the same shape at
-    /// `GRID_BENCH_WORKERS` workers.
+    /// Copy-and-merge block-parallel engine on the same shape at
+    /// `GRID_BENCH_WORKERS` workers (forced via `allow_zero_copy:
+    /// false` now that the sliced path exists).
     grid_parallel_ms: f64,
     grid_parallel_speedup: f64,
+    /// Zero-copy sliced block-parallel engine, same shape and workers
+    /// (schema v4). Falls back to copy-merge when the kernel is not
+    /// provably sliceable — the whole catalog is, test-pinned.
+    grid_zerocopy_ms: f64,
+    grid_zerocopy_speedup: f64,
     transform_all_us: f64,
     optimize_ms: f64,
     /// Full beam run (B=2, K=3) median.
@@ -120,7 +126,10 @@ fn main() {
 
     // Block-parallel grids: serial vs grid_workers=GRID_BENCH_WORKERS on
     // the largest correctness shape (most blocks x threads — the case
-    // that dominates a validation fan-out's critical path).
+    // that dominates a validation fan-out's critical path). Both grid
+    // engines measured: copy-and-merge (forced) and zero-copy sliced
+    // (the default whenever the write-interval analysis proves it).
+    let sliced_before = interp::sliced_launches();
     for (spec, row) in kernels::all_specs().iter().zip(&mut rows) {
         let k = (spec.build_baseline)();
         let dims = &spec.largest_test_shape(&k);
@@ -135,31 +144,42 @@ fn main() {
             }
             interp::run_compiled(&prog, &mut env).unwrap()
         });
-        let parallel = bench(2, 10, || {
-            let mut env = interp::ExecEnv::for_kernel(&k, dims);
-            for (name, data) in &refs {
-                env.set(name, data.clone());
-            }
-            interp::run_compiled_with_opts(
-                &prog,
-                &mut env,
-                RunOpts {
-                    cancel: None,
-                    grid_workers: GRID_BENCH_WORKERS,
-                },
-            )
-            .unwrap()
-        });
+        let run_grid = |allow_zero_copy: bool| {
+            bench(2, 10, || {
+                let mut env = interp::ExecEnv::for_kernel(&k, dims);
+                for (name, data) in &refs {
+                    env.set(name, data.clone());
+                }
+                interp::run_compiled_with_opts(
+                    &prog,
+                    &mut env,
+                    RunOpts {
+                        grid_workers: GRID_BENCH_WORKERS,
+                        allow_zero_copy,
+                        ..RunOpts::default()
+                    },
+                )
+                .unwrap()
+            })
+        };
+        let merge = run_grid(false);
+        let sliced = run_grid(true);
         row.interpret_large_ms = serial.median_ms();
-        row.grid_parallel_ms = parallel.median_ms();
-        row.grid_parallel_speedup = serial.median_ms() / parallel.median_ms();
+        row.grid_parallel_ms = merge.median_ms();
+        row.grid_parallel_speedup = serial.median_ms() / merge.median_ms();
+        row.grid_zerocopy_ms = sliced.median_ms();
+        row.grid_zerocopy_speedup = serial.median_ms() / sliced.median_ms();
         println!(
-            "grid-parallel {:<19} serial {:>8.3} ms   w={} {:>8.3} ms   ({:.1}x)",
+            "grid-parallel {:<19} serial {:>8.3} ms   merge w={} {:>8.3} ms ({:.1}x)   \
+             zerocopy {:>8.3} ms ({:.1}x){}",
             spec.paper_name,
             serial.median_ms(),
             GRID_BENCH_WORKERS,
-            parallel.median_ms(),
-            row.grid_parallel_speedup
+            merge.median_ms(),
+            row.grid_parallel_speedup,
+            sliced.median_ms(),
+            row.grid_zerocopy_speedup,
+            if prog.sliceable() { "" } else { "  [fallback]" }
         );
     }
     println!();
@@ -252,18 +272,28 @@ fn main() {
         cross.second_run_misses
     );
 
+    // Zero-copy launches taken across the whole bench run (the grid
+    // rows plus any sliceable launches inside the optimize runs) — the
+    // schema-v4 witness that the sliced path is live.
+    let sliced_launches = interp::sliced_launches() - sliced_before;
+    println!("sliced launches this run: {sliced_launches}");
+
     if json {
         let path = "BENCH_hotpath.json";
-        std::fs::write(path, render_json(&rows, cross))
+        std::fs::write(path, render_json(&rows, cross, sliced_launches))
             .expect("write BENCH_hotpath.json");
         println!("\nwrote {path}");
     }
 }
 
 /// Hand-rolled JSON (no serde in the offline vendor set).
-fn render_json(rows: &[KernelRow], cross: CrossRunCache) -> String {
+fn render_json(
+    rows: &[KernelRow],
+    cross: CrossRunCache,
+    sliced_launches: u64,
+) -> String {
     let mut out = String::new();
-    out.push_str("{\n  \"schema\": \"astra-hotpath-v3\",\n  \"kernels\": {\n");
+    out.push_str("{\n  \"schema\": \"astra-hotpath-v4\",\n  \"kernels\": {\n");
     for (i, r) in rows.iter().enumerate() {
         out.push_str(&format!(
             "    \"{}\": {{\n      \"simulate_us\": {:.3},\n      \
@@ -272,6 +302,8 @@ fn render_json(rows: &[KernelRow], cross: CrossRunCache) -> String {
              \"interpret_large_ms\": {:.4},\n      \
              \"grid_parallel_ms\": {:.4},\n      \
              \"grid_parallel_speedup\": {:.2},\n      \
+             \"grid_zerocopy_ms\": {:.4},\n      \
+             \"grid_zerocopy_speedup\": {:.2},\n      \
              \"transform_all_us\": {:.3},\n      \
              \"optimize_ms\": {:.3},\n      \"beam_optimize_ms\": {:.3},\n      \
              \"search_cps\": {:.1}\n    }}{}\n",
@@ -283,6 +315,8 @@ fn render_json(rows: &[KernelRow], cross: CrossRunCache) -> String {
             r.interpret_large_ms,
             r.grid_parallel_ms,
             r.grid_parallel_speedup,
+            r.grid_zerocopy_ms,
+            r.grid_zerocopy_speedup,
             r.transform_all_us,
             r.optimize_ms,
             r.beam_optimize_ms,
@@ -294,12 +328,13 @@ fn render_json(rows: &[KernelRow], cross: CrossRunCache) -> String {
     out.push_str(&format!(
         "  \"cross_run_cache\": {{\n    \"first_misses\": {},\n    \
          \"first_hits\": {},\n    \"second_run_hits\": {},\n    \
-         \"second_run_misses\": {}\n  }}\n",
+         \"second_run_misses\": {}\n  }},\n",
         cross.first_misses,
         cross.first_hits,
         cross.second_run_hits,
         cross.second_run_misses
     ));
+    out.push_str(&format!("  \"sliced_launches\": {sliced_launches}\n"));
     out.push_str("}\n");
     out
 }

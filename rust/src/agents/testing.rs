@@ -14,7 +14,7 @@
 //! identical to the old serial loop. Combined with the slot-compiled
 //! interpreter this is the coordinator's hot path (EXPERIMENTS.md §Perf).
 //!
-//! Two coordinator-scale refinements on top of the fan-out:
+//! Three coordinator-scale refinements on top of the fan-out:
 //!
 //! * [`validate_with`] accepts a shared [`CompileCache`] so the launch
 //!   compile of a kernel the coordinator has already validated (a beam
@@ -23,7 +23,13 @@
 //!   runtime failure raises it, peers observe it inside the compiled
 //!   machine's batched tick and stand down, and any worker cancelled
 //!   *ahead* of the first failing shape index is re-run serially so the
-//!   merged report stays byte-identical to the serial loop's.
+//!   merged report stays byte-identical to the serial loop's;
+//! * an optional process-wide [`WorkerBudget`] caps the fan-out: the
+//!   shapes become a work queue drained by `1 + granted` workers (the
+//!   caller is always the first), so shape-level threads degrade to the
+//!   serial loop when candidate-level workers already hold the tokens.
+//!   Budgeting only changes scheduling — the merge stays by shape
+//!   index, so reports are byte-identical at every budget.
 //!
 //! [`validate`]: TestingAgent::validate
 //! [`validate_with`]: TestingAgent::validate_with
@@ -31,9 +37,9 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::thread;
 
-use crate::interp::{self, CompileCache};
+use crate::interp::budget::run_indexed;
+use crate::interp::{self, CompileCache, WorkerBudget};
 use crate::ir::{DimEnv, Kernel};
 use crate::kernels::KernelSpec;
 use crate::util::Prng;
@@ -53,6 +59,7 @@ struct CaseOutcome {
 /// on any worker thread. `cache` memoizes the launch compile; `cancel`
 /// is the validation's shared token — this worker polls it inside the
 /// interpreter and raises it for its peers on any failure.
+#[allow(clippy::too_many_arguments)]
 fn run_case(
     spec: &KernelSpec,
     kernel: &Kernel,
@@ -61,6 +68,7 @@ fn run_case(
     cache: Option<&CompileCache>,
     cancel: &AtomicBool,
     grid_workers: usize,
+    budget: Option<&WorkerBudget>,
 ) -> CaseOutcome {
     let fail = |msg: String| CaseOutcome {
         max_abs: f32::INFINITY,
@@ -84,9 +92,19 @@ fn run_case(
     for (name, data) in &inputs {
         env.set(name, data.clone());
     }
+    // `grid_workers = 0`: pick per launch from the compiled grid the
+    // agent already holds — serial for tiny grids, per-core above
+    // (ROADMAP "auto grid_workers").
+    let grid_workers = if grid_workers == 0 {
+        interp::auto_grid_workers(prog.grid)
+    } else {
+        grid_workers
+    };
     let opts = interp::RunOpts {
         cancel: Some(cancel),
         grid_workers,
+        budget,
+        ..interp::RunOpts::default()
     };
     match interp::run_compiled_with_opts(&prog, &mut env, opts) {
         Ok(()) => {}
@@ -162,12 +180,16 @@ pub struct TestingAgent {
     pub quality: TestQuality,
     pub seed: u64,
     /// Worker threads the interpreter fans over each launch's blocks
-    /// (`1` = the serial engine byte-for-byte, `0` = one per core; see
-    /// [`interp::RunOpts::grid_workers`]). For kernels whose blocks
-    /// never read another block's writes — the whole candidate space,
-    /// three-way-differential-wall pinned — reports are byte-identical
-    /// at every setting.
+    /// (`1` = the serial engine byte-for-byte; `0` = auto, picked per
+    /// launch from the compiled grid — serial below 4 blocks, one per
+    /// core above; see [`interp::RunOpts::grid_workers`]). For kernels
+    /// whose blocks never read another block's writes — the whole
+    /// candidate space, three-way-differential-wall pinned — reports
+    /// are byte-identical at every setting.
     pub grid_workers: usize,
+    /// Process-wide worker budget shared with the coordinator layers
+    /// (`None` = unbudgeted: one worker per correctness shape).
+    pub budget: Option<Arc<WorkerBudget>>,
 }
 
 impl TestingAgent {
@@ -176,12 +198,20 @@ impl TestingAgent {
             quality,
             seed,
             grid_workers: 1,
+            budget: None,
         }
     }
 
     /// Builder: run each correctness launch block-parallel.
     pub fn with_grid_workers(mut self, grid_workers: usize) -> Self {
         self.grid_workers = grid_workers;
+        self
+    }
+
+    /// Builder: cap this agent's fan-outs (shape workers and nested
+    /// grid workers) with a shared process-wide pool.
+    pub fn with_worker_budget(mut self, budget: Arc<WorkerBudget>) -> Self {
+        self.budget = Some(budget);
         self
     }
 
@@ -251,23 +281,25 @@ impl TestingAgent {
     ) -> TestReport {
         let seed = suite.seed;
         let grid_workers = self.grid_workers;
+        let budget = self.budget.as_deref();
         let cancel = AtomicBool::new(false);
-        let mut outcomes: Vec<CaseOutcome> = thread::scope(|s| {
-            let cancel = &cancel;
-            let handles: Vec<_> = suite
-                .correctness_shapes
-                .iter()
-                .map(|dims| {
-                    s.spawn(move || {
-                        run_case(spec, kernel, dims, seed, cache, cancel, grid_workers)
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("correctness-case worker panicked"))
-                .collect()
-        });
+        let shapes = &suite.correctness_shapes;
+        // The shapes are a work queue drained by `1 + granted` workers
+        // (the caller is the first); results land by shape index, so the
+        // merge below is identical at every budget.
+        let mut outcomes: Vec<CaseOutcome> =
+            run_indexed(budget, shapes.len(), |i| {
+                run_case(
+                    spec,
+                    kernel,
+                    &shapes[i],
+                    seed,
+                    cache,
+                    &cancel,
+                    grid_workers,
+                    budget,
+                )
+            });
         let cancelled_cases = outcomes.iter().filter(|o| o.cancelled).count();
 
         // Serial-equivalent repair: re-run any cancelled case that
@@ -286,6 +318,7 @@ impl TestingAgent {
                     None,
                     &AtomicBool::new(false),
                     grid_workers,
+                    budget,
                 );
             }
             if o.failure.is_some() {
@@ -551,6 +584,68 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn budgeted_validation_reports_are_byte_identical() {
+        // Pass and fail cases both: the worker budget only changes how
+        // the shape queue is drained, never the merged report.
+        use crate::interp::WorkerBudget;
+        let spec = kernels::silu::spec();
+        let plain = TestingAgent::new(TestQuality::Representative, 31);
+        let suite = plain.generate_tests(&spec);
+        let good = (spec.build_baseline)();
+        let mut bad = (spec.build_baseline)();
+        use crate::ir::build::*;
+        bad.body.push(store("out", imul(dim("B"), dim("D")), fc(0.0)));
+        for kernel in [&good, &bad] {
+            let want = plain.validate(&spec, kernel, &suite);
+            for cap in [1usize, 2, 64] {
+                let budget = Arc::new(WorkerBudget::new(cap));
+                let agent = TestingAgent::new(TestQuality::Representative, 31)
+                    .with_grid_workers(4)
+                    .with_worker_budget(Arc::clone(&budget));
+                let got = agent.validate(&spec, kernel, &suite);
+                assert_eq!(want.pass, got.pass, "cap={cap}");
+                assert_eq!(want.cases, got.cases, "cap={cap}");
+                assert_eq!(want.failure, got.failure, "cap={cap}");
+                assert_eq!(
+                    want.max_rel_err.to_bits(),
+                    got.max_rel_err.to_bits(),
+                    "cap={cap}"
+                );
+                assert_eq!(
+                    want.max_abs_err.to_bits(),
+                    got.max_abs_err.to_bits(),
+                    "cap={cap}"
+                );
+                assert!(
+                    budget.peak_live() <= cap,
+                    "cap={cap}: peak {}",
+                    budget.peak_live()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_grid_workers_keeps_reports_byte_identical() {
+        // grid_workers = 0 resolves per launch from the compiled grid
+        // (serial under 4 blocks, per-core above) — silu's correctness
+        // shapes span both regimes (B = 4, 2, 8) and the report must
+        // not change.
+        let spec = kernels::silu::spec();
+        let auto = TestingAgent::new(TestQuality::Representative, 33)
+            .with_grid_workers(0);
+        let serial = TestingAgent::new(TestQuality::Representative, 33);
+        let suite = auto.generate_tests(&spec);
+        let k = (spec.build_baseline)();
+        let a = auto.validate(&spec, &k, &suite);
+        let b = serial.validate(&spec, &k, &suite);
+        assert_eq!(a.pass, b.pass);
+        assert_eq!(a.cases, b.cases);
+        assert_eq!(a.max_rel_err.to_bits(), b.max_rel_err.to_bits());
+        assert_eq!(a.max_abs_err.to_bits(), b.max_abs_err.to_bits());
     }
 
     #[test]

@@ -16,8 +16,13 @@
 //! candidates_per_round = 3
 //!
 //! # block-parallel grid execution in the validation interpreter
-//! # (1 = serial engine byte-for-byte, 0 = one worker per core)
+//! # (1 = serial engine byte-for-byte, 0 = auto: picked per launch
+//! # from the compiled grid — serial under 4 blocks, per-core above)
 //! grid_workers = 4
+//!
+//! # process-wide cap on live interpreter threads across all nested
+//! # fan-outs (candidates x shapes x grid workers); 0 = one per core
+//! worker_budget = 8
 //!
 //! # simulator overrides
 //! launch_overhead_us = 7.0
@@ -82,8 +87,10 @@ pub fn apply(
                 return Err(anyhow!("candidates_per_round must be >= 1"));
             }
         }
-        // 0 is meaningful here: one worker per available core.
+        // 0 is meaningful here: auto, picked per launch from the grid.
         "grid_workers" => cfg.grid_workers = value.parse()?,
+        // 0 is meaningful here too: one worker per available core.
+        "worker_budget" => cfg.worker_budget = value.parse()?,
         "mode" => {
             cfg.mode = match value {
                 "multi" | "multi-agent" => AgentMode::Multi,
@@ -153,10 +160,21 @@ mod tests {
         let cfg = parse("grid_workers = 4\n").unwrap();
         assert_eq!(cfg.grid_workers, 4);
         let cfg = parse("grid_workers = 0\n").unwrap();
-        assert_eq!(cfg.grid_workers, 0, "0 = one worker per core");
+        assert_eq!(cfg.grid_workers, 0, "0 = auto (per-launch pick)");
         let cfg = parse("").unwrap();
         assert_eq!(cfg.grid_workers, 1, "default is the serial engine");
         assert!(parse("grid_workers = nope\n").is_err());
+    }
+
+    #[test]
+    fn parses_worker_budget_including_per_core() {
+        let cfg = parse("worker_budget = 6\n").unwrap();
+        assert_eq!(cfg.worker_budget, 6);
+        let cfg = parse("worker_budget = 0\n").unwrap();
+        assert_eq!(cfg.worker_budget, 0, "0 = one worker per core");
+        let cfg = parse("").unwrap();
+        assert_eq!(cfg.worker_budget, 0, "default is per-core");
+        assert!(parse("worker_budget = nah\n").is_err());
     }
 
     #[test]

@@ -11,7 +11,8 @@ use std::sync::Arc;
 use std::thread;
 
 use crate::agents::{CodingAgent, ProfilingAgent, TestQuality, TestingAgent};
-use crate::interp::CompileCache;
+use crate::interp::budget::run_indexed;
+use crate::interp::{CompileCache, WorkerBudget};
 use crate::ir::{printer, Kernel};
 use crate::kernels::KernelSpec;
 use crate::sim::GpuModel;
@@ -54,11 +55,19 @@ pub struct Config {
     pub candidates_per_round: usize,
     /// Worker threads the interpreter fans over each launch's blocks
     /// during validation (`1` = the serial engine byte-for-byte, `0` =
-    /// one per core). For kernels honoring the CUDA contract that blocks
-    /// never *read* another block's writes — every kernel the baselines,
-    /// transforms and fault injection can produce, differential-wall
-    /// pinned — outcomes are byte-identical at every setting.
+    /// auto — the testing agent picks per launch from the compiled
+    /// grid: serial below 4 blocks, one per core above). For kernels
+    /// honoring the CUDA contract that blocks never *read* another
+    /// block's writes — every kernel the baselines, transforms and
+    /// fault injection can produce, differential-wall pinned — outcomes
+    /// are byte-identical at every setting.
     pub grid_workers: usize,
+    /// Process-wide worker budget: the cap on live interpreter threads
+    /// across all nested fan-outs (candidates × shapes × grid workers).
+    /// `0` = one per available core (the default). Budget capacity only
+    /// changes scheduling, never a trajectory (every fan-out merges by
+    /// index; test-pinned below).
+    pub worker_budget: usize,
     pub model: GpuModel,
 }
 
@@ -73,6 +82,7 @@ impl Config {
             beam_width: 1,
             candidates_per_round: 1,
             grid_workers: 1,
+            worker_budget: 0,
             model: GpuModel::h100(),
         }
     }
@@ -88,6 +98,7 @@ impl Config {
             beam_width: 1,
             candidates_per_round: 1,
             grid_workers: 1,
+            worker_budget: 0,
             model: GpuModel::h100(),
         }
     }
@@ -194,11 +205,36 @@ pub fn optimize_with_cache(
     cfg: &Config,
     shared: &Arc<CompileCache>,
 ) -> Outcome {
+    let budget = Arc::new(WorkerBudget::from_config(cfg.worker_budget));
+    optimize_with_cache_budget(spec, cfg, shared, &budget)
+}
+
+/// [`optimize_with_cache`] over a caller-owned *worker budget* as well —
+/// the process-wide pool the batch driver shares across coordinators.
+fn optimize_with_cache_budget(
+    spec: &KernelSpec,
+    cfg: &Config,
+    shared: &Arc<CompileCache>,
+    budget: &Arc<WorkerBudget>,
+) -> Outcome {
     let cache = CompileCache::with_backing(
         CompileCache::DEFAULT_CAPACITY,
         Arc::clone(shared),
     );
-    search::optimize_beam_with_cache(spec, cfg, &cache)
+    search::optimize_beam_with_cache_budget(spec, cfg, &cache, budget)
+}
+
+/// [`optimize`] against a caller-owned worker budget, so the caller can
+/// observe the pool (peak live workers) or share it across runs. The
+/// budget caps scheduling only; trajectories are byte-identical at any
+/// capacity (test-pinned below).
+pub fn optimize_with_budget(
+    spec: &KernelSpec,
+    cfg: &Config,
+    budget: &Arc<WorkerBudget>,
+) -> Outcome {
+    let cache = CompileCache::with_default_capacity();
+    search::optimize_beam_with_cache_budget(spec, cfg, &cache, budget)
 }
 
 /// The literal Algorithm 1 loop — one candidate per round, evaluated
@@ -210,8 +246,10 @@ pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
         AgentMode::Multi => TestQuality::Representative,
         AgentMode::Single => TestQuality::Unrepresentative,
     };
-    let tester =
-        TestingAgent::new(quality, cfg.seed).with_grid_workers(cfg.grid_workers);
+    let budget = Arc::new(WorkerBudget::from_config(cfg.worker_budget));
+    let tester = TestingAgent::new(quality, cfg.seed)
+        .with_grid_workers(cfg.grid_workers)
+        .with_worker_budget(Arc::clone(&budget));
     let profiler = ProfilingAgent::new(cfg.model.clone());
     let mut planner = search::make_planner(cfg);
     let coder = CodingAgent::new(cfg.bug_rate, cfg.seed ^ 0xC0DE);
@@ -340,6 +378,7 @@ pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
         baseline,
         best,
         &cache,
+        &budget,
         SearchTelemetry {
             candidates_evaluated,
             peak_concurrent_evals: probe.peak(),
@@ -350,7 +389,10 @@ pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
 /// Optimize all three kernels concurrently (one coordinator per kernel on
 /// its own OS thread — the process topology Rust owns at L3). The three
 /// coordinators share one compile cache, so a kernel's launch compiles
-/// are done once per (kernel, dims) across the whole batch.
+/// are done once per (kernel, dims) across the whole batch, and one
+/// process-wide worker budget, so the batch's nested fan-outs
+/// (coordinators × candidates × shapes × grid workers) never
+/// oversubscribe the machine.
 pub fn optimize_all_parallel(cfg: &Config) -> Vec<Outcome> {
     let cache = Arc::new(CompileCache::with_default_capacity());
     optimize_all_parallel_with_cache(cfg, &cache)
@@ -364,19 +406,24 @@ pub fn optimize_all_parallel_with_cache(
     cfg: &Config,
     cache: &Arc<CompileCache>,
 ) -> Vec<Outcome> {
+    let budget = Arc::new(WorkerBudget::from_config(cfg.worker_budget));
+    optimize_all_parallel_budgeted(cfg, cache, &budget)
+}
+
+/// [`optimize_all_parallel_with_cache`] over a caller-owned worker
+/// budget — the kernels form a work queue drained by `1 + granted`
+/// coordinator threads (the caller is the first), so even the
+/// top-level coordinators respect the process-wide cap. Outcomes land
+/// by kernel index: scheduling never reorders results.
+pub fn optimize_all_parallel_budgeted(
+    cfg: &Config,
+    cache: &Arc<CompileCache>,
+    budget: &Arc<WorkerBudget>,
+) -> Vec<Outcome> {
     let specs = crate::kernels::all_specs();
-    let handles: Vec<_> = specs
-        .into_iter()
-        .map(|spec| {
-            let cfg = cfg.clone();
-            let cache = Arc::clone(cache);
-            thread::spawn(move || optimize_with_cache(&spec, &cfg, &cache))
-        })
-        .collect();
-    handles
-        .into_iter()
-        .map(|h| h.join().expect("coordinator thread panicked"))
-        .collect()
+    run_indexed(Some(budget.as_ref()), specs.len(), |i| {
+        optimize_with_cache_budget(&specs[i], cfg, cache, budget)
+    })
 }
 
 #[cfg(test)]
@@ -516,6 +563,82 @@ mod tests {
             .expect("silu outcome present");
         assert_eq!(solo.cache_hits, shared_silu.cache_hits);
         assert_eq!(solo.cache_misses, shared_silu.cache_misses);
+    }
+
+    #[test]
+    fn worker_budget_caps_live_threads_under_beam_settings() {
+        // The acceptance scenario: B=2, K=3, 3 correctness shapes, 8
+        // grid workers — unbudgeted this wants dozens of threads; the
+        // pool must hold the line at the configured cap.
+        let cfg = Config {
+            bug_rate: 0.0,
+            temperature: 0.0,
+            grid_workers: 8,
+            worker_budget: 3,
+            ..Config::multi_agent_beam()
+        };
+        let budget = Arc::new(WorkerBudget::from_config(cfg.worker_budget));
+        let out = optimize_with_budget(&kernels::silu::spec(), &cfg, &budget);
+        assert!(out.final_correct);
+        assert!(
+            budget.peak_live() <= 3,
+            "budget must cap live interpreter threads: peak {}",
+            budget.peak_live()
+        );
+        if thread::available_parallelism().map_or(1, |n| n.get()) >= 2 {
+            assert!(
+                budget.peak_live() >= 2,
+                "granted tokens should actually be used: peak {}",
+                budget.peak_live()
+            );
+        }
+    }
+
+    #[test]
+    fn budget_capacity_never_changes_trajectories() {
+        // ∞, per-core (the default) and fully-serial must agree byte
+        // for byte — the budget schedules, it never selects.
+        let spec = kernels::rmsnorm::spec();
+        let cfg = Config {
+            bug_rate: 0.0,
+            temperature: 0.0,
+            grid_workers: 2,
+            ..Config::multi_agent_beam()
+        };
+        let unlimited = Arc::new(WorkerBudget::unlimited());
+        let a = optimize_with_budget(&spec, &cfg, &unlimited);
+        for knob in [0usize, 1] {
+            let budget = Arc::new(WorkerBudget::from_config(knob));
+            let b = optimize_with_budget(&spec, &cfg, &budget);
+            assert_eq!(a.records, b.records, "budget knob {knob}");
+            assert_eq!(a.best, b.best, "budget knob {knob}");
+            assert_eq!(
+                a.final_speedup.to_bits(),
+                b.final_speedup.to_bits(),
+                "budget knob {knob}"
+            );
+            assert_eq!(a.final_correct, b.final_correct);
+        }
+    }
+
+    #[test]
+    fn serial_budget_batch_still_covers_all_kernels_in_order() {
+        let cfg = Config {
+            rounds: 1,
+            worker_budget: 1,
+            ..quiet_multi()
+        };
+        let a = optimize_all_parallel(&cfg);
+        let b = optimize_all_parallel(&Config {
+            worker_budget: 0,
+            ..cfg.clone()
+        });
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.kernel_name, y.kernel_name, "index order is stable");
+            assert_eq!(x.records, y.records);
+            assert_eq!(x.best, y.best);
+        }
     }
 
     #[test]

@@ -36,13 +36,15 @@
 //! forever — a bug this module fixes for both engines).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::thread;
 
 use crate::agents::{
     CodingAgent, MockLlm, PlannerPolicy, ProfileReport, ProfilingAgent,
     SingleAgentPlanner, TestQuality, TestReport, TestingAgent,
 };
-use crate::interp::CompileCache;
+use crate::interp::budget::run_indexed;
+use crate::interp::{CompileCache, WorkerBudget};
 use crate::ir::{printer, Kernel};
 use crate::kernels::KernelSpec;
 use crate::sim;
@@ -167,6 +169,7 @@ pub(crate) fn make_planner(cfg: &Config) -> Box<dyn PlannerPolicy> {
 /// Post-processing shared by both engines (§3.2): oracle re-validation
 /// and representative-shape measurement on concurrent scoped workers,
 /// then outcome assembly.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn finish_outcome(
     spec: &KernelSpec,
     cfg: &Config,
@@ -174,6 +177,7 @@ pub(crate) fn finish_outcome(
     baseline: Kernel,
     best: Kernel,
     cache: &CompileCache,
+    budget: &Arc<WorkerBudget>,
     telemetry: SearchTelemetry,
 ) -> Outcome {
     let shapes = (spec.representative_shapes)();
@@ -181,7 +185,8 @@ pub(crate) fn finish_outcome(
         let correct = s.spawn(|| {
             let final_tester =
                 TestingAgent::new(TestQuality::Representative, cfg.seed ^ 0xFEED)
-                    .with_grid_workers(cfg.grid_workers);
+                    .with_grid_workers(cfg.grid_workers)
+                    .with_worker_budget(Arc::clone(budget));
             let final_suite = final_tester.generate_tests(spec);
             final_tester
                 .validate_with(spec, &best, &final_suite, Some(cache))
@@ -250,14 +255,31 @@ pub fn optimize_beam_with_cache(
     cfg: &Config,
     cache: &CompileCache,
 ) -> Outcome {
+    let budget = Arc::new(WorkerBudget::from_config(cfg.worker_budget));
+    optimize_beam_with_cache_budget(spec, cfg, cache, &budget)
+}
+
+/// [`optimize_beam_with_cache`] against a caller-owned *worker budget*
+/// as well — the process-wide pool `optimize_all_parallel` shares across
+/// its concurrent coordinators so candidates × shapes × grid workers
+/// never oversubscribe the machine. Budget capacity only changes
+/// scheduling (every merge is by index), never a trajectory —
+/// test-pinned in `coordinator/run.rs`.
+pub(crate) fn optimize_beam_with_cache_budget(
+    spec: &KernelSpec,
+    cfg: &Config,
+    cache: &CompileCache,
+    budget: &Arc<WorkerBudget>,
+) -> Outcome {
     let beam_width = cfg.beam_width.max(1);
     let k_per_state = cfg.candidates_per_round.max(1);
     let quality = match cfg.mode {
         AgentMode::Multi => TestQuality::Representative,
         AgentMode::Single => TestQuality::Unrepresentative,
     };
-    let tester =
-        TestingAgent::new(quality, cfg.seed).with_grid_workers(cfg.grid_workers);
+    let tester = TestingAgent::new(quality, cfg.seed)
+        .with_grid_workers(cfg.grid_workers)
+        .with_worker_budget(Arc::clone(budget));
     let profiler = ProfilingAgent::new(cfg.model.clone());
     let mut planner = make_planner(cfg);
     let coder = CodingAgent::new(cfg.bug_rate, cfg.seed ^ 0xC0DE);
@@ -318,33 +340,23 @@ pub fn optimize_beam_with_cache(
         }
 
         // ---- evaluate all candidates concurrently --------------------
-        // One scoped worker per candidate; each worker's validate fans
-        // out further per shape. Results collect by candidate index, so
-        // the merge below is order-independent.
-        let evals: Vec<(TestReport, ProfileReport)> = thread::scope(|sc| {
-            let handles: Vec<_> = cands
-                .iter()
-                .map(|cand| {
-                    let tester = &tester;
-                    let profiler = &profiler;
-                    let probe = &probe;
-                    let suite = &suite;
-                    let base_profile = &base_profile;
-                    sc.spawn(move || {
-                        let _in_flight = probe.enter();
-                        let tests =
-                            tester.validate_with(spec, &cand.kernel, suite, Some(cache));
-                        let profile =
-                            profiler.profile(&cand.kernel, suite, Some(base_profile));
-                        (tests, profile)
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("candidate evaluation worker panicked"))
-                .collect()
-        });
+        // The candidates form a work queue drained by `1 + granted`
+        // scoped workers (the coordinator thread is the first; extra
+        // workers need tokens from the process-wide budget, so beam
+        // speculation degrades to serial evaluation rather than
+        // oversubscribing shape- and grid-level workers). Each eval's
+        // validate fans out further per shape. Results land by candidate
+        // index, so the merge below is order-independent.
+        let evals: Vec<(TestReport, ProfileReport)> =
+            run_indexed(Some(budget.as_ref()), cands.len(), |i| {
+                let cand = &cands[i];
+                let _in_flight = probe.enter();
+                let tests =
+                    tester.validate_with(spec, &cand.kernel, &suite, Some(cache));
+                let profile =
+                    profiler.profile(&cand.kernel, &suite, Some(&base_profile));
+                (tests, profile)
+            });
         candidates_evaluated += cands.len();
 
         // ---- gate, record, update the global best (by index) ---------
@@ -525,6 +537,7 @@ pub fn optimize_beam_with_cache(
         baseline,
         best,
         cache,
+        budget,
         SearchTelemetry {
             candidates_evaluated,
             peak_concurrent_evals: probe.peak(),

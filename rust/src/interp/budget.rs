@@ -1,0 +1,305 @@
+//! Process-wide worker budget: a semaphore-style token pool that caps
+//! how many interpreter threads the nested fan-outs may keep live at
+//! once (ROADMAP "nested worker budgeting").
+//!
+//! Validation multiplies threads at three levels — beam candidates ×
+//! correctness shapes × grid workers — and at beam settings (B=2, K=3,
+//! 3 shapes, 8 grid workers) the product oversubscribes any realistic
+//! core count. Every fan-out site asks the shared pool for tokens
+//! *before* spawning: the calling thread is always the first worker (so
+//! a fan-out can never stall — worst case it degrades to the serial
+//! loop on the caller), and each **additional** worker thread needs one
+//! token, returned when the fan-out joins. Acquisition never blocks
+//! ([`WorkerBudget::try_acquire`] grants whatever is available), so
+//! nested fan-outs cannot deadlock; inner levels simply find fewer
+//! tokens when outer levels hold them.
+//!
+//! Budgeting only changes *scheduling*, never results: every fan-out in
+//! the system merges by item index, and the differential walls pin
+//! outcomes byte-identical at every worker count — so a budget of 1
+//! (fully serial) and a budget of ∞ produce the same trajectories,
+//! test-pinned in `coordinator/run.rs`.
+//!
+//! The pool also counts **live workers** (distinct threads currently
+//! executing budgeted work, tracked via a thread-local so nested
+//! fan-outs on one thread count once) with a high-water mark — the
+//! concurrency witness the budget tests read.
+
+use std::cell::Cell;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+
+/// Shared token pool. Create once per top-level run (or batch) and
+/// thread an `Arc` through every layer that fans out.
+pub struct WorkerBudget {
+    /// Configured cap on total live workers (callers + spawned).
+    total: usize,
+    /// Tokens left for *additional* worker threads. Starts at
+    /// `total - 1`: the calling thread of any fan-out is the first
+    /// worker and needs no token.
+    available: Mutex<usize>,
+    /// Distinct threads currently executing budgeted work.
+    live: AtomicUsize,
+    /// High-water mark of `live`.
+    peak: AtomicUsize,
+}
+
+impl WorkerBudget {
+    /// A pool capping total live workers at `total` (clamped to >= 1).
+    pub fn new(total: usize) -> WorkerBudget {
+        let total = total.max(1);
+        WorkerBudget {
+            total,
+            available: Mutex::new(total - 1),
+            live: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// Effectively unbounded: every fan-out gets all the workers it
+    /// asks for (the pre-budget behavior).
+    pub fn unlimited() -> WorkerBudget {
+        WorkerBudget::new(usize::MAX)
+    }
+
+    /// Resolve the `worker_budget` config knob: `0` means one worker
+    /// per available core.
+    pub fn from_config(knob: usize) -> WorkerBudget {
+        if knob == 0 {
+            WorkerBudget::new(
+                thread::available_parallelism().map_or(1, |n| n.get()),
+            )
+        } else {
+            WorkerBudget::new(knob)
+        }
+    }
+
+    /// The configured cap.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Take up to `want` tokens (never blocks; may grant zero). The
+    /// lease returns its tokens on drop.
+    pub fn try_acquire(&self, want: usize) -> Lease<'_> {
+        let mut avail = self.available.lock().expect("worker budget poisoned");
+        let granted = want.min(*avail);
+        *avail -= granted;
+        Lease { pool: self, granted }
+    }
+
+    /// Mark the current thread as a live worker for the guard's
+    /// lifetime. Nested fan-outs on the same thread count once (the
+    /// thread-local dedup), so `peak_live` is a true thread count.
+    pub fn count_worker(&self) -> WorkerGuard<'_> {
+        let counted = COUNTED.with(|c| {
+            if c.get() {
+                false
+            } else {
+                c.set(true);
+                true
+            }
+        });
+        if counted {
+            let n = self.live.fetch_add(1, Ordering::SeqCst) + 1;
+            self.peak.fetch_max(n, Ordering::SeqCst);
+        }
+        WorkerGuard { pool: self, counted }
+    }
+
+    /// High-water mark of distinct live worker threads.
+    pub fn peak_live(&self) -> usize {
+        self.peak.load(Ordering::SeqCst)
+    }
+}
+
+impl fmt::Debug for WorkerBudget {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerBudget")
+            .field("total", &self.total)
+            .field(
+                "available",
+                &*self.available.lock().expect("worker budget poisoned"),
+            )
+            .field("peak_live", &self.peak_live())
+            .finish()
+    }
+}
+
+/// Tokens held by one fan-out; returned to the pool on drop.
+pub struct Lease<'a> {
+    pool: &'a WorkerBudget,
+    granted: usize,
+}
+
+impl Lease<'_> {
+    /// Number of *additional* worker threads this fan-out may spawn.
+    pub fn granted(&self) -> usize {
+        self.granted
+    }
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        let mut avail =
+            self.pool.available.lock().expect("worker budget poisoned");
+        *avail += self.granted;
+    }
+}
+
+/// Run `work(0..n)` over a budgeted worker pool and return the results
+/// **by item index** — the one fan-out idiom every layer shares
+/// (correctness shapes, beam candidates, the kernel batch).
+///
+/// The calling thread is the first worker; up to `n − 1` additional
+/// scoped workers are spawned, one per token granted by `budget`
+/// (`None` = unbudgeted: spawn `n − 1`). Workers drain a shared index
+/// cursor, so scheduling is work-stealing but the returned `Vec` is
+/// always in item order — budget capacity can never reorder results.
+/// The lease is held (and every worker counted live) exactly for the
+/// duration of the call.
+pub fn run_indexed<T: Send>(
+    budget: Option<&WorkerBudget>,
+    n: usize,
+    work: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    let lease = budget.map(|b| b.try_acquire(n.saturating_sub(1)));
+    let extra = lease
+        .as_ref()
+        .map_or(n.saturating_sub(1), |l| l.granted());
+    let next = AtomicUsize::new(0);
+    let drain = || {
+        let _g = budget.map(|b| b.count_worker());
+        let mut local: Vec<(usize, T)> = Vec::new();
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            local.push((i, work(i)));
+        }
+        local
+    };
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..extra).map(|_| s.spawn(&drain)).collect();
+        for (i, o) in drain() {
+            slots[i] = Some(o);
+        }
+        for h in handles {
+            for (i, o) in h.join().expect("budgeted pool worker panicked") {
+                slots[i] = Some(o);
+            }
+        }
+    });
+    drop(lease);
+    slots
+        .into_iter()
+        .map(|o| o.expect("every item ran exactly once"))
+        .collect()
+}
+
+thread_local! {
+    /// Whether this thread is already counted live in some pool.
+    static COUNTED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// RAII live-worker mark (see [`WorkerBudget::count_worker`]).
+pub struct WorkerGuard<'a> {
+    pool: &'a WorkerBudget,
+    counted: bool,
+}
+
+impl Drop for WorkerGuard<'_> {
+    fn drop(&mut self) {
+        if self.counted {
+            self.pool.live.fetch_sub(1, Ordering::SeqCst);
+            COUNTED.with(|c| c.set(false));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn grants_are_capped_and_returned_on_drop() {
+        let b = WorkerBudget::new(4); // 3 spare tokens beyond the caller
+        let l1 = b.try_acquire(2);
+        assert_eq!(l1.granted(), 2);
+        let l2 = b.try_acquire(5);
+        assert_eq!(l2.granted(), 1, "only one token left");
+        let l3 = b.try_acquire(1);
+        assert_eq!(l3.granted(), 0, "pool exhausted, degrade to serial");
+        drop(l1);
+        let l4 = b.try_acquire(5);
+        assert_eq!(l4.granted(), 2, "dropped lease returned its tokens");
+    }
+
+    #[test]
+    fn budget_of_one_is_fully_serial() {
+        let b = WorkerBudget::new(1);
+        assert_eq!(b.try_acquire(8).granted(), 0);
+    }
+
+    #[test]
+    fn unlimited_grants_everything() {
+        let b = WorkerBudget::unlimited();
+        assert_eq!(b.try_acquire(1000).granted(), 1000);
+    }
+
+    #[test]
+    fn from_config_zero_means_per_core() {
+        let b = WorkerBudget::from_config(0);
+        assert!(b.total() >= 1);
+        assert_eq!(WorkerBudget::from_config(7).total(), 7);
+    }
+
+    #[test]
+    fn live_count_dedups_nested_guards_on_one_thread() {
+        let b = WorkerBudget::new(8);
+        {
+            let _outer = b.count_worker();
+            let _inner = b.count_worker(); // same thread: not recounted
+            assert_eq!(b.live.load(Ordering::SeqCst), 1);
+            // Inner guard dropping must not clear the outer mark.
+            drop(_inner);
+            assert_eq!(b.live.load(Ordering::SeqCst), 1);
+        }
+        assert_eq!(b.live.load(Ordering::SeqCst), 0);
+        assert_eq!(b.peak_live(), 1);
+    }
+
+    #[test]
+    fn run_indexed_returns_results_in_item_order_at_every_capacity() {
+        for budget in [None, Some(WorkerBudget::new(1)), Some(WorkerBudget::new(3))] {
+            let out = run_indexed(budget.as_ref(), 17, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+            if let Some(b) = &budget {
+                assert!(b.peak_live() <= b.total());
+                assert!(b.try_acquire(1).granted() <= b.total(), "lease returned");
+            }
+        }
+        assert!(run_indexed(None, 0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn peak_tracks_distinct_threads() {
+        let b = Arc::new(WorkerBudget::new(8));
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let b = Arc::clone(&b);
+                s.spawn(move || {
+                    let _g = b.count_worker();
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                });
+            }
+        });
+        assert!(b.peak_live() >= 2, "peak {}", b.peak_live());
+        assert_eq!(b.live.load(Ordering::SeqCst), 0);
+    }
+}

@@ -33,6 +33,33 @@
 //! exactly where the tree-walking reference does. Kernels whose reads
 //! are all definitely assigned (the whole baseline + transform-catalog
 //! space) compile with `needs_init = false` and pay nothing.
+//!
+//! # Write-interval analysis (zero-copy block-parallel execution)
+//!
+//! After lowering, a second pass abstract-interprets the resolved
+//! program over a small **affine-interval domain**: every integer
+//! expression is bounded by a set `{ a·blockIdx + v : lo ≤ v ≤ hi,
+//! v ≡ lo (mod stride) }` (or `⊤` when no such bound is provable).
+//! Thread coordinates contribute `[0, blockDim)`, loop variables are
+//! bounded from their (constant-folded) trip metadata — including the
+//! stride refinement that proves a vectorized `d0 = tx·W; d0 < ⌊D/W⌋·W;
+//! d0 += blockDim·W` loop never reaches the next row — and `If` guards
+//! narrow `slot ± const OP bound` comparisons along each branch.
+//!
+//! The pass joins the abstract index of every `StoreGlobal` (and, for
+//! buffers that are stored to at all, every `LoadGlobal`) per buffer.
+//! When each written buffer's interval is affine in `blockIdx` with
+//! `hi − lo + 1 ≤ a` — consecutive blocks provably write **disjoint,
+//! ascending element ranges** — and its loads stay inside the same
+//! interval, the kernel gets a [`BufPlan`] slice plan: the block-parallel
+//! machine can then hand each worker disjoint `&mut` slices of the real
+//! global buffers (**zero copies, no dirty maps, no merge pass** — see
+//! `run_compiled_with_opts` in [`super::machine`]). The catalog's
+//! one-block-per-row kernels all qualify; anything the analysis cannot
+//! prove (grid-stride loops, cross-block overlap, non-affine indices)
+//! compiles with `slice_plan = None` and falls back to the
+//! copy-and-merge engine. The analysis is purely conservative: it can
+//! only withhold the fast path, never change a result.
 
 use std::collections::BTreeSet;
 
@@ -45,7 +72,7 @@ use crate::ir::stmt::{Stmt, Update};
 use crate::ir::types::{DType, MemSpace};
 use crate::ir::{DimEnv, Kernel};
 
-use super::eval::EvalError;
+use super::eval::{EvalError, WARP_SIZE};
 use super::machine::InterpError;
 
 /// Resolved integer (index) expression. Dims, `blockDim` and `gridDim`
@@ -165,6 +192,21 @@ pub struct SharedSlot {
     pub len: usize,
 }
 
+/// Per-buffer verdict of the write-interval analysis (module docs),
+/// indexed like `CompiledKernel::params`. Present only when **every**
+/// written buffer is provably block-sliceable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum BufPlan {
+    /// No store statement targets this buffer: workers share it as one
+    /// immutable slice.
+    ReadOnly,
+    /// Every store (and every load) of block `bx` lands in
+    /// `[a·bx + lo, a·bx + hi]`, with `hi − lo + 1 ≤ a` so consecutive
+    /// blocks' ranges are disjoint and ascending: workers take disjoint
+    /// `&mut` slices of the real buffer.
+    Interval { a: i64, lo: i64, hi: i64 },
+}
+
 /// A kernel lowered for one launch: slot-resolved instruction pools plus
 /// concrete launch geometry. Execute with
 /// [`super::machine::run_compiled`].
@@ -200,6 +242,19 @@ pub struct CompiledKernel {
     pub(crate) collective: Vec<bool>,
     /// The kernel body.
     pub(crate) top: StmtRange,
+    /// Per-buffer slice plan proven by the write-interval analysis, or
+    /// `None` when any written buffer's ranges could not be proven
+    /// disjoint across blocks (the machine then falls back to the
+    /// copy-and-merge engine).
+    pub(crate) slice_plan: Option<Vec<BufPlan>>,
+}
+
+impl CompiledKernel {
+    /// Whether the write-interval analysis proved this launch safe for
+    /// the zero-copy block-parallel path.
+    pub fn sliceable(&self) -> bool {
+        self.slice_plan.is_some()
+    }
 }
 
 /// Lower `kernel` for a launch over concrete `dims`.
@@ -245,6 +300,21 @@ pub fn compile(kernel: &Kernel, dims: &DimEnv) -> Result<CompiledKernel, InterpE
     };
     let top = lo.lower_body(&kernel.body)?;
 
+    let slice_plan = {
+        let mut ia = IntervalAnalysis {
+            iexprs: &lo.iexprs,
+            vexprs: &lo.vexprs,
+            bexprs: &lo.bexprs,
+            stmts: &lo.stmts,
+            block,
+            writes: vec![BufAcc::Never; kernel.params.len()],
+            reads: vec![BufAcc::Never; kernel.params.len()],
+        };
+        let mut env: AffEnv = vec![None; lo.ires.slot_count()];
+        ia.walk_range(top, &mut env);
+        ia.into_plan()
+    };
+
     Ok(CompiledKernel {
         kernel_name: kernel.name.clone(),
         block,
@@ -262,6 +332,7 @@ pub fn compile(kernel: &Kernel, dims: &DimEnv) -> Result<CompiledKernel, InterpE
         stmts: lo.stmts,
         collective: lo.collective,
         top,
+        slice_plan,
     })
 }
 
@@ -555,6 +626,602 @@ impl<'a> Lowerer<'a> {
     }
 }
 
+// ---- write-interval analysis (see module docs) -------------------------
+
+/// Abstract value of an integer expression for the current block:
+/// `{ a·blockIdx + v : lo ≤ v ≤ hi, v ≡ lo (mod stride) }`. An inverted
+/// range (`lo > hi`) is the *empty* set (code the loop analysis proved
+/// unreachable). `⊤` (no bound) is represented as `None` at use sites.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Aff {
+    a: i64,
+    lo: i64,
+    hi: i64,
+    stride: i64,
+}
+
+/// Canonical empty set.
+const AFF_EMPTY: Aff = Aff { a: 0, lo: 1, hi: 0, stride: 1 };
+
+fn gcd(a: i64, b: i64) -> i64 {
+    let (mut a, mut b) = (a.abs().max(1), b.abs().max(1));
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl Aff {
+    fn konst(c: i64) -> Aff {
+        Aff { a: 0, lo: c, hi: c, stride: 1 }
+    }
+
+    fn is_empty(self) -> bool {
+        self.lo > self.hi
+    }
+
+    fn as_const(self) -> Option<i64> {
+        (self.a == 0 && self.lo == self.hi).then_some(self.lo)
+    }
+
+    fn add(self, o: Aff) -> Option<Aff> {
+        if self.is_empty() || o.is_empty() {
+            return Some(AFF_EMPTY);
+        }
+        Some(Aff {
+            a: self.a.checked_add(o.a)?,
+            lo: self.lo.checked_add(o.lo)?,
+            hi: self.hi.checked_add(o.hi)?,
+            stride: gcd(self.stride, o.stride),
+        })
+    }
+
+    fn sub(self, o: Aff) -> Option<Aff> {
+        if self.is_empty() || o.is_empty() {
+            return Some(AFF_EMPTY);
+        }
+        Some(Aff {
+            a: self.a.checked_sub(o.a)?,
+            lo: self.lo.checked_sub(o.hi)?,
+            hi: self.hi.checked_sub(o.lo)?,
+            stride: gcd(self.stride, o.stride),
+        })
+    }
+
+    fn scale(self, c: i64) -> Option<Aff> {
+        if self.is_empty() {
+            return Some(AFF_EMPTY);
+        }
+        if c == 0 {
+            return Some(Aff::konst(0));
+        }
+        let (lo, hi) = if c > 0 {
+            (self.lo.checked_mul(c)?, self.hi.checked_mul(c)?)
+        } else {
+            (self.hi.checked_mul(c)?, self.lo.checked_mul(c)?)
+        };
+        Some(Aff {
+            a: self.a.checked_mul(c)?,
+            lo,
+            hi,
+            stride: self.stride.checked_mul(c.abs())?,
+        })
+    }
+
+    /// Narrow `hi` to the largest member of `lo`'s congruence class that
+    /// is `<= cap` (empty range when the class has no member there);
+    /// `None` on arithmetic overflow (caller keeps the unnarrowed value).
+    fn snap_hi(self, cap: i64) -> Option<Aff> {
+        if cap < self.lo {
+            return Some(AFF_EMPTY);
+        }
+        let span = cap.checked_sub(self.lo)?;
+        let hi = self.lo + (span / self.stride) * self.stride;
+        Some(Aff { hi: hi.min(self.hi), ..self })
+    }
+
+    /// Raise `lo` to the smallest member of its congruence class that is
+    /// `>= floor`; `None` on arithmetic overflow.
+    fn snap_lo(self, floor: i64) -> Option<Aff> {
+        if floor <= self.lo {
+            return Some(self);
+        }
+        let span = floor.checked_sub(self.lo)?;
+        let k = span.checked_add(self.stride - 1)? / self.stride;
+        let lo = self.lo.checked_add(k.checked_mul(self.stride)?)?;
+        Some(Aff { lo, ..self })
+    }
+}
+
+/// Join for the `If` merge: both branches' values must be covered.
+fn join_aff(x: Option<Aff>, y: Option<Aff>) -> Option<Aff> {
+    let (x, y) = (x?, y?);
+    if x.is_empty() {
+        return Some(y);
+    }
+    if y.is_empty() {
+        return Some(x);
+    }
+    if x.a != y.a {
+        return None;
+    }
+    let stride = if x.stride == y.stride && (x.lo - y.lo) % x.stride == 0 {
+        x.stride
+    } else {
+        1
+    };
+    Some(Aff {
+        a: x.a,
+        lo: x.lo.min(y.lo),
+        hi: x.hi.max(y.hi),
+        stride,
+    })
+}
+
+type AffEnv = Vec<Option<Aff>>;
+
+/// Accumulated access range of one global buffer across the program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BufAcc {
+    /// No access of this kind seen.
+    Never,
+    /// All accesses within `a·bx + [lo, hi]`.
+    Range { a: i64, lo: i64, hi: i64 },
+    /// At least one access with no provable bound.
+    Top,
+}
+
+impl BufAcc {
+    fn join(&mut self, idx: Option<Aff>) {
+        let next = match (idx, *self) {
+            (None, _) => BufAcc::Top,
+            (Some(i), _) if i.is_empty() => return,
+            (Some(i), BufAcc::Never) => BufAcc::Range { a: i.a, lo: i.lo, hi: i.hi },
+            (Some(i), BufAcc::Range { a, lo, hi }) if a == i.a => BufAcc::Range {
+                a,
+                lo: lo.min(i.lo),
+                hi: hi.max(i.hi),
+            },
+            (Some(_), BufAcc::Range { .. }) => BufAcc::Top,
+            (_, BufAcc::Top) => BufAcc::Top,
+        };
+        *self = next;
+    }
+}
+
+struct IntervalAnalysis<'a> {
+    iexprs: &'a [CIExpr],
+    vexprs: &'a [CVExpr],
+    bexprs: &'a [CBExpr],
+    stmts: &'a [CStmt],
+    block: i64,
+    writes: Vec<BufAcc>,
+    reads: Vec<BufAcc>,
+}
+
+impl IntervalAnalysis<'_> {
+    fn eval_i(&self, id: u32, env: &AffEnv) -> Option<Aff> {
+        match self.iexprs[id as usize] {
+            CIExpr::Const(c) => Some(Aff::konst(c)),
+            CIExpr::Slot(s) | CIExpr::SlotChecked(s) => env[s as usize],
+            CIExpr::ThreadIdx => Some(Aff {
+                a: 0,
+                lo: 0,
+                hi: self.block - 1,
+                stride: 1,
+            }),
+            CIExpr::BlockIdx => Some(Aff { a: 1, lo: 0, hi: 0, stride: 1 }),
+            CIExpr::Lane => Some(Aff {
+                a: 0,
+                lo: 0,
+                hi: self.block.min(WARP_SIZE) - 1,
+                stride: 1,
+            }),
+            CIExpr::Warp => Some(Aff {
+                a: 0,
+                lo: 0,
+                hi: (self.block - 1) / WARP_SIZE,
+                stride: 1,
+            }),
+            CIExpr::Bin(op, l, r) => {
+                let x = self.eval_i(l, env)?;
+                let y = self.eval_i(r, env)?;
+                match op {
+                    IBinOp::Add => x.add(y),
+                    IBinOp::Sub => x.sub(y),
+                    IBinOp::Mul => match (x.as_const(), y.as_const()) {
+                        (_, Some(c)) => x.scale(c),
+                        (Some(c), _) => y.scale(c),
+                        _ => None,
+                    },
+                    IBinOp::Min | IBinOp::Max if x.is_empty() || y.is_empty() => {
+                        Some(AFF_EMPTY)
+                    }
+                    IBinOp::Min if x.a == y.a => Some(Aff {
+                        a: x.a,
+                        lo: x.lo.min(y.lo),
+                        hi: x.hi.min(y.hi),
+                        stride: 1,
+                    }),
+                    IBinOp::Max if x.a == y.a => Some(Aff {
+                        a: x.a,
+                        lo: x.lo.max(y.lo),
+                        hi: x.hi.max(y.hi),
+                        stride: 1,
+                    }),
+                    IBinOp::Div => {
+                        let c = y.as_const()?;
+                        if c > 0 && x.a == 0 && x.lo >= 0 {
+                            Some(Aff { a: 0, lo: x.lo / c, hi: x.hi / c, stride: 1 })
+                        } else {
+                            None
+                        }
+                    }
+                    IBinOp::Mod => {
+                        let c = y.as_const()?;
+                        if c > 0 && x.a == 0 && x.lo >= 0 {
+                            Some(Aff {
+                                a: 0,
+                                lo: 0,
+                                hi: (c - 1).min(x.hi),
+                                stride: 1,
+                            })
+                        } else {
+                            None
+                        }
+                    }
+                    IBinOp::Shl => {
+                        let k = y.as_const()?;
+                        if (0..=32).contains(&k) {
+                            x.scale(1i64.checked_shl(k as u32)?)
+                        } else {
+                            None
+                        }
+                    }
+                    IBinOp::Shr => {
+                        let k = y.as_const()?;
+                        if (0..=63).contains(&k) && x.a == 0 && x.lo >= 0 {
+                            Some(Aff {
+                                a: 0,
+                                lo: x.lo >> k,
+                                hi: x.hi >> k,
+                                stride: 1,
+                            })
+                        } else {
+                            None
+                        }
+                    }
+                    _ => None,
+                }
+            }
+        }
+    }
+
+    /// `iexpr` of the shape `slot (+|-) const`, as `(slot, offset)`.
+    fn slot_plus_const(&self, id: u32) -> Option<(u32, i64)> {
+        match self.iexprs[id as usize] {
+            CIExpr::Slot(s) | CIExpr::SlotChecked(s) => Some((s, 0)),
+            CIExpr::Bin(IBinOp::Add, l, r) => {
+                if let (Some((s, k)), CIExpr::Const(c)) =
+                    (self.slot_plus_const(l), self.iexprs[r as usize])
+                {
+                    Some((s, k.checked_add(c)?))
+                } else if let (CIExpr::Const(c), Some((s, k))) =
+                    (self.iexprs[l as usize], self.slot_plus_const(r))
+                {
+                    Some((s, k.checked_add(c)?))
+                } else {
+                    None
+                }
+            }
+            CIExpr::Bin(IBinOp::Sub, l, r) => {
+                if let (Some((s, k)), CIExpr::Const(c)) =
+                    (self.slot_plus_const(l), self.iexprs[r as usize])
+                {
+                    Some((s, k.checked_sub(c)?))
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Narrow `env` by a branch condition (`truth` = which branch).
+    fn narrow(&self, bid: u32, truth: bool, env: &mut AffEnv) {
+        match self.bexprs[bid as usize] {
+            CBExpr::Cmp(op, l, r) => {
+                let op = if truth { op } else { negate_cmp(op) };
+                if let Some((s, k)) = self.slot_plus_const(l) {
+                    if let Some(rhs) = self.eval_i(r, env) {
+                        narrow_slot(env, s, k, op, rhs);
+                    }
+                }
+                if let Some((s, k)) = self.slot_plus_const(r) {
+                    if let Some(lhs) = self.eval_i(l, env) {
+                        narrow_slot(env, s, k, flip_cmp(op), lhs);
+                    }
+                }
+            }
+            CBExpr::And(a, b) => {
+                if truth {
+                    self.narrow(a, true, env);
+                    self.narrow(b, true, env);
+                }
+            }
+            CBExpr::Or(a, b) => {
+                if !truth {
+                    self.narrow(a, false, env);
+                    self.narrow(b, false, env);
+                }
+            }
+            CBExpr::Not(a) => self.narrow(a, !truth, env),
+        }
+    }
+
+    /// Record every `LoadGlobal` reachable from a value expression.
+    fn scan_v(&mut self, id: u32, env: &AffEnv) {
+        match self.vexprs[id as usize] {
+            CVExpr::LoadGlobal { buf, idx } => {
+                let i = self.eval_i(idx, env);
+                self.reads[buf as usize].join(i);
+            }
+            CVExpr::Bin(_, a, b) => {
+                self.scan_v(a, env);
+                self.scan_v(b, env);
+            }
+            CVExpr::Call(_, a) => self.scan_v(a, env),
+            CVExpr::Select { a, b, .. } => {
+                self.scan_v(a, env);
+                self.scan_v(b, env);
+            }
+            CVExpr::ShflDown { value, .. } => self.scan_v(value, env),
+            CVExpr::FromInt(_)
+            | CVExpr::Const(_)
+            | CVExpr::Slot(_)
+            | CVExpr::SlotChecked(_)
+            | CVExpr::LoadShared { .. } => {}
+        }
+    }
+
+    /// Integer slots assigned anywhere inside a statement range
+    /// (including nested loop variables).
+    fn assigned_slots(&self, r: StmtRange, out: &mut BTreeSet<u32>) {
+        for sid in r.start..r.end {
+            match self.stmts[sid as usize] {
+                CStmt::AssignI { slot, .. } => {
+                    out.insert(slot);
+                }
+                CStmt::If { then, els, .. } => {
+                    self.assigned_slots(then, out);
+                    self.assigned_slots(els, out);
+                }
+                CStmt::For { var, body, .. } => {
+                    out.insert(var);
+                    self.assigned_slots(body, out);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Conservative range of a loop variable while the body executes.
+    fn loop_var_range(
+        &self,
+        iv: Option<Aff>,
+        cmp: CmpOp,
+        bound: Option<Aff>,
+        update: CUpdate,
+        env: &AffEnv,
+        var_reassigned: bool,
+    ) -> Option<Aff> {
+        if var_reassigned {
+            return None;
+        }
+        let iv = iv?;
+        let b = bound?;
+        if iv.is_empty() || b.is_empty() {
+            return Some(AFF_EMPTY);
+        }
+        match update {
+            CUpdate::Add(step) => {
+                let step = self.eval_i(step, env)?.as_const()?;
+                if step <= 0 || b.a != iv.a {
+                    return None;
+                }
+                let cap = match cmp {
+                    CmpOp::Lt => b.hi.checked_sub(1)?,
+                    CmpOp::Le => b.hi,
+                    _ => return None,
+                };
+                // Values grow from `init` by multiples of `step` and the
+                // body only runs while `var OP bound` holds, so the
+                // in-body range is `[iv.lo, cap]` snapped to the class.
+                let stride = gcd(iv.stride, step);
+                if cap < iv.lo {
+                    return Some(AFF_EMPTY);
+                }
+                let span = cap.checked_sub(iv.lo)?;
+                let hi = iv.lo + (span / stride) * stride;
+                Some(Aff { a: iv.a, lo: iv.lo, hi, stride })
+            }
+            CUpdate::Shr(_) => {
+                // Shrinking loop (`off >>= 1`): values fall from `init`
+                // toward the bound.
+                if iv.a != 0 || b.a != 0 || iv.lo < 0 {
+                    return None;
+                }
+                let floor = match cmp {
+                    CmpOp::Gt => b.lo.checked_add(1)?,
+                    CmpOp::Ge => b.lo,
+                    _ => return None,
+                };
+                Some(Aff {
+                    a: 0,
+                    lo: floor.max(0),
+                    hi: iv.hi,
+                    stride: 1,
+                })
+            }
+        }
+    }
+
+    fn walk_range(&mut self, r: StmtRange, env: &mut AffEnv) {
+        for sid in r.start..r.end {
+            self.walk_stmt(sid, env);
+        }
+    }
+
+    fn walk_stmt(&mut self, sid: u32, env: &mut AffEnv) {
+        match self.stmts[sid as usize] {
+            CStmt::AssignF { value, .. } => self.scan_v(value, env),
+            CStmt::AssignI { slot, value } => {
+                let v = self.eval_i(value, env);
+                env[slot as usize] = v;
+            }
+            CStmt::StoreGlobal { buf, idx, value } => {
+                self.scan_v(value, env);
+                let i = self.eval_i(idx, env);
+                self.writes[buf as usize].join(i);
+            }
+            CStmt::StoreShared { value, .. } => self.scan_v(value, env),
+            CStmt::Sync => {}
+            CStmt::If { cond, then, els } => {
+                let mut env_t = env.clone();
+                self.narrow(cond, true, &mut env_t);
+                let mut env_e = env.clone();
+                self.narrow(cond, false, &mut env_e);
+                self.walk_range(then, &mut env_t);
+                self.walk_range(els, &mut env_e);
+                for (slot, (t, e)) in
+                    env_t.into_iter().zip(env_e).enumerate()
+                {
+                    env[slot] = join_aff(t, e);
+                }
+            }
+            CStmt::For {
+                var,
+                init,
+                cmp,
+                bound,
+                update,
+                body,
+            } => {
+                let iv = self.eval_i(init, env);
+                // Any slot assigned inside the body has an unknown value
+                // at an arbitrary iteration (no fixpoint — one pass with
+                // those slots at ⊤ is sound).
+                let mut assigned = BTreeSet::new();
+                self.assigned_slots(body, &mut assigned);
+                for &s in &assigned {
+                    env[s as usize] = None;
+                }
+                env[var as usize] = None;
+                let bound_r = self.eval_i(bound, env);
+                let var_range = self.loop_var_range(
+                    iv,
+                    cmp,
+                    bound_r,
+                    update,
+                    env,
+                    assigned.contains(&var),
+                );
+                env[var as usize] = var_range;
+                self.walk_range(body, env);
+                env[var as usize] = None;
+                for &s in &assigned {
+                    env[s as usize] = None;
+                }
+            }
+        }
+    }
+
+    /// Assemble the slice plan; `None` unless every written buffer has
+    /// provably disjoint, ascending per-block ranges that also contain
+    /// all of its loads.
+    fn into_plan(self) -> Option<Vec<BufPlan>> {
+        let mut plan = Vec::with_capacity(self.writes.len());
+        for (w, r) in self.writes.iter().zip(&self.reads) {
+            match *w {
+                BufAcc::Never => plan.push(BufPlan::ReadOnly),
+                BufAcc::Range { a, lo, hi } => {
+                    if a < 1 || hi.checked_sub(lo)?.checked_add(1)? > a {
+                        return None;
+                    }
+                    // Loads of a written buffer must stay inside the
+                    // block's own slice.
+                    match *r {
+                        BufAcc::Never => {}
+                        BufAcc::Range { a: ra, lo: rlo, hi: rhi }
+                            if ra == a && rlo >= lo && rhi <= hi => {}
+                        _ => return None,
+                    }
+                    plan.push(BufPlan::Interval { a, lo, hi });
+                }
+                BufAcc::Top => return None,
+            }
+        }
+        Some(plan)
+    }
+}
+
+fn negate_cmp(op: CmpOp) -> CmpOp {
+    match op {
+        CmpOp::Lt => CmpOp::Ge,
+        CmpOp::Le => CmpOp::Gt,
+        CmpOp::Gt => CmpOp::Le,
+        CmpOp::Ge => CmpOp::Lt,
+        CmpOp::Eq => CmpOp::Ne,
+        CmpOp::Ne => CmpOp::Eq,
+    }
+}
+
+/// Mirror a comparison across swapped operands (`a < b` ⇔ `b > a`).
+fn flip_cmp(op: CmpOp) -> CmpOp {
+    match op {
+        CmpOp::Lt => CmpOp::Gt,
+        CmpOp::Le => CmpOp::Ge,
+        CmpOp::Gt => CmpOp::Lt,
+        CmpOp::Ge => CmpOp::Le,
+        CmpOp::Eq => CmpOp::Eq,
+        CmpOp::Ne => CmpOp::Ne,
+    }
+}
+
+/// Narrow one slot by `slot + k OP rhs` (same affine `bx` coefficient
+/// required so the `bx` terms cancel).
+fn narrow_slot(env: &mut AffEnv, slot: u32, k: i64, op: CmpOp, rhs: Aff) {
+    let Some(cur) = env[slot as usize] else { return };
+    if cur.is_empty() || rhs.is_empty() || cur.a != rhs.a {
+        return;
+    }
+    let narrowed = match op {
+        CmpOp::Lt => rhs
+            .hi
+            .checked_sub(k)
+            .and_then(|v| v.checked_sub(1))
+            .and_then(|cap| cur.snap_hi(cap)),
+        CmpOp::Le => rhs.hi.checked_sub(k).and_then(|cap| cur.snap_hi(cap)),
+        CmpOp::Gt => rhs
+            .lo
+            .checked_sub(k)
+            .and_then(|v| v.checked_add(1))
+            .and_then(|f| cur.snap_lo(f)),
+        CmpOp::Ge => rhs.lo.checked_sub(k).and_then(|f| cur.snap_lo(f)),
+        CmpOp::Eq => rhs.lo.checked_sub(k).and_then(|f| {
+            rhs.hi
+                .checked_sub(k)
+                .and_then(|cap| cur.snap_lo(f).and_then(|n| n.snap_hi(cap)))
+        }),
+        CmpOp::Ne => None,
+    };
+    if let Some(n) = narrowed {
+        env[slot as usize] = Some(n);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -740,6 +1407,122 @@ mod tests {
             compile(&k2, &dims),
             Err(InterpError::Eval(EvalError::UnknownBuffer(_)))
         ));
+    }
+
+    #[test]
+    fn catalog_kernels_prove_sliceable() {
+        // The zero-copy claim behind EXPERIMENTS.md §Zero-copy: every
+        // baseline, on every correctness shape, and every single-move
+        // variant is provably block-sliceable (one-block-per-row index
+        // structure; vectorization is covered by the stride refinement).
+        use crate::transforms;
+        for spec in kernels::all_specs() {
+            let base = (spec.build_baseline)();
+            for dims in (spec.test_shapes)() {
+                let p = compile(&base, &dims).unwrap();
+                assert!(
+                    p.sliceable(),
+                    "{} baseline at {dims:?}",
+                    spec.paper_name
+                );
+            }
+            for mv in transforms::all_moves() {
+                let Ok(k) = transforms::apply(&base, mv) else {
+                    continue;
+                };
+                for dims in (spec.test_shapes)() {
+                    let p = compile(&k, &dims).unwrap();
+                    assert!(
+                        p.sliceable(),
+                        "{} + {} at {dims:?}",
+                        spec.paper_name,
+                        mv.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grid_stride_and_overlapping_writes_defeat_the_analysis() {
+        let out_param = |len| crate::ir::BufParam {
+            name: "out".into(),
+            dtype: DType::F32,
+            len,
+            io: BufIo::Out,
+        };
+        // Grid-stride store: block writes interleave across the buffer.
+        let gs = Kernel {
+            name: "grid_stride".into(),
+            dims: vec!["N".into()],
+            params: vec![out_param(dim("N"))],
+            shared: vec![],
+            launch: crate::ir::Launch { grid: c(2), block: 32 },
+            body: vec![for_up(
+                "i",
+                iadd(imul(bx(), bdim()), tx()),
+                dim("N"),
+                imul(bdim(), gdim()),
+                vec![store("out", iv("i"), fc(1.0))],
+            )],
+        };
+        let mut dims = DimEnv::new();
+        dims.insert("N".into(), 256);
+        assert!(!compile(&gs, &dims).unwrap().sliceable());
+
+        // Every block stores element 0: ranges overlap (a = 0).
+        let clash = Kernel {
+            name: "clash".into(),
+            dims: vec![],
+            params: vec![out_param(c(4))],
+            shared: vec![],
+            launch: crate::ir::Launch { grid: c(4), block: 1 },
+            body: vec![store("out", c(0), fc(1.0))],
+        };
+        assert!(!compile(&clash, &DimEnv::new()).unwrap().sliceable());
+    }
+
+    #[test]
+    fn slice_plan_intervals_match_the_row_structure() {
+        // silu: out is written at bx*D + [0, D-1]; xg is read-only.
+        let k = kernels::silu::build_baseline();
+        let dims = &(kernels::silu::spec().test_shapes)()[0];
+        let d = dims["D"];
+        let p = compile(&k, dims).unwrap();
+        let plan = p.slice_plan.as_ref().expect("silu is sliceable");
+        assert_eq!(plan[0], BufPlan::ReadOnly, "xg is never stored to");
+        assert_eq!(
+            plan[1],
+            BufPlan::Interval { a: d, lo: 0, hi: d - 1 },
+            "out rows are dense and block-contiguous"
+        );
+    }
+
+    #[test]
+    fn reads_outside_the_write_interval_defeat_the_analysis() {
+        // Block writes its own row but *reads* a neighbouring row of the
+        // same buffer — slicing would change what the read observes, so
+        // the analysis must refuse.
+        let k = Kernel {
+            name: "cross_read".into(),
+            dims: vec![],
+            params: vec![crate::ir::BufParam {
+                name: "out".into(),
+                dtype: DType::F32,
+                len: c(64),
+                io: BufIo::InOut,
+            }],
+            shared: vec![],
+            launch: crate::ir::Launch { grid: c(4), block: 16 },
+            body: vec![store(
+                "out",
+                iadd(imul(bx(), bdim()), tx()),
+                // Reads row 0 regardless of bx: not within this block's
+                // own write interval (affine coefficient 0 vs 16).
+                load("out", tx()),
+            )],
+        };
+        assert!(!compile(&k, &DimEnv::new()).unwrap().sliceable());
     }
 
     #[test]

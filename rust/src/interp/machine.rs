@@ -33,31 +33,59 @@
 //! Grids can execute **block-parallel** ([`run_compiled_with_opts`] with
 //! `grid_workers > 1`): blocks are independent by construction (CUDA
 //! semantics), so contiguous chunks of block indices fan out over
-//! `std::thread::scope` workers, each against a private copy of global
-//! memory with exact per-element write tracking, and each worker's
-//! written elements merge back deterministically in block order (so even
-//! overlapping writes across chunks resolve exactly as the serial loop
-//! would — last block wins). `grid_workers = 1` runs the literal serial
-//! loop byte-for-byte, including error selection; at any worker count
-//! the reported error is the lowest failing block's (the merge stops at
-//! the first failed chunk). Two documented deviations at
-//! `grid_workers > 1`, both outside the blocks-are-independent contract
-//! and unreachable from the catalog: a block *reading* an element an
+//! `std::thread::scope` workers. Two engines implement the fan-out:
+//!
+//! * **Zero-copy sliced** (the default whenever the compile-time
+//!   write-interval analysis proved it safe — see [`super::compile`]'s
+//!   module docs): workers execute against *disjoint `&mut` slices of
+//!   the real global buffers*. No clones, no dirty maps, no merge pass —
+//!   every store lands in place, and the analysis guarantees no store or
+//!   load of a written buffer ever leaves its block's own slice.
+//! * **Copy-and-merge** (the fallback for kernels the analysis cannot
+//!   prove — grid-stride loops, cross-block overlap): spawned workers
+//!   get private copies of global memory with exact per-element write
+//!   tracking, merged back deterministically in block order (so even
+//!   overlapping writes across chunks resolve exactly as the serial
+//!   loop would — last block wins). The calling thread runs chunk 0
+//!   directly against the real buffers — its writes are first in merge
+//!   order — so the copy cost is O((workers−1) × bytes).
+//!
+//! `grid_workers = 1` runs the literal serial loop byte-for-byte,
+//! including error selection; at any worker count, on either engine, the
+//! reported error is the lowest failing block's (the lowest-indexed
+//! failing chunk owns it). The `STEP_LIMIT` budget is **cumulative over
+//! the whole grid** at every worker count: parallel workers share one
+//! `AtomicU64` step total, matching the serial engine's accounting. Two
+//! documented deviations remain at `grid_workers > 1`, both outside the
+//! blocks-are-independent contract: a block *reading* an element an
 //! earlier block wrote observes the launch-entry value instead of the
-//! earlier block's store, and the `STEP_LIMIT` budget is per worker
-//! chunk rather than cumulative over the whole grid.
+//! earlier block's store (unreachable from the catalog; on the sliced
+//! engine the analysis rejects such kernels outright), and after a
+//! mid-grid **failure** the env's buffer *contents* differ by engine —
+//! serial keeps only blocks before the failure, copy-merge discards
+//! unmerged chunks, the sliced engine keeps every completed block's
+//! in-place writes (higher-indexed chunks included). Failed launches
+//! are pinned on error *rendering* only (the testing agent never reads
+//! buffers after an Err), so this affects no caller.
+//!
+//! Fan-outs consult the optional process-wide [`WorkerBudget`]
+//! ([`RunOpts::budget`]) before spawning, so grid workers degrade to the
+//! serial loop instead of oversubscribing cores already busy with
+//! candidate- and shape-level validation workers.
 
 use std::cell::Cell;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::thread;
 
 use crate::ir::expr::{eval_cmp, eval_ibin};
 use crate::ir::types::{f32_to_f16_round, DType};
 use crate::ir::{DimEnv, Kernel};
 
+use super::budget::WorkerBudget;
 use super::compile::{
-    compile, CBExpr, CIExpr, CStmt, CUpdate, CVExpr, CompiledKernel, StmtRange,
+    compile, BufPlan, CBExpr, CIExpr, CStmt, CUpdate, CVExpr, CompiledKernel,
+    StmtRange,
 };
 use super::eval::{fastmath_quantize, EvalError, WARP_SIZE};
 
@@ -208,7 +236,7 @@ pub fn run_compiled_with_cancel(
         env,
         RunOpts {
             cancel,
-            grid_workers: 1,
+            ..RunOpts::default()
         },
     )
 }
@@ -222,8 +250,19 @@ pub struct RunOpts<'a> {
     /// Worker threads fanned over the launch's blocks. `1` (the
     /// default) runs the serial engine byte-for-byte; `0` means one
     /// worker per available core; any request is clamped to the
-    /// launch's grid size.
+    /// launch's grid size (and further by `budget`, when present).
     pub grid_workers: usize,
+    /// Take the zero-copy sliced path when the compiled kernel's
+    /// write-interval analysis proved it safe (the default). `false`
+    /// forces the copy-and-merge engine — the bench and the differential
+    /// wall use it to exercise both grid paths.
+    pub allow_zero_copy: bool,
+    /// Process-wide worker budget consulted before spawning grid
+    /// workers (`None` = unbudgeted, the historical behavior).
+    pub budget: Option<&'a WorkerBudget>,
+    /// Override of the cumulative step limit (`None` = [`STEP_LIMIT`]).
+    /// Tests use small limits to pin the shared accounting.
+    pub step_limit: Option<u64>,
 }
 
 impl Default for RunOpts<'_> {
@@ -231,6 +270,9 @@ impl Default for RunOpts<'_> {
         RunOpts {
             cancel: None,
             grid_workers: 1,
+            allow_zero_copy: true,
+            budget: None,
+            step_limit: None,
         }
     }
 }
@@ -247,9 +289,32 @@ pub fn effective_grid_workers(requested: usize, grid: i64) -> usize {
     req.clamp(1, grid.max(1) as usize)
 }
 
+/// Per-launch automatic worker count — what the testing agent's
+/// `grid_workers = 0` resolves to once it holds the compiled launch:
+/// serial for grids too small to amortize the fan-out, one worker per
+/// core (clamped to the grid) above.
+pub fn auto_grid_workers(grid: i64) -> usize {
+    if grid < 4 {
+        1
+    } else {
+        effective_grid_workers(0, grid)
+    }
+}
+
+/// Process-wide count of launches executed on the zero-copy sliced
+/// path. Monotone; the `coordinator_hotpath` bench snapshots it into
+/// `BENCH_hotpath.json` (`sliced_launches`, schema v4) to prove the
+/// fast path is actually taken.
+static SLICED_LAUNCHES: AtomicU64 = AtomicU64::new(0);
+
+/// Read the process-wide [zero-copy launch counter](SLICED_LAUNCHES).
+pub fn sliced_launches() -> u64 {
+    SLICED_LAUNCHES.load(Ordering::Relaxed)
+}
+
 /// [`run_compiled`] with full execution options (cancellation token +
-/// block-parallel grid execution). See the module docs for the
-/// determinism contract of `grid_workers`.
+/// block-parallel grid execution + worker budget). See the module docs
+/// for the determinism contract of `grid_workers`.
 pub fn run_compiled_with_opts(
     prog: &CompiledKernel,
     env: &mut ExecEnv,
@@ -286,12 +351,36 @@ pub fn run_compiled_with_opts(
         })
         .collect();
 
-    let workers = effective_grid_workers(opts.grid_workers, prog.grid);
+    let limit = opts.step_limit.unwrap_or(STEP_LIMIT);
+    let requested = effective_grid_workers(opts.grid_workers, prog.grid);
+    // The calling thread is always the first worker; additional workers
+    // need tokens from the budget (when one is attached), so nested
+    // fan-outs degrade toward serial instead of oversubscribing. The
+    // lease is held until the workers join (end of this function).
+    let (_lease, workers) = match (requested > 1, opts.budget) {
+        (true, Some(b)) => {
+            let lease = b.try_acquire(requested - 1);
+            let w = 1 + lease.granted();
+            (Some(lease), w)
+        }
+        (true, None) => (None, requested),
+        (false, _) => (None, 1),
+    };
+
     let result = if workers <= 1 {
-        let mut m = Machine::new(prog, &mut global, opts.cancel, false);
+        let _guard = opts.budget.map(|b| b.count_worker());
+        let mut m = Machine::new(
+            prog,
+            FullMem { bufs: &mut global[..] },
+            opts.cancel,
+            None,
+            limit,
+        );
         m.run_block_range(0, prog.grid)
+    } else if opts.allow_zero_copy && prog.slice_plan.is_some() {
+        run_grid_sliced(prog, &mut global, opts.cancel, workers, opts.budget, limit)
     } else {
-        run_grid_parallel(prog, &mut global, opts.cancel, workers)
+        run_grid_parallel(prog, &mut global, opts.cancel, workers, opts.budget, limit)
     };
 
     for (p, g) in prog.params.iter().zip(global) {
@@ -300,67 +389,103 @@ pub fn run_compiled_with_opts(
     result
 }
 
-/// Execute the launch's blocks on `workers` scoped threads — contiguous
-/// chunks of block indices, each against a private copy of global
-/// memory — then merge each worker's *written elements* back in block
-/// order.
-///
-/// Each worker tracks exactly which global elements its blocks stored
-/// (per-element dirty maps, maintained only in this mode), so the merge
-/// applies precisely the serial loop's writes in the serial loop's block
-/// order — byte-identical even when blocks of different chunks write
-/// overlapping elements (last block wins, as it would serially). The
-/// one behavior blocks must not rely on is *reading* another block's
-/// writes (the CUDA independence contract): a cross-chunk read observes
-/// the launch-entry state where serial would observe the earlier block's
-/// store. Error selection is pinned to the lowest failing block index:
-/// chunks are contiguous and ascending, every worker stops at its first
-/// failing block, and the merge stops at (and reports) the first failed
-/// worker — whose error is the lowest failing block's, exactly what the
-/// serial loop would have reported.
-fn run_grid_parallel(
-    prog: &CompiledKernel,
-    global: &mut Vec<GBuf>,
-    cancel: Option<&AtomicBool>,
-    workers: usize,
-) -> Result<(), InterpError> {
-    let grid = prog.grid as usize;
-    let w = workers.clamp(1, grid.max(1));
-    let base = grid / w;
-    let extra = grid % w;
+/// Contiguous, ascending block chunks for `workers` workers:
+/// `min(workers, grid) + 1` fenceposts starting at 0.
+fn chunk_bounds(grid: i64, workers: usize) -> Vec<i64> {
+    let grid_u = grid.max(1) as usize;
+    let w = workers.clamp(1, grid_u);
+    let base = grid_u / w;
+    let extra = grid_u % w;
     let mut bounds: Vec<i64> = Vec::with_capacity(w + 1);
     bounds.push(0);
     for i in 0..w {
         let len = base + usize::from(i < extra);
         bounds.push(bounds[i] + len as i64);
     }
+    bounds
+}
 
-    let mut copies: Vec<Vec<GBuf>> = (0..w).map(|_| global.clone()).collect();
+/// Copy-and-merge block-parallel engine (the fallback when no slice
+/// plan exists): spawned workers execute contiguous block chunks
+/// against private copies of global memory, then merge their *written
+/// elements* back in block order.
+///
+/// Each spawned worker tracks exactly which global elements its blocks
+/// stored (per-element dirty maps, maintained only in this mode), so
+/// the merge applies precisely the serial loop's writes in the serial
+/// loop's block order — byte-identical even when blocks of different
+/// chunks write overlapping elements (last block wins, as it would
+/// serially). Chunk 0 runs on the calling thread directly against the
+/// real buffers: its writes are first in merge order, so it needs
+/// neither a copy nor a dirty map. The one behavior blocks must not
+/// rely on is *reading* another block's writes (the CUDA independence
+/// contract): a cross-chunk read observes the launch-entry state where
+/// serial would observe the earlier block's store. Error selection is
+/// pinned to the lowest failing block index: chunks are contiguous and
+/// ascending, every worker stops at its first failing block, and the
+/// merge stops at (and reports) the first failed chunk — whose error is
+/// the lowest failing block's, exactly what the serial loop would have
+/// reported. All workers share one cumulative step budget.
+fn run_grid_parallel(
+    prog: &CompiledKernel,
+    global: &mut Vec<GBuf>,
+    cancel: Option<&AtomicBool>,
+    workers: usize,
+    budget: Option<&WorkerBudget>,
+    limit: u64,
+) -> Result<(), InterpError> {
+    let bounds = chunk_bounds(prog.grid, workers);
+    let shared_steps = AtomicU64::new(0);
+    // Private copies only for the spawned chunks 1..w — O((w-1) × bytes).
+    let mut copies: Vec<Vec<GBuf>> =
+        (1..bounds.len() - 1).map(|_| global.clone()).collect();
 
     type WorkerOutcome = (Result<(), InterpError>, Vec<Vec<bool>>);
-    let results: Vec<WorkerOutcome> = thread::scope(|s| {
-        let handles: Vec<_> = copies
-            .iter_mut()
-            .enumerate()
-            .map(|(i, mem)| {
-                let (start, end) = (bounds[i], bounds[i + 1]);
-                s.spawn(move || {
-                    let mut m = Machine::new(prog, mem, cancel, true);
-                    let r = m.run_block_range(start, end);
-                    let dirty = std::mem::take(&mut m.global_dirty);
-                    (r, dirty)
+    let (r0, results): (Result<(), InterpError>, Vec<WorkerOutcome>) =
+        thread::scope(|s| {
+            let steps = &shared_steps;
+            let handles: Vec<_> = copies
+                .iter_mut()
+                .enumerate()
+                .map(|(j, mem)| {
+                    let (start, end) = (bounds[j + 1], bounds[j + 2]);
+                    s.spawn(move || {
+                        let _g = budget.map(|b| b.count_worker());
+                        let mut m = Machine::new(
+                            prog,
+                            TrackedMem::new(mem),
+                            cancel,
+                            Some(steps),
+                            limit,
+                        );
+                        let r = m.run_block_range(start, end);
+                        (r, std::mem::take(&mut m.mem.dirty))
+                    })
                 })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("grid worker panicked"))
-            .collect()
-    });
+                .collect();
+            let _g = budget.map(|b| b.count_worker());
+            let mut m0 = Machine::new(
+                prog,
+                FullMem { bufs: &mut global[..] },
+                cancel,
+                Some(steps),
+                limit,
+            );
+            let r0 = m0.run_block_range(bounds[0], bounds[1]);
+            (
+                r0,
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("grid worker panicked"))
+                    .collect(),
+            )
+        });
 
+    // Chunk 0's error is the lowest failing block's: merge nothing (the
+    // serial loop would never have run the later blocks).
+    r0?;
     // Deterministic merge in block order, stopping at the first failed
-    // worker (its chunk contains the lowest failing block; later chunks
-    // never ran under the serial loop).
+    // worker.
     for (mem, (r, dirty)) in copies.iter().zip(results) {
         for ((dst, src), written) in global.iter_mut().zip(mem).zip(&dirty) {
             for ((d, s), wr) in
@@ -376,6 +501,125 @@ fn run_grid_parallel(
     Ok(())
 }
 
+/// Zero-copy block-parallel engine: workers execute against disjoint
+/// `&mut` slices of the real global buffers, along the per-block write
+/// intervals the compile-time analysis proved (see [`super::compile`]).
+/// No clones, no dirty maps, no merge pass — stores land in place.
+/// Error selection matches the copy-merge engine: the lowest-indexed
+/// failing chunk owns the lowest failing block. All workers share one
+/// cumulative step budget.
+fn run_grid_sliced(
+    prog: &CompiledKernel,
+    global: &mut [GBuf],
+    cancel: Option<&AtomicBool>,
+    workers: usize,
+    budget: Option<&WorkerBudget>,
+    limit: u64,
+) -> Result<(), InterpError> {
+    let plan = prog
+        .slice_plan
+        .as_ref()
+        .expect("sliced run requires a slice plan");
+    SLICED_LAUNCHES.fetch_add(1, Ordering::Relaxed);
+    let bounds = chunk_bounds(prog.grid, workers);
+    let w = bounds.len() - 1;
+
+    // Build each worker's view of global memory: read-only buffers are
+    // shared whole; written buffers split into the disjoint, ascending
+    // per-chunk slices the analysis proved (gaps between chunk ranges —
+    // elements no block writes — stay with no worker).
+    let mut views: Vec<Vec<SBuf<'_>>> =
+        (0..w).map(|_| Vec::with_capacity(global.len())).collect();
+    for (g, bp) in global.iter_mut().zip(plan) {
+        let full_len = g.data.len();
+        let f16 = g.f16;
+        match *bp {
+            BufPlan::ReadOnly => {
+                let data: &[f32] = &g.data;
+                for view in &mut views {
+                    view.push(SBuf {
+                        view: SView::Whole(data),
+                        full_len,
+                        f16,
+                    });
+                }
+            }
+            BufPlan::Interval { a, lo, hi } => {
+                let mut rest: &mut [f32] = &mut g.data;
+                let mut off = 0usize;
+                for (i, view) in views.iter_mut().enumerate() {
+                    let (sb, eb) = (bounds[i], bounds[i + 1]);
+                    // Clamp the proven interval to the buffer: an index
+                    // inside the interval but outside the buffer is OOB
+                    // under the serial loop too, and the slice bounds
+                    // check reports it with the same global index/len.
+                    let start = (a as i128 * sb as i128 + lo as i128)
+                        .clamp(0, full_len as i128)
+                        as usize;
+                    let end = (a as i128 * (eb - 1) as i128 + hi as i128 + 1)
+                        .clamp(start as i128, full_len as i128)
+                        as usize;
+                    let (_gap, tail) = rest.split_at_mut(start - off);
+                    let (mine, tail) = tail.split_at_mut(end - start);
+                    rest = tail;
+                    off = end;
+                    view.push(SBuf {
+                        view: SView::Slice { data: mine, base: start },
+                        full_len,
+                        f16,
+                    });
+                }
+            }
+        }
+    }
+
+    let shared_steps = AtomicU64::new(0);
+    let mut views = views.into_iter();
+    let view0 = views.next().expect("at least one worker view");
+    let (r0, results): (Result<(), InterpError>, Vec<Result<(), InterpError>>) =
+        thread::scope(|s| {
+            let steps = &shared_steps;
+            let handles: Vec<_> = views
+                .enumerate()
+                .map(|(j, view)| {
+                    let (start, end) = (bounds[j + 1], bounds[j + 2]);
+                    s.spawn(move || {
+                        let _g = budget.map(|b| b.count_worker());
+                        let mut m = Machine::new(
+                            prog,
+                            SlicedMem { bufs: view },
+                            cancel,
+                            Some(steps),
+                            limit,
+                        );
+                        m.run_block_range(start, end)
+                    })
+                })
+                .collect();
+            let _g = budget.map(|b| b.count_worker());
+            let mut m0 = Machine::new(
+                prog,
+                SlicedMem { bufs: view0 },
+                cancel,
+                Some(steps),
+                limit,
+            );
+            let r0 = m0.run_block_range(bounds[0], bounds[1]);
+            (
+                r0,
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("sliced grid worker panicked"))
+                    .collect(),
+            )
+        });
+    r0?;
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
 /// Global buffer in launch form: dense storage + store-rounding flag.
 #[derive(Clone)]
 struct GBuf {
@@ -383,9 +627,158 @@ struct GBuf {
     f16: bool,
 }
 
-struct Machine<'a> {
+/// The machine's window onto global memory. Monomorphized per engine so
+/// the serial hot path keeps exactly its historical code shape.
+trait GlobalMem {
+    /// Load element `i` of buffer `buf`; `Err(full_len)` when out of
+    /// bounds (of the *full* buffer — slices report global geometry).
+    fn load(&self, buf: usize, i: i64) -> Result<f32, usize>;
+    /// Store element `i` (applies the buffer's f16 store-rounding);
+    /// `Err(full_len)` when out of bounds.
+    fn store(&mut self, buf: usize, i: i64, v: f32) -> Result<(), usize>;
+}
+
+/// Serial engine + copy-merge chunk 0: the full buffers, no tracking.
+struct FullMem<'g> {
+    bufs: &'g mut [GBuf],
+}
+
+impl GlobalMem for FullMem<'_> {
+    #[inline]
+    fn load(&self, buf: usize, i: i64) -> Result<f32, usize> {
+        let d = &self.bufs[buf].data;
+        match usize::try_from(i).ok().and_then(|i| d.get(i)) {
+            Some(v) => Ok(*v),
+            None => Err(d.len()),
+        }
+    }
+
+    #[inline]
+    fn store(&mut self, buf: usize, i: i64, v: f32) -> Result<(), usize> {
+        let g = &mut self.bufs[buf];
+        let len = g.data.len();
+        match usize::try_from(i).ok().and_then(|i| g.data.get_mut(i)) {
+            Some(slot) => {
+                *slot = if g.f16 { f32_to_f16_round(v) } else { v };
+                Ok(())
+            }
+            None => Err(len),
+        }
+    }
+}
+
+/// Copy-merge worker: a private copy of the buffers plus per-element
+/// dirty maps the merge consumes.
+struct TrackedMem<'g> {
+    bufs: &'g mut [GBuf],
+    dirty: Vec<Vec<bool>>,
+}
+
+impl<'g> TrackedMem<'g> {
+    fn new(bufs: &'g mut [GBuf]) -> TrackedMem<'g> {
+        let dirty = bufs.iter().map(|g| vec![false; g.data.len()]).collect();
+        TrackedMem { bufs, dirty }
+    }
+}
+
+impl GlobalMem for TrackedMem<'_> {
+    #[inline]
+    fn load(&self, buf: usize, i: i64) -> Result<f32, usize> {
+        let d = &self.bufs[buf].data;
+        match usize::try_from(i).ok().and_then(|i| d.get(i)) {
+            Some(v) => Ok(*v),
+            None => Err(d.len()),
+        }
+    }
+
+    #[inline]
+    fn store(&mut self, buf: usize, i: i64, v: f32) -> Result<(), usize> {
+        let g = &mut self.bufs[buf];
+        let len = g.data.len();
+        match usize::try_from(i).ok().and_then(|i| g.data.get_mut(i)) {
+            Some(slot) => {
+                *slot = if g.f16 { f32_to_f16_round(v) } else { v };
+                self.dirty[buf][i as usize] = true;
+                Ok(())
+            }
+            None => Err(len),
+        }
+    }
+}
+
+/// One buffer as a zero-copy worker sees it.
+enum SView<'g> {
+    /// Read-only buffer: the whole thing, shared by every worker.
+    Whole(&'g [f32]),
+    /// Written buffer: this worker's disjoint slice, starting at global
+    /// element `base`.
+    Slice { data: &'g mut [f32], base: usize },
+}
+
+struct SBuf<'g> {
+    view: SView<'g>,
+    /// Full buffer length — OOB errors report global geometry, byte-
+    /// identical to the serial engine's rendering.
+    full_len: usize,
+    f16: bool,
+}
+
+/// Zero-copy worker memory: disjoint `&mut` slices of the real buffers.
+struct SlicedMem<'g> {
+    bufs: Vec<SBuf<'g>>,
+}
+
+impl GlobalMem for SlicedMem<'_> {
+    #[inline]
+    fn load(&self, buf: usize, i: i64) -> Result<f32, usize> {
+        let b = &self.bufs[buf];
+        let Ok(i) = usize::try_from(i) else {
+            return Err(b.full_len);
+        };
+        let v = match &b.view {
+            SView::Whole(d) => d.get(i),
+            // The analysis proved every in-buffer access of a written
+            // buffer lands in this worker's own slice, so a local miss
+            // is a genuine out-of-bounds of the full buffer.
+            SView::Slice { data, base } => {
+                i.checked_sub(*base).and_then(|local| data.get(local))
+            }
+        };
+        v.copied().ok_or(b.full_len)
+    }
+
+    #[inline]
+    fn store(&mut self, buf: usize, i: i64, v: f32) -> Result<(), usize> {
+        let b = &mut self.bufs[buf];
+        let v = if b.f16 { f32_to_f16_round(v) } else { v };
+        match &mut b.view {
+            SView::Whole(_) => unreachable!(
+                "store to a buffer with no store statements (analysis \
+                 marked it read-only)"
+            ),
+            SView::Slice { data, base } => {
+                let slot = usize::try_from(i)
+                    .ok()
+                    .and_then(|i| i.checked_sub(*base))
+                    .and_then(|local| data.get_mut(local));
+                match slot {
+                    Some(s) => {
+                        *s = v;
+                        Ok(())
+                    }
+                    None => Err(b.full_len),
+                }
+            }
+        }
+    }
+}
+
+struct Machine<'a, G: GlobalMem> {
     prog: &'a CompiledKernel,
-    global: &'a mut Vec<GBuf>,
+    /// Global-memory view: full buffers (serial / copy-merge chunk 0),
+    /// a tracked private copy (copy-merge worker) or disjoint slices of
+    /// the real buffers (zero-copy worker).
+    mem: G,
     shared: Vec<Vec<f32>>,
     /// Per-thread float registers, `thread * nf + slot`.
     fregs: Vec<f32>,
@@ -395,15 +788,17 @@ struct Machine<'a> {
     /// unless the program has checked (maybe-uninitialized) slot reads.
     f_init: Vec<bool>,
     i_init: Vec<bool>,
-    /// Per-buffer dirty maps recording every global element this machine
-    /// stored — maintained only for block-parallel workers (empty
-    /// otherwise), consumed by [`run_grid_parallel`]'s merge.
-    global_dirty: Vec<Vec<bool>>,
     /// Uninitialized *integer* slot read latched during an (infallible)
     /// integer evaluation; converted to `UnknownVar` at the next guard.
     pending_unknown: Cell<Option<u32>>,
     bx: i64,
     steps: u64,
+    /// Cumulative step-limit cap (usually [`STEP_LIMIT`]).
+    step_limit: u64,
+    /// Shared grid-wide step total: block-parallel workers charge their
+    /// ticks here so the limit is cumulative over the whole grid, like
+    /// the serial engine's accounting (None = serial, count locally).
+    steps_shared: Option<&'a AtomicU64>,
     /// Cooperative cancellation token (None = never polled).
     cancel: Option<&'a AtomicBool>,
     /// Step count at which the token is next polled (`u64::MAX` when no
@@ -411,23 +806,18 @@ struct Machine<'a> {
     cancel_check_at: u64,
 }
 
-impl<'a> Machine<'a> {
+impl<'a, G: GlobalMem> Machine<'a, G> {
     fn new(
         prog: &'a CompiledKernel,
-        global: &'a mut Vec<GBuf>,
+        mem: G,
         cancel: Option<&'a AtomicBool>,
-        track_writes: bool,
-    ) -> Machine<'a> {
+        steps_shared: Option<&'a AtomicU64>,
+        step_limit: u64,
+    ) -> Machine<'a, G> {
         let block = prog.block as usize;
-        let global_dirty = if track_writes {
-            global.iter().map(|g| vec![false; g.data.len()]).collect()
-        } else {
-            Vec::new()
-        };
         Machine {
             prog,
-            global,
-            global_dirty,
+            mem,
             shared: prog.shared.iter().map(|s| vec![0.0f32; s.len]).collect(),
             fregs: vec![0.0f32; block * prog.nf],
             iregs: vec![0i64; block * prog.ni],
@@ -444,6 +834,8 @@ impl<'a> Machine<'a> {
             pending_unknown: Cell::new(None),
             bx: 0,
             steps: 0,
+            step_limit,
+            steps_shared,
             cancel,
             cancel_check_at: if cancel.is_some() {
                 CANCEL_CHECK_STEPS
@@ -480,8 +872,20 @@ impl<'a> Machine<'a> {
     #[inline]
     fn tick(&mut self, n: u64) -> Result<(), InterpError> {
         self.steps += n;
-        if self.steps > STEP_LIMIT {
-            return Err(InterpError::IterationLimit);
+        match self.steps_shared {
+            // Grid-wide cumulative budget shared by all block-parallel
+            // workers of this launch — the serial engine's accounting.
+            Some(total) => {
+                let prev = total.fetch_add(n, Ordering::Relaxed);
+                if prev + n > self.step_limit {
+                    return Err(InterpError::IterationLimit);
+                }
+            }
+            None => {
+                if self.steps > self.step_limit {
+                    return Err(InterpError::IterationLimit);
+                }
+            }
         }
         if self.steps >= self.cancel_check_at {
             self.cancel_check_at = self.steps + CANCEL_CHECK_STEPS;
@@ -640,14 +1044,13 @@ impl<'a> Machine<'a> {
             CVExpr::LoadGlobal { buf, idx } => {
                 let i = self.eval_i(idx, t);
                 self.int_guard()?;
-                let d = &self.global[buf as usize].data;
-                match d.get(i as usize) {
-                    Some(v) => *v,
-                    None => {
+                match self.mem.load(buf as usize, i) {
+                    Ok(v) => v,
+                    Err(len) => {
                         return Err(EvalError::OutOfBounds {
                             buf: self.prog.params[buf as usize].name.clone(),
                             idx: i,
-                            len: d.len(),
+                            len,
                         })
                     }
                 }
@@ -978,21 +1381,13 @@ impl<'a> Machine<'a> {
     // ---- memory commits --------------------------------------------------
 
     fn store_global(&mut self, buf: u32, i: i64, v: f32) -> Result<(), InterpError> {
-        let len = self.global[buf as usize].data.len();
-        if i < 0 || i as usize >= len {
-            return Err(EvalError::OutOfBounds {
+        self.mem.store(buf as usize, i, v).map_err(|len| {
+            InterpError::from(EvalError::OutOfBounds {
                 buf: self.prog.params[buf as usize].name.clone(),
                 idx: i,
                 len,
-            }
-            .into());
-        }
-        let g = &mut self.global[buf as usize];
-        g.data[i as usize] = if g.f16 { f32_to_f16_round(v) } else { v };
-        if !self.global_dirty.is_empty() {
-            self.global_dirty[buf as usize][i as usize] = true;
-        }
-        Ok(())
+            })
+        })
     }
 
     fn store_shared(&mut self, buf: u32, i: i64, v: f32) -> Result<(), InterpError> {
@@ -1383,18 +1778,89 @@ mod tests {
         let mut serial = ExecEnv::for_kernel(&k, &dims);
         serial.set("x", x.clone());
         super::run_compiled(&prog, &mut serial).unwrap();
+        // Grid-stride kernel: not sliceable, so `allow_zero_copy: true`
+        // exercises the fallback too.
+        assert!(!prog.sliceable(), "grid-stride scale must not slice");
         for workers in [2usize, 3, 7, 8, 16, 0] {
+            for zero_copy in [false, true] {
+                let mut env = ExecEnv::for_kernel(&k, &dims);
+                env.set("x", x.clone());
+                super::run_compiled_with_opts(
+                    &prog,
+                    &mut env,
+                    RunOpts {
+                        grid_workers: workers,
+                        allow_zero_copy: zero_copy,
+                        ..RunOpts::default()
+                    },
+                )
+                .unwrap();
+                for name in ["x", "y"] {
+                    let a: Vec<u32> =
+                        serial.get(name).iter().map(|v| v.to_bits()).collect();
+                    let b: Vec<u32> =
+                        env.get(name).iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(a, b, "buffer {name} at grid_workers={workers}");
+                }
+            }
+        }
+    }
+
+    /// y[bx*B + tx] = 2*x[bx*B + tx]: one dense row per block — the
+    /// shape the write-interval analysis proves sliceable.
+    fn rowwise_kernel(grid: i64, block: u32) -> Kernel {
+        Kernel {
+            name: "rowwise".into(),
+            dims: vec![],
+            params: vec![
+                BufParam {
+                    name: "x".into(),
+                    dtype: DType::F32,
+                    len: c(grid * block as i64),
+                    io: BufIo::In,
+                },
+                BufParam {
+                    name: "y".into(),
+                    dtype: DType::F32,
+                    len: c(grid * block as i64),
+                    io: BufIo::Out,
+                },
+            ],
+            shared: vec![],
+            launch: Launch { grid: c(grid), block },
+            body: vec![store(
+                "y",
+                iadd(imul(bx(), bdim()), tx()),
+                fmul(load("x", iadd(imul(bx(), bdim()), tx())), fc(2.0)),
+            )],
+        }
+    }
+
+    #[test]
+    fn zero_copy_matches_serial_bitwise_and_counts_sliced_launches() {
+        let k = rowwise_kernel(8, 32);
+        let dims = DimEnv::new();
+        let prog = compile(&k, &dims).unwrap();
+        assert!(prog.sliceable(), "row-wise kernel must slice");
+        let x: Vec<f32> = (0..256).map(|i| (i as f32).cos()).collect();
+        let mut serial = ExecEnv::for_kernel(&k, &dims);
+        serial.set("x", x.clone());
+        super::run_compiled(&prog, &mut serial).unwrap();
+        let before = super::sliced_launches();
+        let mut runs = 0u64;
+        for workers in [2usize, 3, 7, 8, 16] {
             let mut env = ExecEnv::for_kernel(&k, &dims);
             env.set("x", x.clone());
             super::run_compiled_with_opts(
                 &prog,
                 &mut env,
                 RunOpts {
-                    cancel: None,
                     grid_workers: workers,
+                    ..RunOpts::default()
                 },
             )
             .unwrap();
+            runs += 1;
             for name in ["x", "y"] {
                 let a: Vec<u32> =
                     serial.get(name).iter().map(|v| v.to_bits()).collect();
@@ -1402,6 +1868,147 @@ mod tests {
                     env.get(name).iter().map(|v| v.to_bits()).collect();
                 assert_eq!(a, b, "buffer {name} at grid_workers={workers}");
             }
+        }
+        // Other tests may run concurrently in this process; the counter
+        // only ever grows, so the delta is at least our runs.
+        assert!(
+            super::sliced_launches() - before >= runs,
+            "every parallel run of a sliceable kernel must take the \
+             zero-copy path"
+        );
+    }
+
+    #[test]
+    fn zero_copy_respects_f16_store_rounding() {
+        let mut k = rowwise_kernel(4, 16);
+        k.params[0].dtype = DType::F16;
+        k.params[1].dtype = DType::F16;
+        let dims = DimEnv::new();
+        let prog = compile(&k, &dims).unwrap();
+        assert!(prog.sliceable());
+        let x = vec![1.0f32 + 2.0_f32.powi(-11); 64]; // not f16-exact
+        let mut serial = ExecEnv::for_kernel(&k, &dims);
+        serial.set("x", x.clone());
+        super::run_compiled(&prog, &mut serial).unwrap();
+        let mut env = ExecEnv::for_kernel(&k, &dims);
+        env.set("x", x);
+        super::run_compiled_with_opts(
+            &prog,
+            &mut env,
+            RunOpts {
+                grid_workers: 4,
+                ..RunOpts::default()
+            },
+        )
+        .unwrap();
+        let a: Vec<u32> = serial.get("y").iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = env.get("y").iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+        assert_eq!(env.get("y")[0], 2.0, "entry-rounded then doubled");
+    }
+
+    #[test]
+    fn step_limit_is_cumulative_across_grid_workers() {
+        // 8 blocks × ~2k steps each. A limit above one chunk's share but
+        // below the grid total must trip on BOTH engines at any worker
+        // count — the per-chunk budgets of the old engine would have
+        // slipped through at w=8.
+        let mut k = rowwise_kernel(8, 1);
+        k.body = vec![for_up(
+            "i",
+            c(0),
+            c(1000),
+            c(1),
+            vec![store("y", bx(), fc(1.0))],
+        )];
+        let dims = DimEnv::new();
+        let prog = compile(&k, &dims).unwrap();
+        // Measure the serial step count indirectly: a generous limit
+        // passes, a limit of half the total fails serially.
+        let generous = 1_000_000u64;
+        let mut env = ExecEnv::for_kernel(&k, &dims);
+        super::run_compiled_with_opts(
+            &prog,
+            &mut env,
+            RunOpts {
+                step_limit: Some(generous),
+                ..RunOpts::default()
+            },
+        )
+        .unwrap();
+        let tight = 8_000u64; // > one block's ~2k, < the ~16k grid total
+        let mut env = ExecEnv::for_kernel(&k, &dims);
+        let serial_err = super::run_compiled_with_opts(
+            &prog,
+            &mut env,
+            RunOpts {
+                step_limit: Some(tight),
+                ..RunOpts::default()
+            },
+        )
+        .unwrap_err();
+        assert!(matches!(serial_err, InterpError::IterationLimit));
+        for (workers, zero_copy) in [(8usize, true), (8, false), (2, true)] {
+            let mut env = ExecEnv::for_kernel(&k, &dims);
+            let err = super::run_compiled_with_opts(
+                &prog,
+                &mut env,
+                RunOpts {
+                    grid_workers: workers,
+                    allow_zero_copy: zero_copy,
+                    step_limit: Some(tight),
+                    ..RunOpts::default()
+                },
+            )
+            .unwrap_err();
+            assert!(
+                matches!(err, InterpError::IterationLimit),
+                "w={workers} zc={zero_copy}: cumulative budget must trip \
+                 ({err})"
+            );
+        }
+    }
+
+    #[test]
+    fn worker_budget_caps_grid_fanout() {
+        use crate::interp::WorkerBudget;
+        let k = rowwise_kernel(8, 32);
+        let dims = DimEnv::new();
+        let prog = compile(&k, &dims).unwrap();
+        let x: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        for cap in [1usize, 2] {
+            let budget = WorkerBudget::new(cap);
+            let mut env = ExecEnv::for_kernel(&k, &dims);
+            env.set("x", x.clone());
+            super::run_compiled_with_opts(
+                &prog,
+                &mut env,
+                RunOpts {
+                    grid_workers: 8,
+                    budget: Some(&budget),
+                    ..RunOpts::default()
+                },
+            )
+            .unwrap();
+            assert!(
+                budget.peak_live() <= cap,
+                "cap {cap}: peak {}",
+                budget.peak_live()
+            );
+            assert!(budget.peak_live() >= 1);
+            assert_eq!(env.get("y")[0], 0.0);
+            assert_eq!(env.get("y")[255], 255.0 * 2.0);
+        }
+    }
+
+    #[test]
+    fn auto_grid_workers_is_serial_below_four_blocks() {
+        assert_eq!(super::auto_grid_workers(1), 1);
+        assert_eq!(super::auto_grid_workers(3), 1);
+        let w = super::auto_grid_workers(4);
+        assert!(w >= 1 && w <= 4);
+        if thread::available_parallelism().map_or(1, |n| n.get()) >= 2 {
+            assert!(super::auto_grid_workers(64) >= 2);
         }
     }
 
@@ -1430,6 +2037,7 @@ mod tests {
             RunOpts {
                 cancel: Some(&token),
                 grid_workers: 4,
+                ..RunOpts::default()
             },
         )
         .unwrap_err();

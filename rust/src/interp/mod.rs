@@ -29,7 +29,7 @@
 //!   `coordinator_hotpath` bench's before/after comparison
 //!   (EXPERIMENTS.md §Perf).
 //!
-//! Three coordinator-facing extensions ride on the compiled engine:
+//! Four coordinator-facing extensions ride on the compiled engine:
 //! [`cache`] memoizes `compile` per (kernel structural hash, dims) so
 //! re-validating a beam survivor never recompiles (and an
 //! `Arc<CompileCache>` can be hoisted above whole optimization runs to
@@ -37,25 +37,35 @@
 //! serving pipeline); [`run_compiled_with_cancel`] threads a cooperative
 //! cancellation token through the machine's batched tick so parallel
 //! validation can stop sibling shapes once a candidate's verdict is
-//! known; and [`run_compiled_with_opts`] additionally fans a launch's
-//! *blocks* over scoped worker threads ([`RunOpts::grid_workers`]) with
-//! a deterministic by-block-index merge — `grid_workers = 1` is the
-//! serial engine byte-for-byte, and the three-way differential wall
-//! (`rust/tests/differential.rs`) pins reference ≡ serial compiled ≡
-//! block-parallel compiled at every tested worker count.
+//! known; [`run_compiled_with_opts`] additionally fans a launch's
+//! *blocks* over scoped worker threads ([`RunOpts::grid_workers`]) —
+//! zero-copy against disjoint `&mut` slices of the real buffers when
+//! the compile-time write-interval analysis proved the kernel
+//! block-sliceable ([`CompiledKernel::sliceable`]), copy-and-merge with
+//! a deterministic by-block-index merge otherwise — `grid_workers = 1`
+//! is the serial engine byte-for-byte, and the three-way differential
+//! wall (`rust/tests/differential.rs`) pins reference ≡ serial compiled
+//! ≡ block-parallel compiled on **both** grid paths at every tested
+//! worker count; and [`budget`] provides the process-wide
+//! [`WorkerBudget`] the fan-out layers share so candidates × shapes ×
+//! grid workers degrade gracefully to serial instead of oversubscribing
+//! the machine.
 
+pub mod budget;
 pub mod cache;
 mod compile;
 mod eval;
 mod machine;
 pub mod reference;
 
+pub use budget::WorkerBudget;
 pub use cache::{kernel_hash, CacheStats, CompileCache};
 pub use compile::{compile, CompiledKernel, ParamSlot, SharedSlot};
 pub use eval::{fastmath_quantize, WARP_SIZE};
 pub use machine::{
-    effective_grid_workers, run, run_compiled, run_compiled_with_cancel,
-    run_compiled_with_opts, Buffer, ExecEnv, InterpError, RunOpts,
+    auto_grid_workers, effective_grid_workers, run, run_compiled,
+    run_compiled_with_cancel, run_compiled_with_opts, sliced_launches,
+    Buffer, ExecEnv, InterpError, RunOpts,
 };
 
 use crate::ir::{DimEnv, Kernel};

@@ -53,7 +53,8 @@ fn print_usage() {
          \x20 optimize  [--kernel NAME] [--mode multi|single] [--rounds N]\n\
          \x20           [--seed N] [--temperature T] [--bug-rate P]\n\
          \x20           [--beam-width B] [--candidates K]\n\
-         \x20           [--grid-workers W] [--config FILE] [--trace]\n\
+         \x20           [--grid-workers W] [--worker-budget N]\n\
+         \x20           [--config FILE] [--trace]\n\
          \x20 bench     --table 2|3|4\n\
          \x20 casestudy --kernel NAME | --list\n\
          \x20 validate\n\
@@ -89,6 +90,7 @@ fn build_config(args: &[String]) -> Result<Config> {
         ("--beam-width", "beam_width"),
         ("--candidates", "candidates_per_round"),
         ("--grid-workers", "grid_workers"),
+        ("--worker-budget", "worker_budget"),
     ] {
         if let Some(v) = opt_value(args, flag) {
             config::apply(&mut cfg, &mut model, key, &v)?;

@@ -2,12 +2,14 @@
 //! tree-walking reference machine (`astra::interp::reference`), the
 //! serial slot-compiled engine (`astra::interp::run`) and the
 //! block-parallel compiled engine (`run_compiled_with_opts` with
-//! `grid_workers > 1`, at several worker counts including `num_cpus`)
-//! must produce **bit-identical** buffers — or the **same error
-//! rendering** — on every kernel, shape and transform the system can
-//! produce, and must agree with the SGLang-semantics oracle within each
-//! spec's tolerance. Error-path cases pin the "lowest failing block
-//! index wins" contract at every worker count.
+//! `grid_workers > 1`, at several worker counts including `num_cpus`,
+//! on **both** grid paths — the zero-copy sliced engine and the
+//! copy-and-merge fallback) must produce **bit-identical** buffers — or
+//! the **same error rendering** — on every kernel, shape and transform
+//! the system can produce, and must agree with the SGLang-semantics
+//! oracle within each spec's tolerance. Error-path cases pin the
+//! "lowest failing block index wins" contract at every worker count on
+//! both paths.
 //!
 //! Property-style cases use the in-repo deterministic PRNG (the offline
 //! vendor set carries no proptest); failing seeds are printed so every
@@ -27,12 +29,15 @@ fn worker_counts() -> Vec<usize> {
     vec![2, 7, ncpu]
 }
 
-/// Run the compiled engine block-parallel at `grid_workers`.
-fn run_parallel(
+/// Run the compiled engine block-parallel at `grid_workers`, on the
+/// zero-copy path (when the kernel's plan allows) or the copy-merge
+/// path (forced via `allow_zero_copy: false`).
+fn run_parallel_on(
     kernel: &Kernel,
     dims: &astra::ir::DimEnv,
     refs: &[(&str, Vec<f32>)],
     grid_workers: usize,
+    allow_zero_copy: bool,
 ) -> Result<interp::ExecEnv, InterpError> {
     let prog = interp::compile(kernel, dims)?;
     let mut env = interp::ExecEnv::for_kernel(kernel, dims);
@@ -43,11 +48,22 @@ fn run_parallel(
         &prog,
         &mut env,
         RunOpts {
-            cancel: None,
             grid_workers,
+            allow_zero_copy,
+            ..RunOpts::default()
         },
     )?;
     Ok(env)
+}
+
+/// [`run_parallel_on`] on the default (zero-copy when provable) path.
+fn run_parallel(
+    kernel: &Kernel,
+    dims: &astra::ir::DimEnv,
+    refs: &[(&str, Vec<f32>)],
+    grid_workers: usize,
+) -> Result<interp::ExecEnv, InterpError> {
+    run_parallel_on(kernel, dims, refs, grid_workers, true)
 }
 
 /// Both outcomes Ok with bit-identical buffers, or both Err with the
@@ -114,14 +130,16 @@ fn assert_engines_bit_identical(
         &format!("{ctx} [serial compiled]"),
     );
     for w in worker_counts() {
-        let par = run_parallel(kernel, dims, &refs, w);
-        assert_same_outcome(
-            &par,
-            &want,
-            dims,
-            seed,
-            &format!("{ctx} [grid_workers={w}]"),
-        );
+        for zero_copy in [true, false] {
+            let par = run_parallel_on(kernel, dims, &refs, w, zero_copy);
+            assert_same_outcome(
+                &par,
+                &want,
+                dims,
+                seed,
+                &format!("{ctx} [grid_workers={w} zero_copy={zero_copy}]"),
+            );
+        }
     }
 }
 
@@ -310,6 +328,99 @@ fn mid_grid_failure_reports_lowest_block_error_at_every_worker_count() {
             "grid_workers={w} must report block 2's error"
         );
     }
+}
+
+/// Error-path wall for the **zero-copy** engine specifically: a kernel
+/// the write-interval analysis proves sliceable (stores stay row-wise)
+/// whose blocks 2 and 5 fail via OOB *loads* of a read-only input
+/// buffer — loads of read-only buffers never defeat the slice plan, so
+/// these launches genuinely run sliced (pinned via the process-wide
+/// counter), and the reported error must still be the lowest failing
+/// block's at every worker count.
+#[test]
+fn zero_copy_mid_grid_failure_reports_lowest_block_error() {
+    use astra::ir::build::*;
+    use astra::ir::{BufIo, BufParam, DType, Launch};
+
+    let k = Kernel {
+        name: "midfail_sliced".into(),
+        dims: vec![],
+        params: vec![
+            BufParam {
+                name: "x".into(),
+                dtype: DType::F32,
+                len: c(64),
+                io: BufIo::In,
+            },
+            BufParam {
+                name: "y".into(),
+                dtype: DType::F32,
+                len: c(64),
+                io: BufIo::Out,
+            },
+        ],
+        shared: vec![],
+        launch: Launch { grid: c(8), block: 8 },
+        body: vec![
+            store(
+                "y",
+                iadd(imul(bx(), bdim()), tx()),
+                load("x", iadd(imul(bx(), bdim()), tx())),
+            ),
+            if_(
+                eq(bx(), c(5)),
+                vec![if_(
+                    eq(tx(), c(0)),
+                    vec![declf("p5", load("x", c(69)))],
+                )],
+            ),
+            if_(
+                eq(bx(), c(2)),
+                vec![if_(
+                    eq(tx(), c(0)),
+                    vec![declf("p2", load("x", c(66)))],
+                )],
+            ),
+        ],
+    };
+    let dims = astra::ir::DimEnv::new();
+    let prog = interp::compile(&k, &dims).unwrap();
+    assert!(
+        prog.sliceable(),
+        "OOB loads of a read-only buffer must not defeat the slice plan"
+    );
+    let x: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let refs: Vec<(&str, Vec<f32>)> = vec![("x", x)];
+
+    let want = interp::reference::run_with_inputs(&k, &dims, &refs)
+        .expect_err("reference must fail");
+    assert!(
+        want.to_string().contains("x[66]"),
+        "lowest failing block is 2 (load of x[66]): {want}"
+    );
+    let serial =
+        interp::run_with_inputs(&k, &dims, &refs).expect_err("serial must fail");
+    assert_eq!(serial.to_string(), want.to_string());
+
+    let before = interp::sliced_launches();
+    let ncpu = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let sweep = [2usize, 3, 4, 7, 8, ncpu];
+    // A count of 1 (single-core `ncpu`) runs the serial loop, which
+    // reports the same error but does not take the sliced path.
+    let expect_sliced = sweep.iter().filter(|&&w| w > 1).count() as u64;
+    for w in sweep {
+        let got = run_parallel(&k, &dims, &refs, w)
+            .expect_err("zero-copy parallel must fail too");
+        assert_eq!(
+            got.to_string(),
+            want.to_string(),
+            "grid_workers={w} must report block 2's error"
+        );
+    }
+    assert!(
+        interp::sliced_launches() - before >= expect_sliced,
+        "the sweep must have run on the zero-copy path"
+    );
 }
 
 /// UnknownVar parity wall (ROADMAP follow-on, closed): a register bound

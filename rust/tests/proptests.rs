@@ -146,6 +146,9 @@ fn prop_coordinator_never_ships_incorrect_kernels() {
             // must be identical at every setting, so the invariants
             // below must hold at all of them.
             grid_workers: 1 + rng.below(3),
+            // Worker budget 0 (= per core) through fully serial —
+            // scheduling only, the gate must hold at every capacity.
+            worker_budget: rng.below(4),
             model: GpuModel::h100(),
         };
         let greedy = cfg.beam_width == 1 && cfg.candidates_per_round == 1;
@@ -186,6 +189,117 @@ fn prop_coordinator_never_ships_incorrect_kernels() {
                     o.final_speedup,
                     spec.paper_name
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_zero_copy_and_copy_merge_agree_on_randomized_kernels() {
+    // The two block-parallel engines must produce identical outputs —
+    // and identical error *strings* — on randomized transform sequences
+    // at randomized worker counts. Error paths are exercised by
+    // injecting an out-of-bounds load of an input buffer in a randomly
+    // chosen block/thread (loads of read-only buffers never affect
+    // sliceability, so the poisoned kernels still take the zero-copy
+    // path when the original did).
+    use astra::ir::build::*;
+    use astra::ir::stmt::Stmt;
+
+    let mut rng = Prng::seed(0x2E20C0);
+    for spec in kernels::all_specs() {
+        for case in 0..CASES {
+            let mut k = (spec.build_baseline)();
+            let mut applied = Vec::new();
+            for _ in 0..3 {
+                let moves = transforms::applicable_moves(&k);
+                if moves.is_empty() {
+                    break;
+                }
+                let mv = *rng.choose(&moves);
+                k = transforms::apply(&k, mv).unwrap();
+                applied.push(mv.name());
+            }
+            let poison = rng.chance(0.4);
+            if poison {
+                // if (bx == X && tx == 0) { bad = in[huge] } — fails at
+                // a random block with a distinctive OOB rendering. Pick
+                // a pure-input buffer so reads stay unconstrained and
+                // sliceability (hence zero-copy coverage) is preserved.
+                let target = rng.below(4) as i64;
+                let in_buf = k
+                    .params
+                    .iter()
+                    .find(|p| matches!(p.io, astra::ir::BufIo::In))
+                    .unwrap_or(&k.params[0])
+                    .name
+                    .clone();
+                let bad = Stmt::If {
+                    cond: astra::ir::BExpr::And(
+                        Box::new(eq(bx(), c(target))),
+                        Box::new(eq(tx(), c(0))),
+                    ),
+                    then: vec![declf(
+                        "poison_probe",
+                        load(&in_buf, c(1_000_000_007 + target)),
+                    )],
+                    els: vec![],
+                };
+                k.body.insert(0, bad);
+            }
+            let dims = random_small_shape(&spec, &mut rng);
+            let seed = rng.next_u64();
+            let inputs = (spec.gen_inputs)(&dims, seed);
+            let refs: Vec<(&str, Vec<f32>)> = inputs
+                .iter()
+                .map(|(n, v)| (n.as_str(), v.clone()))
+                .collect();
+            let prog = match astra::interp::compile(&k, &dims) {
+                Ok(p) => p,
+                Err(_) => continue,
+            };
+            let workers = 2 + rng.below(7);
+            let mut envs = Vec::new();
+            let mut results = Vec::new();
+            for zero_copy in [true, false] {
+                let mut env = astra::interp::ExecEnv::for_kernel(&k, &dims);
+                for (name, data) in &refs {
+                    env.set(name, data.clone());
+                }
+                let r = astra::interp::run_compiled_with_opts(
+                    &prog,
+                    &mut env,
+                    astra::interp::RunOpts {
+                        grid_workers: workers,
+                        allow_zero_copy: zero_copy,
+                        ..astra::interp::RunOpts::default()
+                    },
+                );
+                envs.push(env);
+                results.push(r);
+            }
+            let ctx = format!(
+                "{} case {case} seq {applied:?} poison={poison} \
+                 workers={workers} dims={dims:?}",
+                spec.paper_name
+            );
+            match (&results[0], &results[1]) {
+                (Ok(()), Ok(())) => {
+                    for (name, buf) in &envs[0].bufs {
+                        let a: Vec<u32> =
+                            buf.data.iter().map(|v| v.to_bits()).collect();
+                        let b: Vec<u32> = envs[1]
+                            .get(name)
+                            .iter()
+                            .map(|v| v.to_bits())
+                            .collect();
+                        assert_eq!(a, b, "{ctx}: buffer {name}");
+                    }
+                }
+                (Err(a), Err(b)) => {
+                    assert_eq!(a.to_string(), b.to_string(), "{ctx}");
+                }
+                (a, b) => panic!("{ctx}: engines disagree: {a:?} vs {b:?}"),
             }
         }
     }
@@ -245,6 +359,7 @@ fn prop_cancelling_mid_grid_never_corrupts_completed_blocks() {
                     astra::interp::RunOpts {
                         cancel: Some(&token),
                         grid_workers: 4,
+                        ..astra::interp::RunOpts::default()
                     },
                 )
             });
@@ -273,8 +388,8 @@ fn prop_cancelling_mid_grid_never_corrupts_completed_blocks() {
         &prog,
         &mut env,
         astra::interp::RunOpts {
-            cancel: None,
             grid_workers: 4,
+            ..astra::interp::RunOpts::default()
         },
     )
     .unwrap();

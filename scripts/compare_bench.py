@@ -1,19 +1,23 @@
 #!/usr/bin/env python3
 """Compare two BENCH_hotpath.json files across CI runs.
 
-Fails (exit 1) when the slot-compiled interpreter's per-case time
-(`interpret_ms`) regresses by more than --max-regression on any kernel —
-the ROADMAP "perf trajectory in CI" gate. Search throughput
-(`search_cps`, candidates/sec; higher is better), the block-parallel
-interpreter numbers (`grid_parallel_ms` / `grid_parallel_speedup`,
-schema v3) and the cross-run compile-cache counters (`cross_run_cache`)
-are reported informationally so the trajectory is visible without
-flaking the build on scheduler noise in the end-to-end runs.
+Fails (exit 1) when a gated per-kernel metric regresses by more than
+--max-regression on any kernel — the ROADMAP "perf trajectory in CI"
+gate. Two metrics are gated: the slot-compiled interpreter's per-case
+time (`interpret_ms`) and, now that two grid paths exist, the
+copy-and-merge block-parallel time (`grid_parallel_ms`) so the fallback
+engine can't rot behind the zero-copy path. Search throughput
+(`search_cps`, candidates/sec; higher is better), the zero-copy grid
+numbers (`grid_zerocopy_ms` / `grid_zerocopy_speedup`, schema v4), the
+cross-run compile-cache counters (`cross_run_cache`) and the zero-copy
+launch counter (`sliced_launches`, schema v4) are reported
+informationally so the trajectory is visible without flaking the build
+on scheduler noise in the end-to-end runs.
 
 Older-schema files (v1 without `search_cps`, v2 without the grid and
-cache fields) compare cleanly: absent metrics are simply skipped, so the
-first run after a schema bump never fails on the artifact from before
-the bump.
+cache fields, v3 without the zero-copy fields) compare cleanly: absent
+metrics are simply skipped, so the first run after a schema bump never
+fails on the artifact from before the bump.
 
 Usage:
     python3 compare_bench.py <old.json> <new.json> [--max-regression 0.15]
@@ -27,6 +31,17 @@ import json
 import os
 import sys
 
+# Lower-is-better per-kernel metrics that fail the gate on regression.
+GATED = ["interpret_ms", "grid_parallel_ms"]
+
+# Informational per-kernel metrics: (name, label, format).
+INFORMATIONAL = [
+    ("search_cps", "search_cps", "{:>10.1f}"),
+    ("grid_parallel_speedup", "grid_par_x", "{:>10.2f}"),
+    ("grid_zerocopy_ms", "grid_zc_ms", "{:>10.4f}"),
+    ("grid_zerocopy_speedup", "grid_zc_x", "{:>10.2f}"),
+]
+
 
 def main() -> int:
     parser = argparse.ArgumentParser(description=__doc__)
@@ -36,7 +51,7 @@ def main() -> int:
         "--max-regression",
         type=float,
         default=0.15,
-        help="tolerated fractional interpret_ms increase (default 0.15)",
+        help="tolerated fractional increase of gated metrics (default 0.15)",
     )
     args = parser.parse_args()
 
@@ -55,46 +70,31 @@ def main() -> int:
             print(f"{name:<24} new kernel; no baseline")
             continue
 
-        if "interpret_ms" in prev and "interpret_ms" in cur and prev["interpret_ms"] > 0:
-            base, now = prev["interpret_ms"], cur["interpret_ms"]
-            delta = (now - base) / base
-            bad = delta > args.max_regression
-            print(
-                f"{name:<24} interpret_ms   {base:>10.4f} -> {now:>10.4f}"
-                f"  ({delta:+7.1%}) {'REGRESSION' if bad else 'ok'}"
-            )
-            if bad:
-                failures.append((name, delta))
+        for metric in GATED:
+            if prev.get(metric, 0) > 0 and metric in cur:
+                base, now = prev[metric], cur[metric]
+                delta = (now - base) / base
+                bad = delta > args.max_regression
+                print(
+                    f"{name:<24} {metric:<14} {base:>10.4f} -> {now:>10.4f}"
+                    f"  ({delta:+7.1%}) {'REGRESSION' if bad else 'ok'}"
+                )
+                if bad:
+                    failures.append((name, metric, delta))
 
-        # v2 schema: speculative-search throughput, informational.
-        if prev.get("search_cps", 0) > 0 and "search_cps" in cur:
-            base, now = prev["search_cps"], cur["search_cps"]
-            delta = (now - base) / base
-            print(
-                f"{name:<24} search_cps     {base:>10.1f} -> {now:>10.1f}"
-                f"  ({delta:+7.1%}) info"
-            )
-
-        # v3 schema: block-parallel interpreter, informational.
-        if prev.get("grid_parallel_ms", 0) > 0 and "grid_parallel_ms" in cur:
-            base, now = prev["grid_parallel_ms"], cur["grid_parallel_ms"]
-            delta = (now - base) / base
-            print(
-                f"{name:<24} grid_par_ms    {base:>10.4f} -> {now:>10.4f}"
-                f"  ({delta:+7.1%}) info"
-            )
-        if prev.get("grid_parallel_speedup", 0) > 0 and "grid_parallel_speedup" in cur:
-            base, now = prev["grid_parallel_speedup"], cur["grid_parallel_speedup"]
-            delta = (now - base) / base
-            print(
-                f"{name:<24} grid_par_x     {base:>10.2f} -> {now:>10.2f}"
-                f"  ({delta:+7.1%}) info"
-            )
-        elif "grid_parallel_speedup" in cur:
-            print(
-                f"{name:<24} grid_par_x     {'':>10} -> "
-                f"{cur['grid_parallel_speedup']:>10.2f}  (vs serial) info"
-            )
+        for metric, label, fmt in INFORMATIONAL:
+            if prev.get(metric, 0) > 0 and metric in cur:
+                base, now = prev[metric], cur[metric]
+                delta = (now - base) / base
+                print(
+                    f"{name:<24} {label:<14} {fmt.format(base)} -> "
+                    f"{fmt.format(now)}  ({delta:+7.1%}) info"
+                )
+            elif metric in cur:
+                print(
+                    f"{name:<24} {label:<14} {'':>10} -> "
+                    f"{fmt.format(cur[metric])}  (new metric) info"
+                )
 
     # v3 schema: cross-run shared-cache counters, informational.
     cross = new.get("cross_run_cache")
@@ -106,11 +106,22 @@ def main() -> int:
             f"(first: {cross.get('first_misses', 0)} misses) info"
         )
 
-    if failures:
-        worst = max(d for _, d in failures)
+    # v4 schema: zero-copy launch counter, informational.
+    if "sliced_launches" in new:
+        prev_sliced = old.get("sliced_launches")
+        suffix = f" (was {prev_sliced})" if prev_sliced is not None else ""
         print(
-            f"\n{len(failures)} kernel(s) regressed interpreter throughput "
-            f"beyond {args.max_regression:.0%} (worst {worst:+.1%})"
+            f"{'sliced_launches':<24} {new['sliced_launches']} zero-copy "
+            f"launches this run{suffix} info"
+        )
+
+    if failures:
+        worst = max(d for _, _, d in failures)
+        metrics = sorted({m for _, m, _ in failures})
+        print(
+            f"\n{len(failures)} gated regression(s) beyond "
+            f"{args.max_regression:.0%} in {', '.join(metrics)} "
+            f"(worst {worst:+.1%})"
         )
         return 1
     print("\nbench comparison clean")

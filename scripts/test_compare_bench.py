@@ -5,9 +5,12 @@ Run directly (no pytest in the offline image):
 
     python3 scripts/test_compare_bench.py
 
-Covers: regression above threshold fails, below passes, missing
-previous-run file skips cleanly, and older-schema (v1/v2) baselines
-compare without crashing against v3 output.
+Covers: regression above threshold fails (for both gated metrics —
+interpret_ms and, since schema v4, grid_parallel_ms), below passes,
+missing previous-run file skips cleanly, older-schema (v1/v2/v3)
+baselines compare without crashing against v4 output, and the v4
+informational fields (grid_zerocopy_ms, sliced_launches) are reported
+without gating.
 """
 
 import json
@@ -33,7 +36,8 @@ def kernel_row(interpret_ms, **extra):
     return row
 
 
-def bench_json(interpret_ms, schema="astra-hotpath-v3", cross=True, **extra):
+def bench_json(interpret_ms, schema="astra-hotpath-v4", cross=True,
+               sliced=None, **extra):
     doc = {
         "schema": schema,
         "kernels": {
@@ -48,6 +52,8 @@ def bench_json(interpret_ms, schema="astra-hotpath-v3", cross=True, **extra):
             "second_run_hits": 36,
             "second_run_misses": 0,
         }
+    if sliced is not None:
+        doc["sliced_launches"] = sliced
     return doc
 
 
@@ -151,6 +157,67 @@ class CompareBenchTest(unittest.TestCase):
         new_doc["kernels"]["silu_and_mul"]["interpret_ms"] = 5.0
         new = self.write("new.json", new_doc)
         self.assertEqual(self.run_main(old, new, 0.15), 1)
+
+    def test_grid_parallel_regression_fails_the_gate(self):
+        # Schema v4 gates the copy-merge grid path too: the fallback
+        # engine must not rot behind the zero-copy path.
+        old = self.write(
+            "old.json", bench_json(1.0, grid_parallel_ms=2.0)
+        )
+        new = self.write(
+            "new.json", bench_json(1.0, grid_parallel_ms=3.0)  # +50%
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 1)
+
+    def test_grid_parallel_within_tolerance_passes(self):
+        old = self.write(
+            "old.json", bench_json(1.0, grid_parallel_ms=2.0)
+        )
+        new = self.write(
+            "new.json", bench_json(1.0, grid_parallel_ms=2.2)  # +10%
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_zerocopy_fields_are_informational_only(self):
+        # A huge grid_zerocopy_ms regression must NOT fail the gate —
+        # it is reported info-only (the gated copy-merge row guards the
+        # grid engines' floor).
+        old = self.write(
+            "old.json",
+            bench_json(1.0, grid_parallel_ms=2.0, grid_zerocopy_ms=0.5,
+                       grid_zerocopy_speedup=4.0, sliced=100),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0, grid_parallel_ms=2.0, grid_zerocopy_ms=5.0,
+                       grid_zerocopy_speedup=0.4, sliced=7),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_older_v3_schema_baseline_is_graceful(self):
+        # v3: grid_parallel fields present, zero-copy fields and
+        # sliced_launches absent — the first v4 run must still gate
+        # interpret_ms and grid_parallel_ms against it.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, schema="astra-hotpath-v3",
+                       grid_parallel_ms=2.0, grid_parallel_speedup=2.5,
+                       interpret_large_ms=5.0, search_cps=40.0),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0, grid_parallel_ms=2.1, grid_parallel_speedup=2.4,
+                       interpret_large_ms=5.0, search_cps=42.0,
+                       grid_zerocopy_ms=0.6, grid_zerocopy_speedup=8.0,
+                       sliced=64),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+        # And a grid_parallel regression against a v3 baseline fails.
+        worse = self.write(
+            "worse.json",
+            bench_json(1.0, grid_parallel_ms=3.0, sliced=64),
+        )
+        self.assertEqual(self.run_main(old, worse, 0.15), 1)
 
 
 if __name__ == "__main__":
