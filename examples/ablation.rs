@@ -135,4 +135,49 @@ fn main() {
         }
         println!();
     }
+
+    // ---- 6. adaptive speculation scheduler -------------------------------
+    // EXPERIMENTS.md §Adaptive-K: the static B x K grid above is the
+    // baseline; the adaptive rows spend K only where the planner's
+    // priority gap says speculation pays, and cancel a round's
+    // stragglers once `round_budget` candidates evaluated with one
+    // strictly better. Compare speedup / candidates evaluated / wall
+    // clock against the matching static row (B=2 K=3).
+    println!(
+        "\n== Ablation 6: adaptive K + round cancellation vs static B=2 K=3 =="
+    );
+    let static_beam = Config {
+        bug_rate: 0.0,
+        temperature: 0.0,
+        ..Config::multi_agent_beam()
+    };
+    let adaptive = Config {
+        bug_rate: 0.0,
+        temperature: 0.0,
+        ..Config::multi_agent_adaptive()
+    };
+    let mut adaptive_nocancel = adaptive.clone();
+    adaptive_nocancel.round_budget = 0;
+    for (label, cfg) in [
+        ("static   B=2 K=3         ", &static_beam),
+        ("adaptive  K<=3 (no cancel)", &adaptive_nocancel),
+        ("adaptive  K<=3 + budget 3 ", &adaptive),
+    ] {
+        print!("  {label}:");
+        for spec in kernels::all_specs() {
+            let t0 = std::time::Instant::now();
+            let o = optimize(&spec, cfg);
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            print!(
+                "  K{} {:.2}x ({} cands, {} shrunk, {} cancelled, {:.0} ms)",
+                spec.index,
+                o.final_speedup,
+                o.candidates_evaluated,
+                o.adaptive_k_rounds,
+                o.cancelled_candidates,
+                ms
+            );
+        }
+        println!();
+    }
 }

@@ -58,6 +58,19 @@ struct KernelRow {
     /// Speculative-search throughput: candidates validated+profiled
     /// per second in the beam run.
     search_cps: f64,
+    /// Full adaptive-scheduler run median (schema v5): the beam preset
+    /// with gap-driven K + round cancellation
+    /// (`Config::multi_agent_adaptive`).
+    adaptive_optimize_ms: f64,
+    /// Planning events where the adaptive scheduler shrank K below the
+    /// ceiling (deterministic; from the run's `Outcome`).
+    adaptive_k_rounds: usize,
+    /// Candidates canonically abandoned by beam-round cancellation
+    /// (deterministic).
+    cancelled_candidates: usize,
+    /// Histogram of chosen K per planning event: `k_hist[k - 1]` =
+    /// events sized at K = k (rendered as a JSON object).
+    k_hist: Vec<usize>,
 }
 
 /// Cross-run shared-cache counters: two identical `optimize_all_parallel`
@@ -248,6 +261,38 @@ fn main() {
         );
     }
 
+    // Adaptive speculation scheduler (schema v5): the same beam ceiling
+    // with priority-gap-driven K and round cancellation. The run is
+    // deterministic, so one untimed pass collects the scheduler
+    // telemetry (chosen-K histogram, shrink events, cancelled
+    // candidates) and the timed passes only measure.
+    println!();
+    let adaptive_cfg = Config {
+        bug_rate: 0.0,
+        temperature: 0.0,
+        ..Config::multi_agent_adaptive()
+    };
+    let k_ceiling = adaptive_cfg.candidates_per_round;
+    for (spec, row) in kernels::all_specs().iter().zip(&mut rows) {
+        let out = optimize(spec, &adaptive_cfg);
+        row.adaptive_k_rounds = out.adaptive_k_rounds;
+        row.cancelled_candidates = out.cancelled_candidates;
+        row.k_hist = vec![0usize; k_ceiling];
+        for k in &out.k_per_round {
+            row.k_hist[k - 1] += 1;
+        }
+        let s = bench(1, 5, || optimize(spec, &adaptive_cfg));
+        row.adaptive_optimize_ms = s.median_ms();
+        println!(
+            "adaptive-optimize {:<15} median {:>8.1} ms/run (K shrunk {}x, {} cancelled, K hist {:?})",
+            spec.paper_name,
+            s.median_ms(),
+            row.adaptive_k_rounds,
+            row.cancelled_candidates,
+            row.k_hist
+        );
+    }
+
     // Cross-run shared compile cache: two identical optimize-all batches
     // over one Arc'd cache — the second must be (nearly) hit-only, and
     // the counters land in the JSON so CI can watch the reuse rate.
@@ -293,8 +338,15 @@ fn render_json(
     sliced_launches: u64,
 ) -> String {
     let mut out = String::new();
-    out.push_str("{\n  \"schema\": \"astra-hotpath-v4\",\n  \"kernels\": {\n");
+    out.push_str("{\n  \"schema\": \"astra-hotpath-v5\",\n  \"kernels\": {\n");
     for (i, r) in rows.iter().enumerate() {
+        let k_hist = r
+            .k_hist
+            .iter()
+            .enumerate()
+            .map(|(k, n)| format!("\"{}\": {}", k + 1, n))
+            .collect::<Vec<_>>()
+            .join(", ");
         out.push_str(&format!(
             "    \"{}\": {{\n      \"simulate_us\": {:.3},\n      \
              \"interpret_ref_ms\": {:.4},\n      \"interpret_ms\": {:.4},\n      \
@@ -306,7 +358,11 @@ fn render_json(
              \"grid_zerocopy_speedup\": {:.2},\n      \
              \"transform_all_us\": {:.3},\n      \
              \"optimize_ms\": {:.3},\n      \"beam_optimize_ms\": {:.3},\n      \
-             \"search_cps\": {:.1}\n    }}{}\n",
+             \"search_cps\": {:.1},\n      \
+             \"adaptive_optimize_ms\": {:.3},\n      \
+             \"adaptive_k_rounds\": {},\n      \
+             \"cancelled_candidates\": {},\n      \
+             \"k_histogram\": {{{}}}\n    }}{}\n",
             r.name,
             r.simulate_us,
             r.interpret_ref_ms,
@@ -321,6 +377,10 @@ fn render_json(
             r.optimize_ms,
             r.beam_optimize_ms,
             r.search_cps,
+            r.adaptive_optimize_ms,
+            r.adaptive_k_rounds,
+            r.cancelled_candidates,
+            k_hist,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }

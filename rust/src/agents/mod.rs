@@ -14,7 +14,7 @@ pub mod single_agent;
 pub mod testing;
 
 pub use coding::{CodingAgent, CodingOutcome};
-pub use planning::{MockLlm, PlannerPolicy, Suggestion};
+pub use planning::{priority_gap, MockLlm, PlannerPolicy, Suggestion};
 pub use profiling::{ProfileReport, ProfilingAgent};
 pub use single_agent::SingleAgentPlanner;
 pub use testing::{TestQuality, TestReport, TestSuite, TestingAgent};

@@ -184,6 +184,33 @@ impl PlannerPolicy for MockLlm {
     }
 }
 
+/// Normalized dominance of the top-ranked suggestion — the signal the
+/// adaptive speculation scheduler sizes each round's candidate set
+/// from (`coordinator/search.rs`): `0.0` means the two best
+/// suggestions are tied (speculation pays — evaluate many), `1.0`
+/// means one move dominates the whole ranking (or is the only one —
+/// save the budget). Computed as the gap between the top two
+/// priorities, normalized by the ranking's full span, so it is
+/// invariant under affine rescaling of the planner's scores.
+///
+/// Expects `suggestions` sorted by descending priority (what
+/// [`PlannerPolicy::suggest`] returns).
+pub fn priority_gap(suggestions: &[Suggestion]) -> f64 {
+    if suggestions.len() <= 1 {
+        // Nothing (or nothing else) to speculate on: fully dominant.
+        return 1.0;
+    }
+    let top = suggestions[0].priority;
+    let second = suggestions[1].priority;
+    let last = suggestions[suggestions.len() - 1].priority;
+    let span = top - last;
+    if span <= 0.0 {
+        // Flat ranking: every suggestion tied.
+        return 0.0;
+    }
+    ((top - second) / span).clamp(0.0, 1.0)
+}
+
 fn frac(profile: &ProfileReport, which: Bottleneck) -> f64 {
     let mut acc = 0.0;
     for r in &profile.per_shape {
@@ -291,6 +318,47 @@ mod tests {
         assert!(reordered, "high temperature should shuffle rankings");
     }
 
+    fn sugg(priority: f64) -> Suggestion {
+        Suggestion {
+            mv: Move::Hoist,
+            rationale: String::new(),
+            priority,
+        }
+    }
+
+    #[test]
+    fn priority_gap_spans_tied_to_dominant() {
+        // Empty / singleton rankings are fully dominant.
+        assert_eq!(priority_gap(&[]), 1.0);
+        assert_eq!(priority_gap(&[sugg(5.0)]), 1.0);
+        // Flat ranking: tied.
+        assert_eq!(priority_gap(&[sugg(3.0), sugg(3.0), sugg(3.0)]), 0.0);
+        // Top two tied, tail lower: still tied at the top.
+        assert_eq!(priority_gap(&[sugg(9.0), sugg(9.0), sugg(1.0)]), 0.0);
+        // Top dominates the whole span.
+        assert_eq!(priority_gap(&[sugg(9.0), sugg(1.0), sugg(1.0)]), 1.0);
+        // Halfway: gap is half the span.
+        let g = priority_gap(&[sugg(9.0), sugg(5.0), sugg(1.0)]);
+        assert!((g - 0.5).abs() < 1e-12, "{g}");
+        // Affine rescaling leaves the gap unchanged.
+        let a = priority_gap(&[sugg(9.0), sugg(7.0), sugg(1.0)]);
+        let b = priority_gap(&[sugg(90.0), sugg(70.0), sugg(10.0)]);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn planner_rankings_feed_the_gap_signal() {
+        // The shipped policy produces multi-suggestion rankings whose
+        // gap is a usable scheduling signal (finite, in [0, 1]).
+        let spec = kernels::merge::spec();
+        let k = (spec.build_baseline)();
+        let (t, p) = profile_of(&spec, &k);
+        let s = MockLlm::new(0.0, 1).suggest(&k, &t, &p);
+        assert!(s.len() >= 2);
+        let g = priority_gap(&s);
+        assert!((0.0..=1.0).contains(&g), "{g}");
+    }
+
     #[test]
     fn failing_tests_restrict_to_safe_moves() {
         let spec = kernels::merge::spec();
@@ -303,6 +371,7 @@ mod tests {
             failure: None,
             cases: 3,
             cancelled_cases: 0,
+            round_cancelled: false,
         };
         let mut llm = MockLlm::new(0.0, 1);
         let s = llm.suggest(&k, &failing, &p);

@@ -160,6 +160,7 @@ mod tests {
             failure: None,
             cases: 1,
             cancelled_cases: 0,
+            round_cancelled: false,
         };
         let mut sa = SingleAgentPlanner::new(0.0, 1);
         assert!(sa.suggest(&k, &failing, &p).is_empty());

@@ -172,6 +172,13 @@ pub struct TestReport {
     /// the report was merged (0 when every shape ran to completion).
     /// Diagnostic only: the merged verdict is unaffected.
     pub cancelled_cases: usize,
+    /// The whole validation was abandoned by a beam-round token
+    /// ([`TestingAgent::validate_cancellable`]): the verdict fields are
+    /// meaningless and the caller must either discard the report or
+    /// re-run the validation (the search layer's deterministic repair
+    /// pass does exactly that). Always `false` on the plain
+    /// [`validate`](TestingAgent::validate) paths.
+    pub round_cancelled: bool,
 }
 
 /// The testing agent.
@@ -279,10 +286,61 @@ impl TestingAgent {
         suite: &TestSuite,
         cache: Option<&CompileCache>,
     ) -> TestReport {
+        self.validate_impl(spec, kernel, suite, cache, None)
+    }
+
+    /// [`validate_with`](Self::validate_with) for one *speculative beam
+    /// candidate*: the search layer owns this candidate's cancellation
+    /// token (`candidate_cancel`, playing the role of the internal
+    /// per-validation token — a shape failure still raises it for
+    /// sibling shapes only), and layers the per-round `round_cancel`
+    /// token over it: when a strictly-better sibling exhausts the
+    /// round's speculation budget, the search layer raises the round
+    /// token *and then* every candidate token, so in-flight machines
+    /// stand down at their next batched tick. A validation abandoned
+    /// this way returns `round_cancelled = true` and performs **no**
+    /// serial repair — the search layer's canonical repair pass decides
+    /// (deterministically) whether this candidate's true report is
+    /// needed and re-runs it serially if so.
+    ///
+    /// This path deliberately takes **no compile cache**: how far a
+    /// cancelled validation got is a race, and routing its lookups
+    /// through the shared counters would make a run's hit/miss stats
+    /// nondeterministic (the same currency trade as the shape-repair
+    /// pass below).
+    pub fn validate_cancellable(
+        &self,
+        spec: &KernelSpec,
+        kernel: &Kernel,
+        suite: &TestSuite,
+        candidate_cancel: &AtomicBool,
+        round_cancel: &AtomicBool,
+    ) -> TestReport {
+        self.validate_impl(
+            spec,
+            kernel,
+            suite,
+            None,
+            Some((candidate_cancel, round_cancel)),
+        )
+    }
+
+    fn validate_impl(
+        &self,
+        spec: &KernelSpec,
+        kernel: &Kernel,
+        suite: &TestSuite,
+        cache: Option<&CompileCache>,
+        round: Option<(&AtomicBool, &AtomicBool)>,
+    ) -> TestReport {
         let seed = suite.seed;
         let grid_workers = self.grid_workers;
         let budget = self.budget.as_deref();
-        let cancel = AtomicBool::new(false);
+        let owned_cancel = AtomicBool::new(false);
+        let (cancel, round_cancel) = match round {
+            Some((candidate, rnd)) => (candidate, Some(rnd)),
+            None => (&owned_cancel, None),
+        };
         let shapes = &suite.correctness_shapes;
         // The shapes are a work queue drained by `1 + granted` workers
         // (the caller is the first); results land by shape index, so the
@@ -295,12 +353,37 @@ impl TestingAgent {
                     &shapes[i],
                     seed,
                     cache,
-                    &cancel,
+                    cancel,
                     grid_workers,
                     budget,
                 )
             });
         let cancelled_cases = outcomes.iter().filter(|o| o.cancelled).count();
+
+        // Beam-round abandonment: when the round token is up, the
+        // verdict no longer matters — skip the serial repair entirely
+        // and hand the (deterministic) decision back to the search
+        // layer. The second clause covers the raise ordering corner: a
+        // machine can observe its candidate token (raised *after* the
+        // round token) before this thread reads the round flag, so
+        // cancelled cases with no local failure to explain them are
+        // treated as round-cancelled too.
+        if let Some(rnd) = round_cancel {
+            let any_failure = outcomes.iter().any(|o| o.failure.is_some());
+            if rnd.load(Ordering::SeqCst)
+                || (cancelled_cases > 0 && !any_failure)
+            {
+                return TestReport {
+                    pass: false,
+                    max_rel_err: 0.0,
+                    max_abs_err: 0.0,
+                    failure: None,
+                    cases: 0,
+                    cancelled_cases,
+                    round_cancelled: true,
+                };
+            }
+        }
 
         // Serial-equivalent repair: re-run any cancelled case that
         // precedes the first real failure. The re-run bypasses the
@@ -338,6 +421,7 @@ impl TestingAgent {
                     failure: Some(f.clone()),
                     cases,
                     cancelled_cases,
+                    round_cancelled: false,
                 };
             }
             debug_assert!(!o.cancelled, "repair loop left a readable case cancelled");
@@ -353,6 +437,7 @@ impl TestingAgent {
             failure: None,
             cases,
             cancelled_cases,
+            round_cancelled: false,
         }
     }
 }
@@ -646,6 +731,53 @@ mod tests {
         assert_eq!(a.cases, b.cases);
         assert_eq!(a.max_rel_err.to_bits(), b.max_rel_err.to_bits());
         assert_eq!(a.max_abs_err.to_bits(), b.max_abs_err.to_bits());
+    }
+
+    #[test]
+    fn round_cancellable_validation_matches_plain_when_never_cancelled() {
+        // With the round token never raised, the cancellable path must
+        // report byte-identically to the plain (uncached) path — pass
+        // and fail cases both.
+        let spec = kernels::silu::spec();
+        let agent = TestingAgent::new(TestQuality::Representative, 41);
+        let suite = agent.generate_tests(&spec);
+        let good = (spec.build_baseline)();
+        let mut bad = (spec.build_baseline)();
+        use crate::ir::build::*;
+        bad.body.push(store("out", imul(dim("B"), dim("D")), fc(0.0)));
+        for kernel in [&good, &bad] {
+            let want = agent.validate_with(&spec, kernel, &suite, None);
+            let candidate = AtomicBool::new(false);
+            let round = AtomicBool::new(false);
+            let got = agent
+                .validate_cancellable(&spec, kernel, &suite, &candidate, &round);
+            assert!(!got.round_cancelled);
+            assert_eq!(want.pass, got.pass);
+            assert_eq!(want.cases, got.cases);
+            assert_eq!(want.failure, got.failure);
+            assert_eq!(want.max_rel_err.to_bits(), got.max_rel_err.to_bits());
+            assert_eq!(want.max_abs_err.to_bits(), got.max_abs_err.to_bits());
+            assert!(!round.load(Ordering::SeqCst), "validation never raises the round token");
+        }
+    }
+
+    #[test]
+    fn raised_round_token_abandons_the_validation() {
+        // Round token up before the validation starts (the layered
+        // raise also set the candidate token): the machines stand down
+        // at their first tick and the report says so instead of
+        // guessing a verdict.
+        let spec = kernels::silu::spec();
+        let agent = TestingAgent::new(TestQuality::Representative, 42);
+        let suite = agent.generate_tests(&spec);
+        let k = (spec.build_baseline)();
+        let candidate = AtomicBool::new(true);
+        let round = AtomicBool::new(true);
+        let r = agent.validate_cancellable(&spec, &k, &suite, &candidate, &round);
+        assert!(r.round_cancelled);
+        assert!(!r.pass);
+        assert_eq!(r.cases, 0);
+        assert!(r.failure.is_none());
     }
 
     #[test]

@@ -15,6 +15,18 @@
 //! beam_width = 2
 //! candidates_per_round = 3
 //!
+//! # adaptive speculation scheduler: size K per round from the
+//! # planner's normalized priority gap (tied suggestions -> full K,
+//! # a dominant one -> the floor); gap threshold 0 = static K
+//! adaptive_candidates = true
+//! adaptive_min_candidates = 1
+//! adaptive_gap_threshold = 0.5
+//!
+//! # beam-round cancellation: abandon a round's stragglers once this
+//! # many candidates evaluated and one measured strictly better
+//! # (0 = never cancel)
+//! round_budget = 3
+//!
 //! # block-parallel grid execution in the validation interpreter
 //! # (1 = serial engine byte-for-byte, 0 = auto: picked per launch
 //! # from the compiled grid — serial under 4 blocks, per-core above)
@@ -87,6 +99,26 @@ pub fn apply(
                 return Err(anyhow!("candidates_per_round must be >= 1"));
             }
         }
+        "adaptive_candidates" => cfg.adaptive_candidates = parse_bool(value)?,
+        "adaptive_min_candidates" => {
+            cfg.adaptive_min_candidates = value.parse()?;
+            if cfg.adaptive_min_candidates == 0 {
+                return Err(anyhow!("adaptive_min_candidates must be >= 1"));
+            }
+        }
+        "adaptive_gap_threshold" => {
+            cfg.adaptive_gap_threshold = value.parse()?;
+            if !cfg.adaptive_gap_threshold.is_finite()
+                || cfg.adaptive_gap_threshold < 0.0
+            {
+                return Err(anyhow!(
+                    "adaptive_gap_threshold must be finite and >= 0 \
+                     (0 = static K)"
+                ));
+            }
+        }
+        // 0 is meaningful here: never cancel a round's stragglers.
+        "round_budget" => cfg.round_budget = value.parse()?,
         // 0 is meaningful here: auto, picked per launch from the grid.
         "grid_workers" => cfg.grid_workers = value.parse()?,
         // 0 is meaningful here too: one worker per available core.
@@ -110,6 +142,64 @@ pub fn apply(
         other => return Err(anyhow!("unknown config key {other}")),
     }
     Ok(())
+}
+
+/// Parse a boolean key (`true`/`false`, `1`/`0`, `on`/`off`).
+fn parse_bool(value: &str) -> Result<bool> {
+    match value {
+        "true" | "1" | "on" => Ok(true),
+        "false" | "0" | "off" => Ok(false),
+        other => Err(anyhow!("expected a boolean, got {other}")),
+    }
+}
+
+/// Render a [`Config`] back into the key = value file format. Every
+/// supported key is written, so `parse(&render(cfg))` reproduces `cfg`
+/// exactly (round-trip test below) — the contract that keeps the
+/// config file and the CLI flags covering the same surface.
+pub fn render(cfg: &Config) -> String {
+    let m = &cfg.model;
+    format!(
+        "mode = \"{}\"\n\
+         rounds = {}\n\
+         seed = {}\n\
+         bug_rate = {}\n\
+         temperature = {}\n\
+         beam_width = {}\n\
+         candidates_per_round = {}\n\
+         adaptive_candidates = {}\n\
+         adaptive_min_candidates = {}\n\
+         adaptive_gap_threshold = {}\n\
+         round_budget = {}\n\
+         grid_workers = {}\n\
+         worker_budget = {}\n\
+         launch_overhead_us = {}\n\
+         dram_bw = {}\n\
+         sms = {}\n\
+         freq_hz = {}\n\
+         mem_latency_cycles = {}\n",
+        match cfg.mode {
+            AgentMode::Multi => "multi",
+            AgentMode::Single => "single",
+        },
+        cfg.rounds,
+        cfg.seed,
+        cfg.bug_rate,
+        cfg.temperature,
+        cfg.beam_width,
+        cfg.candidates_per_round,
+        cfg.adaptive_candidates,
+        cfg.adaptive_min_candidates,
+        cfg.adaptive_gap_threshold,
+        cfg.round_budget,
+        cfg.grid_workers,
+        cfg.worker_budget,
+        m.launch_overhead_us,
+        m.dram_bw,
+        m.sms,
+        m.freq_hz,
+        m.mem_latency_cycles,
+    )
 }
 
 #[cfg(test)]
@@ -175,6 +265,103 @@ mod tests {
         let cfg = parse("").unwrap();
         assert_eq!(cfg.worker_budget, 0, "default is per-core");
         assert!(parse("worker_budget = nah\n").is_err());
+    }
+
+    #[test]
+    fn parses_adaptive_keys_and_rejects_nonsense() {
+        let cfg = parse(
+            "adaptive_candidates = true\nadaptive_min_candidates = 2\n\
+             adaptive_gap_threshold = 0.25\nround_budget = 4\n",
+        )
+        .unwrap();
+        assert!(cfg.adaptive_candidates);
+        assert_eq!(cfg.adaptive_min_candidates, 2);
+        assert!((cfg.adaptive_gap_threshold - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.round_budget, 4);
+        for on in ["1", "on", "true"] {
+            assert!(parse(&format!("adaptive_candidates = {on}\n"))
+                .unwrap()
+                .adaptive_candidates);
+        }
+        for off in ["0", "off", "false"] {
+            assert!(!parse(&format!("adaptive_candidates = {off}\n"))
+                .unwrap()
+                .adaptive_candidates);
+        }
+        assert!(parse("adaptive_candidates = maybe\n").is_err());
+        assert!(parse("adaptive_min_candidates = 0\n").is_err());
+        assert!(parse("adaptive_gap_threshold = -0.5\n").is_err());
+        assert!(parse("adaptive_gap_threshold = nan\n").is_err());
+        assert!(parse("round_budget = nah\n").is_err());
+        // Threshold 0 parses fine: it is the static-K off switch.
+        let cfg = parse("adaptive_gap_threshold = 0\n").unwrap();
+        assert_eq!(cfg.adaptive_gap_threshold, 0.0);
+        // Defaults leave the scheduler off and the round uncancelled.
+        let cfg = parse("").unwrap();
+        assert!(!cfg.adaptive_candidates);
+        assert_eq!(cfg.round_budget, 0);
+    }
+
+    #[test]
+    fn render_parse_round_trips_every_key() {
+        let mut custom = Config::multi_agent_adaptive();
+        custom.rounds = 7;
+        custom.seed = 123;
+        custom.bug_rate = 0.35;
+        custom.temperature = 0.75;
+        custom.beam_width = 3;
+        custom.candidates_per_round = 4;
+        custom.adaptive_min_candidates = 2;
+        custom.adaptive_gap_threshold = 0.125;
+        custom.round_budget = 5;
+        custom.grid_workers = 6;
+        custom.worker_budget = 9;
+        custom.model.launch_overhead_us = 5.5;
+        for cfg in [
+            Config::multi_agent(),
+            Config::single_agent(),
+            Config::multi_agent_beam(),
+            Config::multi_agent_adaptive(),
+            custom,
+        ] {
+            let text = render(&cfg);
+            let back = parse(&text).unwrap_or_else(|e| {
+                panic!("render output must parse: {e:#}\n{text}")
+            });
+            assert_eq!(back.mode, cfg.mode, "{text}");
+            assert_eq!(back.rounds, cfg.rounds);
+            assert_eq!(back.seed, cfg.seed);
+            assert_eq!(back.bug_rate.to_bits(), cfg.bug_rate.to_bits());
+            assert_eq!(back.temperature.to_bits(), cfg.temperature.to_bits());
+            assert_eq!(back.beam_width, cfg.beam_width);
+            assert_eq!(back.candidates_per_round, cfg.candidates_per_round);
+            assert_eq!(back.adaptive_candidates, cfg.adaptive_candidates);
+            assert_eq!(
+                back.adaptive_min_candidates,
+                cfg.adaptive_min_candidates
+            );
+            assert_eq!(
+                back.adaptive_gap_threshold.to_bits(),
+                cfg.adaptive_gap_threshold.to_bits()
+            );
+            assert_eq!(back.round_budget, cfg.round_budget);
+            assert_eq!(back.grid_workers, cfg.grid_workers);
+            assert_eq!(back.worker_budget, cfg.worker_budget);
+            assert_eq!(
+                back.model.launch_overhead_us.to_bits(),
+                cfg.model.launch_overhead_us.to_bits()
+            );
+            assert_eq!(back.model.dram_bw.to_bits(), cfg.model.dram_bw.to_bits());
+            assert_eq!(back.model.sms, cfg.model.sms);
+            assert_eq!(
+                back.model.freq_hz.to_bits(),
+                cfg.model.freq_hz.to_bits()
+            );
+            assert_eq!(
+                back.model.mem_latency_cycles,
+                cfg.model.mem_latency_cycles
+            );
+        }
     }
 
     #[test]

@@ -8,7 +8,6 @@
 //! `interp::reference` backs the compiled machine.
 
 use std::sync::Arc;
-use std::thread;
 
 use crate::agents::{CodingAgent, ProfilingAgent, TestQuality, TestingAgent};
 use crate::interp::budget::run_indexed;
@@ -51,8 +50,34 @@ pub struct Config {
     /// (1 = the paper's greedy Algorithm 1).
     pub beam_width: usize,
     /// Top-K planner suggestions speculatively materialized and
-    /// evaluated concurrently per beam state per round.
+    /// evaluated concurrently per beam state per round (the *ceiling*
+    /// when the adaptive scheduler is on).
     pub candidates_per_round: usize,
+    /// Adaptive speculation scheduler: size each round's candidate set
+    /// from the planner's normalized priority gap
+    /// ([`crate::agents::priority_gap`]) — tied suggestions get the
+    /// full `candidates_per_round`, a dominant one only
+    /// `adaptive_min_candidates`. Off (the default) is the static
+    /// schedule, byte-for-byte.
+    pub adaptive_candidates: bool,
+    /// K floor for the adaptive scheduler (clamped to
+    /// `1..=candidates_per_round` at use).
+    pub adaptive_min_candidates: usize,
+    /// Normalized priority gap at (and beyond) which the adaptive K
+    /// hits its floor; gaps below it interpolate linearly up to the
+    /// ceiling. `0` disables the shrink entirely — adaptive mode with
+    /// threshold 0 reproduces the static schedule bit-for-bit
+    /// (pinned in `tests/beam_differential.rs`).
+    pub adaptive_gap_threshold: f64,
+    /// Beam-round cancellation: once this many candidates of a round
+    /// have fully evaluated *and* one of them measured strictly better
+    /// than the global best at round start, a per-round token (layered
+    /// over each candidate's validation token) abandons still-running
+    /// sibling validations. A deterministic repair pass re-runs any
+    /// candidate the canonical (index-order) schedule keeps, so
+    /// outcomes are byte-identical at every worker count/budget.
+    /// `0` (the default) never cancels — today's behavior exactly.
+    pub round_budget: usize,
     /// Worker threads the interpreter fans over each launch's blocks
     /// during validation (`1` = the serial engine byte-for-byte, `0` =
     /// auto — the testing agent picks per launch from the compiled
@@ -81,6 +106,10 @@ impl Config {
             temperature: 0.1,
             beam_width: 1,
             candidates_per_round: 1,
+            adaptive_candidates: false,
+            adaptive_min_candidates: 1,
+            adaptive_gap_threshold: 0.5,
+            round_budget: 0,
             grid_workers: 1,
             worker_budget: 0,
             model: GpuModel::h100(),
@@ -95,11 +124,7 @@ impl Config {
             bug_rate: 0.1,
             // One agent juggling four roles plans with more noise.
             temperature: 0.3,
-            beam_width: 1,
-            candidates_per_round: 1,
-            grid_workers: 1,
-            worker_budget: 0,
-            model: GpuModel::h100(),
+            ..Config::multi_agent()
         }
     }
 
@@ -110,6 +135,22 @@ impl Config {
             beam_width: 2,
             candidates_per_round: 3,
             ..Config::multi_agent()
+        }
+    }
+
+    /// Adaptive-scheduler preset: the beam preset with the speculation
+    /// budget spent where the planner's ranking is contested — K shrinks
+    /// toward 1 as the top suggestion's normalized priority gap
+    /// approaches 0.5, and a round's stragglers are cancelled once 3
+    /// candidates have evaluated and one measured strictly better
+    /// (EXPERIMENTS.md §Adaptive-K).
+    pub fn multi_agent_adaptive() -> Config {
+        Config {
+            adaptive_candidates: true,
+            adaptive_min_candidates: 1,
+            adaptive_gap_threshold: 0.5,
+            round_budget: 3,
+            ..Config::multi_agent_beam()
         }
     }
 }
@@ -162,8 +203,22 @@ pub struct Outcome {
     /// Mean baseline / optimized time on representative shapes (µs).
     pub base_mean_us: f64,
     pub opt_mean_us: f64,
-    /// Total speculative candidates validated + profiled.
+    /// Total speculative candidates validated + profiled (canonically
+    /// abandoned candidates — see [`Config::round_budget`] — are *not*
+    /// counted: their validations were cancelled, not spent).
     pub candidates_evaluated: usize,
+    /// Chosen speculation width K for every planning event, in (round,
+    /// beam-state) order — always the configured ceiling under the
+    /// static schedule, always `1` in greedy mode. The bench folds this
+    /// into the schema-v5 per-round K histogram.
+    pub k_per_round: Vec<usize>,
+    /// Planning events where the adaptive scheduler chose K below the
+    /// configured ceiling (0 whenever adaptive mode is off or the gap
+    /// threshold is 0).
+    pub adaptive_k_rounds: usize,
+    /// Candidates canonically abandoned by beam-round cancellation —
+    /// deterministic at every worker count (0 when `round_budget` = 0).
+    pub cancelled_candidates: usize,
     /// Peak number of candidate evaluations in flight at once (1 in
     /// greedy mode — the concurrency witness for the beam tests).
     pub peak_concurrent_evals: usize,
@@ -382,6 +437,12 @@ pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
         SearchTelemetry {
             candidates_evaluated,
             peak_concurrent_evals: probe.peak(),
+            // The greedy loop plans exactly once per round with K = 1
+            // and never shrinks or cancels — the beam engine at
+            // B = K = 1 must mirror these exactly (differential wall).
+            k_per_round: vec![1; cfg.rounds],
+            adaptive_k_rounds: 0,
+            cancelled_candidates: 0,
         },
     )
 }
@@ -430,6 +491,7 @@ pub fn optimize_all_parallel_budgeted(
 mod tests {
     use super::*;
     use crate::kernels;
+    use std::thread;
 
     fn quiet_multi() -> Config {
         Config {
@@ -569,7 +631,11 @@ mod tests {
     fn worker_budget_caps_live_threads_under_beam_settings() {
         // The acceptance scenario: B=2, K=3, 3 correctness shapes, 8
         // grid workers — unbudgeted this wants dozens of threads; the
-        // pool must hold the line at the configured cap.
+        // pool must hold the line at the configured cap. Since the
+        // budgeted post-processing refactor this covers the whole run
+        // including `finish_outcome`'s tail (oracle re-validation + two
+        // profile sweeps now route through the same pool; the serial
+        // witness for the tail alone lives in `search.rs`).
         let cfg = Config {
             bug_rate: 0.0,
             temperature: 0.0,

@@ -35,15 +35,15 @@
 //! non-improving move may pay again (the greedy loop kept stale blocks
 //! forever — a bug this module fixes for both engines).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::thread;
 
 use crate::agents::{
-    CodingAgent, MockLlm, PlannerPolicy, ProfileReport, ProfilingAgent,
-    SingleAgentPlanner, TestQuality, TestReport, TestingAgent,
+    priority_gap, CodingAgent, MockLlm, PlannerPolicy, ProfileReport,
+    ProfilingAgent, SingleAgentPlanner, Suggestion, TestQuality, TestReport,
+    TestingAgent,
 };
-use crate::interp::budget::run_indexed;
+use crate::interp::budget::{join3, run_indexed};
 use crate::interp::{CompileCache, WorkerBudget};
 use crate::ir::{printer, Kernel};
 use crate::kernels::KernelSpec;
@@ -103,6 +103,30 @@ struct PoolEntry {
 pub(crate) struct SearchTelemetry {
     pub(crate) candidates_evaluated: usize,
     pub(crate) peak_concurrent_evals: usize,
+    /// Chosen K per planning event, in (round, state) order.
+    pub(crate) k_per_round: Vec<usize>,
+    /// Planning events where the adaptive scheduler shrank K.
+    pub(crate) adaptive_k_rounds: usize,
+    /// Candidates canonically abandoned by round cancellation.
+    pub(crate) cancelled_candidates: usize,
+}
+
+/// Size one beam state's speculation width from the planner's priority
+/// signal (ROADMAP "Adaptive K"): a flat ranking (normalized gap 0)
+/// gets the full `candidates_per_round`, a gap at or beyond
+/// `adaptive_gap_threshold` only `adaptive_min_candidates`, with linear
+/// interpolation between. A threshold of 0 turns the shrink off
+/// entirely — adaptive mode then reproduces the static schedule
+/// bit-for-bit (no extra planner/PRNG traffic, differential-pinned).
+fn adaptive_k(cfg: &Config, suggestions: &[Suggestion]) -> usize {
+    let k_max = cfg.candidates_per_round.max(1);
+    if !cfg.adaptive_candidates || cfg.adaptive_gap_threshold <= 0.0 {
+        return k_max;
+    }
+    let k_min = cfg.adaptive_min_candidates.clamp(1, k_max);
+    let frac = (priority_gap(suggestions) / cfg.adaptive_gap_threshold).min(1.0);
+    let k = k_max as f64 - frac * (k_max - k_min) as f64;
+    (k.round() as usize).clamp(k_min, k_max)
 }
 
 /// Counts in-flight candidate evaluations and remembers the peak — the
@@ -167,8 +191,12 @@ pub(crate) fn make_planner(cfg: &Config) -> Box<dyn PlannerPolicy> {
 }
 
 /// Post-processing shared by both engines (§3.2): oracle re-validation
-/// and representative-shape measurement on concurrent scoped workers,
-/// then outcome assembly.
+/// and representative-shape measurement as three tasks over the
+/// process-wide worker pool ([`join3`] — the caller is the first
+/// worker, extra workers need budget tokens), then outcome assembly.
+/// Routing the tail through the pool makes the `worker_budget` cap
+/// exact for the whole run: no unbudgeted spawns remain
+/// (witness-tested below).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn finish_outcome(
     spec: &KernelSpec,
@@ -181,8 +209,9 @@ pub(crate) fn finish_outcome(
     telemetry: SearchTelemetry,
 ) -> Outcome {
     let shapes = (spec.representative_shapes)();
-    let (final_correct, base_reports, best_reports) = thread::scope(|s| {
-        let correct = s.spawn(|| {
+    let (final_correct, base_reports, best_reports) = join3(
+        Some(budget.as_ref()),
+        || {
             let final_tester =
                 TestingAgent::new(TestQuality::Representative, cfg.seed ^ 0xFEED)
                     .with_grid_workers(cfg.grid_workers)
@@ -191,15 +220,10 @@ pub(crate) fn finish_outcome(
             final_tester
                 .validate_with(spec, &best, &final_suite, Some(cache))
                 .pass
-        });
-        let base = s.spawn(|| sim::profile_shapes(&cfg.model, &baseline, &shapes));
-        let opt = s.spawn(|| sim::profile_shapes(&cfg.model, &best, &shapes));
-        (
-            correct.join().expect("oracle re-validation worker panicked"),
-            base.join().expect("baseline profile worker panicked"),
-            opt.join().expect("optimized profile worker panicked"),
-        )
-    });
+        },
+        || sim::profile_shapes(&cfg.model, &baseline, &shapes),
+        || sim::profile_shapes(&cfg.model, &best, &shapes),
+    );
     let per_shape: Vec<(String, f64, f64, f64)> = shapes
         .iter()
         .zip(base_reports.iter().zip(&best_reports))
@@ -234,6 +258,9 @@ pub(crate) fn finish_outcome(
         opt_mean_us,
         candidates_evaluated: telemetry.candidates_evaluated,
         peak_concurrent_evals: telemetry.peak_concurrent_evals,
+        k_per_round: telemetry.k_per_round,
+        adaptive_k_rounds: telemetry.adaptive_k_rounds,
+        cancelled_candidates: telemetry.cancelled_candidates,
         cache_hits: cache_stats.hits,
         cache_misses: cache_stats.misses,
     }
@@ -297,6 +324,9 @@ pub(crate) fn optimize_beam_with_cache_budget(
     let mut best = baseline.clone();
     let mut best_speedup = 1.0f64;
     let mut candidates_evaluated = 0usize;
+    let mut k_per_round: Vec<usize> = Vec::new();
+    let mut adaptive_k_events = 0usize;
+    let mut cancelled_candidates = 0usize;
     let mut beam: Vec<BeamState> = vec![BeamState {
         kernel: baseline.clone(),
         tests: base_tests,
@@ -313,11 +343,22 @@ pub(crate) fn optimize_beam_with_cache_budget(
             let mut suggestions =
                 planner.suggest(&state.kernel, &state.tests, &state.profile);
             suggestions.retain(|s| !state.blocked.contains(&s.mv));
+            // Adaptive K (ROADMAP): spend the speculation budget where
+            // the planner's ranking is contested, save it where one
+            // move dominates. Static mode (or gap threshold 0) sizes
+            // every event at the ceiling — bit-for-bit today's
+            // behavior.
+            let k_state = adaptive_k(cfg, &suggestions);
+            debug_assert!(k_state <= k_per_state);
+            k_per_round.push(k_state);
+            if k_state < k_per_state {
+                adaptive_k_events += 1;
+            }
             let start = cands.len();
             let mut reasons = Vec::new();
             for s in &suggestions {
                 let ci = cands.len() - start;
-                if ci >= k_per_state {
+                if ci >= k_state {
                     break;
                 }
                 let mut stream = candidate_stream(cfg.seed, round, si, ci);
@@ -347,20 +388,108 @@ pub(crate) fn optimize_beam_with_cache_budget(
         // oversubscribing shape- and grid-level workers). Each eval's
         // validate fans out further per shape. Results land by candidate
         // index, so the merge below is order-independent.
-        let evals: Vec<(TestReport, ProfileReport)> =
+        //
+        // Beam-round cancellation (`round_budget > 0`, ROADMAP
+        // "beam-state-level cancellation"): a per-round token layered
+        // over each candidate's validation token abandons in-flight
+        // sibling validations once `round_budget` candidates have fully
+        // evaluated and one measured strictly better than the global
+        // best at round start — the Block-STM pattern of dropping work
+        // the moment a result proves it moot. Which candidates a *race*
+        // cancels is timing-dependent, so the canonical repair pass
+        // below re-derives the abandonment set deterministically (in
+        // candidate index order, from true results only) and re-runs
+        // any racily-cancelled candidate the canonical schedule keeps:
+        // outcomes are byte-identical at every worker count and budget
+        // capacity. Cancellable evals bypass the compile cache — how
+        // far a cancelled validation got is a race, and its lookups
+        // would make the run's hit/miss counters nondeterministic (the
+        // testing agent's shape-repair trade, one level up).
+        let round_best = best_speedup;
+        let round_budget = cfg.round_budget;
+        let round_cancel = AtomicBool::new(false);
+        let cand_tokens: Vec<AtomicBool> =
+            (0..cands.len()).map(|_| AtomicBool::new(false)).collect();
+        let evals_done = AtomicUsize::new(0);
+        let improver_racy = AtomicBool::new(false);
+        let mut evals: Vec<Option<(TestReport, ProfileReport)>> =
             run_indexed(Some(budget.as_ref()), cands.len(), |i| {
                 let cand = &cands[i];
                 let _in_flight = probe.enter();
-                let tests =
-                    tester.validate_with(spec, &cand.kernel, &suite, Some(cache));
+                if round_budget == 0 {
+                    let tests = tester
+                        .validate_with(spec, &cand.kernel, &suite, Some(cache));
+                    let profile = profiler
+                        .profile(&cand.kernel, &suite, Some(&base_profile));
+                    return Some((tests, profile));
+                }
+                let tests = tester.validate_cancellable(
+                    spec,
+                    &cand.kernel,
+                    &suite,
+                    &cand_tokens[i],
+                    &round_cancel,
+                );
+                if tests.round_cancelled {
+                    return None;
+                }
                 let profile =
                     profiler.profile(&cand.kernel, &suite, Some(&base_profile));
-                (tests, profile)
+                let done = evals_done.fetch_add(1, Ordering::SeqCst) + 1;
+                if tests.pass && profile.speedup_vs_baseline > round_best {
+                    improver_racy.store(true, Ordering::SeqCst);
+                }
+                if improver_racy.load(Ordering::SeqCst) && done >= round_budget {
+                    // Raise the round token first, then every candidate
+                    // token: a machine that observes its candidate token
+                    // can then rely on the round flag being visible.
+                    round_cancel.store(true, Ordering::SeqCst);
+                    for t in &cand_tokens {
+                        t.store(true, Ordering::SeqCst);
+                    }
+                }
+                Some((tests, profile))
             });
-        candidates_evaluated += cands.len();
+
+        // ---- canonical cancellation schedule + repair ----------------
+        // Deterministic reference semantics: walk candidates in index
+        // order; once an improver has been seen and `round_budget`
+        // candidates have evaluated, every later candidate is abandoned
+        // — whatever the race actually did. Kept candidates that the
+        // race cancelled are re-run serially (cache-bypassing, like the
+        // testing agent's shape repair); completed results of abandoned
+        // candidates are discarded. Unreachable at `round_budget = 0`.
+        let mut abandoned = vec![false; cands.len()];
+        if round_budget > 0 {
+            let mut kept = 0usize;
+            let mut improver_seen = false;
+            for i in 0..cands.len() {
+                if improver_seen && kept >= round_budget {
+                    abandoned[i] = true;
+                    continue;
+                }
+                if evals[i].is_none() {
+                    let tests =
+                        tester.validate_with(spec, &cands[i].kernel, &suite, None);
+                    let profile = profiler
+                        .profile(&cands[i].kernel, &suite, Some(&base_profile));
+                    evals[i] = Some((tests, profile));
+                }
+                let (tests, profile) =
+                    evals[i].as_ref().expect("repaired just above");
+                kept += 1;
+                if tests.pass && profile.speedup_vs_baseline > round_best {
+                    improver_seen = true;
+                }
+            }
+            let n_abandoned = abandoned.iter().filter(|a| **a).count();
+            cancelled_candidates += n_abandoned;
+            candidates_evaluated += cands.len() - n_abandoned;
+        } else {
+            candidates_evaluated += cands.len();
+        }
 
         // ---- gate, record, update the global best (by index) ---------
-        let round_best = best_speedup;
         let mut gate = vec![false; cands.len()];
         let mut rec_idx = vec![usize::MAX; cands.len()];
         let mut any_accept = vec![false; beam.len()];
@@ -387,7 +516,30 @@ pub(crate) fn optimize_beam_with_cache_budget(
             }
             for ci in sr.start..sr.end {
                 let cand = &cands[ci];
-                let (tests, profile) = &evals[ci];
+                if abandoned[ci] {
+                    // Canonical cancellation record: constant fields
+                    // (the candidate's true numbers may not exist and
+                    // must not leak even when the race finished them).
+                    records.push(RoundRecord {
+                        round,
+                        beam_state: si,
+                        candidate: cand.index,
+                        applied: Some(cand.applied),
+                        rationale: cand.rationale.clone(),
+                        pass: false,
+                        speedup_internal: 0.0,
+                        mean_us_internal: 0.0,
+                        accepted: false,
+                        loc: printer::loc(&cand.kernel),
+                        note: "abandoned: a sibling measured strictly \
+                               better and the round's speculation budget \
+                               was exhausted"
+                            .into(),
+                    });
+                    continue;
+                }
+                let (tests, profile) =
+                    evals[ci].as_ref().expect("kept candidates are evaluated");
                 let speedup = profile.speedup_vs_baseline;
                 let improved = speedup >= round_best * ACCEPT_THRESHOLD;
                 let accepted = tests.pass && improved;
@@ -437,7 +589,8 @@ pub(crate) fn optimize_beam_with_cache_budget(
             if !gate[ci] {
                 continue;
             }
-            let (tests, profile) = &evals[ci];
+            let (tests, profile) =
+                evals[ci].as_ref().expect("gated candidates are evaluated");
             pool.push(PoolEntry {
                 state: BeamState {
                     kernel: cands[ci].kernel.clone(),
@@ -541,6 +694,9 @@ pub(crate) fn optimize_beam_with_cache_budget(
         SearchTelemetry {
             candidates_evaluated,
             peak_concurrent_evals: probe.peak(),
+            k_per_round,
+            adaptive_k_rounds: adaptive_k_events,
+            cancelled_candidates,
         },
     )
 }
@@ -550,6 +706,198 @@ mod tests {
     use super::*;
     use crate::coordinator::{optimize, optimize_greedy};
     use crate::kernels;
+    use std::thread;
+
+    fn sugg(priority: f64) -> Suggestion {
+        Suggestion {
+            mv: crate::transforms::Move::Hoist,
+            rationale: String::new(),
+            priority,
+        }
+    }
+
+    #[test]
+    fn adaptive_k_interpolates_between_floor_and_ceiling() {
+        let mut cfg = Config {
+            candidates_per_round: 5,
+            adaptive_candidates: true,
+            adaptive_min_candidates: 1,
+            adaptive_gap_threshold: 0.5,
+            ..Config::multi_agent()
+        };
+        // Tied ranking: full ceiling.
+        assert_eq!(adaptive_k(&cfg, &[sugg(3.0), sugg(3.0), sugg(3.0)]), 5);
+        // Dominant (gap >= threshold): the floor.
+        assert_eq!(adaptive_k(&cfg, &[sugg(9.0), sugg(1.0), sugg(1.0)]), 1);
+        // Single suggestion: nothing to speculate on.
+        assert_eq!(adaptive_k(&cfg, &[sugg(9.0)]), 1);
+        // Halfway to the threshold: halfway down the K range.
+        // gap = (9-7)/(9-1) = 0.25, frac = 0.5 -> K = 5 - 0.5*4 = 3.
+        assert_eq!(adaptive_k(&cfg, &[sugg(9.0), sugg(7.0), sugg(1.0)]), 3);
+        // Floor clamps into [1, ceiling].
+        cfg.adaptive_min_candidates = 3;
+        assert_eq!(adaptive_k(&cfg, &[sugg(9.0), sugg(1.0)]), 3);
+        cfg.adaptive_min_candidates = 99;
+        assert_eq!(adaptive_k(&cfg, &[sugg(9.0), sugg(1.0)]), 5);
+    }
+
+    #[test]
+    fn adaptive_k_is_static_when_off_or_threshold_zero() {
+        let dominant = [sugg(9.0), sugg(1.0)];
+        let off = Config {
+            candidates_per_round: 4,
+            ..Config::multi_agent()
+        };
+        assert_eq!(adaptive_k(&off, &dominant), 4);
+        let zero = Config {
+            candidates_per_round: 4,
+            adaptive_candidates: true,
+            adaptive_gap_threshold: 0.0,
+            ..Config::multi_agent()
+        };
+        assert_eq!(adaptive_k(&zero, &dominant), 4, "threshold 0 = static");
+        assert_eq!(adaptive_k(&zero, &[]), 4);
+    }
+
+    #[test]
+    fn finish_outcome_post_processing_respects_a_serial_worker_budget() {
+        // The peak-live witness for the budgeted tail (ROADMAP
+        // "budgeted post-processing"): with a budget of 1 and the test
+        // thread pre-counted as the one live worker, every
+        // post-processing task — oracle re-validation AND both profile
+        // sweeps — must execute on this thread; any unbudgeted spawn
+        // that touches budgeted work would push `peak_live` to 2.
+        let spec = kernels::silu::spec();
+        let cfg = Config {
+            bug_rate: 0.0,
+            temperature: 0.0,
+            ..Config::multi_agent()
+        };
+        let baseline = (spec.build_baseline)();
+        let cache = CompileCache::with_default_capacity();
+        let budget = Arc::new(WorkerBudget::new(1));
+        let caller = budget.count_worker();
+        let out = finish_outcome(
+            &spec,
+            &cfg,
+            Vec::new(),
+            baseline.clone(),
+            baseline,
+            &cache,
+            &budget,
+            SearchTelemetry {
+                candidates_evaluated: 0,
+                peak_concurrent_evals: 0,
+                k_per_round: Vec::new(),
+                adaptive_k_rounds: 0,
+                cancelled_candidates: 0,
+            },
+        );
+        drop(caller);
+        assert!(out.final_correct);
+        assert!(
+            (out.final_speedup - 1.0).abs() < 1e-12,
+            "baseline vs baseline is 1.0x, got {}",
+            out.final_speedup
+        );
+        assert_eq!(
+            budget.peak_live(),
+            1,
+            "post-processing must stay on the calling thread when the \
+             budget is serial (no unbudgeted spawns)"
+        );
+    }
+
+    #[test]
+    fn adaptive_scheduler_spends_less_speculation_than_static() {
+        // A tiny gap threshold makes any strictly-dominant top
+        // suggestion shrink K to the floor, so the adaptive run must
+        // evaluate fewer candidates than the static B x K grid on the
+        // same seed — while still shipping a correct kernel at the
+        // greedy trajectory's speedup or better.
+        let spec = kernels::merge::spec();
+        let static_cfg = Config {
+            bug_rate: 0.0,
+            temperature: 0.0,
+            ..Config::multi_agent_beam()
+        };
+        let adaptive_cfg = Config {
+            adaptive_candidates: true,
+            adaptive_min_candidates: 1,
+            adaptive_gap_threshold: 0.01,
+            ..static_cfg.clone()
+        };
+        let s = optimize_beam(&spec, &static_cfg);
+        let a = optimize_beam(&spec, &adaptive_cfg);
+        assert!(a.final_correct);
+        assert!(
+            a.candidates_evaluated < s.candidates_evaluated,
+            "adaptive {} vs static {}",
+            a.candidates_evaluated,
+            s.candidates_evaluated
+        );
+        assert!(a.adaptive_k_rounds > 0, "the scheduler never shrank K");
+        assert_eq!(
+            a.k_per_round.iter().filter(|k| **k < 3).count(),
+            a.adaptive_k_rounds,
+            "telemetry consistency"
+        );
+        assert_eq!(s.adaptive_k_rounds, 0);
+        assert!(s.k_per_round.iter().all(|k| *k == 3));
+    }
+
+    #[test]
+    fn round_cancellation_fires_and_is_deterministic() {
+        // B=1, K=3, round budget 1: canonically, the first candidate of
+        // round 1 (hoist on merge — accepted at >1x) is an improver, so
+        // both siblings of every improving round are abandoned. The
+        // outcome — records, kernels, telemetry — must not depend on
+        // worker budget or repetition.
+        let spec = kernels::merge::spec();
+        let cfg = Config {
+            bug_rate: 0.0,
+            temperature: 0.0,
+            beam_width: 1,
+            candidates_per_round: 3,
+            round_budget: 1,
+            ..Config::multi_agent()
+        };
+        let a = optimize_beam(&spec, &cfg);
+        assert!(a.final_correct);
+        assert!(
+            a.cancelled_candidates > 0,
+            "round budget 1 must abandon sibling candidates"
+        );
+        assert!(a
+            .records
+            .iter()
+            .any(|r| r.note.starts_with("abandoned:")));
+        // Abandoned records are inert: never accepted, never passing.
+        for r in a.records.iter().filter(|r| r.note.starts_with("abandoned:")) {
+            assert!(!r.accepted);
+            assert!(!r.pass);
+            assert_eq!(r.speedup_internal, 0.0);
+        }
+        for budget_knob in [1usize, 2, 0] {
+            let budget = Arc::new(WorkerBudget::from_config(budget_knob));
+            let b = crate::coordinator::optimize_with_budget(&spec, &cfg, &budget);
+            assert_eq!(a.records, b.records, "budget {budget_knob}");
+            assert_eq!(a.best, b.best, "budget {budget_knob}");
+            assert_eq!(
+                a.cancelled_candidates, b.cancelled_candidates,
+                "budget {budget_knob}"
+            );
+            assert_eq!(a.candidates_evaluated, b.candidates_evaluated);
+            assert_eq!(a.k_per_round, b.k_per_round);
+            assert_eq!(a.cache_hits, b.cache_hits, "budget {budget_knob}");
+            assert_eq!(a.cache_misses, b.cache_misses, "budget {budget_knob}");
+            assert_eq!(
+                a.final_speedup.to_bits(),
+                b.final_speedup.to_bits(),
+                "budget {budget_knob}"
+            );
+        }
+    }
 
     #[test]
     fn beam_matches_or_beats_greedy_on_every_kernel_default_config() {

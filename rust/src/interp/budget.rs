@@ -201,6 +201,54 @@ pub fn run_indexed<T: Send>(
         .collect()
 }
 
+/// Run three *heterogeneous* tasks over the budgeted pool and return
+/// their results — the post-processing idiom ([`finish_outcome`]'s
+/// oracle re-validation plus two profile sweeps): the calling thread is
+/// the first worker and up to two additional scoped workers are
+/// spawned, one per token granted, so the tail of a run respects the
+/// same process-wide cap as every other fan-out instead of spawning
+/// unbudgeted. Task order on a serial budget is `a`, `b`, `c` on the
+/// caller; results are positional, so scheduling never reorders them.
+///
+/// [`finish_outcome`]: crate::coordinator::search
+pub fn join3<A: Send, B: Send, C: Send>(
+    budget: Option<&WorkerBudget>,
+    a: impl FnOnce() -> A + Send,
+    b: impl FnOnce() -> B + Send,
+    c: impl FnOnce() -> C + Send,
+) -> (A, B, C) {
+    enum Out<A, B, C> {
+        A(A),
+        B(B),
+        C(C),
+    }
+    // The FnOnce tasks sit in per-slot lockers so the Fn-shaped
+    // work-queue drain of `run_indexed` can take each exactly once
+    // (item i always maps to task i).
+    let (a, b, c) = (
+        Mutex::new(Some(a)),
+        Mutex::new(Some(b)),
+        Mutex::new(Some(c)),
+    );
+    fn take<F>(m: &Mutex<Option<F>>) -> F {
+        m.lock()
+            .expect("join3 task locker poisoned")
+            .take()
+            .expect("join3 task runs exactly once")
+    }
+    let mut out = run_indexed(budget, 3, |i| match i {
+        0 => Out::A(take(&a)()),
+        1 => Out::B(take(&b)()),
+        _ => Out::C(take(&c)()),
+    });
+    let (Some(Out::C(rc)), Some(Out::B(rb)), Some(Out::A(ra))) =
+        (out.pop(), out.pop(), out.pop())
+    else {
+        unreachable!("run_indexed lands results by item index");
+    };
+    (ra, rb, rc)
+}
+
 thread_local! {
     /// Whether this thread is already counted live in some pool.
     static COUNTED: Cell<bool> = const { Cell::new(false) };
@@ -285,6 +333,45 @@ mod tests {
             }
         }
         assert!(run_indexed(None, 0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn join3_returns_positional_results_at_every_capacity() {
+        for budget in [None, Some(WorkerBudget::new(1)), Some(WorkerBudget::new(8))] {
+            let (a, b, c) = join3(
+                budget.as_ref(),
+                || "first".to_string(),
+                || 42usize,
+                || vec![1.5f64, 2.5],
+            );
+            assert_eq!(a, "first");
+            assert_eq!(b, 42);
+            assert_eq!(c, vec![1.5, 2.5]);
+            if let Some(bud) = &budget {
+                assert!(bud.peak_live() <= bud.total());
+                assert_eq!(
+                    bud.try_acquire(usize::MAX).granted(),
+                    bud.total() - 1,
+                    "join3 returned its lease"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn join3_on_a_serial_budget_stays_on_the_calling_thread() {
+        let b = WorkerBudget::new(1);
+        let caller = std::thread::current().id();
+        let (ta, tb, tc) = join3(
+            Some(&b),
+            std::thread::current,
+            std::thread::current,
+            std::thread::current,
+        );
+        assert_eq!(ta.id(), caller);
+        assert_eq!(tb.id(), caller);
+        assert_eq!(tc.id(), caller);
+        assert_eq!(b.peak_live(), 1);
     }
 
     #[test]

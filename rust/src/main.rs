@@ -50,15 +50,39 @@ fn print_usage() {
         "astra — multi-agent GPU kernel optimization (paper reproduction)\n\n\
          usage: astra <command> [options]\n\n\
          commands:\n\
-         \x20 optimize  [--kernel NAME] [--mode multi|single] [--rounds N]\n\
-         \x20           [--seed N] [--temperature T] [--bug-rate P]\n\
-         \x20           [--beam-width B] [--candidates K]\n\
-         \x20           [--grid-workers W] [--worker-budget N]\n\
-         \x20           [--config FILE] [--trace]\n\
-         \x20 bench     --table 2|3|4\n\
-         \x20 casestudy --kernel NAME | --list\n\
-         \x20 validate\n\
-         \x20 serve     [--steps N] [--warmup N]\n"
+         \x20 optimize  run Algorithm 1 on one or all kernels, print the trace\n\
+         \x20 bench     regenerate a paper table (--table 2|3|4)\n\
+         \x20 casestudy print a Figure 2-5 style before/after (--kernel NAME | --list)\n\
+         \x20 validate  check every AOT artifact compiles on the PJRT client\n\
+         \x20 serve     run the decode-layer serving pipeline ([--steps N] [--warmup N])\n\n\
+         agent loop (optimize/bench; config-file key in parentheses):\n\
+         \x20 --kernel NAME         optimize one kernel instead of all three\n\
+         \x20 --mode multi|single   agent topology (mode)\n\
+         \x20 --rounds N            optimization rounds R (rounds)\n\
+         \x20 --seed N              PRNG seed (seed)\n\
+         \x20 --temperature T       planner ranking noise (temperature)\n\
+         \x20 --bug-rate P          coding-agent fumble probability (bug_rate)\n\
+         \x20 --config FILE         key = value config file, flags override it\n\
+         \x20 --trace               print the round-by-round log\n\n\
+         search & parallelism:\n\
+         \x20 --beam-width B        beam states carried between rounds; 1 = the\n\
+         \x20                       paper's greedy loop (beam_width)\n\
+         \x20 --candidates K        max speculative candidates per state per\n\
+         \x20                       round (candidates_per_round)\n\
+         \x20 --adaptive-candidates BOOL\n\
+         \x20                       size K per round from the planner's priority\n\
+         \x20                       gap (adaptive_candidates)\n\
+         \x20 --adaptive-min K      adaptive K floor when one move dominates\n\
+         \x20                       (adaptive_min_candidates)\n\
+         \x20 --adaptive-gap G      normalized gap at which K hits the floor;\n\
+         \x20                       0 = always max K (adaptive_gap_threshold)\n\
+         \x20 --round-budget N      evaluations before a strictly-better sibling\n\
+         \x20                       cancels a round's stragglers; 0 = never\n\
+         \x20                       (round_budget)\n\
+         \x20 --grid-workers W      block-parallel interpreter workers; 1 =\n\
+         \x20                       serial, 0 = auto per launch (grid_workers)\n\
+         \x20 --worker-budget N     process-wide cap on live interpreter\n\
+         \x20                       threads; 0 = one per core (worker_budget)\n"
     );
 }
 
@@ -89,6 +113,10 @@ fn build_config(args: &[String]) -> Result<Config> {
         ("--bug-rate", "bug_rate"),
         ("--beam-width", "beam_width"),
         ("--candidates", "candidates_per_round"),
+        ("--adaptive-candidates", "adaptive_candidates"),
+        ("--adaptive-min", "adaptive_min_candidates"),
+        ("--adaptive-gap", "adaptive_gap_threshold"),
+        ("--round-budget", "round_budget"),
         ("--grid-workers", "grid_workers"),
         ("--worker-budget", "worker_budget"),
     ] {

@@ -304,6 +304,16 @@ pub fn trace(outcome: &Outcome) -> String {
         outcome.cache_hits,
         outcome.cache_misses
     );
+    if outcome.adaptive_k_rounds > 0 || outcome.cancelled_candidates > 0 {
+        let _ = writeln!(
+            s,
+            "adaptive: K shrunk on {}/{} planning events, {} candidates \
+             abandoned by round cancellation",
+            outcome.adaptive_k_rounds,
+            outcome.k_per_round.len(),
+            outcome.cancelled_candidates
+        );
+    }
     s
 }
 

@@ -142,6 +142,14 @@ fn prop_coordinator_never_ships_incorrect_kernels() {
             // settings; the gate must hold regardless.
             beam_width: 1 + rng.below(3),
             candidates_per_round: 1 + rng.below(3),
+            // Adaptive speculation + round cancellation randomized too:
+            // neither scheduling K from the priority gap nor abandoning
+            // a round's stragglers may ever ship an incorrect kernel
+            // or malform the log.
+            adaptive_candidates: rng.chance(0.5),
+            adaptive_min_candidates: 1 + rng.below(2),
+            adaptive_gap_threshold: rng.uniform() as f64,
+            round_budget: rng.below(3),
             // Block-parallel validation at 1, 2 or 3 workers — outcomes
             // must be identical at every setting, so the invariants
             // below must hold at all of them.

@@ -3,21 +3,29 @@
 
 Fails (exit 1) when a gated per-kernel metric regresses by more than
 --max-regression on any kernel — the ROADMAP "perf trajectory in CI"
-gate. Two metrics are gated: the slot-compiled interpreter's per-case
-time (`interpret_ms`) and, now that two grid paths exist, the
-copy-and-merge block-parallel time (`grid_parallel_ms`) so the fallback
-engine can't rot behind the zero-copy path. Search throughput
-(`search_cps`, candidates/sec; higher is better), the zero-copy grid
-numbers (`grid_zerocopy_ms` / `grid_zerocopy_speedup`, schema v4), the
-cross-run compile-cache counters (`cross_run_cache`) and the zero-copy
-launch counter (`sliced_launches`, schema v4) are reported
+gate. Four metrics are gated:
+
+* lower-is-better: the slot-compiled interpreter's per-case time
+  (`interpret_ms`), the copy-and-merge block-parallel time
+  (`grid_parallel_ms`, so the fallback engine can't rot behind the
+  zero-copy path) and the full beam-run median (`beam_optimize_ms`);
+* higher-is-better: speculative-search throughput (`search_cps`,
+  candidates validated + profiled per second) — a drop beyond the
+  threshold fails.
+
+The zero-copy grid numbers (`grid_zerocopy_ms` / `grid_zerocopy_speedup`,
+schema v4), the adaptive-scheduler numbers (`adaptive_optimize_ms`,
+`adaptive_k_rounds`, `cancelled_candidates`, `k_histogram`, schema v5),
+the cross-run compile-cache counters (`cross_run_cache`) and the
+zero-copy launch counter (`sliced_launches`) are reported
 informationally so the trajectory is visible without flaking the build
 on scheduler noise in the end-to-end runs.
 
-Older-schema files (v1 without `search_cps`, v2 without the grid and
-cache fields, v3 without the zero-copy fields) compare cleanly: absent
-metrics are simply skipped, so the first run after a schema bump never
-fails on the artifact from before the bump.
+Older-schema files (v1 without `search_cps`/`beam_optimize_ms`, v2
+without the grid and cache fields, v3 without the zero-copy fields, v4
+without the adaptive fields) compare cleanly: absent metrics are simply
+skipped, so the first run after a schema bump never fails on the
+artifact from before the bump.
 
 Usage:
     python3 compare_bench.py <old.json> <new.json> [--max-regression 0.15]
@@ -32,14 +40,19 @@ import os
 import sys
 
 # Lower-is-better per-kernel metrics that fail the gate on regression.
-GATED = ["interpret_ms", "grid_parallel_ms"]
+GATED_LOWER = ["interpret_ms", "grid_parallel_ms", "beam_optimize_ms"]
+
+# Higher-is-better per-kernel metrics that fail the gate on a drop.
+GATED_HIGHER = ["search_cps"]
 
 # Informational per-kernel metrics: (name, label, format).
 INFORMATIONAL = [
-    ("search_cps", "search_cps", "{:>10.1f}"),
     ("grid_parallel_speedup", "grid_par_x", "{:>10.2f}"),
     ("grid_zerocopy_ms", "grid_zc_ms", "{:>10.4f}"),
     ("grid_zerocopy_speedup", "grid_zc_x", "{:>10.2f}"),
+    ("adaptive_optimize_ms", "adaptive_ms", "{:>10.3f}"),
+    ("adaptive_k_rounds", "adapt_k_shrnk", "{:>10.0f}"),
+    ("cancelled_candidates", "cancelled", "{:>10.0f}"),
 ]
 
 
@@ -51,7 +64,7 @@ def main() -> int:
         "--max-regression",
         type=float,
         default=0.15,
-        help="tolerated fractional increase of gated metrics (default 0.15)",
+        help="tolerated fractional regression of gated metrics (default 0.15)",
     )
     args = parser.parse_args()
 
@@ -70,31 +83,46 @@ def main() -> int:
             print(f"{name:<24} new kernel; no baseline")
             continue
 
-        for metric in GATED:
-            if prev.get(metric, 0) > 0 and metric in cur:
-                base, now = prev[metric], cur[metric]
-                delta = (now - base) / base
-                bad = delta > args.max_regression
-                print(
-                    f"{name:<24} {metric:<14} {base:>10.4f} -> {now:>10.4f}"
-                    f"  ({delta:+7.1%}) {'REGRESSION' if bad else 'ok'}"
-                )
-                if bad:
-                    failures.append((name, metric, delta))
+        for metric in GATED_LOWER + GATED_HIGHER:
+            if not (prev.get(metric, 0) > 0 and metric in cur):
+                continue  # absent in the older schema: skip cleanly
+            base, now = prev[metric], cur[metric]
+            delta = (now - base) / base
+            # Regression is an increase for costs, a drop for rates.
+            regression = delta if metric in GATED_LOWER else -delta
+            bad = regression > args.max_regression
+            print(
+                f"{name:<24} {metric:<14} {base:>10.4f} -> {now:>10.4f}"
+                f"  ({delta:+7.1%}) {'REGRESSION' if bad else 'ok'}"
+            )
+            if bad:
+                failures.append((name, metric, regression))
 
         for metric, label, fmt in INFORMATIONAL:
-            if prev.get(metric, 0) > 0 and metric in cur:
+            # Presence, not truthiness: count metrics (adaptive_k_rounds,
+            # cancelled_candidates) are legitimately 0 in a baseline.
+            if metric in prev and metric in cur:
                 base, now = prev[metric], cur[metric]
-                delta = (now - base) / base
+                rel = f"  ({(now - base) / base:+7.1%})" if base > 0 else ""
                 print(
                     f"{name:<24} {label:<14} {fmt.format(base)} -> "
-                    f"{fmt.format(now)}  ({delta:+7.1%}) info"
+                    f"{fmt.format(now)}{rel} info"
                 )
             elif metric in cur:
                 print(
                     f"{name:<24} {label:<14} {'':>10} -> "
                     f"{fmt.format(cur[metric])}  (new metric) info"
                 )
+
+        # v5 schema: chosen-K histogram, informational (a dict, so it
+        # stays out of the numeric comparison loops).
+        hist = cur.get("k_histogram")
+        if isinstance(hist, dict):
+            rendered = ", ".join(
+                f"K={k}: {v}"
+                for k, v in sorted(hist.items(), key=lambda kv: int(kv[0]))
+            )
+            print(f"{name:<24} {'k_histogram':<14} {rendered} info")
 
     # v3 schema: cross-run shared-cache counters, informational.
     cross = new.get("cross_run_cache")

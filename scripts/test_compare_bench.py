@@ -5,12 +5,14 @@ Run directly (no pytest in the offline image):
 
     python3 scripts/test_compare_bench.py
 
-Covers: regression above threshold fails (for both gated metrics —
-interpret_ms and, since schema v4, grid_parallel_ms), below passes,
-missing previous-run file skips cleanly, older-schema (v1/v2/v3)
-baselines compare without crashing against v4 output, and the v4
-informational fields (grid_zerocopy_ms, sliced_launches) are reported
-without gating.
+Covers: regression above threshold fails for every gated metric —
+interpret_ms, grid_parallel_ms (schema v4) and, since schema v5, the
+search-throughput pair (beam_optimize_ms lower-is-better, search_cps
+higher-is-better) — below passes, missing previous-run file skips
+cleanly, older-schema (v1/v2/v3/v4) baselines compare without crashing
+against v5 output, and the informational fields (grid_zerocopy_ms,
+sliced_launches, the v5 adaptive-scheduler fields incl. the
+k_histogram dict) are reported without gating.
 """
 
 import json
@@ -36,7 +38,7 @@ def kernel_row(interpret_ms, **extra):
     return row
 
 
-def bench_json(interpret_ms, schema="astra-hotpath-v4", cross=True,
+def bench_json(interpret_ms, schema="astra-hotpath-v5", cross=True,
                sliced=None, **extra):
     doc = {
         "schema": schema,
@@ -191,6 +193,73 @@ class CompareBenchTest(unittest.TestCase):
             "new.json",
             bench_json(1.0, grid_parallel_ms=2.0, grid_zerocopy_ms=5.0,
                        grid_zerocopy_speedup=0.4, sliced=7),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_search_cps_drop_fails_the_gate(self):
+        # search_cps is higher-is-better: a >15% throughput drop is a
+        # regression even though the number went *down*.
+        old = self.write("old.json", bench_json(1.0, search_cps=100.0))
+        new = self.write("new.json", bench_json(1.0, search_cps=50.0))
+        self.assertEqual(self.run_main(old, new, 0.15), 1)
+
+    def test_search_cps_gain_and_noise_pass(self):
+        old = self.write("old.json", bench_json(1.0, search_cps=100.0))
+        faster = self.write("faster.json", bench_json(1.0, search_cps=200.0))
+        self.assertEqual(self.run_main(old, faster, 0.15), 0)
+        noisy = self.write("noisy.json", bench_json(1.0, search_cps=90.0))
+        self.assertEqual(self.run_main(old, noisy, 0.15), 0)  # -10% < 15%
+
+    def test_beam_optimize_regression_fails_the_gate(self):
+        old = self.write("old.json", bench_json(1.0, beam_optimize_ms=300.0))
+        new = self.write("new.json", bench_json(1.0, beam_optimize_ms=450.0))
+        self.assertEqual(self.run_main(old, new, 0.15), 1)
+
+    def test_beam_optimize_within_tolerance_passes(self):
+        old = self.write("old.json", bench_json(1.0, beam_optimize_ms=300.0))
+        new = self.write("new.json", bench_json(1.0, beam_optimize_ms=330.0))
+        self.assertEqual(self.run_main(old, new, 0.15), 0)  # +10% < 15%
+
+    def test_older_v4_schema_baseline_is_graceful_for_v5(self):
+        # v4: search-throughput fields present (so they gate), adaptive
+        # fields absent — the first v5 run must compare cleanly and
+        # still catch a search_cps drop against the v4 baseline.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, schema="astra-hotpath-v4",
+                       grid_parallel_ms=2.0, search_cps=100.0,
+                       beam_optimize_ms=300.0, sliced=64),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0, grid_parallel_ms=2.0, search_cps=101.0,
+                       beam_optimize_ms=299.0, sliced=64,
+                       adaptive_optimize_ms=250.0, adaptive_k_rounds=6,
+                       cancelled_candidates=4,
+                       k_histogram={"1": 5, "2": 1, "3": 3}),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+        dropped = self.write(
+            "dropped.json",
+            bench_json(1.0, grid_parallel_ms=2.0, search_cps=60.0,
+                       beam_optimize_ms=300.0),
+        )
+        self.assertEqual(self.run_main(old, dropped, 0.15), 1)
+
+    def test_adaptive_fields_are_informational_only(self):
+        # Wild swings in every v5 adaptive field — including the
+        # k_histogram dict — must neither gate nor crash.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, adaptive_optimize_ms=100.0, adaptive_k_rounds=9,
+                       cancelled_candidates=12,
+                       k_histogram={"1": 9, "2": 0, "3": 0}),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0, adaptive_optimize_ms=900.0, adaptive_k_rounds=0,
+                       cancelled_candidates=0,
+                       k_histogram={"1": 0, "2": 0, "3": 9}),
         )
         self.assertEqual(self.run_main(old, new, 0.15), 0)
 
