@@ -20,6 +20,7 @@
 use std::sync::Arc;
 
 use astra::coordinator::{optimize, optimize_all_parallel_with_cache, Config};
+use astra::faults::{self, FaultPlan};
 use astra::interp::{self, CompileCache, RunOpts};
 use astra::kernels;
 use astra::sim::{self, GpuModel};
@@ -71,6 +72,15 @@ struct KernelRow {
     /// Histogram of chosen K per planning event: `k_hist[k - 1]` =
     /// events sized at K = k (rendered as a JSON object).
     k_hist: Vec<usize>,
+    /// Full supervised run under the bench fault plan (schema v6):
+    /// rate 0.2, seed 7, all sites — the supervision-overhead number.
+    chaos_optimize_ms: f64,
+    /// Fault telemetry from the (deterministic) chaos run.
+    faults_injected: u64,
+    faults_survived: u64,
+    retries: u64,
+    watchdog_trips: u64,
+    quarantined_lineages: u64,
 }
 
 /// Cross-run shared-cache counters: two identical `optimize_all_parallel`
@@ -293,6 +303,43 @@ fn main() {
         );
     }
 
+    // Chaos-supervised runs (schema v6): the adaptive preset under the
+    // bench fault plan. Deterministic, so one untimed pass collects the
+    // fault ledger and the timed passes measure supervision overhead
+    // (retry loops, watchdog bookkeeping, quarantine checks).
+    println!();
+    let chaos_cfg = Config {
+        fault: FaultPlan {
+            rate: 0.2,
+            seed: 7,
+            sites: faults::ALL_SITES,
+        },
+        watchdog_steps: 150_000_000,
+        quarantine_after: 2,
+        ..adaptive_cfg.clone()
+    };
+    for (spec, row) in kernels::all_specs().iter().zip(&mut rows) {
+        let out = optimize(spec, &chaos_cfg);
+        row.faults_injected = out.faults_injected;
+        row.faults_survived = out.faults_survived;
+        row.retries = out.retries;
+        row.watchdog_trips = out.watchdog_trips;
+        row.quarantined_lineages = out.quarantined_lineages;
+        let s = bench(1, 5, || optimize(spec, &chaos_cfg));
+        row.chaos_optimize_ms = s.median_ms();
+        println!(
+            "chaos-optimize {:<18} median {:>8.1} ms/run ({} injected, {} survived, \
+             {} retries, {} watchdog, {} quarantined)",
+            spec.paper_name,
+            s.median_ms(),
+            row.faults_injected,
+            row.faults_survived,
+            row.retries,
+            row.watchdog_trips,
+            row.quarantined_lineages
+        );
+    }
+
     // Cross-run shared compile cache: two identical optimize-all batches
     // over one Arc'd cache — the second must be (nearly) hit-only, and
     // the counters land in the JSON so CI can watch the reuse rate.
@@ -338,7 +385,7 @@ fn render_json(
     sliced_launches: u64,
 ) -> String {
     let mut out = String::new();
-    out.push_str("{\n  \"schema\": \"astra-hotpath-v5\",\n  \"kernels\": {\n");
+    out.push_str("{\n  \"schema\": \"astra-hotpath-v6\",\n  \"kernels\": {\n");
     for (i, r) in rows.iter().enumerate() {
         let k_hist = r
             .k_hist
@@ -362,7 +409,13 @@ fn render_json(
              \"adaptive_optimize_ms\": {:.3},\n      \
              \"adaptive_k_rounds\": {},\n      \
              \"cancelled_candidates\": {},\n      \
-             \"k_histogram\": {{{}}}\n    }}{}\n",
+             \"k_histogram\": {{{}}},\n      \
+             \"chaos_optimize_ms\": {:.3},\n      \
+             \"faults_injected\": {},\n      \
+             \"faults_survived\": {},\n      \
+             \"retries\": {},\n      \
+             \"watchdog_trips\": {},\n      \
+             \"quarantined_lineages\": {}\n    }}{}\n",
             r.name,
             r.simulate_us,
             r.interpret_ref_ms,
@@ -381,6 +434,12 @@ fn render_json(
             r.adaptive_k_rounds,
             r.cancelled_candidates,
             k_hist,
+            r.chaos_optimize_ms,
+            r.faults_injected,
+            r.faults_survived,
+            r.retries,
+            r.watchdog_trips,
+            r.quarantined_lineages,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }

@@ -38,6 +38,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use crate::faults::{self, FaultPlan, FaultSite};
 use crate::interp::budget::run_indexed;
 use crate::interp::{self, CompileCache, WorkerBudget};
 use crate::ir::{DimEnv, Kernel};
@@ -69,6 +70,8 @@ fn run_case(
     cancel: &AtomicBool,
     grid_workers: usize,
     budget: Option<&WorkerBudget>,
+    fault: Option<(FaultPlan, u64)>,
+    step_limit: Option<u64>,
 ) -> CaseOutcome {
     let fail = |msg: String| CaseOutcome {
         max_abs: f32::INFINITY,
@@ -76,6 +79,16 @@ fn run_case(
         failure: Some(msg),
         cancelled: false,
     };
+    // Compile-site injection rolls *before* the cache lookup, so an
+    // injected compile failure never perturbs the shared hit/miss
+    // counters; it then behaves exactly like a real compile error
+    // (raises the sibling-cancellation token, reports the failure).
+    if let Some((plan, key)) = fault {
+        if plan.roll(FaultSite::Compile, key).is_some() {
+            cancel.store(true, Ordering::Relaxed);
+            return fail(faults::transient_compile_msg());
+        }
+    }
     let prog = match cache {
         Some(c) => c.get_or_compile(kernel, dims),
         None => interp::compile(kernel, dims).map(Arc::new),
@@ -104,6 +117,8 @@ fn run_case(
         cancel: Some(cancel),
         grid_workers,
         budget,
+        step_limit,
+        fault: fault.map(|(plan, key)| interp::FaultCtx { plan, key }),
         ..interp::RunOpts::default()
     };
     match interp::run_compiled_with_opts(&prog, &mut env, opts) {
@@ -197,6 +212,18 @@ pub struct TestingAgent {
     /// Process-wide worker budget shared with the coordinator layers
     /// (`None` = unbudgeted: one worker per correctness shape).
     pub budget: Option<Arc<WorkerBudget>>,
+    /// Deterministic fault-injection context `(plan, key)` for this
+    /// agent's validations: each correctness case rolls compile- and
+    /// grid-level faults keyed by `mix(key, case index)`, so outcomes
+    /// never depend on scheduling. `None` = no injection (the zero-cost
+    /// default).
+    pub fault: Option<(FaultPlan, u64)>,
+    /// Step-denominated per-candidate watchdog: cumulative interpreter
+    /// step budget for each correctness launch (`0` = the interpreter's
+    /// default limit). Runaway candidates trip
+    /// [`interp::InterpError::IterationLimit`] instead of hanging the
+    /// round.
+    pub step_limit: u64,
 }
 
 impl TestingAgent {
@@ -206,6 +233,8 @@ impl TestingAgent {
             seed,
             grid_workers: 1,
             budget: None,
+            fault: None,
+            step_limit: 0,
         }
     }
 
@@ -219,6 +248,22 @@ impl TestingAgent {
     /// grid workers) with a shared process-wide pool.
     pub fn with_worker_budget(mut self, budget: Arc<WorkerBudget>) -> Self {
         self.budget = Some(budget);
+        self
+    }
+
+    /// Builder (non-consuming): the same agent scoped to one supervised
+    /// evaluation — validations roll injected faults against `key`.
+    /// A disabled plan clears the context, keeping the fast path free.
+    pub fn with_fault_context(&self, plan: FaultPlan, key: u64) -> Self {
+        let mut agent = self.clone();
+        agent.fault = if plan.enabled() { Some((plan, key)) } else { None };
+        agent
+    }
+
+    /// Builder: cap each correctness launch's cumulative interpreter
+    /// steps (`0` = default limit).
+    pub fn with_step_limit(mut self, steps: u64) -> Self {
+        self.step_limit = steps;
         self
     }
 
@@ -336,6 +381,14 @@ impl TestingAgent {
         let seed = suite.seed;
         let grid_workers = self.grid_workers;
         let budget = self.budget.as_deref();
+        let step_limit =
+            (self.step_limit > 0).then_some(self.step_limit);
+        // Per-case fault context: the agent's key mixed with the case
+        // index, so every shape rolls independently but reproducibly.
+        let case_fault = |i: usize| {
+            self.fault
+                .map(|(plan, key)| (plan, faults::mix(key, i as u64)))
+        };
         let owned_cancel = AtomicBool::new(false);
         let (cancel, round_cancel) = match round {
             Some((candidate, rnd)) => (candidate, Some(rnd)),
@@ -356,6 +409,8 @@ impl TestingAgent {
                     cancel,
                     grid_workers,
                     budget,
+                    case_fault(i),
+                    step_limit,
                 )
             });
         let cancelled_cases = outcomes.iter().filter(|o| o.cancelled).count();
@@ -391,8 +446,15 @@ impl TestingAgent {
         // the extra lookups through the shared counters would make a
         // run's hit/miss stats nondeterministic; a rare spare compile
         // (µs) is the cheaper currency.
-        for (dims, o) in suite.correctness_shapes.iter().zip(outcomes.iter_mut()) {
+        for (i, (dims, o)) in suite
+            .correctness_shapes
+            .iter()
+            .zip(outcomes.iter_mut())
+            .enumerate()
+        {
             if o.cancelled {
+                // Same per-case fault context as the first attempt, so
+                // the repaired outcome reproduces the injected verdict.
                 *o = run_case(
                     spec,
                     kernel,
@@ -402,6 +464,8 @@ impl TestingAgent {
                     &AtomicBool::new(false),
                     grid_workers,
                     budget,
+                    case_fault(i),
+                    step_limit,
                 );
             }
             if o.failure.is_some() {

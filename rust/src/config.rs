@@ -36,6 +36,15 @@
 //! # fan-outs (candidates x shapes x grid workers); 0 = one per core
 //! worker_budget = 8
 //!
+//! # deterministic fault injection + supervision (chaos hardening;
+//! # rate 0 = off, zero cost; sites: "all", "none", or a comma list
+//! # of agent,validate,grid,compile,profile)
+//! fault_rate = 0.05
+//! fault_seed = 7
+//! fault_sites = "all"
+//! watchdog_steps = 0          # 0 = the interpreter's own step limit
+//! quarantine_after = 0        # 0 = never quarantine a lineage
+//!
 //! # simulator overrides
 //! launch_overhead_us = 7.0
 //! dram_bw = 3.0e12
@@ -123,6 +132,21 @@ pub fn apply(
         "grid_workers" => cfg.grid_workers = value.parse()?,
         // 0 is meaningful here too: one worker per available core.
         "worker_budget" => cfg.worker_budget = value.parse()?,
+        "fault_rate" => {
+            cfg.fault.rate = value.parse()?;
+            if !(0.0..=1.0).contains(&cfg.fault.rate) {
+                return Err(anyhow!("fault_rate must be in [0, 1]"));
+            }
+        }
+        "fault_seed" => cfg.fault.seed = value.parse()?,
+        "fault_sites" => {
+            cfg.fault.sites =
+                crate::faults::parse_sites(value).map_err(|e| anyhow!(e))?;
+        }
+        // 0 is meaningful: fall back to the interpreter's own step limit.
+        "watchdog_steps" => cfg.watchdog_steps = value.parse()?,
+        // 0 is meaningful: never quarantine a lineage.
+        "quarantine_after" => cfg.quarantine_after = value.parse()?,
         "mode" => {
             cfg.mode = match value {
                 "multi" | "multi-agent" => AgentMode::Multi,
@@ -173,6 +197,11 @@ pub fn render(cfg: &Config) -> String {
          round_budget = {}\n\
          grid_workers = {}\n\
          worker_budget = {}\n\
+         fault_rate = {}\n\
+         fault_seed = {}\n\
+         fault_sites = \"{}\"\n\
+         watchdog_steps = {}\n\
+         quarantine_after = {}\n\
          launch_overhead_us = {}\n\
          dram_bw = {}\n\
          sms = {}\n\
@@ -194,6 +223,11 @@ pub fn render(cfg: &Config) -> String {
         cfg.round_budget,
         cfg.grid_workers,
         cfg.worker_budget,
+        cfg.fault.rate,
+        cfg.fault.seed,
+        crate::faults::render_sites(cfg.fault.sites),
+        cfg.watchdog_steps,
+        cfg.quarantine_after,
         m.launch_overhead_us,
         m.dram_bw,
         m.sms,
@@ -303,6 +337,31 @@ mod tests {
     }
 
     #[test]
+    fn parses_fault_injection_and_supervision_keys() {
+        let cfg = parse(
+            "fault_rate = 0.25\nfault_seed = 99\n\
+             fault_sites = \"agent,grid\"\nwatchdog_steps = 5000\n\
+             quarantine_after = 3\n",
+        )
+        .unwrap();
+        assert!((cfg.fault.rate - 0.25).abs() < 1e-6);
+        assert_eq!(cfg.fault.seed, 99);
+        assert_eq!(
+            cfg.fault.sites,
+            crate::faults::parse_sites("agent,grid").unwrap()
+        );
+        assert_eq!(cfg.watchdog_steps, 5000);
+        assert_eq!(cfg.quarantine_after, 3);
+        let cfg = parse("fault_sites = \"none\"\n").unwrap();
+        assert_eq!(cfg.fault.sites, 0);
+        assert!(parse("fault_rate = 1.5\n").is_err());
+        assert!(parse("fault_rate = -0.1\n").is_err());
+        assert!(parse("fault_sites = \"bogus\"\n").is_err());
+        assert!(parse("watchdog_steps = nah\n").is_err());
+        assert!(parse("quarantine_after = nah\n").is_err());
+    }
+
+    #[test]
     fn render_parse_round_trips_every_key() {
         let mut custom = Config::multi_agent_adaptive();
         custom.rounds = 7;
@@ -316,6 +375,13 @@ mod tests {
         custom.round_budget = 5;
         custom.grid_workers = 6;
         custom.worker_budget = 9;
+        custom.fault = crate::faults::FaultPlan {
+            rate: 0.125,
+            seed: 77,
+            sites: crate::faults::parse_sites("validate,compile").unwrap(),
+        };
+        custom.watchdog_steps = 1_000_000;
+        custom.quarantine_after = 2;
         custom.model.launch_overhead_us = 5.5;
         for cfg in [
             Config::multi_agent(),
@@ -347,6 +413,11 @@ mod tests {
             assert_eq!(back.round_budget, cfg.round_budget);
             assert_eq!(back.grid_workers, cfg.grid_workers);
             assert_eq!(back.worker_budget, cfg.worker_budget);
+            assert_eq!(back.fault.rate.to_bits(), cfg.fault.rate.to_bits());
+            assert_eq!(back.fault.seed, cfg.fault.seed);
+            assert_eq!(back.fault.sites, cfg.fault.sites);
+            assert_eq!(back.watchdog_steps, cfg.watchdog_steps);
+            assert_eq!(back.quarantine_after, cfg.quarantine_after);
             assert_eq!(
                 back.model.launch_overhead_us.to_bits(),
                 cfg.model.launch_overhead_us.to_bits()

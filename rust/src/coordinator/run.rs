@@ -10,6 +10,7 @@
 use std::sync::Arc;
 
 use crate::agents::{CodingAgent, ProfilingAgent, TestQuality, TestingAgent};
+use crate::faults::{self, FaultPlan, FaultStats};
 use crate::interp::budget::run_indexed;
 use crate::interp::{CompileCache, WorkerBudget};
 use crate::ir::{printer, Kernel};
@@ -93,6 +94,24 @@ pub struct Config {
     /// changes scheduling, never a trajectory (every fan-out merges by
     /// index; test-pinned below).
     pub worker_budget: usize,
+    /// Deterministic fault-injection plan (chaos hardening; see
+    /// [`crate::faults`]). The default plan is read from the
+    /// `ASTRA_FAULT_RATE`/`ASTRA_FAULT_SEED`/`ASTRA_FAULT_SITES`
+    /// environment (the chaos-CI surface) and is disabled when those
+    /// are unset — a zero-cost no-op, bit-for-bit today's engine.
+    pub fault: FaultPlan,
+    /// Step-denominated per-candidate watchdog: cumulative interpreter
+    /// step budget per correctness launch during in-loop validation
+    /// (`0` = the interpreter's own [`crate::interp::STEP_LIMIT`]).
+    /// Runaway candidates trip an `IterationLimit` error instead of
+    /// hanging a round; the final oracle re-validation is *not* capped.
+    pub watchdog_steps: u64,
+    /// Quarantine a beam lineage after this many consecutive rounds in
+    /// which every one of its materialized candidates failed: the state
+    /// stops planning (its rounds log constant `quarantined:` records)
+    /// but keeps serving its known-good kernel. `0` (the default)
+    /// disables quarantine.
+    pub quarantine_after: usize,
     pub model: GpuModel,
 }
 
@@ -112,6 +131,9 @@ impl Config {
             round_budget: 0,
             grid_workers: 1,
             worker_budget: 0,
+            fault: FaultPlan::from_env(),
+            watchdog_steps: 0,
+            quarantine_after: 0,
             model: GpuModel::h100(),
         }
     }
@@ -228,6 +250,20 @@ pub struct Outcome {
     /// shared one so these counters never observe sibling runs.
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Injected faults observed in canonical results (0 when the fault
+    /// plan is disabled). Summed per candidate in index order, so the
+    /// counters are byte-identical at every worker count/budget.
+    pub faults_injected: u64,
+    /// Injected faults the supervision layer recovered from (a retry
+    /// eventually produced a real, uninjected evaluation).
+    pub faults_survived: u64,
+    /// Supervised retries performed (agent calls and evaluations).
+    pub retries: u64,
+    /// Injected hangs converted into watchdog timeouts.
+    pub watchdog_trips: u64,
+    /// Beam lineages quarantined after
+    /// [`Config::quarantine_after`] consecutive all-fail rounds.
+    pub quarantined_lineages: u64,
 }
 
 /// Accept a candidate if its measured (internal) geomean does not regress
@@ -304,7 +340,8 @@ pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
     let budget = Arc::new(WorkerBudget::from_config(cfg.worker_budget));
     let tester = TestingAgent::new(quality, cfg.seed)
         .with_grid_workers(cfg.grid_workers)
-        .with_worker_budget(Arc::clone(&budget));
+        .with_worker_budget(Arc::clone(&budget))
+        .with_step_limit(cfg.watchdog_steps);
     let profiler = ProfilingAgent::new(cfg.model.clone());
     let mut planner = search::make_planner(cfg);
     let coder = CodingAgent::new(cfg.bug_rate, cfg.seed ^ 0xC0DE);
@@ -326,16 +363,55 @@ pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
     let mut cur_profile = base_profile.clone();
     let mut blocked: Vec<Move> = Vec::new();
     let mut candidates_evaluated = 0usize;
+    let mut k_per_round: Vec<usize> = Vec::new();
+    let mut fault_stats = FaultStats::default();
+    let mut quarantined_lineages = 0u64;
+    let mut consec_failures = 0usize;
 
     // Lines 8-16: R rounds of suggest → apply → validate → profile.
     for round in 1..=cfg.rounds {
+        if cfg.quarantine_after > 0 && consec_failures >= cfg.quarantine_after {
+            // Quarantined lineage (mirrors the beam engine at B = 1):
+            // no planning, a constant record, the known-good kernel
+            // keeps serving.
+            records.push(RoundRecord {
+                round,
+                beam_state: 0,
+                candidate: 0,
+                applied: None,
+                rationale: String::new(),
+                pass: true,
+                speedup_internal: best_speedup,
+                mean_us_internal: cur_profile.mean_us,
+                accepted: false,
+                loc: printer::loc(&cur),
+                note: format!(
+                    "quarantined: lineage disabled after {} \
+                     consecutive failed rounds",
+                    cfg.quarantine_after
+                ),
+            });
+            continue;
+        }
         let mut suggestions = planner.suggest(&cur, &cur_tests, &cur_profile);
         suggestions.retain(|s| !blocked.contains(&s.mv));
+        // The greedy loop plans exactly once per (non-quarantined)
+        // round with K = 1 — the beam engine at B = K = 1 mirrors this
+        // exactly (differential wall).
+        k_per_round.push(1);
         // First applicable suggestion, fumble roll from the same derived
         // per-candidate stream the beam engine uses for (round, 0, 0).
         let mut materialized: Option<(Kernel, Move, String)> = None;
         let mut reasons = Vec::new();
-        for s in &suggestions {
+        for (pos, s) in suggestions.iter().enumerate() {
+            if let Err(reason) = search::supervised_agent_gate(
+                cfg.fault,
+                faults::mix(faults::candidate_key(round, 0, 0), pos as u64),
+                &mut fault_stats,
+            ) {
+                reasons.push(reason);
+                continue;
+            }
             let mut stream = search::candidate_stream(cfg.seed, round, 0, 0);
             match coder.apply_one(&cur, s, &mut stream) {
                 Ok(k) => {
@@ -365,13 +441,52 @@ pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
             continue;
         };
 
-        let (tests, profile) = {
+        // Same supervised evaluation (and panic containment) as the
+        // beam engine's uncancelled path, at the greedy key
+        // (round, 0, 0) — injected faults replay identically.
+        let key = faults::candidate_key(round, 0, 0);
+        let product = {
             let _in_flight = probe.enter();
-            let t = tester.validate_with(spec, &candidate, &suite, Some(&cache));
-            let p = profiler.profile(&candidate, &suite, Some(&base_profile));
-            (t, p)
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || {
+                    search::evaluate_supervised(
+                        spec,
+                        cfg,
+                        &tester,
+                        &profiler,
+                        &candidate,
+                        &suite,
+                        Some(&base_profile),
+                        Some(&cache),
+                        None,
+                        key,
+                    )
+                },
+            )) {
+                Ok(product) => product
+                    .expect("greedy evaluation runs without cancellation"),
+                Err(p) => search::panicked_product(
+                    &profiler,
+                    &candidate,
+                    &suite,
+                    Some(&base_profile),
+                    &crate::interp::budget::panic_message(p),
+                ),
+            }
         };
         candidates_evaluated += 1;
+        fault_stats.add(&product.stats);
+        let (tests, profile) = (product.tests, product.profile);
+        if tests.pass {
+            consec_failures = 0;
+        } else {
+            consec_failures += 1;
+            if cfg.quarantine_after > 0
+                && consec_failures == cfg.quarantine_after
+            {
+                quarantined_lineages += 1;
+            }
+        }
         let speedup = profile.speedup_vs_baseline;
         let improved = speedup >= best_speedup * ACCEPT_THRESHOLD;
         let accepted = tests.pass && improved;
@@ -437,12 +552,11 @@ pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
         SearchTelemetry {
             candidates_evaluated,
             peak_concurrent_evals: probe.peak(),
-            // The greedy loop plans exactly once per round with K = 1
-            // and never shrinks or cancels — the beam engine at
-            // B = K = 1 must mirror these exactly (differential wall).
-            k_per_round: vec![1; cfg.rounds],
+            k_per_round,
             adaptive_k_rounds: 0,
             cancelled_candidates: 0,
+            fault_stats,
+            quarantined_lineages,
         },
     )
 }

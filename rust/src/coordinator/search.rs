@@ -35,15 +35,19 @@
 //! non-improving move may pay again (the greedy loop kept stale blocks
 //! forever — a bug this module fixes for both engines).
 
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::agents::{
     priority_gap, CodingAgent, MockLlm, PlannerPolicy, ProfileReport,
     ProfilingAgent, SingleAgentPlanner, Suggestion, TestQuality, TestReport,
-    TestingAgent,
+    TestSuite, TestingAgent,
 };
-use crate::interp::budget::{join3, run_indexed};
+use crate::faults::{self, FaultKind, FaultPlan, FaultSite, FaultStats};
+use crate::interp::budget::{
+    join3, panic_message, run_indexed_catching,
+};
 use crate::interp::{CompileCache, WorkerBudget};
 use crate::ir::{printer, Kernel};
 use crate::kernels::KernelSpec;
@@ -64,6 +68,11 @@ struct BeamState {
     /// Internal geomean speedup vs the round-0 baseline.
     speedup: f64,
     blocked: Vec<Move>,
+    /// Consecutive rounds in which every kept candidate of this lineage
+    /// failed validation (reset by any passing candidate). At
+    /// [`Config::quarantine_after`] the lineage is quarantined: it
+    /// stops planning and serves its known-good kernel.
+    consec_failures: usize,
 }
 
 /// One materialized candidate awaiting evaluation.
@@ -84,6 +93,8 @@ struct StateRound {
     end: usize,
     /// Inapplicability reasons (reported when nothing materialized).
     reasons: Vec<String>,
+    /// The state sat out this round under lineage quarantine.
+    quarantined: bool,
 }
 
 /// A next-beam contender: an accepted candidate (fresh) or a surviving
@@ -109,6 +120,10 @@ pub(crate) struct SearchTelemetry {
     pub(crate) adaptive_k_rounds: usize,
     /// Candidates canonically abandoned by round cancellation.
     pub(crate) cancelled_candidates: usize,
+    /// Fault telemetry summed canonically (per candidate, index order).
+    pub(crate) fault_stats: FaultStats,
+    /// Lineages that crossed the quarantine threshold this run.
+    pub(crate) quarantined_lineages: u64,
 }
 
 /// Size one beam state's speculation width from the planner's priority
@@ -190,6 +205,234 @@ pub(crate) fn make_planner(cfg: &Config) -> Box<dyn PlannerPolicy> {
     }
 }
 
+/// Bounded supervised attempts per agent call / candidate evaluation.
+/// Backoff between attempts is *virtual*: the simulated clock has no
+/// wall time to wait on, so the schedule is simply the capped,
+/// deterministic attempt sequence keyed by attempt index.
+pub(crate) const MAX_ATTEMPTS: usize = 3;
+
+/// One candidate's supervised evaluation product: the verdict, the
+/// profile, and the fault telemetry the canonical summation reads.
+pub(crate) struct EvalProduct {
+    pub(crate) tests: TestReport,
+    pub(crate) profile: ProfileReport,
+    pub(crate) stats: FaultStats,
+}
+
+/// Canonical report for a failure synthesized by the fault plane.
+fn injected_report(msg: String) -> TestReport {
+    TestReport {
+        pass: false,
+        max_rel_err: f32::INFINITY,
+        max_abs_err: f32::INFINITY,
+        failure: Some(msg),
+        cases: 0,
+        cancelled_cases: 0,
+        round_cancelled: false,
+    }
+}
+
+/// Canonical failed product for a candidate whose worker panicked: the
+/// unwind was caught at the `run_indexed` fan-out boundary, the failure
+/// is attributed to this candidate, and the (pure) profile still runs
+/// so the record carries real measurements. Injected candidate panics
+/// only ever fire on a first attempt, so the stats they abandon are
+/// exactly `{injected: 1}` — recomputed here without replaying the
+/// supervision loop.
+pub(crate) fn panicked_product(
+    profiler: &ProfilingAgent,
+    kernel: &Kernel,
+    suite: &TestSuite,
+    base_profile: Option<&ProfileReport>,
+    msg: &str,
+) -> EvalProduct {
+    EvalProduct {
+        tests: injected_report(format!("worker panic: {msg}")),
+        profile: profiler.profile(kernel, suite, base_profile),
+        stats: FaultStats {
+            injected: u64::from(msg == faults::candidate_panic_msg()),
+            ..FaultStats::default()
+        },
+    }
+}
+
+/// AgentCall-site supervision around one coding-agent materialization:
+/// injected transient agent failures are retried in place (serial, so
+/// no schedule dependence) up to [`MAX_ATTEMPTS`]; exhaustion reports
+/// the candidate as inapplicable with the injected reason.
+pub(crate) fn supervised_agent_gate(
+    plan: FaultPlan,
+    key: u64,
+    stats: &mut FaultStats,
+) -> Result<(), String> {
+    if !plan.enabled() {
+        return Ok(());
+    }
+    let mut injected = 0u64;
+    for attempt in 0..MAX_ATTEMPTS {
+        if plan
+            .roll(FaultSite::AgentCall, faults::mix(key, attempt as u64))
+            .is_none()
+        {
+            stats.injected += injected;
+            stats.survived += injected;
+            return Ok(());
+        }
+        injected += 1;
+        if attempt + 1 < MAX_ATTEMPTS {
+            stats.retries += 1;
+        }
+    }
+    stats.injected += injected;
+    Err(faults::transient_agent_msg())
+}
+
+/// One supervised candidate evaluation: validation-site fault rolls,
+/// bounded deterministic retry, watchdog-denominated hang conversion,
+/// then the real validate + profile (with compile-/grid-level injection
+/// keyed per attempt). Returns `None` only when a beam-round token
+/// abandoned the validation (`cancel` is `Some`); injected candidate
+/// panics unwind to the caller's `catch_unwind` boundary.
+///
+/// With the plan disabled this is *exactly* today's evaluation — same
+/// calls, same cache traffic — so fault-off runs stay bit-identical
+/// (the differential walls are the oracle).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn evaluate_supervised(
+    spec: &KernelSpec,
+    cfg: &Config,
+    tester: &TestingAgent,
+    profiler: &ProfilingAgent,
+    kernel: &Kernel,
+    suite: &TestSuite,
+    base_profile: Option<&ProfileReport>,
+    cache: Option<&CompileCache>,
+    cancel: Option<(&AtomicBool, &AtomicBool)>,
+    key: u64,
+) -> Option<EvalProduct> {
+    let plan = cfg.fault;
+    let validate = |agent: &TestingAgent| match cancel {
+        Some((cand, rnd)) => {
+            agent.validate_cancellable(spec, kernel, suite, cand, rnd)
+        }
+        None => agent.validate_with(spec, kernel, suite, cache),
+    };
+    if !plan.enabled() {
+        let tests = validate(tester);
+        if tests.round_cancelled {
+            return None;
+        }
+        let profile = profiler.profile(kernel, suite, base_profile);
+        return Some(EvalProduct {
+            tests,
+            profile,
+            stats: FaultStats::default(),
+        });
+    }
+    let mut stats = FaultStats::default();
+    let mut last: Option<TestReport> = None;
+    for attempt in 0..MAX_ATTEMPTS {
+        if attempt > 0 {
+            stats.retries += 1;
+        }
+        let akey = faults::mix(key, attempt as u64);
+        if let Some(kind) = plan.roll(FaultSite::Validation, akey) {
+            // Panics only fire on a first attempt (downgraded to
+            // transients afterwards), so the stats a panic abandons are
+            // always exactly {injected: 1} — recomputable at the
+            // containment handler without replaying this loop.
+            let kind = if attempt > 0 && kind == FaultKind::Panic {
+                FaultKind::Transient
+            } else {
+                kind
+            };
+            stats.injected += 1;
+            match kind {
+                FaultKind::Panic => {
+                    panic!("{}", faults::candidate_panic_msg())
+                }
+                FaultKind::Poison => {
+                    // Terminal: a corrupted verdict is conservatively a
+                    // failure (the gate can never flip fail → pass) and
+                    // must not be retried into a laundered answer.
+                    let profile =
+                        profiler.profile(kernel, suite, base_profile);
+                    return Some(EvalProduct {
+                        tests: injected_report(faults::poison_msg()),
+                        profile,
+                        stats,
+                    });
+                }
+                FaultKind::Hang => {
+                    stats.watchdog_trips += 1;
+                    let steps = if cfg.watchdog_steps > 0 {
+                        cfg.watchdog_steps
+                    } else {
+                        crate::interp::STEP_LIMIT
+                    };
+                    last = Some(injected_report(faults::hang_msg(steps)));
+                    continue;
+                }
+                FaultKind::Transient => {
+                    last = Some(injected_report(
+                        faults::transient_validation_msg(),
+                    ));
+                    continue;
+                }
+            }
+        }
+        // Clean supervisor roll: the real validation runs, with
+        // compile- and grid-level injection keyed to this attempt.
+        let tests = validate(&tester.with_fault_context(plan, akey));
+        if tests.round_cancelled {
+            return None;
+        }
+        if let Some(f) = tests.failure.as_deref() {
+            if faults::is_retryable(f) {
+                stats.injected += 1;
+                last = Some(tests);
+                continue;
+            }
+            if faults::mentions_injection(f) {
+                // Injected but terminal (a grid-worker panic caught at
+                // the chunk join): canonical failed verdict as-is.
+                stats.injected += 1;
+                let profile = profiler.profile(kernel, suite, base_profile);
+                return Some(EvalProduct {
+                    tests,
+                    profile,
+                    stats,
+                });
+            }
+        }
+        // Real verdict. A profiling-sample fault retries the whole
+        // attempt; a clean roll completes the evaluation, at which
+        // point every injected fault along the way was survived.
+        if plan.roll(FaultSite::Profiling, akey).is_some() {
+            stats.injected += 1;
+            last = Some(injected_report(faults::transient_profile_msg()));
+            continue;
+        }
+        stats.survived = stats.injected;
+        let profile = profiler.profile(kernel, suite, base_profile);
+        return Some(EvalProduct {
+            tests,
+            profile,
+            stats,
+        });
+    }
+    // Retries exhausted: report the last injected failure. Nothing was
+    // survived — the evaluation never completed cleanly.
+    let tests =
+        last.expect("the loop only falls through after a retryable fault");
+    let profile = profiler.profile(kernel, suite, base_profile);
+    Some(EvalProduct {
+        tests,
+        profile,
+        stats,
+    })
+}
+
 /// Post-processing shared by both engines (§3.2): oracle re-validation
 /// and representative-shape measurement as three tasks over the
 /// process-wide worker pool ([`join3`] — the caller is the first
@@ -263,6 +506,11 @@ pub(crate) fn finish_outcome(
         cancelled_candidates: telemetry.cancelled_candidates,
         cache_hits: cache_stats.hits,
         cache_misses: cache_stats.misses,
+        faults_injected: telemetry.fault_stats.injected,
+        faults_survived: telemetry.fault_stats.survived,
+        retries: telemetry.fault_stats.retries,
+        watchdog_trips: telemetry.fault_stats.watchdog_trips,
+        quarantined_lineages: telemetry.quarantined_lineages,
     }
 }
 
@@ -306,7 +554,8 @@ pub(crate) fn optimize_beam_with_cache_budget(
     };
     let tester = TestingAgent::new(quality, cfg.seed)
         .with_grid_workers(cfg.grid_workers)
-        .with_worker_budget(Arc::clone(budget));
+        .with_worker_budget(Arc::clone(budget))
+        .with_step_limit(cfg.watchdog_steps);
     let profiler = ProfilingAgent::new(cfg.model.clone());
     let mut planner = make_planner(cfg);
     let coder = CodingAgent::new(cfg.bug_rate, cfg.seed ^ 0xC0DE);
@@ -327,12 +576,15 @@ pub(crate) fn optimize_beam_with_cache_budget(
     let mut k_per_round: Vec<usize> = Vec::new();
     let mut adaptive_k_events = 0usize;
     let mut cancelled_candidates = 0usize;
+    let mut fault_stats = FaultStats::default();
+    let mut quarantined_lineages = 0u64;
     let mut beam: Vec<BeamState> = vec![BeamState {
         kernel: baseline.clone(),
         tests: base_tests,
         profile: base_profile.clone(),
         speedup: 1.0,
         blocked: Vec::new(),
+        consec_failures: 0,
     }];
 
     for round in 1..=cfg.rounds {
@@ -340,6 +592,20 @@ pub(crate) fn optimize_beam_with_cache_budget(
         let mut cands: Vec<Candidate> = Vec::new();
         let mut per_state: Vec<StateRound> = Vec::with_capacity(beam.len());
         for (si, state) in beam.iter().enumerate() {
+            if cfg.quarantine_after > 0
+                && state.consec_failures >= cfg.quarantine_after
+            {
+                // Quarantined lineage: no planning, no speculation —
+                // the state serves its known-good kernel and logs a
+                // constant record below.
+                per_state.push(StateRound {
+                    start: cands.len(),
+                    end: cands.len(),
+                    reasons: Vec::new(),
+                    quarantined: true,
+                });
+                continue;
+            }
             let mut suggestions =
                 planner.suggest(&state.kernel, &state.tests, &state.profile);
             suggestions.retain(|s| !state.blocked.contains(&s.mv));
@@ -356,10 +622,24 @@ pub(crate) fn optimize_beam_with_cache_budget(
             }
             let start = cands.len();
             let mut reasons = Vec::new();
-            for s in &suggestions {
+            for (pos, s) in suggestions.iter().enumerate() {
                 let ci = cands.len() - start;
                 if ci >= k_state {
                     break;
+                }
+                // AgentCall-site supervision: transient coding-agent
+                // faults retried in place (serial, keyed by candidate
+                // slot and suggestion position — never by schedule).
+                if let Err(reason) = supervised_agent_gate(
+                    cfg.fault,
+                    faults::mix(
+                        faults::candidate_key(round, si, ci),
+                        pos as u64,
+                    ),
+                    &mut fault_stats,
+                ) {
+                    reasons.push(reason);
+                    continue;
                 }
                 let mut stream = candidate_stream(cfg.seed, round, si, ci);
                 match coder.apply_one(&state.kernel, s, &mut stream) {
@@ -377,6 +657,7 @@ pub(crate) fn optimize_beam_with_cache_budget(
                 start,
                 end: cands.len(),
                 reasons,
+                quarantined: false,
             });
         }
 
@@ -412,44 +693,71 @@ pub(crate) fn optimize_beam_with_cache_budget(
             (0..cands.len()).map(|_| AtomicBool::new(false)).collect();
         let evals_done = AtomicUsize::new(0);
         let improver_racy = AtomicBool::new(false);
-        let mut evals: Vec<Option<(TestReport, ProfileReport)>> =
-            run_indexed(Some(budget.as_ref()), cands.len(), |i| {
-                let cand = &cands[i];
-                let _in_flight = probe.enter();
-                if round_budget == 0 {
-                    let tests = tester
-                        .validate_with(spec, &cand.kernel, &suite, Some(cache));
-                    let profile = profiler
-                        .profile(&cand.kernel, &suite, Some(&base_profile));
-                    return Some((tests, profile));
-                }
-                let tests = tester.validate_cancellable(
+        // `run_indexed_catching` is the panic-containment boundary: a
+        // candidate whose worker panics (injected or not) lands as
+        // `Err(message)` in its own slot and is converted below into a
+        // canonical failed record instead of crashing the round.
+        let raw = run_indexed_catching(Some(budget.as_ref()), cands.len(), |i| {
+            let cand = &cands[i];
+            let _in_flight = probe.enter();
+            let key = faults::candidate_key(round, cand.parent, cand.index);
+            if round_budget == 0 {
+                return evaluate_supervised(
                     spec,
+                    cfg,
+                    &tester,
+                    &profiler,
                     &cand.kernel,
                     &suite,
-                    &cand_tokens[i],
-                    &round_cancel,
+                    Some(&base_profile),
+                    Some(cache),
+                    None,
+                    key,
                 );
-                if tests.round_cancelled {
-                    return None;
+            }
+            let product = evaluate_supervised(
+                spec,
+                cfg,
+                &tester,
+                &profiler,
+                &cand.kernel,
+                &suite,
+                Some(&base_profile),
+                None,
+                Some((&cand_tokens[i], &round_cancel)),
+                key,
+            )?;
+            let done = evals_done.fetch_add(1, Ordering::SeqCst) + 1;
+            if product.tests.pass
+                && product.profile.speedup_vs_baseline > round_best
+            {
+                improver_racy.store(true, Ordering::SeqCst);
+            }
+            if improver_racy.load(Ordering::SeqCst) && done >= round_budget {
+                // Raise the round token first, then every candidate
+                // token: a machine that observes its candidate token
+                // can then rely on the round flag being visible.
+                round_cancel.store(true, Ordering::SeqCst);
+                for t in &cand_tokens {
+                    t.store(true, Ordering::SeqCst);
                 }
-                let profile =
-                    profiler.profile(&cand.kernel, &suite, Some(&base_profile));
-                let done = evals_done.fetch_add(1, Ordering::SeqCst) + 1;
-                if tests.pass && profile.speedup_vs_baseline > round_best {
-                    improver_racy.store(true, Ordering::SeqCst);
-                }
-                if improver_racy.load(Ordering::SeqCst) && done >= round_budget {
-                    // Raise the round token first, then every candidate
-                    // token: a machine that observes its candidate token
-                    // can then rely on the round flag being visible.
-                    round_cancel.store(true, Ordering::SeqCst);
-                    for t in &cand_tokens {
-                        t.store(true, Ordering::SeqCst);
-                    }
-                }
-                Some((tests, profile))
-            });
+            }
+            Some(product)
+        });
+        let mut evals: Vec<Option<EvalProduct>> = raw
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| match r {
+                Ok(v) => v,
+                Err(msg) => Some(panicked_product(
+                    &profiler,
+                    &cands[i].kernel,
+                    &suite,
+                    Some(&base_profile),
+                    &msg,
+                )),
+            })
+            .collect();
 
         // ---- canonical cancellation schedule + repair ----------------
         // Deterministic reference semantics: walk candidates in index
@@ -469,16 +777,48 @@ pub(crate) fn optimize_beam_with_cache_budget(
                     continue;
                 }
                 if evals[i].is_none() {
-                    let tests =
-                        tester.validate_with(spec, &cands[i].kernel, &suite, None);
-                    let profile = profiler
-                        .profile(&cands[i].kernel, &suite, Some(&base_profile));
-                    evals[i] = Some((tests, profile));
+                    // The repair re-runs the full supervised evaluation
+                    // (same candidate key, so injected faults replay
+                    // identically), under the same panic containment as
+                    // the racy pass.
+                    let key = faults::candidate_key(
+                        round,
+                        cands[i].parent,
+                        cands[i].index,
+                    );
+                    let repaired =
+                        std::panic::catch_unwind(AssertUnwindSafe(|| {
+                            evaluate_supervised(
+                                spec,
+                                cfg,
+                                &tester,
+                                &profiler,
+                                &cands[i].kernel,
+                                &suite,
+                                Some(&base_profile),
+                                None,
+                                None,
+                                key,
+                            )
+                        }));
+                    evals[i] = Some(match repaired {
+                        Ok(product) => product
+                            .expect("repair runs without cancellation tokens"),
+                        Err(p) => panicked_product(
+                            &profiler,
+                            &cands[i].kernel,
+                            &suite,
+                            Some(&base_profile),
+                            &panic_message(p),
+                        ),
+                    });
                 }
-                let (tests, profile) =
+                let product =
                     evals[i].as_ref().expect("repaired just above");
                 kept += 1;
-                if tests.pass && profile.speedup_vs_baseline > round_best {
+                if product.tests.pass
+                    && product.profile.speedup_vs_baseline > round_best
+                {
                     improver_seen = true;
                 }
             }
@@ -489,10 +829,24 @@ pub(crate) fn optimize_beam_with_cache_budget(
             candidates_evaluated += cands.len();
         }
 
+        // ---- canonical fault telemetry (by candidate index) ----------
+        // Abandoned candidates contribute nothing: their true stats may
+        // not exist (cancelled mid-flight) and must not leak.
+        for (i, e) in evals.iter().enumerate() {
+            if abandoned[i] {
+                continue;
+            }
+            if let Some(p) = e {
+                fault_stats.add(&p.stats);
+            }
+        }
+
         // ---- gate, record, update the global best (by index) ---------
         let mut gate = vec![false; cands.len()];
         let mut rec_idx = vec![usize::MAX; cands.len()];
         let mut any_accept = vec![false; beam.len()];
+        let mut any_pass = vec![false; beam.len()];
+        let mut any_kept = vec![false; beam.len()];
         let mut new_blocks: Vec<Vec<Move>> = vec![Vec::new(); beam.len()];
         for (si, sr) in per_state.iter().enumerate() {
             if sr.start == sr.end {
@@ -507,10 +861,18 @@ pub(crate) fn optimize_beam_with_cache_budget(
                     mean_us_internal: beam[si].profile.mean_us,
                     accepted: false,
                     loc: printer::loc(&beam[si].kernel),
-                    note: format!(
-                        "no applicable suggestion ({})",
-                        sr.reasons.join("; ")
-                    ),
+                    note: if sr.quarantined {
+                        format!(
+                            "quarantined: lineage disabled after {} \
+                             consecutive failed rounds",
+                            cfg.quarantine_after
+                        )
+                    } else {
+                        format!(
+                            "no applicable suggestion ({})",
+                            sr.reasons.join("; ")
+                        )
+                    },
                 });
                 continue;
             }
@@ -538,8 +900,11 @@ pub(crate) fn optimize_beam_with_cache_budget(
                     });
                     continue;
                 }
-                let (tests, profile) =
+                let product =
                     evals[ci].as_ref().expect("kept candidates are evaluated");
+                let (tests, profile) = (&product.tests, &product.profile);
+                any_kept[si] = true;
+                any_pass[si] = any_pass[si] || tests.pass;
                 let speedup = profile.speedup_vs_baseline;
                 let improved = speedup >= round_best * ACCEPT_THRESHOLD;
                 let accepted = tests.pass && improved;
@@ -589,19 +954,21 @@ pub(crate) fn optimize_beam_with_cache_budget(
             if !gate[ci] {
                 continue;
             }
-            let (tests, profile) =
+            let product =
                 evals[ci].as_ref().expect("gated candidates are evaluated");
             pool.push(PoolEntry {
                 state: BeamState {
                     kernel: cands[ci].kernel.clone(),
-                    tests: tests.clone(),
-                    profile: profile.clone(),
-                    speedup: profile.speedup_vs_baseline,
+                    tests: product.tests.clone(),
+                    profile: product.profile.clone(),
+                    speedup: product.profile.speedup_vs_baseline,
                     // Fresh kernel, fresh block set: a move that did not
                     // pay on the parent may pay here.
                     blocked: Vec::new(),
+                    // An accepted child passed its tests: fresh lineage.
+                    consec_failures: 0,
                 },
-                score: profile.speedup_vs_baseline,
+                score: product.profile.speedup_vs_baseline,
                 parent: cands[ci].parent,
                 cand: cands[ci].index,
                 fresh: true,
@@ -612,6 +979,24 @@ pub(crate) fn optimize_beam_with_cache_budget(
         let mut superseded: Vec<(usize, BeamState)> = Vec::new();
         for (si, mut state) in beam.into_iter().enumerate() {
             state.blocked.append(&mut new_blocks[si]);
+            // Lineage health: a round where candidates were kept but
+            // every kept candidate *failed its tests* counts against the
+            // lineage; any passing kept candidate (even a non-improving
+            // one) resets it. Rounds with nothing kept (cancelled, no
+            // applicable suggestion, already quarantined) leave the
+            // counter untouched.
+            if any_kept[si] {
+                if any_pass[si] {
+                    state.consec_failures = 0;
+                } else {
+                    state.consec_failures += 1;
+                    if cfg.quarantine_after > 0
+                        && state.consec_failures == cfg.quarantine_after
+                    {
+                        quarantined_lineages += 1;
+                    }
+                }
+            }
             if any_accept[si] {
                 // Replaced by its accepted candidate(s); held back only
                 // for the narrow-beam fallback below.
@@ -697,6 +1082,8 @@ pub(crate) fn optimize_beam_with_cache_budget(
             k_per_round,
             adaptive_k_rounds: adaptive_k_events,
             cancelled_candidates,
+            fault_stats,
+            quarantined_lineages,
         },
     )
 }
@@ -791,6 +1178,8 @@ mod tests {
                 k_per_round: Vec::new(),
                 adaptive_k_rounds: 0,
                 cancelled_candidates: 0,
+                fault_stats: FaultStats::default(),
+                quarantined_lineages: 0,
             },
         );
         drop(caller);

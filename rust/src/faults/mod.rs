@@ -1,0 +1,456 @@
+//! Deterministic fault-injection plane (chaos hardening).
+//!
+//! A [`FaultPlan`] is a seeded, keyed source of injected faults: every
+//! injection site rolls with a key derived from *stable identities*
+//! (round, beam state, candidate slot, attempt, correctness case,
+//! block index) — never from execution order — so a given plan injects
+//! the exact same faults at every grid-worker count, worker-budget
+//! capacity and retry schedule. That is what lets the supervision
+//! layer's canonical-repair discipline keep chaos runs byte-identical
+//! across concurrency levels, and what makes a chaos failure
+//! reproducible from `(fault_seed, fault_rate, fault_sites)` alone.
+//!
+//! With `rate == 0.0` (the default) the plan is disabled and
+//! [`FaultPlan::roll`] returns `None` after a single branch — the
+//! whole plane is a no-op and the engine is bit-for-bit today's
+//! engine (pinned by the differential walls).
+
+use crate::util::Prng;
+
+/// Where a fault can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// A coding-agent call (materializing one candidate).
+    AgentCall,
+    /// A candidate validation (the testing agent's verdict).
+    Validation,
+    /// Grid-worker execution of one block inside the interpreter.
+    GridWorker,
+    /// Compiling a kernel for one correctness case.
+    Compile,
+    /// A profiling sample (one candidate's perf sweep).
+    Profiling,
+}
+
+impl FaultSite {
+    /// Bit in the [`FaultPlan::sites`] mask.
+    pub fn bit(self) -> u8 {
+        match self {
+            FaultSite::AgentCall => 1,
+            FaultSite::Validation => 2,
+            FaultSite::GridWorker => 4,
+            FaultSite::Compile => 8,
+            FaultSite::Profiling => 16,
+        }
+    }
+
+    /// Per-site salt decorrelating the keyed streams between sites.
+    fn salt(self) -> u64 {
+        match self {
+            FaultSite::AgentCall => 0xA6E7_7C11,
+            FaultSite::Validation => 0x7A11_DA7E,
+            FaultSite::GridWorker => 0x6B1D_3017,
+            FaultSite::Compile => 0xC0FF_11E5,
+            FaultSite::Profiling => 0x9120_F11E,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            FaultSite::AgentCall => "agent",
+            FaultSite::Validation => "validate",
+            FaultSite::GridWorker => "grid",
+            FaultSite::Compile => "compile",
+            FaultSite::Profiling => "profile",
+        }
+    }
+}
+
+/// All five sites enabled.
+pub const ALL_SITES: u8 = 31;
+
+/// What an injected fault does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fails once; a supervised retry (new attempt key) usually clears.
+    Transient,
+    /// Burns the step budget until the per-candidate watchdog trips.
+    Hang,
+    /// A corrupted result: conservatively reported as a failure so the
+    /// correctness gate can never be flipped from fail to pass.
+    Poison,
+    /// The worker panics; the unwind is caught at the fan-out boundary.
+    Panic,
+}
+
+/// A seeded deterministic fault-injection plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Per-roll injection probability in `[0, 1]`. `0.0` disables the
+    /// plane entirely (zero-cost no-op).
+    pub rate: f32,
+    /// Seed for the keyed roll streams.
+    pub seed: u64,
+    /// Bitmask of enabled [`FaultSite`]s (see [`ALL_SITES`]).
+    pub sites: u8,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::disabled()
+    }
+}
+
+impl FaultPlan {
+    /// The no-op plan: rate 0, all sites armed (so setting a rate is
+    /// the only step needed to turn injection on).
+    pub fn disabled() -> FaultPlan {
+        FaultPlan {
+            rate: 0.0,
+            seed: 0,
+            sites: ALL_SITES,
+        }
+    }
+
+    /// Whether any fault can ever fire.
+    pub fn enabled(&self) -> bool {
+        self.rate > 0.0 && self.sites != 0
+    }
+
+    /// Read a plan from `ASTRA_FAULT_RATE` / `ASTRA_FAULT_SEED` /
+    /// `ASTRA_FAULT_SITES` (the chaos-CI surface). Unset or unparsable
+    /// variables fall back to the disabled plan's fields.
+    pub fn from_env() -> FaultPlan {
+        let mut plan = FaultPlan::disabled();
+        if let Ok(v) = std::env::var("ASTRA_FAULT_RATE") {
+            if let Ok(r) = v.trim().parse::<f32>() {
+                if (0.0..=1.0).contains(&r) {
+                    plan.rate = r;
+                }
+            }
+        }
+        if let Ok(v) = std::env::var("ASTRA_FAULT_SEED") {
+            if let Ok(s) = v.trim().parse::<u64>() {
+                plan.seed = s;
+            }
+        }
+        if let Ok(v) = std::env::var("ASTRA_FAULT_SITES") {
+            if let Ok(m) = parse_sites(&v) {
+                plan.sites = m;
+            }
+        }
+        plan
+    }
+
+    /// Roll the keyed stream for `(site, key)`: `None` (no fault) or
+    /// the kind of fault to inject. Deterministic in `(plan, site,
+    /// key)` and nothing else.
+    pub fn roll(&self, site: FaultSite, key: u64) -> Option<FaultKind> {
+        if !self.enabled() || self.sites & site.bit() == 0 {
+            return None;
+        }
+        let mut r = Prng::seed(
+            (self.seed ^ site.salt())
+                .wrapping_add(key.wrapping_mul(0x9E3779B97F4A7C15)),
+        );
+        if !r.chance(self.rate) {
+            return None;
+        }
+        Some(kind_for(site, &mut r))
+    }
+}
+
+/// Which kinds each site can produce (weighted toward transients so a
+/// moderate rate stays survivable under supervision).
+fn kind_for(site: FaultSite, r: &mut Prng) -> FaultKind {
+    match site {
+        // Agent calls, compiles and profiling samples model flaky
+        // infrastructure: always retryable.
+        FaultSite::AgentCall | FaultSite::Compile | FaultSite::Profiling => {
+            FaultKind::Transient
+        }
+        FaultSite::Validation => match r.below(8) {
+            0..=3 => FaultKind::Transient,
+            4 | 5 => FaultKind::Hang,
+            6 => FaultKind::Poison,
+            _ => FaultKind::Panic,
+        },
+        FaultSite::GridWorker => match r.below(4) {
+            0..=2 => FaultKind::Transient,
+            _ => FaultKind::Panic,
+        },
+    }
+}
+
+/// Mix a sub-identity (case index, block index, attempt) into a key.
+pub fn mix(key: u64, sub: u64) -> u64 {
+    let mut z = key ^ sub.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^ (z >> 27)
+}
+
+/// Stable per-candidate identity, matching the coding-agent stream
+/// keying: `(round, beam state, candidate slot)`.
+pub fn candidate_key(round: usize, state: usize, cand: usize) -> u64 {
+    ((round as u64) << 32) ^ ((state as u64) << 16) ^ cand as u64
+}
+
+// ---- canonical failure messages -----------------------------------------
+
+/// Prefix every injected failure message carries.
+pub const INJECTED_PREFIX: &str = "injected:";
+
+pub fn transient_agent_msg() -> String {
+    "injected: transient agent-call fault".to_string()
+}
+
+pub fn transient_validation_msg() -> String {
+    "injected: transient validation fault".to_string()
+}
+
+pub fn hang_msg(watchdog_steps: u64) -> String {
+    format!("injected: hang (watchdog tripped after {watchdog_steps} steps)")
+}
+
+pub fn poison_msg() -> String {
+    "injected: poisoned validation result".to_string()
+}
+
+pub fn transient_compile_msg() -> String {
+    "injected: transient compile fault".to_string()
+}
+
+pub fn transient_profile_msg() -> String {
+    "injected: transient profiling fault".to_string()
+}
+
+/// Payload of an injected grid-worker panic (caught at the join).
+pub fn grid_panic_msg(block: i64) -> String {
+    format!("injected grid-worker panic at block {block}")
+}
+
+/// Payload of an injected candidate-worker panic (caught at the
+/// `budget::run_indexed` boundary).
+pub fn candidate_panic_msg() -> String {
+    "injected fault: candidate worker panic".to_string()
+}
+
+/// Whether a failure message is an injected fault a supervised retry
+/// may clear. Poisoned results are terminal (retrying a corrupted
+/// worker would launder a wrong answer); panics never reach the retry
+/// loop (they unwind to the fan-out boundary instead).
+pub fn is_retryable(failure: &str) -> bool {
+    failure.starts_with(INJECTED_PREFIX) && failure != poison_msg()
+}
+
+/// Whether a failure message was injected at all (telemetry).
+pub fn is_injected(failure: &str) -> bool {
+    failure.starts_with(INJECTED_PREFIX)
+}
+
+/// Whether a failure message stems from an injected fault anywhere in
+/// its chain — includes caught panics whose payloads embed the injected
+/// marker behind a `worker panic:` prefix (telemetry only; retryability
+/// stays the strict [`is_retryable`] check).
+pub fn mentions_injection(failure: &str) -> bool {
+    failure.contains("injected")
+}
+
+// ---- site-mask parse/render ---------------------------------------------
+
+/// Parse a sites mask: `all`, `none`, or a comma list of
+/// `agent,validate,grid,compile,profile`.
+pub fn parse_sites(s: &str) -> Result<u8, String> {
+    let s = s.trim();
+    if s.eq_ignore_ascii_case("all") {
+        return Ok(ALL_SITES);
+    }
+    if s.eq_ignore_ascii_case("none") {
+        return Ok(0);
+    }
+    let mut mask = 0u8;
+    for part in s.split(',') {
+        let part = part.trim();
+        let site = [
+            FaultSite::AgentCall,
+            FaultSite::Validation,
+            FaultSite::GridWorker,
+            FaultSite::Compile,
+            FaultSite::Profiling,
+        ]
+        .into_iter()
+        .find(|f| f.name() == part)
+        .ok_or_else(|| {
+            format!(
+                "unknown fault site '{part}' \
+                 (expected all, none, or agent/validate/grid/compile/profile)"
+            )
+        })?;
+        mask |= site.bit();
+    }
+    Ok(mask)
+}
+
+/// Render a sites mask in the form [`parse_sites`] accepts.
+pub fn render_sites(mask: u8) -> String {
+    if mask == ALL_SITES {
+        return "all".to_string();
+    }
+    if mask == 0 {
+        return "none".to_string();
+    }
+    let mut parts = Vec::new();
+    for site in [
+        FaultSite::AgentCall,
+        FaultSite::Validation,
+        FaultSite::GridWorker,
+        FaultSite::Compile,
+        FaultSite::Profiling,
+    ] {
+        if mask & site.bit() != 0 {
+            parts.push(site.name());
+        }
+    }
+    parts.join(",")
+}
+
+/// Telemetry accumulated by the supervision layer, summed canonically
+/// (per-candidate, index order) into [`crate::coordinator::Outcome`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Faults the plan injected (counted from final canonical results).
+    pub injected: u64,
+    /// Injected faults the run recovered from (retry eventually
+    /// produced a real, uninjected evaluation).
+    pub survived: u64,
+    /// Supervised retries performed.
+    pub retries: u64,
+    /// Hangs converted into watchdog timeouts.
+    pub watchdog_trips: u64,
+}
+
+impl FaultStats {
+    pub fn add(&mut self, other: &FaultStats) {
+        self.injected += other.injected;
+        self.survived += other.survived;
+        self.retries += other.retries;
+        self.watchdog_trips += other.watchdog_trips;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plan_never_rolls() {
+        let plan = FaultPlan::disabled();
+        assert!(!plan.enabled());
+        for key in 0..1000u64 {
+            assert_eq!(plan.roll(FaultSite::Validation, key), None);
+        }
+    }
+
+    #[test]
+    fn rolls_are_deterministic_and_keyed() {
+        let plan = FaultPlan {
+            rate: 0.5,
+            seed: 42,
+            sites: ALL_SITES,
+        };
+        let mut fired = 0;
+        for key in 0..200u64 {
+            let a = plan.roll(FaultSite::Validation, key);
+            let b = plan.roll(FaultSite::Validation, key);
+            assert_eq!(a, b, "same (site, key) must roll identically");
+            if a.is_some() {
+                fired += 1;
+            }
+        }
+        // Rate 0.5 over 200 keys: comfortably nonzero, not saturated.
+        assert!(fired > 50 && fired < 150, "fired {fired}");
+        // Sites decorrelate: the same key stream differs between sites.
+        let diverges = (0..200u64).any(|k| {
+            plan.roll(FaultSite::Validation, k).is_some()
+                != plan.roll(FaultSite::Compile, k).is_some()
+        });
+        assert!(diverges, "site salts must decorrelate the streams");
+    }
+
+    #[test]
+    fn rate_one_always_fires_and_masks_gate_sites() {
+        let plan = FaultPlan {
+            rate: 1.0,
+            seed: 7,
+            sites: FaultSite::Compile.bit(),
+        };
+        for key in 0..50u64 {
+            assert_eq!(
+                plan.roll(FaultSite::Compile, key),
+                Some(FaultKind::Transient),
+                "compile faults are always transient"
+            );
+            assert_eq!(plan.roll(FaultSite::Validation, key), None);
+            assert_eq!(plan.roll(FaultSite::GridWorker, key), None);
+        }
+    }
+
+    #[test]
+    fn grid_site_kinds_are_transient_or_panic() {
+        let plan = FaultPlan {
+            rate: 1.0,
+            seed: 3,
+            sites: ALL_SITES,
+        };
+        let mut kinds = std::collections::HashSet::new();
+        for key in 0..200u64 {
+            let k = plan.roll(FaultSite::GridWorker, key).unwrap();
+            assert!(
+                matches!(k, FaultKind::Transient | FaultKind::Panic),
+                "grid workers only error or panic, got {k:?}"
+            );
+            kinds.insert(format!("{k:?}"));
+        }
+        assert_eq!(kinds.len(), 2, "both grid kinds must occur at rate 1");
+    }
+
+    #[test]
+    fn sites_parse_render_round_trip() {
+        for mask in 0..=ALL_SITES {
+            let rendered = render_sites(mask);
+            assert_eq!(
+                parse_sites(&rendered),
+                Ok(mask),
+                "mask {mask} via '{rendered}'"
+            );
+        }
+        assert_eq!(parse_sites("all"), Ok(ALL_SITES));
+        assert_eq!(parse_sites("none"), Ok(0));
+        assert_eq!(
+            parse_sites("agent, grid"),
+            Ok(FaultSite::AgentCall.bit() | FaultSite::GridWorker.bit())
+        );
+        assert!(parse_sites("bogus").is_err());
+    }
+
+    #[test]
+    fn retryability_classifier() {
+        assert!(is_retryable(&transient_agent_msg()));
+        assert!(is_retryable(&transient_validation_msg()));
+        assert!(is_retryable(&hang_msg(1000)));
+        assert!(is_retryable(&transient_compile_msg()));
+        assert!(is_retryable(&transient_profile_msg()));
+        assert!(!is_retryable(&poison_msg()));
+        assert!(!is_retryable("compile: unknown variable v"));
+        assert!(is_injected(&poison_msg()));
+        assert!(!is_injected("runtime failure"));
+    }
+
+    #[test]
+    fn mix_decorrelates_sub_keys() {
+        let base = candidate_key(3, 1, 2);
+        let keys: std::collections::HashSet<u64> =
+            (0..100u64).map(|i| mix(base, i)).collect();
+        assert_eq!(keys.len(), 100, "mixed sub-keys must be distinct");
+    }
+}

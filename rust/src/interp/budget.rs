@@ -201,6 +201,35 @@ pub fn run_indexed<T: Send>(
         .collect()
 }
 
+/// [`run_indexed`] with per-item panic isolation: each `work(i)` runs
+/// under `catch_unwind`, so a panicking item lands as `Err(message)` in
+/// its own slot instead of unwinding through the pool and crashing the
+/// whole fan-out. The supervision layer uses this at the beam-candidate
+/// boundary so a poisoned candidate becomes a canonical failed record
+/// (coordinator/search.rs) rather than a crashed round. Result order is
+/// still by item index at every budget capacity.
+pub fn run_indexed_catching<T: Send>(
+    budget: Option<&WorkerBudget>,
+    n: usize,
+    work: impl Fn(usize) -> T + Sync,
+) -> Vec<Result<T, String>> {
+    run_indexed(budget, n, |i| {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| work(i)))
+            .map_err(panic_message)
+    })
+}
+
+/// Best-effort extraction of a panic payload's message.
+pub fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Run three *heterogeneous* tasks over the budgeted pool and return
 /// their results — the post-processing idiom ([`finish_outcome`]'s
 /// oracle re-validation plus two profile sweeps): the calling thread is
@@ -333,6 +362,28 @@ mod tests {
             }
         }
         assert!(run_indexed(None, 0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn run_indexed_catching_isolates_panics_by_item() {
+        for budget in [None, Some(WorkerBudget::new(1)), Some(WorkerBudget::new(3))] {
+            let out = run_indexed_catching(budget.as_ref(), 9, |i| {
+                if i % 4 == 2 {
+                    panic!("boom at {i}");
+                }
+                i * 10
+            });
+            for (i, r) in out.iter().enumerate() {
+                if i % 4 == 2 {
+                    assert_eq!(r.as_ref().unwrap_err(), &format!("boom at {i}"));
+                } else {
+                    assert_eq!(*r.as_ref().unwrap(), i * 10);
+                }
+            }
+            if let Some(b) = &budget {
+                assert!(b.try_acquire(usize::MAX).granted() == b.total() - 1);
+            }
+        }
     }
 
     #[test]

@@ -78,6 +78,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::thread;
 
+use crate::faults::{self, FaultKind, FaultPlan, FaultSite};
 use crate::ir::expr::{eval_cmp, eval_ibin};
 use crate::ir::types::{f32_to_f16_round, DType};
 use crate::ir::{DimEnv, Kernel};
@@ -91,8 +92,9 @@ use super::eval::{fastmath_quantize, EvalError, WARP_SIZE};
 
 /// Hard cap on interpreted statement executions per launch — transforms
 /// gone wrong (e.g. a broken loop update) fail fast instead of hanging the
-/// testing agent.
-const STEP_LIMIT: u64 = 200_000_000;
+/// testing agent. [`RunOpts::step_limit`] overrides it per launch (the
+/// supervision layer's step-denominated watchdog).
+pub const STEP_LIMIT: u64 = 200_000_000;
 
 /// How many steps may elapse between looks at the cooperative
 /// cancellation token. One relaxed atomic load every few thousand steps
@@ -170,6 +172,12 @@ pub enum InterpError {
         expect: usize,
         got: usize,
     },
+    /// A deterministic injected fault (chaos testing); the message is
+    /// keyed so it renders identically at every worker count.
+    Injected(String),
+    /// A grid worker panicked; the unwind was caught at the fan-out
+    /// boundary and attributed to the worker's chunk.
+    WorkerPanic(String),
 }
 
 impl std::fmt::Display for InterpError {
@@ -185,6 +193,8 @@ impl std::fmt::Display for InterpError {
                 f,
                 "buffer {buf} has length {got}, dims imply {expect}"
             ),
+            InterpError::Injected(m) => write!(f, "injected: {m}"),
+            InterpError::WorkerPanic(m) => write!(f, "worker panic: {m}"),
         }
     }
 }
@@ -263,6 +273,19 @@ pub struct RunOpts<'a> {
     /// Override of the cumulative step limit (`None` = [`STEP_LIMIT`]).
     /// Tests use small limits to pin the shared accounting.
     pub step_limit: Option<u64>,
+    /// Deterministic fault-injection context for this launch (`None` =
+    /// no injection, the zero-cost default). Grid-worker faults roll
+    /// keyed by `(ctx.key, block index)`, so a given plan injects the
+    /// same faults at every worker count.
+    pub fault: Option<FaultCtx>,
+}
+
+/// A launch's slice of a [`FaultPlan`]: the plan plus the stable launch
+/// key its block-level rolls mix against.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultCtx {
+    pub plan: FaultPlan,
+    pub key: u64,
 }
 
 impl Default for RunOpts<'_> {
@@ -273,8 +296,14 @@ impl Default for RunOpts<'_> {
             allow_zero_copy: true,
             budget: None,
             step_limit: None,
+            fault: None,
         }
     }
+}
+
+/// Render a caught panic payload for [`InterpError::WorkerPanic`].
+fn panic_payload_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    super::budget::panic_message(p)
 }
 
 /// Resolve a `grid_workers` request against a launch's grid: `0` means
@@ -369,18 +398,34 @@ pub fn run_compiled_with_opts(
 
     let result = if workers <= 1 {
         let _guard = opts.budget.map(|b| b.count_worker());
-        let mut m = Machine::new(
-            prog,
-            FullMem { bufs: &mut global[..] },
-            opts.cancel,
-            None,
-            limit,
-        );
-        m.run_block_range(0, prog.grid)
+        // The serial loop is its own "worker": a panicking block is
+        // caught here so its error rendering matches the parallel
+        // engines' containment at every worker count.
+        let bufs = &mut global[..];
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut m = Machine::new(
+                prog,
+                FullMem { bufs },
+                opts.cancel,
+                None,
+                limit,
+                opts.fault,
+            );
+            m.run_block_range(0, prog.grid)
+        })) {
+            Ok(r) => r,
+            Err(p) => Err(InterpError::WorkerPanic(panic_payload_msg(p))),
+        }
     } else if opts.allow_zero_copy && prog.slice_plan.is_some() {
-        run_grid_sliced(prog, &mut global, opts.cancel, workers, opts.budget, limit)
+        run_grid_sliced(
+            prog, &mut global, opts.cancel, workers, opts.budget, limit,
+            opts.fault,
+        )
     } else {
-        run_grid_parallel(prog, &mut global, opts.cancel, workers, opts.budget, limit)
+        run_grid_parallel(
+            prog, &mut global, opts.cancel, workers, opts.budget, limit,
+            opts.fault,
+        )
     };
 
     for (p, g) in prog.params.iter().zip(global) {
@@ -433,6 +478,7 @@ fn run_grid_parallel(
     workers: usize,
     budget: Option<&WorkerBudget>,
     limit: u64,
+    fault: Option<FaultCtx>,
 ) -> Result<(), InterpError> {
     let bounds = chunk_bounds(prog.grid, workers);
     let shared_steps = AtomicU64::new(0);
@@ -457,6 +503,7 @@ fn run_grid_parallel(
                             cancel,
                             Some(steps),
                             limit,
+                            fault,
                         );
                         let r = m.run_block_range(start, end);
                         (r, std::mem::take(&mut m.mem.dirty))
@@ -464,19 +511,40 @@ fn run_grid_parallel(
                 })
                 .collect();
             let _g = budget.map(|b| b.count_worker());
-            let mut m0 = Machine::new(
-                prog,
-                FullMem { bufs: &mut global[..] },
-                cancel,
-                Some(steps),
-                limit,
-            );
-            let r0 = m0.run_block_range(bounds[0], bounds[1]);
+            // Chunk 0 runs on the caller: catch its unwind like the
+            // join below catches the spawned workers'.
+            let bufs = &mut global[..];
+            let r0 = match std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    let mut m0 = Machine::new(
+                        prog,
+                        FullMem { bufs },
+                        cancel,
+                        Some(steps),
+                        limit,
+                        fault,
+                    );
+                    m0.run_block_range(bounds[0], bounds[1])
+                }),
+            ) {
+                Ok(r) => r,
+                Err(p) => Err(InterpError::WorkerPanic(panic_payload_msg(p))),
+            };
             (
                 r0,
                 handles
                     .into_iter()
-                    .map(|h| h.join().expect("grid worker panicked"))
+                    .map(|h| match h.join() {
+                        Ok(o) => o,
+                        // A panicked worker becomes a canonical failed
+                        // chunk: no dirty maps (its partial writes are
+                        // gone with its private copy), error attributed
+                        // in chunk (= ascending block) order below.
+                        Err(p) => (
+                            Err(InterpError::WorkerPanic(panic_payload_msg(p))),
+                            Vec::new(),
+                        ),
+                    })
                     .collect(),
             )
         });
@@ -515,6 +583,7 @@ fn run_grid_sliced(
     workers: usize,
     budget: Option<&WorkerBudget>,
     limit: u64,
+    fault: Option<FaultCtx>,
 ) -> Result<(), InterpError> {
     let plan = prog
         .slice_plan
@@ -591,25 +660,39 @@ fn run_grid_sliced(
                             cancel,
                             Some(steps),
                             limit,
+                            fault,
                         );
                         m.run_block_range(start, end)
                     })
                 })
                 .collect();
             let _g = budget.map(|b| b.count_worker());
-            let mut m0 = Machine::new(
-                prog,
-                SlicedMem { bufs: view0 },
-                cancel,
-                Some(steps),
-                limit,
-            );
-            let r0 = m0.run_block_range(bounds[0], bounds[1]);
+            let r0 = match std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    let mut m0 = Machine::new(
+                        prog,
+                        SlicedMem { bufs: view0 },
+                        cancel,
+                        Some(steps),
+                        limit,
+                        fault,
+                    );
+                    m0.run_block_range(bounds[0], bounds[1])
+                }),
+            ) {
+                Ok(r) => r,
+                Err(p) => Err(InterpError::WorkerPanic(panic_payload_msg(p))),
+            };
             (
                 r0,
                 handles
                     .into_iter()
-                    .map(|h| h.join().expect("sliced grid worker panicked"))
+                    .map(|h| match h.join() {
+                        Ok(r) => r,
+                        Err(p) => {
+                            Err(InterpError::WorkerPanic(panic_payload_msg(p)))
+                        }
+                    })
                     .collect(),
             )
         });
@@ -804,6 +887,8 @@ struct Machine<'a, G: GlobalMem> {
     /// Step count at which the token is next polled (`u64::MAX` when no
     /// token is attached, so the hot path pays a single compare).
     cancel_check_at: u64,
+    /// Deterministic fault-injection context (`None` = no injection).
+    fault: Option<FaultCtx>,
 }
 
 impl<'a, G: GlobalMem> Machine<'a, G> {
@@ -813,6 +898,7 @@ impl<'a, G: GlobalMem> Machine<'a, G> {
         cancel: Option<&'a AtomicBool>,
         steps_shared: Option<&'a AtomicU64>,
         step_limit: u64,
+        fault: Option<FaultCtx>,
     ) -> Machine<'a, G> {
         let block = prog.block as usize;
         Machine {
@@ -842,6 +928,7 @@ impl<'a, G: GlobalMem> Machine<'a, G> {
             } else {
                 u64::MAX
             },
+            fault,
         }
     }
 
@@ -850,6 +937,25 @@ impl<'a, G: GlobalMem> Machine<'a, G> {
         let active: Vec<i64> = (0..self.prog.block).collect();
         let top = self.prog.top;
         for bx in start..end {
+            // Block-keyed fault roll: the same plan injects the same
+            // faults at every worker count, and blocks run ascending
+            // within a chunk, so lowest-failing-block selection holds.
+            if let Some(ctx) = self.fault {
+                match ctx
+                    .plan
+                    .roll(FaultSite::GridWorker, faults::mix(ctx.key, bx as u64))
+                {
+                    None => {}
+                    Some(FaultKind::Panic) => {
+                        panic!("{}", faults::grid_panic_msg(bx))
+                    }
+                    Some(_) => {
+                        return Err(InterpError::Injected(format!(
+                            "transient grid fault at block {bx}"
+                        )))
+                    }
+                }
+            }
             self.bx = bx;
             self.reset_block();
             self.exec_range(top, &active)?;

@@ -65,7 +65,7 @@ pub use eval::{fastmath_quantize, WARP_SIZE};
 pub use machine::{
     auto_grid_workers, effective_grid_workers, run, run_compiled,
     run_compiled_with_cancel, run_compiled_with_opts, sliced_launches,
-    Buffer, ExecEnv, InterpError, RunOpts,
+    Buffer, ExecEnv, FaultCtx, InterpError, RunOpts, STEP_LIMIT,
 };
 
 use crate::ir::{DimEnv, Kernel};

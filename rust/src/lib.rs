@@ -18,6 +18,7 @@
 pub mod agents;
 pub mod config;
 pub mod coordinator;
+pub mod faults;
 pub mod interp;
 pub mod ir;
 pub mod kernels;

@@ -9,7 +9,7 @@
 //!
 //! Argument parsing is hand-rolled (no clap in the offline vendor set).
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use astra::coordinator::{self, AgentMode, Config};
 use astra::interp::CompileCache;
@@ -82,7 +82,23 @@ fn print_usage() {
          \x20 --grid-workers W      block-parallel interpreter workers; 1 =\n\
          \x20                       serial, 0 = auto per launch (grid_workers)\n\
          \x20 --worker-budget N     process-wide cap on live interpreter\n\
-         \x20                       threads; 0 = one per core (worker_budget)\n"
+         \x20                       threads; 0 = one per core (worker_budget)\n\n\
+         fault injection & supervision (chaos hardening; also read from\n\
+         ASTRA_FAULT_RATE / ASTRA_FAULT_SEED / ASTRA_FAULT_SITES):\n\
+         \x20 --fault-rate P        per-site injection probability; 0 = off,\n\
+         \x20                       zero cost (fault_rate)\n\
+         \x20 --fault-seed N        seed for the keyed fault rolls — a fixed\n\
+         \x20                       seed replays byte-identically at any\n\
+         \x20                       worker count (fault_seed)\n\
+         \x20 --fault-sites LIST    \"all\", \"none\", or a comma list of\n\
+         \x20                       agent,validate,grid,compile,profile\n\
+         \x20                       (fault_sites)\n\
+         \x20 --watchdog-steps N    step-denominated per-candidate validation\n\
+         \x20                       budget; 0 = the interpreter's own limit\n\
+         \x20                       (watchdog_steps)\n\
+         \x20 --quarantine-after N  disable a beam lineage after N consecutive\n\
+         \x20                       all-failed rounds; 0 = never\n\
+         \x20                       (quarantine_after)\n"
     );
 }
 
@@ -119,6 +135,11 @@ fn build_config(args: &[String]) -> Result<Config> {
         ("--round-budget", "round_budget"),
         ("--grid-workers", "grid_workers"),
         ("--worker-budget", "worker_budget"),
+        ("--fault-rate", "fault_rate"),
+        ("--fault-seed", "fault_seed"),
+        ("--fault-sites", "fault_sites"),
+        ("--watchdog-steps", "watchdog_steps"),
+        ("--quarantine-after", "quarantine_after"),
     ] {
         if let Some(v) = opt_value(args, flag) {
             config::apply(&mut cfg, &mut model, key, &v)?;
@@ -215,33 +236,63 @@ fn cmd_validate() -> Result<()> {
     Ok(())
 }
 
+/// Parse a `--flag N` count argument with a typed, flag-named error.
+fn parse_count(args: &[String], flag: &str, default: usize) -> Result<usize> {
+    match opt_value(args, flag) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .with_context(|| format!("{flag} expects a non-negative integer, got {v:?}")),
+    }
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
-    let steps: usize = opt_value(args, "--steps")
-        .map(|v| v.parse())
-        .transpose()?
-        .unwrap_or(50);
-    let warmup: usize = opt_value(args, "--warmup")
-        .map(|v| v.parse())
-        .transpose()?
-        .unwrap_or(5);
+    let steps = parse_count(args, "--steps", 50)?;
+    let warmup = parse_count(args, "--warmup", 5)?;
+    if steps == 0 {
+        return Err(anyhow!("--steps must be >= 1 (0 timed steps measure nothing)"));
+    }
     let dir = default_artifacts_dir()?;
-    // The pre-serve gate covers both kernel-IR variants in one pass (it
-    // is variant-agnostic: the drop-in claim needs baseline AND
-    // optimized checked), so it runs once, not per pipeline. Repeated
-    // gates sharing a cache compile nothing new — callers validating in
-    // a loop should hoist the cache accordingly.
+    // The degradable pre-serve gate covers both kernel-IR variants in
+    // one pass; a failing optimized kernel demotes to its baseline IR
+    // (reported below) instead of refusing to serve. Repeated gates
+    // sharing a cache compile nothing new — callers validating in a
+    // loop should hoist the cache accordingly.
     let cache = CompileCache::with_default_capacity();
-    let checked =
-        pipeline::validate_serving_kernels(&pipeline::ServeConfig::default(), &cache)?;
-    println!("pre-serve gate: {checked} serving launches validated (baseline + optimized IR)");
+    let gate = pipeline::validate_serving_kernels_with_fallback(
+        &pipeline::ServeConfig::default(),
+        &cache,
+    )?;
+    println!(
+        "pre-serve gate: {} serving launches validated (baseline + optimized IR)",
+        gate.validated
+    );
+    for (kernel, reason) in &gate.fallbacks {
+        println!("pre-serve gate: {kernel} demoted to baseline IR ({reason})");
+    }
     for variant in ["baseline", "optimized"] {
         let eng = Engine::from_dir(&dir)?;
         let mut pipe = DecodePipeline::new(eng, variant, 7)?;
-        let stats = pipe.serve(steps, warmup, 3)?;
+        let stats = if variant == "optimized" {
+            // Mid-serve degradation: a failing optimized step trips the
+            // circuit breaker and serves from the baseline pipeline on
+            // the same batch state until a re-probe succeeds.
+            let fb_eng = Engine::from_dir(&dir)?;
+            let mut fb = DecodePipeline::new(fb_eng, "baseline", 7)?;
+            pipe.serve_with_fallback(&mut fb, steps, warmup, 3)?
+        } else {
+            pipe.serve(steps, warmup, 3)?
+        };
         println!(
             "{variant:<10} batch={} steps={} mean={:.0}us p50={:.0}us p95={:.0}us throughput={:.0} tok/s",
             stats.batch, stats.steps, stats.mean_us, stats.p50_us, stats.p95_us, stats.tokens_per_s
         );
+        if stats.breaker_trips > 0 {
+            println!(
+                "{variant:<10} degraded: {} fallback steps, {} breaker trips, {} reprobes",
+                stats.fallback_steps, stats.breaker_trips, stats.reprobes
+            );
+        }
     }
     Ok(())
 }

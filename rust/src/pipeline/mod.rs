@@ -46,23 +46,25 @@ impl ServeConfig {
 }
 
 /// The serving-shape dims of one optimized kernel under `cfg` — the
-/// launches the decode layer actually performs each step.
-fn serving_dims(cfg: &ServeConfig, spec: &KernelSpec) -> DimEnv {
+/// launches the decode layer actually performs each step. A kernel
+/// outside the decode layer is a typed error, not a panic: the serving
+/// path degrades, it does not crash.
+fn serving_dims(cfg: &ServeConfig, spec: &KernelSpec) -> Result<DimEnv> {
     match spec.paper_name {
-        "merge_attn_states_lse" => kernels::dims_of(&[
+        "merge_attn_states_lse" => Ok(kernels::dims_of(&[
             ("S", cfg.batch as i64),
             ("H", cfg.heads as i64),
             ("D", cfg.head_dim as i64),
-        ]),
-        "fused_add_rmsnorm" => kernels::dims_of(&[
+        ])),
+        "fused_add_rmsnorm" => Ok(kernels::dims_of(&[
             ("B", cfg.batch as i64),
             ("D", cfg.hidden() as i64),
-        ]),
-        "silu_and_mul" => kernels::dims_of(&[
+        ])),
+        "silu_and_mul" => Ok(kernels::dims_of(&[
             ("B", cfg.batch as i64),
             ("D", cfg.inter as i64),
-        ]),
-        other => panic!("no serving shape mapping for kernel {other}"),
+        ])),
+        other => Err(anyhow!("no serving shape mapping for kernel {other}")),
     }
 }
 
@@ -80,35 +82,140 @@ pub fn validate_serving_kernels(
 ) -> Result<usize> {
     let mut launches = 0usize;
     for spec in kernels::all_specs() {
-        let dims = serving_dims(cfg, &spec);
+        let dims = serving_dims(cfg, &spec)?;
         let base = (spec.build_baseline)();
         let opt = transforms::optimized_reference(&base);
         for kernel in [&base, &opt] {
-            let prog = cache
-                .get_or_compile(kernel, &dims)
-                .map_err(|e| anyhow!("{} ({:?}): {e}", spec.paper_name, dims))?;
-            let inputs = (spec.gen_inputs)(&dims, 0x5E21);
-            let mut env = interp::ExecEnv::for_kernel(kernel, &dims);
-            for (name, data) in &inputs {
-                env.set(name, data.clone());
-            }
-            interp::run_compiled(&prog, &mut env)
-                .map_err(|e| anyhow!("{} ({:?}): {e}", spec.paper_name, dims))?;
-            let want = (spec.reference)(&dims, &inputs.iter().cloned().collect());
-            for buf in spec.out_bufs {
-                let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
-                if rel >= spec.rel_tol && abs >= spec.abs_tol {
-                    return Err(anyhow!(
-                        "{} {buf}: serving-shape mismatch (abs {abs:.2e}, \
-                         rel {rel:.2e}) at {dims:?}",
-                        spec.paper_name
-                    ));
-                }
-            }
+            validate_one_launch(&spec, kernel, &dims, cache)?;
             launches += 1;
         }
     }
     Ok(launches)
+}
+
+/// Oracle-check one kernel variant on one serving shape through `cache`.
+fn validate_one_launch(
+    spec: &KernelSpec,
+    kernel: &crate::ir::Kernel,
+    dims: &DimEnv,
+    cache: &CompileCache,
+) -> Result<()> {
+    let prog = cache
+        .get_or_compile(kernel, dims)
+        .map_err(|e| anyhow!("{} ({:?}): {e}", spec.paper_name, dims))?;
+    let inputs = (spec.gen_inputs)(dims, 0x5E21);
+    let mut env = interp::ExecEnv::for_kernel(kernel, dims);
+    for (name, data) in &inputs {
+        env.set(name, data.clone());
+    }
+    interp::run_compiled(&prog, &mut env)
+        .map_err(|e| anyhow!("{} ({:?}): {e}", spec.paper_name, dims))?;
+    let want = (spec.reference)(dims, &inputs.iter().cloned().collect());
+    for buf in spec.out_bufs {
+        let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
+        if rel >= spec.rel_tol && abs >= spec.abs_tol {
+            return Err(anyhow!(
+                "{} {buf}: serving-shape mismatch (abs {abs:.2e}, \
+                 rel {rel:.2e}) at {dims:?}",
+                spec.paper_name
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// What the degradable pre-serve gate found: how many launches passed,
+/// and which kernels' *optimized* IR failed and fell back to baseline.
+#[derive(Debug, Clone)]
+pub struct GateReport {
+    /// Launches that passed the oracle.
+    pub validated: usize,
+    /// `(kernel, reason)` pairs whose optimized variant failed the gate;
+    /// serving degrades to the baseline IR for these kernels.
+    pub fallbacks: Vec<(String, String)>,
+}
+
+/// Degradable pre-serve gate: like [`validate_serving_kernels`], but a
+/// failing *optimized* variant demotes that kernel to its baseline IR
+/// (recorded in the report) instead of refusing to serve. A failing
+/// *baseline* is still fatal — there is no older variant to fall back
+/// to, so serving would be flying blind.
+pub fn validate_serving_kernels_with_fallback(
+    cfg: &ServeConfig,
+    cache: &CompileCache,
+) -> Result<GateReport> {
+    let mut report = GateReport {
+        validated: 0,
+        fallbacks: Vec::new(),
+    };
+    for spec in kernels::all_specs() {
+        let dims = serving_dims(cfg, &spec)?;
+        let base = (spec.build_baseline)();
+        validate_one_launch(&spec, &base, &dims, cache)?;
+        report.validated += 1;
+        let opt = transforms::optimized_reference(&base);
+        match validate_one_launch(&spec, &opt, &dims, cache) {
+            Ok(()) => report.validated += 1,
+            Err(e) => report
+                .fallbacks
+                .push((spec.paper_name.to_string(), format!("{e:#}"))),
+        }
+    }
+    Ok(report)
+}
+
+/// Per-pipeline circuit breaker with a deterministic exponential
+/// re-probe schedule. Closed, every step tries the primary variant. A
+/// failure opens the breaker for `2^min(consecutive_failures, 6)` steps
+/// of baseline serving, after which exactly one step re-probes the
+/// primary: success closes the breaker, failure doubles the cooldown
+/// (capped at 64 steps). No wall clocks — the schedule is denominated
+/// in decode steps, so it is reproducible run-to-run.
+#[derive(Debug, Default)]
+pub struct CircuitBreaker {
+    consec_failures: u32,
+    cooldown: u64,
+    /// Failures that opened (or re-opened) the breaker.
+    pub trips: u64,
+    /// Re-probe attempts after a cooldown elapsed.
+    pub reprobes: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new() -> CircuitBreaker {
+        CircuitBreaker::default()
+    }
+
+    /// Called once per serving step *before* executing it: `true` means
+    /// try the primary this step, `false` means serve the fallback.
+    pub fn try_primary(&mut self) -> bool {
+        if self.cooldown == 0 {
+            return true;
+        }
+        self.cooldown -= 1;
+        if self.cooldown == 0 {
+            self.reprobes += 1;
+            return true;
+        }
+        false
+    }
+
+    /// The primary served this step cleanly.
+    pub fn on_success(&mut self) {
+        self.consec_failures = 0;
+    }
+
+    /// The primary failed this step: open for `2^min(f, 6)` steps.
+    pub fn on_failure(&mut self) {
+        self.trips += 1;
+        self.consec_failures += 1;
+        self.cooldown = 1 << self.consec_failures.min(6);
+    }
+
+    /// Whether the breaker is currently serving the fallback.
+    pub fn open(&self) -> bool {
+        self.cooldown > 0
+    }
 }
 
 /// Latency/throughput statistics from a serving run.
@@ -121,6 +228,13 @@ pub struct ServeStats {
     pub p95_us: f64,
     /// Decode tokens per second (batch × steps / wall time).
     pub tokens_per_s: f64,
+    /// Timed steps served by the baseline fallback pipeline (0 when the
+    /// primary never failed, or under plain [`DecodePipeline::serve`]).
+    pub fallback_steps: usize,
+    /// Primary-variant failures that opened the circuit breaker.
+    pub breaker_trips: u64,
+    /// Breaker re-probe attempts after a cooldown elapsed.
+    pub reprobes: u64,
 }
 
 /// Batched decode state: hidden activations + residual + the two partial
@@ -235,6 +349,11 @@ impl DecodePipeline {
 
     /// Serve `steps` batched decode iterations; returns latency stats.
     pub fn serve(&mut self, steps: usize, warmup: usize, seed: u64) -> Result<ServeStats> {
+        if steps == 0 {
+            return Err(anyhow!(
+                "serve requires at least 1 timed step (got 0)"
+            ));
+        }
         self.prepare()?;
         let mut state = self.new_state(seed);
         for _ in 0..warmup {
@@ -247,15 +366,99 @@ impl DecodePipeline {
             lat.push(us);
         }
         let wall = t0.elapsed().as_secs_f64();
-        lat.sort_by(|a, b| a.total_cmp(b));
-        Ok(ServeStats {
+        Ok(finish_stats(lat, steps, self.cfg.batch, wall, 0, 0, 0))
+    }
+
+    /// Serve `steps` iterations with mid-serve graceful degradation: a
+    /// primary-step failure trips a per-run [`CircuitBreaker`] and the
+    /// step (plus the breaker's cooldown window) is served by
+    /// `fallback` — the baseline pipeline — against the *same* batch
+    /// state, so the decode stream never stalls. The breaker re-probes
+    /// the primary on its deterministic step-denominated schedule; only
+    /// a step failing on *both* pipelines aborts the run. Degradation
+    /// telemetry lands in the returned [`ServeStats`].
+    pub fn serve_with_fallback(
+        &mut self,
+        fallback: &mut DecodePipeline,
+        steps: usize,
+        warmup: usize,
+        seed: u64,
+    ) -> Result<ServeStats> {
+        if steps == 0 {
+            return Err(anyhow!(
+                "serve requires at least 1 timed step (got 0)"
+            ));
+        }
+        self.prepare()?;
+        fallback.prepare()?;
+        let mut breaker = CircuitBreaker::new();
+        let mut state = self.new_state(seed);
+        let mut serve_one = |breaker: &mut CircuitBreaker,
+                             primary: &mut DecodePipeline,
+                             fb: &mut DecodePipeline,
+                             state: &mut BatchState|
+         -> Result<(f64, bool)> {
+            if breaker.try_primary() {
+                match primary.step(state) {
+                    Ok((_, us)) => {
+                        breaker.on_success();
+                        return Ok((us, false));
+                    }
+                    Err(_) => breaker.on_failure(),
+                }
+            }
+            let (_, us) = fb.step(state)?;
+            Ok((us, true))
+        };
+        for _ in 0..warmup {
+            serve_one(&mut breaker, self, fallback, &mut state)?;
+        }
+        let mut lat = Vec::with_capacity(steps);
+        let mut fallback_steps = 0usize;
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let (us, fell_back) =
+                serve_one(&mut breaker, self, fallback, &mut state)?;
+            if fell_back {
+                fallback_steps += 1;
+            }
+            lat.push(us);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        Ok(finish_stats(
+            lat,
             steps,
-            batch: self.cfg.batch,
-            mean_us: lat.iter().sum::<f64>() / steps as f64,
-            p50_us: lat[steps / 2],
-            p95_us: lat[((steps as f64 * 0.95) as usize).min(steps - 1)],
-            tokens_per_s: (self.cfg.batch * steps) as f64 / wall,
-        })
+            self.cfg.batch,
+            wall,
+            fallback_steps,
+            breaker.trips,
+            breaker.reprobes,
+        ))
+    }
+}
+
+/// Assemble [`ServeStats`] from a timed latency vector (`steps >= 1`,
+/// guarded by the serve entry points).
+fn finish_stats(
+    mut lat: Vec<f64>,
+    steps: usize,
+    batch: usize,
+    wall: f64,
+    fallback_steps: usize,
+    breaker_trips: u64,
+    reprobes: u64,
+) -> ServeStats {
+    lat.sort_by(|a, b| a.total_cmp(b));
+    ServeStats {
+        steps,
+        batch,
+        mean_us: lat.iter().sum::<f64>() / steps as f64,
+        p50_us: lat[steps / 2],
+        p95_us: lat[((steps as f64 * 0.95) as usize).min(steps - 1)],
+        tokens_per_s: (batch * steps) as f64 / wall,
+        fallback_steps,
+        breaker_trips,
+        reprobes,
     }
 }
 
@@ -292,10 +495,64 @@ mod tests {
     fn serving_dims_cover_every_kernel() {
         let cfg = ServeConfig::default();
         for spec in kernels::all_specs() {
-            let dims = serving_dims(&cfg, &spec);
+            let dims = serving_dims(&cfg, &spec)
+                .expect("every catalog kernel has a serving shape");
             for name in spec.dims {
                 assert!(dims.contains_key(*name), "{}: {name}", spec.paper_name);
             }
         }
+    }
+
+    #[test]
+    fn fallback_gate_validates_everything_on_a_healthy_catalog() {
+        let cache = CompileCache::with_default_capacity();
+        let report = validate_serving_kernels_with_fallback(
+            &ServeConfig::default(),
+            &cache,
+        )
+        .expect("baseline variants must pass");
+        assert_eq!(report.validated, 6);
+        assert!(
+            report.fallbacks.is_empty(),
+            "healthy optimized IR must not demote: {:?}",
+            report.fallbacks
+        );
+    }
+
+    #[test]
+    fn breaker_reprobe_schedule_is_exponential_and_capped() {
+        let mut b = CircuitBreaker::new();
+        // Closed: every step tries the primary, no reprobe accounting.
+        assert!(b.try_primary());
+        assert!(!b.open());
+        b.on_success();
+        // Failures 1..=8: cooldown 2, 4, 8, 16, 32, 64, 64, 64 — each
+        // window serves the fallback for cooldown-1 steps, then exactly
+        // one step re-probes.
+        for (f, want_cooldown) in
+            [2u64, 4, 8, 16, 32, 64, 64, 64].iter().enumerate()
+        {
+            assert!(b.try_primary(), "failure {f}: breaker was open early");
+            b.on_failure();
+            assert!(b.open());
+            for step in 1..*want_cooldown {
+                assert!(
+                    !b.try_primary(),
+                    "failure {f}: probed {step} steps into a \
+                     {want_cooldown}-step cooldown"
+                );
+            }
+            assert!(b.try_primary(), "failure {f}: cooldown never elapsed");
+        }
+        assert_eq!(b.trips, 8);
+        assert_eq!(b.reprobes, 8);
+        // A successful probe closes the breaker and resets the schedule.
+        b.on_success();
+        assert!(!b.open());
+        assert!(b.try_primary());
+        b.on_failure();
+        assert_eq!(b.trips, 9);
+        assert!(!b.try_primary(), "fresh failure reopens at cooldown 2");
+        assert!(b.try_primary());
     }
 }

@@ -314,6 +314,22 @@ pub fn trace(outcome: &Outcome) -> String {
             outcome.cancelled_candidates
         );
     }
+    if outcome.faults_injected > 0
+        || outcome.retries > 0
+        || outcome.watchdog_trips > 0
+        || outcome.quarantined_lineages > 0
+    {
+        let _ = writeln!(
+            s,
+            "chaos: {} faults injected ({} survived), {} retries, \
+             {} watchdog trips, {} lineages quarantined",
+            outcome.faults_injected,
+            outcome.faults_survived,
+            outcome.retries,
+            outcome.watchdog_trips,
+            outcome.quarantined_lineages
+        );
+    }
     s
 }
 

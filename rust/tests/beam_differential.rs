@@ -62,6 +62,20 @@ fn assert_results_identical(a: &Outcome, b: &Outcome, label: &str) {
     );
     assert_eq!(a.cache_hits, b.cache_hits, "{label}: cache hits");
     assert_eq!(a.cache_misses, b.cache_misses, "{label}: cache misses");
+    assert_eq!(
+        a.faults_injected, b.faults_injected,
+        "{label}: faults injected"
+    );
+    assert_eq!(
+        a.faults_survived, b.faults_survived,
+        "{label}: faults survived"
+    );
+    assert_eq!(a.retries, b.retries, "{label}: retries");
+    assert_eq!(a.watchdog_trips, b.watchdog_trips, "{label}: watchdog trips");
+    assert_eq!(
+        a.quarantined_lineages, b.quarantined_lineages,
+        "{label}: quarantined lineages"
+    );
 }
 
 #[test]
@@ -217,6 +231,23 @@ fn round_cancellation_is_deterministic_at_every_worker_count() {
             assert_eq!(
                 base.cache_misses, out.cache_misses,
                 "{label}: cache misses"
+            );
+            assert_eq!(
+                (
+                    base.faults_injected,
+                    base.faults_survived,
+                    base.retries,
+                    base.watchdog_trips,
+                    base.quarantined_lineages,
+                ),
+                (
+                    out.faults_injected,
+                    out.faults_survived,
+                    out.retries,
+                    out.watchdog_trips,
+                    out.quarantined_lineages,
+                ),
+                "{label}: fault telemetry"
             );
         }
     }

@@ -330,6 +330,123 @@ fn mid_grid_failure_reports_lowest_block_error_at_every_worker_count() {
     }
 }
 
+/// Error-path wall for the fault plane's *panicking* grid workers: an
+/// injected worker panic unwinds to the engine's per-chunk
+/// `catch_unwind` boundary and must surface as the same
+/// lowest-failing-block `WorkerPanic` rendering as the serial loop —
+/// at every worker count, on both grid paths. The plan is found by a
+/// test-side scan of the (pure) roll function, so the test knows which
+/// block panics before running anything.
+#[test]
+fn injected_grid_worker_panic_reports_lowest_block_at_every_worker_count() {
+    use astra::faults::{self, FaultKind, FaultPlan, FaultSite};
+    use astra::interp::FaultCtx;
+    use astra::ir::build::*;
+    use astra::ir::{BufIo, BufParam, DType, Launch};
+
+    const GRID: i64 = 8;
+    const KEY: u64 = 42;
+    // Scan fault seeds for a plan whose LOWEST faulted block panics
+    // (not merely errors) with at least one later block also faulted —
+    // so the assertion proves lowest-block selection, not just "some
+    // failure", and proves panics don't lose to later transients.
+    let sites = faults::parse_sites("grid").unwrap();
+    let mut found = None;
+    for seed in 0..10_000u64 {
+        let plan = FaultPlan { rate: 0.35, seed, sites };
+        let rolls: Vec<Option<FaultKind>> = (0..GRID)
+            .map(|bx| {
+                plan.roll(FaultSite::GridWorker, faults::mix(KEY, bx as u64))
+            })
+            .collect();
+        let faulted: Vec<i64> =
+            (0..GRID).filter(|bx| rolls[*bx as usize].is_some()).collect();
+        if faulted.len() >= 2
+            && faulted[0] > 0
+            && rolls[faulted[0] as usize] == Some(FaultKind::Panic)
+        {
+            found = Some((plan, faulted[0]));
+            break;
+        }
+    }
+    let (plan, lowest) =
+        found.expect("scanned seed range must contain a panicking plan");
+    let want = format!("worker panic: {}", faults::grid_panic_msg(lowest));
+
+    // Sliceable row-wise store kernel, so the zero-copy path is real.
+    let k = Kernel {
+        name: "panic_grid".into(),
+        dims: vec![],
+        params: vec![
+            BufParam {
+                name: "x".into(),
+                dtype: DType::F32,
+                len: c(GRID * 8),
+                io: BufIo::In,
+            },
+            BufParam {
+                name: "y".into(),
+                dtype: DType::F32,
+                len: c(GRID * 8),
+                io: BufIo::Out,
+            },
+        ],
+        shared: vec![],
+        launch: Launch { grid: c(GRID), block: 8 },
+        body: vec![store(
+            "y",
+            iadd(imul(bx(), bdim()), tx()),
+            load("x", iadd(imul(bx(), bdim()), tx())),
+        )],
+    };
+    let dims = astra::ir::DimEnv::new();
+    let x: Vec<f32> = (0..GRID * 8).map(|i| i as f32).collect();
+    let refs: Vec<(&str, Vec<f32>)> = vec![("x", x)];
+
+    let prog = interp::compile(&k, &dims).unwrap();
+    let ncpu = std::thread::available_parallelism().map_or(1, |n| n.get());
+    for allow_zero_copy in [true, false] {
+        for w in [1usize, 2, 3, 4, 7, 8, ncpu] {
+            let mut env = interp::ExecEnv::for_kernel(&k, &dims);
+            for (name, data) in &refs {
+                env.set(name, data.clone());
+            }
+            let got = interp::run_compiled_with_opts(
+                &prog,
+                &mut env,
+                RunOpts {
+                    grid_workers: w,
+                    allow_zero_copy,
+                    fault: Some(FaultCtx { plan, key: KEY }),
+                    ..RunOpts::default()
+                },
+            )
+            .expect_err("the injected panic must fail the launch");
+            assert_eq!(
+                got.to_string(),
+                want,
+                "grid_workers={w} zero_copy={allow_zero_copy}: must report \
+                 block {lowest}'s panic"
+            );
+        }
+    }
+    // Fault plane off: the same launch completes untouched.
+    let mut env = interp::ExecEnv::for_kernel(&k, &dims);
+    for (name, data) in &refs {
+        env.set(name, data.clone());
+    }
+    interp::run_compiled_with_opts(
+        &prog,
+        &mut env,
+        RunOpts {
+            grid_workers: 4,
+            ..RunOpts::default()
+        },
+    )
+    .expect("no faults without a plan");
+    assert_eq!(env.get("y")[9], 9.0);
+}
+
 /// Error-path wall for the **zero-copy** engine specifically: a kernel
 /// the write-interval analysis proves sliceable (stores stay row-wise)
 /// whose blocks 2 and 5 fail via OOB *loads* of a read-only input

@@ -23,6 +23,7 @@ use std::sync::Arc;
 use astra::coordinator::{
     optimize, optimize_all_parallel_with_cache, AgentMode, Config,
 };
+use astra::faults::{self, FaultPlan};
 use astra::interp;
 use astra::ir::types::{f32_to_f16_round, f16_bits_to_f32, f32_to_f16_bits};
 use astra::kernels::{self, KernelSpec};
@@ -157,6 +158,11 @@ fn prop_coordinator_never_ships_incorrect_kernels() {
             // Worker budget 0 (= per core) through fully serial —
             // scheduling only, the gate must hold at every capacity.
             worker_budget: rng.below(4),
+            // Fault injection off here (the chaos proptest below owns
+            // the faulted paths); supervision must be a no-op.
+            fault: FaultPlan::disabled(),
+            watchdog_steps: 0,
+            quarantine_after: 0,
             model: GpuModel::h100(),
         };
         let greedy = cfg.beam_width == 1 && cfg.candidates_per_round == 1;
@@ -196,6 +202,110 @@ fn prop_coordinator_never_ships_incorrect_kernels() {
                      ({:.2}x) for {}",
                     o.final_speedup,
                     spec.paper_name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_chaos_plans_ship_oracle_valid_kernels_deterministically() {
+    // Chaos proptest (EXPERIMENTS.md §Chaos): randomized FaultPlans over
+    // kernels × (B, K, grid workers, worker budget). Whatever the fault
+    // plane injects — transient agent/compile/profile faults, hangs,
+    // poisoned verdicts, candidate and grid-worker panics — the
+    // coordinator must either ship a kernel that passes the final
+    // (uninjected) oracle re-validation or fail cleanly back to the
+    // baseline, with a well-formed log either way. And because every
+    // injection roll is keyed by stable candidate identity rather than
+    // schedule, a fixed fault seed must be byte-identical across worker
+    // counts and budget capacities.
+    let mut rng = Prng::seed(0xFA017);
+    for case in 0..6 {
+        let cfg = Config {
+            rounds: 1 + rng.below(4),
+            seed: rng.next_u64(),
+            bug_rate: rng.uniform() * 0.4,
+            temperature: rng.uniform(),
+            beam_width: 1 + rng.below(2),
+            candidates_per_round: 1 + rng.below(3),
+            round_budget: rng.below(3),
+            fault: FaultPlan {
+                rate: 0.05 + rng.uniform() * 0.25,
+                seed: rng.next_u64(),
+                sites: if rng.chance(0.75) {
+                    faults::ALL_SITES
+                } else {
+                    (1 + rng.below(31)) as u8
+                },
+            },
+            // Step-capped half the time (generously — real validations
+            // must still fit) so the Some(step_limit) plumbing runs.
+            watchdog_steps: if rng.chance(0.5) { 0 } else { 150_000_000 },
+            quarantine_after: rng.below(3),
+            ..Config::multi_agent()
+        };
+        for spec in kernels::all_specs() {
+            // Same plan at three (grid_workers, worker_budget) schedules.
+            let runs: Vec<_> = [(1, 1), (2, 0), (3, 2)]
+                .iter()
+                .map(|&(gw, wb)| {
+                    let c = Config {
+                        grid_workers: gw,
+                        worker_budget: wb,
+                        ..cfg.clone()
+                    };
+                    optimize(&spec, &c)
+                })
+                .collect();
+            let o = &runs[0];
+            let ctx = format!("case {case} {} cfg {cfg:?}", spec.paper_name);
+            assert!(
+                o.final_correct,
+                "{ctx}: shipped a kernel that fails the oracle"
+            );
+            let mut last_round = 0;
+            for r in &o.records {
+                assert!(r.round >= last_round, "{ctx}: rounds out of order");
+                last_round = r.round;
+                if r.accepted {
+                    assert!(r.pass, "{ctx}: accepted a failing candidate");
+                }
+            }
+            assert!(
+                o.faults_survived <= o.faults_injected,
+                "{ctx}: survived ({}) cannot exceed injected ({})",
+                o.faults_survived,
+                o.faults_injected
+            );
+            for (i, other) in runs.iter().enumerate().skip(1) {
+                assert_eq!(o.records, other.records, "{ctx}: schedule {i}");
+                assert_eq!(
+                    o.final_speedup.to_bits(),
+                    other.final_speedup.to_bits(),
+                    "{ctx}: schedule {i}"
+                );
+                assert_eq!(o.best_loc, other.best_loc, "{ctx}: schedule {i}");
+                assert_eq!(
+                    (
+                        o.faults_injected,
+                        o.faults_survived,
+                        o.retries,
+                        o.watchdog_trips,
+                        o.quarantined_lineages,
+                        o.candidates_evaluated,
+                        o.cancelled_candidates,
+                    ),
+                    (
+                        other.faults_injected,
+                        other.faults_survived,
+                        other.retries,
+                        other.watchdog_trips,
+                        other.quarantined_lineages,
+                        other.candidates_evaluated,
+                        other.cancelled_candidates,
+                    ),
+                    "{ctx}: fault telemetry diverged at schedule {i}"
                 );
             }
         }

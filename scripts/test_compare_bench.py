@@ -9,10 +9,11 @@ Covers: regression above threshold fails for every gated metric —
 interpret_ms, grid_parallel_ms (schema v4) and, since schema v5, the
 search-throughput pair (beam_optimize_ms lower-is-better, search_cps
 higher-is-better) — below passes, missing previous-run file skips
-cleanly, older-schema (v1/v2/v3/v4) baselines compare without crashing
-against v5 output, and the informational fields (grid_zerocopy_ms,
-sliced_launches, the v5 adaptive-scheduler fields incl. the
-k_histogram dict) are reported without gating.
+cleanly, older-schema (v1/v2/v3/v4/v5) baselines compare without
+crashing against v6 output, and the informational fields
+(grid_zerocopy_ms, sliced_launches, the v5 adaptive-scheduler fields
+incl. the k_histogram dict, and the v6 chaos-supervision fields) are
+reported without gating.
 """
 
 import json
@@ -38,7 +39,7 @@ def kernel_row(interpret_ms, **extra):
     return row
 
 
-def bench_json(interpret_ms, schema="astra-hotpath-v5", cross=True,
+def bench_json(interpret_ms, schema="astra-hotpath-v6", cross=True,
                sliced=None, **extra):
     doc = {
         "schema": schema,
@@ -260,6 +261,57 @@ class CompareBenchTest(unittest.TestCase):
             bench_json(1.0, adaptive_optimize_ms=900.0, adaptive_k_rounds=0,
                        cancelled_candidates=0,
                        k_histogram={"1": 0, "2": 0, "3": 9}),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_older_v5_schema_baseline_is_graceful_for_v6(self):
+        # v5: adaptive fields present, chaos fields absent — the first
+        # v6 run must compare cleanly and still gate the search pair
+        # against the v5 baseline.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, schema="astra-hotpath-v5",
+                       grid_parallel_ms=2.0, search_cps=100.0,
+                       beam_optimize_ms=300.0, sliced=64,
+                       adaptive_optimize_ms=250.0, adaptive_k_rounds=6,
+                       cancelled_candidates=4,
+                       k_histogram={"1": 5, "2": 1, "3": 3}),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0, grid_parallel_ms=2.0, search_cps=101.0,
+                       beam_optimize_ms=299.0, sliced=64,
+                       adaptive_optimize_ms=251.0, adaptive_k_rounds=6,
+                       cancelled_candidates=4,
+                       k_histogram={"1": 5, "2": 1, "3": 3},
+                       chaos_optimize_ms=310.0, faults_injected=14,
+                       faults_survived=11, retries=9, watchdog_trips=1,
+                       quarantined_lineages=0),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+        dropped = self.write(
+            "dropped.json",
+            bench_json(1.0, grid_parallel_ms=2.0, search_cps=60.0,
+                       beam_optimize_ms=300.0),
+        )
+        self.assertEqual(self.run_main(old, dropped, 0.15), 1)
+
+    def test_fault_fields_are_informational_only(self):
+        # Wild swings in every v6 chaos field must neither gate nor
+        # crash — the ledger is deterministic and pinned by Rust tests,
+        # and the supervised-run median tracks injected faults, not the
+        # engine.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, chaos_optimize_ms=100.0, faults_injected=3,
+                       faults_survived=3, retries=2, watchdog_trips=0,
+                       quarantined_lineages=0),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0, chaos_optimize_ms=900.0, faults_injected=40,
+                       faults_survived=5, retries=33, watchdog_trips=6,
+                       quarantined_lineages=2),
         )
         self.assertEqual(self.run_main(old, new, 0.15), 0)
 
