@@ -81,6 +81,22 @@ struct KernelRow {
     retries: u64,
     watchdog_trips: u64,
     quarantined_lineages: u64,
+    /// Full pipelined-rounds run (schema v7): the
+    /// `Config::multi_agent_pipelined` preset (B=1, K=3, speculation
+    /// depth 2) — cross-round speculation overlapping the round
+    /// barrier.
+    pipelined_optimize_ms: f64,
+    /// The same config with `pipelined: false` — the barriered twin the
+    /// stall saving is measured against (byte-identical results, pinned
+    /// by the differential wall, so the delta is pure scheduling).
+    pipelined_barriered_ms: f64,
+    /// Barrier-stall time saved per run: barriered twin median minus
+    /// pipelined median.
+    pipelined_stall_saved_ms: f64,
+    /// committed / speculated from the (deterministic) run's ledger.
+    speculation_hit_rate: f64,
+    speculated_lineages: u64,
+    aborted_lineages: u64,
 }
 
 /// Cross-run shared-cache counters: two identical `optimize_all_parallel`
@@ -340,6 +356,47 @@ fn main() {
         );
     }
 
+    // Pipelined rounds (schema v7): the pipelined preset (B=1, K=3,
+    // speculation depth 2) against its own barriered twin — identical
+    // config with `pipelined: false`, byte-identical results by the
+    // differential wall — so the timing delta is pure barrier-stall
+    // time recovered by cross-round speculation. One untimed pass
+    // collects the (deterministic) speculation ledger.
+    println!();
+    let pipelined_cfg = Config {
+        bug_rate: 0.0,
+        temperature: 0.0,
+        ..Config::multi_agent_pipelined()
+    };
+    let twin_cfg = Config {
+        pipelined: false,
+        ..pipelined_cfg.clone()
+    };
+    for (spec, row) in kernels::all_specs().iter().zip(&mut rows) {
+        let out = optimize(spec, &pipelined_cfg);
+        row.speculated_lineages = out.speculated_lineages;
+        row.aborted_lineages = out.aborted_lineages;
+        row.speculation_hit_rate = out.committed_lineages as f64
+            / out.speculated_lineages.max(1) as f64;
+        let p = bench(1, 5, || optimize(spec, &pipelined_cfg));
+        let t = bench(1, 5, || optimize(spec, &twin_cfg));
+        row.pipelined_optimize_ms = p.median_ms();
+        row.pipelined_barriered_ms = t.median_ms();
+        row.pipelined_stall_saved_ms = t.median_ms() - p.median_ms();
+        println!(
+            "pipelined-optimize {:<14} median {:>8.1} ms/run (barriered \
+             {:>8.1} ms, saved {:>+7.1} ms, hit rate {:.2}, \
+             {} speculated / {} aborted)",
+            spec.paper_name,
+            row.pipelined_optimize_ms,
+            row.pipelined_barriered_ms,
+            row.pipelined_stall_saved_ms,
+            row.speculation_hit_rate,
+            row.speculated_lineages,
+            row.aborted_lineages
+        );
+    }
+
     // Cross-run shared compile cache: two identical optimize-all batches
     // over one Arc'd cache — the second must be (nearly) hit-only, and
     // the counters land in the JSON so CI can watch the reuse rate.
@@ -385,7 +442,7 @@ fn render_json(
     sliced_launches: u64,
 ) -> String {
     let mut out = String::new();
-    out.push_str("{\n  \"schema\": \"astra-hotpath-v6\",\n  \"kernels\": {\n");
+    out.push_str("{\n  \"schema\": \"astra-hotpath-v7\",\n  \"kernels\": {\n");
     for (i, r) in rows.iter().enumerate() {
         let k_hist = r
             .k_hist
@@ -415,7 +472,13 @@ fn render_json(
              \"faults_survived\": {},\n      \
              \"retries\": {},\n      \
              \"watchdog_trips\": {},\n      \
-             \"quarantined_lineages\": {}\n    }}{}\n",
+             \"quarantined_lineages\": {},\n      \
+             \"pipelined_optimize_ms\": {:.3},\n      \
+             \"pipelined_barriered_ms\": {:.3},\n      \
+             \"pipelined_stall_saved_ms\": {:.3},\n      \
+             \"speculation_hit_rate\": {:.3},\n      \
+             \"speculated_lineages\": {},\n      \
+             \"aborted_lineages\": {}\n    }}{}\n",
             r.name,
             r.simulate_us,
             r.interpret_ref_ms,
@@ -440,6 +503,12 @@ fn render_json(
             r.retries,
             r.watchdog_trips,
             r.quarantined_lineages,
+            r.pipelined_optimize_ms,
+            r.pipelined_barriered_ms,
+            r.pipelined_stall_saved_ms,
+            r.speculation_hit_rate,
+            r.speculated_lineages,
+            r.aborted_lineages,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }

@@ -32,7 +32,7 @@ pub struct Suggestion {
 }
 
 /// Planner interface (LLM seam).
-pub trait PlannerPolicy {
+pub trait PlannerPolicy: Send {
     /// Propose ranked modifications for the current candidate.
     fn suggest(
         &mut self,
@@ -41,6 +41,13 @@ pub trait PlannerPolicy {
         profile: &ProfileReport,
     ) -> Vec<Suggestion>;
     fn name(&self) -> &'static str;
+    /// Snapshot the planner's full state — including its noise stream —
+    /// so a speculative round can plan ahead without advancing the real
+    /// planner. The pipelined scheduler (`coordinator/sched.rs`) adopts
+    /// the snapshot on commit; on abort it is simply dropped and the
+    /// canonical planner plans the round itself, so the suggestion
+    /// sequence stays byte-identical to the barriered engine.
+    fn snapshot(&self) -> Box<dyn PlannerPolicy>;
 }
 
 /// The shipped policy engine.
@@ -62,6 +69,10 @@ impl MockLlm {
 impl PlannerPolicy for MockLlm {
     fn name(&self) -> &'static str {
         "mock-llm"
+    }
+
+    fn snapshot(&self) -> Box<dyn PlannerPolicy> {
+        Box::new(self.clone())
     }
 
     fn suggest(

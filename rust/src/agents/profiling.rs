@@ -40,6 +40,42 @@ impl ProfilingAgent {
         baseline: Option<&ProfileReport>,
     ) -> ProfileReport {
         let per_shape = sim::profile_shapes(&self.model, kernel, &suite.perf_shapes);
+        self.assemble(kernel, per_shape, baseline)
+    }
+
+    /// [`profile`](Self::profile) with a cooperative cancellation
+    /// token: an abandoned speculative lineage stops its perf sweep at
+    /// the next shape boundary instead of running to completion
+    /// (ROADMAP "cancellable profiling"). `None` means the sweep was
+    /// abandoned — the caller must treat the candidate exactly like an
+    /// abandoned validation (the canonical repair pass re-profiles
+    /// serially if the result is needed), so reports stay
+    /// byte-identical to the uncancelled engine.
+    pub fn profile_cancellable(
+        &self,
+        kernel: &Kernel,
+        suite: &TestSuite,
+        baseline: Option<&ProfileReport>,
+        cancel: &std::sync::atomic::AtomicBool,
+    ) -> Option<ProfileReport> {
+        let per_shape = sim::profile_shapes_cancellable(
+            &self.model,
+            kernel,
+            &suite.perf_shapes,
+            cancel,
+        )?;
+        Some(self.assemble(kernel, per_shape, baseline))
+    }
+
+    /// Shared tail of both profiling paths: fold per-shape reports into
+    /// the planner-facing summary. Pure — byte-identical for identical
+    /// `per_shape` inputs regardless of which sweep produced them.
+    fn assemble(
+        &self,
+        kernel: &Kernel,
+        per_shape: Vec<CostReport>,
+        baseline: Option<&ProfileReport>,
+    ) -> ProfileReport {
         let mean_us =
             per_shape.iter().map(|r| r.total_us).sum::<f64>() / per_shape.len() as f64;
         let speedup = match baseline {
@@ -142,6 +178,40 @@ mod tests {
             "unroll trap must regress on real shapes: {}",
             q1.speedup_vs_baseline
         );
+    }
+
+    #[test]
+    fn cancellable_profile_matches_plain_profile_when_clear() {
+        let spec = kernels::silu::spec();
+        let suite = TestingAgent::new(TestQuality::Representative, 1)
+            .generate_tests(&spec);
+        let agent = ProfilingAgent::new(GpuModel::h100());
+        let base = (spec.build_baseline)();
+        let p0 = agent.profile(&base, &suite, None);
+        let opt = transforms::optimized_reference(&base);
+        let plain = agent.profile(&opt, &suite, Some(&p0));
+        let clear = std::sync::atomic::AtomicBool::new(false);
+        let swept = agent
+            .profile_cancellable(&opt, &suite, Some(&p0), &clear)
+            .expect("clear token completes");
+        assert_eq!(
+            plain.speedup_vs_baseline.to_bits(),
+            swept.speedup_vs_baseline.to_bits()
+        );
+        assert_eq!(plain.mean_us.to_bits(), swept.mean_us.to_bits());
+        assert_eq!(plain.bottleneck, swept.bottleneck);
+    }
+
+    #[test]
+    fn raised_token_abandons_the_profile_sweep() {
+        let spec = kernels::silu::spec();
+        let suite = TestingAgent::new(TestQuality::Representative, 1)
+            .generate_tests(&spec);
+        let agent = ProfilingAgent::new(GpuModel::h100());
+        let raised = std::sync::atomic::AtomicBool::new(true);
+        assert!(agent
+            .profile_cancellable(&(spec.build_baseline)(), &suite, None, &raised)
+            .is_none());
     }
 
     #[test]

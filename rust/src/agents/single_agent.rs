@@ -45,6 +45,10 @@ impl PlannerPolicy for SingleAgentPlanner {
         "single-agent"
     }
 
+    fn snapshot(&self) -> Box<dyn PlannerPolicy> {
+        Box::new(self.clone())
+    }
+
     fn suggest(
         &mut self,
         kernel: &Kernel,

@@ -308,6 +308,40 @@ impl TestingAgent {
         self.validate_with(spec, kernel, suite, None)
     }
 
+    /// Replay exactly the compile-cache probes a cache-carrying
+    /// validation ([`validate_with`](Self::validate_with) with
+    /// `Some(cache)`) would have made for this agent's fault context —
+    /// one `get_or_compile` per correctness shape, in index order,
+    /// skipping shapes whose compile-site roll injects a failure
+    /// (those return before the probe in [`run_case`]).
+    ///
+    /// The pipelined scheduler evaluates speculative candidates
+    /// cache-free (a speculation is a race; its lookups must not
+    /// perturb the shared hit/miss counters). When a speculated round
+    /// commits and becomes canonical, this replay restores the probes
+    /// the barriered engine would have issued, keeping `cache.stats()`
+    /// byte-identical. Shape order within one candidate is the serial
+    /// index order, and the shared counters are order-independent
+    /// totals, so replaying serially reproduces them exactly.
+    pub fn replay_cache_probes(
+        &self,
+        kernel: &Kernel,
+        suite: &TestSuite,
+        cache: &CompileCache,
+    ) {
+        for (i, dims) in suite.correctness_shapes.iter().enumerate() {
+            if let Some((plan, key)) = self.fault {
+                if plan
+                    .roll(FaultSite::Compile, faults::mix(key, i as u64))
+                    .is_some()
+                {
+                    continue;
+                }
+            }
+            let _ = cache.get_or_compile(kernel, dims);
+        }
+    }
+
     /// [`validate`](Self::validate) with an optional shared compile
     /// cache (the coordinator passes one per optimization run).
     ///

@@ -45,6 +45,12 @@
 //! watchdog_steps = 0          # 0 = the interpreter's own step limit
 //! quarantine_after = 0        # 0 = never quarantine a lineage
 //!
+//! # pipelined rounds: workers speculate into round N+1 from the
+//! # provisional winner before round N settles (off, or depth 0,
+//! # runs the literal barriered engine)
+//! pipelined = true
+//! speculation_depth = 2
+//!
 //! # simulator overrides
 //! launch_overhead_us = 7.0
 //! dram_bw = 3.0e12
@@ -147,6 +153,9 @@ pub fn apply(
         "watchdog_steps" => cfg.watchdog_steps = value.parse()?,
         // 0 is meaningful: never quarantine a lineage.
         "quarantine_after" => cfg.quarantine_after = value.parse()?,
+        "pipelined" => cfg.pipelined = parse_bool(value)?,
+        // 0 is meaningful: no speculative layers, even when pipelined.
+        "speculation_depth" => cfg.speculation_depth = value.parse()?,
         "mode" => {
             cfg.mode = match value {
                 "multi" | "multi-agent" => AgentMode::Multi,
@@ -202,6 +211,8 @@ pub fn render(cfg: &Config) -> String {
          fault_sites = \"{}\"\n\
          watchdog_steps = {}\n\
          quarantine_after = {}\n\
+         pipelined = {}\n\
+         speculation_depth = {}\n\
          launch_overhead_us = {}\n\
          dram_bw = {}\n\
          sms = {}\n\
@@ -228,6 +239,8 @@ pub fn render(cfg: &Config) -> String {
         crate::faults::render_sites(cfg.fault.sites),
         cfg.watchdog_steps,
         cfg.quarantine_after,
+        cfg.pipelined,
+        cfg.speculation_depth,
         m.launch_overhead_us,
         m.dram_bw,
         m.sms,
@@ -362,6 +375,19 @@ mod tests {
     }
 
     #[test]
+    fn parses_pipelined_keys_with_barriered_defaults() {
+        let cfg = parse("pipelined = true\nspeculation_depth = 2\n").unwrap();
+        assert!(cfg.pipelined);
+        assert_eq!(cfg.speculation_depth, 2);
+        let cfg = parse("speculation_depth = 0\n").unwrap();
+        assert_eq!(cfg.speculation_depth, 0, "0 = barriered even when on");
+        let cfg = parse("").unwrap();
+        assert!(!cfg.pipelined, "default is the barriered engine");
+        assert!(parse("pipelined = maybe\n").is_err());
+        assert!(parse("speculation_depth = nah\n").is_err());
+    }
+
+    #[test]
     fn render_parse_round_trips_every_key() {
         let mut custom = Config::multi_agent_adaptive();
         custom.rounds = 7;
@@ -382,12 +408,15 @@ mod tests {
         };
         custom.watchdog_steps = 1_000_000;
         custom.quarantine_after = 2;
+        custom.pipelined = true;
+        custom.speculation_depth = 3;
         custom.model.launch_overhead_us = 5.5;
         for cfg in [
             Config::multi_agent(),
             Config::single_agent(),
             Config::multi_agent_beam(),
             Config::multi_agent_adaptive(),
+            Config::multi_agent_pipelined(),
             custom,
         ] {
             let text = render(&cfg);
@@ -418,6 +447,8 @@ mod tests {
             assert_eq!(back.fault.sites, cfg.fault.sites);
             assert_eq!(back.watchdog_steps, cfg.watchdog_steps);
             assert_eq!(back.quarantine_after, cfg.quarantine_after);
+            assert_eq!(back.pipelined, cfg.pipelined);
+            assert_eq!(back.speculation_depth, cfg.speculation_depth);
             assert_eq!(
                 back.model.launch_overhead_us.to_bits(),
                 cfg.model.launch_overhead_us.to_bits()

@@ -22,6 +22,7 @@
 //! keeps its meaning.
 
 pub mod run;
+pub mod sched;
 pub mod search;
 
 pub use run::{

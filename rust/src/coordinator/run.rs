@@ -112,6 +112,21 @@ pub struct Config {
     /// but keeps serving its known-good kernel. `0` (the default)
     /// disables quarantine.
     pub quarantine_after: usize,
+    /// Pipelined rounds (Block-STM-style speculation across the round
+    /// barrier): a pool of budget-governed workers drains a
+    /// smallest-index-first task queue, and planning for round N+1
+    /// starts from the current provisional winner before round N
+    /// settles. When the settled winner differs from the prediction,
+    /// only the stale speculated lineage aborts and re-executes.
+    /// Outcomes are byte-identical to the barriered engine at every
+    /// `(grid_workers, worker_budget, fault plan)` point (pinned in
+    /// `tests/beam_differential.rs`). Off (the default) runs the
+    /// literal legacy engine.
+    pub pipelined: bool,
+    /// How many rounds ahead the pipelined engine may speculate
+    /// (`0` disables speculation even with `pipelined` set — the
+    /// legacy barriered engine runs verbatim).
+    pub speculation_depth: usize,
     pub model: GpuModel,
 }
 
@@ -134,6 +149,8 @@ impl Config {
             fault: FaultPlan::from_env(),
             watchdog_steps: 0,
             quarantine_after: 0,
+            pipelined: false,
+            speculation_depth: 1,
             model: GpuModel::h100(),
         }
     }
@@ -173,6 +190,21 @@ impl Config {
             adaptive_gap_threshold: 0.5,
             round_budget: 3,
             ..Config::multi_agent_beam()
+        }
+    }
+
+    /// Pipelined preset: a single greedy-shaped lineage (B = 1) widened
+    /// to K = 3 candidates per round, with rounds overlapped two deep
+    /// across the barrier. B = 1 on purpose: speculation predicts the
+    /// next beam from the front-runner, and a one-state beam makes the
+    /// prediction commit often enough to pay (EXPERIMENTS.md
+    /// §Pipelined-rounds).
+    pub fn multi_agent_pipelined() -> Config {
+        Config {
+            pipelined: true,
+            speculation_depth: 2,
+            candidates_per_round: 3,
+            ..Config::multi_agent()
         }
     }
 }
@@ -264,6 +296,16 @@ pub struct Outcome {
     /// Beam lineages quarantined after
     /// [`Config::quarantine_after`] consecutive all-fail rounds.
     pub quarantined_lineages: u64,
+    /// Round-N+1 lineages the pipelined engine planned and launched
+    /// before round N settled (0 outside pipelined mode).
+    pub speculated_lineages: u64,
+    /// Speculated lineages whose predicted basis matched the settled
+    /// round — their work was adopted wholesale.
+    pub committed_lineages: u64,
+    /// Speculated lineages invalidated by a settled winner that
+    /// differed from the prediction — aborted and re-executed
+    /// canonically.
+    pub aborted_lineages: u64,
 }
 
 /// Accept a candidate if its measured (internal) geomean does not regress
@@ -459,6 +501,7 @@ pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
                         Some(&base_profile),
                         Some(&cache),
                         None,
+                        None,
                         key,
                     )
                 },
@@ -557,6 +600,7 @@ pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
             cancelled_candidates: 0,
             fault_stats,
             quarantined_lineages,
+            speculation: search::SpecLedger::default(),
         },
     )
 }

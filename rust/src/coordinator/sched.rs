@@ -1,0 +1,934 @@
+//! Pipelined rounds: Block-STM-style speculation across the round
+//! barrier (ROADMAP item 1).
+//!
+//! The barriered engine (`search.rs`) fully settles round N before
+//! planning round N+1, so the tail of a round — one straggling
+//! validation — idles every other worker. This module overlaps rounds
+//! instead: a pool of budget-governed workers drains a
+//! smallest-index-first [`TaskQueue`] of *execution* tasks, and as soon
+//! as a round's **basis** results land (the candidates a prediction
+//! needs), the scheduler predicts the next beam from the current
+//! provisional winner, plans round N+1 against it with a *snapshotted*
+//! planner, and pushes the speculated round's tasks behind the
+//! canonical round's in queue order. When round N settles:
+//!
+//! * if the settled selection (and global best) match the prediction,
+//!   the speculated round **commits** — its plan, planner mutations and
+//!   already-running evaluations are adopted wholesale;
+//! * otherwise only the stale lineage **aborts**: cancellation tokens
+//!   abandon its in-flight validations mid-sweep
+//!   ([`TestingAgent::validate_cancellable`],
+//!   [`ProfilingAgent::profile_cancellable`]) and round N+1 re-plans
+//!   and re-executes canonically.
+//!
+//! Determinism contract — byte-identical to the barriered engine at
+//! every `(grid_workers, worker_budget, fault plan)` point, pinned by
+//! `tests/beam_differential.rs`:
+//!
+//! * planning, settling and selection go through the *same seams*
+//!   ([`plan_round`], [`evaluate_supervised`], [`settle_round`]) — the
+//!   scheduler changes when work runs, never what runs;
+//! * speculation is **invisible on abort** (aborted lineages are
+//!   discarded unread, their planner was a snapshot) and **exact on
+//!   commit** (the commit check compares the full selection identity
+//!   plus the global best bits, which together pin every plan-relevant
+//!   beam field);
+//! * speculative evaluations validate cache-free and record their
+//!   attempt keys in a probe ledger; a committed round *replays* the
+//!   exact compile-cache probes the cache-carrying barriered
+//!   evaluations would have made ([`TestingAgent::replay_cache_probes`])
+//!   so `Outcome::cache_{hits,misses}` stay byte-identical;
+//! * the speculation ledger itself is deterministic: whether round N+1
+//!   was speculated when round N settles depends only on basis results
+//!   (complete before any settle) and the depth/round caps, never on
+//!   thread timing.
+//!
+//! [`TaskQueue`]: crate::interp::budget::TaskQueue
+//! [`TestingAgent::validate_cancellable`]: crate::agents::TestingAgent::validate_cancellable
+//! [`TestingAgent::replay_cache_probes`]: crate::agents::TestingAgent::replay_cache_probes
+//! [`ProfilingAgent::profile_cancellable`]: crate::agents::ProfilingAgent::profile_cancellable
+//! [`plan_round`]: super::search::plan_round
+//! [`evaluate_supervised`]: super::search::evaluate_supervised
+//! [`settle_round`]: super::search::settle_round
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use crate::agents::{
+    CodingAgent, PlannerPolicy, ProfilingAgent, TestQuality, TestingAgent,
+};
+use crate::faults::{self, FaultStats};
+use crate::interp::budget::{panic_message, TaskQueue};
+use crate::interp::{CompileCache, WorkerBudget};
+use crate::kernels::KernelSpec;
+
+use super::run::{
+    AgentMode, Config, Outcome, RoundRecord, ACCEPT_THRESHOLD,
+};
+use super::search::{
+    self, BeamState, Candidate, ConcurrencyProbe, EvalEnv, EvalProduct,
+    RoundTally, SearchTelemetry, SelectedId, SpecLedger, StateRound,
+};
+
+/// Queue key: canonical rounds strictly before speculated ones, then
+/// candidate index order, then registration order (lexicographic via
+/// the derived `Ord` on field order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct TaskKey {
+    round: usize,
+    slot: usize,
+    layer: u64,
+}
+
+/// One evaluation's stored outcome: the supervised product (or `None`
+/// for a lineage-cancelled run) or a contained panic message.
+type SlotResult = Result<Option<EvalProduct>, String>;
+
+/// One in-flight round: the canonical front of the chain or a
+/// speculated descendant.
+struct Layer {
+    id: u64,
+    round: usize,
+    cands: Arc<Vec<Candidate>>,
+    per_state: Vec<StateRound>,
+    /// The beam this round was planned against — actual for the
+    /// canonical layer, predicted for speculated ones.
+    beam: Vec<BeamState>,
+    /// Global best speedup at this round's start (predicted for
+    /// speculated layers; verified bit-exact at commit).
+    round_best: f64,
+    results: Vec<Option<SlotResult>>,
+    /// Per-slot compile-cache probe ledger (attempt keys, in attempt
+    /// order) recorded by speculative evaluations for commit replay.
+    probes: Vec<Vec<u64>>,
+    pending: usize,
+    speculative: bool,
+    /// Raised on abort: the lineage's in-flight validations and
+    /// profile sweeps abandon at the next poll.
+    lineage_cancel: Arc<AtomicBool>,
+    cand_tokens: Arc<Vec<AtomicBool>>,
+    /// Planner state *after* this round's plan — the snapshot the next
+    /// speculation plans with, and the state the drive loop adopts on
+    /// commit.
+    planner_after: Option<Box<dyn PlannerPolicy>>,
+    /// Plan telemetry accumulated locally (speculated layers only);
+    /// folded into the run's counters on adoption, dropped on abort.
+    k_per_round: Vec<usize>,
+    adaptive_k_events: usize,
+    gate_stats: FaultStats,
+    /// The selection this layer's plan assumed (empty for canonical).
+    predicted_selection: Vec<SelectedId>,
+    /// The next-round spawn decision is made exactly once per layer.
+    spawned_next: bool,
+}
+
+/// The layer chain, in round order (front = canonical).
+struct Sched {
+    layers: Vec<Layer>,
+    next_id: u64,
+}
+
+/// State shared between the drive loop and the worker pool. The `done`
+/// condvar pairs with the `sched` mutex: results are stored and
+/// notified under it, so the collector can never miss a wakeup.
+struct Shared {
+    sched: Mutex<Sched>,
+    queue: TaskQueue<TaskKey>,
+    done: Condvar,
+}
+
+/// Everything a worker needs to execute one task.
+struct PipeCtx<'a> {
+    env: EvalEnv<'a>,
+    cache: &'a CompileCache,
+    budget: &'a WorkerBudget,
+    probe: &'a ConcurrencyProbe,
+    coder: &'a CodingAgent,
+    shared: &'a Shared,
+}
+
+/// A resolved task: the layer handles a worker needs without holding
+/// the scheduler lock while it evaluates.
+struct TaskRef {
+    layer_id: u64,
+    round: usize,
+    slot: usize,
+    cands: Arc<Vec<Candidate>>,
+    tokens: Arc<Vec<AtomicBool>>,
+    lineage: Arc<AtomicBool>,
+    speculative: bool,
+}
+
+/// Look a popped key up in the live chain; `None` for stale keys (the
+/// layer aborted) or already-stored slots.
+fn resolve(g: &Sched, key: TaskKey) -> Option<TaskRef> {
+    let layer = g.layers.iter().find(|l| l.id == key.layer)?;
+    if layer.results[key.slot].is_some() {
+        return None;
+    }
+    Some(TaskRef {
+        layer_id: layer.id,
+        round: layer.round,
+        slot: key.slot,
+        cands: Arc::clone(&layer.cands),
+        tokens: Arc::clone(&layer.cand_tokens),
+        lineage: Arc::clone(&layer.lineage_cancel),
+        speculative: layer.speculative,
+    })
+}
+
+/// Execute one task and store its result. The evaluation modes mirror
+/// the barriered engine exactly: canonical + `round_budget = 0` carries
+/// the compile cache; canonical + `round_budget > 0` is cache-free with
+/// (never-raised) cancellation tokens, the settle pass deriving the
+/// canonical abandonment set just as it does for the racy legacy
+/// schedule; speculative runs are cache-free, lineage-cancellable, and
+/// record their cache-probe ledger for commit replay.
+fn run_task(ctx: &PipeCtx<'_>, t: TaskRef) {
+    let _live = ctx.budget.count_worker();
+    let _in_flight = ctx.probe.enter();
+    let cfg = ctx.env.cfg;
+    let cand = &t.cands[t.slot];
+    let key = faults::candidate_key(t.round, cand.parent, cand.index);
+    let probes = Mutex::new(Vec::new());
+    let use_cache = !t.speculative && cfg.round_budget == 0;
+    let cancellable = t.speculative || cfg.round_budget > 0;
+    let result: SlotResult = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        search::evaluate_supervised(
+            ctx.env.spec,
+            cfg,
+            ctx.env.tester,
+            ctx.env.profiler,
+            &cand.kernel,
+            ctx.env.suite,
+            Some(ctx.env.base_profile),
+            use_cache.then_some(ctx.cache),
+            cancellable.then(|| (&t.tokens[t.slot], &*t.lineage)),
+            t.speculative.then_some(&probes),
+            key,
+        )
+    }))
+    .map_err(panic_message);
+    let recorded = probes.into_inner().expect("probe ledger poisoned");
+    let mut g = ctx.shared.sched.lock().expect("scheduler poisoned");
+    if let Some(layer) = g.layers.iter_mut().find(|l| l.id == t.layer_id) {
+        if layer.results[t.slot].is_none() {
+            layer.results[t.slot] = Some(result);
+            layer.probes[t.slot] = recorded;
+            layer.pending -= 1;
+        }
+    }
+    // Spawn in the same critical section as the store: by the time a
+    // round's last result lands (and the collector can observe
+    // `pending == 0`), every spawn its basis enabled has happened —
+    // the ledger's schedule-independence hinges on this.
+    maybe_spawn(ctx, &mut g);
+    drop(g);
+    ctx.shared.done.notify_all();
+}
+
+/// Long-lived pool worker: park on the queue, resolve, execute.
+fn worker_loop(ctx: &PipeCtx<'_>) {
+    while let Some(key) = ctx.shared.queue.pop_wait() {
+        let task = {
+            let g = ctx.shared.sched.lock().expect("scheduler poisoned");
+            resolve(&g, key)
+        };
+        if let Some(t) = task {
+            run_task(ctx, t);
+        }
+    }
+}
+
+/// A prediction of how the deepest layer will settle.
+struct Pred {
+    beam: Vec<BeamState>,
+    selection: Vec<SelectedId>,
+    next_best: f64,
+}
+
+/// Predict the deepest layer's settled beam from its basis results
+/// alone — pure and deterministic. Abstains (`None`) whenever any
+/// settle-relevant fact is not yet knowable: canonical round-budget
+/// abandonment possible, a basis result missing or panicked, a
+/// rejected basis with unevaluated siblings (their fates decide the
+/// parent's survival), or predicted kernels that collide (the settle
+/// dedup would race hidden siblings).
+fn predict(cfg: &Config, layer: &Layer) -> Option<Pred> {
+    if cfg.round_budget > 0 && layer.cands.len() > cfg.round_budget {
+        return None;
+    }
+    struct Entry {
+        state: BeamState,
+        score: f64,
+        parent: usize,
+        cand: usize,
+        fresh: bool,
+    }
+    let mut entries: Vec<Entry> = Vec::new();
+    let mut next_best = layer.round_best;
+    for (si, sr) in layer.per_state.iter().enumerate() {
+        if sr.start == sr.end {
+            // Nothing materialized (or quarantined): the state
+            // survives untouched.
+            let state = layer.beam[si].clone();
+            entries.push(Entry {
+                score: state.speedup,
+                state,
+                parent: si,
+                cand: usize::MAX,
+                fresh: false,
+            });
+            continue;
+        }
+        let basis = sr.start;
+        let Some(Ok(Some(p))) = layer.results[basis].as_ref() else {
+            return None;
+        };
+        let speedup = p.profile.speedup_vs_baseline;
+        let accepted =
+            p.tests.pass && speedup >= layer.round_best * ACCEPT_THRESHOLD;
+        if accepted {
+            let cand = &layer.cands[basis];
+            entries.push(Entry {
+                state: BeamState {
+                    kernel: cand.kernel.clone(),
+                    tests: p.tests.clone(),
+                    profile: p.profile.clone(),
+                    speedup,
+                    blocked: Vec::new(),
+                    consec_failures: 0,
+                },
+                score: speedup,
+                parent: si,
+                cand: cand.index,
+                fresh: true,
+            });
+            if speedup > next_best {
+                next_best = speedup;
+            }
+        } else if sr.end - sr.start == 1 {
+            // The state's only candidate was rejected: the legacy fate
+            // is fully determined by the basis product.
+            let mut state = layer.beam[si].clone();
+            if p.tests.pass {
+                state.blocked.push(layer.cands[basis].applied);
+                state.consec_failures = 0;
+            } else {
+                state.consec_failures += 1;
+            }
+            entries.push(Entry {
+                score: state.speedup,
+                state,
+                parent: si,
+                cand: usize::MAX,
+                fresh: false,
+            });
+        } else {
+            return None;
+        }
+    }
+    // The settle comparator, verbatim — stable sort from the same
+    // initial order, so a committed prediction's selection order is
+    // the settled order.
+    entries.sort_by(|a, b| {
+        b.score
+            .total_cmp(&a.score)
+            .then_with(|| b.fresh.cmp(&a.fresh))
+            .then_with(|| a.parent.cmp(&b.parent))
+            .then_with(|| a.cand.cmp(&b.cand))
+    });
+    for i in 0..entries.len() {
+        for j in (i + 1)..entries.len() {
+            if entries[i].state.kernel == entries[j].state.kernel {
+                return None;
+            }
+        }
+    }
+    Some(Pred {
+        selection: entries
+            .iter()
+            .map(|e| SelectedId {
+                parent: e.parent,
+                cand: e.cand,
+                fresh: e.fresh,
+            })
+            .collect(),
+        beam: entries.into_iter().map(|e| e.state).collect(),
+        next_best,
+    })
+}
+
+/// Spawn speculated rounds while the chain has depth headroom and the
+/// deepest layer's basis is complete. Called under the scheduler lock
+/// at every result store and at every judge, so the spawn schedule is
+/// a pure function of (deterministic) results, never of timing.
+fn maybe_spawn(ctx: &PipeCtx<'_>, g: &mut Sched) {
+    while try_spawn_one(ctx, g) {}
+}
+
+fn try_spawn_one(ctx: &PipeCtx<'_>, g: &mut Sched) -> bool {
+    let cfg = ctx.env.cfg;
+    if g.layers.len() >= cfg.speculation_depth + 1 {
+        return false;
+    }
+    let Some(idx) = g.layers.len().checked_sub(1) else {
+        return false;
+    };
+    {
+        let deepest = &g.layers[idx];
+        if deepest.spawned_next || deepest.round >= cfg.rounds {
+            return false;
+        }
+        for sr in &deepest.per_state {
+            if sr.start < sr.end && deepest.results[sr.start].is_none() {
+                // Basis incomplete: decide later (a further store
+                // re-invokes us) without burning the one-shot flag.
+                return false;
+            }
+        }
+    }
+    // Basis complete: the decision is final and deterministic.
+    g.layers[idx].spawned_next = true;
+    let Some(pred) = predict(cfg, &g.layers[idx]) else {
+        return false;
+    };
+    let mut planner = g.layers[idx]
+        .planner_after
+        .as_ref()
+        .expect("every layer snapshots its planner")
+        .snapshot();
+    let round = g.layers[idx].round + 1;
+    let mut gate_stats = FaultStats::default();
+    let mut k_per_round = Vec::new();
+    let mut adaptive_k_events = 0usize;
+    // Planning is µs-scale (MockLlm + pure transforms); holding the
+    // scheduler lock keeps the spawn atomic with its trigger.
+    let (cands, per_state) = search::plan_round(
+        cfg,
+        round,
+        &pred.beam,
+        planner.as_mut(),
+        ctx.coder,
+        &mut gate_stats,
+        &mut k_per_round,
+        &mut adaptive_k_events,
+    );
+    let id = g.next_id;
+    g.next_id += 1;
+    let n = cands.len();
+    g.layers.push(Layer {
+        id,
+        round,
+        cands: Arc::new(cands),
+        per_state,
+        beam: pred.beam,
+        round_best: pred.next_best,
+        results: (0..n).map(|_| None).collect(),
+        probes: vec![Vec::new(); n],
+        pending: n,
+        speculative: true,
+        lineage_cancel: Arc::new(AtomicBool::new(false)),
+        cand_tokens: Arc::new(
+            (0..n).map(|_| AtomicBool::new(false)).collect(),
+        ),
+        planner_after: Some(planner),
+        k_per_round,
+        adaptive_k_events,
+        gate_stats,
+        predicted_selection: pred.selection,
+        spawned_next: false,
+    });
+    for slot in 0..n {
+        ctx.shared.queue.push(TaskKey {
+            round,
+            slot,
+            layer: id,
+        });
+    }
+    true
+}
+
+/// Abort every speculated layer: raise each lineage token first, then
+/// the candidate tokens (the raise-ordering contract the testing agent
+/// relies on), and drop the layers — stale queue keys resolve to
+/// nothing, in-flight stores find no layer.
+fn abort_chain(g: &mut Sched) {
+    for layer in &g.layers {
+        layer.lineage_cancel.store(true, Ordering::SeqCst);
+        for t in layer.cand_tokens.iter() {
+            t.store(true, Ordering::SeqCst);
+        }
+    }
+    g.layers.clear();
+}
+
+/// Wait for one layer's results, helping drain the queue meanwhile
+/// (so a zero-worker grant degrades to the serial engine on the
+/// caller, exactly like every other fan-out).
+fn collect_layer(
+    ctx: &PipeCtx<'_>,
+    layer_id: u64,
+) -> (Vec<SlotResult>, Vec<Vec<u64>>) {
+    loop {
+        {
+            let g = ctx.shared.sched.lock().expect("scheduler poisoned");
+            let layer = g
+                .layers
+                .iter()
+                .find(|l| l.id == layer_id)
+                .expect("the round being collected is never aborted");
+            if layer.pending == 0 {
+                break;
+            }
+        }
+        if let Some(key) = ctx.shared.queue.try_pop() {
+            let task = {
+                let g = ctx.shared.sched.lock().expect("scheduler poisoned");
+                resolve(&g, key)
+            };
+            if let Some(t) = task {
+                run_task(ctx, t);
+            }
+            continue;
+        }
+        // Queue momentarily empty with results still pending: they are
+        // in flight on pool workers. Park on the store condvar (paired
+        // with the sched mutex, so the wakeup cannot be missed).
+        let g = ctx.shared.sched.lock().expect("scheduler poisoned");
+        let pending = g
+            .layers
+            .iter()
+            .find(|l| l.id == layer_id)
+            .map_or(0, |l| l.pending);
+        if pending > 0 {
+            drop(ctx.shared.done.wait(g).expect("scheduler poisoned"));
+        }
+    }
+    let mut g = ctx.shared.sched.lock().expect("scheduler poisoned");
+    let layer = g
+        .layers
+        .iter_mut()
+        .find(|l| l.id == layer_id)
+        .expect("the round being collected is never aborted");
+    let results = layer
+        .results
+        .iter_mut()
+        .map(|r| r.take().expect("pending == 0 means every slot stored"))
+        .collect();
+    let probes = std::mem::take(&mut layer.probes);
+    (results, probes)
+}
+
+/// The pipelined engine. Dispatched from
+/// [`search::optimize_beam_with_cache_budget`] when `cfg.pipelined`
+/// and `cfg.speculation_depth > 0`; byte-identical outcomes to the
+/// barriered engine by construction (module docs), with the
+/// speculation ledger as the only addition.
+pub(crate) fn optimize_pipelined(
+    spec: &KernelSpec,
+    cfg: &Config,
+    cache: &CompileCache,
+    budget: &Arc<WorkerBudget>,
+) -> Outcome {
+    let quality = match cfg.mode {
+        AgentMode::Multi => TestQuality::Representative,
+        AgentMode::Single => TestQuality::Unrepresentative,
+    };
+    let tester = TestingAgent::new(quality, cfg.seed)
+        .with_grid_workers(cfg.grid_workers)
+        .with_worker_budget(Arc::clone(budget))
+        .with_step_limit(cfg.watchdog_steps);
+    let profiler = ProfilingAgent::new(cfg.model.clone());
+    let mut planner = search::make_planner(cfg);
+    let coder = CodingAgent::new(cfg.bug_rate, cfg.seed ^ 0xC0DE);
+    let probe = ConcurrencyProbe::new();
+
+    let baseline = (spec.build_baseline)();
+    let suite = tester.generate_tests(spec);
+    let base_tests = tester.validate_with(spec, &baseline, &suite, Some(cache));
+    let base_profile = profiler.profile(&baseline, &suite, None);
+    debug_assert!(base_tests.pass, "baseline must pass its own tests");
+
+    let mut records: Vec<RoundRecord> = Vec::new();
+    let mut best = baseline.clone();
+    let mut best_speedup = 1.0f64;
+    let mut candidates_evaluated = 0usize;
+    let mut k_per_round: Vec<usize> = Vec::new();
+    let mut adaptive_k_events = 0usize;
+    let mut cancelled_candidates = 0usize;
+    let mut fault_stats = FaultStats::default();
+    let mut quarantined_lineages = 0u64;
+    let mut ledger = SpecLedger::default();
+    let mut beam: Vec<BeamState> = vec![BeamState {
+        kernel: baseline.clone(),
+        tests: base_tests,
+        profile: base_profile.clone(),
+        speedup: 1.0,
+        blocked: Vec::new(),
+        consec_failures: 0,
+    }];
+
+    let shared = Shared {
+        sched: Mutex::new(Sched {
+            layers: Vec::new(),
+            next_id: 0,
+        }),
+        queue: TaskQueue::new(),
+        done: Condvar::new(),
+    };
+    let ctx = PipeCtx {
+        env: EvalEnv {
+            spec,
+            cfg,
+            tester: &tester,
+            profiler: &profiler,
+            suite: &suite,
+            base_profile: &base_profile,
+        },
+        cache,
+        budget: budget.as_ref(),
+        probe: &probe,
+        coder: &coder,
+        shared: &shared,
+    };
+
+    thread::scope(|s| {
+        // Pool sizing: enough workers to keep depth+1 overlapped
+        // rounds busy, capped (as everywhere) by the process-wide
+        // budget — a zero grant degrades to the helping drain in
+        // `collect_layer`, the serial engine on the caller.
+        let k_per_state = cfg.candidates_per_round.max(1);
+        let want = (cfg.beam_width.max(1)
+            * k_per_state
+            * (cfg.speculation_depth + 1))
+            .max(2)
+            - 1;
+        let lease = budget.try_acquire(want);
+        let handles: Vec<_> = (0..lease.granted())
+            .map(|_| {
+                let ctx = &ctx;
+                s.spawn(move || worker_loop(ctx))
+            })
+            .collect();
+
+        let mut adopted: Option<u64> = None;
+        for round in 1..=cfg.rounds {
+            // ---- plan canonically, or adopt a committed speculation --
+            let (cands, per_state, layer_id, was_speculative) =
+                if let Some(id) = adopted.take() {
+                    let mut g =
+                        shared.sched.lock().expect("scheduler poisoned");
+                    let layer = g
+                        .layers
+                        .iter_mut()
+                        .find(|l| l.id == id)
+                        .expect("committed layers are never aborted");
+                    debug_assert_eq!(layer.round, round);
+                    k_per_round.append(&mut layer.k_per_round);
+                    adaptive_k_events += layer.adaptive_k_events;
+                    fault_stats.add(&layer.gate_stats);
+                    planner = layer
+                        .planner_after
+                        .as_ref()
+                        .expect("every layer snapshots its planner")
+                        .snapshot();
+                    (
+                        Arc::clone(&layer.cands),
+                        layer.per_state.clone(),
+                        id,
+                        true,
+                    )
+                } else {
+                    let (c, ps) = search::plan_round(
+                        cfg,
+                        round,
+                        &beam,
+                        planner.as_mut(),
+                        &coder,
+                        &mut fault_stats,
+                        &mut k_per_round,
+                        &mut adaptive_k_events,
+                    );
+                    let cands = Arc::new(c);
+                    let n = cands.len();
+                    let mut g =
+                        shared.sched.lock().expect("scheduler poisoned");
+                    let id = g.next_id;
+                    g.next_id += 1;
+                    g.layers.push(Layer {
+                        id,
+                        round,
+                        cands: Arc::clone(&cands),
+                        per_state: ps.clone(),
+                        beam: beam.clone(),
+                        round_best: best_speedup,
+                        results: (0..n).map(|_| None).collect(),
+                        probes: vec![Vec::new(); n],
+                        pending: n,
+                        speculative: false,
+                        lineage_cancel: Arc::new(AtomicBool::new(false)),
+                        cand_tokens: Arc::new(
+                            (0..n).map(|_| AtomicBool::new(false)).collect(),
+                        ),
+                        planner_after: Some(planner.snapshot()),
+                        k_per_round: Vec::new(),
+                        adaptive_k_events: 0,
+                        gate_stats: FaultStats::default(),
+                        predicted_selection: Vec::new(),
+                        spawned_next: false,
+                    });
+                    for slot in 0..n {
+                        shared.queue.push(TaskKey {
+                            round,
+                            slot,
+                            layer: id,
+                        });
+                    }
+                    // Zero-candidate rounds store nothing, so the
+                    // spawn check must run here too.
+                    maybe_spawn(&ctx, &mut g);
+                    (cands, ps, id, false)
+                };
+            let round_best = best_speedup;
+
+            // ---- collect this round's evaluations --------------------
+            let (raw, probes) = collect_layer(&ctx, layer_id);
+            let mut evals: Vec<Option<EvalProduct>> = raw
+                .into_iter()
+                .enumerate()
+                .map(|(i, r)| match r {
+                    Ok(v) => v,
+                    Err(msg) => Some(search::panicked_product(
+                        &profiler,
+                        &cands[i].kernel,
+                        &suite,
+                        Some(&base_profile),
+                        &msg,
+                    )),
+                })
+                .collect();
+
+            // ---- commit replay: restore the cache traffic ------------
+            // A committed round validated cache-free; replay the exact
+            // compile-cache probes (per attempt key, per candidate, in
+            // index order) the cache-carrying barriered evaluations
+            // would have made. Unneeded at `round_budget > 0`, where
+            // the barriered engine is cache-free too.
+            if was_speculative && cfg.round_budget == 0 {
+                for (i, keys) in probes.iter().enumerate() {
+                    for akey in keys {
+                        tester
+                            .with_fault_context(cfg.fault, *akey)
+                            .replay_cache_probes(
+                                &cands[i].kernel,
+                                &suite,
+                                cache,
+                            );
+                    }
+                }
+            }
+
+            // ---- settle (the shared seam) ----------------------------
+            let mut tally = RoundTally {
+                records: &mut records,
+                best: &mut best,
+                best_speedup: &mut best_speedup,
+                candidates_evaluated: &mut candidates_evaluated,
+                cancelled_candidates: &mut cancelled_candidates,
+                fault_stats: &mut fault_stats,
+                quarantined_lineages: &mut quarantined_lineages,
+            };
+            let (next_beam, selection) = search::settle_round(
+                &ctx.env,
+                round,
+                round_best,
+                beam,
+                cands.as_slice(),
+                &per_state,
+                &mut evals,
+                &mut tally,
+            );
+            beam = next_beam;
+
+            // ---- judge the immediate-next speculation ----------------
+            let mut g = shared.sched.lock().expect("scheduler poisoned");
+            let pos = g
+                .layers
+                .iter()
+                .position(|l| l.id == layer_id)
+                .expect("the settled layer is still registered");
+            g.layers.remove(pos);
+            if let Some(next) = g.layers.first() {
+                debug_assert!(next.speculative);
+                debug_assert_eq!(next.round, round + 1);
+                ledger.speculated += 1;
+                if next.predicted_selection == selection
+                    && next.round_best.to_bits() == best_speedup.to_bits()
+                {
+                    ledger.committed += 1;
+                    adopted = Some(next.id);
+                } else {
+                    ledger.aborted += 1;
+                    abort_chain(&mut g);
+                }
+            }
+            // A settled (or aborted) round frees depth headroom.
+            maybe_spawn(&ctx, &mut g);
+            drop(g);
+        }
+
+        shared.queue.close();
+        for h in handles {
+            h.join().expect("pipelined pool worker panicked");
+        }
+        drop(lease);
+    });
+
+    search::finish_outcome(
+        spec,
+        cfg,
+        records,
+        baseline,
+        best,
+        cache,
+        budget,
+        SearchTelemetry {
+            candidates_evaluated,
+            peak_concurrent_evals: probe.peak(),
+            k_per_round,
+            adaptive_k_rounds: adaptive_k_events,
+            cancelled_candidates,
+            fault_stats,
+            quarantined_lineages,
+            speculation: ledger,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimize;
+    use crate::kernels;
+
+    fn pipe_cfg(depth: usize) -> Config {
+        Config {
+            pipelined: true,
+            speculation_depth: depth,
+            candidates_per_round: 3,
+            ..Config::multi_agent()
+        }
+    }
+
+    #[test]
+    fn pipelined_matches_barriered_on_every_kernel() {
+        for spec in kernels::all_specs() {
+            let p = optimize(&spec, &pipe_cfg(2));
+            let b = optimize(
+                &spec,
+                &Config {
+                    pipelined: false,
+                    ..pipe_cfg(2)
+                },
+            );
+            assert_eq!(p.records, b.records, "{}", spec.paper_name);
+            assert_eq!(p.best, b.best, "{}", spec.paper_name);
+            assert_eq!(
+                p.final_speedup.to_bits(),
+                b.final_speedup.to_bits(),
+                "{}",
+                spec.paper_name
+            );
+            assert_eq!(p.cache_hits, b.cache_hits, "{}", spec.paper_name);
+            assert_eq!(p.cache_misses, b.cache_misses, "{}", spec.paper_name);
+            assert_eq!(p.candidates_evaluated, b.candidates_evaluated);
+            assert_eq!(p.k_per_round, b.k_per_round);
+            assert_eq!(
+                b.speculated_lineages, 0,
+                "the barriered engine never speculates across rounds"
+            );
+        }
+    }
+
+    #[test]
+    fn depth_zero_runs_the_legacy_engine_with_a_zero_ledger() {
+        let cfg = pipe_cfg(0);
+        let out = optimize(&kernels::silu::spec(), &cfg);
+        assert!(out.final_correct);
+        assert_eq!(out.speculated_lineages, 0);
+        assert_eq!(out.committed_lineages, 0);
+        assert_eq!(out.aborted_lineages, 0);
+    }
+
+    #[test]
+    fn speculation_ledger_is_consistent_and_fires_on_a_quiet_run() {
+        let cfg = Config {
+            bug_rate: 0.0,
+            temperature: 0.0,
+            ..pipe_cfg(1)
+        };
+        let out = optimize(&kernels::merge::spec(), &cfg);
+        assert!(out.final_correct);
+        assert_eq!(
+            out.speculated_lineages,
+            out.committed_lineages + out.aborted_lineages,
+            "every speculated lineage is judged exactly once"
+        );
+        assert!(
+            out.speculated_lineages > 0,
+            "a quiet pipelined run must speculate across the barrier"
+        );
+    }
+
+    #[test]
+    fn pipelined_preset_matches_its_barriered_twin() {
+        let preset = Config::multi_agent_pipelined();
+        let barriered = Config {
+            pipelined: false,
+            ..preset.clone()
+        };
+        for spec in kernels::all_specs() {
+            let p = optimize(&spec, &preset);
+            let b = optimize(&spec, &barriered);
+            assert_eq!(p.records, b.records, "{}", spec.paper_name);
+            assert_eq!(p.best, b.best, "{}", spec.paper_name);
+            assert_eq!(
+                p.final_speedup.to_bits(),
+                b.final_speedup.to_bits(),
+                "{}",
+                spec.paper_name
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_is_deterministic_across_worker_budgets() {
+        let spec = kernels::rmsnorm::spec();
+        let cfg = pipe_cfg(2);
+        let a = optimize(&spec, &cfg);
+        for wb in [1usize, 2, 7] {
+            let b = optimize(
+                &spec,
+                &Config {
+                    worker_budget: wb,
+                    ..cfg.clone()
+                },
+            );
+            assert_eq!(a.records, b.records, "wb={wb}");
+            assert_eq!(a.best, b.best, "wb={wb}");
+            assert_eq!(
+                a.final_speedup.to_bits(),
+                b.final_speedup.to_bits(),
+                "wb={wb}"
+            );
+            assert_eq!(a.speculated_lineages, b.speculated_lineages, "wb={wb}");
+            assert_eq!(a.committed_lineages, b.committed_lineages, "wb={wb}");
+            assert_eq!(a.aborted_lineages, b.aborted_lineages, "wb={wb}");
+            assert_eq!(a.cache_hits, b.cache_hits, "wb={wb}");
+            assert_eq!(a.cache_misses, b.cache_misses, "wb={wb}");
+        }
+    }
+}

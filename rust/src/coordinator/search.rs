@@ -37,7 +37,7 @@
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::agents::{
     priority_gap, CodingAgent, MockLlm, PlannerPolicy, ProfileReport,
@@ -61,40 +61,68 @@ use super::run::{
 
 /// One live beam state: a known-good kernel plus the signals the planner
 /// reads and the moves measured non-improving *for this kernel*.
-struct BeamState {
-    kernel: Kernel,
-    tests: TestReport,
-    profile: ProfileReport,
+#[derive(Clone)]
+pub(crate) struct BeamState {
+    pub(crate) kernel: Kernel,
+    pub(crate) tests: TestReport,
+    pub(crate) profile: ProfileReport,
     /// Internal geomean speedup vs the round-0 baseline.
-    speedup: f64,
-    blocked: Vec<Move>,
+    pub(crate) speedup: f64,
+    pub(crate) blocked: Vec<Move>,
     /// Consecutive rounds in which every kept candidate of this lineage
     /// failed validation (reset by any passing candidate). At
     /// [`Config::quarantine_after`] the lineage is quarantined: it
     /// stops planning and serves its known-good kernel.
-    consec_failures: usize,
+    pub(crate) consec_failures: usize,
 }
 
 /// One materialized candidate awaiting evaluation.
-struct Candidate {
+pub(crate) struct Candidate {
     /// Beam state (parent) index.
-    parent: usize,
+    pub(crate) parent: usize,
     /// Candidate index within the parent (0 = the greedy choice).
-    index: usize,
-    kernel: Kernel,
-    applied: Move,
-    rationale: String,
+    pub(crate) index: usize,
+    pub(crate) kernel: Kernel,
+    pub(crate) applied: Move,
+    pub(crate) rationale: String,
 }
 
 /// Per-state materialization summary for one round.
-struct StateRound {
+#[derive(Clone)]
+pub(crate) struct StateRound {
     /// Range into the round's candidate vector.
-    start: usize,
-    end: usize,
+    pub(crate) start: usize,
+    pub(crate) end: usize,
     /// Inapplicability reasons (reported when nothing materialized).
-    reasons: Vec<String>,
+    pub(crate) reasons: Vec<String>,
     /// The state sat out this round under lineage quarantine.
-    quarantined: bool,
+    pub(crate) quarantined: bool,
+}
+
+/// Identity of one next-beam selection, in selection order — the
+/// pipelined scheduler's commit check compares the selection a
+/// speculated round was planned against with the selection the settled
+/// round actually produced (`cand` is `usize::MAX` for a surviving
+/// parent, mirroring [`PoolEntry::cand`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct SelectedId {
+    pub(crate) parent: usize,
+    pub(crate) cand: usize,
+    pub(crate) fresh: bool,
+}
+
+/// Speculation ledger: lineages speculated across the round barrier by
+/// the pipelined scheduler, and how each immediate-next speculation
+/// fared when its basis round settled. Deterministic at every worker
+/// count: exactly one entry per settled round that had a next-round
+/// speculation registered, and registration is schedule-independent
+/// (the basis results that gate it are complete before the round can
+/// settle).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct SpecLedger {
+    pub(crate) speculated: u64,
+    pub(crate) committed: u64,
+    pub(crate) aborted: u64,
 }
 
 /// A next-beam contender: an accepted candidate (fresh) or a surviving
@@ -124,6 +152,9 @@ pub(crate) struct SearchTelemetry {
     pub(crate) fault_stats: FaultStats,
     /// Lineages that crossed the quarantine threshold this run.
     pub(crate) quarantined_lineages: u64,
+    /// Cross-round speculation ledger (all zero for the barriered and
+    /// greedy engines).
+    pub(crate) speculation: SpecLedger,
 }
 
 /// Size one beam state's speculation width from the planner's priority
@@ -290,9 +321,22 @@ pub(crate) fn supervised_agent_gate(
 /// One supervised candidate evaluation: validation-site fault rolls,
 /// bounded deterministic retry, watchdog-denominated hang conversion,
 /// then the real validate + profile (with compile-/grid-level injection
-/// keyed per attempt). Returns `None` only when a beam-round token
-/// abandoned the validation (`cancel` is `Some`); injected candidate
-/// panics unwind to the caller's `catch_unwind` boundary.
+/// keyed per attempt). Returns `None` only when a beam-round (or
+/// speculative-lineage) token abandoned the validation or the profile
+/// sweep (`cancel` is `Some`); injected candidate panics unwind to the
+/// caller's `catch_unwind` boundary. The profile sweep polls the
+/// round-level token too ([`ProfilingAgent::profile_cancellable`]), so
+/// an abandoned lineage stops mid-sweep instead of profiling to
+/// completion — any extra `None` this produces is normalized by the
+/// canonical repair pass, which re-runs token-free.
+///
+/// `probes` is the pipelined scheduler's cache-probe ledger: each
+/// attempt whose real validation runs records its attempt key, so a
+/// committed speculative evaluation (which validated cache-free) can
+/// replay exactly the compile-cache probes the cache-carrying barriered
+/// evaluation would have made
+/// ([`TestingAgent::replay_cache_probes`]). `None` everywhere else —
+/// zero cost on the legacy paths.
 ///
 /// With the plan disabled this is *exactly* today's evaluation — same
 /// calls, same cache traffic — so fault-off runs stay bit-identical
@@ -308,6 +352,7 @@ pub(crate) fn evaluate_supervised(
     base_profile: Option<&ProfileReport>,
     cache: Option<&CompileCache>,
     cancel: Option<(&AtomicBool, &AtomicBool)>,
+    probes: Option<&Mutex<Vec<u64>>>,
     key: u64,
 ) -> Option<EvalProduct> {
     let plan = cfg.fault;
@@ -317,12 +362,24 @@ pub(crate) fn evaluate_supervised(
         }
         None => agent.validate_with(spec, kernel, suite, cache),
     };
+    let record_probe = |akey: u64| {
+        if let Some(led) = probes {
+            led.lock().expect("probe ledger poisoned").push(akey);
+        }
+    };
+    let profile_or_cancel = || match cancel {
+        Some((_, rnd)) => {
+            profiler.profile_cancellable(kernel, suite, base_profile, rnd)
+        }
+        None => Some(profiler.profile(kernel, suite, base_profile)),
+    };
     if !plan.enabled() {
+        record_probe(key);
         let tests = validate(tester);
         if tests.round_cancelled {
             return None;
         }
-        let profile = profiler.profile(kernel, suite, base_profile);
+        let profile = profile_or_cancel()?;
         return Some(EvalProduct {
             tests,
             profile,
@@ -355,8 +412,7 @@ pub(crate) fn evaluate_supervised(
                     // Terminal: a corrupted verdict is conservatively a
                     // failure (the gate can never flip fail → pass) and
                     // must not be retried into a laundered answer.
-                    let profile =
-                        profiler.profile(kernel, suite, base_profile);
+                    let profile = profile_or_cancel()?;
                     return Some(EvalProduct {
                         tests: injected_report(faults::poison_msg()),
                         profile,
@@ -383,6 +439,7 @@ pub(crate) fn evaluate_supervised(
         }
         // Clean supervisor roll: the real validation runs, with
         // compile- and grid-level injection keyed to this attempt.
+        record_probe(akey);
         let tests = validate(&tester.with_fault_context(plan, akey));
         if tests.round_cancelled {
             return None;
@@ -397,7 +454,7 @@ pub(crate) fn evaluate_supervised(
                 // Injected but terminal (a grid-worker panic caught at
                 // the chunk join): canonical failed verdict as-is.
                 stats.injected += 1;
-                let profile = profiler.profile(kernel, suite, base_profile);
+                let profile = profile_or_cancel()?;
                 return Some(EvalProduct {
                     tests,
                     profile,
@@ -414,7 +471,7 @@ pub(crate) fn evaluate_supervised(
             continue;
         }
         stats.survived = stats.injected;
-        let profile = profiler.profile(kernel, suite, base_profile);
+        let profile = profile_or_cancel()?;
         return Some(EvalProduct {
             tests,
             profile,
@@ -425,7 +482,7 @@ pub(crate) fn evaluate_supervised(
     // survived — the evaluation never completed cleanly.
     let tests =
         last.expect("the loop only falls through after a retryable fault");
-    let profile = profiler.profile(kernel, suite, base_profile);
+    let profile = profile_or_cancel()?;
     Some(EvalProduct {
         tests,
         profile,
@@ -511,7 +568,467 @@ pub(crate) fn finish_outcome(
         retries: telemetry.fault_stats.retries,
         watchdog_trips: telemetry.fault_stats.watchdog_trips,
         quarantined_lineages: telemetry.quarantined_lineages,
+        speculated_lineages: telemetry.speculation.speculated,
+        committed_lineages: telemetry.speculation.committed,
+        aborted_lineages: telemetry.speculation.aborted,
     }
+}
+
+/// Plan + materialize one round's candidates (serial; see module docs).
+/// Shared verbatim by the barriered loop and the pipelined scheduler:
+/// speculative rounds call it against a *predicted* next beam with a
+/// snapshotted planner, so a committed speculation's plan — suggestion
+/// stream, fumble rolls, adaptive-K choices — is byte-identical to the
+/// plan the barriered engine would have made after the round settled.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn plan_round(
+    cfg: &Config,
+    round: usize,
+    beam: &[BeamState],
+    planner: &mut dyn PlannerPolicy,
+    coder: &CodingAgent,
+    fault_stats: &mut FaultStats,
+    k_per_round: &mut Vec<usize>,
+    adaptive_k_events: &mut usize,
+) -> (Vec<Candidate>, Vec<StateRound>) {
+    let k_per_state = cfg.candidates_per_round.max(1);
+    let mut cands: Vec<Candidate> = Vec::new();
+    let mut per_state: Vec<StateRound> = Vec::with_capacity(beam.len());
+    for (si, state) in beam.iter().enumerate() {
+        if cfg.quarantine_after > 0
+            && state.consec_failures >= cfg.quarantine_after
+        {
+            // Quarantined lineage: no planning, no speculation —
+            // the state serves its known-good kernel and logs a
+            // constant record below.
+            per_state.push(StateRound {
+                start: cands.len(),
+                end: cands.len(),
+                reasons: Vec::new(),
+                quarantined: true,
+            });
+            continue;
+        }
+        let mut suggestions =
+            planner.suggest(&state.kernel, &state.tests, &state.profile);
+        suggestions.retain(|s| !state.blocked.contains(&s.mv));
+        // Adaptive K (ROADMAP): spend the speculation budget where
+        // the planner's ranking is contested, save it where one
+        // move dominates. Static mode (or gap threshold 0) sizes
+        // every event at the ceiling — bit-for-bit today's
+        // behavior.
+        let k_state = adaptive_k(cfg, &suggestions);
+        debug_assert!(k_state <= k_per_state);
+        k_per_round.push(k_state);
+        if k_state < k_per_state {
+            *adaptive_k_events += 1;
+        }
+        let start = cands.len();
+        let mut reasons = Vec::new();
+        for (pos, s) in suggestions.iter().enumerate() {
+            let ci = cands.len() - start;
+            if ci >= k_state {
+                break;
+            }
+            // AgentCall-site supervision: transient coding-agent
+            // faults retried in place (serial, keyed by candidate
+            // slot and suggestion position — never by schedule).
+            if let Err(reason) = supervised_agent_gate(
+                cfg.fault,
+                faults::mix(
+                    faults::candidate_key(round, si, ci),
+                    pos as u64,
+                ),
+                fault_stats,
+            ) {
+                reasons.push(reason);
+                continue;
+            }
+            let mut stream = candidate_stream(cfg.seed, round, si, ci);
+            match coder.apply_one(&state.kernel, s, &mut stream) {
+                Ok(kernel) => cands.push(Candidate {
+                    parent: si,
+                    index: ci,
+                    kernel,
+                    applied: s.mv,
+                    rationale: s.rationale.clone(),
+                }),
+                Err(e) => reasons.push(e),
+            }
+        }
+        per_state.push(StateRound {
+            start,
+            end: cands.len(),
+            reasons,
+            quarantined: false,
+        });
+    }
+    (cands, per_state)
+}
+
+/// The read-only evaluation context both engines thread through
+/// [`settle_round`] (and the pipelined scheduler through its workers).
+pub(crate) struct EvalEnv<'a> {
+    pub(crate) spec: &'a KernelSpec,
+    pub(crate) cfg: &'a Config,
+    pub(crate) tester: &'a TestingAgent,
+    pub(crate) profiler: &'a ProfilingAgent,
+    pub(crate) suite: &'a TestSuite,
+    pub(crate) base_profile: &'a ProfileReport,
+}
+
+/// The run-long mutable state a settling round updates — one borrow
+/// bundle so [`settle_round`] can be shared verbatim by both engines.
+pub(crate) struct RoundTally<'a> {
+    pub(crate) records: &'a mut Vec<RoundRecord>,
+    pub(crate) best: &'a mut Kernel,
+    pub(crate) best_speedup: &'a mut f64,
+    pub(crate) candidates_evaluated: &'a mut usize,
+    pub(crate) cancelled_candidates: &'a mut usize,
+    pub(crate) fault_stats: &'a mut FaultStats,
+    pub(crate) quarantined_lineages: &'a mut u64,
+}
+
+/// Everything after a round's evaluations land, shared verbatim by the
+/// barriered loop and the pipelined scheduler: the canonical
+/// cancellation schedule + repair, canonical fault telemetry, the
+/// accept gate + records + global-best update, and next-beam selection.
+/// Returns the next beam plus the selection identities (in selection
+/// order) — the pipelined scheduler's commit check compares them
+/// against the prediction a speculated round was planned from.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn settle_round(
+    env: &EvalEnv<'_>,
+    round: usize,
+    round_best: f64,
+    beam: Vec<BeamState>,
+    cands: &[Candidate],
+    per_state: &[StateRound],
+    evals: &mut Vec<Option<EvalProduct>>,
+    tally: &mut RoundTally<'_>,
+) -> (Vec<BeamState>, Vec<SelectedId>) {
+    let beam_width = env.cfg.beam_width.max(1);
+    let round_budget = env.cfg.round_budget;
+
+    // ---- canonical cancellation schedule + repair ----------------
+    // Deterministic reference semantics: walk candidates in index
+    // order; once an improver has been seen and `round_budget`
+    // candidates have evaluated, every later candidate is abandoned
+    // — whatever the race actually did. Kept candidates that the
+    // race cancelled are re-run serially (cache-bypassing, like the
+    // testing agent's shape repair); completed results of abandoned
+    // candidates are discarded. Unreachable at `round_budget = 0`.
+    let mut abandoned = vec![false; cands.len()];
+    if round_budget > 0 {
+        let mut kept = 0usize;
+        let mut improver_seen = false;
+        for i in 0..cands.len() {
+            if improver_seen && kept >= round_budget {
+                abandoned[i] = true;
+                continue;
+            }
+            if evals[i].is_none() {
+                // The repair re-runs the full supervised evaluation
+                // (same candidate key, so injected faults replay
+                // identically), under the same panic containment as
+                // the racy pass.
+                let key = faults::candidate_key(
+                    round,
+                    cands[i].parent,
+                    cands[i].index,
+                );
+                let repaired =
+                    std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        evaluate_supervised(
+                            env.spec,
+                            env.cfg,
+                            env.tester,
+                            env.profiler,
+                            &cands[i].kernel,
+                            env.suite,
+                            Some(env.base_profile),
+                            None,
+                            None,
+                            None,
+                            key,
+                        )
+                    }));
+                evals[i] = Some(match repaired {
+                    Ok(product) => product
+                        .expect("repair runs without cancellation tokens"),
+                    Err(p) => panicked_product(
+                        env.profiler,
+                        &cands[i].kernel,
+                        env.suite,
+                        Some(env.base_profile),
+                        &panic_message(p),
+                    ),
+                });
+            }
+            let product =
+                evals[i].as_ref().expect("repaired just above");
+            kept += 1;
+            if product.tests.pass
+                && product.profile.speedup_vs_baseline > round_best
+            {
+                improver_seen = true;
+            }
+        }
+        let n_abandoned = abandoned.iter().filter(|a| **a).count();
+        *tally.cancelled_candidates += n_abandoned;
+        *tally.candidates_evaluated += cands.len() - n_abandoned;
+    } else {
+        *tally.candidates_evaluated += cands.len();
+    }
+
+    // ---- canonical fault telemetry (by candidate index) ----------
+    // Abandoned candidates contribute nothing: their true stats may
+    // not exist (cancelled mid-flight) and must not leak.
+    for (i, e) in evals.iter().enumerate() {
+        if abandoned[i] {
+            continue;
+        }
+        if let Some(p) = e {
+            tally.fault_stats.add(&p.stats);
+        }
+    }
+
+    // ---- gate, record, update the global best (by index) ---------
+    let mut gate = vec![false; cands.len()];
+    let mut rec_idx = vec![usize::MAX; cands.len()];
+    let mut any_accept = vec![false; beam.len()];
+    let mut any_pass = vec![false; beam.len()];
+    let mut any_kept = vec![false; beam.len()];
+    let mut new_blocks: Vec<Vec<Move>> = vec![Vec::new(); beam.len()];
+    for (si, sr) in per_state.iter().enumerate() {
+        if sr.start == sr.end {
+            tally.records.push(RoundRecord {
+                round,
+                beam_state: si,
+                candidate: 0,
+                applied: None,
+                rationale: String::new(),
+                pass: true,
+                speedup_internal: round_best,
+                mean_us_internal: beam[si].profile.mean_us,
+                accepted: false,
+                loc: printer::loc(&beam[si].kernel),
+                note: if sr.quarantined {
+                    format!(
+                        "quarantined: lineage disabled after {} \
+                         consecutive failed rounds",
+                        env.cfg.quarantine_after
+                    )
+                } else {
+                    format!(
+                        "no applicable suggestion ({})",
+                        sr.reasons.join("; ")
+                    )
+                },
+            });
+            continue;
+        }
+        for ci in sr.start..sr.end {
+            let cand = &cands[ci];
+            if abandoned[ci] {
+                // Canonical cancellation record: constant fields
+                // (the candidate's true numbers may not exist and
+                // must not leak even when the race finished them).
+                tally.records.push(RoundRecord {
+                    round,
+                    beam_state: si,
+                    candidate: cand.index,
+                    applied: Some(cand.applied),
+                    rationale: cand.rationale.clone(),
+                    pass: false,
+                    speedup_internal: 0.0,
+                    mean_us_internal: 0.0,
+                    accepted: false,
+                    loc: printer::loc(&cand.kernel),
+                    note: "abandoned: a sibling measured strictly \
+                           better and the round's speculation budget \
+                           was exhausted"
+                        .into(),
+                });
+                continue;
+            }
+            let product =
+                evals[ci].as_ref().expect("kept candidates are evaluated");
+            let (tests, profile) = (&product.tests, &product.profile);
+            any_kept[si] = true;
+            any_pass[si] = any_pass[si] || tests.pass;
+            let speedup = profile.speedup_vs_baseline;
+            let improved = speedup >= round_best * ACCEPT_THRESHOLD;
+            let accepted = tests.pass && improved;
+            let note = if !tests.pass {
+                match &tests.failure {
+                    Some(f) => format!("rejected: runtime failure ({f})"),
+                    None => format!(
+                        "rejected: numerical mismatch (rel {:.2e})",
+                        tests.max_rel_err
+                    ),
+                }
+            } else if !improved {
+                new_blocks[si].push(cand.applied);
+                format!(
+                    "rejected: measured {:.2}x vs best {:.2}x — move blocked",
+                    speedup, round_best
+                )
+            } else {
+                format!("accepted at {:.2}x (internal)", speedup)
+            };
+            gate[ci] = accepted;
+            any_accept[si] = any_accept[si] || accepted;
+            rec_idx[ci] = tally.records.len();
+            tally.records.push(RoundRecord {
+                round,
+                beam_state: si,
+                candidate: cand.index,
+                applied: Some(cand.applied),
+                rationale: cand.rationale.clone(),
+                pass: tests.pass,
+                speedup_internal: speedup,
+                mean_us_internal: profile.mean_us,
+                accepted,
+                loc: printer::loc(&cand.kernel),
+                note,
+            });
+            if accepted && speedup > *tally.best_speedup {
+                *tally.best = cand.kernel.clone();
+                *tally.best_speedup = speedup;
+            }
+        }
+    }
+
+    // ---- select the next beam ------------------------------------
+    let mut pool: Vec<PoolEntry> = Vec::new();
+    for ci in 0..cands.len() {
+        if !gate[ci] {
+            continue;
+        }
+        let product =
+            evals[ci].as_ref().expect("gated candidates are evaluated");
+        pool.push(PoolEntry {
+            state: BeamState {
+                kernel: cands[ci].kernel.clone(),
+                tests: product.tests.clone(),
+                profile: product.profile.clone(),
+                speedup: product.profile.speedup_vs_baseline,
+                // Fresh kernel, fresh block set: a move that did not
+                // pay on the parent may pay here.
+                blocked: Vec::new(),
+                // An accepted child passed its tests: fresh lineage.
+                consec_failures: 0,
+            },
+            score: product.profile.speedup_vs_baseline,
+            parent: cands[ci].parent,
+            cand: cands[ci].index,
+            fresh: true,
+            rec: rec_idx[ci],
+        });
+    }
+    let n_states = any_accept.len();
+    let mut superseded: Vec<(usize, BeamState)> = Vec::new();
+    for (si, mut state) in beam.into_iter().enumerate() {
+        state.blocked.append(&mut new_blocks[si]);
+        // Lineage health: a round where candidates were kept but
+        // every kept candidate *failed its tests* counts against the
+        // lineage; any passing kept candidate (even a non-improving
+        // one) resets it. Rounds with nothing kept (cancelled, no
+        // applicable suggestion, already quarantined) leave the
+        // counter untouched.
+        if any_kept[si] {
+            if any_pass[si] {
+                state.consec_failures = 0;
+            } else {
+                state.consec_failures += 1;
+                if env.cfg.quarantine_after > 0
+                    && state.consec_failures == env.cfg.quarantine_after
+                {
+                    *tally.quarantined_lineages += 1;
+                }
+            }
+        }
+        if any_accept[si] {
+            // Replaced by its accepted candidate(s); held back only
+            // for the narrow-beam fallback below.
+            superseded.push((si, state));
+        } else {
+            pool.push(PoolEntry {
+                score: state.speedup,
+                state,
+                parent: si,
+                cand: usize::MAX,
+                fresh: false,
+                rec: usize::MAX,
+            });
+        }
+    }
+    pool.sort_by(|a, b| {
+        b.score
+            .total_cmp(&a.score)
+            .then_with(|| b.fresh.cmp(&a.fresh))
+            .then_with(|| a.parent.cmp(&b.parent))
+            .then_with(|| a.cand.cmp(&b.cand))
+    });
+    let mut selected: Vec<PoolEntry> = Vec::new();
+    let mut selection: Vec<SelectedId> = Vec::new();
+    let mut child_selected = vec![false; n_states];
+    for entry in pool {
+        let full = selected.len() >= beam_width;
+        let dup = selected
+            .iter()
+            .any(|s| s.state.kernel == entry.state.kernel);
+        if full || dup {
+            if entry.fresh && entry.rec != usize::MAX {
+                tally.records[entry.rec].accepted = false;
+                tally.records[entry.rec].note.push_str(if dup {
+                    "; dropped: duplicate beam state"
+                } else {
+                    "; dropped: beam full"
+                });
+            }
+            continue;
+        }
+        if entry.fresh {
+            child_selected[entry.parent] = true;
+        }
+        selection.push(SelectedId {
+            parent: entry.parent,
+            cand: entry.cand,
+            fresh: entry.fresh,
+        });
+        selected.push(entry);
+    }
+    // Fallback: a parent whose accepted candidates all got deduped
+    // or squeezed out would otherwise vanish and silently narrow
+    // the beam; re-offer such parents (in index order) while room
+    // remains. Unreachable at B = K = 1, where the single accepted
+    // child is always selected.
+    for (si, state) in superseded {
+        if selected.len() >= beam_width {
+            break;
+        }
+        if child_selected[si]
+            || selected.iter().any(|s| s.state.kernel == state.kernel)
+        {
+            continue;
+        }
+        selection.push(SelectedId {
+            parent: si,
+            cand: usize::MAX,
+            fresh: false,
+        });
+        selected.push(PoolEntry {
+            score: state.speedup,
+            state,
+            parent: si,
+            cand: usize::MAX,
+            fresh: false,
+            rec: usize::MAX,
+        });
+    }
+    (selected.into_iter().map(|e| e.state).collect(), selection)
 }
 
 /// Run the speculative beam search on one kernel (per-run cache).
@@ -546,8 +1063,15 @@ pub(crate) fn optimize_beam_with_cache_budget(
     cache: &CompileCache,
     budget: &Arc<WorkerBudget>,
 ) -> Outcome {
-    let beam_width = cfg.beam_width.max(1);
-    let k_per_state = cfg.candidates_per_round.max(1);
+    if cfg.pipelined && cfg.speculation_depth > 0 {
+        // The pipelined engine plans, evaluates and settles through the
+        // exact same seams (plan_round / evaluate_supervised /
+        // settle_round), so this dispatch changes *scheduling* only —
+        // outcomes are differential-pinned byte-identical. With
+        // `--pipelined` off or `speculation_depth = 0` the literal
+        // legacy loop below runs.
+        return super::sched::optimize_pipelined(spec, cfg, cache, budget);
+    }
     let quality = match cfg.mode {
         AgentMode::Multi => TestQuality::Representative,
         AgentMode::Single => TestQuality::Unrepresentative,
@@ -589,77 +1113,16 @@ pub(crate) fn optimize_beam_with_cache_budget(
 
     for round in 1..=cfg.rounds {
         // ---- plan + materialize (serial; see module docs) ------------
-        let mut cands: Vec<Candidate> = Vec::new();
-        let mut per_state: Vec<StateRound> = Vec::with_capacity(beam.len());
-        for (si, state) in beam.iter().enumerate() {
-            if cfg.quarantine_after > 0
-                && state.consec_failures >= cfg.quarantine_after
-            {
-                // Quarantined lineage: no planning, no speculation —
-                // the state serves its known-good kernel and logs a
-                // constant record below.
-                per_state.push(StateRound {
-                    start: cands.len(),
-                    end: cands.len(),
-                    reasons: Vec::new(),
-                    quarantined: true,
-                });
-                continue;
-            }
-            let mut suggestions =
-                planner.suggest(&state.kernel, &state.tests, &state.profile);
-            suggestions.retain(|s| !state.blocked.contains(&s.mv));
-            // Adaptive K (ROADMAP): spend the speculation budget where
-            // the planner's ranking is contested, save it where one
-            // move dominates. Static mode (or gap threshold 0) sizes
-            // every event at the ceiling — bit-for-bit today's
-            // behavior.
-            let k_state = adaptive_k(cfg, &suggestions);
-            debug_assert!(k_state <= k_per_state);
-            k_per_round.push(k_state);
-            if k_state < k_per_state {
-                adaptive_k_events += 1;
-            }
-            let start = cands.len();
-            let mut reasons = Vec::new();
-            for (pos, s) in suggestions.iter().enumerate() {
-                let ci = cands.len() - start;
-                if ci >= k_state {
-                    break;
-                }
-                // AgentCall-site supervision: transient coding-agent
-                // faults retried in place (serial, keyed by candidate
-                // slot and suggestion position — never by schedule).
-                if let Err(reason) = supervised_agent_gate(
-                    cfg.fault,
-                    faults::mix(
-                        faults::candidate_key(round, si, ci),
-                        pos as u64,
-                    ),
-                    &mut fault_stats,
-                ) {
-                    reasons.push(reason);
-                    continue;
-                }
-                let mut stream = candidate_stream(cfg.seed, round, si, ci);
-                match coder.apply_one(&state.kernel, s, &mut stream) {
-                    Ok(kernel) => cands.push(Candidate {
-                        parent: si,
-                        index: ci,
-                        kernel,
-                        applied: s.mv,
-                        rationale: s.rationale.clone(),
-                    }),
-                    Err(e) => reasons.push(e),
-                }
-            }
-            per_state.push(StateRound {
-                start,
-                end: cands.len(),
-                reasons,
-                quarantined: false,
-            });
-        }
+        let (cands, per_state) = plan_round(
+            cfg,
+            round,
+            &beam,
+            planner.as_mut(),
+            &coder,
+            &mut fault_stats,
+            &mut k_per_round,
+            &mut adaptive_k_events,
+        );
 
         // ---- evaluate all candidates concurrently --------------------
         // The candidates form a work queue drained by `1 + granted`
@@ -712,6 +1175,7 @@ pub(crate) fn optimize_beam_with_cache_budget(
                     Some(&base_profile),
                     Some(cache),
                     None,
+                    None,
                     key,
                 );
             }
@@ -725,6 +1189,7 @@ pub(crate) fn optimize_beam_with_cache_budget(
                 Some(&base_profile),
                 None,
                 Some((&cand_tokens[i], &round_cancel)),
+                None,
                 key,
             )?;
             let done = evals_done.fetch_add(1, Ordering::SeqCst) + 1;
@@ -759,313 +1224,35 @@ pub(crate) fn optimize_beam_with_cache_budget(
             })
             .collect();
 
-        // ---- canonical cancellation schedule + repair ----------------
-        // Deterministic reference semantics: walk candidates in index
-        // order; once an improver has been seen and `round_budget`
-        // candidates have evaluated, every later candidate is abandoned
-        // — whatever the race actually did. Kept candidates that the
-        // race cancelled are re-run serially (cache-bypassing, like the
-        // testing agent's shape repair); completed results of abandoned
-        // candidates are discarded. Unreachable at `round_budget = 0`.
-        let mut abandoned = vec![false; cands.len()];
-        if round_budget > 0 {
-            let mut kept = 0usize;
-            let mut improver_seen = false;
-            for i in 0..cands.len() {
-                if improver_seen && kept >= round_budget {
-                    abandoned[i] = true;
-                    continue;
-                }
-                if evals[i].is_none() {
-                    // The repair re-runs the full supervised evaluation
-                    // (same candidate key, so injected faults replay
-                    // identically), under the same panic containment as
-                    // the racy pass.
-                    let key = faults::candidate_key(
-                        round,
-                        cands[i].parent,
-                        cands[i].index,
-                    );
-                    let repaired =
-                        std::panic::catch_unwind(AssertUnwindSafe(|| {
-                            evaluate_supervised(
-                                spec,
-                                cfg,
-                                &tester,
-                                &profiler,
-                                &cands[i].kernel,
-                                &suite,
-                                Some(&base_profile),
-                                None,
-                                None,
-                                key,
-                            )
-                        }));
-                    evals[i] = Some(match repaired {
-                        Ok(product) => product
-                            .expect("repair runs without cancellation tokens"),
-                        Err(p) => panicked_product(
-                            &profiler,
-                            &cands[i].kernel,
-                            &suite,
-                            Some(&base_profile),
-                            &panic_message(p),
-                        ),
-                    });
-                }
-                let product =
-                    evals[i].as_ref().expect("repaired just above");
-                kept += 1;
-                if product.tests.pass
-                    && product.profile.speedup_vs_baseline > round_best
-                {
-                    improver_seen = true;
-                }
-            }
-            let n_abandoned = abandoned.iter().filter(|a| **a).count();
-            cancelled_candidates += n_abandoned;
-            candidates_evaluated += cands.len() - n_abandoned;
-        } else {
-            candidates_evaluated += cands.len();
-        }
-
-        // ---- canonical fault telemetry (by candidate index) ----------
-        // Abandoned candidates contribute nothing: their true stats may
-        // not exist (cancelled mid-flight) and must not leak.
-        for (i, e) in evals.iter().enumerate() {
-            if abandoned[i] {
-                continue;
-            }
-            if let Some(p) = e {
-                fault_stats.add(&p.stats);
-            }
-        }
-
-        // ---- gate, record, update the global best (by index) ---------
-        let mut gate = vec![false; cands.len()];
-        let mut rec_idx = vec![usize::MAX; cands.len()];
-        let mut any_accept = vec![false; beam.len()];
-        let mut any_pass = vec![false; beam.len()];
-        let mut any_kept = vec![false; beam.len()];
-        let mut new_blocks: Vec<Vec<Move>> = vec![Vec::new(); beam.len()];
-        for (si, sr) in per_state.iter().enumerate() {
-            if sr.start == sr.end {
-                records.push(RoundRecord {
-                    round,
-                    beam_state: si,
-                    candidate: 0,
-                    applied: None,
-                    rationale: String::new(),
-                    pass: true,
-                    speedup_internal: round_best,
-                    mean_us_internal: beam[si].profile.mean_us,
-                    accepted: false,
-                    loc: printer::loc(&beam[si].kernel),
-                    note: if sr.quarantined {
-                        format!(
-                            "quarantined: lineage disabled after {} \
-                             consecutive failed rounds",
-                            cfg.quarantine_after
-                        )
-                    } else {
-                        format!(
-                            "no applicable suggestion ({})",
-                            sr.reasons.join("; ")
-                        )
-                    },
-                });
-                continue;
-            }
-            for ci in sr.start..sr.end {
-                let cand = &cands[ci];
-                if abandoned[ci] {
-                    // Canonical cancellation record: constant fields
-                    // (the candidate's true numbers may not exist and
-                    // must not leak even when the race finished them).
-                    records.push(RoundRecord {
-                        round,
-                        beam_state: si,
-                        candidate: cand.index,
-                        applied: Some(cand.applied),
-                        rationale: cand.rationale.clone(),
-                        pass: false,
-                        speedup_internal: 0.0,
-                        mean_us_internal: 0.0,
-                        accepted: false,
-                        loc: printer::loc(&cand.kernel),
-                        note: "abandoned: a sibling measured strictly \
-                               better and the round's speculation budget \
-                               was exhausted"
-                            .into(),
-                    });
-                    continue;
-                }
-                let product =
-                    evals[ci].as_ref().expect("kept candidates are evaluated");
-                let (tests, profile) = (&product.tests, &product.profile);
-                any_kept[si] = true;
-                any_pass[si] = any_pass[si] || tests.pass;
-                let speedup = profile.speedup_vs_baseline;
-                let improved = speedup >= round_best * ACCEPT_THRESHOLD;
-                let accepted = tests.pass && improved;
-                let note = if !tests.pass {
-                    match &tests.failure {
-                        Some(f) => format!("rejected: runtime failure ({f})"),
-                        None => format!(
-                            "rejected: numerical mismatch (rel {:.2e})",
-                            tests.max_rel_err
-                        ),
-                    }
-                } else if !improved {
-                    new_blocks[si].push(cand.applied);
-                    format!(
-                        "rejected: measured {:.2}x vs best {:.2}x — move blocked",
-                        speedup, round_best
-                    )
-                } else {
-                    format!("accepted at {:.2}x (internal)", speedup)
-                };
-                gate[ci] = accepted;
-                any_accept[si] = any_accept[si] || accepted;
-                rec_idx[ci] = records.len();
-                records.push(RoundRecord {
-                    round,
-                    beam_state: si,
-                    candidate: cand.index,
-                    applied: Some(cand.applied),
-                    rationale: cand.rationale.clone(),
-                    pass: tests.pass,
-                    speedup_internal: speedup,
-                    mean_us_internal: profile.mean_us,
-                    accepted,
-                    loc: printer::loc(&cand.kernel),
-                    note,
-                });
-                if accepted && speedup > best_speedup {
-                    best = cand.kernel.clone();
-                    best_speedup = speedup;
-                }
-            }
-        }
-
-        // ---- select the next beam ------------------------------------
-        let mut pool: Vec<PoolEntry> = Vec::new();
-        for ci in 0..cands.len() {
-            if !gate[ci] {
-                continue;
-            }
-            let product =
-                evals[ci].as_ref().expect("gated candidates are evaluated");
-            pool.push(PoolEntry {
-                state: BeamState {
-                    kernel: cands[ci].kernel.clone(),
-                    tests: product.tests.clone(),
-                    profile: product.profile.clone(),
-                    speedup: product.profile.speedup_vs_baseline,
-                    // Fresh kernel, fresh block set: a move that did not
-                    // pay on the parent may pay here.
-                    blocked: Vec::new(),
-                    // An accepted child passed its tests: fresh lineage.
-                    consec_failures: 0,
-                },
-                score: product.profile.speedup_vs_baseline,
-                parent: cands[ci].parent,
-                cand: cands[ci].index,
-                fresh: true,
-                rec: rec_idx[ci],
-            });
-        }
-        let n_states = any_accept.len();
-        let mut superseded: Vec<(usize, BeamState)> = Vec::new();
-        for (si, mut state) in beam.into_iter().enumerate() {
-            state.blocked.append(&mut new_blocks[si]);
-            // Lineage health: a round where candidates were kept but
-            // every kept candidate *failed its tests* counts against the
-            // lineage; any passing kept candidate (even a non-improving
-            // one) resets it. Rounds with nothing kept (cancelled, no
-            // applicable suggestion, already quarantined) leave the
-            // counter untouched.
-            if any_kept[si] {
-                if any_pass[si] {
-                    state.consec_failures = 0;
-                } else {
-                    state.consec_failures += 1;
-                    if cfg.quarantine_after > 0
-                        && state.consec_failures == cfg.quarantine_after
-                    {
-                        quarantined_lineages += 1;
-                    }
-                }
-            }
-            if any_accept[si] {
-                // Replaced by its accepted candidate(s); held back only
-                // for the narrow-beam fallback below.
-                superseded.push((si, state));
-            } else {
-                pool.push(PoolEntry {
-                    score: state.speedup,
-                    state,
-                    parent: si,
-                    cand: usize::MAX,
-                    fresh: false,
-                    rec: usize::MAX,
-                });
-            }
-        }
-        pool.sort_by(|a, b| {
-            b.score
-                .total_cmp(&a.score)
-                .then_with(|| b.fresh.cmp(&a.fresh))
-                .then_with(|| a.parent.cmp(&b.parent))
-                .then_with(|| a.cand.cmp(&b.cand))
-        });
-        let mut selected: Vec<PoolEntry> = Vec::new();
-        let mut child_selected = vec![false; n_states];
-        for entry in pool {
-            let full = selected.len() >= beam_width;
-            let dup = selected
-                .iter()
-                .any(|s| s.state.kernel == entry.state.kernel);
-            if full || dup {
-                if entry.fresh && entry.rec != usize::MAX {
-                    records[entry.rec].accepted = false;
-                    records[entry.rec].note.push_str(if dup {
-                        "; dropped: duplicate beam state"
-                    } else {
-                        "; dropped: beam full"
-                    });
-                }
-                continue;
-            }
-            if entry.fresh {
-                child_selected[entry.parent] = true;
-            }
-            selected.push(entry);
-        }
-        // Fallback: a parent whose accepted candidates all got deduped
-        // or squeezed out would otherwise vanish and silently narrow
-        // the beam; re-offer such parents (in index order) while room
-        // remains. Unreachable at B = K = 1, where the single accepted
-        // child is always selected.
-        for (si, state) in superseded {
-            if selected.len() >= beam_width {
-                break;
-            }
-            if child_selected[si]
-                || selected.iter().any(|s| s.state.kernel == state.kernel)
-            {
-                continue;
-            }
-            selected.push(PoolEntry {
-                score: state.speedup,
-                state,
-                parent: si,
-                cand: usize::MAX,
-                fresh: false,
-                rec: usize::MAX,
-            });
-        }
-        beam = selected.into_iter().map(|e| e.state).collect();
+        // ---- settle: canonical repair, gate + record, selection ------
+        let env = EvalEnv {
+            spec,
+            cfg,
+            tester: &tester,
+            profiler: &profiler,
+            suite: &suite,
+            base_profile: &base_profile,
+        };
+        let mut tally = RoundTally {
+            records: &mut records,
+            best: &mut best,
+            best_speedup: &mut best_speedup,
+            candidates_evaluated: &mut candidates_evaluated,
+            cancelled_candidates: &mut cancelled_candidates,
+            fault_stats: &mut fault_stats,
+            quarantined_lineages: &mut quarantined_lineages,
+        };
+        let (next_beam, _selection) = settle_round(
+            &env,
+            round,
+            round_best,
+            beam,
+            &cands,
+            &per_state,
+            &mut evals,
+            &mut tally,
+        );
+        beam = next_beam;
     }
 
     finish_outcome(
@@ -1084,6 +1271,7 @@ pub(crate) fn optimize_beam_with_cache_budget(
             cancelled_candidates,
             fault_stats,
             quarantined_lineages,
+            speculation: SpecLedger::default(),
         },
     )
 }
@@ -1180,6 +1368,7 @@ mod tests {
                 cancelled_candidates: 0,
                 fault_stats: FaultStats::default(),
                 quarantined_lineages: 0,
+                speculation: SpecLedger::default(),
             },
         );
         drop(caller);

@@ -278,6 +278,91 @@ pub fn join3<A: Send, B: Send, C: Send>(
     (ra, rb, rc)
 }
 
+/// Smallest-first blocking task queue — the Block-STM-style companion
+/// to [`run_indexed`] for fan-outs whose work arrives *over time*
+/// rather than all at once. `run_indexed` drains a fixed `0..n` index
+/// range; the pipelined beam scheduler (`coordinator/sched.rs`) instead
+/// keeps long-lived workers parked on this queue while the coordinator
+/// pushes execution tasks for round N and speculated round N+1
+/// concurrently. Ordering is `T: Ord` smallest-first (a `(round, slot)`
+/// key gives the canonical round strict priority over speculation), so
+/// the queue never lets speculative work starve the round the
+/// coordinator is actually waiting on.
+///
+/// `pop_wait` blocks until an item is available or the queue is closed
+/// (`None`), which is how the scheduler retires its worker pool.
+pub struct TaskQueue<T: Ord> {
+    inner: Mutex<QueueState<T>>,
+    ready: std::sync::Condvar,
+}
+
+struct QueueState<T> {
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<T>>,
+    closed: bool,
+}
+
+impl<T: Ord> TaskQueue<T> {
+    pub fn new() -> TaskQueue<T> {
+        TaskQueue {
+            inner: Mutex::new(QueueState {
+                heap: std::collections::BinaryHeap::new(),
+                closed: false,
+            }),
+            ready: std::sync::Condvar::new(),
+        }
+    }
+
+    /// Enqueue a task (no-op after [`close`](Self::close)) and wake one
+    /// parked worker.
+    pub fn push(&self, item: T) {
+        let mut g = self.inner.lock().expect("task queue poisoned");
+        if !g.closed {
+            g.heap.push(std::cmp::Reverse(item));
+            drop(g);
+            self.ready.notify_one();
+        }
+    }
+
+    /// Take the smallest pending task without blocking (`None` when the
+    /// queue is momentarily empty — the helping-drain idiom the
+    /// coordinator uses while it waits for a round to settle).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().expect("task queue poisoned");
+        g.heap.pop().map(|std::cmp::Reverse(t)| t)
+    }
+
+    /// Block until a task is available (returns it) or the queue closes
+    /// (`None`). Pending tasks are still handed out after close; `None`
+    /// means closed *and* drained.
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut g = self.inner.lock().expect("task queue poisoned");
+        loop {
+            if let Some(std::cmp::Reverse(t)) = g.heap.pop() {
+                return Some(t);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.ready.wait(g).expect("task queue poisoned");
+        }
+    }
+
+    /// Close the queue: parked and future `pop_wait`s return `None`
+    /// once the remaining items drain.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().expect("task queue poisoned");
+        g.closed = true;
+        drop(g);
+        self.ready.notify_all();
+    }
+}
+
+impl<T: Ord> Default for TaskQueue<T> {
+    fn default() -> Self {
+        TaskQueue::new()
+    }
+}
+
 thread_local! {
     /// Whether this thread is already counted live in some pool.
     static COUNTED: Cell<bool> = const { Cell::new(false) };
@@ -423,6 +508,62 @@ mod tests {
         assert_eq!(tb.id(), caller);
         assert_eq!(tc.id(), caller);
         assert_eq!(b.peak_live(), 1);
+    }
+
+    #[test]
+    fn task_queue_pops_smallest_first() {
+        let q: TaskQueue<(usize, usize)> = TaskQueue::new();
+        q.push((1, 2));
+        q.push((0, 5));
+        q.push((1, 0));
+        q.push((0, 1));
+        assert_eq!(q.try_pop(), Some((0, 1)));
+        assert_eq!(q.try_pop(), Some((0, 5)));
+        assert_eq!(q.try_pop(), Some((1, 0)));
+        assert_eq!(q.try_pop(), Some((1, 2)));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn task_queue_close_drains_then_returns_none() {
+        let q: TaskQueue<usize> = TaskQueue::new();
+        q.push(3);
+        q.push(1);
+        q.close();
+        assert_eq!(q.pop_wait(), Some(1));
+        assert_eq!(q.pop_wait(), Some(3));
+        assert_eq!(q.pop_wait(), None);
+        q.push(9); // push after close is a no-op
+        assert_eq!(q.pop_wait(), None);
+    }
+
+    #[test]
+    fn task_queue_close_unblocks_parked_workers() {
+        let q = Arc::new(TaskQueue::<usize>::new());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..3)
+                .map(|_| {
+                    let q = Arc::clone(&q);
+                    s.spawn(move || {
+                        let mut got = Vec::new();
+                        while let Some(t) = q.pop_wait() {
+                            got.push(t);
+                        }
+                        got
+                    })
+                })
+                .collect();
+            for i in 0..20 {
+                q.push(i);
+            }
+            q.close();
+            let mut all: Vec<usize> = handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("queue worker panicked"))
+                .collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..20).collect::<Vec<_>>());
+        });
     }
 
     #[test]

@@ -450,6 +450,80 @@ fn chunk_bounds(grid: i64, workers: usize) -> Vec<i64> {
     bounds
 }
 
+/// Elements each block writes under `plan`: for every written buffer,
+/// the proven interval `a·b + [lo, hi]` clamped to the buffer length
+/// (`lens`), summed across buffers. Read-only buffers contribute
+/// nothing. The clamp matters: a plan may extend past a short buffer
+/// for trailing blocks (the sliced engine hands those blocks truncated
+/// or empty views), so tail blocks can be genuinely lighter than
+/// interior ones.
+fn block_write_weights(
+    grid: i64,
+    plan: &[BufPlan],
+    lens: &[usize],
+) -> Vec<u64> {
+    let grid_u = grid.max(1) as usize;
+    let mut weights = vec![0u64; grid_u];
+    for (bp, &len) in plan.iter().zip(lens) {
+        if let BufPlan::Interval { a, lo, hi } = *bp {
+            let len = len as i128;
+            for (b, wt) in weights.iter_mut().enumerate() {
+                let start =
+                    (a as i128 * b as i128 + lo as i128).clamp(0, len);
+                let end = (a as i128 * b as i128 + hi as i128 + 1)
+                    .clamp(start, len);
+                *wt += (end - start) as u64;
+            }
+        }
+    }
+    weights
+}
+
+/// Weighted variant of [`chunk_bounds`]: contiguous, ascending
+/// fenceposts that balance cumulative `weights` (elements written per
+/// block) instead of raw block counts, so a chunk of clamped-to-empty
+/// tail blocks does not leave the heavy chunk as the critical path.
+///
+/// Greedy single pass: cut after block `b` once the running weight
+/// reaches the next `1/w` share of the total, at most one cut per
+/// block, with a forced cut whenever the remaining blocks are exactly
+/// enough to give every remaining chunk one block — so every worker
+/// always receives a non-empty range, like the even splitter. Zero
+/// total weight (nothing written) or a weight slice that does not
+/// match the grid falls back to the even split. Any contiguous
+/// ascending partition preserves both byte-identity (the proven
+/// intervals are disjoint across blocks) and error selection (the
+/// lowest-indexed failing chunk still owns the lowest failing block),
+/// so the cut placement is a pure latency knob.
+fn chunk_bounds_weighted(
+    grid: i64,
+    workers: usize,
+    weights: &[u64],
+) -> Vec<i64> {
+    let grid_u = grid.max(1) as usize;
+    let w = workers.clamp(1, grid_u);
+    let total: u128 = weights.iter().map(|&x| x as u128).sum();
+    if total == 0 || weights.len() != grid_u {
+        return chunk_bounds(grid, workers);
+    }
+    let mut bounds: Vec<i64> = Vec::with_capacity(w + 1);
+    bounds.push(0);
+    let mut acc: u128 = 0;
+    let mut cut = 1usize;
+    for (b, &wt) in weights.iter().enumerate() {
+        acc += wt as u128;
+        if cut < w
+            && (acc * w as u128 >= total * cut as u128
+                || grid_u - (b + 1) == w - cut)
+        {
+            bounds.push((b + 1) as i64);
+            cut += 1;
+        }
+    }
+    bounds.push(grid_u as i64);
+    bounds
+}
+
 /// Copy-and-merge block-parallel engine (the fallback when no slice
 /// plan exists): spawned workers execute contiguous block chunks
 /// against private copies of global memory, then merge their *written
@@ -590,7 +664,13 @@ fn run_grid_sliced(
         .as_ref()
         .expect("sliced run requires a slice plan");
     SLICED_LAUNCHES.fetch_add(1, Ordering::Relaxed);
-    let bounds = chunk_bounds(prog.grid, workers);
+    // Slice-plan-aware chunking: cut by bytes written per block, not
+    // block count, so clamped tail blocks don't pad one chunk's
+    // critical path. Only this engine has a plan to weigh by; the
+    // copy-and-merge engine keeps the even split.
+    let lens: Vec<usize> = global.iter().map(|g| g.data.len()).collect();
+    let weights = block_write_weights(prog.grid, plan, &lens);
+    let bounds = chunk_bounds_weighted(prog.grid, workers, &weights);
     let w = bounds.len() - 1;
 
     // Build each worker's view of global memory: read-only buffers are
@@ -2304,4 +2384,119 @@ mod tests {
         assert_eq!(env.get("out"), &[7.0; 4]);
     }
 
+    #[test]
+    fn weighted_chunk_bounds_partition_the_grid_for_any_weights() {
+        for (grid, workers) in
+            [(1i64, 4usize), (5, 2), (10, 4), (16, 7), (9, 9), (12, 1)]
+        {
+            for skew in 0..4u64 {
+                let weights: Vec<u64> = (0..grid as u64)
+                    .map(|b| match skew {
+                        0 => 1,
+                        1 => b * b,
+                        2 => grid as u64 - b,
+                        _ => u64::from(b == 0) * 1_000_000,
+                    })
+                    .collect();
+                let bounds = chunk_bounds_weighted(grid, workers, &weights);
+                let w = workers.clamp(1, grid as usize);
+                assert_eq!(
+                    bounds.len(),
+                    w + 1,
+                    "grid={grid} workers={workers} skew={skew}: {bounds:?}"
+                );
+                assert_eq!(bounds[0], 0);
+                assert_eq!(*bounds.last().unwrap(), grid);
+                assert!(
+                    bounds.windows(2).all(|p| p[0] < p[1]),
+                    "every chunk non-empty and ascending: {bounds:?} \
+                     (grid={grid} workers={workers} skew={skew})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_chunk_bounds_balance_write_volume_not_block_count() {
+        // One heavy block among nine light ones: the heavy block gets a
+        // chunk to itself instead of dragging four light blocks along.
+        let mut front = vec![1u64; 10];
+        front[0] = 1_000;
+        assert_eq!(chunk_bounds_weighted(10, 2, &front), vec![0, 1, 10]);
+        // All mass in the tail: the forced cuts keep every chunk
+        // non-empty and still isolate the heavy block in the last one.
+        let mut tail = vec![0u64; 8];
+        tail[7] = 100;
+        assert_eq!(chunk_bounds_weighted(8, 4, &tail), vec![0, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn weighted_chunk_bounds_fall_back_to_even_chunks() {
+        // Zero total weight (nothing written — degenerate) and a weight
+        // slice that does not match the grid both take the even split.
+        assert_eq!(
+            chunk_bounds_weighted(10, 4, &[0; 10]),
+            chunk_bounds(10, 4)
+        );
+        assert_eq!(chunk_bounds_weighted(10, 4, &[1; 3]), chunk_bounds(10, 4));
+    }
+
+    #[test]
+    fn uniform_weights_give_the_ceiling_partition() {
+        // Uniform weights cut at ceil(grid·i/w): same chunk sizes as the
+        // even splitter, with the larger chunks interleaved rather than
+        // front-loaded. Any contiguous ascending partition is valid.
+        assert_eq!(
+            chunk_bounds_weighted(10, 4, &[7; 10]),
+            vec![0, 3, 5, 8, 10]
+        );
+    }
+
+    #[test]
+    fn block_write_weights_account_for_interval_clamping() {
+        // A read-only input contributes nothing; an output written at
+        // 4·b + [0, 3] but only 10 elements long clamps block 2 to two
+        // elements and block 3 to none.
+        let plan =
+            [BufPlan::ReadOnly, BufPlan::Interval { a: 4, lo: 0, hi: 3 }];
+        let lens = [64usize, 10];
+        assert_eq!(block_write_weights(4, &plan, &lens), vec![4, 4, 2, 0]);
+    }
+
+    #[test]
+    fn weighted_chunking_keeps_zero_copy_serial_parity() {
+        // grid=10, workers=4: uniform row weights cut at [0,3,5,8,10]
+        // while the even splitter used [0,3,6,8,10] — a genuinely
+        // different partition, which must not be observable in results.
+        let k = rowwise_kernel(10, 16);
+        let dims = DimEnv::new();
+        let prog = compile(&k, &dims).unwrap();
+        assert!(prog.sliceable(), "row-wise kernel must slice");
+        let x: Vec<f32> = (0..160).map(|i| (i as f32).sin()).collect();
+        let mut serial = ExecEnv::for_kernel(&k, &dims);
+        serial.set("x", x.clone());
+        super::run_compiled(&prog, &mut serial).unwrap();
+        for workers in [2usize, 3, 4, 7, 10] {
+            let mut env = ExecEnv::for_kernel(&k, &dims);
+            env.set("x", x.clone());
+            super::run_compiled_with_opts(
+                &prog,
+                &mut env,
+                RunOpts {
+                    grid_workers: workers,
+                    ..RunOpts::default()
+                },
+            )
+            .unwrap();
+            let a: Vec<u32> =
+                serial.get("y").iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> =
+                env.get("y").iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                a, b,
+                "weighted chunking must stay byte-identical at \
+                 grid_workers={workers}"
+            );
+        }
+    }
 }

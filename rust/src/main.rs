@@ -83,6 +83,13 @@ fn print_usage() {
          \x20                       serial, 0 = auto per launch (grid_workers)\n\
          \x20 --worker-budget N     process-wide cap on live interpreter\n\
          \x20                       threads; 0 = one per core (worker_budget)\n\n\
+         pipelined rounds (cross-round speculation):\n\
+         \x20 --pipelined [BOOL]    workers speculate into round N+1 from the\n\
+         \x20                       provisional winner before round N settles;\n\
+         \x20                       bare flag = on (pipelined)\n\
+         \x20 --speculation-depth D rounds of lookahead past the settling\n\
+         \x20                       round; 0 = the literal barriered engine\n\
+         \x20                       (speculation_depth)\n\n\
          fault injection & supervision (chaos hardening; also read from\n\
          ASTRA_FAULT_RATE / ASTRA_FAULT_SEED / ASTRA_FAULT_SITES):\n\
          \x20 --fault-rate P        per-site injection probability; 0 = off,\n\
@@ -140,9 +147,20 @@ fn build_config(args: &[String]) -> Result<Config> {
         ("--fault-sites", "fault_sites"),
         ("--watchdog-steps", "watchdog_steps"),
         ("--quarantine-after", "quarantine_after"),
+        ("--speculation-depth", "speculation_depth"),
     ] {
         if let Some(v) = opt_value(args, flag) {
             config::apply(&mut cfg, &mut model, key, &v)?;
+        }
+    }
+    // `--pipelined` works bare (= on) or with an explicit boolean
+    // (`--pipelined off`); a following `--flag` is not its value.
+    if has_flag(args, "--pipelined") {
+        match opt_value(args, "--pipelined") {
+            Some(v) if !v.starts_with("--") => {
+                config::apply(&mut cfg, &mut model, "pipelined", &v)?;
+            }
+            _ => cfg.pipelined = true,
         }
     }
     cfg.model = model;

@@ -330,6 +330,18 @@ pub fn trace(outcome: &Outcome) -> String {
             outcome.quarantined_lineages
         );
     }
+    // Only the pipelined engine ever speculates; the barriered engines
+    // leave the ledger zero and this line absent, keeping their traces
+    // byte-identical to the pre-pipelining format.
+    if outcome.speculated_lineages > 0 {
+        let _ = writeln!(
+            s,
+            "speculation: {} lineages speculated, {} committed, {} aborted",
+            outcome.speculated_lineages,
+            outcome.committed_lineages,
+            outcome.aborted_lineages
+        );
+    }
     s
 }
 

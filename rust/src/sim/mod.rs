@@ -12,6 +12,8 @@ mod model;
 pub use cost::{simulate, Bottleneck, CostReport, EventCounts};
 pub use model::{GpuModel, OpWeights};
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use crate::ir::{DimEnv, Kernel};
 
 /// Simulate a kernel over a set of shapes; returns per-shape reports.
@@ -21,6 +23,28 @@ pub fn profile_shapes(
     shapes: &[DimEnv],
 ) -> Vec<CostReport> {
     shapes.iter().map(|d| simulate(model, kernel, d)).collect()
+}
+
+/// [`profile_shapes`] with a cooperative cancellation token, polled
+/// before each shape: an aborted speculative lineage abandons its
+/// profile sweep mid-flight instead of running every remaining shape
+/// to completion. Returns `None` when cancelled (a partial sweep is
+/// never meaningful — the caller treats it like an abandoned
+/// validation and re-runs canonically if the result is needed).
+pub fn profile_shapes_cancellable(
+    model: &GpuModel,
+    kernel: &Kernel,
+    shapes: &[DimEnv],
+    cancel: &AtomicBool,
+) -> Option<Vec<CostReport>> {
+    let mut out = Vec::with_capacity(shapes.len());
+    for d in shapes {
+        if cancel.load(Ordering::Relaxed) {
+            return None;
+        }
+        out.push(simulate(model, kernel, d));
+    }
+    Some(out)
 }
 
 /// Geometric-mean speedup of `new` over `old` across shapes (§3.1).
@@ -180,6 +204,30 @@ mod tests {
             r_big_u > 1.15 * r_big_b,
             "unroll must hurt representative shapes: {r_big_u:.1} vs {r_big_b:.1}"
         );
+    }
+
+    #[test]
+    fn cancellable_sweep_matches_plain_sweep_when_clear() {
+        let m = h100();
+        let k = kernels::silu::build_baseline();
+        let shapes = (kernels::silu::spec().representative_shapes)();
+        let plain = profile_shapes(&m, &k, &shapes);
+        let clear = std::sync::atomic::AtomicBool::new(false);
+        let swept = profile_shapes_cancellable(&m, &k, &shapes, &clear)
+            .expect("clear token must complete the sweep");
+        assert_eq!(plain.len(), swept.len());
+        for (a, b) in plain.iter().zip(&swept) {
+            assert_eq!(a.total_us.to_bits(), b.total_us.to_bits());
+        }
+    }
+
+    #[test]
+    fn raised_token_abandons_the_sweep() {
+        let m = h100();
+        let k = kernels::silu::build_baseline();
+        let shapes = (kernels::silu::spec().representative_shapes)();
+        let raised = std::sync::atomic::AtomicBool::new(true);
+        assert!(profile_shapes_cancellable(&m, &k, &shapes, &raised).is_none());
     }
 
     #[test]

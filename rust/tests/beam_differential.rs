@@ -7,7 +7,18 @@
 //! after the multi-layer refactor.
 
 use astra::coordinator::{optimize, optimize_greedy, Config, Outcome};
-use astra::kernels;
+use astra::{kernels, report};
+
+/// Rendered trace minus the `speculation:` footer — the one line that
+/// legitimately differs across engines (only the pipelined engine ever
+/// speculates; everything else in the trace must match byte-for-byte).
+fn trace_sans_speculation(o: &Outcome) -> String {
+    report::trace(o)
+        .lines()
+        .filter(|l| !l.starts_with("speculation:"))
+        .map(|l| format!("{l}\n"))
+        .collect()
+}
 
 fn assert_outcomes_identical(a: &Outcome, b: &Outcome, label: &str) {
     assert_results_identical(a, b, label);
@@ -251,6 +262,153 @@ fn round_cancellation_is_deterministic_at_every_worker_count() {
             );
         }
     }
+}
+
+#[test]
+fn pipelined_1x1_is_byte_identical_to_greedy_and_barriered() {
+    // The pipelined-rounds acceptance wall: pipelined ≡ barriered ≡
+    // greedy (B = K = 1 makes the literal Algorithm 1 loop the oracle)
+    // byte-for-byte — final kernel, full Outcome including the fault
+    // ledger, and the rendered trace — at worker counts {1, 2, 7,
+    // ncpus} on both the grid and the task-pool axis, and speculation
+    // depths {0, 1, 2}. Depth 0 must dispatch to the literal legacy
+    // engine (zero ledger, serial 1x1 peak concurrency included).
+    let ncpu = std::thread::available_parallelism().map_or(1, |n| n.get());
+    for spec in kernels::all_specs() {
+        let cfg = Config::multi_agent();
+        assert_eq!((cfg.beam_width, cfg.candidates_per_round), (1, 1));
+        let greedy = optimize_greedy(&spec, &cfg);
+        let oracle_trace = trace_sans_speculation(&greedy);
+        for depth in [0usize, 1, 2] {
+            for (gw, wb) in [(1usize, 1usize), (2, 2), (7, 7), (ncpu, 0)] {
+                let out = optimize(
+                    &spec,
+                    &Config {
+                        pipelined: true,
+                        speculation_depth: depth,
+                        grid_workers: gw,
+                        worker_budget: wb,
+                        ..cfg.clone()
+                    },
+                );
+                let label = format!(
+                    "{} / depth={depth} gw={gw} wb={wb}",
+                    spec.paper_name
+                );
+                assert_results_identical(&greedy, &out, &label);
+                assert_eq!(
+                    oracle_trace,
+                    trace_sans_speculation(&out),
+                    "{label}: trace"
+                );
+                assert_eq!(
+                    out.speculated_lineages,
+                    out.committed_lineages + out.aborted_lineages,
+                    "{label}: inconsistent speculation ledger"
+                );
+                if depth == 0 {
+                    assert_eq!(
+                        (
+                            out.speculated_lineages,
+                            out.committed_lineages,
+                            out.aborted_lineages
+                        ),
+                        (0, 0, 0),
+                        "{label}: depth 0 must run the literal legacy \
+                         engine"
+                    );
+                    assert_eq!(
+                        greedy.peak_concurrent_evals,
+                        out.peak_concurrent_evals,
+                        "{label}: depth 0 keeps the serial 1x1 schedule"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn speculation_commits_on_calm_seeds_and_aborts_on_a_winner_flip() {
+    // Ledger witnesses: the committed and aborted paths must both be
+    // reachable, or the differential wall above proves nothing about
+    // them. Seed-scanned like the chaos witnesses — any hit is a
+    // deterministic reproduction, and the scan bound failing loudly
+    // beats a vacuously green wall.
+    let spec = kernels::merge::spec();
+
+    // Calm planner (low temperature): the top-ranked suggestion — the
+    // speculation basis — usually wins its round, so speculated
+    // lineages commit.
+    let mut committed = false;
+    for seed in 1..=20u64 {
+        let o = optimize(
+            &spec,
+            &Config {
+                seed,
+                temperature: 0.1,
+                candidates_per_round: 3,
+                pipelined: true,
+                speculation_depth: 1,
+                ..Config::multi_agent()
+            },
+        );
+        assert_eq!(
+            o.speculated_lineages,
+            o.committed_lineages + o.aborted_lineages,
+            "seed {seed}: inconsistent ledger"
+        );
+        if o.speculated_lineages > 0 && o.committed_lineages > 0 {
+            committed = true;
+            break;
+        }
+    }
+    assert!(
+        committed,
+        "no seed in 1..=20 committed a speculated lineage — widen the scan"
+    );
+
+    // Hot planner (high temperature): ranking noise makes the
+    // top-ranked candidate lose to a measured sibling, so the
+    // speculated lineage descends from the wrong winner and aborts.
+    // The abort must be invisible in results: the barriered twin at
+    // the witness seed stays byte-identical.
+    let mut witness = None;
+    for seed in 1..=20u64 {
+        let cfg = Config {
+            seed,
+            temperature: 1.0,
+            candidates_per_round: 3,
+            pipelined: true,
+            speculation_depth: 1,
+            ..Config::multi_agent()
+        };
+        let o = optimize(&spec, &cfg);
+        assert_eq!(
+            o.speculated_lineages,
+            o.committed_lineages + o.aborted_lineages,
+            "seed {seed}: inconsistent ledger"
+        );
+        if o.speculated_lineages > 0 && o.aborted_lineages > 0 {
+            witness = Some((seed, cfg, o));
+            break;
+        }
+    }
+    let (seed, cfg, o) = witness.expect(
+        "no seed in 1..=20 aborted a speculated lineage — widen the scan",
+    );
+    let barriered = optimize(
+        &spec,
+        &Config {
+            pipelined: false,
+            ..cfg
+        },
+    );
+    assert_results_identical(
+        &barriered,
+        &o,
+        &format!("winner-flip witness seed {seed}"),
+    );
 }
 
 #[test]

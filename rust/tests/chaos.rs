@@ -112,6 +112,86 @@ fn chaos_outcome_is_byte_identical_at_three_worker_counts() {
 }
 
 #[test]
+fn pipelined_engine_survives_chaos_byte_identically_to_barriered() {
+    // The chaos plane must flow through the pipelined engine unchanged:
+    // same injections, same retries, same shipped kernel as the
+    // barriered engine under the same plan — at a witness seed where
+    // faults demonstrably fire, and across pool/grid schedules. A
+    // speculative evaluation that gets faulted and aborted must leave
+    // no trace in the ledger beyond `aborted_lineages`.
+    let spec = kernels::silu::spec();
+    let (seed, barriered) = find_witness();
+    for (gw, wb) in [(1usize, 1usize), (2, 2), (7, 0)] {
+        let out = optimize(
+            &spec,
+            &Config {
+                pipelined: true,
+                speculation_depth: 2,
+                candidates_per_round: 3,
+                grid_workers: gw,
+                worker_budget: wb,
+                ..chaos_cfg(seed)
+            },
+        );
+        // Widened K means a different trajectory than the 1x1 witness;
+        // what must match byte-for-byte is the pipelined engine against
+        // its own barriered twin under the identical plan.
+        let twin = optimize(
+            &spec,
+            &Config {
+                pipelined: false,
+                speculation_depth: 2,
+                candidates_per_round: 3,
+                grid_workers: gw,
+                worker_budget: wb,
+                ..chaos_cfg(seed)
+            },
+        );
+        let label = format!("seed {seed} / gw={gw} wb={wb}");
+        assert_eq!(twin.records, out.records, "{label}: records");
+        assert_eq!(twin.best, out.best, "{label}: best kernel");
+        assert_eq!(
+            twin.final_speedup.to_bits(),
+            out.final_speedup.to_bits(),
+            "{label}: final speedup"
+        );
+        assert_eq!(
+            (
+                twin.faults_injected,
+                twin.faults_survived,
+                twin.retries,
+                twin.watchdog_trips,
+                twin.quarantined_lineages,
+                twin.candidates_evaluated,
+                twin.cancelled_candidates,
+                twin.cache_hits,
+                twin.cache_misses,
+            ),
+            (
+                out.faults_injected,
+                out.faults_survived,
+                out.retries,
+                out.watchdog_trips,
+                out.quarantined_lineages,
+                out.candidates_evaluated,
+                out.cancelled_candidates,
+                out.cache_hits,
+                out.cache_misses,
+            ),
+            "{label}: supervision telemetry"
+        );
+        assert_eq!(
+            out.speculated_lineages,
+            out.committed_lineages + out.aborted_lineages,
+            "{label}: inconsistent ledger under chaos"
+        );
+        assert!(out.final_correct, "{label}: shipped an invalid kernel");
+    }
+    // The 1x1 witness itself: chaos telemetry survives unchanged.
+    assert!(barriered.faults_injected > 0 && barriered.retries > 0);
+}
+
+#[test]
 fn fault_rate_zero_is_the_disabled_plan_bit_for_bit() {
     // rate 0 with sites armed must be indistinguishable from the stock
     // engine — the zero-cost-no-op contract, pinned end to end through

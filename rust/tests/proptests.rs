@@ -163,6 +163,10 @@ fn prop_coordinator_never_ships_incorrect_kernels() {
             fault: FaultPlan::disabled(),
             watchdog_steps: 0,
             quarantine_after: 0,
+            // Half the cases run the pipelined engine (byte-identical
+            // to barriered, so every invariant below is unchanged).
+            pipelined: rng.chance(0.5),
+            speculation_depth: 1 + rng.below(2),
             model: GpuModel::h100(),
         };
         let greedy = cfg.beam_width == 1 && cfg.candidates_per_round == 1;
@@ -306,6 +310,132 @@ fn prop_chaos_plans_ship_oracle_valid_kernels_deterministically() {
                         other.cancelled_candidates,
                     ),
                     "{ctx}: fault telemetry diverged at schedule {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pipelined_rounds_match_the_barriered_engine() {
+    // Pipelined-rounds proptest (EXPERIMENTS.md §Pipelined-rounds):
+    // randomized (B, K, speculation_depth, worker_budget, fault rate).
+    // Cross-round speculation is a pure scheduling change — the
+    // pipelined engine must be byte-identical to the barriered one at
+    // every configuration point and worker schedule, the fault ledger
+    // must flow through unchanged, and the speculation ledger itself
+    // must be schedule-independent and internally consistent
+    // (speculated = committed + aborted; barriered ledger all zero).
+    let mut rng = Prng::seed(0x51BE11);
+    for case in 0..4 {
+        let base = Config {
+            rounds: 1 + rng.below(4),
+            seed: rng.next_u64(),
+            bug_rate: rng.uniform() * 0.4,
+            temperature: rng.uniform(),
+            beam_width: 1 + rng.below(2),
+            candidates_per_round: 1 + rng.below(3),
+            speculation_depth: 1 + rng.below(2),
+            round_budget: rng.below(3),
+            fault: if rng.chance(0.5) {
+                FaultPlan {
+                    rate: 0.02 + rng.uniform() * 0.1,
+                    seed: rng.next_u64(),
+                    sites: faults::ALL_SITES,
+                }
+            } else {
+                FaultPlan::disabled()
+            },
+            quarantine_after: rng.below(3),
+            ..Config::multi_agent()
+        };
+        for spec in kernels::all_specs() {
+            let barriered = optimize(
+                &spec,
+                &Config {
+                    pipelined: false,
+                    grid_workers: 1,
+                    worker_budget: 1,
+                    ..base.clone()
+                },
+            );
+            let runs: Vec<_> = [(1usize, 1usize), (2, 0), (3, 2)]
+                .iter()
+                .map(|&(gw, wb)| {
+                    optimize(
+                        &spec,
+                        &Config {
+                            pipelined: true,
+                            grid_workers: gw,
+                            worker_budget: wb,
+                            ..base.clone()
+                        },
+                    )
+                })
+                .collect();
+            let ctx = format!("case {case} {} cfg {base:?}", spec.paper_name);
+            assert_eq!(
+                (
+                    barriered.speculated_lineages,
+                    barriered.committed_lineages,
+                    barriered.aborted_lineages
+                ),
+                (0, 0, 0),
+                "{ctx}: barriered engine must never speculate"
+            );
+            for (i, o) in runs.iter().enumerate() {
+                assert_eq!(
+                    barriered.records, o.records,
+                    "{ctx}: schedule {i}"
+                );
+                assert_eq!(barriered.best, o.best, "{ctx}: schedule {i}");
+                assert_eq!(
+                    barriered.final_speedup.to_bits(),
+                    o.final_speedup.to_bits(),
+                    "{ctx}: schedule {i}"
+                );
+                assert_eq!(
+                    (
+                        barriered.faults_injected,
+                        barriered.faults_survived,
+                        barriered.retries,
+                        barriered.watchdog_trips,
+                        barriered.quarantined_lineages,
+                        barriered.candidates_evaluated,
+                        barriered.cancelled_candidates,
+                        barriered.cache_hits,
+                        barriered.cache_misses,
+                    ),
+                    (
+                        o.faults_injected,
+                        o.faults_survived,
+                        o.retries,
+                        o.watchdog_trips,
+                        o.quarantined_lineages,
+                        o.candidates_evaluated,
+                        o.cancelled_candidates,
+                        o.cache_hits,
+                        o.cache_misses,
+                    ),
+                    "{ctx}: telemetry diverged at schedule {i}"
+                );
+                assert_eq!(
+                    o.speculated_lineages,
+                    o.committed_lineages + o.aborted_lineages,
+                    "{ctx}: inconsistent ledger at schedule {i}"
+                );
+                assert_eq!(
+                    (
+                        runs[0].speculated_lineages,
+                        runs[0].committed_lineages,
+                        runs[0].aborted_lineages
+                    ),
+                    (
+                        o.speculated_lineages,
+                        o.committed_lineages,
+                        o.aborted_lineages
+                    ),
+                    "{ctx}: ledger diverged at schedule {i}"
                 );
             }
         }

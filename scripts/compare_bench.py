@@ -3,12 +3,14 @@
 
 Fails (exit 1) when a gated per-kernel metric regresses by more than
 --max-regression on any kernel — the ROADMAP "perf trajectory in CI"
-gate. Four metrics are gated:
+gate. Five metrics are gated:
 
 * lower-is-better: the slot-compiled interpreter's per-case time
   (`interpret_ms`), the copy-and-merge block-parallel time
   (`grid_parallel_ms`, so the fallback engine can't rot behind the
-  zero-copy path) and the full beam-run median (`beam_optimize_ms`);
+  zero-copy path), the full beam-run median (`beam_optimize_ms`) and
+  the pipelined-rounds run median (`pipelined_optimize_ms`, schema v7
+  — the barrier-stall recovery the pipelined engine exists for);
 * higher-is-better: speculative-search throughput (`search_cps`,
   candidates validated + profiled per second) — a drop beyond the
   threshold fails.
@@ -18,16 +20,22 @@ schema v4), the adaptive-scheduler numbers (`adaptive_optimize_ms`,
 `adaptive_k_rounds`, `cancelled_candidates`, `k_histogram`, schema v5),
 the chaos-supervision numbers (`chaos_optimize_ms`, `faults_injected`,
 `faults_survived`, `retries`, `watchdog_trips`, `quarantined_lineages`,
-schema v6), the cross-run compile-cache counters (`cross_run_cache`)
-and the zero-copy launch counter (`sliced_launches`) are reported
-informationally so the trajectory is visible without flaking the build
-on scheduler noise in the end-to-end runs.
+schema v6), the speculation numbers (`pipelined_barriered_ms`,
+`pipelined_stall_saved_ms`, `speculation_hit_rate`,
+`speculated_lineages`, `aborted_lineages`, schema v7 — the ledger is
+exact and test-pinned; the stall saving and hit rate describe the
+workload, not a regression axis), the cross-run compile-cache counters
+(`cross_run_cache`) and the zero-copy launch counter
+(`sliced_launches`) are reported informationally so the trajectory is
+visible without flaking the build on scheduler noise in the end-to-end
+runs.
 
 Older-schema files (v1 without `search_cps`/`beam_optimize_ms`, v2
 without the grid and cache fields, v3 without the zero-copy fields, v4
-without the adaptive fields, v5 without the chaos fields) compare
-cleanly: absent metrics are simply skipped, so the first run after a
-schema bump never fails on the artifact from before the bump.
+without the adaptive fields, v5 without the chaos fields, v6 without
+the pipelined fields) compare cleanly: absent metrics are simply
+skipped, so the first run after a schema bump never fails on the
+artifact from before the bump.
 
 Usage:
     python3 compare_bench.py <old.json> <new.json> [--max-regression 0.15]
@@ -42,7 +50,12 @@ import os
 import sys
 
 # Lower-is-better per-kernel metrics that fail the gate on regression.
-GATED_LOWER = ["interpret_ms", "grid_parallel_ms", "beam_optimize_ms"]
+GATED_LOWER = [
+    "interpret_ms",
+    "grid_parallel_ms",
+    "beam_optimize_ms",
+    "pipelined_optimize_ms",
+]
 
 # Higher-is-better per-kernel metrics that fail the gate on a drop.
 GATED_HIGHER = ["search_cps"]
@@ -66,6 +79,14 @@ INFORMATIONAL = [
     ("retries", "retries", "{:>10.0f}"),
     ("watchdog_trips", "watchdog", "{:>10.0f}"),
     ("quarantined_lineages", "quarantined", "{:>10.0f}"),
+    # v7 schema: pipelined-rounds speculation. The run median itself is
+    # gated above; the twin/stall/ledger numbers describe the workload
+    # and the scheduler's hit rate, so they stay informational.
+    ("pipelined_barriered_ms", "pipe_twin_ms", "{:>10.3f}"),
+    ("pipelined_stall_saved_ms", "stall_saved", "{:>10.3f}"),
+    ("speculation_hit_rate", "spec_hit_rate", "{:>10.3f}"),
+    ("speculated_lineages", "speculated", "{:>10.0f}"),
+    ("aborted_lineages", "spec_aborted", "{:>10.0f}"),
 ]
 
 

@@ -6,14 +6,15 @@ Run directly (no pytest in the offline image):
     python3 scripts/test_compare_bench.py
 
 Covers: regression above threshold fails for every gated metric —
-interpret_ms, grid_parallel_ms (schema v4) and, since schema v5, the
-search-throughput pair (beam_optimize_ms lower-is-better, search_cps
-higher-is-better) — below passes, missing previous-run file skips
-cleanly, older-schema (v1/v2/v3/v4/v5) baselines compare without
-crashing against v6 output, and the informational fields
-(grid_zerocopy_ms, sliced_launches, the v5 adaptive-scheduler fields
-incl. the k_histogram dict, and the v6 chaos-supervision fields) are
-reported without gating.
+interpret_ms, grid_parallel_ms (schema v4), the search-throughput pair
+since schema v5 (beam_optimize_ms lower-is-better, search_cps
+higher-is-better) and, since schema v7, pipelined_optimize_ms — below
+passes, missing previous-run file skips cleanly, older-schema
+(v1/v2/v3/v4/v5/v6) baselines compare without crashing against v7
+output, and the informational fields (grid_zerocopy_ms,
+sliced_launches, the v5 adaptive-scheduler fields incl. the
+k_histogram dict, the v6 chaos-supervision fields and the v7
+speculation-ledger fields) are reported without gating.
 """
 
 import json
@@ -39,7 +40,7 @@ def kernel_row(interpret_ms, **extra):
     return row
 
 
-def bench_json(interpret_ms, schema="astra-hotpath-v6", cross=True,
+def bench_json(interpret_ms, schema="astra-hotpath-v7", cross=True,
                sliced=None, **extra):
     doc = {
         "schema": schema,
@@ -314,6 +315,90 @@ class CompareBenchTest(unittest.TestCase):
                        quarantined_lineages=2),
         )
         self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_pipelined_optimize_regression_fails_the_gate(self):
+        # Schema v7 gates the pipelined-rounds run median: barrier-stall
+        # recovery is the engine's reason to exist, so losing it beyond
+        # the threshold is a real regression.
+        old = self.write(
+            "old.json", bench_json(1.0, pipelined_optimize_ms=200.0)
+        )
+        new = self.write(
+            "new.json", bench_json(1.0, pipelined_optimize_ms=300.0)  # +50%
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 1)
+
+    def test_pipelined_optimize_within_tolerance_passes(self):
+        old = self.write(
+            "old.json", bench_json(1.0, pipelined_optimize_ms=200.0)
+        )
+        new = self.write(
+            "new.json", bench_json(1.0, pipelined_optimize_ms=220.0)  # +10%
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_speculation_fields_are_informational_only(self):
+        # Wild swings in every v7 speculation field — including a
+        # negative stall saving (pipelined slower than its twin on a
+        # noisy runner) and a collapsed hit rate — must neither gate nor
+        # crash. Only pipelined_optimize_ms itself is gated.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, pipelined_optimize_ms=200.0,
+                       pipelined_barriered_ms=260.0,
+                       pipelined_stall_saved_ms=60.0,
+                       speculation_hit_rate=0.9,
+                       speculated_lineages=10, aborted_lineages=1),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0, pipelined_optimize_ms=205.0,
+                       pipelined_barriered_ms=190.0,
+                       pipelined_stall_saved_ms=-15.0,
+                       speculation_hit_rate=0.1,
+                       speculated_lineages=40, aborted_lineages=36),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_older_v6_schema_baseline_is_graceful_for_v7(self):
+        # v6: chaos fields present, pipelined fields absent — the first
+        # v7 run must compare cleanly and still gate the search pair
+        # against the v6 baseline.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, schema="astra-hotpath-v6",
+                       grid_parallel_ms=2.0, search_cps=100.0,
+                       beam_optimize_ms=300.0, sliced=64,
+                       adaptive_optimize_ms=250.0, adaptive_k_rounds=6,
+                       cancelled_candidates=4,
+                       k_histogram={"1": 5, "2": 1, "3": 3},
+                       chaos_optimize_ms=310.0, faults_injected=14,
+                       faults_survived=11, retries=9, watchdog_trips=1,
+                       quarantined_lineages=0),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0, grid_parallel_ms=2.0, search_cps=101.0,
+                       beam_optimize_ms=299.0, sliced=64,
+                       adaptive_optimize_ms=251.0, adaptive_k_rounds=6,
+                       cancelled_candidates=4,
+                       k_histogram={"1": 5, "2": 1, "3": 3},
+                       chaos_optimize_ms=305.0, faults_injected=14,
+                       faults_survived=11, retries=9, watchdog_trips=1,
+                       quarantined_lineages=0,
+                       pipelined_optimize_ms=240.0,
+                       pipelined_barriered_ms=300.0,
+                       pipelined_stall_saved_ms=60.0,
+                       speculation_hit_rate=0.8,
+                       speculated_lineages=10, aborted_lineages=2),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+        dropped = self.write(
+            "dropped.json",
+            bench_json(1.0, grid_parallel_ms=2.0, search_cps=60.0,
+                       beam_optimize_ms=300.0),
+        )
+        self.assertEqual(self.run_main(old, dropped, 0.15), 1)
 
     def test_older_v3_schema_baseline_is_graceful(self):
         # v3: grid_parallel fields present, zero-copy fields and
