@@ -96,8 +96,9 @@ fn main() -> anyhow::Result<()> {
         let stats = pipe.serve(100, 10, 3)?;
         println!(
             "  {variant:<10} batch={} mean={:>7.0}us p50={:>7.0}us p95={:>7.0}us \
-             throughput={:>8.0} tok/s",
-            stats.batch, stats.mean_us, stats.p50_us, stats.p95_us, stats.tokens_per_s
+             p99={:>7.0}us throughput={:>8.0} tok/s",
+            stats.batch, stats.mean_us, stats.p50_us, stats.p95_us, stats.p99_us,
+            stats.tokens_per_s
         );
         results.push(stats);
     }

@@ -21,8 +21,9 @@ use std::sync::Arc;
 
 use astra::coordinator::{optimize, optimize_all_parallel_with_cache, Config};
 use astra::faults::{self, FaultPlan};
-use astra::interp::{self, CompileCache, RunOpts};
+use astra::interp::{self, CompileCache, RunOpts, WorkerBudget};
 use astra::kernels;
+use astra::pipeline::{serve_concurrent, ServeConfig, ServeHarnessOptions};
 use astra::sim::{self, GpuModel};
 use astra::transforms::{self, Move};
 use astra::util::timing::bench;
@@ -97,6 +98,18 @@ struct KernelRow {
     speculation_hit_rate: f64,
     speculated_lineages: u64,
     aborted_lineages: u64,
+}
+
+/// Per-variant medians from the concurrent serving harness (schema v8):
+/// the latency/throughput envelope the serving regression gate watches.
+#[derive(Default, Clone)]
+struct ServingRow {
+    variant: String,
+    serve_p50_us: f64,
+    serve_p99_us: f64,
+    serve_tokens_per_s: f64,
+    serve_fallback_steps: usize,
+    serve_breaker_trips: u64,
 }
 
 /// Cross-run shared-cache counters: two identical `optimize_all_parallel`
@@ -397,6 +410,61 @@ fn main() {
         );
     }
 
+    // Concurrent serving harness (schema v8): 4 client streams over the
+    // dynamic batcher at a mid-size serving shape, faults and the online
+    // optimizer off — the steady-state latency envelope per routing
+    // variant (hot-swap correctness is pinned by tests/serving.rs, not
+    // timed here). One hoisted cache + budget, as in cmd_serve.
+    println!();
+    let serve_shapes = ServeConfig {
+        batch: 8,
+        heads: 4,
+        head_dim: 32,
+        inter: 128,
+    };
+    let serve_run_cfg = Config {
+        bug_rate: 0.0,
+        temperature: 0.0,
+        clients: 4,
+        ..Config::multi_agent()
+    };
+    let serve_cache = Arc::new(CompileCache::with_default_capacity());
+    let serve_budget =
+        Arc::new(WorkerBudget::from_config(serve_run_cfg.worker_budget));
+    let mut serving: Vec<ServingRow> = Vec::new();
+    for route_optimized in [false, true] {
+        let rep = serve_concurrent(
+            &serve_run_cfg,
+            &serve_shapes,
+            &ServeHarnessOptions {
+                steps: 30,
+                warmup: 3,
+                route_optimized,
+            },
+            &serve_cache,
+            &serve_budget,
+        )
+        .expect("bench serve run");
+        println!(
+            "serve-concurrent {:<16} p50 {:>8.0} us   p99 {:>8.0} us   \
+             {:>8.0} tok/s   ({} fallbacks, {} trips)",
+            rep.variant,
+            rep.stats.p50_us,
+            rep.stats.p99_us,
+            rep.stats.tokens_per_s,
+            rep.stats.fallback_steps,
+            rep.stats.breaker_trips
+        );
+        serving.push(ServingRow {
+            variant: rep.variant.clone(),
+            serve_p50_us: rep.stats.p50_us,
+            serve_p99_us: rep.stats.p99_us,
+            serve_tokens_per_s: rep.stats.tokens_per_s,
+            serve_fallback_steps: rep.stats.fallback_steps,
+            serve_breaker_trips: rep.stats.breaker_trips,
+        });
+    }
+
     // Cross-run shared compile cache: two identical optimize-all batches
     // over one Arc'd cache — the second must be (nearly) hit-only, and
     // the counters land in the JSON so CI can watch the reuse rate.
@@ -429,8 +497,11 @@ fn main() {
 
     if json {
         let path = "BENCH_hotpath.json";
-        std::fs::write(path, render_json(&rows, cross, sliced_launches))
-            .expect("write BENCH_hotpath.json");
+        std::fs::write(
+            path,
+            render_json(&rows, &serving, cross, sliced_launches),
+        )
+        .expect("write BENCH_hotpath.json");
         println!("\nwrote {path}");
     }
 }
@@ -438,11 +509,12 @@ fn main() {
 /// Hand-rolled JSON (no serde in the offline vendor set).
 fn render_json(
     rows: &[KernelRow],
+    serving: &[ServingRow],
     cross: CrossRunCache,
     sliced_launches: u64,
 ) -> String {
     let mut out = String::new();
-    out.push_str("{\n  \"schema\": \"astra-hotpath-v7\",\n  \"kernels\": {\n");
+    out.push_str("{\n  \"schema\": \"astra-hotpath-v8\",\n  \"kernels\": {\n");
     for (i, r) in rows.iter().enumerate() {
         let k_hist = r
             .k_hist
@@ -510,6 +582,24 @@ fn render_json(
             r.speculated_lineages,
             r.aborted_lineages,
             if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  },\n");
+    out.push_str("  \"serving\": {\n");
+    for (i, s) in serving.iter().enumerate() {
+        out.push_str(&format!(
+            "    \"{}\": {{\n      \"serve_p50_us\": {:.3},\n      \
+             \"serve_p99_us\": {:.3},\n      \
+             \"serve_tokens_per_s\": {:.1},\n      \
+             \"serve_fallback_steps\": {},\n      \
+             \"serve_breaker_trips\": {}\n    }}{}\n",
+            s.variant,
+            s.serve_p50_us,
+            s.serve_p99_us,
+            s.serve_tokens_per_s,
+            s.serve_fallback_steps,
+            s.serve_breaker_trips,
+            if i + 1 == serving.len() { "" } else { "," }
         ));
     }
     out.push_str("  },\n");

@@ -527,7 +527,7 @@ impl TestingAgent {
             max_rel = max_rel.max(o.max_rel);
             cases += 1;
         }
-        let pass = max_rel < spec.rel_tol || max_abs < spec.abs_tol;
+        let pass = spec.within_tolerance(max_abs, max_rel);
         TestReport {
             pass,
             max_rel_err: max_rel,

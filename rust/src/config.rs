@@ -38,7 +38,7 @@
 //!
 //! # deterministic fault injection + supervision (chaos hardening;
 //! # rate 0 = off, zero cost; sites: "all", "none", or a comma list
-//! # of agent,validate,grid,compile,profile)
+//! # of agent,validate,grid,compile,profile,serve)
 //! fault_rate = 0.05
 //! fault_seed = 7
 //! fault_sites = "all"
@@ -50,6 +50,15 @@
 //! # runs the literal barriered engine)
 //! pipelined = true
 //! speculation_depth = 2
+//!
+//! # concurrent serving harness (0 clients = the legacy single-stream
+//! # serve loop); request_mix is "uniform" or name:weight pairs over
+//! # merge/rmsnorm/silu; online_optimize hot-swaps better variants at
+//! # every swap_interval-th timed step
+//! clients = 4
+//! request_mix = "merge:2,rmsnorm:1,silu:1"
+//! online_optimize = true
+//! swap_interval = 8
 //!
 //! # simulator overrides
 //! launch_overhead_us = 7.0
@@ -156,6 +165,19 @@ pub fn apply(
         "pipelined" => cfg.pipelined = parse_bool(value)?,
         // 0 is meaningful: no speculative layers, even when pipelined.
         "speculation_depth" => cfg.speculation_depth = value.parse()?,
+        // 0 is meaningful: the legacy single-stream PJRT serve loop.
+        "clients" => cfg.clients = value.parse()?,
+        "request_mix" => {
+            cfg.request_mix =
+                crate::pipeline::RequestMix::parse(value).map_err(|e| anyhow!(e))?;
+        }
+        "online_optimize" => cfg.online_optimize = parse_bool(value)?,
+        "swap_interval" => {
+            cfg.swap_interval = value.parse()?;
+            if cfg.swap_interval == 0 {
+                return Err(anyhow!("swap_interval must be >= 1"));
+            }
+        }
         "mode" => {
             cfg.mode = match value {
                 "multi" | "multi-agent" => AgentMode::Multi,
@@ -213,6 +235,10 @@ pub fn render(cfg: &Config) -> String {
          quarantine_after = {}\n\
          pipelined = {}\n\
          speculation_depth = {}\n\
+         clients = {}\n\
+         request_mix = \"{}\"\n\
+         online_optimize = {}\n\
+         swap_interval = {}\n\
          launch_overhead_us = {}\n\
          dram_bw = {}\n\
          sms = {}\n\
@@ -241,6 +267,10 @@ pub fn render(cfg: &Config) -> String {
         cfg.quarantine_after,
         cfg.pipelined,
         cfg.speculation_depth,
+        cfg.clients,
+        cfg.request_mix.render(),
+        cfg.online_optimize,
+        cfg.swap_interval,
         m.launch_overhead_us,
         m.dram_bw,
         m.sms,
@@ -388,6 +418,30 @@ mod tests {
     }
 
     #[test]
+    fn parses_serving_keys_and_rejects_nonsense() {
+        let cfg = parse(
+            "clients = 4\nrequest_mix = \"merge:2,silu:1\"\n\
+             online_optimize = true\nswap_interval = 6\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.clients, 4);
+        assert_eq!(cfg.request_mix.weights, [2, 0, 1]);
+        assert!(cfg.online_optimize);
+        assert_eq!(cfg.swap_interval, 6);
+        let cfg = parse("request_mix = \"uniform\"\n").unwrap();
+        assert_eq!(cfg.request_mix, crate::pipeline::RequestMix::uniform());
+        let cfg = parse("").unwrap();
+        assert_eq!(cfg.clients, 0, "default is the legacy serve loop");
+        assert!(!cfg.online_optimize);
+        assert_eq!(cfg.swap_interval, 8);
+        assert!(parse("clients = nah\n").is_err());
+        assert!(parse("request_mix = \"merge:0,silu:0\"\n").is_err());
+        assert!(parse("request_mix = \"bogus:1\"\n").is_err());
+        assert!(parse("online_optimize = maybe\n").is_err());
+        assert!(parse("swap_interval = 0\n").is_err());
+    }
+
+    #[test]
     fn render_parse_round_trips_every_key() {
         let mut custom = Config::multi_agent_adaptive();
         custom.rounds = 7;
@@ -410,6 +464,11 @@ mod tests {
         custom.quarantine_after = 2;
         custom.pipelined = true;
         custom.speculation_depth = 3;
+        custom.clients = 4;
+        custom.request_mix =
+            crate::pipeline::RequestMix::parse("merge:2,rmsnorm:1").unwrap();
+        custom.online_optimize = true;
+        custom.swap_interval = 5;
         custom.model.launch_overhead_us = 5.5;
         for cfg in [
             Config::multi_agent(),
@@ -449,6 +508,10 @@ mod tests {
             assert_eq!(back.quarantine_after, cfg.quarantine_after);
             assert_eq!(back.pipelined, cfg.pipelined);
             assert_eq!(back.speculation_depth, cfg.speculation_depth);
+            assert_eq!(back.clients, cfg.clients);
+            assert_eq!(back.request_mix, cfg.request_mix);
+            assert_eq!(back.online_optimize, cfg.online_optimize);
+            assert_eq!(back.swap_interval, cfg.swap_interval);
             assert_eq!(
                 back.model.launch_overhead_us.to_bits(),
                 cfg.model.launch_overhead_us.to_bits()

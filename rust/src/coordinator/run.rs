@@ -127,6 +127,21 @@ pub struct Config {
     /// (`0` disables speculation even with `pipelined` set — the
     /// legacy barriered engine runs verbatim).
     pub speculation_depth: usize,
+    /// Concurrent client streams for `astra serve` (`0` = the legacy
+    /// single-stream PJRT serve loop; `>= 1` selects the interp-backed
+    /// concurrent harness in [`crate::pipeline::serve`]).
+    pub clients: usize,
+    /// Request mix the concurrent clients draw from (weights over the
+    /// serving kernel classes, deterministic per client stream).
+    pub request_mix: crate::pipeline::RequestMix,
+    /// Background online re-optimization during concurrent serving:
+    /// an optimizer thread keeps searching and hot-swaps gate-validated
+    /// better variants through the routing table.
+    pub online_optimize: bool,
+    /// Timed-step interval between hot-swap publish checkpoints in the
+    /// concurrent harness (must be `>= 1`; checkpoints block on the
+    /// optimizer so swap epochs land at deterministic step indices).
+    pub swap_interval: usize,
     pub model: GpuModel,
 }
 
@@ -151,6 +166,10 @@ impl Config {
             quarantine_after: 0,
             pipelined: false,
             speculation_depth: 1,
+            clients: 0,
+            request_mix: crate::pipeline::RequestMix::uniform(),
+            online_optimize: false,
+            swap_interval: 8,
             model: GpuModel::h100(),
         }
     }
@@ -343,8 +362,10 @@ pub fn optimize_with_cache(
 }
 
 /// [`optimize_with_cache`] over a caller-owned *worker budget* as well —
-/// the process-wide pool the batch driver shares across coordinators.
-fn optimize_with_cache_budget(
+/// the process-wide pool the batch driver shares across coordinators
+/// (and the online-optimizer thread of the concurrent serving harness,
+/// which must not exceed the serving process's global thread cap).
+pub fn optimize_with_cache_budget(
     spec: &KernelSpec,
     cfg: &Config,
     shared: &Arc<CompileCache>,

@@ -30,6 +30,9 @@ pub enum FaultSite {
     Compile,
     /// A profiling sample (one candidate's perf sweep).
     Profiling,
+    /// A primary-variant serving step inside the concurrent harness
+    /// (one client's sub-batch in one decode step).
+    Serve,
 }
 
 impl FaultSite {
@@ -41,6 +44,7 @@ impl FaultSite {
             FaultSite::GridWorker => 4,
             FaultSite::Compile => 8,
             FaultSite::Profiling => 16,
+            FaultSite::Serve => 32,
         }
     }
 
@@ -52,6 +56,7 @@ impl FaultSite {
             FaultSite::GridWorker => 0x6B1D_3017,
             FaultSite::Compile => 0xC0FF_11E5,
             FaultSite::Profiling => 0x9120_F11E,
+            FaultSite::Serve => 0x5E2F_E57E,
         }
     }
 
@@ -62,12 +67,13 @@ impl FaultSite {
             FaultSite::GridWorker => "grid",
             FaultSite::Compile => "compile",
             FaultSite::Profiling => "profile",
+            FaultSite::Serve => "serve",
         }
     }
 }
 
-/// All five sites enabled.
-pub const ALL_SITES: u8 = 31;
+/// All six sites enabled.
+pub const ALL_SITES: u8 = 63;
 
 /// What an injected fault does.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -164,11 +170,14 @@ impl FaultPlan {
 /// moderate rate stays survivable under supervision).
 fn kind_for(site: FaultSite, r: &mut Prng) -> FaultKind {
     match site {
-        // Agent calls, compiles and profiling samples model flaky
-        // infrastructure: always retryable.
-        FaultSite::AgentCall | FaultSite::Compile | FaultSite::Profiling => {
-            FaultKind::Transient
-        }
+        // Agent calls, compiles, profiling samples and serving steps
+        // model flaky infrastructure: always retryable (a faulted
+        // serving step degrades to the baseline fallback for that step;
+        // the circuit breaker decides when to re-probe).
+        FaultSite::AgentCall
+        | FaultSite::Compile
+        | FaultSite::Profiling
+        | FaultSite::Serve => FaultKind::Transient,
         FaultSite::Validation => match r.below(8) {
             0..=3 => FaultKind::Transient,
             4 | 5 => FaultKind::Hang,
@@ -224,6 +233,10 @@ pub fn transient_profile_msg() -> String {
     "injected: transient profiling fault".to_string()
 }
 
+pub fn transient_serve_msg() -> String {
+    "injected: transient serving-step fault".to_string()
+}
+
 /// Payload of an injected grid-worker panic (caught at the join).
 pub fn grid_panic_msg(block: i64) -> String {
     format!("injected grid-worker panic at block {block}")
@@ -259,7 +272,7 @@ pub fn mentions_injection(failure: &str) -> bool {
 // ---- site-mask parse/render ---------------------------------------------
 
 /// Parse a sites mask: `all`, `none`, or a comma list of
-/// `agent,validate,grid,compile,profile`.
+/// `agent,validate,grid,compile,profile,serve`.
 pub fn parse_sites(s: &str) -> Result<u8, String> {
     let s = s.trim();
     if s.eq_ignore_ascii_case("all") {
@@ -277,13 +290,14 @@ pub fn parse_sites(s: &str) -> Result<u8, String> {
             FaultSite::GridWorker,
             FaultSite::Compile,
             FaultSite::Profiling,
+            FaultSite::Serve,
         ]
         .into_iter()
         .find(|f| f.name() == part)
         .ok_or_else(|| {
             format!(
-                "unknown fault site '{part}' \
-                 (expected all, none, or agent/validate/grid/compile/profile)"
+                "unknown fault site '{part}' (expected all, none, or \
+                 agent/validate/grid/compile/profile/serve)"
             )
         })?;
         mask |= site.bit();
@@ -306,6 +320,7 @@ pub fn render_sites(mask: u8) -> String {
         FaultSite::GridWorker,
         FaultSite::Compile,
         FaultSite::Profiling,
+        FaultSite::Serve,
     ] {
         if mask & site.bit() != 0 {
             parts.push(site.name());
@@ -415,6 +430,23 @@ mod tests {
     }
 
     #[test]
+    fn serve_site_faults_are_always_transient() {
+        let plan = FaultPlan {
+            rate: 1.0,
+            seed: 11,
+            sites: FaultSite::Serve.bit(),
+        };
+        for key in 0..50u64 {
+            assert_eq!(
+                plan.roll(FaultSite::Serve, key),
+                Some(FaultKind::Transient),
+                "a faulted serving step must stay a per-step fallback"
+            );
+            assert_eq!(plan.roll(FaultSite::GridWorker, key), None);
+        }
+    }
+
+    #[test]
     fn sites_parse_render_round_trip() {
         for mask in 0..=ALL_SITES {
             let rendered = render_sites(mask);
@@ -440,6 +472,7 @@ mod tests {
         assert!(is_retryable(&hang_msg(1000)));
         assert!(is_retryable(&transient_compile_msg()));
         assert!(is_retryable(&transient_profile_msg()));
+        assert!(is_retryable(&transient_serve_msg()));
         assert!(!is_retryable(&poison_msg()));
         assert!(!is_retryable("compile: unknown variable v"));
         assert!(is_injected(&poison_msg()));

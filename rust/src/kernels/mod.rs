@@ -47,6 +47,18 @@ pub struct KernelSpec {
 }
 
 impl KernelSpec {
+    /// The oracle verdict shared by every correctness gate (the testing
+    /// agent and the serving pre-publish gate): after aggregating the
+    /// max absolute and max relative error over *all* output buffers,
+    /// a kernel passes when EITHER axis is strictly inside its
+    /// tolerance — mixed-precision semantics where a tiny absolute
+    /// error excuses a large relative one near zero and vice versa.
+    /// Single source of truth so the gates can never diverge again
+    /// (the pipeline gate used to apply a per-buffer negated variant).
+    pub fn within_tolerance(&self, max_abs: f32, max_rel: f32) -> bool {
+        max_rel < self.rel_tol || max_abs < self.abs_tol
+    }
+
     pub fn shape_label(&self, dims: &DimEnv) -> String {
         let vals: Vec<String> = self
             .dims
@@ -152,6 +164,41 @@ mod tests {
         let s = &all_specs()[0];
         let d = dims_of(&[("S", 512), ("H", 32), ("D", 256)]);
         assert_eq!(s.shape_label(&d), "[512, 32, 256]");
+    }
+
+    #[test]
+    fn tolerance_is_exclusive_at_each_boundary() {
+        let mut s = all_specs().remove(0);
+        s.rel_tol = 1e-2;
+        s.abs_tol = 1e-3;
+        // Exactly at tolerance on one axis, far outside on the other:
+        // `<` is strict, so exactly-at-tolerance fails that axis, and
+        // the other axis can't rescue it.
+        assert!(!s.within_tolerance(1.0, 1e-2), "rel exactly at rel_tol");
+        assert!(!s.within_tolerance(1e-3, 1.0), "abs exactly at abs_tol");
+        assert!(!s.within_tolerance(1e-3, 1e-2), "both exactly at tolerance");
+    }
+
+    #[test]
+    fn tolerance_passes_on_either_axis_alone() {
+        let mut s = all_specs().remove(0);
+        s.rel_tol = 1e-2;
+        s.abs_tol = 1e-3;
+        // OR semantics: one axis strictly inside suffices even when the
+        // other is wildly out (near-zero outputs produce huge rel error
+        // with tiny abs error, and vice versa for large magnitudes).
+        assert!(s.within_tolerance(1e9, 9.9e-3), "rel alone passes");
+        assert!(s.within_tolerance(9.9e-4, 1e9), "abs alone passes");
+        assert!(s.within_tolerance(0.0, 0.0), "exact match passes");
+    }
+
+    #[test]
+    fn zero_tolerance_rejects_everything_nonnegative() {
+        let mut s = all_specs().remove(0);
+        s.rel_tol = 0.0;
+        s.abs_tol = 0.0;
+        assert!(!s.within_tolerance(0.0, 0.0));
+        assert!(!s.within_tolerance(1e-30, 1e-30));
     }
 
     #[test]

@@ -54,7 +54,8 @@ fn print_usage() {
          \x20 bench     regenerate a paper table (--table 2|3|4)\n\
          \x20 casestudy print a Figure 2-5 style before/after (--kernel NAME | --list)\n\
          \x20 validate  check every AOT artifact compiles on the PJRT client\n\
-         \x20 serve     run the decode-layer serving pipeline ([--steps N] [--warmup N])\n\n\
+         \x20 serve     run the serving pipeline; --clients N selects the\n\
+         \x20           concurrent harness ([--steps N] [--warmup N])\n\n\
          agent loop (optimize/bench; config-file key in parentheses):\n\
          \x20 --kernel NAME         optimize one kernel instead of all three\n\
          \x20 --mode multi|single   agent topology (mode)\n\
@@ -98,14 +99,25 @@ fn print_usage() {
          \x20                       seed replays byte-identically at any\n\
          \x20                       worker count (fault_seed)\n\
          \x20 --fault-sites LIST    \"all\", \"none\", or a comma list of\n\
-         \x20                       agent,validate,grid,compile,profile\n\
+         \x20                       agent,validate,grid,compile,profile,serve\n\
          \x20                       (fault_sites)\n\
          \x20 --watchdog-steps N    step-denominated per-candidate validation\n\
          \x20                       budget; 0 = the interpreter's own limit\n\
          \x20                       (watchdog_steps)\n\
          \x20 --quarantine-after N  disable a beam lineage after N consecutive\n\
          \x20                       all-failed rounds; 0 = never\n\
-         \x20                       (quarantine_after)\n"
+         \x20                       (quarantine_after)\n\n\
+         concurrent serving (serve; interp-backed, no PJRT needed):\n\
+         \x20 --clients N           concurrent client streams; 0 = the legacy\n\
+         \x20                       single-stream PJRT loop (clients)\n\
+         \x20 --request-mix MIX     \"uniform\" or name:weight pairs over\n\
+         \x20                       merge/rmsnorm/silu (request_mix)\n\
+         \x20 --online-optimize [BOOL]\n\
+         \x20                       background beam search hot-swaps better\n\
+         \x20                       gate-validated variants mid-serve; bare\n\
+         \x20                       flag = on (online_optimize)\n\
+         \x20 --swap-interval N     timed steps between hot-swap publish\n\
+         \x20                       checkpoints (swap_interval)\n"
     );
 }
 
@@ -148,6 +160,9 @@ fn build_config(args: &[String]) -> Result<Config> {
         ("--watchdog-steps", "watchdog_steps"),
         ("--quarantine-after", "quarantine_after"),
         ("--speculation-depth", "speculation_depth"),
+        ("--clients", "clients"),
+        ("--request-mix", "request_mix"),
+        ("--swap-interval", "swap_interval"),
     ] {
         if let Some(v) = opt_value(args, flag) {
             config::apply(&mut cfg, &mut model, key, &v)?;
@@ -161,6 +176,15 @@ fn build_config(args: &[String]) -> Result<Config> {
                 config::apply(&mut cfg, &mut model, "pipelined", &v)?;
             }
             _ => cfg.pipelined = true,
+        }
+    }
+    // Same bare-or-boolean shape for `--online-optimize`.
+    if has_flag(args, "--online-optimize") {
+        match opt_value(args, "--online-optimize") {
+            Some(v) if !v.starts_with("--") => {
+                config::apply(&mut cfg, &mut model, "online_optimize", &v)?;
+            }
+            _ => cfg.online_optimize = true,
         }
     }
     cfg.model = model;
@@ -270,6 +294,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if steps == 0 {
         return Err(anyhow!("--steps must be >= 1 (0 timed steps measure nothing)"));
     }
+    let cfg = build_config(args)?;
+    if cfg.clients > 0 {
+        return cmd_serve_concurrent(&cfg, steps, warmup);
+    }
     let dir = default_artifacts_dir()?;
     // The degradable pre-serve gate covers both kernel-IR variants in
     // one pass; a failing optimized kernel demotes to its baseline IR
@@ -302,13 +330,68 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             pipe.serve(steps, warmup, 3)?
         };
         println!(
-            "{variant:<10} batch={} steps={} mean={:.0}us p50={:.0}us p95={:.0}us throughput={:.0} tok/s",
-            stats.batch, stats.steps, stats.mean_us, stats.p50_us, stats.p95_us, stats.tokens_per_s
+            "{variant:<10} batch={} steps={} mean={:.0}us p50={:.0}us p95={:.0}us p99={:.0}us throughput={:.0} tok/s",
+            stats.batch, stats.steps, stats.mean_us, stats.p50_us, stats.p95_us, stats.p99_us, stats.tokens_per_s
         );
         if stats.breaker_trips > 0 {
             println!(
                 "{variant:<10} degraded: {} fallback steps, {} breaker trips, {} reprobes",
                 stats.fallback_steps, stats.breaker_trips, stats.reprobes
+            );
+        }
+    }
+    Ok(())
+}
+
+/// The concurrent serving harness (`--clients >= 1`): interp-backed, so
+/// it runs in default builds with no PJRT artifacts. Serves the
+/// baseline-routed control arm first, then the optimized-routed arm
+/// (with online re-optimization when `--online-optimize` is set), and
+/// prints the per-variant stats plus the swap ledger.
+fn cmd_serve_concurrent(cfg: &Config, steps: usize, warmup: usize) -> Result<()> {
+    use std::sync::Arc;
+    use astra::interp::WorkerBudget;
+
+    let cache = Arc::new(CompileCache::with_default_capacity());
+    let budget = Arc::new(WorkerBudget::from_config(cfg.worker_budget));
+    println!(
+        "concurrent serve: {} clients, mix {}, online-optimize {}",
+        cfg.clients,
+        cfg.request_mix.render(),
+        if cfg.online_optimize { "on" } else { "off" }
+    );
+    for route_optimized in [false, true] {
+        let opts = pipeline::ServeHarnessOptions {
+            steps,
+            warmup,
+            route_optimized,
+        };
+        let report =
+            pipeline::serve_concurrent(cfg, &pipeline::ServeConfig::default(), &opts, &cache, &budget)?;
+        for (kernel, reason) in &report.demotions {
+            println!("pre-serve gate: {kernel} demoted to baseline IR ({reason})");
+        }
+        let s = &report.stats;
+        println!(
+            "{:<10} batch={} steps={} mean={:.0}us p50={:.0}us p95={:.0}us p99={:.0}us throughput={:.0} tok/s",
+            report.variant, s.batch, s.steps, s.mean_us, s.p50_us, s.p95_us, s.p99_us, s.tokens_per_s
+        );
+        if s.fallback_steps > 0 || s.breaker_trips > 0 {
+            println!(
+                "{:<10} degraded: {} fallback requests, {} breaker trips, {} reprobes",
+                report.variant, s.fallback_steps, s.breaker_trips, s.reprobes
+            );
+        }
+        for swap in &report.swaps {
+            println!(
+                "{:<10} swap@t{} class {} {} {:.3}x: {}",
+                report.variant, swap.step, swap.class, swap.label, swap.speedup, swap.note
+            );
+        }
+        if cfg.online_optimize {
+            println!(
+                "{:<10} online: {} published, {} gate-rejected",
+                report.variant, report.published, report.gate_rejects
             );
         }
     }

@@ -9,6 +9,13 @@
 //! same weights, same requests, same outputs (within tolerance), different
 //! kernel internals.
 
+pub mod serve;
+
+pub use serve::{
+    serve_concurrent, RequestMix, RouteRecord, RoutingTable, ServeHarnessOptions,
+    ServeReport, SwapRecord, Variant,
+};
+
 use anyhow::{anyhow, Result};
 
 use crate::interp::{self, CompileCache};
@@ -50,18 +57,31 @@ impl ServeConfig {
 /// outside the decode layer is a typed error, not a panic: the serving
 /// path degrades, it does not crash.
 fn serving_dims(cfg: &ServeConfig, spec: &KernelSpec) -> Result<DimEnv> {
+    serving_dims_scaled(cfg, spec, 1)
+}
+
+/// Like [`serving_dims`], with the batch axis scaled by `groups` — the
+/// dynamic batcher's launch shape when it coalesces `groups` compatible
+/// client requests into one kernel launch per step. `groups == 1` is the
+/// classic single-stream serving shape.
+fn serving_dims_scaled(
+    cfg: &ServeConfig,
+    spec: &KernelSpec,
+    groups: usize,
+) -> Result<DimEnv> {
+    let batch = (cfg.batch * groups.max(1)) as i64;
     match spec.paper_name {
         "merge_attn_states_lse" => Ok(kernels::dims_of(&[
-            ("S", cfg.batch as i64),
+            ("S", batch),
             ("H", cfg.heads as i64),
             ("D", cfg.head_dim as i64),
         ])),
         "fused_add_rmsnorm" => Ok(kernels::dims_of(&[
-            ("B", cfg.batch as i64),
+            ("B", batch),
             ("D", cfg.hidden() as i64),
         ])),
         "silu_and_mul" => Ok(kernels::dims_of(&[
-            ("B", cfg.batch as i64),
+            ("B", batch),
             ("D", cfg.inter as i64),
         ])),
         other => Err(anyhow!("no serving shape mapping for kernel {other}")),
@@ -111,15 +131,26 @@ fn validate_one_launch(
     interp::run_compiled(&prog, &mut env)
         .map_err(|e| anyhow!("{} ({:?}): {e}", spec.paper_name, dims))?;
     let want = (spec.reference)(dims, &inputs.iter().cloned().collect());
+    // Aggregate max errors over ALL output buffers first, then apply
+    // the one shared oracle predicate (`KernelSpec::within_tolerance`)
+    // — exactly what the testing agent does, so the pre-serve gate and
+    // the search-time oracle can never diverge again. (The old
+    // per-buffer `rel >= rel_tol && abs >= abs_tol` check was the
+    // negated predicate applied buffer-by-buffer: on multi-buffer
+    // kernels it could pass a kernel the testing agent rejects.)
+    let mut max_abs = 0f32;
+    let mut max_rel = 0f32;
     for buf in spec.out_bufs {
         let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
-        if rel >= spec.rel_tol && abs >= spec.abs_tol {
-            return Err(anyhow!(
-                "{} {buf}: serving-shape mismatch (abs {abs:.2e}, \
-                 rel {rel:.2e}) at {dims:?}",
-                spec.paper_name
-            ));
-        }
+        max_abs = max_abs.max(abs);
+        max_rel = max_rel.max(rel);
+    }
+    if !spec.within_tolerance(max_abs, max_rel) {
+        return Err(anyhow!(
+            "{}: serving-shape mismatch (abs {max_abs:.2e}, \
+             rel {max_rel:.2e}) at {dims:?}",
+            spec.paper_name
+        ));
     }
     Ok(())
 }
@@ -226,6 +257,7 @@ pub struct ServeStats {
     pub mean_us: f64,
     pub p50_us: f64,
     pub p95_us: f64,
+    pub p99_us: f64,
     /// Decode tokens per second (batch × steps / wall time).
     pub tokens_per_s: f64,
     /// Timed steps served by the baseline fallback pipeline (0 when the
@@ -413,6 +445,13 @@ impl DecodePipeline {
         for _ in 0..warmup {
             serve_one(&mut breaker, self, fallback, &mut state)?;
         }
+        // Snapshot the breaker counters at the timed-window boundary:
+        // the breaker deliberately stays warm across it (a cooldown in
+        // progress keeps running), but trips/reprobes accrued during
+        // warmup must not leak into the timed ServeStats — the ledger
+        // counts only what `lat` and `fallback_steps` count.
+        let warm_trips = breaker.trips;
+        let warm_reprobes = breaker.reprobes;
         let mut lat = Vec::with_capacity(steps);
         let mut fallback_steps = 0usize;
         let t0 = std::time::Instant::now();
@@ -431,10 +470,21 @@ impl DecodePipeline {
             self.cfg.batch,
             wall,
             fallback_steps,
-            breaker.trips,
-            breaker.reprobes,
+            breaker.trips - warm_trips,
+            breaker.reprobes - warm_reprobes,
         ))
     }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample: the smallest
+/// value with at least `q·n` of the sample at or below it, i.e. index
+/// `ceil(q·n) − 1`. The previous `lat[n / 2]` / `(n·0.95) as usize`
+/// indexing over-shot by one rank for even/small `n` (e.g. n=4 reported
+/// the 3rd value as the median, n=20 reported the max as p95).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
 /// Assemble [`ServeStats`] from a timed latency vector (`steps >= 1`,
@@ -453,8 +503,9 @@ fn finish_stats(
         steps,
         batch,
         mean_us: lat.iter().sum::<f64>() / steps as f64,
-        p50_us: lat[steps / 2],
-        p95_us: lat[((steps as f64 * 0.95) as usize).min(steps - 1)],
+        p50_us: percentile(&lat, 0.50),
+        p95_us: percentile(&lat, 0.95),
+        p99_us: percentile(&lat, 0.99),
         tokens_per_s: (batch * steps) as f64 / wall,
         fallback_steps,
         breaker_trips,
@@ -517,6 +568,65 @@ mod tests {
             "healthy optimized IR must not demote: {:?}",
             report.fallbacks
         );
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        // n=1: every quantile is the single sample.
+        assert_eq!(percentile(&[7.0], 0.50), 7.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        // n=4: p50 rank = ceil(2.0) = 2 → index 1 (the old `lat[n/2]`
+        // picked index 2, the 3rd value).
+        let four = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&four, 0.50), 2.0);
+        assert_eq!(percentile(&four, 0.95), 4.0);
+        // n=20: p95 rank = ceil(19.0) = 19 → index 18 (the old
+        // truncation `(20·0.95) as usize = 19` reported the max).
+        let twenty: Vec<f64> = (1..=20).map(|v| v as f64).collect();
+        assert_eq!(percentile(&twenty, 0.50), 10.0);
+        assert_eq!(percentile(&twenty, 0.95), 19.0);
+        assert_eq!(percentile(&twenty, 0.99), 20.0);
+        // n=50: median of an even sample is the lower-middle rank;
+        // p99 rank = ceil(49.5) = 50 → the max.
+        let fifty: Vec<f64> = (1..=50).map(|v| v as f64).collect();
+        assert_eq!(percentile(&fifty, 0.50), 25.0);
+        assert_eq!(percentile(&fifty, 0.95), 48.0);
+        assert_eq!(percentile(&fifty, 0.99), 50.0);
+        // n=100: the textbook case — p99 is the 99th value, not the max.
+        let hundred: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&hundred, 0.50), 50.0);
+        assert_eq!(percentile(&hundred, 0.99), 99.0);
+    }
+
+    #[test]
+    fn finish_stats_reports_consistent_percentiles() {
+        let lat: Vec<f64> = (1..=20).map(|v| v as f64).collect();
+        let s = finish_stats(lat, 20, 8, 2.0, 3, 2, 1);
+        assert_eq!(s.p50_us, 10.0);
+        assert_eq!(s.p95_us, 19.0);
+        assert_eq!(s.p99_us, 20.0);
+        assert_eq!(s.mean_us, 10.5);
+        assert_eq!(s.tokens_per_s, (8 * 20) as f64 / 2.0);
+        assert_eq!(s.fallback_steps, 3);
+        assert_eq!(s.breaker_trips, 2);
+        assert_eq!(s.reprobes, 1);
+    }
+
+    #[test]
+    fn scaled_serving_dims_multiply_only_the_batch_axis() {
+        let cfg = ServeConfig::default();
+        for spec in kernels::all_specs() {
+            let one = serving_dims_scaled(&cfg, &spec, 1).unwrap();
+            let four = serving_dims_scaled(&cfg, &spec, 4).unwrap();
+            let batch_axis = spec.dims[0]; // S for merge, B otherwise
+            assert_eq!(four[batch_axis], 4 * one[batch_axis], "{}", spec.paper_name);
+            for d in &spec.dims[1..] {
+                assert_eq!(four[*d], one[*d], "{} {d}", spec.paper_name);
+            }
+            // groups == 0 clamps to a single group rather than an
+            // empty launch.
+            assert_eq!(serving_dims_scaled(&cfg, &spec, 0).unwrap(), one);
+        }
     }
 
     #[test]

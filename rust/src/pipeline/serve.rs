@@ -1,0 +1,830 @@
+//! Concurrent serving harness with online re-optimization — the
+//! north-star serving scenario (ROADMAP item 3).
+//!
+//! N client streams each draw a kernel class per decode step from a
+//! weighted [`RequestMix`]; a dynamic batcher groups same-class
+//! requests into one scaled launch (`serving_dims_scaled`); a
+//! [`RoutingTable`] of epoch-tagged [`Variant`]s picks the kernel IR
+//! per class; and, with `online_optimize` on, a background optimizer
+//! thread keeps running the beam search (sharing the hoisted
+//! [`CompileCache`] and the process-wide [`WorkerBudget`]) and
+//! hot-swaps a strictly better, gate-revalidated variant in through an
+//! atomic `Arc` pointer swap.
+//!
+//! Determinism discipline (the property every serving test pins):
+//! every observable decision is keyed by stable identities, never by
+//! execution order —
+//!
+//! * each client's request draws come from its own PRNG seeded by
+//!   `(cfg.seed, client)`, so client `c`'s stream is identical at every
+//!   client count (the *prefix property*);
+//! * fault rolls key by `(abs step, class, client)` through the
+//!   [`FaultSite::Serve`] stream;
+//! * optimizer generations are seeded by `(cfg.seed, generation)` only,
+//!   and publish checkpoints *block* on the optimizer channel at fixed
+//!   timed-step indices (`t % swap_interval == 0`), so swap epochs land
+//!   at identical steps at every `(clients, worker_budget, fault plan)`
+//!   point — concurrency overlaps work, it never reorders decisions.
+
+use std::sync::mpsc;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{self, Config};
+use crate::faults::{self, FaultSite};
+use crate::interp::budget::run_indexed;
+use crate::interp::{self, CompileCache, ExecEnv, RunOpts, WorkerBudget};
+use crate::ir::Kernel;
+use crate::kernels::{self, KernelSpec};
+use crate::sim;
+use crate::transforms;
+use crate::util::Prng;
+
+use super::{
+    serving_dims_scaled, validate_one_launch, CircuitBreaker, ServeConfig,
+    ServeStats,
+};
+
+/// Weighted request mix over the serving kernel classes, in catalog
+/// order (`merge_attn_states_lse`, `fused_add_rmsnorm`, `silu_and_mul`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestMix {
+    pub weights: [u32; 3],
+}
+
+/// Short names accepted by [`RequestMix::parse`], in catalog order.
+const MIX_NAMES: [&str; 3] = ["merge", "rmsnorm", "silu"];
+const MIX_PAPER_NAMES: [&str; 3] =
+    ["merge_attn_states_lse", "fused_add_rmsnorm", "silu_and_mul"];
+
+impl Default for RequestMix {
+    fn default() -> Self {
+        RequestMix::uniform()
+    }
+}
+
+impl RequestMix {
+    /// Every class equally likely.
+    pub fn uniform() -> RequestMix {
+        RequestMix { weights: [1, 1, 1] }
+    }
+
+    pub fn total(&self) -> u32 {
+        self.weights.iter().sum()
+    }
+
+    /// Parse `uniform` or a comma list of `name:weight` entries
+    /// (`merge:2,rmsnorm:1,silu:1`; full paper names also accepted).
+    /// Unlisted classes get weight 0; an all-zero mix is rejected.
+    pub fn parse(s: &str) -> Result<RequestMix, String> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("uniform") {
+            return Ok(RequestMix::uniform());
+        }
+        let mut weights = [0u32; 3];
+        for part in s.split(',') {
+            let part = part.trim();
+            let (name, w) = part
+                .split_once(':')
+                .ok_or_else(|| format!("request-mix entry '{part}' is not name:weight"))?;
+            let name = name.trim();
+            let idx = MIX_NAMES
+                .iter()
+                .position(|n| *n == name)
+                .or_else(|| MIX_PAPER_NAMES.iter().position(|n| *n == name))
+                .ok_or_else(|| {
+                    format!(
+                        "unknown request-mix kernel '{name}' \
+                         (expected merge/rmsnorm/silu)"
+                    )
+                })?;
+            weights[idx] = w
+                .trim()
+                .parse::<u32>()
+                .map_err(|_| format!("bad request-mix weight '{w}'"))?;
+        }
+        let mix = RequestMix { weights };
+        if mix.total() == 0 {
+            return Err("request mix has no positive weight".to_string());
+        }
+        Ok(mix)
+    }
+
+    /// Render in the explicit form [`parse`](Self::parse) accepts.
+    pub fn render(&self) -> String {
+        MIX_NAMES
+            .iter()
+            .zip(self.weights)
+            .map(|(n, w)| format!("{n}:{w}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Draw a class index, weighted. Deterministic in the PRNG state.
+    pub fn pick(&self, rng: &mut Prng) -> usize {
+        let total = self.total();
+        debug_assert!(total > 0, "mix validated at entry");
+        let mut roll = rng.below(total as usize) as u32;
+        for (i, w) in self.weights.iter().enumerate() {
+            if roll < *w {
+                return i;
+            }
+            roll -= w;
+        }
+        unreachable!("roll < total by construction")
+    }
+}
+
+/// One routable kernel variant: the IR plus its publish epoch and the
+/// optimizer's measured speedup claim (the bar the next candidate must
+/// clear).
+#[derive(Debug, Clone)]
+pub struct Variant {
+    /// Per-class monotone publish counter (0 = initial baseline).
+    pub epoch: u64,
+    pub label: String,
+    pub kernel: Kernel,
+    pub speedup: f64,
+}
+
+/// Per-class variant routing table with epoch-style atomic hot-swap:
+/// readers clone an `Arc` under a read lock (no torn reads — a reader
+/// holds exactly the pre- or post-publish variant, never a mix), and
+/// [`publish`](Self::publish) swaps the pointer wholesale.
+pub struct RoutingTable {
+    slots: Vec<RwLock<Arc<Variant>>>,
+}
+
+impl RoutingTable {
+    pub fn new(initial: Vec<Variant>) -> RoutingTable {
+        RoutingTable {
+            slots: initial
+                .into_iter()
+                .map(|v| RwLock::new(Arc::new(v)))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The current variant for a class (a cheap `Arc` clone; the swap
+    /// epoch travels with it).
+    pub fn read(&self, class: usize) -> Arc<Variant> {
+        Arc::clone(&self.slots[class].read().expect("routing table poisoned"))
+    }
+
+    /// Atomically replace the class's variant.
+    pub fn publish(&self, class: usize, v: Variant) {
+        *self.slots[class].write().expect("routing table poisoned") = Arc::new(v);
+    }
+}
+
+/// One client request's routing decision in one timed step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteRecord {
+    /// Timed step index.
+    pub step: usize,
+    pub client: usize,
+    /// Kernel class the client drew.
+    pub class: usize,
+    /// Epoch of the variant the router picked this step.
+    pub epoch: u64,
+    /// Whether this request was served by the baseline fallback (open
+    /// breaker, or a faulted/failed primary launch de-batched to it).
+    pub fell_back: bool,
+}
+
+/// One publish checkpoint's outcome in the swap ledger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwapRecord {
+    /// Timed step index of the checkpoint.
+    pub step: usize,
+    pub class: usize,
+    /// Candidate label (`online@g<N>`).
+    pub label: String,
+    /// The optimizer's measured speedup claim.
+    pub speedup: f64,
+    pub published: bool,
+    /// The class epoch after the checkpoint (bumped iff published).
+    pub epoch: u64,
+    /// `published`, or why the candidate was rejected.
+    pub note: String,
+}
+
+/// Everything one concurrent serve run observed.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub stats: ServeStats,
+    /// `"baseline"` or `"optimized"` — the initial routing policy.
+    pub variant: String,
+    /// One record per (timed step, client), client order within a step.
+    pub routes: Vec<RouteRecord>,
+    /// One record per publish checkpoint, in checkpoint order.
+    pub swaps: Vec<SwapRecord>,
+    /// Pre-serve gate demotions: `(kernel, reason)` whose optimized IR
+    /// failed and started on baseline.
+    pub demotions: Vec<(String, String)>,
+    /// Hot-swaps actually published.
+    pub published: usize,
+    /// Online candidates the publish gate rejected.
+    pub gate_rejects: usize,
+}
+
+/// Harness knobs that are per-run rather than per-config.
+#[derive(Debug, Clone)]
+pub struct ServeHarnessOptions {
+    /// Timed decode steps (>= 1).
+    pub steps: usize,
+    /// Untimed warmup steps (breakers stay warm across the boundary;
+    /// counters are snapshotted so warmup never leaks into the ledger).
+    pub warmup: usize,
+    /// Start routing the optimized composition (`true`) or the baseline
+    /// IR (`false` — the control arm; online publishes still apply).
+    pub route_optimized: bool,
+}
+
+/// An online-optimizer candidate crossing the channel.
+struct Candidate {
+    class: usize,
+    label: String,
+    kernel: Kernel,
+    speedup: f64,
+    correct: bool,
+}
+
+/// One dynamic-batch launch of a step: the same-class members served by
+/// one kernel at batch scale `members.len()`.
+struct SubBatch {
+    class: usize,
+    /// Client indices, ascending.
+    members: Vec<usize>,
+    /// Kernel this sub-batch launches.
+    kernel: Arc<Kernel>,
+    /// Baseline IR for de-batched per-member fallback.
+    baseline: Arc<Kernel>,
+    /// Primary optimized launches roll [`FaultSite::Serve`] per member;
+    /// breaker-open fallbacks and baseline-routed launches do not.
+    injectable: bool,
+    /// Members already demoted to fallback by their breaker.
+    is_fallback: bool,
+}
+
+/// Run the concurrent serving harness. `cache` and `budget` are the
+/// process-hoisted compile cache and worker-budget pool, shared with
+/// the online optimizer thread so serving + search together respect one
+/// global thread cap.
+pub fn serve_concurrent(
+    cfg: &Config,
+    serve_cfg: &ServeConfig,
+    opts: &ServeHarnessOptions,
+    cache: &Arc<CompileCache>,
+    budget: &Arc<WorkerBudget>,
+) -> Result<ServeReport> {
+    if opts.steps == 0 {
+        return Err(anyhow!("serve requires at least 1 timed step (got 0)"));
+    }
+    if cfg.clients == 0 {
+        return Err(anyhow!("concurrent serve requires at least 1 client"));
+    }
+    if cfg.request_mix.total() == 0 {
+        return Err(anyhow!("request mix has no positive weight"));
+    }
+    if cfg.online_optimize && cfg.swap_interval == 0 {
+        return Err(anyhow!("swap interval must be >= 1"));
+    }
+    let specs = kernels::all_specs();
+    let scales = gate_scales(cfg.clients);
+
+    // Pre-serve gate + initial routing table. A failing baseline is
+    // fatal; a failing optimized composition demotes that class to
+    // baseline (mirroring validate_serving_kernels_with_fallback).
+    let mut demotions: Vec<(String, String)> = Vec::new();
+    let mut initial = Vec::with_capacity(specs.len());
+    let mut baselines = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        let base = (spec.build_baseline)();
+        for scale in &scales {
+            let dims = serving_dims_scaled(serve_cfg, spec, *scale)?;
+            validate_one_launch(spec, &base, &dims, cache)?;
+        }
+        let base = Arc::new(base);
+        let mut variant = Variant {
+            epoch: 0,
+            label: "baseline".to_string(),
+            kernel: (*base).clone(),
+            speedup: 1.0,
+        };
+        if opts.route_optimized {
+            let opt = transforms::optimized_reference(&base);
+            let gate = scales.iter().try_for_each(|scale| {
+                let dims = serving_dims_scaled(serve_cfg, spec, *scale)?;
+                validate_one_launch(spec, &opt, &dims, cache)
+            });
+            match gate {
+                Ok(()) => {
+                    let shapes = (spec.representative_shapes)();
+                    let speedup = sim::geomean_speedup(
+                        &sim::profile_shapes(&cfg.model, &base, &shapes),
+                        &sim::profile_shapes(&cfg.model, &opt, &shapes),
+                    );
+                    variant = Variant {
+                        epoch: 1,
+                        label: "optimized".to_string(),
+                        kernel: opt,
+                        speedup,
+                    };
+                }
+                Err(e) => {
+                    demotions.push((spec.paper_name.to_string(), format!("{e:#}")));
+                }
+            }
+        }
+        initial.push(variant);
+        baselines.push(base);
+    }
+    let table = RoutingTable::new(initial);
+
+    // Online optimizer: one generation per publish checkpoint, so every
+    // checkpoint's blocking recv is matched by exactly one send and the
+    // thread always drains clean. Generations are seeded from
+    // (cfg.seed, g) alone — identical at every client count.
+    let generations = if cfg.online_optimize {
+        (opts.steps - 1) / cfg.swap_interval
+    } else {
+        0
+    };
+    let (tx, rx) = mpsc::channel::<Candidate>();
+    let optimizer = if generations > 0 {
+        let gen_cfgs: Vec<(usize, Config)> = (0..generations)
+            .map(|g| {
+                let mut c = cfg.clone();
+                c.seed = faults::mix(cfg.seed, 0x0917_5EED ^ g as u64);
+                c.clients = 0;
+                c.online_optimize = false;
+                (g % specs.len(), c)
+            })
+            .collect();
+        let specs = specs.clone();
+        let cache = Arc::clone(cache);
+        let budget = Arc::clone(budget);
+        Some(std::thread::spawn(move || {
+            for (g, (class, gen_cfg)) in gen_cfgs.into_iter().enumerate() {
+                let out = coordinator::optimize_with_cache_budget(
+                    &specs[class],
+                    &gen_cfg,
+                    &cache,
+                    &budget,
+                );
+                let sent = tx.send(Candidate {
+                    class,
+                    label: format!("online@g{g}"),
+                    kernel: out.best,
+                    speedup: out.final_speedup,
+                    correct: out.final_correct,
+                });
+                if sent.is_err() {
+                    break;
+                }
+            }
+        }))
+    } else {
+        None
+    };
+
+    let mut streams: Vec<ClientStream> = (0..cfg.clients)
+        .map(|c| ClientStream {
+            rng: Prng::seed(faults::mix(cfg.seed ^ 0x5E12_7E00, c as u64)),
+            breaker: CircuitBreaker::new(),
+        })
+        .collect();
+
+    let mut routes: Vec<RouteRecord> = Vec::new();
+    let mut swaps: Vec<SwapRecord> = Vec::new();
+    let mut published = 0usize;
+    let mut gate_rejects = 0usize;
+    let mut lat: Vec<f64> = Vec::with_capacity(opts.steps);
+    let mut fallback_requests = 0usize;
+    let mut consumed = 0usize;
+    let mut warm_trips = 0u64;
+    let mut warm_reprobes = 0u64;
+    let mut t0 = std::time::Instant::now();
+
+    for abs_step in 0..opts.warmup + opts.steps {
+        let timed = abs_step >= opts.warmup;
+        let t = abs_step.saturating_sub(opts.warmup);
+        if abs_step == opts.warmup {
+            // Timed-window boundary: breakers stay warm, their warmup
+            // counters don't leak into the timed ledger.
+            warm_trips = streams.iter().map(|s| s.breaker.trips).sum();
+            warm_reprobes = streams.iter().map(|s| s.breaker.reprobes).sum();
+            t0 = std::time::Instant::now();
+        }
+        // Publish checkpoint: block on the optimizer at fixed timed-step
+        // indices so the swap epoch is a deterministic function of the
+        // seed, never of relative thread speed.
+        if timed && t > 0 && t % cfg.swap_interval.max(1) == 0 && consumed < generations {
+            let cand = rx
+                .recv()
+                .map_err(|_| anyhow!("online optimizer thread died"))?;
+            consumed += 1;
+            let rec = publish_checkpoint(
+                cand, t, &table, &specs, serve_cfg, &scales, cache,
+            )?;
+            if rec.published {
+                published += 1;
+            } else if rec.note.starts_with("gate:") {
+                gate_rejects += 1;
+            }
+            swaps.push(rec);
+        }
+
+        // Draw each client's request (client order — the per-client
+        // PRNGs make the draw sequence a pure function of (seed, c)).
+        let picks: Vec<usize> = streams
+            .iter_mut()
+            .map(|s| cfg.request_mix.pick(&mut s.rng))
+            .collect();
+
+        // Dynamic batcher: group same-class requests, split each group
+        // by its members' breaker verdicts into a primary sub-batch and
+        // a baseline-fallback sub-batch.
+        let mut subs: Vec<SubBatch> = Vec::new();
+        let mut step_variants: Vec<Option<Arc<Variant>>> = vec![None; specs.len()];
+        for class in 0..specs.len() {
+            let members: Vec<usize> = (0..cfg.clients)
+                .filter(|c| picks[*c] == class)
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            let variant = table.read(class);
+            let routed_baseline = variant.label == "baseline";
+            let (primary, fallback): (Vec<usize>, Vec<usize>) = if routed_baseline {
+                (members, Vec::new())
+            } else {
+                members
+                    .into_iter()
+                    .partition(|c| streams[*c].breaker.try_primary())
+            };
+            if !primary.is_empty() {
+                subs.push(SubBatch {
+                    class,
+                    members: primary,
+                    kernel: Arc::new(variant.kernel.clone()),
+                    baseline: Arc::clone(&baselines[class]),
+                    injectable: !routed_baseline,
+                    is_fallback: false,
+                });
+            }
+            if !fallback.is_empty() {
+                subs.push(SubBatch {
+                    class,
+                    members: fallback,
+                    kernel: Arc::clone(&baselines[class]),
+                    baseline: Arc::clone(&baselines[class]),
+                    injectable: false,
+                    is_fallback: true,
+                });
+            }
+            step_variants[class] = Some(variant);
+        }
+
+        // Execute every sub-batch over the budgeted pool; results merge
+        // by sub-batch index, so concurrency never reorders outcomes.
+        let step_t0 = std::time::Instant::now();
+        let results = run_indexed(Some(budget), subs.len(), |i| {
+            exec_sub_batch(
+                &subs[i], &specs[subs[i].class], serve_cfg, cfg, abs_step,
+                cache, budget,
+            )
+        });
+        let step_us = step_t0.elapsed().as_secs_f64() * 1e6;
+
+        // Canonical post-pass (sub-batch order = class order, members
+        // ascending): apply breaker transitions, collect per-client
+        // outcomes.
+        let mut fell_back: Vec<bool> = vec![false; cfg.clients];
+        for (sub, res) in subs.iter().zip(results) {
+            let outcomes = res.map_err(|e| anyhow!("{e}"))?;
+            for (member, fb) in sub.members.iter().zip(outcomes) {
+                fell_back[*member] = fb;
+                if sub.injectable {
+                    if fb {
+                        streams[*member].breaker.on_failure();
+                    } else {
+                        streams[*member].breaker.on_success();
+                    }
+                }
+            }
+        }
+
+        if timed {
+            lat.push(step_us);
+            for (c, fb) in fell_back.iter().enumerate() {
+                let class = picks[c];
+                let epoch = step_variants[class]
+                    .as_ref()
+                    .map_or(0, |v| v.epoch);
+                routes.push(RouteRecord {
+                    step: t,
+                    client: c,
+                    class,
+                    epoch,
+                    fell_back: *fb,
+                });
+                if *fb {
+                    fallback_requests += 1;
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // All checkpoints consumed exactly one candidate each, so the
+    // optimizer has nothing buffered and joins clean.
+    drop(rx);
+    if let Some(h) = optimizer {
+        h.join()
+            .map_err(|_| anyhow!("online optimizer thread panicked"))?;
+    }
+
+    let trips: u64 = streams.iter().map(|s| s.breaker.trips).sum::<u64>() - warm_trips;
+    let reprobes: u64 =
+        streams.iter().map(|s| s.breaker.reprobes).sum::<u64>() - warm_reprobes;
+    Ok(ServeReport {
+        stats: super::finish_stats(
+            lat,
+            opts.steps,
+            serve_cfg.batch * cfg.clients,
+            wall,
+            fallback_requests,
+            trips,
+            reprobes,
+        ),
+        variant: if opts.route_optimized {
+            "optimized".to_string()
+        } else {
+            "baseline".to_string()
+        },
+        routes,
+        swaps,
+        demotions,
+        published,
+        gate_rejects,
+    })
+}
+
+struct ClientStream {
+    rng: Prng,
+    breaker: CircuitBreaker,
+}
+
+/// Batch scales the pre-serve and publish gates validate: the
+/// single-group shape and the full-coalescence shape.
+fn gate_scales(clients: usize) -> Vec<usize> {
+    if clients <= 1 {
+        vec![1]
+    } else {
+        vec![1, clients]
+    }
+}
+
+/// Decide one online candidate at a publish checkpoint: reject if its
+/// own final oracle failed, if it does not strictly beat the live
+/// variant's speedup, or if the pre-publish gate fails on any serving
+/// scale; otherwise hot-swap it in under the next epoch.
+fn publish_checkpoint(
+    cand: Candidate,
+    t: usize,
+    table: &RoutingTable,
+    specs: &[KernelSpec],
+    serve_cfg: &ServeConfig,
+    scales: &[usize],
+    cache: &Arc<CompileCache>,
+) -> Result<SwapRecord> {
+    let cur = table.read(cand.class);
+    let (published, epoch, note) = if !cand.correct {
+        (false, cur.epoch, "rejected: final oracle re-validation failed".to_string())
+    } else if cand.speedup <= cur.speedup {
+        (
+            false,
+            cur.epoch,
+            format!(
+                "not better ({:.3}x <= live {:.3}x)",
+                cand.speedup, cur.speedup
+            ),
+        )
+    } else {
+        let gate = scales.iter().try_for_each(|scale| {
+            let dims = serving_dims_scaled(serve_cfg, &specs[cand.class], *scale)?;
+            validate_one_launch(&specs[cand.class], &cand.kernel, &dims, cache)
+        });
+        match gate {
+            Ok(()) => {
+                let epoch = cur.epoch + 1;
+                table.publish(
+                    cand.class,
+                    Variant {
+                        epoch,
+                        label: cand.label.clone(),
+                        kernel: cand.kernel.clone(),
+                        speedup: cand.speedup,
+                    },
+                );
+                (true, epoch, "published".to_string())
+            }
+            Err(e) => (false, cur.epoch, format!("gate: {e:#}")),
+        }
+    };
+    Ok(SwapRecord {
+        step: t,
+        class: cand.class,
+        label: cand.label,
+        speedup: cand.speedup,
+        published,
+        epoch,
+        note,
+    })
+}
+
+/// Execute one sub-batch. Returns `fell_back` per member (ascending
+/// member order). A member's outcome depends only on its own identity:
+/// its fault roll keys by `(abs step, class, client)`, and when any
+/// member of a batched primary launch faults (or the batched launch
+/// itself fails), the batch *de-batches* — every member re-executes at
+/// scale 1, faulted members on the baseline — so siblings never inherit
+/// each other's faults and the prefix property holds under chaos. A
+/// baseline launch failing is fatal: there is nothing left to degrade
+/// to.
+fn exec_sub_batch(
+    sub: &SubBatch,
+    spec: &KernelSpec,
+    serve_cfg: &ServeConfig,
+    cfg: &Config,
+    abs_step: usize,
+    cache: &Arc<CompileCache>,
+    budget: &Arc<WorkerBudget>,
+) -> Result<Vec<bool>, String> {
+    let step_key = faults::mix(abs_step as u64, sub.class as u64);
+    let input_seed = faults::mix(cfg.seed ^ 0x1EAF, step_key);
+    let n = sub.members.len();
+    if sub.is_fallback || !sub.injectable {
+        // Breaker-open fallbacks and baseline-routed groups: one batched
+        // launch, no injection. Failure is fatal (baseline is the floor).
+        run_launch(&sub.kernel, spec, serve_cfg, n, input_seed, cfg, cache, budget)?;
+        return Ok(vec![sub.is_fallback; n]);
+    }
+    let rolls: Vec<bool> = sub
+        .members
+        .iter()
+        .map(|c| {
+            cfg.fault
+                .roll(FaultSite::Serve, faults::mix(step_key, *c as u64))
+                .is_some()
+        })
+        .collect();
+    let any_fault = rolls.iter().any(|r| *r);
+    if !any_fault
+        && run_launch(&sub.kernel, spec, serve_cfg, n, input_seed, cfg, cache, budget)
+            .is_ok()
+    {
+        return Ok(vec![false; n]);
+    }
+    // De-batch: per-member scale-1 launches, faulted members demoted to
+    // the baseline for this step.
+    let mut out = Vec::with_capacity(n);
+    for (i, _member) in sub.members.iter().enumerate() {
+        let fb = if rolls[i] {
+            true
+        } else {
+            run_launch(&sub.kernel, spec, serve_cfg, 1, input_seed, cfg, cache, budget)
+                .is_err()
+        };
+        if fb {
+            run_launch(&sub.baseline, spec, serve_cfg, 1, input_seed, cfg, cache, budget)
+                .map_err(|e| {
+                    format!(
+                        "{}: baseline fallback failed ({e}) — {}",
+                        spec.paper_name,
+                        faults::transient_serve_msg()
+                    )
+                })?;
+        }
+        out.push(fb);
+    }
+    Ok(out)
+}
+
+/// One interpreter launch of `kernel` at dynamic-batch scale `groups`.
+#[allow(clippy::too_many_arguments)]
+fn run_launch(
+    kernel: &Kernel,
+    spec: &KernelSpec,
+    serve_cfg: &ServeConfig,
+    groups: usize,
+    input_seed: u64,
+    cfg: &Config,
+    cache: &Arc<CompileCache>,
+    budget: &Arc<WorkerBudget>,
+) -> Result<(), String> {
+    let dims = serving_dims_scaled(serve_cfg, spec, groups)
+        .map_err(|e| format!("{e:#}"))?;
+    let prog = cache
+        .get_or_compile(kernel, &dims)
+        .map_err(|e| format!("{}: {e}", spec.paper_name))?;
+    let inputs = (spec.gen_inputs)(&dims, input_seed);
+    let mut env = ExecEnv::for_kernel(kernel, &dims);
+    for (name, data) in &inputs {
+        env.set(name, data.clone());
+    }
+    interp::run_compiled_with_opts(
+        &prog,
+        &mut env,
+        RunOpts {
+            grid_workers: cfg.grid_workers,
+            budget: Some(budget),
+            ..RunOpts::default()
+        },
+    )
+    .map_err(|e| format!("{}: {e}", spec.paper_name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_parse_render_round_trips() {
+        for s in ["uniform", "merge:2,rmsnorm:1", "silu:5", "merge:1,rmsnorm:1,silu:1"] {
+            let mix = RequestMix::parse(s).unwrap();
+            assert_eq!(RequestMix::parse(&mix.render()), Ok(mix), "{s}");
+        }
+        assert_eq!(RequestMix::parse("uniform"), Ok(RequestMix::uniform()));
+        assert_eq!(
+            RequestMix::parse("fused_add_rmsnorm:3"),
+            Ok(RequestMix { weights: [0, 3, 0] })
+        );
+        assert!(RequestMix::parse("merge:0,silu:0").is_err(), "all-zero");
+        assert!(RequestMix::parse("bogus:1").is_err());
+        assert!(RequestMix::parse("merge").is_err(), "missing weight");
+        assert!(RequestMix::parse("merge:x").is_err(), "bad weight");
+    }
+
+    #[test]
+    fn mix_pick_is_weighted_and_deterministic() {
+        let mix = RequestMix { weights: [2, 1, 0] };
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = Prng::seed(seed);
+            (0..300).map(|_| mix.pick(&mut rng)).collect()
+        };
+        let a = draw(7);
+        assert_eq!(a, draw(7), "same seed, same stream");
+        assert!(a.iter().all(|c| *c < 2), "zero-weight class never drawn");
+        let merges = a.iter().filter(|c| **c == 0).count();
+        assert!(
+            merges > 150 && merges < 250,
+            "2:1 weighting should show ({merges}/300 merges)"
+        );
+    }
+
+    #[test]
+    fn routing_table_swaps_whole_variants() {
+        let base = (kernels::all_specs()[0].build_baseline)();
+        let table = RoutingTable::new(vec![Variant {
+            epoch: 0,
+            label: "baseline".to_string(),
+            kernel: base.clone(),
+            speedup: 1.0,
+        }]);
+        assert_eq!(table.len(), 1);
+        assert!(!table.is_empty());
+        let v0 = table.read(0);
+        assert_eq!((v0.epoch, v0.label.as_str()), (0, "baseline"));
+        table.publish(
+            0,
+            Variant {
+                epoch: 1,
+                label: "online@g0".to_string(),
+                kernel: base,
+                speedup: 1.4,
+            },
+        );
+        let v1 = table.read(0);
+        assert_eq!((v1.epoch, v1.label.as_str()), (1, "online@g0"));
+        // The old Arc a reader already held is untouched by the swap.
+        assert_eq!(v0.epoch, 0);
+    }
+
+    #[test]
+    fn gate_scales_dedupe_single_client() {
+        assert_eq!(gate_scales(1), vec![1]);
+        assert_eq!(gate_scales(4), vec![1, 4]);
+    }
+}

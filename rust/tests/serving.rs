@@ -1,0 +1,473 @@
+//! Concurrent-serving witness suite: the harness in `pipeline::serve`
+//! must be a pure function of `(seed, clients, fault plan)` — identical
+//! routes and swap ledgers at every worker budget, a per-client stream
+//! that does not change when more clients join (the prefix property),
+//! hot-swaps that only ever publish gate-validated variants at fixed
+//! step indices, and warmup telemetry that never leaks into the timed
+//! ledger. The chaos twin proves all of it still holds with the
+//! serve-site fault plane actually firing.
+
+use std::sync::Arc;
+
+use astra::coordinator::Config;
+use astra::faults::{FaultPlan, FaultSite};
+use astra::interp::{CompileCache, WorkerBudget};
+use astra::kernels;
+use astra::pipeline::{
+    serve_concurrent, RequestMix, RoutingTable, ServeConfig,
+    ServeHarnessOptions, ServeReport, Variant,
+};
+
+/// Small serving shapes so a multi-run witness stays fast; the harness
+/// semantics are shape-independent.
+fn small_serve() -> ServeConfig {
+    ServeConfig {
+        batch: 4,
+        heads: 2,
+        head_dim: 8,
+        inter: 32,
+    }
+}
+
+/// A quiet serving config: no agent fumbles, no planner noise, faults
+/// off unless a test arms them.
+fn serve_cfg(clients: usize) -> Config {
+    Config {
+        bug_rate: 0.0,
+        temperature: 0.0,
+        clients,
+        fault: FaultPlan::disabled(),
+        ..Config::multi_agent()
+    }
+}
+
+fn run(
+    cfg: &Config,
+    opts: &ServeHarnessOptions,
+) -> ServeReport {
+    let cache = Arc::new(CompileCache::new(CompileCache::DEFAULT_CAPACITY));
+    let budget = Arc::new(WorkerBudget::from_config(cfg.worker_budget));
+    serve_concurrent(cfg, &small_serve(), opts, &cache, &budget)
+        .expect("serve_concurrent failed")
+}
+
+/// Everything observable minus wall-clock noise: the decision ledger a
+/// deterministic harness must reproduce byte-for-byte.
+fn ledger(r: &ServeReport) -> (Vec<String>, Vec<String>, usize, u64, u64) {
+    (
+        r.routes
+            .iter()
+            .map(|x| {
+                format!(
+                    "{}/{}/{}/{}/{}",
+                    x.step, x.client, x.class, x.epoch, x.fell_back
+                )
+            })
+            .collect(),
+        r.swaps
+            .iter()
+            .map(|s| {
+                format!(
+                    "{}/{}/{}/{}/{}/{}",
+                    s.step, s.class, s.label, s.published, s.epoch, s.note
+                )
+            })
+            .collect(),
+        r.stats.fallback_steps,
+        r.stats.breaker_trips,
+        r.stats.reprobes,
+    )
+}
+
+#[test]
+fn multi_client_serve_is_deterministic_and_clients_are_a_prefix() {
+    let opts = ServeHarnessOptions {
+        steps: 10,
+        warmup: 2,
+        route_optimized: true,
+    };
+    // Run the same 4-client serve under three schedules (default budget
+    // twice, then a single-worker budget) and with a serve-site fault
+    // plan armed: the decision ledger must be byte-identical.
+    for fault in [
+        FaultPlan::disabled(),
+        FaultPlan {
+            rate: 0.3,
+            seed: 9,
+            sites: FaultSite::Serve.bit(),
+        },
+    ] {
+        let cfg4 = Config {
+            fault,
+            ..serve_cfg(4)
+        };
+        let base = run(&cfg4, &opts);
+        assert_eq!(
+            base.routes.len(),
+            opts.steps * 4,
+            "one route record per (timed step, client)"
+        );
+        let rerun = run(&cfg4, &opts);
+        assert_eq!(ledger(&base), ledger(&rerun), "rerun differs");
+        let serial = run(
+            &Config {
+                worker_budget: 1,
+                ..cfg4.clone()
+            },
+            &opts,
+        );
+        assert_eq!(
+            ledger(&base),
+            ledger(&serial),
+            "worker_budget=1 changed the ledger"
+        );
+
+        // Prefix property: clients 0..2 see the identical stream whether
+        // 2 or 4 clients are being served.
+        let two = run(
+            &Config {
+                fault: cfg4.fault,
+                ..serve_cfg(2)
+            },
+            &opts,
+        );
+        let four_first_two: Vec<_> = base
+            .routes
+            .iter()
+            .filter(|r| r.client < 2)
+            .copied()
+            .collect();
+        assert_eq!(
+            two.routes, four_first_two,
+            "adding clients 2..4 perturbed clients 0..2"
+        );
+    }
+}
+
+#[test]
+fn online_optimizer_hot_swaps_under_load_deterministically() {
+    // Start on baseline routing (live speedup 1.0) with the online
+    // optimizer on: generations = (12-1)/4 = 2 checkpoints at t=4 and
+    // t=8, and a quiet multi-agent search reliably beats 1.0x, so at
+    // least one candidate must clear the publish gate.
+    let cfg = Config {
+        online_optimize: true,
+        swap_interval: 4,
+        ..serve_cfg(4)
+    };
+    let opts = ServeHarnessOptions {
+        steps: 12,
+        warmup: 1,
+        route_optimized: false,
+    };
+    let a = run(&cfg, &opts);
+    assert_eq!(a.swaps.len(), 2, "one swap record per checkpoint");
+    assert_eq!(
+        a.swaps.iter().map(|s| s.step).collect::<Vec<_>>(),
+        vec![4, 8],
+        "checkpoints land at fixed timed-step indices"
+    );
+    assert!(
+        a.published >= 1,
+        "no candidate published over a 1.0x baseline: {:?}",
+        a.swaps
+    );
+    assert_eq!(
+        a.published,
+        a.swaps.iter().filter(|s| s.published).count(),
+        "published counter disagrees with the ledger"
+    );
+    for s in &a.swaps {
+        if s.published {
+            assert_eq!(s.note, "published");
+            assert!(s.speedup > 1.0, "published a non-improvement: {s:?}");
+        }
+    }
+
+    // Per-class epochs are monotone along the route stream, and every
+    // member of one (step, class) group shares one epoch — a hot swap
+    // lands between steps, never inside one.
+    let nclasses = kernels::all_specs().len();
+    let mut last_epoch = vec![0u64; nclasses];
+    for r in &a.routes {
+        assert!(
+            r.epoch >= last_epoch[r.class],
+            "epoch regressed at step {} class {}",
+            r.step,
+            r.class
+        );
+        last_epoch[r.class] = r.epoch;
+    }
+    for t in 0..opts.steps {
+        for class in 0..nclasses {
+            let epochs: Vec<u64> = a
+                .routes
+                .iter()
+                .filter(|r| r.step == t && r.class == class)
+                .map(|r| r.epoch)
+                .collect();
+            assert!(
+                epochs.windows(2).all(|w| w[0] == w[1]),
+                "torn epoch within step {t} class {class}: {epochs:?}"
+            );
+        }
+    }
+    // A published swap is visible in the routes from its step onward.
+    for s in a.swaps.iter().filter(|s| s.published) {
+        let seen = a
+            .routes
+            .iter()
+            .filter(|r| r.class == s.class && r.step >= s.step)
+            .all(|r| r.epoch >= s.epoch);
+        assert!(seen, "publish at step {} not routed after it", s.step);
+    }
+
+    // The whole run — including the background search and both
+    // hot-swaps — replays byte-identically, also at worker_budget 1.
+    let b = run(&cfg, &opts);
+    assert_eq!(ledger(&a), ledger(&b), "online rerun differs");
+    let c = run(
+        &Config {
+            worker_budget: 1,
+            ..cfg
+        },
+        &opts,
+    );
+    assert_eq!(ledger(&a), ledger(&c), "worker_budget=1 changed swaps");
+}
+
+#[test]
+fn routing_table_hot_swap_is_never_torn_under_readers() {
+    // Hammer the epoch-style swap: one publisher walks epochs 1..=64
+    // while four reader threads spin. Every reader must observe a
+    // coherent Variant — the label always matches the epoch it rode in
+    // with — and epochs must never run backwards.
+    let base = (kernels::all_specs()[0].build_baseline)();
+    let table = RoutingTable::new(vec![Variant {
+        epoch: 0,
+        label: "v0".to_string(),
+        kernel: base.clone(),
+        speedup: 1.0,
+    }]);
+    const LAST: u64 = 64;
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                let mut prev = 0u64;
+                loop {
+                    let v = table.read(0);
+                    assert_eq!(
+                        v.label,
+                        format!("v{}", v.epoch),
+                        "torn read: label/epoch mismatch"
+                    );
+                    assert!(v.epoch >= prev, "epoch ran backwards");
+                    prev = v.epoch;
+                    if v.epoch == LAST {
+                        return;
+                    }
+                }
+            });
+        }
+        s.spawn(|| {
+            for e in 1..=LAST {
+                table.publish(
+                    0,
+                    Variant {
+                        epoch: e,
+                        label: format!("v{e}"),
+                        kernel: base.clone(),
+                        speedup: 1.0 + e as f64 / 100.0,
+                    },
+                );
+            }
+        });
+    });
+    let v = table.read(0);
+    assert_eq!((v.epoch, v.label.as_str()), (LAST, "v64"));
+}
+
+#[test]
+fn chaos_twin_faults_fire_fall_back_and_stay_deterministic() {
+    // Scan a small fault-seed range (the plan is deterministic, so the
+    // scan is too) for a witness run where serve-site faults demonstrably
+    // fire: breaker trips, fallback requests, and at least one step
+    // where one client fell back while a sibling in the same step did
+    // not — de-batching isolates faults to the faulted member.
+    let opts = ServeHarnessOptions {
+        steps: 12,
+        warmup: 0,
+        route_optimized: true,
+    };
+    let mut witness = None;
+    for seed in 1..=20u64 {
+        let cfg = Config {
+            fault: FaultPlan {
+                rate: 0.3,
+                seed,
+                sites: FaultSite::Serve.bit(),
+            },
+            ..serve_cfg(4)
+        };
+        let rep = run(&cfg, &opts);
+        let mixed_step = (0..opts.steps).any(|t| {
+            let fb: Vec<bool> = rep
+                .routes
+                .iter()
+                .filter(|r| r.step == t)
+                .map(|r| r.fell_back)
+                .collect();
+            fb.iter().any(|x| *x) && fb.iter().any(|x| !*x)
+        });
+        if rep.stats.breaker_trips > 0 && rep.stats.fallback_steps > 0 && mixed_step
+        {
+            witness = Some((cfg, rep));
+            break;
+        }
+    }
+    let (cfg, rep) = witness.expect(
+        "no fault seed in 1..=20 tripped a breaker with a mixed step; \
+         the serve fault plane is likely dead",
+    );
+    assert_eq!(rep.routes.len(), opts.steps * 4);
+    assert_eq!(
+        rep.stats.fallback_steps,
+        rep.routes.iter().filter(|r| r.fell_back).count(),
+        "fallback ledger disagrees with the route records"
+    );
+    // Byte-identical under re-execution and under a serial budget.
+    let rerun = run(&cfg, &opts);
+    assert_eq!(ledger(&rep), ledger(&rerun), "chaos rerun differs");
+    let serial = run(
+        &Config {
+            worker_budget: 1,
+            ..cfg
+        },
+        &opts,
+    );
+    assert_eq!(ledger(&rep), ledger(&serial), "budget=1 changed chaos run");
+}
+
+#[test]
+fn warmup_snapshot_keeps_breaker_telemetry_additive() {
+    // Fault keys use the *absolute* step index, so a run with warmup w
+    // and steps s shares its fault schedule with a warmup-0 run of
+    // w + s steps. With rate 1.0 every primary attempt faults, making
+    // the schedule dense; the timed ledger of (warmup 3, steps 10) must
+    // then be exactly (warmup 0, steps 13) minus (warmup 0, steps 3) —
+    // the snapshot subtracts warmup counters without resetting the
+    // breaker itself.
+    let cfg = Config {
+        fault: FaultPlan {
+            rate: 1.0,
+            seed: 5,
+            sites: FaultSite::Serve.bit(),
+        },
+        ..serve_cfg(1)
+    };
+    let go = |warmup: usize, steps: usize| {
+        run(
+            &cfg,
+            &ServeHarnessOptions {
+                steps,
+                warmup,
+                route_optimized: true,
+            },
+        )
+    };
+    let full = go(0, 13);
+    let head = go(0, 3);
+    let tail = go(3, 10);
+    assert!(
+        full.stats.breaker_trips > 0,
+        "rate-1.0 serve plan never tripped a breaker"
+    );
+    assert_eq!(
+        tail.stats.breaker_trips,
+        full.stats.breaker_trips - head.stats.breaker_trips,
+        "warmup trips leaked into the timed ledger"
+    );
+    assert_eq!(
+        tail.stats.reprobes,
+        full.stats.reprobes - head.stats.reprobes,
+        "warmup reprobes leaked into the timed ledger"
+    );
+    assert_eq!(
+        tail.stats.fallback_steps,
+        full.stats.fallback_steps - head.stats.fallback_steps,
+        "warmup fallbacks leaked into the timed ledger"
+    );
+    // And the timed tail's route stream matches the full run's tail —
+    // warmup shifts the window, not the schedule.
+    let full_tail: Vec<_> = full
+        .routes
+        .iter()
+        .filter(|r| r.step >= 3)
+        .map(|r| (r.step - 3, r.client, r.class, r.fell_back))
+        .collect();
+    let tail_routes: Vec<_> = tail
+        .routes
+        .iter()
+        .map(|r| (r.step, r.client, r.class, r.fell_back))
+        .collect();
+    assert_eq!(tail_routes, full_tail, "warmup changed the fault schedule");
+}
+
+#[test]
+fn request_mix_and_validation_errors_are_actionable() {
+    // Zero clients, zero steps, zero swap interval: each rejected with a
+    // message naming the knob, not a panic deep in the harness.
+    let opts = ServeHarnessOptions {
+        steps: 2,
+        warmup: 0,
+        route_optimized: false,
+    };
+    let cache = Arc::new(CompileCache::new(8));
+    let budget = Arc::new(WorkerBudget::new(2));
+    let small = small_serve();
+
+    let e = serve_concurrent(
+        &serve_cfg(0),
+        &small,
+        &opts,
+        &cache,
+        &budget,
+    )
+    .unwrap_err();
+    assert!(format!("{e}").contains("client"), "{e}");
+
+    let e = serve_concurrent(
+        &serve_cfg(1),
+        &small,
+        &ServeHarnessOptions { steps: 0, ..opts.clone() },
+        &cache,
+        &budget,
+    )
+    .unwrap_err();
+    assert!(format!("{e}").contains("step"), "{e}");
+
+    let e = serve_concurrent(
+        &Config {
+            online_optimize: true,
+            swap_interval: 0,
+            ..serve_cfg(1)
+        },
+        &small,
+        &opts,
+        &cache,
+        &budget,
+    )
+    .unwrap_err();
+    assert!(format!("{e}").contains("swap interval"), "{e}");
+
+    // A skewed mix routes only the weighted classes.
+    let cfg = Config {
+        request_mix: RequestMix::parse("silu:3").unwrap(),
+        ..serve_cfg(3)
+    };
+    let rep = run(&cfg, &ServeHarnessOptions { steps: 4, ..opts });
+    assert!(
+        rep.routes.iter().all(|r| r.class == 2),
+        "silu-only mix routed another class"
+    );
+}

@@ -1,9 +1,9 @@
 #!/usr/bin/env python3
 """Compare two BENCH_hotpath.json files across CI runs.
 
-Fails (exit 1) when a gated per-kernel metric regresses by more than
---max-regression on any kernel — the ROADMAP "perf trajectory in CI"
-gate. Five metrics are gated:
+Fails (exit 1) when a gated metric regresses by more than
+--max-regression — the ROADMAP "perf trajectory in CI" gate. Per
+kernel, five metrics are gated:
 
 * lower-is-better: the slot-compiled interpreter's per-case time
   (`interpret_ms`), the copy-and-merge block-parallel time
@@ -14,6 +14,12 @@ gate. Five metrics are gated:
 * higher-is-better: speculative-search throughput (`search_cps`,
   candidates validated + profiled per second) — a drop beyond the
   threshold fails.
+
+Schema v8 adds a top-level `serving` block (one entry per routing
+variant of the concurrent harness); per variant, `serve_p50_us`
+(lower-is-better) and `serve_tokens_per_s` (higher-is-better) are
+gated the same way, while `serve_p99_us` (tail noise), the fallback
+count and the breaker-trip count stay informational.
 
 The zero-copy grid numbers (`grid_zerocopy_ms` / `grid_zerocopy_speedup`,
 schema v4), the adaptive-scheduler numbers (`adaptive_optimize_ms`,
@@ -33,9 +39,9 @@ runs.
 Older-schema files (v1 without `search_cps`/`beam_optimize_ms`, v2
 without the grid and cache fields, v3 without the zero-copy fields, v4
 without the adaptive fields, v5 without the chaos fields, v6 without
-the pipelined fields) compare cleanly: absent metrics are simply
-skipped, so the first run after a schema bump never fails on the
-artifact from before the bump.
+the pipelined fields, v7 without the serving block) compare cleanly:
+absent metrics are simply skipped, so the first run after a schema
+bump never fails on the artifact from before the bump.
 
 Usage:
     python3 compare_bench.py <old.json> <new.json> [--max-regression 0.15]
@@ -89,6 +95,54 @@ INFORMATIONAL = [
     ("aborted_lineages", "spec_aborted", "{:>10.0f}"),
 ]
 
+# v8 schema: concurrent-serving envelope, gated per routing variant.
+SERVING_GATED_LOWER = ["serve_p50_us"]
+SERVING_GATED_HIGHER = ["serve_tokens_per_s"]
+SERVING_INFORMATIONAL = [
+    # p99 is a max-of-30-steps tail on a shared CI runner — trajectory
+    # visibility without flaking; fallback/trip counts are deterministic
+    # and test-pinned, reported so a drift is visible in the log.
+    ("serve_p99_us", "serve_p99_us", "{:>10.3f}"),
+    ("serve_fallback_steps", "serve_fallbk", "{:>10.0f}"),
+    ("serve_breaker_trips", "serve_trips", "{:>10.0f}"),
+]
+
+
+def compare_gated(row_label, prev, cur, lower, higher, max_reg, failures):
+    """Print gated rows for one entity; append (label, metric, reg) on fail."""
+    for metric in lower + higher:
+        if not (prev.get(metric, 0) > 0 and metric in cur):
+            continue  # absent in the older schema: skip cleanly
+        base, now = prev[metric], cur[metric]
+        delta = (now - base) / base
+        # Regression is an increase for costs, a drop for rates.
+        regression = delta if metric in lower else -delta
+        bad = regression > max_reg
+        print(
+            f"{row_label:<24} {metric:<14} {base:>10.4f} -> {now:>10.4f}"
+            f"  ({delta:+7.1%}) {'REGRESSION' if bad else 'ok'}"
+        )
+        if bad:
+            failures.append((row_label, metric, regression))
+
+
+def compare_informational(row_label, prev, cur, metrics):
+    for metric, label, fmt in metrics:
+        # Presence, not truthiness: count metrics (adaptive_k_rounds,
+        # serve_fallback_steps, ...) are legitimately 0 in a baseline.
+        if metric in prev and metric in cur:
+            base, now = prev[metric], cur[metric]
+            rel = f"  ({(now - base) / base:+7.1%})" if base > 0 else ""
+            print(
+                f"{row_label:<24} {label:<14} {fmt.format(base)} -> "
+                f"{fmt.format(now)}{rel} info"
+            )
+        elif metric in cur:
+            print(
+                f"{row_label:<24} {label:<14} {'':>10} -> "
+                f"{fmt.format(cur[metric])}  (new metric) info"
+            )
+
 
 def main() -> int:
     parser = argparse.ArgumentParser(description=__doc__)
@@ -117,36 +171,11 @@ def main() -> int:
             print(f"{name:<24} new kernel; no baseline")
             continue
 
-        for metric in GATED_LOWER + GATED_HIGHER:
-            if not (prev.get(metric, 0) > 0 and metric in cur):
-                continue  # absent in the older schema: skip cleanly
-            base, now = prev[metric], cur[metric]
-            delta = (now - base) / base
-            # Regression is an increase for costs, a drop for rates.
-            regression = delta if metric in GATED_LOWER else -delta
-            bad = regression > args.max_regression
-            print(
-                f"{name:<24} {metric:<14} {base:>10.4f} -> {now:>10.4f}"
-                f"  ({delta:+7.1%}) {'REGRESSION' if bad else 'ok'}"
-            )
-            if bad:
-                failures.append((name, metric, regression))
-
-        for metric, label, fmt in INFORMATIONAL:
-            # Presence, not truthiness: count metrics (adaptive_k_rounds,
-            # cancelled_candidates) are legitimately 0 in a baseline.
-            if metric in prev and metric in cur:
-                base, now = prev[metric], cur[metric]
-                rel = f"  ({(now - base) / base:+7.1%})" if base > 0 else ""
-                print(
-                    f"{name:<24} {label:<14} {fmt.format(base)} -> "
-                    f"{fmt.format(now)}{rel} info"
-                )
-            elif metric in cur:
-                print(
-                    f"{name:<24} {label:<14} {'':>10} -> "
-                    f"{fmt.format(cur[metric])}  (new metric) info"
-                )
+        compare_gated(
+            name, prev, cur, GATED_LOWER, GATED_HIGHER,
+            args.max_regression, failures,
+        )
+        compare_informational(name, prev, cur, INFORMATIONAL)
 
         # v5 schema: chosen-K histogram, informational (a dict, so it
         # stays out of the numeric comparison loops).
@@ -157,6 +186,21 @@ def main() -> int:
                 for k, v in sorted(hist.items(), key=lambda kv: int(kv[0]))
             )
             print(f"{name:<24} {'k_histogram':<14} {rendered} info")
+
+    # v8 schema: concurrent-serving envelope, gated per routing variant.
+    # A pre-v8 baseline has no "serving" block and skips cleanly.
+    old_serving = old.get("serving", {})
+    for variant, cur in sorted(new.get("serving", {}).items()):
+        label = f"serving/{variant}"
+        prev = old_serving.get(variant)
+        if not prev:
+            print(f"{label:<24} new serving variant; no baseline")
+            continue
+        compare_gated(
+            label, prev, cur, SERVING_GATED_LOWER, SERVING_GATED_HIGHER,
+            args.max_regression, failures,
+        )
+        compare_informational(label, prev, cur, SERVING_INFORMATIONAL)
 
     # v3 schema: cross-run shared-cache counters, informational.
     cross = new.get("cross_run_cache")

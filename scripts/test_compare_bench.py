@@ -8,13 +8,16 @@ Run directly (no pytest in the offline image):
 Covers: regression above threshold fails for every gated metric —
 interpret_ms, grid_parallel_ms (schema v4), the search-throughput pair
 since schema v5 (beam_optimize_ms lower-is-better, search_cps
-higher-is-better) and, since schema v7, pipelined_optimize_ms — below
-passes, missing previous-run file skips cleanly, older-schema
-(v1/v2/v3/v4/v5/v6) baselines compare without crashing against v7
-output, and the informational fields (grid_zerocopy_ms,
+higher-is-better), pipelined_optimize_ms since schema v7, and the
+per-variant serving pair since schema v8 (serve_p50_us
+lower-is-better, serve_tokens_per_s higher-is-better) — below passes,
+missing previous-run file skips cleanly, older-schema
+(v1/v2/v3/v4/v5/v6/v7) baselines compare without crashing against
+newer output, and the informational fields (grid_zerocopy_ms,
 sliced_launches, the v5 adaptive-scheduler fields incl. the
-k_histogram dict, the v6 chaos-supervision fields and the v7
-speculation-ledger fields) are reported without gating.
+k_histogram dict, the v6 chaos-supervision fields, the v7
+speculation-ledger fields and the v8 serving tail/fallback/trip
+fields) are reported without gating.
 """
 
 import json
@@ -40,8 +43,31 @@ def kernel_row(interpret_ms, **extra):
     return row
 
 
-def bench_json(interpret_ms, schema="astra-hotpath-v7", cross=True,
-               sliced=None, **extra):
+def serving_row(p50_us=500.0, tokens_per_s=8000.0, p99_us=900.0,
+                fallback_steps=0, breaker_trips=0):
+    return {
+        "serve_p50_us": p50_us,
+        "serve_p99_us": p99_us,
+        "serve_tokens_per_s": tokens_per_s,
+        "serve_fallback_steps": fallback_steps,
+        "serve_breaker_trips": breaker_trips,
+    }
+
+
+def serving_block(**overrides):
+    """A v8 serving block: baseline + optimized rows, keyword-tweakable
+    per variant (e.g. optimized=serving_row(p50_us=300.0))."""
+    block = {
+        "baseline": serving_row(),
+        "optimized": serving_row(p50_us=350.0, tokens_per_s=11000.0,
+                                 p99_us=600.0),
+    }
+    block.update(overrides)
+    return block
+
+
+def bench_json(interpret_ms, schema="astra-hotpath-v8", cross=True,
+               sliced=None, serving=None, **extra):
     doc = {
         "schema": schema,
         "kernels": {
@@ -58,6 +84,8 @@ def bench_json(interpret_ms, schema="astra-hotpath-v7", cross=True,
         }
     if sliced is not None:
         doc["sliced_launches"] = sliced
+    if serving is not None:
+        doc["serving"] = serving
     return doc
 
 
@@ -399,6 +427,82 @@ class CompareBenchTest(unittest.TestCase):
                        beam_optimize_ms=300.0),
         )
         self.assertEqual(self.run_main(old, dropped, 0.15), 1)
+
+    def test_serve_p50_regression_fails_the_gate(self):
+        # Schema v8 gates the serving envelope per routing variant: a
+        # p50 latency blow-up on either variant is a real regression.
+        old = self.write("old.json", bench_json(1.0, serving=serving_block()))
+        new = self.write(
+            "new.json",
+            bench_json(1.0, serving=serving_block(
+                optimized=serving_row(p50_us=700.0, tokens_per_s=11000.0))),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 1)
+
+    def test_serve_tokens_per_s_drop_fails_the_gate(self):
+        # serve_tokens_per_s is higher-is-better: a >15% throughput drop
+        # fails even though the number went *down*.
+        old = self.write("old.json", bench_json(1.0, serving=serving_block()))
+        new = self.write(
+            "new.json",
+            bench_json(1.0, serving=serving_block(
+                baseline=serving_row(tokens_per_s=5000.0))),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 1)
+
+    def test_serving_within_tolerance_passes(self):
+        old = self.write("old.json", bench_json(1.0, serving=serving_block()))
+        new = self.write(
+            "new.json",
+            bench_json(1.0, serving=serving_block(
+                # +10% p50, -10% throughput: inside the 15% envelope.
+                baseline=serving_row(p50_us=550.0, tokens_per_s=7200.0))),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_serving_tail_and_fault_fields_are_informational_only(self):
+        # p99, fallback and trip counts must neither gate nor crash —
+        # the tail is one step out of 30 on a shared runner, and the
+        # fault counters are deterministic and pinned by Rust tests.
+        old = self.write("old.json", bench_json(1.0, serving=serving_block()))
+        new = self.write(
+            "new.json",
+            bench_json(1.0, serving=serving_block(
+                baseline=serving_row(p99_us=9000.0, fallback_steps=40,
+                                     breaker_trips=12))),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_older_v7_schema_baseline_is_graceful_for_v8(self):
+        # v7: no serving block — the first v8 run must compare cleanly
+        # and still gate the per-kernel pair against the v7 baseline.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, schema="astra-hotpath-v7", search_cps=100.0,
+                       beam_optimize_ms=300.0),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0, search_cps=101.0, beam_optimize_ms=299.0,
+                       serving=serving_block()),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+        dropped = self.write(
+            "dropped.json",
+            bench_json(1.0, search_cps=60.0, beam_optimize_ms=300.0,
+                       serving=serving_block()),
+        )
+        self.assertEqual(self.run_main(old, dropped, 0.15), 1)
+
+    def test_new_serving_variant_without_baseline_passes(self):
+        # A baseline whose serving block lacks a variant (or an empty
+        # one) skips that variant cleanly.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, serving={"baseline": serving_row()}),
+        )
+        new = self.write("new.json", bench_json(1.0, serving=serving_block()))
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
 
     def test_older_v3_schema_baseline_is_graceful(self):
         # v3: grid_parallel fields present, zero-copy fields and
