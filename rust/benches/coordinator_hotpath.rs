@@ -98,6 +98,17 @@ struct KernelRow {
     speculation_hit_rate: f64,
     speculated_lineages: u64,
     aborted_lineages: u64,
+    /// Store-backed run against an *empty* artifact store, store wiped
+    /// before every timed call (schema v9) — the persistence-overhead
+    /// baseline the warm number is compared to.
+    cold_optimize_ms: f64,
+    /// The same config over a store populated by a prior run: recorded
+    /// verdicts replay instead of re-evaluating, the winning trajectory
+    /// warm-starts. `compare_bench.py` gates this against cold.
+    warm_optimize_ms: f64,
+    /// Store hits from the (deterministic) warm run — the witness that
+    /// the warm number actually read the store.
+    warm_store_hits: u64,
 }
 
 /// Per-variant medians from the concurrent serving harness (schema v8):
@@ -410,6 +421,47 @@ fn main() {
         );
     }
 
+    // Warm-start via the artifact store (schema v9): the greedy preset
+    // with `--store`, cold (store wiped before every timed call, so the
+    // number includes journaling + record writes) vs warm (store
+    // populated once; validation verdicts replay from disk and the
+    // winning trajectory warm-starts). Both runs ship byte-identical
+    // kernels (pinned in tests/store_recovery.rs); the delta is what
+    // persistence buys on a re-run.
+    println!();
+    for (spec, row) in kernels::all_specs().iter().zip(&mut rows) {
+        let dir = std::env::temp_dir().join(format!(
+            "astra-bench-store-{}-{}",
+            std::process::id(),
+            spec.paper_name
+        ));
+        let store_cfg = Config {
+            store_dir: Some(dir.to_string_lossy().into_owned()),
+            ..cfg.clone()
+        };
+        let c = bench(1, 5, || {
+            let _ = std::fs::remove_dir_all(&dir);
+            optimize(spec, &store_cfg)
+        });
+        // Populate once, then measure re-runs over the warm store.
+        let _ = std::fs::remove_dir_all(&dir);
+        let populate = optimize(spec, &store_cfg);
+        assert!(populate.final_correct, "{}: populate run", spec.paper_name);
+        row.warm_store_hits = optimize(spec, &store_cfg).store_hits;
+        let w = bench(1, 5, || optimize(spec, &store_cfg));
+        row.cold_optimize_ms = c.median_ms();
+        row.warm_optimize_ms = w.median_ms();
+        println!(
+            "store-optimize {:<18} cold {:>8.1} ms/run   warm {:>8.1} ms/run \
+             ({} store hits)",
+            spec.paper_name,
+            row.cold_optimize_ms,
+            row.warm_optimize_ms,
+            row.warm_store_hits
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // Concurrent serving harness (schema v8): 4 client streams over the
     // dynamic batcher at a mid-size serving shape, faults and the online
     // optimizer off — the steady-state latency envelope per routing
@@ -514,7 +566,7 @@ fn render_json(
     sliced_launches: u64,
 ) -> String {
     let mut out = String::new();
-    out.push_str("{\n  \"schema\": \"astra-hotpath-v8\",\n  \"kernels\": {\n");
+    out.push_str("{\n  \"schema\": \"astra-hotpath-v9\",\n  \"kernels\": {\n");
     for (i, r) in rows.iter().enumerate() {
         let k_hist = r
             .k_hist
@@ -550,7 +602,10 @@ fn render_json(
              \"pipelined_stall_saved_ms\": {:.3},\n      \
              \"speculation_hit_rate\": {:.3},\n      \
              \"speculated_lineages\": {},\n      \
-             \"aborted_lineages\": {}\n    }}{}\n",
+             \"aborted_lineages\": {},\n      \
+             \"cold_optimize_ms\": {:.3},\n      \
+             \"warm_optimize_ms\": {:.3},\n      \
+             \"warm_store_hits\": {}\n    }}{}\n",
             r.name,
             r.simulate_us,
             r.interpret_ref_ms,
@@ -581,6 +636,9 @@ fn render_json(
             r.speculation_hit_rate,
             r.speculated_lineages,
             r.aborted_lineages,
+            r.cold_optimize_ms,
+            r.warm_optimize_ms,
+            r.warm_store_hits,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }

@@ -175,7 +175,7 @@ pub struct TestSuite {
 }
 
 /// Validation outcome for one candidate kernel.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TestReport {
     pub pass: bool,
     pub max_rel_err: f32,

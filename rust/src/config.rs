@@ -60,6 +60,12 @@
 //! online_optimize = true
 //! swap_interval = 8
 //!
+//! # crash-consistent artifact store: warm-start from recorded
+//! # trajectories/verdicts, and resume a killed run from its journal
+//! # ("" = no store; resume is a no-op without one)
+//! store = "astra-store"
+//! resume = false
+//!
 //! # simulator overrides
 //! launch_overhead_us = 7.0
 //! dram_bw = 3.0e12
@@ -171,6 +177,15 @@ pub fn apply(
             cfg.request_mix =
                 crate::pipeline::RequestMix::parse(value).map_err(|e| anyhow!(e))?;
         }
+        // Empty is meaningful: no artifact store (the default).
+        "store" => {
+            cfg.store_dir = if value.is_empty() {
+                None
+            } else {
+                Some(value.to_string())
+            };
+        }
+        "resume" => cfg.resume = parse_bool(value)?,
         "online_optimize" => cfg.online_optimize = parse_bool(value)?,
         "swap_interval" => {
             cfg.swap_interval = value.parse()?;
@@ -239,6 +254,8 @@ pub fn render(cfg: &Config) -> String {
          request_mix = \"{}\"\n\
          online_optimize = {}\n\
          swap_interval = {}\n\
+         store = \"{}\"\n\
+         resume = {}\n\
          launch_overhead_us = {}\n\
          dram_bw = {}\n\
          sms = {}\n\
@@ -271,6 +288,8 @@ pub fn render(cfg: &Config) -> String {
         cfg.request_mix.render(),
         cfg.online_optimize,
         cfg.swap_interval,
+        cfg.store_dir.as_deref().unwrap_or(""),
+        cfg.resume,
         m.launch_overhead_us,
         m.dram_bw,
         m.sms,
@@ -442,6 +461,19 @@ mod tests {
     }
 
     #[test]
+    fn parses_store_keys_with_storeless_defaults() {
+        let cfg = parse("store = \"run-store\"\nresume = true\n").unwrap();
+        assert_eq!(cfg.store_dir.as_deref(), Some("run-store"));
+        assert!(cfg.resume);
+        let cfg = parse("store = \"\"\n").unwrap();
+        assert_eq!(cfg.store_dir, None, "empty = no store");
+        let cfg = parse("").unwrap();
+        assert_eq!(cfg.store_dir, None, "default is storeless");
+        assert!(!cfg.resume);
+        assert!(parse("resume = maybe\n").is_err());
+    }
+
+    #[test]
     fn render_parse_round_trips_every_key() {
         let mut custom = Config::multi_agent_adaptive();
         custom.rounds = 7;
@@ -469,6 +501,8 @@ mod tests {
             crate::pipeline::RequestMix::parse("merge:2,rmsnorm:1").unwrap();
         custom.online_optimize = true;
         custom.swap_interval = 5;
+        custom.store_dir = Some("/tmp/astra-store".to_string());
+        custom.resume = true;
         custom.model.launch_overhead_us = 5.5;
         for cfg in [
             Config::multi_agent(),
@@ -512,6 +546,8 @@ mod tests {
             assert_eq!(back.request_mix, cfg.request_mix);
             assert_eq!(back.online_optimize, cfg.online_optimize);
             assert_eq!(back.swap_interval, cfg.swap_interval);
+            assert_eq!(back.store_dir, cfg.store_dir);
+            assert_eq!(back.resume, cfg.resume);
             assert_eq!(
                 back.model.launch_overhead_us.to_bits(),
                 cfg.model.launch_overhead_us.to_bits()

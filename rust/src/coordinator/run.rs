@@ -142,6 +142,23 @@ pub struct Config {
     /// concurrent harness (must be `>= 1`; checkpoints block on the
     /// optimizer so swap epochs land at deterministic step indices).
     pub swap_interval: usize,
+    /// Crash-consistent on-disk artifact store directory (`--store
+    /// DIR`; `None` disables persistence — bit-for-bit today's engine).
+    /// With a store, `optimize` journals every settled round, skips
+    /// already-validated candidates, and warm-starts from the best
+    /// recorded trajectory; a fresh (or corrupt) store never changes
+    /// the shipped kernel, only timings and the `store_*` ledger
+    /// counters (pinned in `tests/store_recovery.rs`).
+    pub store_dir: Option<String>,
+    /// Reconstruct a killed store-backed run from its journal and
+    /// continue it byte-identically to an uninterrupted run (requires
+    /// `store_dir`; no journal for this run key = plain cold start).
+    pub resume: bool,
+    /// Crash-drill hook (`ASTRA_KILL_AFTER_ROUND`, CI only): abort the
+    /// search right after journaling this round, `0` = off.
+    /// Deliberately *not* part of the rendered config, so the killed
+    /// run and its resume twin share one journal run key.
+    pub kill_after_round: usize,
     pub model: GpuModel,
 }
 
@@ -170,6 +187,9 @@ impl Config {
             request_mix: crate::pipeline::RequestMix::uniform(),
             online_optimize: false,
             swap_interval: 8,
+            store_dir: None,
+            resume: false,
+            kill_after_round: 0,
             model: GpuModel::h100(),
         }
     }
@@ -325,6 +345,18 @@ pub struct Outcome {
     /// differed from the prediction — aborted and re-executed
     /// canonically.
     pub aborted_lineages: u64,
+    /// Artifact-store records found valid on lookup (0 without
+    /// [`Config::store_dir`]).
+    pub store_hits: u64,
+    /// Store lookups that found no usable record (absent or corrupt).
+    pub store_misses: u64,
+    /// Checksum-corrupt store entries quarantined to `*.corrupt`
+    /// sidecars and recomputed cold. Corruption shifts these counters
+    /// (and timings), never the shipped kernel.
+    pub store_corrupt_entries: u64,
+    /// Journaled rounds replayed from the store instead of re-executed
+    /// (0 outside [`Config::resume`]).
+    pub resumed_rounds: u64,
 }
 
 /// Accept a candidate if its measured (internal) geomean does not regress
@@ -622,6 +654,7 @@ pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
             fault_stats,
             quarantined_lineages,
             speculation: search::SpecLedger::default(),
+            store: search::StoreLedger::default(),
         },
     )
 }

@@ -63,6 +63,8 @@ use crate::faults::{self, FaultStats};
 use crate::interp::budget::{panic_message, TaskQueue};
 use crate::interp::{CompileCache, WorkerBudget};
 use crate::kernels::KernelSpec;
+use crate::store::EvalSlot;
+use crate::transforms::Move;
 
 use super::run::{
     AgentMode, Config, Outcome, RoundRecord, ACCEPT_THRESHOLD,
@@ -195,6 +197,11 @@ fn run_task(ctx: &PipeCtx<'_>, t: TaskRef) {
     let probes = Mutex::new(Vec::new());
     let use_cache = !t.speculative && cfg.round_budget == 0;
     let cancellable = t.speculative || cfg.round_budget > 0;
+    // Speculative runs need their probe ledger for commit replay;
+    // store-backed runs need it for every journaled evaluation, so a
+    // killed run's barriered resume can replay exact cache traffic.
+    let record_probes =
+        t.speculative || (cfg.store_dir.is_some() && cfg.round_budget == 0);
     let result: SlotResult = std::panic::catch_unwind(AssertUnwindSafe(|| {
         search::evaluate_supervised(
             ctx.env.spec,
@@ -206,7 +213,7 @@ fn run_task(ctx: &PipeCtx<'_>, t: TaskRef) {
             Some(ctx.env.base_profile),
             use_cache.then_some(ctx.cache),
             cancellable.then(|| (&t.tokens[t.slot], &*t.lineage)),
-            t.speculative.then_some(&probes),
+            record_probes.then_some(&probes),
             key,
         )
     }))
@@ -298,6 +305,11 @@ fn predict(cfg: &Config, layer: &Layer) -> Option<Pred> {
                     tests: p.tests.clone(),
                     profile: p.profile.clone(),
                     speedup,
+                    history: {
+                        let mut h = layer.beam[si].history.clone();
+                        h.push(cand.applied);
+                        h
+                    },
                     blocked: Vec::new(),
                     consec_failures: 0,
                 },
@@ -562,14 +574,31 @@ pub(crate) fn optimize_pipelined(
     let mut fault_stats = FaultStats::default();
     let mut quarantined_lineages = 0u64;
     let mut ledger = SpecLedger::default();
+    let mut best_history: Vec<Move> = Vec::new();
     let mut beam: Vec<BeamState> = vec![BeamState {
         kernel: baseline.clone(),
         tests: base_tests,
         profile: base_profile.clone(),
         speedup: 1.0,
+        history: Vec::new(),
         blocked: Vec::new(),
         consec_failures: 0,
     }];
+
+    // ---- artifact store (ROADMAP "crash-consistent store") -----------
+    // The pipelined engine journals checkpoints and persists compile
+    // metadata + the winning trajectory, but never *replays* a journal:
+    // `--resume` dispatches to the barriered engine (byte-identical),
+    // so this engine always starts its journal fresh. No eval-skip
+    // here either — recorded-verdict reuse stays a barriered-only
+    // optimization.
+    let store = search::open_store(cfg);
+    let runkey = search::run_key(spec, cfg);
+    if let Some(s) = &store {
+        cache.attach_store(Arc::clone(s));
+        s.reset_journal(runkey);
+    }
+    let mut killed = false;
 
     let shared = Shared {
         sched: Mutex::new(Sched {
@@ -736,6 +765,7 @@ pub(crate) fn optimize_pipelined(
                 records: &mut records,
                 best: &mut best,
                 best_speedup: &mut best_speedup,
+                best_history: &mut best_history,
                 candidates_evaluated: &mut candidates_evaluated,
                 cancelled_candidates: &mut cancelled_candidates,
                 fault_stats: &mut fault_stats,
@@ -752,6 +782,39 @@ pub(crate) fn optimize_pipelined(
                 &mut tally,
             );
             beam = next_beam;
+
+            // ---- journal checkpoint ----------------------------------
+            // The settled round (normalized by `settle_round`: `Some`
+            // means canonically kept) lands on disk with its per-slot
+            // probe ledger before the next round is adopted; a killed
+            // pipelined run resumes on the barriered engine, replaying
+            // these frames byte-identically. The hidden kill knob
+            // crashes right after the checkpoint.
+            if let Some(s) = &store {
+                let slots: Vec<Option<EvalSlot>> = evals
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| {
+                        e.as_ref().map(|p| EvalSlot {
+                            tests: p.tests.clone(),
+                            stats: p.stats,
+                            probe_keys: probes
+                                .get(i)
+                                .cloned()
+                                .unwrap_or_default(),
+                        })
+                    })
+                    .collect();
+                s.append_round(runkey, round, &slots);
+                if cfg.kill_after_round > 0 && round == cfg.kill_after_round {
+                    killed = true;
+                    let mut g =
+                        shared.sched.lock().expect("scheduler poisoned");
+                    abort_chain(&mut g);
+                    drop(g);
+                    break;
+                }
+            }
 
             // ---- judge the immediate-next speculation ----------------
             let mut g = shared.sched.lock().expect("scheduler poisoned");
@@ -787,6 +850,29 @@ pub(crate) fn optimize_pipelined(
         drop(lease);
     });
 
+    // ---- warm start: replay the stored best trajectory (shared with
+    // the barriered engine; skipped when the kill knob crashed us).
+    if let Some(s) = &store {
+        if !killed {
+            search::warm_finish(
+                s,
+                spec,
+                cfg,
+                &tester,
+                &profiler,
+                cache,
+                &suite,
+                &baseline,
+                &base_profile,
+                &mut records,
+                &mut best,
+                &mut best_speedup,
+                &mut best_history,
+            );
+        }
+    }
+    let store_ledger = search::harvest_store(&store, 0);
+
     search::finish_outcome(
         spec,
         cfg,
@@ -804,6 +890,7 @@ pub(crate) fn optimize_pipelined(
             fault_stats,
             quarantined_lineages,
             speculation: ledger,
+            store: store_ledger,
         },
     )
 }

@@ -48,10 +48,11 @@ use crate::faults::{self, FaultKind, FaultPlan, FaultSite, FaultStats};
 use crate::interp::budget::{
     join3, panic_message, run_indexed_catching,
 };
-use crate::interp::{CompileCache, WorkerBudget};
+use crate::interp::{kernel_hash, CompileCache, WorkerBudget};
 use crate::ir::{printer, Kernel};
 use crate::kernels::KernelSpec;
 use crate::sim;
+use crate::store::{EvalSlot, Store};
 use crate::transforms::Move;
 use crate::util::Prng;
 
@@ -68,6 +69,9 @@ pub(crate) struct BeamState {
     pub(crate) profile: ProfileReport,
     /// Internal geomean speedup vs the round-0 baseline.
     pub(crate) speedup: f64,
+    /// Moves applied from the baseline to reach this kernel, in order —
+    /// the trajectory the artifact store persists for warm starts.
+    pub(crate) history: Vec<Move>,
     pub(crate) blocked: Vec<Move>,
     /// Consecutive rounds in which every kept candidate of this lineage
     /// failed validation (reset by any passing candidate). At
@@ -125,6 +129,19 @@ pub(crate) struct SpecLedger {
     pub(crate) aborted: u64,
 }
 
+/// Artifact-store ledger carried into the [`Outcome`] (all zero without
+/// `--store`). The counters reflect disk state and I/O timing — they
+/// are *excluded* from the byte-identity pins, which is exactly the
+/// contract: store faults and corruption may shift these numbers, never
+/// the shipped kernel or the search records.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct StoreLedger {
+    pub(crate) hits: u64,
+    pub(crate) misses: u64,
+    pub(crate) corrupt: u64,
+    pub(crate) resumed_rounds: u64,
+}
+
 /// A next-beam contender: an accepted candidate (fresh) or a surviving
 /// parent.
 struct PoolEntry {
@@ -155,6 +172,8 @@ pub(crate) struct SearchTelemetry {
     /// Cross-round speculation ledger (all zero for the barriered and
     /// greedy engines).
     pub(crate) speculation: SpecLedger,
+    /// Artifact-store ledger (all zero without `--store`).
+    pub(crate) store: StoreLedger,
 }
 
 /// Size one beam state's speculation width from the planner's priority
@@ -571,6 +590,190 @@ pub(crate) fn finish_outcome(
         speculated_lineages: telemetry.speculation.speculated,
         committed_lineages: telemetry.speculation.committed,
         aborted_lineages: telemetry.speculation.aborted,
+        store_hits: telemetry.store.hits,
+        store_misses: telemetry.store.misses,
+        store_corrupt_entries: telemetry.store.corrupt,
+        resumed_rounds: telemetry.store.resumed_rounds,
+    }
+}
+
+/// Open the run's artifact store from [`Config::store_dir`] with the
+/// run's fault plan armed on every write. Best-effort: an unopenable
+/// directory degrades to no store rather than failing the run.
+pub(crate) fn open_store(cfg: &Config) -> Option<Arc<Store>> {
+    let dir = cfg.store_dir.as_deref()?;
+    match Store::open(std::path::Path::new(dir)) {
+        Ok(s) => Some(Arc::new(s.with_faults(cfg.fault))),
+        Err(_) => None,
+    }
+}
+
+/// Journal identity of one `(kernel, search-config)` run: every knob
+/// that shapes the search *trajectory*, and none that only schedules it
+/// (grid workers, budgets, pipelining — byte-identical by the
+/// differential walls) or happens after it (serving knobs). A killed
+/// run and its `--resume` twin therefore agree on the key, as do
+/// barriered and pipelined runs of the same search. `rounds` is
+/// excluded on purpose: resuming with more rounds extends the run.
+pub(crate) fn run_key(spec: &KernelSpec, cfg: &Config) -> u64 {
+    crate::store::record_key(&[
+        "run",
+        spec.paper_name,
+        &format!("{:?}", cfg.mode),
+        &cfg.seed.to_string(),
+        &cfg.bug_rate.to_bits().to_string(),
+        &cfg.temperature.to_bits().to_string(),
+        &cfg.beam_width.to_string(),
+        &cfg.candidates_per_round.to_string(),
+        &cfg.adaptive_candidates.to_string(),
+        &cfg.adaptive_min_candidates.to_string(),
+        &cfg.adaptive_gap_threshold.to_bits().to_string(),
+        &cfg.round_budget.to_string(),
+        &cfg.fault.rate.to_bits().to_string(),
+        &cfg.fault.seed.to_string(),
+        &cfg.fault.sites.to_string(),
+        &cfg.watchdog_steps.to_string(),
+        &cfg.quarantine_after.to_string(),
+    ])
+}
+
+/// Store identity of one candidate validation: kernel structure, suite
+/// identity (mode → test quality, seed) and the watchdog cap —
+/// everything a verdict can depend on once live fault injection is
+/// excluded (the eval-skip gate guarantees that).
+fn eval_record_key(spec: &KernelSpec, cfg: &Config, khash: u64) -> u64 {
+    crate::store::record_key(&[
+        "eval",
+        spec.paper_name,
+        &format!("{khash:016x}"),
+        &format!("{:?}", cfg.mode),
+        &cfg.seed.to_string(),
+        &cfg.watchdog_steps.to_string(),
+    ])
+}
+
+/// Trajectory records key on the baseline's structural hash alone, so
+/// any run of a structurally identical kernel — different config, more
+/// rounds, another process — shares one best-known move sequence, and
+/// a baseline change invalidates it automatically.
+fn trajectory_key(baseline_hash: u64) -> u64 {
+    crate::store::record_key(&["traj", &format!("{baseline_hash:016x}")])
+}
+
+/// Warm-start finish, shared by both engines: replay the store's best
+/// recorded trajectory for this baseline and adopt the result only if
+/// it is a *different* move sequence than the search found, applies
+/// cleanly, validates, and measures strictly better — so a same-config
+/// rerun (whose store already holds this run's own best history) is
+/// byte-identical to a store-free run, while a warm start from a
+/// richer earlier run lands its kernel as one macro-move. Finally
+/// persists the winning trajectory (keep-best on the store side).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn warm_finish(
+    s: &Store,
+    spec: &KernelSpec,
+    cfg: &Config,
+    tester: &TestingAgent,
+    profiler: &ProfilingAgent,
+    cache: &CompileCache,
+    suite: &TestSuite,
+    baseline: &Kernel,
+    base_profile: &ProfileReport,
+    records: &mut Vec<RoundRecord>,
+    best: &mut Kernel,
+    best_speedup: &mut f64,
+    best_history: &mut Vec<Move>,
+) {
+    let tkey = trajectory_key(kernel_hash(baseline));
+    if let Some((moves, _stored)) = s.load_trajectory(tkey) {
+        if moves != *best_history && !moves.is_empty() {
+            let mut kernel = baseline.clone();
+            let mut applies = true;
+            for &m in &moves {
+                match crate::transforms::apply(&kernel, m) {
+                    Ok(k) => kernel = k,
+                    Err(_) => {
+                        applies = false;
+                        break;
+                    }
+                }
+            }
+            if applies {
+                let tests = tester.validate_with(spec, &kernel, suite, Some(cache));
+                let profile = profiler.profile(&kernel, suite, Some(base_profile));
+                let speedup = profile.speedup_vs_baseline;
+                if tests.pass && speedup > *best_speedup {
+                    let names: Vec<String> =
+                        moves.iter().map(|m| m.name()).collect();
+                    records.push(RoundRecord {
+                        round: cfg.rounds + 1,
+                        beam_state: 0,
+                        candidate: 0,
+                        applied: None,
+                        rationale: String::new(),
+                        pass: true,
+                        speedup_internal: speedup,
+                        mean_us_internal: profile.mean_us,
+                        accepted: true,
+                        loc: printer::loc(&kernel),
+                        note: format!(
+                            "warm-start: stored trajectory [{}] replayed at {:.2}x (internal)",
+                            names.join(", "),
+                            speedup
+                        ),
+                    });
+                    *best = kernel;
+                    *best_speedup = speedup;
+                    *best_history = moves;
+                }
+            }
+        }
+    }
+    if *best_speedup > 1.0 && !best_history.is_empty() {
+        s.save_trajectory(tkey, best_history, *best_speedup);
+    }
+}
+
+/// Fold the store's counters (plus the engine's replayed-round count)
+/// into the telemetry ledger; all-zero without a store.
+pub(crate) fn harvest_store(
+    store: &Option<Arc<Store>>,
+    resumed_rounds: u64,
+) -> StoreLedger {
+    match store {
+        Some(s) => {
+            let c = s.counters();
+            StoreLedger {
+                hits: c.hits,
+                misses: c.misses,
+                corrupt: c.corrupt,
+                resumed_rounds,
+            }
+        }
+        None => StoreLedger::default(),
+    }
+}
+
+/// Replay one recorded attempt-probe sequence against the compile
+/// cache — exact hit/miss parity with the validations the record
+/// stands in for ([`TestingAgent::replay_cache_probes`]; each recorded
+/// key is the attempt key whose real validation ran).
+pub(crate) fn replay_probes(
+    tester: &TestingAgent,
+    cfg: &Config,
+    kernel: &Kernel,
+    suite: &TestSuite,
+    cache: &CompileCache,
+    keys: &[u64],
+) {
+    for &k in keys {
+        if cfg.fault.enabled() {
+            tester
+                .with_fault_context(cfg.fault, k)
+                .replay_cache_probes(kernel, suite, cache);
+        } else {
+            tester.replay_cache_probes(kernel, suite, cache);
+        }
     }
 }
 
@@ -683,6 +886,9 @@ pub(crate) struct RoundTally<'a> {
     pub(crate) records: &'a mut Vec<RoundRecord>,
     pub(crate) best: &'a mut Kernel,
     pub(crate) best_speedup: &'a mut f64,
+    /// Move sequence (from the baseline) of the current global best —
+    /// what the store's trajectory record persists at run end.
+    pub(crate) best_history: &'a mut Vec<Move>,
     pub(crate) candidates_evaluated: &'a mut usize,
     pub(crate) cancelled_candidates: &'a mut usize,
     pub(crate) fault_stats: &'a mut FaultStats,
@@ -793,6 +999,16 @@ pub(crate) fn settle_round(
         }
     }
 
+    // Normalize the eval vector to the canonical outcome: an abandoned
+    // candidate's slot is `None` even when the race finished it, so
+    // callers can read `Some` == canonically kept (the store's journal
+    // writer depends on this).
+    for (i, gone) in abandoned.iter().enumerate() {
+        if *gone {
+            evals[i] = None;
+        }
+    }
+
     // ---- gate, record, update the global best (by index) ---------
     let mut gate = vec![false; cands.len()];
     let mut rec_idx = vec![usize::MAX; cands.len()];
@@ -896,6 +1112,9 @@ pub(crate) fn settle_round(
             if accepted && speedup > *tally.best_speedup {
                 *tally.best = cand.kernel.clone();
                 *tally.best_speedup = speedup;
+                let mut history = beam[si].history.clone();
+                history.push(cand.applied);
+                *tally.best_history = history;
             }
         }
     }
@@ -914,6 +1133,11 @@ pub(crate) fn settle_round(
                 tests: product.tests.clone(),
                 profile: product.profile.clone(),
                 speedup: product.profile.speedup_vs_baseline,
+                history: {
+                    let mut h = beam[cands[ci].parent].history.clone();
+                    h.push(cands[ci].applied);
+                    h
+                },
                 // Fresh kernel, fresh block set: a move that did not
                 // pay on the parent may pay here.
                 blocked: Vec::new(),
@@ -1063,13 +1287,16 @@ pub(crate) fn optimize_beam_with_cache_budget(
     cache: &CompileCache,
     budget: &Arc<WorkerBudget>,
 ) -> Outcome {
-    if cfg.pipelined && cfg.speculation_depth > 0 {
+    if cfg.pipelined && cfg.speculation_depth > 0 && !(cfg.resume && cfg.store_dir.is_some()) {
         // The pipelined engine plans, evaluates and settles through the
         // exact same seams (plan_round / evaluate_supervised /
         // settle_round), so this dispatch changes *scheduling* only —
         // outcomes are differential-pinned byte-identical. With
         // `--pipelined` off or `speculation_depth = 0` the literal
-        // legacy loop below runs.
+        // legacy loop below runs. `--resume` also runs here: journal
+        // replay is a serial prefix, and since the engines are
+        // byte-identical a killed pipelined run resumes barriered to
+        // the same outcome.
         return super::sched::optimize_pipelined(spec, cfg, cache, budget);
     }
     let quality = match cfg.mode {
@@ -1084,6 +1311,36 @@ pub(crate) fn optimize_beam_with_cache_budget(
     let mut planner = make_planner(cfg);
     let coder = CodingAgent::new(cfg.bug_rate, cfg.seed ^ 0xC0DE);
     let probe = ConcurrencyProbe::new();
+
+    // ---- artifact store + journal (ROADMAP "crash-consistent store") -
+    // Attaching the store to the compile cache persists compile
+    // metadata on every miss; the journal replays a killed run's
+    // settled rounds; eval-skip reuses recorded validation verdicts.
+    // Eval records are only trusted when validation outcomes are
+    // fault-independent: no per-round cancellation races (budget 0) and
+    // no live injection at non-store sites (store faults hit only the
+    // store's own writes, which are checksummed and recomputed cold).
+    let store = open_store(cfg);
+    if let Some(s) = &store {
+        cache.attach_store(Arc::clone(s));
+    }
+    let runkey = run_key(spec, cfg);
+    let eval_skip = store.is_some()
+        && cfg.round_budget == 0
+        && (!cfg.fault.enabled() || cfg.fault.sites & !FaultSite::Store.bit() == 0);
+    let journal_rounds: Vec<crate::store::JournalRound> = match &store {
+        Some(s) if cfg.resume => s.read_rounds(runkey),
+        Some(s) => {
+            s.reset_journal(runkey);
+            Vec::new()
+        }
+        None => Vec::new(),
+    };
+    let mut next_replay = 0usize;
+    let mut replay_ok = cfg.resume;
+    let mut resumed_rounds = 0u64;
+    let mut killed = false;
+    let mut best_history: Vec<Move> = Vec::new();
 
     // Algorithm 1, lines 1-7: suite + baseline profile, now seeding the
     // one-element beam.
@@ -1107,6 +1364,7 @@ pub(crate) fn optimize_beam_with_cache_budget(
         tests: base_tests,
         profile: base_profile.clone(),
         speedup: 1.0,
+        history: Vec::new(),
         blocked: Vec::new(),
         consec_failures: 0,
     }];
@@ -1151,21 +1409,132 @@ pub(crate) fn optimize_beam_with_cache_budget(
         // testing agent's shape-repair trade, one level up).
         let round_best = best_speedup;
         let round_budget = cfg.round_budget;
-        let round_cancel = AtomicBool::new(false);
-        let cand_tokens: Vec<AtomicBool> =
-            (0..cands.len()).map(|_| AtomicBool::new(false)).collect();
-        let evals_done = AtomicUsize::new(0);
-        let improver_racy = AtomicBool::new(false);
-        // `run_indexed_catching` is the panic-containment boundary: a
-        // candidate whose worker panics (injected or not) lands as
-        // `Err(message)` in its own slot and is converted below into a
-        // canonical failed record instead of crashing the round.
-        let raw = run_indexed_catching(Some(budget.as_ref()), cands.len(), |i| {
-            let cand = &cands[i];
-            let _in_flight = probe.enter();
-            let key = faults::candidate_key(round, cand.parent, cand.index);
-            if round_budget == 0 {
-                return evaluate_supervised(
+        // Per-candidate compile-cache probe logs, recorded so eval
+        // records and journal frames can replay exact cache traffic on
+        // warm-start and resume.
+        let probe_logs: Option<Vec<Mutex<Vec<u64>>>> =
+            if store.is_some() && round_budget == 0 {
+                Some((0..cands.len()).map(|_| Mutex::new(Vec::new())).collect())
+            } else {
+                None
+            };
+        // ---- journal replay: the settled prefix of a resumed run -----
+        // A frame replays only if it matches this round exactly (same
+        // round number, same candidate count — the serial planner
+        // guarantees the candidates themselves match); the first
+        // mismatch permanently ends replay and the run continues live.
+        let replay_slots: Option<Vec<Option<EvalSlot>>> = if replay_ok {
+            match journal_rounds.get(next_replay) {
+                Some(jr) if jr.round == round && jr.slots.len() == cands.len() => {
+                    next_replay += 1;
+                    Some(jr.slots.clone())
+                }
+                _ => {
+                    replay_ok = false;
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        let was_replayed = replay_slots.is_some();
+        let mut evals: Vec<Option<EvalProduct>> = if let Some(slots) = replay_slots {
+            // Recorded verdicts and fault stats stand in for the
+            // evaluations this process never ran. Cache probes are
+            // replayed per recorded attempt key so the compile cache's
+            // hit/miss ledger matches the uninterrupted run exactly;
+            // profiles are pure functions of the kernel and recompute
+            // for free. `None` slots were canonically abandoned.
+            resumed_rounds += 1;
+            slots
+                .into_iter()
+                .enumerate()
+                .map(|(i, slot)| {
+                    let EvalSlot { tests, stats, probe_keys } = slot?;
+                    replay_probes(&tester, cfg, &cands[i].kernel, &suite, cache, &probe_keys);
+                    if let Some(logs) = &probe_logs {
+                        *logs[i].lock().unwrap() = probe_keys;
+                    }
+                    Some(EvalProduct {
+                        tests,
+                        profile: profiler.profile(&cands[i].kernel, &suite, Some(&base_profile)),
+                        stats,
+                    })
+                })
+                .collect()
+        } else {
+            // Recorded-eval preload runs serially in candidate-index
+            // order, so store hit/miss counters are a pure function of
+            // disk state rather than eval scheduling. Same-round
+            // duplicate kernels both miss here and evaluate live; the
+            // next round sees the settled record.
+            let preloaded: Vec<Option<EvalSlot>> = match &store {
+                Some(s) if eval_skip => cands
+                    .iter()
+                    .map(|c| s.load_eval(eval_record_key(spec, cfg, kernel_hash(&c.kernel))))
+                    .collect(),
+                _ => vec![None; cands.len()],
+            };
+            let round_cancel = AtomicBool::new(false);
+            let cand_tokens: Vec<AtomicBool> =
+                (0..cands.len()).map(|_| AtomicBool::new(false)).collect();
+            let evals_done = AtomicUsize::new(0);
+            let improver_racy = AtomicBool::new(false);
+            // `run_indexed_catching` is the panic-containment boundary: a
+            // candidate whose worker panics (injected or not) lands as
+            // `Err(message)` in its own slot and is converted below into a
+            // canonical failed record instead of crashing the round.
+            let raw = run_indexed_catching(Some(budget.as_ref()), cands.len(), |i| {
+                let cand = &cands[i];
+                let _in_flight = probe.enter();
+                let key = faults::candidate_key(round, cand.parent, cand.index);
+                if round_budget == 0 {
+                    if let Some(slot) = &preloaded[i] {
+                        // Warm start: the recorded verdict stands in
+                        // for validation; replaying its probes keeps
+                        // cache counters identical to a cold run.
+                        replay_probes(&tester, cfg, &cand.kernel, &suite, cache, &slot.probe_keys);
+                        if let Some(logs) = &probe_logs {
+                            *logs[i].lock().unwrap() = slot.probe_keys.clone();
+                        }
+                        return Some(EvalProduct {
+                            tests: slot.tests.clone(),
+                            profile: profiler.profile(&cand.kernel, &suite, Some(&base_profile)),
+                            stats: slot.stats,
+                        });
+                    }
+                    let product = evaluate_supervised(
+                        spec,
+                        cfg,
+                        &tester,
+                        &profiler,
+                        &cand.kernel,
+                        &suite,
+                        Some(&base_profile),
+                        Some(cache),
+                        None,
+                        probe_logs.as_ref().map(|l| &l[i]),
+                        key,
+                    )?;
+                    if eval_skip {
+                        if let Some(s) = &store {
+                            let probe_keys = probe_logs
+                                .as_ref()
+                                .map(|l| l[i].lock().unwrap().clone())
+                                .unwrap_or_default();
+                            s.save_eval(
+                                eval_record_key(spec, cfg, kernel_hash(&cand.kernel)),
+                                &EvalSlot {
+                                    tests: product.tests.clone(),
+                                    stats: product.stats,
+                                    probe_keys,
+                                },
+                            );
+                        }
+                    }
+                    return Some(product);
+                }
+                let product = evaluate_supervised(
                     spec,
                     cfg,
                     &tester,
@@ -1173,56 +1542,42 @@ pub(crate) fn optimize_beam_with_cache_budget(
                     &cand.kernel,
                     &suite,
                     Some(&base_profile),
-                    Some(cache),
                     None,
+                    Some((&cand_tokens[i], &round_cancel)),
                     None,
                     key,
-                );
-            }
-            let product = evaluate_supervised(
-                spec,
-                cfg,
-                &tester,
-                &profiler,
-                &cand.kernel,
-                &suite,
-                Some(&base_profile),
-                None,
-                Some((&cand_tokens[i], &round_cancel)),
-                None,
-                key,
-            )?;
-            let done = evals_done.fetch_add(1, Ordering::SeqCst) + 1;
-            if product.tests.pass
-                && product.profile.speedup_vs_baseline > round_best
-            {
-                improver_racy.store(true, Ordering::SeqCst);
-            }
-            if improver_racy.load(Ordering::SeqCst) && done >= round_budget {
-                // Raise the round token first, then every candidate
-                // token: a machine that observes its candidate token
-                // can then rely on the round flag being visible.
-                round_cancel.store(true, Ordering::SeqCst);
-                for t in &cand_tokens {
-                    t.store(true, Ordering::SeqCst);
+                )?;
+                let done = evals_done.fetch_add(1, Ordering::SeqCst) + 1;
+                if product.tests.pass
+                    && product.profile.speedup_vs_baseline > round_best
+                {
+                    improver_racy.store(true, Ordering::SeqCst);
                 }
-            }
-            Some(product)
-        });
-        let mut evals: Vec<Option<EvalProduct>> = raw
-            .into_iter()
-            .enumerate()
-            .map(|(i, r)| match r {
-                Ok(v) => v,
-                Err(msg) => Some(panicked_product(
-                    &profiler,
-                    &cands[i].kernel,
-                    &suite,
-                    Some(&base_profile),
-                    &msg,
-                )),
-            })
-            .collect();
+                if improver_racy.load(Ordering::SeqCst) && done >= round_budget {
+                    // Raise the round token first, then every candidate
+                    // token: a machine that observes its candidate token
+                    // can then rely on the round flag being visible.
+                    round_cancel.store(true, Ordering::SeqCst);
+                    for t in &cand_tokens {
+                        t.store(true, Ordering::SeqCst);
+                    }
+                }
+                Some(product)
+            });
+            raw.into_iter()
+                .enumerate()
+                .map(|(i, r)| match r {
+                    Ok(v) => v,
+                    Err(msg) => Some(panicked_product(
+                        &profiler,
+                        &cands[i].kernel,
+                        &suite,
+                        Some(&base_profile),
+                        &msg,
+                    )),
+                })
+                .collect()
+        };
 
         // ---- settle: canonical repair, gate + record, selection ------
         let env = EvalEnv {
@@ -1237,6 +1592,7 @@ pub(crate) fn optimize_beam_with_cache_budget(
             records: &mut records,
             best: &mut best,
             best_speedup: &mut best_speedup,
+            best_history: &mut best_history,
             candidates_evaluated: &mut candidates_evaluated,
             cancelled_candidates: &mut cancelled_candidates,
             fault_stats: &mut fault_stats,
@@ -1253,7 +1609,61 @@ pub(crate) fn optimize_beam_with_cache_budget(
             &mut tally,
         );
         beam = next_beam;
+
+        // ---- journal checkpoint (live rounds only; replayed rounds
+        // are already on disk). `settle_round` has normalized `evals`
+        // so `Some` means canonically kept — a resume replays exactly
+        // the abandonment this round settled on. The hidden kill knob
+        // crashes the run right after the checkpoint, which is what
+        // the kill-and-resume walls exercise.
+        if let Some(s) = &store {
+            if !was_replayed {
+                let slots: Vec<Option<EvalSlot>> = evals
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| {
+                        e.as_ref().map(|p| EvalSlot {
+                            tests: p.tests.clone(),
+                            stats: p.stats,
+                            probe_keys: probe_logs
+                                .as_ref()
+                                .map(|l| l[i].lock().unwrap().clone())
+                                .unwrap_or_default(),
+                        })
+                    })
+                    .collect();
+                s.append_round(runkey, round, &slots);
+            }
+            if cfg.kill_after_round > 0 && round == cfg.kill_after_round {
+                killed = true;
+                break;
+            }
+        }
     }
+
+    // ---- warm start: replay the stored best trajectory ---------------
+    // Skipped when the hidden kill knob crashed the run mid-search —
+    // a real crash never reaches run end either.
+    if let Some(s) = &store {
+        if !killed {
+            warm_finish(
+                s,
+                spec,
+                cfg,
+                &tester,
+                &profiler,
+                cache,
+                &suite,
+                &baseline,
+                &base_profile,
+                &mut records,
+                &mut best,
+                &mut best_speedup,
+                &mut best_history,
+            );
+        }
+    }
+    let store_ledger = harvest_store(&store, resumed_rounds);
 
     finish_outcome(
         spec,
@@ -1272,6 +1682,7 @@ pub(crate) fn optimize_beam_with_cache_budget(
             fault_stats,
             quarantined_lineages,
             speculation: SpecLedger::default(),
+            store: store_ledger,
         },
     )
 }
@@ -1369,6 +1780,7 @@ mod tests {
                 fault_stats: FaultStats::default(),
                 quarantined_lineages: 0,
                 speculation: SpecLedger::default(),
+                store: StoreLedger::default(),
             },
         );
         drop(caller);

@@ -33,6 +33,12 @@ pub enum FaultSite {
     /// A primary-variant serving step inside the concurrent harness
     /// (one client's sub-batch in one decode step).
     Serve,
+    /// A persistent-store write (record or journal append): torn or
+    /// truncated writes, bit flips, failed renames. Store faults model
+    /// silent disk lossage — they never panic the process; the store's
+    /// checksum layer detects them on the next read and recomputes
+    /// cold, so they can only ever shift store ledger counters.
+    Store,
 }
 
 impl FaultSite {
@@ -45,6 +51,7 @@ impl FaultSite {
             FaultSite::Compile => 8,
             FaultSite::Profiling => 16,
             FaultSite::Serve => 32,
+            FaultSite::Store => 64,
         }
     }
 
@@ -57,6 +64,7 @@ impl FaultSite {
             FaultSite::Compile => 0xC0FF_11E5,
             FaultSite::Profiling => 0x9120_F11E,
             FaultSite::Serve => 0x5E2F_E57E,
+            FaultSite::Store => 0x57C2_E77E,
         }
     }
 
@@ -68,12 +76,13 @@ impl FaultSite {
             FaultSite::Compile => "compile",
             FaultSite::Profiling => "profile",
             FaultSite::Serve => "serve",
+            FaultSite::Store => "store",
         }
     }
 }
 
-/// All six sites enabled.
-pub const ALL_SITES: u8 = 63;
+/// All seven sites enabled.
+pub const ALL_SITES: u8 = 127;
 
 /// What an injected fault does.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -188,6 +197,17 @@ fn kind_for(site: FaultSite, r: &mut Prng) -> FaultKind {
             0..=2 => FaultKind::Transient,
             _ => FaultKind::Panic,
         },
+        // The store maps kinds onto disk-fault shapes: Transient = torn
+        // (half-written) payload, Poison = post-checksum bit flip, Hang
+        // = failed rename (the temp file never lands), Panic = header
+        // truncated mid-write. All four are detected by the checksum /
+        // framing layer on the next read.
+        FaultSite::Store => match r.below(8) {
+            0..=2 => FaultKind::Transient,
+            3 | 4 => FaultKind::Poison,
+            5 | 6 => FaultKind::Hang,
+            _ => FaultKind::Panic,
+        },
     }
 }
 
@@ -272,7 +292,7 @@ pub fn mentions_injection(failure: &str) -> bool {
 // ---- site-mask parse/render ---------------------------------------------
 
 /// Parse a sites mask: `all`, `none`, or a comma list of
-/// `agent,validate,grid,compile,profile,serve`.
+/// `agent,validate,grid,compile,profile,serve,store`.
 pub fn parse_sites(s: &str) -> Result<u8, String> {
     let s = s.trim();
     if s.eq_ignore_ascii_case("all") {
@@ -291,13 +311,14 @@ pub fn parse_sites(s: &str) -> Result<u8, String> {
             FaultSite::Compile,
             FaultSite::Profiling,
             FaultSite::Serve,
+            FaultSite::Store,
         ]
         .into_iter()
         .find(|f| f.name() == part)
         .ok_or_else(|| {
             format!(
                 "unknown fault site '{part}' (expected all, none, or \
-                 agent/validate/grid/compile/profile/serve)"
+                 agent/validate/grid/compile/profile/serve/store)"
             )
         })?;
         mask |= site.bit();
@@ -321,6 +342,7 @@ pub fn render_sites(mask: u8) -> String {
         FaultSite::Compile,
         FaultSite::Profiling,
         FaultSite::Serve,
+        FaultSite::Store,
     ] {
         if mask & site.bit() != 0 {
             parts.push(site.name());
@@ -444,6 +466,24 @@ mod tests {
             );
             assert_eq!(plan.roll(FaultSite::GridWorker, key), None);
         }
+    }
+
+    #[test]
+    fn store_site_produces_all_disk_fault_shapes() {
+        let plan = FaultPlan {
+            rate: 1.0,
+            seed: 5,
+            sites: FaultSite::Store.bit(),
+        };
+        let mut kinds = std::collections::HashSet::new();
+        for key in 0..200u64 {
+            let k = plan.roll(FaultSite::Store, key).unwrap();
+            kinds.insert(format!("{k:?}"));
+            // A store-only mask must not leak into the engine sites.
+            assert_eq!(plan.roll(FaultSite::Validation, key), None);
+            assert_eq!(plan.roll(FaultSite::Compile, key), None);
+        }
+        assert_eq!(kinds.len(), 4, "all four disk-fault shapes at rate 1");
     }
 
     #[test]

@@ -26,5 +26,6 @@ pub mod pipeline;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod transforms;
 pub mod util;

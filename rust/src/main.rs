@@ -117,7 +117,15 @@ fn print_usage() {
          \x20                       gate-validated variants mid-serve; bare\n\
          \x20                       flag = on (online_optimize)\n\
          \x20 --swap-interval N     timed steps between hot-swap publish\n\
-         \x20                       checkpoints (swap_interval)\n"
+         \x20                       checkpoints (swap_interval)\n\n\
+         crash-consistent artifact store (optimize/bench/serve):\n\
+         \x20 --store DIR           content-addressed on-disk store: compile\n\
+         \x20                       metadata, validation verdicts, winning\n\
+         \x20                       trajectories, and a round-level search\n\
+         \x20                       journal; warm-starts later runs (store)\n\
+         \x20 --resume [BOOL]       reconstruct a killed run from its journal\n\
+         \x20                       and continue byte-identically; needs\n\
+         \x20                       --store; bare flag = on (resume)\n"
     );
 }
 
@@ -163,10 +171,28 @@ fn build_config(args: &[String]) -> Result<Config> {
         ("--clients", "clients"),
         ("--request-mix", "request_mix"),
         ("--swap-interval", "swap_interval"),
+        ("--store", "store"),
     ] {
         if let Some(v) = opt_value(args, flag) {
             config::apply(&mut cfg, &mut model, key, &v)?;
         }
+    }
+    // `--resume` works bare (= on) or with an explicit boolean.
+    if has_flag(args, "--resume") {
+        match opt_value(args, "--resume") {
+            Some(v) if !v.starts_with("--") => {
+                config::apply(&mut cfg, &mut model, "resume", &v)?;
+            }
+            _ => cfg.resume = true,
+        }
+    }
+    // Hidden crash-recovery test knob: kill the search right after the
+    // journal checkpoint of round N (0 = never). Env-only on purpose —
+    // it simulates a crash, not a user-facing feature.
+    if let Ok(v) = std::env::var("ASTRA_KILL_AFTER_ROUND") {
+        cfg.kill_after_round = v
+            .parse()
+            .with_context(|| format!("ASTRA_KILL_AFTER_ROUND expects an integer, got {v:?}"))?;
     }
     // `--pipelined` works bare (= on) or with an explicit boolean
     // (`--pipelined off`); a following `--flag` is not its value.

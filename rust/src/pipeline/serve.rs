@@ -34,10 +34,11 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::{self, Config};
 use crate::faults::{self, FaultSite};
 use crate::interp::budget::run_indexed;
-use crate::interp::{self, CompileCache, ExecEnv, RunOpts, WorkerBudget};
+use crate::interp::{self, kernel_hash, CompileCache, ExecEnv, RunOpts, WorkerBudget};
 use crate::ir::Kernel;
 use crate::kernels::{self, KernelSpec};
 use crate::sim;
+use crate::store::Store;
 use crate::transforms;
 use crate::util::Prng;
 
@@ -351,6 +352,17 @@ pub fn serve_concurrent(
     }
     let table = RoutingTable::new(initial);
 
+    // Durable publish ledger: every accepted hot-swap is recorded in the
+    // artifact store so a later warm-started run (or a post-mortem) can
+    // see which kernels actually served. Store faults here can lose a
+    // publish *record*, never the publish itself — the routing table is
+    // the source of truth for what ships.
+    let store: Option<Store> = cfg
+        .store_dir
+        .as_deref()
+        .and_then(|d| Store::open(std::path::Path::new(d)).ok())
+        .map(|s| s.with_faults(cfg.fault));
+
     // Online optimizer: one generation per publish checkpoint, so every
     // checkpoint's blocking recv is matched by exactly one send and the
     // thread always drains clean. Generations are seeded from
@@ -436,6 +448,7 @@ pub fn serve_concurrent(
             consumed += 1;
             let rec = publish_checkpoint(
                 cand, t, &table, &specs, serve_cfg, &scales, cache,
+                store.as_ref(),
             )?;
             if rec.published {
                 published += 1;
@@ -600,6 +613,7 @@ fn gate_scales(clients: usize) -> Vec<usize> {
 /// own final oracle failed, if it does not strictly beat the live
 /// variant's speedup, or if the pre-publish gate fails on any serving
 /// scale; otherwise hot-swap it in under the next epoch.
+#[allow(clippy::too_many_arguments)]
 fn publish_checkpoint(
     cand: Candidate,
     t: usize,
@@ -608,6 +622,7 @@ fn publish_checkpoint(
     serve_cfg: &ServeConfig,
     scales: &[usize],
     cache: &Arc<CompileCache>,
+    store: Option<&Store>,
 ) -> Result<SwapRecord> {
     let cur = table.read(cand.class);
     let (published, epoch, note) = if !cand.correct {
@@ -638,6 +653,14 @@ fn publish_checkpoint(
                         speedup: cand.speedup,
                     },
                 );
+                if let Some(s) = store {
+                    s.save_publish(
+                        specs[cand.class].paper_name,
+                        kernel_hash(&cand.kernel),
+                        epoch,
+                        cand.speedup,
+                    );
+                }
                 (true, epoch, "published".to_string())
             }
             Err(e) => (false, cur.epoch, format!("gate: {e:#}")),

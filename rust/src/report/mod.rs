@@ -74,15 +74,21 @@ pub fn table2(outcomes: &[Outcome]) -> String {
     );
     let mut speedups = Vec::new();
     for o in outcomes {
-        let p = paper::TABLE2
+        // Non-paper kernels (store-loaded variants, future additions)
+        // render a placeholder in the paper columns instead of
+        // panicking on a missing TABLE2 row.
+        let paper_cols = match paper::TABLE2
             .iter()
             .find(|(n, ..)| *n == o.kernel_name)
-            .unwrap();
+        {
+            Some(p) => format!("{:>11.1} {:>5.1} {:>6.2}x", p.3, p.4, p.5),
+            None => format!("{:>11} {:>5} {:>7}", "—", "—", "—"),
+        };
         let dloc = 100.0 * (o.best_loc as f64 - o.baseline_loc as f64)
             / o.baseline_loc as f64;
         let _ = writeln!(
             s,
-            "{:<24} {:>8} {:>8} {:>5.0}% {:>9.1}u {:>9.1}u {:>8.2}x {:>8}   {:>11.1} {:>5.1} {:>6.2}x",
+            "{:<24} {:>8} {:>8} {:>5.0}% {:>9.1}u {:>9.1}u {:>8.2}x {:>8}   {}",
             o.kernel_name,
             o.baseline_loc,
             o.best_loc,
@@ -91,9 +97,7 @@ pub fn table2(outcomes: &[Outcome]) -> String {
             o.opt_mean_us,
             o.final_speedup,
             if o.final_correct { "yes" } else { "NO" },
-            p.3,
-            p.4,
-            p.5,
+            paper_cols,
         );
         speedups.push(o.final_speedup);
     }
@@ -120,21 +124,24 @@ pub fn table3(sa: &[Outcome], ma: &[Outcome]) -> String {
     let mut mas = Vec::new();
     for (a, m) in sa.iter().zip(ma) {
         assert_eq!(a.kernel_name, m.kernel_name);
-        let p = paper::TABLE3
+        // Placeholder paper columns for non-paper kernels (see table2).
+        let paper_cols = match paper::TABLE3
             .iter()
             .find(|(n, ..)| *n == a.kernel_name)
-            .unwrap();
+        {
+            Some(p) => format!("{:>9.2} {:>4.2}", p.2, p.3),
+            None => format!("{:>9} {:>4}", "—", "—"),
+        };
         let _ = writeln!(
             s,
-            "{:<24} {:>9.1}u {:>11} {:>10.2}x {:>11} {:>10.2}x   {:>9.2} {:>4.2}",
+            "{:<24} {:>9.1}u {:>11} {:>10.2}x {:>11} {:>10.2}x   {}",
             a.kernel_name,
             a.base_mean_us,
             if a.final_correct { "yes" } else { "NO" },
             a.final_speedup,
             if m.final_correct { "yes" } else { "NO" },
             m.final_speedup,
-            p.2,
-            p.3,
+            paper_cols,
         );
         sas.push(a.final_speedup);
         mas.push(m.final_speedup);
@@ -160,24 +167,32 @@ pub fn table4(outcomes: &[Outcome]) -> String {
         "Kernel", "Shape", "Time-Base", "Time-Opt", "Speedup"
     );
     for o in outcomes {
-        let spec = kernels::spec_by_name(&o.kernel_name).unwrap();
+        // Non-paper kernels have no spec row: render with a placeholder
+        // index and no paper columns instead of panicking.
+        let spec = kernels::spec_by_name(&o.kernel_name);
+        let index = spec
+            .as_ref()
+            .map(|sp| sp.index.to_string())
+            .unwrap_or_else(|| "—".to_string());
         for (label, b, t, sp) in &o.per_shape {
-            let p = paper::TABLE4
-                .iter()
-                .find(|(i, l, ..)| *i == spec.index && l == label);
+            let p = spec.as_ref().and_then(|spec| {
+                paper::TABLE4
+                    .iter()
+                    .find(|(i, l, ..)| *i == spec.index && l == label)
+            });
             match p {
                 Some((_, _, pb, pt, ps)) => {
                     let _ = writeln!(
                         s,
                         "Kernel {}   {:<18} {:>9.1}u {:>9.1}u {:>7.2}x   {:>12.1} {:>5.1} {:>6.2}x",
-                        spec.index, label, b, t, sp, pb, pt, ps
+                        index, label, b, t, sp, pb, pt, ps
                     );
                 }
                 None => {
                     let _ = writeln!(
                         s,
                         "Kernel {}   {:<18} {:>9.1}u {:>9.1}u {:>7.2}x",
-                        spec.index, label, b, t, sp
+                        index, label, b, t, sp
                     );
                 }
             }
@@ -342,6 +357,24 @@ pub fn trace(outcome: &Outcome) -> String {
             outcome.aborted_lineages
         );
     }
+    // Only store-backed runs carry a store ledger; storeless runs keep
+    // the exact pre-store trace format. The footer is informational —
+    // store faults shift these counters but never the shipped kernel.
+    if outcome.store_hits > 0
+        || outcome.store_misses > 0
+        || outcome.store_corrupt_entries > 0
+        || outcome.resumed_rounds > 0
+    {
+        let _ = writeln!(
+            s,
+            "store: {} hits / {} misses, {} corrupt entries quarantined, \
+             {} rounds resumed from journal",
+            outcome.store_hits,
+            outcome.store_misses,
+            outcome.store_corrupt_entries,
+            outcome.resumed_rounds
+        );
+    }
     s
 }
 
@@ -389,6 +422,22 @@ mod tests {
         assert!(t.contains("[16, 12288]"));
         // every our-row for a paper shape carries the paper columns
         assert!(t.matches("1.46x").count() + t.matches("1.46").count() >= 1);
+    }
+
+    #[test]
+    fn tables_render_placeholder_rows_for_non_paper_kernels() {
+        let mut outs = quick_outcomes();
+        for o in &mut outs {
+            o.kernel_name = format!("{}_v2", o.kernel_name);
+        }
+        let t2 = table2(&outs);
+        assert!(t2.contains("silu_and_mul_v2"), "{t2}");
+        assert!(t2.contains('—'), "missing paper rows render —: {t2}");
+        let t3 = table3(&outs, &outs);
+        assert!(t3.contains("silu_and_mul_v2"), "{t3}");
+        assert!(t3.contains('—'), "{t3}");
+        let t4 = table4(&outs);
+        assert!(t4.contains("Kernel —"), "unknown spec index renders —: {t4}");
     }
 
     #[test]

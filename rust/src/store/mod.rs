@@ -1,0 +1,1037 @@
+//! Crash-consistent persistent artifact store (ROADMAP "persistent
+//! cross-process artifact store").
+//!
+//! Every cache in the system dies with its process; a production fleet
+//! would re-derive every compiled kernel, validation outcome and
+//! winning trajectory on every restart, and a crash mid-search loses
+//! the whole run. This module is the durable level underneath those
+//! caches: a content-addressed directory of small records — compiled-
+//! kernel metadata, validation outcomes, winning transform trajectories,
+//! serving publishes — plus an append-only round-level **journal** of
+//! search progress that `--resume` replays byte-identically.
+//!
+//! Crash-consistency discipline, in the storage-core tradition:
+//!
+//! * every record is written to a temp file and published by `rename`
+//!   (the only atomic primitive the design relies on);
+//! * every record carries a versioned header plus a length and an
+//!   FNV-1a checksum over its payload, so a torn, truncated or
+//!   bit-flipped record is *detected*, never trusted — FNV-1a's
+//!   per-byte step is a bijection of the running state, so two
+//!   equal-length payloads differing anywhere can never collide;
+//! * the journal is append-only, each frame length-prefixed and
+//!   checksummed; a torn tail (the crash case) parses as a shorter,
+//!   valid prefix;
+//! * a record that fails its checksum is quarantined to a `*.corrupt`
+//!   sidecar and the artifact is recomputed cold — corruption can shift
+//!   timings and the store ledger counters, never a result.
+//!
+//! Fault injection: [`crate::faults::FaultSite::Store`] keys
+//! deterministic disk faults into every write (torn payloads, failed
+//! renames, bit flips, truncated headers), keyed by the record's own
+//! key — order-independent like every other site — so chaos runs are
+//! reproducible from `(fault_seed, fault_rate, fault_sites)` alone.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::agents::TestReport;
+use crate::faults::{self, FaultKind, FaultPlan, FaultSite, FaultStats};
+use crate::ir::DimEnv;
+use crate::transforms::Move;
+
+// ---- stable hashing primitives ------------------------------------------
+// Shared with `interp::cache::kernel_hash`: the same byte-serial FNV-1a
+// core backs kernel hashes, record keys and record checksums (each
+// under its own domain seed).
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Extend an FNV-1a state over `bytes` (chunked calls hash identically
+/// to one call over the concatenation).
+pub fn fnv1a_extend(mut state: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        state = (state ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+    }
+    state
+}
+
+/// Plain FNV-1a of a byte string — the record checksum function.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_extend(FNV_OFFSET, bytes)
+}
+
+/// splitmix64 finalizer: avalanches an FNV state so truncations of the
+/// result stay well distributed.
+pub fn splitmix_fin(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stable 64-bit key for a record identity: seeded FNV-1a over the
+/// `|`-joined parts, finalized. The seed decorrelates key streams from
+/// kernel hashes and checksums over the same bytes.
+pub fn record_key(parts: &[&str]) -> u64 {
+    let mut state = FNV_OFFSET ^ 0xA57A_0002;
+    for (i, p) in parts.iter().enumerate() {
+        if i > 0 {
+            state = fnv1a_extend(state, b"|");
+        }
+        state = fnv1a_extend(state, p.as_bytes());
+    }
+    splitmix_fin(state)
+}
+
+// ---- payload text escaping ----------------------------------------------
+
+/// Escape arbitrary text into a single space-free token: printable
+/// ASCII passes through, everything else (and `%` itself) becomes
+/// `%XX`. The empty string renders as the reserved token `%-`.
+fn esc(s: &str) -> String {
+    if s.is_empty() {
+        return "%-".to_string();
+    }
+    let mut out = String::with_capacity(s.len());
+    for b in s.bytes() {
+        if (0x21..=0x7e).contains(&b) && b != b'%' {
+            out.push(b as char);
+        } else {
+            out.push_str(&format!("%{b:02x}"));
+        }
+    }
+    out
+}
+
+fn unesc(s: &str) -> Option<String> {
+    if s == "%-" {
+        return Some(String::new());
+    }
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            if i + 3 > bytes.len() {
+                return None;
+            }
+            let hex = s.get(i + 1..i + 3)?;
+            out.push(u8::from_str_radix(hex, 16).ok()?);
+            i += 3;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).ok()
+}
+
+/// `-` for `None`, `+<esc>` for `Some` (so a literal `-` payload can
+/// never alias the absent case).
+fn esc_opt(s: &Option<String>) -> String {
+    match s {
+        None => "-".to_string(),
+        Some(v) => format!("+{}", esc(v)),
+    }
+}
+
+fn unesc_opt(s: &str) -> Option<Option<String>> {
+    if s == "-" {
+        return Some(None);
+    }
+    s.strip_prefix('+').and_then(unesc).map(Some)
+}
+
+/// Parse a `name=value` token whose name is fixed.
+fn field<'a>(tok: Option<&'a str>, name: &str) -> Option<&'a str> {
+    tok?.strip_prefix(name)?.strip_prefix('=')
+}
+
+// ---- move (de)serialization ---------------------------------------------
+
+/// Inverse of [`Move::name`] — trajectories serialize as move names.
+pub fn move_from_name(s: &str) -> Option<Move> {
+    match s {
+        "hoist_loop_invariant" => Some(Move::Hoist),
+        "vectorize_global_access" => Some(Move::Vectorize),
+        "warp_shuffle_reduction" => Some(Move::WarpShuffle),
+        "fast_math_intrinsics" => Some(Move::FastMath),
+        _ => {
+            if let Some(f) = s.strip_prefix("unroll_x") {
+                return f.parse().ok().map(Move::Unroll);
+            }
+            if let Some(b) = s.strip_prefix("block_size_") {
+                return b.parse().ok().map(Move::BlockSize);
+            }
+            None
+        }
+    }
+}
+
+// ---- evaluation slots ---------------------------------------------------
+
+/// The serialized essence of one *canonically kept* candidate
+/// evaluation: the verdict, the fault telemetry, and the compile-cache
+/// probe keys the evaluation recorded (one per attempt whose real
+/// validation ran). Profiles are deliberately **not** stored — the
+/// profiler is a pure analytical model, so replay recomputes them
+/// byte-identically, and the cache probes let replay reproduce the
+/// compile-cache counters too.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalSlot {
+    pub tests: TestReport,
+    pub stats: FaultStats,
+    pub probe_keys: Vec<u64>,
+}
+
+fn encode_slot(slot: &EvalSlot) -> String {
+    let t = &slot.tests;
+    let keys = if slot.probe_keys.is_empty() {
+        "-".to_string()
+    } else {
+        slot.probe_keys
+            .iter()
+            .map(|k| format!("{k:016x}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    format!(
+        "pass={} rel={:08x} abs={:08x} cases={} cc={} rc={} fail={} \
+         inj={} sur={} ret={} wd={} keys={}",
+        u8::from(t.pass),
+        t.max_rel_err.to_bits(),
+        t.max_abs_err.to_bits(),
+        t.cases,
+        t.cancelled_cases,
+        u8::from(t.round_cancelled),
+        esc_opt(&t.failure),
+        slot.stats.injected,
+        slot.stats.survived,
+        slot.stats.retries,
+        slot.stats.watchdog_trips,
+        keys,
+    )
+}
+
+fn decode_slot(s: &str) -> Option<EvalSlot> {
+    let mut it = s.split(' ');
+    let pass = field(it.next(), "pass")? == "1";
+    let rel = u32::from_str_radix(field(it.next(), "rel")?, 16).ok()?;
+    let abs = u32::from_str_radix(field(it.next(), "abs")?, 16).ok()?;
+    let cases: usize = field(it.next(), "cases")?.parse().ok()?;
+    let cancelled_cases: usize = field(it.next(), "cc")?.parse().ok()?;
+    let round_cancelled = field(it.next(), "rc")? == "1";
+    let failure = unesc_opt(field(it.next(), "fail")?)?;
+    let injected: u64 = field(it.next(), "inj")?.parse().ok()?;
+    let survived: u64 = field(it.next(), "sur")?.parse().ok()?;
+    let retries: u64 = field(it.next(), "ret")?.parse().ok()?;
+    let watchdog_trips: u64 = field(it.next(), "wd")?.parse().ok()?;
+    let keys_tok = field(it.next(), "keys")?;
+    if it.next().is_some() {
+        return None;
+    }
+    let probe_keys = if keys_tok == "-" {
+        Vec::new()
+    } else {
+        let mut keys = Vec::new();
+        for part in keys_tok.split(',') {
+            keys.push(u64::from_str_radix(part, 16).ok()?);
+        }
+        keys
+    };
+    Some(EvalSlot {
+        tests: TestReport {
+            pass,
+            max_rel_err: f32::from_bits(rel),
+            max_abs_err: f32::from_bits(abs),
+            failure,
+            cases,
+            cancelled_cases,
+            round_cancelled,
+        },
+        stats: FaultStats {
+            injected,
+            survived,
+            retries,
+            watchdog_trips,
+        },
+        probe_keys,
+    })
+}
+
+/// One settled round as the journal recorded it: `Some` per canonically
+/// kept candidate (index order), `None` per canonically abandoned one.
+#[derive(Debug, Clone)]
+pub struct JournalRound {
+    pub round: usize,
+    pub slots: Vec<Option<EvalSlot>>,
+}
+
+fn encode_round_payload(slots: &[Option<EvalSlot>]) -> Vec<u8> {
+    let mut payload = format!("cands {}\n", slots.len());
+    for (i, s) in slots.iter().enumerate() {
+        match s {
+            Some(slot) => {
+                payload.push_str(&format!("{i} kept {}\n", encode_slot(slot)))
+            }
+            None => payload.push_str(&format!("{i} abandoned\n")),
+        }
+    }
+    payload.into_bytes()
+}
+
+fn decode_round_payload(payload: &[u8]) -> Option<Vec<Option<EvalSlot>>> {
+    let text = std::str::from_utf8(payload).ok()?;
+    let mut lines = text.lines();
+    let n: usize = lines.next()?.strip_prefix("cands ")?.parse().ok()?;
+    let mut slots = Vec::with_capacity(n);
+    for i in 0..n {
+        let line = lines.next()?;
+        let rest = line.strip_prefix(&format!("{i} "))?;
+        if rest == "abandoned" {
+            slots.push(None);
+        } else {
+            slots.push(Some(decode_slot(rest.strip_prefix("kept ")?)?));
+        }
+    }
+    if lines.next().is_some() {
+        return None;
+    }
+    Some(slots)
+}
+
+// ---- the store ----------------------------------------------------------
+
+/// Per-handle store ledger (one handle per optimization/serve run, so
+/// the counters are attributable to one run's `Outcome`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    /// Records found valid on lookup.
+    pub hits: u64,
+    /// Lookups that found no usable record (absent or corrupt).
+    pub misses: u64,
+    /// Checksum-/decode-corrupt entries quarantined to `*.corrupt`.
+    pub corrupt: u64,
+}
+
+/// A handle on one on-disk artifact store directory. Cheap to share
+/// behind an `Arc`; all methods take `&self`.
+///
+/// Write methods are **best-effort**: an I/O error (disk full,
+/// permissions) degrades the store to a smaller cache, never fails the
+/// optimization — the same posture as a detected-corrupt record.
+#[derive(Debug)]
+pub struct Store {
+    dir: PathBuf,
+    plan: FaultPlan,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    corrupt: AtomicU64,
+    tmp_nonce: AtomicU64,
+}
+
+impl Store {
+    /// Open (creating if needed) the store rooted at `dir`.
+    pub fn open(dir: &Path) -> std::io::Result<Store> {
+        fs::create_dir_all(dir)?;
+        Ok(Store {
+            dir: dir.to_path_buf(),
+            plan: FaultPlan::disabled(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            corrupt: AtomicU64::new(0),
+            tmp_nonce: AtomicU64::new(0),
+        })
+    }
+
+    /// Arm deterministic store-site fault injection on every write.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Store {
+        self.plan = plan;
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn counters(&self) -> StoreCounters {
+        StoreCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+        }
+    }
+
+    // ---- crash-safe record plumbing -------------------------------------
+
+    /// Write `payload` as record `name` of `kind`: versioned header,
+    /// length, checksum, temp file + rename. `key` keys the
+    /// deterministic fault roll for this write.
+    fn write_record(&self, name: &str, kind: &str, key: u64, payload: &[u8]) {
+        let header = format!(
+            "astra-store v1 {kind}\nlen {} sum {:016x}\n",
+            payload.len(),
+            fnv1a(payload)
+        );
+        let header_len = header.len();
+        let mut bytes = header.into_bytes();
+        bytes.extend_from_slice(payload);
+        let mut publish = true;
+        match self.plan.roll(FaultSite::Store, key) {
+            None => {}
+            Some(FaultKind::Transient) => {
+                // Torn write: only half the payload lands.
+                bytes.truncate(header_len + payload.len() / 2);
+            }
+            Some(FaultKind::Poison) => {
+                // Bit flip after the checksum was computed. FNV-1a's
+                // per-byte bijection guarantees an equal-length flip is
+                // always detected on read.
+                if payload.is_empty() {
+                    bytes[0] ^= 0x01;
+                } else {
+                    let idx = header_len + (key as usize % payload.len());
+                    bytes[idx] ^= 0x01;
+                }
+            }
+            Some(FaultKind::Hang) => {
+                // Failed rename: the temp file never lands.
+                publish = false;
+            }
+            Some(FaultKind::Panic) => {
+                // Header truncated mid-write.
+                bytes.truncate(bytes.len().min(8));
+            }
+        }
+        let nonce = self.tmp_nonce.fetch_add(1, Ordering::Relaxed);
+        let tmp = self
+            .dir
+            .join(format!(".{name}.{}.{nonce}.tmp", std::process::id()));
+        let write = || -> std::io::Result<()> {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            Ok(())
+        };
+        if write().is_err() {
+            let _ = fs::remove_file(&tmp);
+            return;
+        }
+        if publish && fs::rename(&tmp, self.dir.join(name)).is_err() {
+            let _ = fs::remove_file(&tmp);
+        }
+    }
+
+    /// Read and verify record `name` of `kind`. Absent → `None`;
+    /// present but torn/corrupt → quarantined to `*.corrupt`, corrupt
+    /// counter bumped, `None`.
+    fn read_record(&self, name: &str, kind: &str) -> Option<Vec<u8>> {
+        let path = self.dir.join(name);
+        let bytes = fs::read(&path).ok()?;
+        match parse_record(&bytes, kind) {
+            Some(payload) => Some(payload),
+            None => {
+                self.quarantine(&path);
+                None
+            }
+        }
+    }
+
+    fn quarantine(&self, path: &Path) {
+        self.corrupt.fetch_add(1, Ordering::Relaxed);
+        let mut q = path.as_os_str().to_os_string();
+        q.push(".corrupt");
+        if fs::rename(path, &q).is_err() {
+            let _ = fs::remove_file(path);
+        }
+    }
+
+    // ---- validation-outcome records -------------------------------------
+
+    /// Look up the recorded evaluation for `key` (hit/miss/corrupt
+    /// counted). A checksum-valid but undecodable record (format drift)
+    /// is quarantined like a corrupt one.
+    pub fn load_eval(&self, key: u64) -> Option<EvalSlot> {
+        let name = format!("eval-{key:016x}.rec");
+        let decoded = self.read_record(&name, "eval").and_then(|p| {
+            match std::str::from_utf8(&p).ok().and_then(|s| decode_slot(s.trim_end()))
+            {
+                Some(slot) => Some(slot),
+                None => {
+                    self.quarantine(&self.dir.join(&name));
+                    None
+                }
+            }
+        });
+        match decoded {
+            Some(slot) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(slot)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn save_eval(&self, key: u64, slot: &EvalSlot) {
+        let payload = format!("{}\n", encode_slot(slot));
+        self.write_record(
+            &format!("eval-{key:016x}.rec"),
+            "eval",
+            key,
+            payload.as_bytes(),
+        );
+    }
+
+    // ---- compiled-kernel metadata records -------------------------------
+
+    /// Record that `(khash, dims)` compiled. The record is metadata
+    /// only (compiles are pure and µs-scale — recompiling is cheaper
+    /// and safer than deserializing a program); what it buys is the
+    /// cross-process hit/miss/corrupt ledger under the hoisted
+    /// [`crate::interp::CompileCache`].
+    pub fn note_compile(&self, khash: u64, dims: &DimEnv) {
+        let dims_s = dims
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let key = record_key(&["cmeta", &format!("{khash:016x}"), &dims_s]);
+        let name = format!("cmeta-{key:016x}.rec");
+        if self.read_record(&name, "cmeta").is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let payload = format!("khash {khash:016x} dims {dims_s}\n");
+        self.write_record(&name, "cmeta", key, payload.as_bytes());
+    }
+
+    // ---- winning-trajectory records -------------------------------------
+
+    /// Load the best recorded trajectory for `key` (hit/miss counted):
+    /// the move sequence and the internal speedup it measured.
+    pub fn load_trajectory(&self, key: u64) -> Option<(Vec<Move>, f64)> {
+        match self.peek_trajectory(key) {
+            Some(t) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(t)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// [`Store::load_trajectory`] without ledger traffic — the
+    /// keep-best check in [`Store::save_trajectory`] uses it.
+    fn peek_trajectory(&self, key: u64) -> Option<(Vec<Move>, f64)> {
+        let name = format!("traj-{key:016x}.rec");
+        let payload = self.read_record(&name, "traj")?;
+        let text = std::str::from_utf8(&payload).ok()?;
+        let decoded = decode_trajectory(text.trim_end());
+        if decoded.is_none() {
+            self.quarantine(&self.dir.join(&name));
+        }
+        decoded
+    }
+
+    /// Persist a winning trajectory, keep-best: an existing record with
+    /// an equal-or-better speedup is left untouched, so concurrent or
+    /// repeated runs converge on the fastest known move sequence.
+    pub fn save_trajectory(&self, key: u64, moves: &[Move], speedup: f64) {
+        if let Some((_, existing)) = self.peek_trajectory(key) {
+            if existing >= speedup {
+                return;
+            }
+        }
+        let moves_s = if moves.is_empty() {
+            "-".to_string()
+        } else {
+            moves
+                .iter()
+                .map(|m| m.name())
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        let payload =
+            format!("speedup {:016x} moves {moves_s}\n", speedup.to_bits());
+        self.write_record(
+            &format!("traj-{key:016x}.rec"),
+            "traj",
+            key,
+            payload.as_bytes(),
+        );
+    }
+
+    // ---- serving publish records ----------------------------------------
+
+    /// Persist one online-optimizer publish (write-only telemetry: the
+    /// serving harness re-derives nothing from these at runtime, but a
+    /// fleet's warm-start tooling can).
+    pub fn save_publish(
+        &self,
+        kernel_name: &str,
+        khash: u64,
+        epoch: u64,
+        speedup: f64,
+    ) {
+        let key = record_key(&["publish", kernel_name, &format!("{epoch}")]);
+        let payload = format!(
+            "kernel {} khash {khash:016x} epoch {epoch} speedup {:016x}\n",
+            esc(kernel_name),
+            speedup.to_bits()
+        );
+        self.write_record(
+            &format!("pub-{key:016x}.rec"),
+            "publish",
+            key,
+            payload.as_bytes(),
+        );
+    }
+
+    // ---- the search journal ---------------------------------------------
+
+    fn journal_path(&self, runkey: u64) -> PathBuf {
+        self.dir.join(format!("journal-{runkey:016x}.log"))
+    }
+
+    /// Append one settled round to the run's journal: a length-prefixed
+    /// checksummed frame, so a crash mid-append leaves a torn tail that
+    /// [`Store::read_rounds`] parses past as a shorter valid prefix.
+    pub fn append_round(
+        &self,
+        runkey: u64,
+        round: usize,
+        slots: &[Option<EvalSlot>],
+    ) {
+        let payload = encode_round_payload(slots);
+        let header = format!(
+            "J {round} len {} sum {:016x}\n",
+            payload.len(),
+            fnv1a(&payload)
+        );
+        let header_len = header.len();
+        let mut frame = header.into_bytes();
+        frame.extend_from_slice(&payload);
+        frame.push(b'\n');
+        match self
+            .plan
+            .roll(FaultSite::Store, faults::mix(runkey ^ 0x10_0B11, round as u64))
+        {
+            None => {}
+            Some(FaultKind::Transient) => {
+                frame.truncate(header_len + payload.len() / 2);
+            }
+            Some(FaultKind::Poison) => {
+                if payload.is_empty() {
+                    frame[0] ^= 0x01;
+                } else {
+                    let idx = header_len + (round % payload.len());
+                    frame[idx] ^= 0x01;
+                }
+            }
+            Some(FaultKind::Hang) => return, // the append never happens
+            Some(FaultKind::Panic) => {
+                frame.truncate(frame.len().min(4));
+            }
+        }
+        let append = || -> std::io::Result<()> {
+            let mut f = fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(self.journal_path(runkey))?;
+            f.write_all(&frame)?;
+            Ok(())
+        };
+        let _ = append();
+    }
+
+    /// Delete the run's journal. A store-backed run that is *not*
+    /// resuming starts a fresh journal; without this, repeated runs of
+    /// the same config would stack duplicate round frames.
+    pub fn reset_journal(&self, runkey: u64) {
+        let _ = fs::remove_file(self.journal_path(runkey));
+    }
+
+    /// Read the run's journaled rounds, in append order, stopping at
+    /// the first torn or corrupt frame (which bumps the corrupt
+    /// counter; a clean EOF does not).
+    pub fn read_rounds(&self, runkey: u64) -> Vec<JournalRound> {
+        let bytes = fs::read(self.journal_path(runkey)).unwrap_or_default();
+        let (rounds, consumed) = parse_journal(&bytes);
+        if consumed < bytes.len() {
+            self.corrupt.fetch_add(1, Ordering::Relaxed);
+        }
+        rounds
+    }
+}
+
+/// Verify one record's framing: versioned header, length, checksum.
+fn parse_record(bytes: &[u8], kind: &str) -> Option<Vec<u8>> {
+    let nl1 = bytes.iter().position(|b| *b == b'\n')?;
+    let l1 = std::str::from_utf8(&bytes[..nl1]).ok()?;
+    if l1 != format!("astra-store v1 {kind}") {
+        return None;
+    }
+    let rest = &bytes[nl1 + 1..];
+    let nl2 = rest.iter().position(|b| *b == b'\n')?;
+    let l2 = std::str::from_utf8(&rest[..nl2]).ok()?;
+    let mut it = l2.split(' ');
+    if it.next()? != "len" {
+        return None;
+    }
+    let len: usize = it.next()?.parse().ok()?;
+    if it.next()? != "sum" {
+        return None;
+    }
+    let sum = u64::from_str_radix(it.next()?, 16).ok()?;
+    if it.next().is_some() {
+        return None;
+    }
+    let payload = &rest[nl2 + 1..];
+    if payload.len() != len || fnv1a(payload) != sum {
+        return None;
+    }
+    Some(payload.to_vec())
+}
+
+/// Parse journal frames from `bytes`; returns the valid prefix of
+/// rounds plus how many bytes it consumed.
+fn parse_journal(bytes: &[u8]) -> (Vec<JournalRound>, usize) {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let Some(nl) = bytes[pos..].iter().position(|b| *b == b'\n') else {
+            break;
+        };
+        let Ok(line) = std::str::from_utf8(&bytes[pos..pos + nl]) else {
+            break;
+        };
+        let Some((round, len, sum)) = parse_frame_header(line) else {
+            break;
+        };
+        let start = pos + nl + 1;
+        if start + len + 1 > bytes.len() {
+            break; // torn tail
+        }
+        let payload = &bytes[start..start + len];
+        if bytes[start + len] != b'\n' || fnv1a(payload) != sum {
+            break;
+        }
+        let Some(slots) = decode_round_payload(payload) else {
+            break;
+        };
+        out.push(JournalRound { round, slots });
+        pos = start + len + 1;
+    }
+    (out, pos)
+}
+
+fn parse_frame_header(line: &str) -> Option<(usize, usize, u64)> {
+    let mut it = line.split(' ');
+    if it.next()? != "J" {
+        return None;
+    }
+    let round: usize = it.next()?.parse().ok()?;
+    if it.next()? != "len" {
+        return None;
+    }
+    let len: usize = it.next()?.parse().ok()?;
+    if it.next()? != "sum" {
+        return None;
+    }
+    let sum = u64::from_str_radix(it.next()?, 16).ok()?;
+    if it.next().is_some() {
+        return None;
+    }
+    Some((round, len, sum))
+}
+
+fn decode_trajectory(text: &str) -> Option<(Vec<Move>, f64)> {
+    let mut it = text.split(' ');
+    if it.next()? != "speedup" {
+        return None;
+    }
+    let bits = u64::from_str_radix(it.next()?, 16).ok()?;
+    if it.next()? != "moves" {
+        return None;
+    }
+    let moves_tok = it.next()?;
+    if it.next().is_some() {
+        return None;
+    }
+    let moves = if moves_tok == "-" {
+        Vec::new()
+    } else {
+        let mut moves = Vec::new();
+        for part in moves_tok.split(',') {
+            moves.push(move_from_name(part)?);
+        }
+        moves
+    };
+    Some((moves, f64::from_bits(bits)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestNonce;
+
+    static DIR_NONCE: TestNonce = TestNonce::new(0);
+
+    fn scratch(tag: &str) -> PathBuf {
+        let n = DIR_NONCE.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "astra-store-test-{}-{tag}-{n}",
+            std::process::id()
+        ))
+    }
+
+    fn slot(pass: bool, keys: &[u64]) -> EvalSlot {
+        EvalSlot {
+            tests: TestReport {
+                pass,
+                max_rel_err: 1.5e-3,
+                max_abs_err: 0.25,
+                failure: if pass {
+                    None
+                } else {
+                    Some("runtime failure: rel 1.5e-3 > tol".to_string())
+                },
+                cases: 6,
+                cancelled_cases: 0,
+                round_cancelled: false,
+            },
+            stats: FaultStats {
+                injected: 2,
+                survived: 2,
+                retries: 1,
+                watchdog_trips: 0,
+            },
+            probe_keys: keys.to_vec(),
+        }
+    }
+
+    #[test]
+    fn esc_round_trips_hostile_text() {
+        for s in [
+            "",
+            "plain",
+            "with space",
+            "percent % sign",
+            "newline\nand tab\t",
+            "unicode µs ±1e-3",
+            "-",
+            "%-",
+        ] {
+            let e = esc(s);
+            assert!(!e.contains(' '), "{e:?} must be a single token");
+            assert_eq!(unesc(&e).as_deref(), Some(s), "via {e:?}");
+        }
+        assert_eq!(esc_opt(&None), "-");
+        assert_eq!(unesc_opt("-"), Some(None));
+        assert_eq!(
+            unesc_opt(&esc_opt(&Some("-".to_string()))),
+            Some(Some("-".to_string()))
+        );
+    }
+
+    #[test]
+    fn move_names_round_trip() {
+        let all = [
+            Move::Hoist,
+            Move::Vectorize,
+            Move::WarpShuffle,
+            Move::FastMath,
+            Move::Unroll(4),
+            Move::Unroll(8),
+            Move::BlockSize(128),
+            Move::BlockSize(512),
+        ];
+        for m in all {
+            assert_eq!(move_from_name(&m.name()), Some(m), "{}", m.name());
+        }
+        assert_eq!(move_from_name("bogus"), None);
+        assert_eq!(move_from_name("unroll_x"), None);
+    }
+
+    #[test]
+    fn eval_slot_round_trips_exactly() {
+        for s in [
+            slot(true, &[]),
+            slot(true, &[0, u64::MAX, 0xDEAD_BEEF]),
+            slot(false, &[42]),
+            EvalSlot {
+                tests: TestReport {
+                    pass: false,
+                    max_rel_err: f32::INFINITY,
+                    max_abs_err: f32::NAN,
+                    failure: Some(String::new()),
+                    cases: 0,
+                    cancelled_cases: 3,
+                    round_cancelled: false,
+                },
+                stats: FaultStats::default(),
+                probe_keys: vec![],
+            },
+        ] {
+            let enc = encode_slot(&s);
+            let dec = decode_slot(&enc).expect(&enc);
+            // Bit-exact float round-trip (NaN included).
+            assert_eq!(
+                dec.tests.max_rel_err.to_bits(),
+                s.tests.max_rel_err.to_bits()
+            );
+            assert_eq!(
+                dec.tests.max_abs_err.to_bits(),
+                s.tests.max_abs_err.to_bits()
+            );
+            assert_eq!(dec.tests.pass, s.tests.pass);
+            assert_eq!(dec.tests.failure, s.tests.failure);
+            assert_eq!(dec.tests.cases, s.tests.cases);
+            assert_eq!(dec.tests.cancelled_cases, s.tests.cancelled_cases);
+            assert_eq!(dec.tests.round_cancelled, s.tests.round_cancelled);
+            assert_eq!(dec.stats, s.stats);
+            assert_eq!(dec.probe_keys, s.probe_keys);
+        }
+    }
+
+    #[test]
+    fn eval_records_persist_and_count() {
+        let store = Store::open(&scratch("eval")).unwrap();
+        assert_eq!(store.load_eval(7), None, "cold store misses");
+        store.save_eval(7, &slot(true, &[1, 2]));
+        let got = store.load_eval(7).expect("record persisted");
+        assert!(got.tests.pass);
+        assert_eq!(got.probe_keys, vec![1, 2]);
+        assert_eq!(
+            store.counters(),
+            StoreCounters {
+                hits: 1,
+                misses: 1,
+                corrupt: 0
+            }
+        );
+    }
+
+    #[test]
+    fn corrupt_record_is_quarantined_and_recomputed_cold() {
+        let store = Store::open(&scratch("corrupt")).unwrap();
+        store.save_eval(9, &slot(true, &[]));
+        // Flip one payload bit behind the checksum's back.
+        let path = store.dir().join(format!("eval-{:016x}.rec", 9u64));
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 2;
+        bytes[last] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        assert_eq!(store.load_eval(9), None, "corrupt record must not load");
+        let c = store.counters();
+        assert_eq!(c.corrupt, 1);
+        assert!(!path.exists(), "corrupt record must be moved aside");
+        let sidecar = store.dir().join(format!("eval-{:016x}.rec.corrupt", 9u64));
+        assert!(sidecar.exists(), "quarantine sidecar must exist");
+        // Truncation is detected the same way.
+        store.save_eval(9, &slot(true, &[]));
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert_eq!(store.load_eval(9), None);
+        assert_eq!(store.counters().corrupt, 2);
+    }
+
+    #[test]
+    fn trajectory_keep_best_semantics() {
+        let store = Store::open(&scratch("traj")).unwrap();
+        assert_eq!(store.load_trajectory(3), None);
+        store.save_trajectory(3, &[Move::Hoist, Move::Unroll(4)], 1.5);
+        let (moves, sp) = store.load_trajectory(3).unwrap();
+        assert_eq!(moves, vec![Move::Hoist, Move::Unroll(4)]);
+        assert_eq!(sp.to_bits(), 1.5f64.to_bits());
+        // A slower trajectory must not displace the stored one.
+        store.save_trajectory(3, &[Move::FastMath], 1.2);
+        let (moves, _) = store.load_trajectory(3).unwrap();
+        assert_eq!(moves, vec![Move::Hoist, Move::Unroll(4)]);
+        // A faster one must.
+        store.save_trajectory(3, &[Move::WarpShuffle], 2.0);
+        let (moves, sp) = store.load_trajectory(3).unwrap();
+        assert_eq!(moves, vec![Move::WarpShuffle]);
+        assert_eq!(sp.to_bits(), 2.0f64.to_bits());
+    }
+
+    #[test]
+    fn journal_round_trips_and_survives_torn_tail() {
+        let store = Store::open(&scratch("journal")).unwrap();
+        let runkey = 0xABCD;
+        store.append_round(runkey, 1, &[Some(slot(true, &[5])), None]);
+        store.append_round(runkey, 2, &[Some(slot(false, &[]))]);
+        let rounds = store.read_rounds(runkey);
+        assert_eq!(rounds.len(), 2);
+        assert_eq!(rounds[0].round, 1);
+        assert_eq!(rounds[0].slots.len(), 2);
+        assert!(rounds[0].slots[0].is_some());
+        assert!(rounds[0].slots[1].is_none());
+        assert_eq!(rounds[1].round, 2);
+        assert_eq!(store.counters().corrupt, 0, "clean EOF is not corrupt");
+        // Tear the tail mid-frame: the prefix must still parse.
+        let path = store.dir().join(format!("journal-{runkey:016x}.log"));
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        let rounds = store.read_rounds(runkey);
+        assert_eq!(rounds.len(), 1, "torn tail must drop only the last frame");
+        assert_eq!(store.counters().corrupt, 1);
+        // A mid-journal bit flip stops replay at the flip.
+        fs::write(&path, &bytes).unwrap();
+        let mut flipped = bytes.clone();
+        let idx = bytes.len() / 4;
+        flipped[idx] ^= 0x01;
+        fs::write(&path, &flipped).unwrap();
+        assert!(store.read_rounds(runkey).len() <= 1);
+    }
+
+    #[test]
+    fn injected_store_faults_are_always_detected() {
+        // Every fault shape the store site produces must yield either
+        // an absent record or a detected-corrupt one — never a load of
+        // wrong data.
+        let plan = FaultPlan {
+            rate: 1.0,
+            seed: 13,
+            sites: FaultSite::Store.bit(),
+        };
+        let store = Store::open(&scratch("faults")).unwrap().with_faults(plan);
+        let reference = slot(true, &[3, 4]);
+        for key in 0..64u64 {
+            store.save_eval(key, &reference);
+            match store.load_eval(key) {
+                None => {}
+                Some(got) => {
+                    assert_eq!(got, reference, "key {key}: wrong data loaded")
+                }
+            }
+        }
+        // At rate 1 every write faults; no record can land fully
+        // intact, so hits stay zero and every lookup misses (absent on
+        // failed renames, quarantined-corrupt otherwise).
+        let c = store.counters();
+        assert_eq!(c.hits, 0, "rate-1 store faults must corrupt every write");
+        assert_eq!(c.misses, 64);
+        assert!(c.corrupt >= 1, "some fault shapes must be detected-corrupt");
+    }
+
+    #[test]
+    fn record_key_is_stable_and_part_sensitive() {
+        let a = record_key(&["eval", "abc", "1"]);
+        assert_eq!(a, record_key(&["eval", "abc", "1"]));
+        assert_ne!(a, record_key(&["eval", "abc", "2"]));
+        assert_ne!(a, record_key(&["eval", "ab", "c1"]));
+        assert_ne!(record_key(&["a|b"]), record_key(&["a", "b"]));
+    }
+}

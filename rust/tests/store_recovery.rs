@@ -1,0 +1,399 @@
+//! Crash-consistency acceptance wall for the artifact store: a store —
+//! fresh, warm, killed mid-run, corrupted on disk, or actively faulted —
+//! may shift the `store_*` ledger counters and nothing else. The
+//! shipped kernel, the round records, the cache counters, and the fault
+//! telemetry must stay byte-identical to a storeless run; `--resume`
+//! must reconstruct a killed run from the journal bit-for-bit.
+
+use astra::coordinator::{optimize, Config, Outcome};
+use astra::faults::{self, FaultPlan, FaultSite};
+use astra::kernels;
+use astra::report;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static DIR_NONCE: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh scratch store directory (process-unique, no clock/PRNG —
+/// the suite stays deterministic and parallel-safe).
+fn scratch(tag: &str) -> PathBuf {
+    let n = DIR_NONCE.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "astra-store-recovery-{}-{tag}-{n}",
+        std::process::id()
+    ))
+}
+
+fn with_store(dir: &Path, cfg: &Config) -> Config {
+    Config {
+        store_dir: Some(dir.to_string_lossy().into_owned()),
+        ..cfg.clone()
+    }
+}
+
+/// Whether the config's (possibly environment-supplied) fault plan can
+/// fire at the store site — under it, journal frames may legitimately
+/// be torn or skipped, so replayed-round counts are bounded, not exact.
+fn ambient_store_faults(cfg: &Config) -> bool {
+    cfg.fault.enabled() && cfg.fault.sites & FaultSite::Store.bit() != 0
+}
+
+/// Rendered trace minus the `store:` and `speculation:` footers — the
+/// only lines that legitimately differ between a storeless run and its
+/// store-backed / resumed twins.
+fn trace_sans_store(o: &Outcome) -> String {
+    report::trace(o)
+        .lines()
+        .filter(|l| !l.starts_with("store:") && !l.starts_with("speculation:"))
+        .map(|l| format!("{l}\n"))
+        .collect()
+}
+
+/// Everything the store is forbidden to change: results, records, and
+/// every non-store ledger counter. The `store_*` counters (and the
+/// speculation ledger, compared only by the pipelined differential
+/// wall) are deliberately excluded.
+fn assert_same_results(a: &Outcome, b: &Outcome, label: &str) {
+    assert_eq!(a.records, b.records, "{label}: records diverge");
+    assert_eq!(a.best, b.best, "{label}: best kernel diverges");
+    assert_eq!(a.baseline, b.baseline, "{label}: baseline diverges");
+    assert_eq!(
+        a.final_speedup.to_bits(),
+        b.final_speedup.to_bits(),
+        "{label}: final_speedup {} vs {}",
+        a.final_speedup,
+        b.final_speedup
+    );
+    assert_eq!(a.final_correct, b.final_correct, "{label}: final_correct");
+    assert_eq!(a.per_shape, b.per_shape, "{label}: per-shape table");
+    assert_eq!(a.baseline_loc, b.baseline_loc, "{label}: baseline loc");
+    assert_eq!(a.best_loc, b.best_loc, "{label}: best loc");
+    assert_eq!(
+        a.base_mean_us.to_bits(),
+        b.base_mean_us.to_bits(),
+        "{label}: base mean"
+    );
+    assert_eq!(
+        a.opt_mean_us.to_bits(),
+        b.opt_mean_us.to_bits(),
+        "{label}: opt mean"
+    );
+    assert_eq!(
+        a.candidates_evaluated, b.candidates_evaluated,
+        "{label}: candidates evaluated"
+    );
+    assert_eq!(a.k_per_round, b.k_per_round, "{label}: chosen K log");
+    assert_eq!(
+        a.adaptive_k_rounds, b.adaptive_k_rounds,
+        "{label}: adaptive K events"
+    );
+    assert_eq!(
+        a.cancelled_candidates, b.cancelled_candidates,
+        "{label}: cancelled candidates"
+    );
+    assert_eq!(a.cache_hits, b.cache_hits, "{label}: cache hits");
+    assert_eq!(a.cache_misses, b.cache_misses, "{label}: cache misses");
+    assert_eq!(
+        (
+            a.faults_injected,
+            a.faults_survived,
+            a.retries,
+            a.watchdog_trips,
+            a.quarantined_lineages,
+        ),
+        (
+            b.faults_injected,
+            b.faults_survived,
+            b.retries,
+            b.watchdog_trips,
+            b.quarantined_lineages,
+        ),
+        "{label}: fault telemetry"
+    );
+    assert_eq!(
+        trace_sans_store(a),
+        trace_sans_store(b),
+        "{label}: trace (sans store/speculation footers)"
+    );
+}
+
+#[test]
+fn fresh_store_changes_nothing_but_the_store_ledger() {
+    // Cold store ≡ storeless, byte-for-byte, for every kernel and the
+    // wide-beam preset: persistence is an observer on its first pass.
+    for (tag, cfg) in [
+        ("greedy", Config::multi_agent()),
+        ("beam", Config::multi_agent_beam()),
+    ] {
+        for spec in kernels::all_specs() {
+            let dir = scratch(&format!("cold-{tag}"));
+            let stock = optimize(&spec, &cfg);
+            let cold = optimize(&spec, &with_store(&dir, &cfg));
+            let label = format!("{} / {tag} cold store", spec.paper_name);
+            assert_same_results(&stock, &cold, &label);
+            assert_eq!(
+                (stock.store_hits, stock.store_misses, stock.resumed_rounds),
+                (0, 0, 0),
+                "{label}: storeless run must keep a zero store ledger"
+            );
+            assert!(
+                cold.store_misses > 0,
+                "{label}: a cold store that never missed never looked"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn warm_rerun_is_byte_identical_and_hits_the_store() {
+    // Second run over the same store: every validation verdict and the
+    // winning trajectory are already on disk. The outcome must not move
+    // by a bit, and the ledger must show the store actually being read.
+    let spec = kernels::rmsnorm::spec();
+    let cfg = Config {
+        fault: FaultPlan::disabled(),
+        ..Config::multi_agent()
+    };
+    let dir = scratch("warm");
+    let cold = optimize(&spec, &with_store(&dir, &cfg));
+    let warm = optimize(&spec, &with_store(&dir, &cfg));
+    assert_same_results(&cold, &warm, "warm rerun");
+    assert!(
+        warm.store_hits > 0,
+        "warm rerun never hit the store (hits=0, misses={})",
+        warm.store_misses
+    );
+    let trace = report::trace(&warm);
+    assert!(
+        trace.contains("store:") && trace.contains("hits"),
+        "trace omits the store footer:\n{trace}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_faults_shift_counters_never_the_kernel() {
+    // Store-site chaos: torn writes, bit flips, failed renames, and
+    // truncated headers at brutal rates. Detected corruption recomputes
+    // cold — the whole outcome (records, kernels, telemetry, cache
+    // counters) stays byte-identical to a storeless run with faults
+    // off; only the store ledger may move. A seed scan must also
+    // witness actual quarantining, or the injection plane is dead.
+    let spec = kernels::silu::spec();
+    let base_cfg = Config {
+        fault: FaultPlan::disabled(),
+        ..Config::multi_agent()
+    };
+    let stock = optimize(&spec, &base_cfg);
+    let mut corrupt_witnessed = false;
+    for rate in [0.3f32, 0.9] {
+        for seed in 1..=6u64 {
+            let dir = scratch("chaos");
+            let cfg = Config {
+                fault: FaultPlan {
+                    rate,
+                    seed,
+                    sites: FaultSite::Store.bit(),
+                },
+                ..with_store(&dir, &base_cfg)
+            };
+            // Two passes: the first populates (through faulted writes),
+            // the second reads the damage back. Both must match stock.
+            let first = optimize(&spec, &cfg);
+            let second = optimize(&spec, &cfg);
+            let label = format!("store chaos rate {rate} seed {seed}");
+            assert_same_results(&stock, &first, &format!("{label} / pass 1"));
+            assert_same_results(&stock, &second, &format!("{label} / pass 2"));
+            if first.store_corrupt_entries + second.store_corrupt_entries > 0 {
+                corrupt_witnessed = true;
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+    assert!(
+        corrupt_witnessed,
+        "no (rate, seed) in the scan quarantined a corrupt entry — \
+         store-fault injection is likely dead"
+    );
+}
+
+#[test]
+fn kill_and_resume_is_byte_identical_to_uninterrupted() {
+    // Kill the run right after each journal checkpoint, then resume
+    // from the journal: the resumed outcome must equal a storeless
+    // uninterrupted run in everything but the store ledger, and must
+    // report exactly the replayed rounds.
+    let spec = kernels::merge::spec();
+    let cfg = Config::multi_agent();
+    assert_eq!((cfg.beam_width, cfg.candidates_per_round), (1, 1));
+    let stock = optimize(&spec, &cfg);
+    for kill_round in 1..cfg.rounds {
+        let dir = scratch("kill");
+        let killed_cfg = Config {
+            kill_after_round: kill_round,
+            ..with_store(&dir, &cfg)
+        };
+        let killed = optimize(&spec, &killed_cfg);
+        assert!(
+            killed.records.len() < stock.records.len(),
+            "kill at round {kill_round} did not truncate the run \
+             ({} vs {} records)",
+            killed.records.len(),
+            stock.records.len()
+        );
+        let resumed = optimize(
+            &spec,
+            &Config {
+                resume: true,
+                ..with_store(&dir, &cfg)
+            },
+        );
+        let label = format!("resume after kill at round {kill_round}");
+        assert_same_results(&stock, &resumed, &label);
+        assert_eq!(
+            stock.peak_concurrent_evals, resumed.peak_concurrent_evals,
+            "{label}: peak concurrency"
+        );
+        // Ambient store-site faults (the CI chaos leg) may legitimately
+        // tear or skip a journal frame — the replayed prefix shortens,
+        // the outcome above must not move. Exact only when clean.
+        if ambient_store_faults(&cfg) {
+            assert!(
+                resumed.resumed_rounds <= kill_round as u64,
+                "{label}: replayed more rounds than were journaled"
+            );
+        } else {
+            assert_eq!(
+                resumed.resumed_rounds, kill_round as u64,
+                "{label}: replayed-round count"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn resume_without_a_journal_is_a_plain_cold_start() {
+    // `--resume` against a store that never journaled this run key must
+    // degrade to a cold start, not fail or drift.
+    let spec = kernels::silu::spec();
+    let cfg = Config::multi_agent();
+    let stock = optimize(&spec, &cfg);
+    let dir = scratch("no-journal");
+    let resumed = optimize(
+        &spec,
+        &Config {
+            resume: true,
+            ..with_store(&dir, &cfg)
+        },
+    );
+    assert_same_results(&stock, &resumed, "resume on empty store");
+    assert_eq!(resumed.resumed_rounds, 0, "nothing existed to replay");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_survives_randomized_kill_and_corruption() {
+    // Property trial, deterministically seeded: kill at a derived
+    // checkpoint, flip or tear a derived store file, resume. Whatever
+    // got damaged — an eval record, compile metadata, the journal
+    // itself — the resumed run must still land byte-identical to the
+    // uninterrupted storeless run and oracle-valid. (A damaged journal
+    // legitimately shortens the replayed prefix; the re-executed rounds
+    // must reproduce the same history.)
+    let spec = kernels::rmsnorm::spec();
+    let cfg = Config::multi_agent();
+    let stock = optimize(&spec, &cfg);
+    assert!(stock.final_correct);
+    for trial in 0..6u64 {
+        let dir = scratch("prop");
+        let kill_round = 1 + (faults::mix(0xC0FF_EE00, trial) % (cfg.rounds as u64 - 1)) as usize;
+        let _ = optimize(
+            &spec,
+            &Config {
+                kill_after_round: kill_round,
+                ..with_store(&dir, &cfg)
+            },
+        );
+        // Pick the victim file by sorted name (read_dir order is not
+        // deterministic) and damage it mid-file.
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .expect("store dir must exist after the killed run")
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        assert!(!names.is_empty(), "trial {trial}: killed run wrote nothing");
+        let victim =
+            dir.join(&names[(faults::mix(0xBAD_F11E, trial) % names.len() as u64) as usize]);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        if trial % 2 == 0 && !bytes.is_empty() {
+            let off = bytes.len() / 2;
+            bytes[off] ^= 0x40;
+        } else {
+            bytes.truncate(bytes.len() / 2);
+        }
+        std::fs::write(&victim, &bytes).unwrap();
+        let resumed = optimize(
+            &spec,
+            &Config {
+                resume: true,
+                ..with_store(&dir, &cfg)
+            },
+        );
+        let label = format!(
+            "trial {trial}: kill@{kill_round}, corrupted {}",
+            victim.file_name().unwrap().to_string_lossy()
+        );
+        assert_same_results(&stock, &resumed, &label);
+        assert!(resumed.final_correct, "{label}: shipped an invalid kernel");
+        assert!(
+            resumed.resumed_rounds <= kill_round as u64,
+            "{label}: replayed more rounds than were journaled"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn pipelined_kill_and_resume_matches_the_uninterrupted_run() {
+    // The pipelined engine journals its settled rounds too; a kill
+    // there resumes through the barriered replay path (resume always
+    // dispatches to it) and must still reproduce the uninterrupted
+    // pipelined run's results — the two engines are byte-identical by
+    // the differential wall, so one journal serves both.
+    let spec = kernels::silu::spec();
+    let cfg = Config::multi_agent_pipelined();
+    let stock = optimize(&spec, &cfg);
+    for kill_round in [1usize, 3] {
+        let dir = scratch("pipe-kill");
+        let _ = optimize(
+            &spec,
+            &Config {
+                kill_after_round: kill_round,
+                ..with_store(&dir, &cfg)
+            },
+        );
+        let resumed = optimize(
+            &spec,
+            &Config {
+                resume: true,
+                ..with_store(&dir, &cfg)
+            },
+        );
+        let label = format!("pipelined resume after kill at round {kill_round}");
+        assert_same_results(&stock, &resumed, &label);
+        if ambient_store_faults(&cfg) {
+            assert!(
+                resumed.resumed_rounds <= kill_round as u64,
+                "{label}: replayed more rounds than were journaled"
+            );
+        } else {
+            assert_eq!(
+                resumed.resumed_rounds, kill_round as u64,
+                "{label}: replayed-round count"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

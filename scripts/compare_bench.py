@@ -36,12 +36,18 @@ workload, not a regression axis), the cross-run compile-cache counters
 visible without flaking the build on scheduler noise in the end-to-end
 runs.
 
+Schema v9 adds the artifact-store warm-start numbers:
+`warm_optimize_ms` (lower-is-better, gated — a warm run sliding back
+toward cold means the store stopped replaying) plus the informational
+`cold_optimize_ms` and `warm_store_hits`.
+
 Older-schema files (v1 without `search_cps`/`beam_optimize_ms`, v2
 without the grid and cache fields, v3 without the zero-copy fields, v4
 without the adaptive fields, v5 without the chaos fields, v6 without
-the pipelined fields, v7 without the serving block) compare cleanly:
-absent metrics are simply skipped, so the first run after a schema
-bump never fails on the artifact from before the bump.
+the pipelined fields, v7 without the serving block, v8 without the
+warm-start fields) compare cleanly: absent metrics are simply skipped,
+so the first run after a schema bump never fails on the artifact from
+before the bump.
 
 Usage:
     python3 compare_bench.py <old.json> <new.json> [--max-regression 0.15]
@@ -61,6 +67,10 @@ GATED_LOWER = [
     "grid_parallel_ms",
     "beam_optimize_ms",
     "pipelined_optimize_ms",
+    # v9 schema: warm-start run over a populated artifact store. Gated
+    # because replaying recorded verdicts is the store's whole perf
+    # claim — if the warm run drifts back toward cold, the store rotted.
+    "warm_optimize_ms",
 ]
 
 # Higher-is-better per-kernel metrics that fail the gate on a drop.
@@ -93,6 +103,12 @@ INFORMATIONAL = [
     ("speculation_hit_rate", "spec_hit_rate", "{:>10.3f}"),
     ("speculated_lineages", "speculated", "{:>10.0f}"),
     ("aborted_lineages", "spec_aborted", "{:>10.0f}"),
+    # v9 schema: artifact-store warm start. The cold run median includes
+    # store-wipe + journaling I/O on a shared CI disk (noisy), and the
+    # hit counter is deterministic and test-pinned — informational; the
+    # warm median itself is gated above.
+    ("cold_optimize_ms", "cold_ms", "{:>10.3f}"),
+    ("warm_store_hits", "store_hits", "{:>10.0f}"),
 ]
 
 # v8 schema: concurrent-serving envelope, gated per routing variant.

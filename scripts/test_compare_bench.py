@@ -8,16 +8,17 @@ Run directly (no pytest in the offline image):
 Covers: regression above threshold fails for every gated metric —
 interpret_ms, grid_parallel_ms (schema v4), the search-throughput pair
 since schema v5 (beam_optimize_ms lower-is-better, search_cps
-higher-is-better), pipelined_optimize_ms since schema v7, and the
+higher-is-better), pipelined_optimize_ms since schema v7, the
 per-variant serving pair since schema v8 (serve_p50_us
-lower-is-better, serve_tokens_per_s higher-is-better) — below passes,
-missing previous-run file skips cleanly, older-schema
-(v1/v2/v3/v4/v5/v6/v7) baselines compare without crashing against
+lower-is-better, serve_tokens_per_s higher-is-better), and the
+artifact-store warm-start median since schema v9 (warm_optimize_ms) —
+below passes, missing previous-run file skips cleanly, older-schema
+(v1/v2/v3/v4/v5/v6/v7/v8) baselines compare without crashing against
 newer output, and the informational fields (grid_zerocopy_ms,
 sliced_launches, the v5 adaptive-scheduler fields incl. the
 k_histogram dict, the v6 chaos-supervision fields, the v7
-speculation-ledger fields and the v8 serving tail/fallback/trip
-fields) are reported without gating.
+speculation-ledger fields, the v8 serving tail/fallback/trip fields
+and the v9 cold/store-hit fields) are reported without gating.
 """
 
 import json
@@ -503,6 +504,67 @@ class CompareBenchTest(unittest.TestCase):
         )
         new = self.write("new.json", bench_json(1.0, serving=serving_block()))
         self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_warm_optimize_regression_fails_the_gate(self):
+        # Schema v9 gates the warm-start run median: replaying recorded
+        # verdicts is the store's whole perf claim, so a warm run
+        # sliding back toward cold beyond the threshold fails.
+        old = self.write(
+            "old.json", bench_json(1.0, warm_optimize_ms=50.0)
+        )
+        new = self.write(
+            "new.json", bench_json(1.0, warm_optimize_ms=75.0)  # +50%
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 1)
+
+    def test_warm_optimize_within_tolerance_passes(self):
+        old = self.write(
+            "old.json", bench_json(1.0, warm_optimize_ms=50.0)
+        )
+        new = self.write(
+            "new.json", bench_json(1.0, warm_optimize_ms=55.0)  # +10%
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_store_cold_and_hit_fields_are_informational_only(self):
+        # cold_optimize_ms includes store-wipe I/O on a shared runner
+        # and warm_store_hits is deterministic and test-pinned — wild
+        # swings in either must neither gate nor crash.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, warm_optimize_ms=50.0, cold_optimize_ms=100.0,
+                       warm_store_hits=30),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0, warm_optimize_ms=52.0, cold_optimize_ms=900.0,
+                       warm_store_hits=0),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+
+    def test_older_v8_schema_baseline_is_graceful_for_v9(self):
+        # v8: no warm-start fields — the first v9 run must compare
+        # cleanly and still gate the search pair against the v8
+        # baseline.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, schema="astra-hotpath-v8", search_cps=100.0,
+                       beam_optimize_ms=300.0, serving=serving_block()),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0, schema="astra-hotpath-v9", search_cps=101.0,
+                       beam_optimize_ms=299.0, serving=serving_block(),
+                       warm_optimize_ms=50.0, cold_optimize_ms=120.0,
+                       warm_store_hits=30),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+        dropped = self.write(
+            "dropped.json",
+            bench_json(1.0, schema="astra-hotpath-v9", search_cps=60.0,
+                       beam_optimize_ms=300.0, serving=serving_block()),
+        )
+        self.assertEqual(self.run_main(old, dropped, 0.15), 1)
 
     def test_older_v3_schema_baseline_is_graceful(self):
         # v3: grid_parallel fields present, zero-copy fields and
