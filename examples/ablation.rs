@@ -10,12 +10,22 @@
 //! 5. Speculative search: final speedup, candidates evaluated and wall
 //!    clock as the beam widens from the paper's greedy loop (B=1, K=1)
 //!    to concurrent multi-candidate rounds (EXPERIMENTS.md §Beam).
+//! 6. Adaptive speculation: priority-gap-driven K plus round
+//!    cancellation vs the matching static beam row
+//!    (EXPERIMENTS.md §Adaptive-K).
+//! 7. Scenario specialization: one search per serving scenario
+//!    (decode-small-batch vs prefill-large-batch dim sets) vs the single
+//!    global winner, cross-evaluated on each scenario's shapes
+//!    (EXPERIMENTS.md §Per-scenario).
 //!
 //! ```bash
 //! cargo run --release --example ablation
 //! ```
 
-use astra::coordinator::{optimize, AgentMode, Config};
+use std::sync::Arc;
+
+use astra::coordinator::{optimize, optimize_scenarios, AgentMode, Config};
+use astra::interp::{CompileCache, WorkerBudget};
 use astra::kernels;
 use astra::sim::{self, GpuModel};
 use astra::transforms::{self, Move};
@@ -179,5 +189,55 @@ fn main() {
             );
         }
         println!();
+    }
+
+    // ---- 7. per-scenario winners vs one global winner ---------------------
+    // EXPERIMENTS.md §Per-scenario: does searching per serving scenario
+    // (decode vs prefill dim sets from the catalog) beat shipping the
+    // one global winner everywhere? For each bucket we report the
+    // specialized search's speedup on its own shapes next to the global
+    // winner cross-evaluated on those same shapes; `!=` marks buckets
+    // whose specialized composition differs from the global one. With
+    // scenario_split off the table collapses to a single "global"
+    // bucket — byte-identical to the legacy engine (tests/dispatch.rs).
+    println!("\n== Ablation 7: per-scenario winners vs one global winner ==");
+    println!(
+        "  {:<24} {:<9} {:>9} {:>10} {:>8}",
+        "kernel", "scenario", "special", "global@sc", "differs"
+    );
+    let cache = Arc::new(CompileCache::with_default_capacity());
+    let budget = Arc::new(WorkerBudget::from_config(0));
+    let global_cfg = Config {
+        bug_rate: 0.0,
+        temperature: 0.0,
+        ..Config::multi_agent()
+    };
+    let split_cfg = Config {
+        scenario_split: true,
+        dispatch: true,
+        ..global_cfg.clone()
+    };
+    for spec in kernels::all_specs() {
+        let global_run = optimize_scenarios(&spec, &global_cfg, &cache, &budget);
+        let global = &global_run[0];
+        let per_scenario = optimize_scenarios(&spec, &split_cfg, &cache, &budget);
+        let base = (spec.build_baseline)();
+        let buckets = (spec.scenarios)();
+        for s in &per_scenario {
+            // The global winner, re-profiled on this bucket's dim set.
+            let shapes = &buckets[s.scenario_index].shapes;
+            let b = sim::profile_shapes(&model, &base, shapes);
+            let g = sim::profile_shapes(&model, &global.outcome.best, shapes);
+            let differs = astra::interp::kernel_hash(&s.outcome.best)
+                != astra::interp::kernel_hash(&global.outcome.best);
+            println!(
+                "  {:<24} {:<9} {:>8.2}x {:>9.2}x {:>8}",
+                spec.paper_name,
+                s.scenario,
+                s.outcome.final_speedup,
+                sim::geomean_speedup(&b, &g),
+                if differs { "yes" } else { "no" }
+            );
+        }
     }
 }

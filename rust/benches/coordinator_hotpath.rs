@@ -109,6 +109,11 @@ struct KernelRow {
     /// Store hits from the (deterministic) warm run — the witness that
     /// the warm number actually read the store.
     warm_store_hits: u64,
+    /// Per-scenario searches (schema v10): `(scenario name, median ms)`
+    /// for one greedy run retargeted to each catalog scenario bucket's
+    /// shapes — the per-(kernel, scenario) cost the dispatch ablation
+    /// pays. Informational in `compare_bench.py` (bucket sets may grow).
+    scenario_optimize_ms: Vec<(String, f64)>,
 }
 
 /// Per-variant medians from the concurrent serving harness (schema v8):
@@ -462,6 +467,26 @@ fn main() {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // Per-scenario searches (schema v10): one greedy run per catalog
+    // scenario bucket, perf shapes retargeted to the bucket's dim sets
+    // via `with_shapes` — the unit of work `--scenarios split` multiplies
+    // by, and the cost column of the per-scenario-winners ablation.
+    println!();
+    for (spec, row) in kernels::all_specs().iter().zip(&mut rows) {
+        for bucket in (spec.scenarios)() {
+            let bspec = spec.with_shapes(bucket.shapes.clone());
+            let s = bench(1, 5, || optimize(&bspec, &cfg));
+            row.scenario_optimize_ms
+                .push((bucket.name.to_string(), s.median_ms()));
+            println!(
+                "scenario-optimize {:<14} {:<8} median {:>8.1} ms/run",
+                spec.paper_name,
+                bucket.name,
+                s.median_ms()
+            );
+        }
+    }
+
     // Concurrent serving harness (schema v8): 4 client streams over the
     // dynamic batcher at a mid-size serving shape, faults and the online
     // optimizer off — the steady-state latency envelope per routing
@@ -517,6 +542,50 @@ fn main() {
         });
     }
 
+    // Per-scenario dispatch hit counters (schema v10): one serve run
+    // with `--dispatch --scenarios split`, optimized routing — how many
+    // timed requests each (kernel, scenario) slot actually served under
+    // the bench's mix and shapes. Exported so CI can watch the dispatch
+    // plane stay live (all-zero rows would mean dead buckets).
+    println!();
+    let dispatch_cfg = Config {
+        dispatch: true,
+        scenario_split: true,
+        ..serve_run_cfg.clone()
+    };
+    let dispatch_rep = serve_concurrent(
+        &dispatch_cfg,
+        &serve_shapes,
+        &ServeHarnessOptions {
+            steps: 30,
+            warmup: 3,
+            route_optimized: true,
+        },
+        &serve_cache,
+        &serve_budget,
+    )
+    .expect("bench dispatch serve run");
+    let dispatch_hits: Vec<(String, Vec<(String, u64)>)> = kernels::all_specs()
+        .iter()
+        .zip(&dispatch_rep.dispatch_hits)
+        .map(|(spec, hits)| {
+            let buckets = (spec.scenarios)()
+                .iter()
+                .zip(hits)
+                .map(|(b, h)| (b.name.to_string(), *h))
+                .collect();
+            (spec.paper_name.to_string(), buckets)
+        })
+        .collect();
+    for (kernel, buckets) in &dispatch_hits {
+        let cols = buckets
+            .iter()
+            .map(|(n, h)| format!("{n}:{h}"))
+            .collect::<Vec<_>>()
+            .join("  ");
+        println!("dispatch-hits {:<19} {}", kernel, cols);
+    }
+
     // Cross-run shared compile cache: two identical optimize-all batches
     // over one Arc'd cache — the second must be (nearly) hit-only, and
     // the counters land in the JSON so CI can watch the reuse rate.
@@ -551,7 +620,7 @@ fn main() {
         let path = "BENCH_hotpath.json";
         std::fs::write(
             path,
-            render_json(&rows, &serving, cross, sliced_launches),
+            render_json(&rows, &serving, &dispatch_hits, cross, sliced_launches),
         )
         .expect("write BENCH_hotpath.json");
         println!("\nwrote {path}");
@@ -562,17 +631,24 @@ fn main() {
 fn render_json(
     rows: &[KernelRow],
     serving: &[ServingRow],
+    dispatch_hits: &[(String, Vec<(String, u64)>)],
     cross: CrossRunCache,
     sliced_launches: u64,
 ) -> String {
     let mut out = String::new();
-    out.push_str("{\n  \"schema\": \"astra-hotpath-v9\",\n  \"kernels\": {\n");
+    out.push_str("{\n  \"schema\": \"astra-hotpath-v10\",\n  \"kernels\": {\n");
     for (i, r) in rows.iter().enumerate() {
         let k_hist = r
             .k_hist
             .iter()
             .enumerate()
             .map(|(k, n)| format!("\"{}\": {}", k + 1, n))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let scenario_map = r
+            .scenario_optimize_ms
+            .iter()
+            .map(|(n, ms)| format!("\"{n}\": {ms:.3}"))
             .collect::<Vec<_>>()
             .join(", ");
         out.push_str(&format!(
@@ -605,7 +681,8 @@ fn render_json(
              \"aborted_lineages\": {},\n      \
              \"cold_optimize_ms\": {:.3},\n      \
              \"warm_optimize_ms\": {:.3},\n      \
-             \"warm_store_hits\": {}\n    }}{}\n",
+             \"warm_store_hits\": {},\n      \
+             \"scenario_optimize_ms\": {{{}}}\n    }}{}\n",
             r.name,
             r.simulate_us,
             r.interpret_ref_ms,
@@ -639,6 +716,7 @@ fn render_json(
             r.cold_optimize_ms,
             r.warm_optimize_ms,
             r.warm_store_hits,
+            scenario_map,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -658,6 +736,21 @@ fn render_json(
             s.serve_fallback_steps,
             s.serve_breaker_trips,
             if i + 1 == serving.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  },\n");
+    out.push_str("  \"dispatch_hits\": {\n");
+    for (i, (kernel, buckets)) in dispatch_hits.iter().enumerate() {
+        let cols = buckets
+            .iter()
+            .map(|(n, h)| format!("\"{n}\": {h}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        out.push_str(&format!(
+            "    \"{}\": {{{}}}{}\n",
+            kernel,
+            cols,
+            if i + 1 == dispatch_hits.len() { "" } else { "," }
         ));
     }
     out.push_str("  },\n");

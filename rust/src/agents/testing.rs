@@ -272,7 +272,7 @@ impl TestingAgent {
         match self.quality {
             TestQuality::Representative => TestSuite {
                 correctness_shapes: (spec.test_shapes)(),
-                perf_shapes: (spec.representative_shapes)(),
+                perf_shapes: spec.rep_shapes(),
                 seed: self.seed,
                 quality: self.quality,
             },

@@ -53,12 +53,19 @@
 //!
 //! # concurrent serving harness (0 clients = the legacy single-stream
 //! # serve loop); request_mix is "uniform" or name:weight pairs over
-//! # merge/rmsnorm/silu; online_optimize hot-swaps better variants at
-//! # every swap_interval-th timed step
+//! # merge/rmsnorm/silu/softmax/layernorm; online_optimize hot-swaps
+//! # better variants at every swap_interval-th timed step
 //! clients = 4
 //! request_mix = "merge:2,rmsnorm:1,silu:1"
 //! online_optimize = true
 //! swap_interval = 8
+//!
+//! # per-scenario optimization + dispatch: "split" runs one search per
+//! # scenario bucket (prefill/decode dim sets, see the kernel catalog);
+//! # dispatch = true routes each serve request's launch shape through
+//! # the per-scenario dispatch table
+//! scenarios = "split"
+//! dispatch = true
 //!
 //! # crash-consistent artifact store: warm-start from recorded
 //! # trajectories/verdicts, and resume a killed run from its journal
@@ -186,6 +193,18 @@ pub fn apply(
             };
         }
         "resume" => cfg.resume = parse_bool(value)?,
+        "scenarios" => {
+            cfg.scenario_split = match value {
+                "global" => false,
+                "split" => true,
+                other => {
+                    return Err(anyhow!(
+                        "scenarios must be \"global\" or \"split\", got {other}"
+                    ))
+                }
+            };
+        }
+        "dispatch" => cfg.dispatch = parse_bool(value)?,
         "online_optimize" => cfg.online_optimize = parse_bool(value)?,
         "swap_interval" => {
             cfg.swap_interval = value.parse()?;
@@ -256,6 +275,8 @@ pub fn render(cfg: &Config) -> String {
          swap_interval = {}\n\
          store = \"{}\"\n\
          resume = {}\n\
+         scenarios = \"{}\"\n\
+         dispatch = {}\n\
          launch_overhead_us = {}\n\
          dram_bw = {}\n\
          sms = {}\n\
@@ -290,6 +311,8 @@ pub fn render(cfg: &Config) -> String {
         cfg.swap_interval,
         cfg.store_dir.as_deref().unwrap_or(""),
         cfg.resume,
+        if cfg.scenario_split { "split" } else { "global" },
+        cfg.dispatch,
         m.launch_overhead_us,
         m.dram_bw,
         m.sms,
@@ -444,7 +467,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.clients, 4);
-        assert_eq!(cfg.request_mix.weights, [2, 0, 1]);
+        assert_eq!(cfg.request_mix.weights, [2, 0, 1, 0, 0]);
         assert!(cfg.online_optimize);
         assert_eq!(cfg.swap_interval, 6);
         let cfg = parse("request_mix = \"uniform\"\n").unwrap();
@@ -458,6 +481,20 @@ mod tests {
         assert!(parse("request_mix = \"bogus:1\"\n").is_err());
         assert!(parse("online_optimize = maybe\n").is_err());
         assert!(parse("swap_interval = 0\n").is_err());
+    }
+
+    #[test]
+    fn parses_scenario_and_dispatch_keys_with_global_defaults() {
+        let cfg = parse("scenarios = \"split\"\ndispatch = true\n").unwrap();
+        assert!(cfg.scenario_split);
+        assert!(cfg.dispatch);
+        let cfg = parse("scenarios = \"global\"\n").unwrap();
+        assert!(!cfg.scenario_split);
+        let cfg = parse("").unwrap();
+        assert!(!cfg.scenario_split, "default is one global search");
+        assert!(!cfg.dispatch, "default is the legacy routing table");
+        assert!(parse("scenarios = \"both\"\n").is_err());
+        assert!(parse("dispatch = maybe\n").is_err());
     }
 
     #[test]
@@ -503,6 +540,8 @@ mod tests {
         custom.swap_interval = 5;
         custom.store_dir = Some("/tmp/astra-store".to_string());
         custom.resume = true;
+        custom.scenario_split = true;
+        custom.dispatch = true;
         custom.model.launch_overhead_us = 5.5;
         for cfg in [
             Config::multi_agent(),
@@ -548,6 +587,8 @@ mod tests {
             assert_eq!(back.swap_interval, cfg.swap_interval);
             assert_eq!(back.store_dir, cfg.store_dir);
             assert_eq!(back.resume, cfg.resume);
+            assert_eq!(back.scenario_split, cfg.scenario_split);
+            assert_eq!(back.dispatch, cfg.dispatch);
             assert_eq!(
                 back.model.launch_overhead_us.to_bits(),
                 cfg.model.launch_overhead_us.to_bits()

@@ -27,8 +27,8 @@ pub mod search;
 
 pub use run::{
     optimize, optimize_all_parallel, optimize_all_parallel_budgeted,
-    optimize_all_parallel_with_cache, optimize_greedy, optimize_with_budget,
-    optimize_with_cache, optimize_with_cache_budget, AgentMode, Config, Outcome,
-    RoundRecord,
+    optimize_all_parallel_with_cache, optimize_greedy, optimize_scenarios,
+    optimize_with_budget, optimize_with_cache, optimize_with_cache_budget,
+    AgentMode, Config, Outcome, RoundRecord, ScenarioOutcome,
 };
 pub use search::{optimize_beam, optimize_beam_with_cache};

@@ -159,6 +159,20 @@ pub struct Config {
     /// Deliberately *not* part of the rendered config, so the killed
     /// run and its resume twin share one journal run key.
     pub kill_after_round: usize,
+    /// Per-scenario search (`--scenarios split`): run one optimization
+    /// per [`crate::kernels::Scenario`] bucket instead of one per
+    /// kernel, each retargeted at that bucket's dim set via
+    /// [`KernelSpec::with_shapes`]. Off (`"global"`, the default) runs
+    /// exactly one search per kernel on the paper's representative
+    /// shapes — bit-for-bit the legacy engine.
+    pub scenario_split: bool,
+    /// Per-scenario dispatch in `astra serve` (`--dispatch`): route
+    /// each request's launch shape through the
+    /// [`crate::pipeline::DispatchTable`] bucket covering it. Off (the
+    /// default) keeps every class on its single global slot — the
+    /// legacy routing table byte-for-byte (pinned in
+    /// `tests/dispatch.rs`).
+    pub dispatch: bool,
     pub model: GpuModel,
 }
 
@@ -190,6 +204,8 @@ impl Config {
             store_dir: None,
             resume: false,
             kill_after_round: 0,
+            scenario_split: false,
+            dispatch: false,
             model: GpuModel::h100(),
         }
     }
@@ -659,7 +675,55 @@ pub fn optimize_greedy(spec: &KernelSpec, cfg: &Config) -> Outcome {
     )
 }
 
-/// Optimize all three kernels concurrently (one coordinator per kernel on
+/// One scenario bucket's search result: the bucket it targeted plus the
+/// full [`Outcome`] of the search run on that bucket's dim set.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    /// Bucket name (`"global"` when scenario splitting is off).
+    pub scenario: &'static str,
+    /// Index into `(spec.scenarios)()` (0 when splitting is off —
+    /// matching [`crate::kernels::KernelSpec::scenario_of`]'s answer
+    /// for every shape under a single-bucket table).
+    pub scenario_index: usize,
+    /// The bucket's `min_lead` floor, for dispatch-table construction.
+    pub min_lead: i64,
+    pub outcome: Outcome,
+}
+
+/// Run one search per scenario bucket of `spec` — the per-scenario
+/// analogue of [`optimize_with_cache_budget`], sharing the same compile
+/// cache, worker budget, store warm-start and chaos supervision across
+/// buckets. With `cfg.scenario_split` off this is exactly one search on
+/// the paper's representative shapes (the `"global"` bucket), so the
+/// shipped kernel is byte-identical to the legacy single-slot engine
+/// (pinned in `tests/dispatch.rs`).
+pub fn optimize_scenarios(
+    spec: &KernelSpec,
+    cfg: &Config,
+    cache: &Arc<CompileCache>,
+    budget: &Arc<WorkerBudget>,
+) -> Vec<ScenarioOutcome> {
+    let buckets = if cfg.scenario_split {
+        (spec.scenarios)()
+    } else {
+        vec![spec.global_scenario()]
+    };
+    buckets
+        .into_iter()
+        .enumerate()
+        .map(|(i, bucket)| {
+            let scoped = spec.with_shapes(bucket.shapes);
+            ScenarioOutcome {
+                scenario: bucket.name,
+                scenario_index: i,
+                min_lead: bucket.min_lead,
+                outcome: optimize_with_cache_budget(&scoped, cfg, cache, budget),
+            }
+        })
+        .collect()
+}
+
+/// Optimize every catalog kernel concurrently (one coordinator per kernel on
 /// its own OS thread — the process topology Rust owns at L3). The three
 /// coordinators share one compile cache, so a kernel's launch compiles
 /// are done once per (kernel, dims) across the whole batch, and one
@@ -797,7 +861,7 @@ mod tests {
     #[test]
     fn parallel_driver_covers_all_kernels() {
         let outs = optimize_all_parallel(&quiet_multi());
-        assert_eq!(outs.len(), 3);
+        assert_eq!(outs.len(), 5);
         let names: Vec<_> = outs.iter().map(|o| o.kernel_name.clone()).collect();
         assert!(names.contains(&"merge_attn_states_lse".to_string()));
     }
@@ -911,11 +975,52 @@ mod tests {
             worker_budget: 0,
             ..cfg.clone()
         });
-        assert_eq!(a.len(), 3);
+        assert_eq!(a.len(), 5);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.kernel_name, y.kernel_name, "index order is stable");
             assert_eq!(x.records, y.records);
             assert_eq!(x.best, y.best);
+        }
+    }
+
+    #[test]
+    fn scenario_split_off_is_one_global_search() {
+        let cfg = Config {
+            rounds: 2,
+            ..quiet_multi()
+        };
+        let cache = Arc::new(CompileCache::with_default_capacity());
+        let budget = Arc::new(WorkerBudget::from_config(0));
+        let spec = kernels::rmsnorm::spec();
+        let outs = optimize_scenarios(&spec, &cfg, &cache, &budget);
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].scenario, "global");
+        assert_eq!(outs[0].scenario_index, 0);
+        // The global bucket is the representative shapes, so the run is
+        // byte-identical to the legacy single-search engine.
+        let legacy = optimize_with_cache_budget(&spec, &cfg, &cache, &budget);
+        assert_eq!(outs[0].outcome.best, legacy.best);
+        assert_eq!(outs[0].outcome.records, legacy.records);
+    }
+
+    #[test]
+    fn scenario_split_runs_one_search_per_bucket() {
+        let cfg = Config {
+            rounds: 2,
+            scenario_split: true,
+            ..quiet_multi()
+        };
+        let cache = Arc::new(CompileCache::with_default_capacity());
+        let budget = Arc::new(WorkerBudget::from_config(0));
+        let spec = kernels::rmsnorm::spec();
+        let outs = optimize_scenarios(&spec, &cfg, &cache, &budget);
+        assert_eq!(outs.len(), (spec.scenarios)().len());
+        for (o, b) in outs.iter().zip((spec.scenarios)()) {
+            assert_eq!(o.scenario, b.name);
+            assert_eq!(o.min_lead, b.min_lead);
+            assert!(o.outcome.final_correct, "{}", b.name);
+            // Each bucket's final numbers come from its own dim set.
+            assert_eq!(o.outcome.per_shape.len(), b.shapes.len());
         }
     }
 

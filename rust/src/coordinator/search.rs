@@ -527,7 +527,7 @@ pub(crate) fn finish_outcome(
     budget: &Arc<WorkerBudget>,
     telemetry: SearchTelemetry,
 ) -> Outcome {
-    let shapes = (spec.representative_shapes)();
+    let shapes = spec.rep_shapes();
     let (final_correct, base_reports, best_reports) = join3(
         Some(budget.as_ref()),
         || {

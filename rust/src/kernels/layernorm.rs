@@ -1,0 +1,304 @@
+//! Kernel 5 — `layernorm`, baseline IR.
+//!
+//! The classic pre-norm kernel, in the paper's Figure 3a baseline style
+//! but with *two* shared-memory tree reductions per row (sum, then sum
+//! of squares for the single-pass `E[x²] − E[x]²` variance) — the
+//! multi-reduction shape that makes the warp-shuffle move apply twice,
+//! once per statistic.
+
+use std::collections::BTreeMap;
+
+use crate::ir::build::*;
+use crate::ir::{BufIo, BufParam, DType, DimEnv, Kernel, Launch, SharedAlloc};
+
+use super::{dims_of, randn, reference, seeded, KernelSpec, Scenario};
+
+/// One block per row; threads stride over the hidden dimension.
+pub const BLOCK: u32 = 256;
+
+pub fn build_baseline() -> Kernel {
+    let len = imul(dim("B"), dim("D"));
+    Kernel {
+        name: "layernorm".into(),
+        dims: vec!["B".into(), "D".into()],
+        params: vec![
+            BufParam {
+                name: "x".into(),
+                dtype: DType::F16,
+                len: len.clone(),
+                io: BufIo::In,
+            },
+            BufParam {
+                name: "w".into(),
+                dtype: DType::F16,
+                len: dim("D"),
+                io: BufIo::In,
+            },
+            BufParam {
+                name: "b".into(),
+                dtype: DType::F16,
+                len: dim("D"),
+                io: BufIo::In,
+            },
+            BufParam {
+                name: "y".into(),
+                dtype: DType::F16,
+                len,
+                io: BufIo::Out,
+            },
+        ],
+        shared: vec![
+            SharedAlloc {
+                name: "sm".into(),
+                len: bdim(),
+            },
+            SharedAlloc {
+                name: "sq".into(),
+                len: bdim(),
+            },
+        ],
+        launch: Launch {
+            grid: dim("B"),
+            block: BLOCK,
+        },
+        body: vec![
+            comment("one block per row; accumulate sum and sum of squares"),
+            decli("row", imul(bx(), dim("D"))),
+            declf("lsum", fc(0.0)),
+            declf("lsq", fc(0.0)),
+            for_up(
+                "d",
+                tx(),
+                dim("D"),
+                bdim(),
+                vec![
+                    declf("v", load("x", iadd(iv("row"), iv("d")))),
+                    assignf("lsum", fadd(fv("lsum"), fv("v"))),
+                    assignf("lsq", fadd(fv("lsq"), fmul(fv("v"), fv("v")))),
+                ],
+            ),
+            comment("tree-reduce the sum"),
+            store_sh("sm", tx(), fv("lsum")),
+            sync(),
+            for_shr(
+                "off",
+                ishr(bdim(), 1),
+                vec![
+                    if_(
+                        lt(tx(), iv("off")),
+                        vec![store_sh(
+                            "sm",
+                            tx(),
+                            fadd(
+                                load_sh("sm", tx()),
+                                load_sh("sm", iadd(tx(), iv("off"))),
+                            ),
+                        )],
+                    ),
+                    sync(),
+                ],
+            ),
+            declf("mean", fdiv(load_sh("sm", c(0)), from_int(dim("D")))),
+            comment("tree-reduce the sum of squares"),
+            store_sh("sq", tx(), fv("lsq")),
+            sync(),
+            for_shr(
+                "off",
+                ishr(bdim(), 1),
+                vec![
+                    if_(
+                        lt(tx(), iv("off")),
+                        vec![store_sh(
+                            "sq",
+                            tx(),
+                            fadd(
+                                load_sh("sq", tx()),
+                                load_sh("sq", iadd(tx(), iv("off"))),
+                            ),
+                        )],
+                    ),
+                    sync(),
+                ],
+            ),
+            comment("single-pass variance, normalize with explicit divide"),
+            declf(
+                "var",
+                fsub(
+                    fdiv(load_sh("sq", c(0)), from_int(dim("D"))),
+                    fmul(fv("mean"), fv("mean")),
+                ),
+            ),
+            declf(
+                "rstd",
+                fdiv(fc(1.0), sqrt(fadd(fv("var"), fc(1e-5)))),
+            ),
+            for_up(
+                "d",
+                tx(),
+                dim("D"),
+                bdim(),
+                vec![store(
+                    "y",
+                    iadd(iv("row"), iv("d")),
+                    fadd(
+                        fmul(
+                            fmul(
+                                fsub(
+                                    load("x", iadd(iv("row"), iv("d"))),
+                                    fv("mean"),
+                                ),
+                                fv("rstd"),
+                            ),
+                            load("w", iv("d")),
+                        ),
+                        load("b", iv("d")),
+                    ),
+                )],
+            ),
+        ],
+    }
+}
+
+fn reference_fn(
+    dims: &DimEnv,
+    inputs: &BTreeMap<String, Vec<f32>>,
+) -> BTreeMap<String, Vec<f32>> {
+    let (b, d) = (dims["B"] as usize, dims["D"] as usize);
+    let y = reference::layernorm(b, d, &inputs["x"], &inputs["w"], &inputs["b"]);
+    BTreeMap::from([("y".to_string(), y)])
+}
+
+fn gen_inputs(dims: &DimEnv, seed: u64) -> Vec<(String, Vec<f32>)> {
+    let (b, d) = (dims["B"] as usize, dims["D"] as usize);
+    let mut rng = seeded(seed);
+    let w: Vec<f32> = randn(&mut rng, d, 0.1).iter().map(|v| 1.0 + v).collect();
+    let bias = randn(&mut rng, d, 0.1);
+    vec![
+        ("x".into(), randn(&mut rng, b * d, 1.0)),
+        ("w".into(), w),
+        ("b".into(), bias),
+    ]
+}
+
+fn representative_shapes() -> Vec<DimEnv> {
+    // [batch_size, hidden_size], mirroring the rmsnorm regimes.
+    vec![
+        dims_of(&[("B", 256), ("D", 4096)]),
+        dims_of(&[("B", 1024), ("D", 4096)]),
+        dims_of(&[("B", 128), ("D", 8192)]),
+        dims_of(&[("B", 512), ("D", 6144)]),
+    ]
+}
+
+fn test_shapes() -> Vec<DimEnv> {
+    vec![
+        dims_of(&[("B", 4), ("D", 512)]),
+        dims_of(&[("B", 2), ("D", 300)]), // non-multiple of block
+        dims_of(&[("B", 8), ("D", 128)]),
+    ]
+}
+
+fn scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "decode",
+            min_lead: 0,
+            shapes: vec![
+                dims_of(&[("B", 8), ("D", 4096)]),
+                dims_of(&[("B", 128), ("D", 8192)]),
+            ],
+        },
+        Scenario {
+            name: "prefill",
+            min_lead: 256,
+            shapes: vec![
+                dims_of(&[("B", 256), ("D", 4096)]),
+                dims_of(&[("B", 1024), ("D", 4096)]),
+                dims_of(&[("B", 512), ("D", 6144)]),
+            ],
+        },
+    ]
+}
+
+pub fn spec() -> KernelSpec {
+    KernelSpec {
+        paper_name: "layernorm",
+        index: 5,
+        dims: &["B", "D"],
+        build_baseline,
+        reference: reference_fn,
+        gen_inputs,
+        out_bufs: &["y"],
+        rel_tol: 8e-3, // f16 I/O + reassociated reductions
+        abs_tol: 4e-3,
+        representative_shapes,
+        test_shapes,
+        scenarios,
+        shape_override: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp;
+    use crate::ir::analysis;
+    use crate::kernels::testutil::{as_map, to_refs};
+    use crate::transforms::{self, Move};
+
+    #[test]
+    fn baseline_matches_reference() {
+        let spec = spec();
+        for dims in (spec.test_shapes)() {
+            let inputs = (spec.gen_inputs)(&dims, 6);
+            let env =
+                interp::run_with_inputs(&build_baseline(), &dims, &to_refs(&inputs))
+                    .unwrap();
+            let want = (spec.reference)(&dims, &as_map(&inputs));
+            for buf in spec.out_bufs {
+                let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
+                assert!(
+                    spec.within_tolerance(abs, rel),
+                    "{buf}: abs {abs} rel {rel} at {:?}",
+                    dims
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_has_two_tree_reductions() {
+        let f = analysis::features(&build_baseline());
+        assert!(f.has_tree_reduction, "{f:?}");
+        assert!(!f.has_warp_shuffle);
+        assert!(f.syncs >= 4, "two trees, two syncs each at least");
+        assert!(f.scalar_f16_loads_in_loops >= 2);
+    }
+
+    #[test]
+    fn warp_shuffle_applies_once_per_tree() {
+        // First application clears the sum tree, second the squares
+        // tree; each lands a fresh partial buffer and stays correct.
+        let k1 = transforms::apply(&build_baseline(), Move::WarpShuffle).unwrap();
+        assert!(analysis::features(&k1).has_tree_reduction, "one tree left");
+        let k2 = transforms::apply(&k1, Move::WarpShuffle).unwrap();
+        let f = analysis::features(&k2);
+        assert!(!f.has_tree_reduction, "{f:?}");
+        assert!(f.has_warp_shuffle);
+        assert!(transforms::apply(&k2, Move::WarpShuffle).is_err());
+
+        let spec = spec();
+        for dims in (spec.test_shapes)() {
+            let inputs = (spec.gen_inputs)(&dims, 11);
+            let env =
+                interp::run_with_inputs(&k2, &dims, &to_refs(&inputs)).unwrap();
+            let want = (spec.reference)(&dims, &as_map(&inputs));
+            let (abs, rel) = interp::max_errors(env.get("y"), &want["y"]);
+            assert!(
+                spec.within_tolerance(abs, rel),
+                "abs {abs} rel {rel} at {:?}",
+                dims
+            );
+        }
+    }
+}

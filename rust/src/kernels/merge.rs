@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 use crate::ir::build::*;
 use crate::ir::{BufIo, BufParam, DType, DimEnv, Kernel, Launch};
 
-use super::{dims_of, randn, reference, seeded, KernelSpec};
+use super::{dims_of, randn, reference, seeded, KernelSpec, Scenario};
 
 /// One block per (sequence, head) pair; threads stride over head_dim.
 pub const BLOCK: u32 = 128;
@@ -167,6 +167,24 @@ fn test_shapes() -> Vec<DimEnv> {
     ]
 }
 
+fn scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "decode",
+            min_lead: 0,
+            shapes: vec![
+                dims_of(&[("S", 64), ("H", 32), ("D", 128)]),
+                dims_of(&[("S", 128), ("H", 40), ("D", 128)]),
+            ],
+        },
+        Scenario {
+            name: "prefill",
+            min_lead: 512,
+            shapes: representative_shapes(),
+        },
+    ]
+}
+
 pub fn spec() -> KernelSpec {
     KernelSpec {
         paper_name: "merge_attn_states_lse",
@@ -180,6 +198,8 @@ pub fn spec() -> KernelSpec {
         abs_tol: 1e-4,
         representative_shapes,
         test_shapes,
+        scenarios,
+        shape_override: None,
     }
 }
 

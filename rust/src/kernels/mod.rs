@@ -1,12 +1,17 @@
-//! The three SGLang kernels (Table 1), authored in the IR exactly as the
-//! paper's baseline CUDA (Figures 2a/3a/4a/5a), plus problem-level
-//! metadata: reference oracles, input generators, and the paper's shape
-//! sets (Table 4 / §4 "Performance Measurement").
+//! The kernel catalog: the paper's three SGLang kernels (Table 1),
+//! authored in the IR exactly as the baseline CUDA (Figures 2a/3a/4a/5a),
+//! plus two serving-stack siblings (softmax, layernorm) grown for the
+//! multi-scenario dispatch work — and problem-level metadata: reference
+//! oracles, input generators, the paper's shape sets (Table 4 / §4
+//! "Performance Measurement"), and per-kernel [`Scenario`] buckets
+//! (prefill vs decode shape regimes) for per-scenario optimization.
 
+pub mod layernorm;
 pub mod merge;
 pub mod reference;
 pub mod rmsnorm;
 pub mod silu;
+pub mod softmax;
 
 use std::collections::BTreeMap;
 
@@ -18,6 +23,27 @@ pub type RefFn = fn(&DimEnv, &BTreeMap<String, Vec<f32>>) -> BTreeMap<String, Ve
 
 /// Generate the flat input buffers for a shape (deterministic in seed).
 pub type GenFn = fn(&DimEnv, u64) -> Vec<(String, Vec<f32>)>;
+
+/// One runtime shape regime (scenario bucket) for a kernel.
+///
+/// The multi-scenario papers observe that the winning variant depends on
+/// the launch-shape regime (prefill-large-batch vs decode-small-batch);
+/// a bucket names one such regime, the dim sets the per-scenario search
+/// optimizes against, and the leading-dimension floor the dispatch
+/// lookup buckets runtime shapes by.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Scenario {
+    /// Bucket name (`"global"`, `"decode"`, `"prefill"`).
+    pub name: &'static str,
+    /// Smallest leading-dimension (`spec.dims[0]`) value this bucket
+    /// covers. Dispatch picks the bucket with the greatest
+    /// `min_lead <= lead`; every kernel's first bucket has
+    /// `min_lead == 0`, so the lookup is total over all shapes.
+    pub min_lead: i64,
+    /// The perf shapes the per-scenario search optimizes and profiles
+    /// against (this bucket's analogue of Table 4).
+    pub shapes: Vec<DimEnv>,
+}
 
 /// Problem-level description of one optimization target.
 #[derive(Clone)]
@@ -44,6 +70,15 @@ pub struct KernelSpec {
     pub representative_shapes: fn() -> Vec<DimEnv>,
     /// Small shapes the (interpreted) correctness harness can afford.
     pub test_shapes: fn() -> Vec<DimEnv>,
+    /// Scenario buckets for per-scenario dispatch, ordered by
+    /// `min_lead`; the first bucket covers `min_lead == 0` so
+    /// [`KernelSpec::scenario_of`] is total.
+    pub scenarios: fn() -> Vec<Scenario>,
+    /// When set (via [`KernelSpec::with_shapes`]), overrides the perf
+    /// shapes every consumer of [`KernelSpec::rep_shapes`] sees — the
+    /// seam the per-scenario search uses to retarget one search run at
+    /// one bucket's dim set without touching the correctness shapes.
+    pub shape_override: Option<Vec<DimEnv>>,
 }
 
 impl KernelSpec {
@@ -79,11 +114,63 @@ impl KernelSpec {
             .max_by_key(|d| kernel.grid_size(d) * kernel.launch.block as i64)
             .expect("spec has correctness shapes")
     }
+
+    /// The perf shapes the search and profiler target: the shape
+    /// override when one is set (a per-scenario search), the paper's
+    /// representative shapes otherwise. Every consumer of perf shapes
+    /// goes through this accessor so a scenario retarget is complete.
+    pub fn rep_shapes(&self) -> Vec<DimEnv> {
+        match &self.shape_override {
+            Some(shapes) => shapes.clone(),
+            None => (self.representative_shapes)(),
+        }
+    }
+
+    /// A copy of this spec whose perf shapes are `shapes` — the
+    /// per-scenario search runs one `optimize` per bucket on
+    /// `spec.with_shapes(bucket.shapes)`, sharing everything else.
+    pub fn with_shapes(&self, shapes: Vec<DimEnv>) -> KernelSpec {
+        let mut s = self.clone();
+        s.shape_override = Some(shapes);
+        s
+    }
+
+    /// The single all-shapes bucket legacy (dispatch-off) runs use.
+    pub fn global_scenario(&self) -> Scenario {
+        Scenario {
+            name: "global",
+            min_lead: 0,
+            shapes: (self.representative_shapes)(),
+        }
+    }
+
+    /// Index into `(self.scenarios)()` of the bucket covering `dims`:
+    /// the bucket with the greatest `min_lead` not exceeding the
+    /// leading dimension (first on ties). Total because every kernel's
+    /// first bucket has `min_lead == 0`.
+    pub fn scenario_of(&self, dims: &DimEnv) -> usize {
+        let lead = dims.get(self.dims[0]).copied().unwrap_or(0);
+        let mut best = 0usize;
+        let mut best_min = i64::MIN;
+        for (i, s) in (self.scenarios)().iter().enumerate() {
+            if s.min_lead <= lead && s.min_lead > best_min {
+                best = i;
+                best_min = s.min_lead;
+            }
+        }
+        best
+    }
 }
 
-/// All three kernels, in paper order.
+/// The whole catalog, in paper order (Table 1) then growth order.
 pub fn all_specs() -> Vec<KernelSpec> {
-    vec![merge::spec(), rmsnorm::spec(), silu::spec()]
+    vec![
+        merge::spec(),
+        rmsnorm::spec(),
+        silu::spec(),
+        softmax::spec(),
+        layernorm::spec(),
+    ]
 }
 
 /// Look up a spec by paper name (or prefix).
@@ -129,14 +216,87 @@ mod tests {
     #[test]
     fn specs_enumerate_in_paper_order() {
         let specs = all_specs();
-        assert_eq!(specs.len(), 3);
+        assert_eq!(specs.len(), 5);
         assert_eq!(specs[0].paper_name, "merge_attn_states_lse");
         assert_eq!(specs[1].paper_name, "fused_add_rmsnorm");
         assert_eq!(specs[2].paper_name, "silu_and_mul");
+        assert_eq!(specs[3].paper_name, "softmax");
+        assert_eq!(specs[4].paper_name, "layernorm");
         assert_eq!(
             specs.iter().map(|s| s.index).collect::<Vec<_>>(),
-            vec![1, 2, 3]
+            vec![1, 2, 3, 4, 5]
         );
+    }
+
+    #[test]
+    fn every_spec_has_total_ordered_scenario_buckets() {
+        for s in all_specs() {
+            let sc = (s.scenarios)();
+            assert!(sc.len() >= 2, "{}: needs >= 2 buckets", s.paper_name);
+            assert_eq!(
+                sc[0].min_lead, 0,
+                "{}: first bucket must cover min_lead 0",
+                s.paper_name
+            );
+            for w in sc.windows(2) {
+                assert!(
+                    w[0].min_lead < w[1].min_lead,
+                    "{}: buckets must be ordered by min_lead",
+                    s.paper_name
+                );
+            }
+            for b in &sc {
+                assert!(
+                    !b.shapes.is_empty(),
+                    "{}: bucket {} has no shapes",
+                    s.paper_name,
+                    b.name
+                );
+                // Each bucket's shapes actually bucket to it.
+                for d in &b.shapes {
+                    let got = (s.scenarios)()[s.scenario_of(d)].name;
+                    assert_eq!(
+                        got, b.name,
+                        "{}: shape {:?} buckets to {got}",
+                        s.paper_name, d
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_lookup_is_total_even_off_bucket() {
+        for s in all_specs() {
+            // Tiny, huge and absent leading dims all resolve somewhere.
+            for lead in [0i64, 1, 7, 1 << 20] {
+                let d = dims_of(&[(s.dims[0], lead)]);
+                assert!(s.scenario_of(&d) < (s.scenarios)().len());
+            }
+            assert_eq!(s.scenario_of(&DimEnv::new()), 0, "absent lead -> 0");
+        }
+    }
+
+    #[test]
+    fn shape_override_retargets_rep_shapes_only() {
+        let s = all_specs().remove(1);
+        let custom = vec![dims_of(&[("B", 2), ("D", 64)])];
+        let over = s.with_shapes(custom.clone());
+        assert_eq!(over.rep_shapes(), custom);
+        assert_eq!(s.rep_shapes(), (s.representative_shapes)());
+        // Correctness shapes are untouched by the override.
+        assert_eq!((over.test_shapes)(), (s.test_shapes)());
+        assert_eq!(over.paper_name, s.paper_name);
+    }
+
+    #[test]
+    fn global_scenario_matches_representative_shapes() {
+        for s in all_specs() {
+            let g = s.global_scenario();
+            assert_eq!(g.name, "global");
+            assert_eq!(g.min_lead, 0);
+            assert_eq!(g.shapes, (s.representative_shapes)());
+        }
     }
 
     #[test]

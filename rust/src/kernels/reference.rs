@@ -10,6 +10,8 @@ use crate::ir::types::f32_to_f16_round;
 pub const MERGE_EPS: f32 = 1e-12;
 /// RMSNorm variance epsilon (SGLang default).
 pub const RMSNORM_EPS: f32 = 1e-6;
+/// LayerNorm variance epsilon (SGLang / torch default).
+pub const LAYERNORM_EPS: f32 = 1e-5;
 
 /// Kernel 1 — merge_attn_states_lse.
 ///
@@ -95,6 +97,72 @@ pub fn silu_and_mul(b: usize, d: usize, xg: &[f32]) -> Vec<f32> {
     out
 }
 
+/// Kernel 4 — row `softmax` over flattened `[B, D]` half buffers.
+///
+/// Computed in the numerically stable shifted form (`exp(x - max) /
+/// Σ exp(x - max)`); softmax is shift-invariant, so the unshifted
+/// device baseline matches within f16 tolerance on bounded inputs.
+pub fn softmax(b: usize, d: usize, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), b * d);
+    let mut y = vec![0f32; b * d];
+    for row in 0..b {
+        let base = row * d;
+        let m = x[base..base + d]
+            .iter()
+            .map(|v| f32_to_f16_round(*v))
+            .fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for k in 0..d {
+            let e = (f32_to_f16_round(x[base + k]) - m).exp();
+            y[base + k] = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for v in &mut y[base..base + d] {
+            *v = f32_to_f16_round(*v * inv);
+        }
+    }
+    y
+}
+
+/// Kernel 5 — `layernorm` over flattened `[B, D]` half buffers with
+/// per-feature weight and bias.
+///
+/// Mean/variance accumulate in f32; the output rounds to f16.
+pub fn layernorm(
+    b: usize,
+    d: usize,
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+) -> Vec<f32> {
+    assert_eq!(x.len(), b * d);
+    assert_eq!(w.len(), d);
+    assert_eq!(bias.len(), d);
+    let mut y = vec![0f32; b * d];
+    for row in 0..b {
+        let base = row * d;
+        let mut sum = 0f32;
+        let mut sq = 0f32;
+        for k in 0..d {
+            let v = f32_to_f16_round(x[base + k]);
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / d as f32;
+        let var = (sq / d as f32 - mean * mean).max(0.0);
+        let rstd = 1.0 / (var + LAYERNORM_EPS).sqrt();
+        for k in 0..d {
+            let v = f32_to_f16_round(x[base + k]);
+            y[base + k] = f32_to_f16_round(
+                (v - mean) * rstd * f32_to_f16_round(w[k])
+                    + f32_to_f16_round(bias[k]),
+            );
+        }
+    }
+    y
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +209,40 @@ mod tests {
         assert!((rms - 1.0).abs() < 1e-2, "rms = {rms}");
         for (a, b) in rn.iter().zip(&x) {
             assert!((a - f32_to_f16_round(*b)).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_shift_invariance_holds() {
+        let d = 32;
+        let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+        let y = softmax(1, d, &x);
+        let s: f32 = y.iter().sum();
+        assert!((s - 1.0).abs() < 1e-2, "row sum = {s}");
+        // Shift invariance: softmax(x + c) == softmax(x).
+        let shifted: Vec<f32> = x.iter().map(|v| v + 3.0).collect();
+        let y2 = softmax(1, d, &shifted);
+        for (a, b) in y.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn layernorm_normalizes_rows() {
+        let d = 64;
+        let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.2).cos() * 3.0).collect();
+        let w = vec![1.0; d];
+        let bias = vec![0.0; d];
+        let y = layernorm(1, d, &x, &w, &bias);
+        let mean: f32 = y.iter().sum::<f32>() / d as f32;
+        let var: f32 =
+            y.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        assert!(mean.abs() < 1e-2, "mean = {mean}");
+        assert!((var - 1.0).abs() < 5e-2, "var = {var}");
+        // Bias shifts the output directly.
+        let y2 = layernorm(1, d, &x, &w, &vec![0.5; d]);
+        for (a, b) in y.iter().zip(&y2) {
+            assert!((b - a - 0.5).abs() < 1e-2);
         }
     }
 

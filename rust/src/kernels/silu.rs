@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use crate::ir::build::*;
 use crate::ir::{BufIo, BufParam, DType, DimEnv, Kernel, Launch};
 
-use super::{dims_of, randn, reference, seeded, KernelSpec};
+use super::{dims_of, randn, reference, seeded, KernelSpec, Scenario};
 
 /// One block per row; threads stride over the intermediate dimension.
 pub const BLOCK: u32 = 256;
@@ -106,6 +106,27 @@ fn test_shapes() -> Vec<DimEnv> {
     ]
 }
 
+fn scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "decode",
+            min_lead: 0,
+            shapes: vec![
+                dims_of(&[("B", 16), ("D", 4096)]),
+                dims_of(&[("B", 16), ("D", 12288)]),
+            ],
+        },
+        Scenario {
+            name: "prefill",
+            min_lead: 32,
+            shapes: vec![
+                dims_of(&[("B", 32), ("D", 5120)]),
+                dims_of(&[("B", 64), ("D", 8192)]),
+            ],
+        },
+    ]
+}
+
 pub fn spec() -> KernelSpec {
     KernelSpec {
         paper_name: "silu_and_mul",
@@ -119,6 +140,8 @@ pub fn spec() -> KernelSpec {
         abs_tol: 4e-3,
         representative_shapes,
         test_shapes,
+        scenarios,
+        shape_override: None,
     }
 }
 

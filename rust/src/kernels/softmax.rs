@@ -1,9 +1,14 @@
-//! Kernel 2 — `fused_add_rmsnorm`, baseline IR.
+//! Kernel 4 — row `softmax`, baseline IR.
 //!
-//! Mirrors the paper's Figure 3a: the row reduction is a shared-memory
-//! tree with a `__syncthreads()` per step — the synchronization-heavy
-//! pattern the planning agent is expected to replace with a
-//! `__shfl_down_sync` warp reduction.
+//! The attention-probability kernel from the serving stack, in the same
+//! baseline style as the paper's Figure 3a: a shared-memory tree
+//! reduction for the row sum, scalar f16 global accesses, libm `expf`
+//! in the hot loop and an explicit divide — so every case-study move
+//! (warp shuffle, vectorize, fast-math) has its opportunity.
+//!
+//! The device baseline computes the unshifted form `exp(x) / Σ exp(x)`;
+//! softmax is shift-invariant, so it matches the numerically stable
+//! shifted reference within f16 tolerance on the bounded test inputs.
 
 use std::collections::BTreeMap;
 
@@ -12,32 +17,26 @@ use crate::ir::{BufIo, BufParam, DType, DimEnv, Kernel, Launch, SharedAlloc};
 
 use super::{dims_of, randn, reference, seeded, KernelSpec, Scenario};
 
-/// One block per row; threads stride over the hidden dimension.
+/// One block per row; threads stride over the row dimension.
 pub const BLOCK: u32 = 256;
 
 pub fn build_baseline() -> Kernel {
     let len = imul(dim("B"), dim("D"));
     Kernel {
-        name: "fused_add_rmsnorm".into(),
+        name: "softmax".into(),
         dims: vec!["B".into(), "D".into()],
         params: vec![
             BufParam {
                 name: "x".into(),
                 dtype: DType::F16,
                 len: len.clone(),
-                io: BufIo::InOut,
+                io: BufIo::In,
             },
             BufParam {
-                name: "res".into(),
+                name: "y".into(),
                 dtype: DType::F16,
                 len,
-                io: BufIo::InOut,
-            },
-            BufParam {
-                name: "w".into(),
-                dtype: DType::F16,
-                len: dim("D"),
-                io: BufIo::In,
+                io: BufIo::Out,
             },
         ],
         shared: vec![SharedAlloc {
@@ -49,7 +48,7 @@ pub fn build_baseline() -> Kernel {
             block: BLOCK,
         },
         body: vec![
-            comment("one block per row; residual add + sum of squares"),
+            comment("one block per row; exponentiate and accumulate"),
             decli("row", imul(bx(), dim("D"))),
             declf("local", fc(0.0)),
             for_up(
@@ -58,15 +57,9 @@ pub fn build_baseline() -> Kernel {
                 dim("D"),
                 bdim(),
                 vec![
-                    declf(
-                        "h",
-                        fadd(
-                            load("x", iadd(iv("row"), iv("d"))),
-                            load("res", iadd(iv("row"), iv("d"))),
-                        ),
-                    ),
-                    store("res", iadd(iv("row"), iv("d")), fv("h")),
-                    assignf("local", fadd(fv("local"), fmul(fv("h"), fv("h")))),
+                    declf("e", exp(load("x", iadd(iv("row"), iv("d"))))),
+                    store("y", iadd(iv("row"), iv("d")), fv("e")),
+                    assignf("local", fadd(fv("local"), fv("e"))),
                 ],
             ),
             comment("block-level tree reduction in shared memory"),
@@ -91,29 +84,17 @@ pub fn build_baseline() -> Kernel {
                 ],
             ),
             comment("normalize with explicit divide"),
-            declf(
-                "inv",
-                fdiv(
-                    fc(1.0),
-                    sqrt(fadd(
-                        fdiv(load_sh("sm", c(0)), from_int(dim("D"))),
-                        fc(1e-6),
-                    )),
-                ),
-            ),
+            declf("inv", fdiv(fc(1.0), load_sh("sm", c(0)))),
             for_up(
                 "d",
                 tx(),
                 dim("D"),
                 bdim(),
-                vec![
-                    declf("hh", load("res", iadd(iv("row"), iv("d")))),
-                    store(
-                        "x",
-                        iadd(iv("row"), iv("d")),
-                        fmul(fmul(fv("hh"), fv("inv")), load("w", iv("d"))),
-                    ),
-                ],
+                vec![store(
+                    "y",
+                    iadd(iv("row"), iv("d")),
+                    fmul(load("y", iadd(iv("row"), iv("d"))), fv("inv")),
+                )],
             ),
         ],
     }
@@ -124,30 +105,23 @@ fn reference_fn(
     inputs: &BTreeMap<String, Vec<f32>>,
 ) -> BTreeMap<String, Vec<f32>> {
     let (b, d) = (dims["B"] as usize, dims["D"] as usize);
-    let (y, r_new) =
-        reference::fused_add_rmsnorm(b, d, &inputs["x"], &inputs["res"], &inputs["w"]);
-    // In-place SGLang semantics: y lands in `x`, the sum in `res`.
-    BTreeMap::from([("x".to_string(), y), ("res".to_string(), r_new)])
+    let y = reference::softmax(b, d, &inputs["x"]);
+    BTreeMap::from([("y".to_string(), y)])
 }
 
 fn gen_inputs(dims: &DimEnv, seed: u64) -> Vec<(String, Vec<f32>)> {
     let (b, d) = (dims["B"] as usize, dims["D"] as usize);
     let mut rng = seeded(seed);
-    let w: Vec<f32> = randn(&mut rng, d, 0.1).iter().map(|v| 1.0 + v).collect();
-    vec![
-        ("x".into(), randn(&mut rng, b * d, 1.0)),
-        ("res".into(), randn(&mut rng, b * d, 1.0)),
-        ("w".into(), w),
-    ]
+    vec![("x".into(), randn(&mut rng, b * d, 1.0))]
 }
 
 fn representative_shapes() -> Vec<DimEnv> {
-    // Table 4, kernel 2: [batch_size, hidden_size].
+    // [batch_rows, row_len]: attention-score rows across serving regimes.
     vec![
-        dims_of(&[("B", 256), ("D", 4096)]),
-        dims_of(&[("B", 1024), ("D", 4096)]),
-        dims_of(&[("B", 128), ("D", 11008)]),
-        dims_of(&[("B", 512), ("D", 14336)]),
+        dims_of(&[("B", 256), ("D", 2048)]),
+        dims_of(&[("B", 1024), ("D", 2048)]),
+        dims_of(&[("B", 128), ("D", 4096)]),
+        dims_of(&[("B", 512), ("D", 8192)]),
     ]
 }
 
@@ -165,17 +139,17 @@ fn scenarios() -> Vec<Scenario> {
             name: "decode",
             min_lead: 0,
             shapes: vec![
-                dims_of(&[("B", 8), ("D", 4096)]),
-                dims_of(&[("B", 128), ("D", 11008)]),
+                dims_of(&[("B", 8), ("D", 2048)]),
+                dims_of(&[("B", 128), ("D", 4096)]),
             ],
         },
         Scenario {
             name: "prefill",
             min_lead: 256,
             shapes: vec![
-                dims_of(&[("B", 256), ("D", 4096)]),
-                dims_of(&[("B", 1024), ("D", 4096)]),
-                dims_of(&[("B", 512), ("D", 14336)]),
+                dims_of(&[("B", 256), ("D", 2048)]),
+                dims_of(&[("B", 1024), ("D", 2048)]),
+                dims_of(&[("B", 512), ("D", 8192)]),
             ],
         },
     ]
@@ -183,15 +157,15 @@ fn scenarios() -> Vec<Scenario> {
 
 pub fn spec() -> KernelSpec {
     KernelSpec {
-        paper_name: "fused_add_rmsnorm",
-        index: 2,
+        paper_name: "softmax",
+        index: 4,
         dims: &["B", "D"],
         build_baseline,
         reference: reference_fn,
         gen_inputs,
-        out_bufs: &["x", "res"],
-        rel_tol: 8e-3, // f16 I/O + f16 accumulation differences
-        abs_tol: 4e-3,
+        out_bufs: &["y"],
+        rel_tol: 8e-3,  // f16 intermediate rounding of the exp scratch
+        abs_tol: 2e-4,  // probabilities are O(1/D); keep the floor tight
         representative_shapes,
         test_shapes,
         scenarios,
@@ -210,7 +184,7 @@ mod tests {
     fn baseline_matches_reference() {
         let spec = spec();
         for dims in (spec.test_shapes)() {
-            let inputs = (spec.gen_inputs)(&dims, 2);
+            let inputs = (spec.gen_inputs)(&dims, 4);
             let env =
                 interp::run_with_inputs(&build_baseline(), &dims, &to_refs(&inputs))
                     .unwrap();
@@ -218,7 +192,7 @@ mod tests {
             for buf in spec.out_bufs {
                 let (abs, rel) = interp::max_errors(env.get(buf), &want[*buf]);
                 assert!(
-                    rel < spec.rel_tol || abs < spec.abs_tol,
+                    spec.within_tolerance(abs, rel),
                     "{buf}: abs {abs} rel {rel} at {:?}",
                     dims
                 );
@@ -227,11 +201,13 @@ mod tests {
     }
 
     #[test]
-    fn baseline_has_tree_reduction_and_divide() {
+    fn baseline_has_tree_reduction_and_slow_math() {
         let f = analysis::features(&build_baseline());
         assert!(f.has_tree_reduction, "{f:?}");
         assert!(!f.has_warp_shuffle);
         assert!(f.syncs >= 2);
+        assert!(f.slow_math_in_loops >= 1, "libm expf in the hot loop");
         assert!(f.scalar_f16_loads_in_loops >= 2);
+        assert_eq!(f.max_vector_width, 1);
     }
 }

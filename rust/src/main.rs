@@ -57,7 +57,8 @@ fn print_usage() {
          \x20 serve     run the serving pipeline; --clients N selects the\n\
          \x20           concurrent harness ([--steps N] [--warmup N])\n\n\
          agent loop (optimize/bench; config-file key in parentheses):\n\
-         \x20 --kernel NAME         optimize one kernel instead of all three\n\
+         \x20 --kernel NAME         optimize one kernel instead of the whole\n\
+         \x20                       catalog\n\
          \x20 --mode multi|single   agent topology (mode)\n\
          \x20 --rounds N            optimization rounds R (rounds)\n\
          \x20 --seed N              PRNG seed (seed)\n\
@@ -111,13 +112,23 @@ fn print_usage() {
          \x20 --clients N           concurrent client streams; 0 = the legacy\n\
          \x20                       single-stream PJRT loop (clients)\n\
          \x20 --request-mix MIX     \"uniform\" or name:weight pairs over\n\
-         \x20                       merge/rmsnorm/silu (request_mix)\n\
+         \x20                       merge/rmsnorm/silu/softmax/layernorm\n\
+         \x20                       (request_mix)\n\
          \x20 --online-optimize [BOOL]\n\
          \x20                       background beam search hot-swaps better\n\
          \x20                       gate-validated variants mid-serve; bare\n\
          \x20                       flag = on (online_optimize)\n\
          \x20 --swap-interval N     timed steps between hot-swap publish\n\
          \x20                       checkpoints (swap_interval)\n\n\
+         per-scenario dispatch (optimize/serve):\n\
+         \x20 --scenarios MODE      \"global\" (one search + one winner per\n\
+         \x20                       kernel) or \"split\" (one search per catalog\n\
+         \x20                       scenario bucket) (scenarios)\n\
+         \x20 --dispatch [BOOL]     route serve through the (class, scenario)\n\
+         \x20                       dispatch table — launch shapes pick the\n\
+         \x20                       bucket; with --scenarios global this is\n\
+         \x20                       byte-identical to legacy routing; bare\n\
+         \x20                       flag = on (dispatch)\n\n\
          crash-consistent artifact store (optimize/bench/serve):\n\
          \x20 --store DIR           content-addressed on-disk store: compile\n\
          \x20                       metadata, validation verdicts, winning\n\
@@ -171,6 +182,7 @@ fn build_config(args: &[String]) -> Result<Config> {
         ("--clients", "clients"),
         ("--request-mix", "request_mix"),
         ("--swap-interval", "swap_interval"),
+        ("--scenarios", "scenarios"),
         ("--store", "store"),
     ] {
         if let Some(v) = opt_value(args, flag) {
@@ -211,6 +223,15 @@ fn build_config(args: &[String]) -> Result<Config> {
                 config::apply(&mut cfg, &mut model, "online_optimize", &v)?;
             }
             _ => cfg.online_optimize = true,
+        }
+    }
+    // And for `--dispatch` (route serve through the scenario table).
+    if has_flag(args, "--dispatch") {
+        match opt_value(args, "--dispatch") {
+            Some(v) if !v.starts_with("--") => {
+                config::apply(&mut cfg, &mut model, "dispatch", &v)?;
+            }
+            _ => cfg.dispatch = true,
         }
     }
     cfg.model = model;
@@ -381,10 +402,15 @@ fn cmd_serve_concurrent(cfg: &Config, steps: usize, warmup: usize) -> Result<()>
     let cache = Arc::new(CompileCache::with_default_capacity());
     let budget = Arc::new(WorkerBudget::from_config(cfg.worker_budget));
     println!(
-        "concurrent serve: {} clients, mix {}, online-optimize {}",
+        "concurrent serve: {} clients, mix {}, online-optimize {}, dispatch {}",
         cfg.clients,
         cfg.request_mix.render(),
-        if cfg.online_optimize { "on" } else { "off" }
+        if cfg.online_optimize { "on" } else { "off" },
+        match (cfg.dispatch, cfg.scenario_split) {
+            (true, true) => "per-scenario",
+            (true, false) => "global",
+            _ => "off",
+        }
     );
     for route_optimized in [false, true] {
         let opts = pipeline::ServeHarnessOptions {
@@ -410,8 +436,9 @@ fn cmd_serve_concurrent(cfg: &Config, steps: usize, warmup: usize) -> Result<()>
         }
         for swap in &report.swaps {
             println!(
-                "{:<10} swap@t{} class {} {} {:.3}x: {}",
-                report.variant, swap.step, swap.class, swap.label, swap.speedup, swap.note
+                "{:<10} swap@t{} class {} scenario {} {} {:.3}x: {}",
+                report.variant, swap.step, swap.class, swap.scenario, swap.label,
+                swap.speedup, swap.note
             );
         }
         if cfg.online_optimize {
@@ -419,6 +446,21 @@ fn cmd_serve_concurrent(cfg: &Config, steps: usize, warmup: usize) -> Result<()>
                 "{:<10} online: {} published, {} gate-rejected",
                 report.variant, report.published, report.gate_rejects
             );
+        }
+        if cfg.dispatch {
+            let specs = kernels::all_specs();
+            for (class, hits) in report.dispatch_hits.iter().enumerate() {
+                let buckets = hits
+                    .iter()
+                    .enumerate()
+                    .map(|(s, h)| format!("s{s}:{h}"))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                println!(
+                    "{:<10} dispatch {}: {}",
+                    report.variant, specs[class].paper_name, buckets
+                );
+            }
         }
     }
     Ok(())

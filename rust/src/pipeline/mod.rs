@@ -12,8 +12,8 @@
 pub mod serve;
 
 pub use serve::{
-    serve_concurrent, RequestMix, RouteRecord, RoutingTable, ServeHarnessOptions,
-    ServeReport, SwapRecord, Variant,
+    serve_concurrent, DispatchTable, RequestMix, RouteRecord,
+    ServeHarnessOptions, ServeReport, SwapRecord, Variant,
 };
 
 use anyhow::{anyhow, Result};
@@ -83,6 +83,17 @@ fn serving_dims_scaled(
         "silu_and_mul" => Ok(kernels::dims_of(&[
             ("B", batch),
             ("D", cfg.inter as i64),
+        ])),
+        // Attention-probability rows: one row per (batch, head) pair,
+        // decode-length scores folded into the serving config's
+        // intermediate size (the stand-in for the KV length).
+        "softmax" => Ok(kernels::dims_of(&[
+            ("B", batch),
+            ("D", cfg.inter as i64),
+        ])),
+        "layernorm" => Ok(kernels::dims_of(&[
+            ("B", batch),
+            ("D", cfg.hidden() as i64),
         ])),
         other => Err(anyhow!("no serving shape mapping for kernel {other}")),
     }
@@ -522,9 +533,9 @@ mod tests {
         let cache = CompileCache::with_default_capacity();
         let n = validate_serving_kernels(&ServeConfig::default(), &cache)
             .expect("serving kernels must pass their oracle");
-        // Three kernels x (baseline + optimized composition).
-        assert_eq!(n, 6);
-        assert_eq!(cache.stats().misses, 6);
+        // Five kernels x (baseline + optimized composition).
+        assert_eq!(n, 10);
+        assert_eq!(cache.stats().misses, 10);
         assert_eq!(cache.stats().hits, 0);
     }
 
@@ -539,7 +550,7 @@ mod tests {
         validate_serving_kernels(&cfg, &cache).unwrap();
         let second = cache.stats();
         assert_eq!(second.misses, first.misses, "no recompiles");
-        assert_eq!(second.hits, first.hits + 6);
+        assert_eq!(second.hits, first.hits + 10);
     }
 
     #[test]
@@ -562,7 +573,7 @@ mod tests {
             &cache,
         )
         .expect("baseline variants must pass");
-        assert_eq!(report.validated, 6);
+        assert_eq!(report.validated, 10);
         assert!(
             report.fallbacks.is_empty(),
             "healthy optimized IR must not demote: {:?}",

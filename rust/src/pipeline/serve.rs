@@ -4,12 +4,16 @@
 //! N client streams each draw a kernel class per decode step from a
 //! weighted [`RequestMix`]; a dynamic batcher groups same-class
 //! requests into one scaled launch (`serving_dims_scaled`); a
-//! [`RoutingTable`] of epoch-tagged [`Variant`]s picks the kernel IR
-//! per class; and, with `online_optimize` on, a background optimizer
-//! thread keeps running the beam search (sharing the hoisted
-//! [`CompileCache`] and the process-wide [`WorkerBudget`]) and
-//! hot-swaps a strictly better, gate-revalidated variant in through an
-//! atomic `Arc` pointer swap.
+//! [`DispatchTable`] of epoch-tagged [`Variant`]s picks the kernel IR
+//! per `(class, scenario)` — the scenario bucket is chosen from the
+//! coalesced launch's leading dimension, so prefill-sized and
+//! decode-sized batches can route to different winners when
+//! `--dispatch --scenarios split` is on (one `"global"` bucket per
+//! class otherwise, which is the legacy routing table byte-for-byte).
+//! With `online_optimize` on, a background optimizer thread keeps
+//! running the beam search (sharing the hoisted [`CompileCache`] and
+//! the process-wide [`WorkerBudget`]) and hot-swaps a strictly better,
+//! gate-revalidated variant in through an atomic `Arc` pointer swap.
 //!
 //! Determinism discipline (the property every serving test pins):
 //! every observable decision is keyed by stable identities, never by
@@ -24,7 +28,9 @@
 //!   and publish checkpoints *block* on the optimizer channel at fixed
 //!   timed-step indices (`t % swap_interval == 0`), so swap epochs land
 //!   at identical steps at every `(clients, worker_budget, fault plan)`
-//!   point — concurrency overlaps work, it never reorders decisions.
+//!   point — concurrency overlaps work, it never reorders decisions;
+//! * scenario dispatch is a pure function of the coalesced batch shape
+//!   (`lookup(class, lead)`), so routing never depends on thread timing.
 
 use std::sync::mpsc;
 use std::sync::{Arc, RwLock};
@@ -48,16 +54,22 @@ use super::{
 };
 
 /// Weighted request mix over the serving kernel classes, in catalog
-/// order (`merge_attn_states_lse`, `fused_add_rmsnorm`, `silu_and_mul`).
+/// order (`merge_attn_states_lse`, `fused_add_rmsnorm`, `silu_and_mul`,
+/// `softmax`, `layernorm`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RequestMix {
-    pub weights: [u32; 3],
+    pub weights: [u32; 5],
 }
 
 /// Short names accepted by [`RequestMix::parse`], in catalog order.
-const MIX_NAMES: [&str; 3] = ["merge", "rmsnorm", "silu"];
-const MIX_PAPER_NAMES: [&str; 3] =
-    ["merge_attn_states_lse", "fused_add_rmsnorm", "silu_and_mul"];
+const MIX_NAMES: [&str; 5] = ["merge", "rmsnorm", "silu", "softmax", "layernorm"];
+const MIX_PAPER_NAMES: [&str; 5] = [
+    "merge_attn_states_lse",
+    "fused_add_rmsnorm",
+    "silu_and_mul",
+    "softmax",
+    "layernorm",
+];
 
 impl Default for RequestMix {
     fn default() -> Self {
@@ -68,7 +80,7 @@ impl Default for RequestMix {
 impl RequestMix {
     /// Every class equally likely.
     pub fn uniform() -> RequestMix {
-        RequestMix { weights: [1, 1, 1] }
+        RequestMix { weights: [1, 1, 1, 1, 1] }
     }
 
     pub fn total(&self) -> u32 {
@@ -76,14 +88,14 @@ impl RequestMix {
     }
 
     /// Parse `uniform` or a comma list of `name:weight` entries
-    /// (`merge:2,rmsnorm:1,silu:1`; full paper names also accepted).
+    /// (`merge:2,rmsnorm:1,softmax:1`; full paper names also accepted).
     /// Unlisted classes get weight 0; an all-zero mix is rejected.
     pub fn parse(s: &str) -> Result<RequestMix, String> {
         let s = s.trim();
         if s.eq_ignore_ascii_case("uniform") {
             return Ok(RequestMix::uniform());
         }
-        let mut weights = [0u32; 3];
+        let mut weights = [0u32; 5];
         for part in s.split(',') {
             let part = part.trim();
             let (name, w) = part
@@ -97,7 +109,7 @@ impl RequestMix {
                 .ok_or_else(|| {
                     format!(
                         "unknown request-mix kernel '{name}' \
-                         (expected merge/rmsnorm/silu)"
+                         (expected merge/rmsnorm/silu/softmax/layernorm)"
                     )
                 })?;
             weights[idx] = w
@@ -142,31 +154,75 @@ impl RequestMix {
 /// clear).
 #[derive(Debug, Clone)]
 pub struct Variant {
-    /// Per-class monotone publish counter (0 = initial baseline).
+    /// Per-slot monotone publish counter (0 = initial baseline).
     pub epoch: u64,
     pub label: String,
     pub kernel: Kernel,
     pub speedup: f64,
 }
 
-/// Per-class variant routing table with epoch-style atomic hot-swap:
-/// readers clone an `Arc` under a read lock (no torn reads — a reader
-/// holds exactly the pre- or post-publish variant, never a mix), and
-/// [`publish`](Self::publish) swaps the pointer wholesale.
-pub struct RoutingTable {
-    slots: Vec<RwLock<Arc<Variant>>>,
+/// Per-`(class, scenario)` variant dispatch table with epoch-style
+/// atomic hot-swap: readers clone an `Arc` under a read lock (no torn
+/// reads — a reader holds exactly the pre- or post-publish variant,
+/// never a mix), and [`publish`](Self::publish) swaps the pointer
+/// wholesale.
+///
+/// Each class row carries its scenario buckets in ascending `min_lead`
+/// (floor) order with the first floor at 0 (the kernels catalog pins
+/// that ordering), so [`lookup`](Self::lookup) — last floor not
+/// exceeding the launch's leading dimension — is total. A
+/// [`single`](Self::single)-bucket table degenerates to the legacy
+/// per-class routing table: every lookup lands in bucket 0.
+pub struct DispatchTable {
+    /// `slots[class][scenario]`.
+    slots: Vec<Vec<RwLock<Arc<Variant>>>>,
+    /// `floors[class][scenario]`: minimum leading dim per bucket.
+    floors: Vec<Vec<i64>>,
+    /// `names[class][scenario]`: scenario names for ledgers + store keys.
+    names: Vec<Vec<&'static str>>,
 }
 
-impl RoutingTable {
-    pub fn new(initial: Vec<Variant>) -> RoutingTable {
-        RoutingTable {
-            slots: initial
-                .into_iter()
-                .map(|v| RwLock::new(Arc::new(v)))
-                .collect(),
+impl DispatchTable {
+    /// Build from per-class scenario rows of `(name, floor, variant)`,
+    /// floors ascending with the first at 0.
+    pub fn new(rows: Vec<Vec<(&'static str, i64, Variant)>>) -> DispatchTable {
+        let mut slots = Vec::with_capacity(rows.len());
+        let mut floors = Vec::with_capacity(rows.len());
+        let mut names = Vec::with_capacity(rows.len());
+        for row in rows {
+            assert!(!row.is_empty(), "a class row needs at least one scenario");
+            debug_assert!(
+                row.windows(2).all(|w| w[0].1 < w[1].1) && row[0].1 == 0,
+                "scenario floors must ascend from 0"
+            );
+            let mut s = Vec::with_capacity(row.len());
+            let mut f = Vec::with_capacity(row.len());
+            let mut n = Vec::with_capacity(row.len());
+            for (name, floor, v) in row {
+                s.push(RwLock::new(Arc::new(v)));
+                f.push(floor);
+                n.push(name);
+            }
+            slots.push(s);
+            floors.push(f);
+            names.push(n);
         }
+        DispatchTable { slots, floors, names }
     }
 
+    /// The legacy single-bucket shape: one `"global"` scenario per
+    /// class with floor 0, so every lookup returns bucket 0 and
+    /// dispatch-off routing is this table by construction.
+    pub fn single(initial: Vec<Variant>) -> DispatchTable {
+        DispatchTable::new(
+            initial
+                .into_iter()
+                .map(|v| vec![("global", 0, v)])
+                .collect(),
+        )
+    }
+
+    /// Number of kernel classes (rows).
     pub fn len(&self) -> usize {
         self.slots.len()
     }
@@ -175,15 +231,51 @@ impl RoutingTable {
         self.slots.is_empty()
     }
 
-    /// The current variant for a class (a cheap `Arc` clone; the swap
-    /// epoch travels with it).
-    pub fn read(&self, class: usize) -> Arc<Variant> {
-        Arc::clone(&self.slots[class].read().expect("routing table poisoned"))
+    /// Number of scenario buckets for one class.
+    pub fn scenarios(&self, class: usize) -> usize {
+        self.slots[class].len()
     }
 
-    /// Atomically replace the class's variant.
-    pub fn publish(&self, class: usize, v: Variant) {
-        *self.slots[class].write().expect("routing table poisoned") = Arc::new(v);
+    /// The scenario name for a slot (ledger + store key material).
+    pub fn scenario_name(&self, class: usize, scenario: usize) -> &'static str {
+        self.names[class][scenario]
+    }
+
+    /// The bucket covering a launch whose leading dimension is `lead`:
+    /// the last floor not exceeding it. Total because floor 0 exists.
+    pub fn scenario_for(&self, class: usize, lead: i64) -> usize {
+        let floors = &self.floors[class];
+        let mut best = 0usize;
+        for (i, f) in floors.iter().enumerate() {
+            if *f <= lead {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// The current variant for a slot (a cheap `Arc` clone; the swap
+    /// epoch travels with it).
+    pub fn read(&self, class: usize, scenario: usize) -> Arc<Variant> {
+        Arc::clone(
+            &self.slots[class][scenario]
+                .read()
+                .expect("dispatch table poisoned"),
+        )
+    }
+
+    /// Scenario selection + read in one step: dispatch a launch with
+    /// leading dimension `lead` to its bucket's live variant.
+    pub fn lookup(&self, class: usize, lead: i64) -> (usize, Arc<Variant>) {
+        let s = self.scenario_for(class, lead);
+        (s, self.read(class, s))
+    }
+
+    /// Atomically replace a slot's variant.
+    pub fn publish(&self, class: usize, scenario: usize, v: Variant) {
+        *self.slots[class][scenario]
+            .write()
+            .expect("dispatch table poisoned") = Arc::new(v);
     }
 }
 
@@ -195,6 +287,9 @@ pub struct RouteRecord {
     pub client: usize,
     /// Kernel class the client drew.
     pub class: usize,
+    /// Scenario bucket the dispatch table picked for the class's
+    /// coalesced launch this step (0 in single-bucket/global mode).
+    pub scenario: usize,
     /// Epoch of the variant the router picked this step.
     pub epoch: u64,
     /// Whether this request was served by the baseline fallback (open
@@ -208,12 +303,14 @@ pub struct SwapRecord {
     /// Timed step index of the checkpoint.
     pub step: usize,
     pub class: usize,
+    /// Scenario bucket the candidate targets (0 in global mode).
+    pub scenario: usize,
     /// Candidate label (`online@g<N>`).
     pub label: String,
     /// The optimizer's measured speedup claim.
     pub speedup: f64,
     pub published: bool,
-    /// The class epoch after the checkpoint (bumped iff published).
+    /// The slot epoch after the checkpoint (bumped iff published).
     pub epoch: u64,
     /// `published`, or why the candidate was rejected.
     pub note: String,
@@ -236,6 +333,10 @@ pub struct ServeReport {
     pub published: usize,
     /// Online candidates the publish gate rejected.
     pub gate_rejects: usize,
+    /// Timed requests dispatched per `(class, scenario)` slot — the
+    /// v10 bench exports these, and the dispatch tests assert the mix
+    /// lands where the floors say it must.
+    pub dispatch_hits: Vec<Vec<u64>>,
 }
 
 /// Harness knobs that are per-run rather than per-config.
@@ -254,6 +355,8 @@ pub struct ServeHarnessOptions {
 /// An online-optimizer candidate crossing the channel.
 struct Candidate {
     class: usize,
+    /// Scenario slot the candidate was searched for (0 in global mode).
+    scenario: usize,
     label: String,
     kernel: Kernel,
     speedup: f64,
@@ -281,6 +384,13 @@ struct SubBatch {
 /// process-hoisted compile cache and worker-budget pool, shared with
 /// the online optimizer thread so serving + search together respect one
 /// global thread cap.
+///
+/// Scenario dispatch: with `cfg.dispatch && cfg.scenario_split`, every
+/// class row carries one slot per catalog [`Scenario`](kernels::Scenario)
+/// bucket and the optimizer searches each bucket on its own shapes;
+/// otherwise each class has the single `"global"` bucket and the run is
+/// byte-identical to the pre-dispatch harness (same code path, same
+/// search seeds, same store records).
 pub fn serve_concurrent(
     cfg: &Config,
     serve_cfg: &ServeConfig,
@@ -302,26 +412,36 @@ pub fn serve_concurrent(
     }
     let specs = kernels::all_specs();
     let scales = gate_scales(cfg.clients);
+    let split = cfg.dispatch && cfg.scenario_split;
+    let buckets: Vec<Vec<kernels::Scenario>> = specs
+        .iter()
+        .map(|s| {
+            if split {
+                (s.scenarios)()
+            } else {
+                vec![s.global_scenario()]
+            }
+        })
+        .collect();
 
-    // Pre-serve gate + initial routing table. A failing baseline is
+    // Pre-serve gate + initial dispatch table. A failing baseline is
     // fatal; a failing optimized composition demotes that class to
-    // baseline (mirroring validate_serving_kernels_with_fallback).
+    // baseline (mirroring validate_serving_kernels_with_fallback). The
+    // gate runs once per class — launch dims don't depend on the
+    // scenario bucket — but the optimized variant's speedup claim is
+    // measured per bucket on that bucket's shapes.
     let mut demotions: Vec<(String, String)> = Vec::new();
-    let mut initial = Vec::with_capacity(specs.len());
+    let mut rows: Vec<Vec<(&'static str, i64, Variant)>> =
+        Vec::with_capacity(specs.len());
     let mut baselines = Vec::with_capacity(specs.len());
-    for spec in &specs {
+    for (ci, spec) in specs.iter().enumerate() {
         let base = (spec.build_baseline)();
         for scale in &scales {
             let dims = serving_dims_scaled(serve_cfg, spec, *scale)?;
             validate_one_launch(spec, &base, &dims, cache)?;
         }
         let base = Arc::new(base);
-        let mut variant = Variant {
-            epoch: 0,
-            label: "baseline".to_string(),
-            kernel: (*base).clone(),
-            speedup: 1.0,
-        };
+        let mut optimized: Option<Kernel> = None;
         if opts.route_optimized {
             let opt = transforms::optimized_reference(&base);
             let gate = scales.iter().try_for_each(|scale| {
@@ -329,33 +449,45 @@ pub fn serve_concurrent(
                 validate_one_launch(spec, &opt, &dims, cache)
             });
             match gate {
-                Ok(()) => {
-                    let shapes = (spec.representative_shapes)();
-                    let speedup = sim::geomean_speedup(
-                        &sim::profile_shapes(&cfg.model, &base, &shapes),
-                        &sim::profile_shapes(&cfg.model, &opt, &shapes),
-                    );
-                    variant = Variant {
-                        epoch: 1,
-                        label: "optimized".to_string(),
-                        kernel: opt,
-                        speedup,
-                    };
-                }
+                Ok(()) => optimized = Some(opt),
                 Err(e) => {
                     demotions.push((spec.paper_name.to_string(), format!("{e:#}")));
                 }
             }
         }
-        initial.push(variant);
+        let mut row = Vec::with_capacity(buckets[ci].len());
+        for bucket in &buckets[ci] {
+            let variant = match &optimized {
+                Some(opt) => {
+                    let speedup = sim::geomean_speedup(
+                        &sim::profile_shapes(&cfg.model, &base, &bucket.shapes),
+                        &sim::profile_shapes(&cfg.model, opt, &bucket.shapes),
+                    );
+                    Variant {
+                        epoch: 1,
+                        label: "optimized".to_string(),
+                        kernel: opt.clone(),
+                        speedup,
+                    }
+                }
+                None => Variant {
+                    epoch: 0,
+                    label: "baseline".to_string(),
+                    kernel: (*base).clone(),
+                    speedup: 1.0,
+                },
+            };
+            row.push((bucket.name, bucket.min_lead, variant));
+        }
+        rows.push(row);
         baselines.push(base);
     }
-    let table = RoutingTable::new(initial);
+    let table = DispatchTable::new(rows);
 
     // Durable publish ledger: every accepted hot-swap is recorded in the
     // artifact store so a later warm-started run (or a post-mortem) can
     // see which kernels actually served. Store faults here can lose a
-    // publish *record*, never the publish itself — the routing table is
+    // publish *record*, never the publish itself — the dispatch table is
     // the source of truth for what ships.
     let store: Option<Store> = cfg
         .store_dir
@@ -366,36 +498,52 @@ pub fn serve_concurrent(
     // Online optimizer: one generation per publish checkpoint, so every
     // checkpoint's blocking recv is matched by exactly one send and the
     // thread always drains clean. Generations are seeded from
-    // (cfg.seed, g) alone — identical at every client count.
+    // (cfg.seed, g) alone — identical at every client count — and cycle
+    // the (class, scenario) slots in row-major catalog order; with one
+    // global bucket per class that is exactly the legacy per-class
+    // rotation.
     let generations = if cfg.online_optimize {
         (opts.steps - 1) / cfg.swap_interval
     } else {
         0
     };
+    let targets: Vec<(usize, usize)> = buckets
+        .iter()
+        .enumerate()
+        .flat_map(|(class, bs)| (0..bs.len()).map(move |s| (class, s)))
+        .collect();
     let (tx, rx) = mpsc::channel::<Candidate>();
     let optimizer = if generations > 0 {
-        let gen_cfgs: Vec<(usize, Config)> = (0..generations)
+        let gen_jobs: Vec<(usize, usize, KernelSpec, Config)> = (0..generations)
             .map(|g| {
+                let (class, scenario) = targets[g % targets.len()];
                 let mut c = cfg.clone();
                 c.seed = faults::mix(cfg.seed, 0x0917_5EED ^ g as u64);
                 c.clients = 0;
                 c.online_optimize = false;
-                (g % specs.len(), c)
+                // Global mode passes the pristine spec (legacy search,
+                // bit-for-bit); split mode retargets the perf shapes to
+                // the bucket's own dim sets.
+                let spec = if split {
+                    specs[class].with_shapes(buckets[class][scenario].shapes.clone())
+                } else {
+                    specs[class].clone()
+                };
+                (class, scenario, spec, c)
             })
             .collect();
-        let specs = specs.clone();
         let cache = Arc::clone(cache);
         let budget = Arc::clone(budget);
         Some(std::thread::spawn(move || {
-            for (g, (class, gen_cfg)) in gen_cfgs.into_iter().enumerate() {
+            for (g, (class, scenario, spec, gen_cfg)) in
+                gen_jobs.into_iter().enumerate()
+            {
                 let out = coordinator::optimize_with_cache_budget(
-                    &specs[class],
-                    &gen_cfg,
-                    &cache,
-                    &budget,
+                    &spec, &gen_cfg, &cache, &budget,
                 );
                 let sent = tx.send(Candidate {
                     class,
+                    scenario,
                     label: format!("online@g{g}"),
                     kernel: out.best,
                     speedup: out.final_speedup,
@@ -421,6 +569,8 @@ pub fn serve_concurrent(
     let mut swaps: Vec<SwapRecord> = Vec::new();
     let mut published = 0usize;
     let mut gate_rejects = 0usize;
+    let mut dispatch_hits: Vec<Vec<u64>> =
+        buckets.iter().map(|bs| vec![0u64; bs.len()]).collect();
     let mut lat: Vec<f64> = Vec::with_capacity(opts.steps);
     let mut fallback_requests = 0usize;
     let mut consumed = 0usize;
@@ -448,7 +598,7 @@ pub fn serve_concurrent(
             consumed += 1;
             let rec = publish_checkpoint(
                 cand, t, &table, &specs, serve_cfg, &scales, cache,
-                store.as_ref(),
+                store.as_ref(), split,
             )?;
             if rec.published {
                 published += 1;
@@ -465,11 +615,13 @@ pub fn serve_concurrent(
             .map(|s| cfg.request_mix.pick(&mut s.rng))
             .collect();
 
-        // Dynamic batcher: group same-class requests, split each group
-        // by its members' breaker verdicts into a primary sub-batch and
-        // a baseline-fallback sub-batch.
+        // Dynamic batcher: group same-class requests, dispatch the
+        // coalesced launch shape to its scenario slot, then split each
+        // group by its members' breaker verdicts into a primary
+        // sub-batch and a baseline-fallback sub-batch.
         let mut subs: Vec<SubBatch> = Vec::new();
-        let mut step_variants: Vec<Option<Arc<Variant>>> = vec![None; specs.len()];
+        let mut step_variants: Vec<Option<(usize, Arc<Variant>)>> =
+            vec![None; specs.len()];
         for class in 0..specs.len() {
             let members: Vec<usize> = (0..cfg.clients)
                 .filter(|c| picks[*c] == class)
@@ -477,7 +629,12 @@ pub fn serve_concurrent(
             if members.is_empty() {
                 continue;
             }
-            let variant = table.read(class);
+            // Dispatch keys on the coalesced batch the group *intends*
+            // to launch (before breaker partition), so the scenario is
+            // a pure function of the step's draws, not breaker state.
+            let dims = serving_dims_scaled(serve_cfg, &specs[class], members.len())?;
+            let lead = dims.get(specs[class].dims[0]).copied().unwrap_or(0);
+            let (scenario, variant) = table.lookup(class, lead);
             let routed_baseline = variant.label == "baseline";
             let (primary, fallback): (Vec<usize>, Vec<usize>) = if routed_baseline {
                 (members, Vec::new())
@@ -506,13 +663,13 @@ pub fn serve_concurrent(
                     is_fallback: true,
                 });
             }
-            step_variants[class] = Some(variant);
+            step_variants[class] = Some((scenario, variant));
         }
 
         // Execute every sub-batch over the budgeted pool; results merge
         // by sub-batch index, so concurrency never reorders outcomes.
         let step_t0 = std::time::Instant::now();
-        let results = run_indexed(Some(budget), subs.len(), |i| {
+        let results = run_indexed(Some(budget.as_ref()), subs.len(), |i| {
             exec_sub_batch(
                 &subs[i], &specs[subs[i].class], serve_cfg, cfg, abs_step,
                 cache, budget,
@@ -542,13 +699,15 @@ pub fn serve_concurrent(
             lat.push(step_us);
             for (c, fb) in fell_back.iter().enumerate() {
                 let class = picks[c];
-                let epoch = step_variants[class]
+                let (scenario, epoch) = step_variants[class]
                     .as_ref()
-                    .map_or(0, |v| v.epoch);
+                    .map_or((0, 0), |(s, v)| (*s, v.epoch));
+                dispatch_hits[class][scenario] += 1;
                 routes.push(RouteRecord {
                     step: t,
                     client: c,
                     class,
+                    scenario,
                     epoch,
                     fell_back: *fb,
                 });
@@ -591,6 +750,7 @@ pub fn serve_concurrent(
         demotions,
         published,
         gate_rejects,
+        dispatch_hits,
     })
 }
 
@@ -611,20 +771,24 @@ fn gate_scales(clients: usize) -> Vec<usize> {
 
 /// Decide one online candidate at a publish checkpoint: reject if its
 /// own final oracle failed, if it does not strictly beat the live
-/// variant's speedup, or if the pre-publish gate fails on any serving
-/// scale; otherwise hot-swap it in under the next epoch.
+/// slot's speedup, or if the pre-publish gate fails on any serving
+/// scale; otherwise hot-swap it in under the next epoch. Accepted
+/// publishes are persisted: the legacy publish record in global mode
+/// (byte-identical store layout to pre-dispatch runs), the
+/// scenario-keyed dispatch record in split mode.
 #[allow(clippy::too_many_arguments)]
 fn publish_checkpoint(
     cand: Candidate,
     t: usize,
-    table: &RoutingTable,
+    table: &DispatchTable,
     specs: &[KernelSpec],
     serve_cfg: &ServeConfig,
     scales: &[usize],
     cache: &Arc<CompileCache>,
     store: Option<&Store>,
+    split: bool,
 ) -> Result<SwapRecord> {
-    let cur = table.read(cand.class);
+    let cur = table.read(cand.class, cand.scenario);
     let (published, epoch, note) = if !cand.correct {
         (false, cur.epoch, "rejected: final oracle re-validation failed".to_string())
     } else if cand.speedup <= cur.speedup {
@@ -646,6 +810,7 @@ fn publish_checkpoint(
                 let epoch = cur.epoch + 1;
                 table.publish(
                     cand.class,
+                    cand.scenario,
                     Variant {
                         epoch,
                         label: cand.label.clone(),
@@ -654,12 +819,22 @@ fn publish_checkpoint(
                     },
                 );
                 if let Some(s) = store {
-                    s.save_publish(
-                        specs[cand.class].paper_name,
-                        kernel_hash(&cand.kernel),
-                        epoch,
-                        cand.speedup,
-                    );
+                    if split {
+                        s.save_dispatch(
+                            specs[cand.class].paper_name,
+                            table.scenario_name(cand.class, cand.scenario),
+                            kernel_hash(&cand.kernel),
+                            epoch,
+                            cand.speedup,
+                        );
+                    } else {
+                        s.save_publish(
+                            specs[cand.class].paper_name,
+                            kernel_hash(&cand.kernel),
+                            epoch,
+                            cand.speedup,
+                        );
+                    }
                 }
                 (true, epoch, "published".to_string())
             }
@@ -669,6 +844,7 @@ fn publish_checkpoint(
     Ok(SwapRecord {
         step: t,
         class: cand.class,
+        scenario: cand.scenario,
         label: cand.label,
         speedup: cand.speedup,
         published,
@@ -772,7 +948,7 @@ fn run_launch(
         &mut env,
         RunOpts {
             grid_workers: cfg.grid_workers,
-            budget: Some(budget),
+            budget: Some(budget.as_ref()),
             ..RunOpts::default()
         },
     )
@@ -785,14 +961,24 @@ mod tests {
 
     #[test]
     fn mix_parse_render_round_trips() {
-        for s in ["uniform", "merge:2,rmsnorm:1", "silu:5", "merge:1,rmsnorm:1,silu:1"] {
+        for s in [
+            "uniform",
+            "merge:2,rmsnorm:1",
+            "silu:5",
+            "softmax:2,layernorm:3",
+            "merge:1,rmsnorm:1,silu:1,softmax:1,layernorm:1",
+        ] {
             let mix = RequestMix::parse(s).unwrap();
             assert_eq!(RequestMix::parse(&mix.render()), Ok(mix), "{s}");
         }
         assert_eq!(RequestMix::parse("uniform"), Ok(RequestMix::uniform()));
         assert_eq!(
             RequestMix::parse("fused_add_rmsnorm:3"),
-            Ok(RequestMix { weights: [0, 3, 0] })
+            Ok(RequestMix { weights: [0, 3, 0, 0, 0] })
+        );
+        assert_eq!(
+            RequestMix::parse("layernorm:2"),
+            Ok(RequestMix { weights: [0, 0, 0, 0, 2] })
         );
         assert!(RequestMix::parse("merge:0,silu:0").is_err(), "all-zero");
         assert!(RequestMix::parse("bogus:1").is_err());
@@ -802,7 +988,7 @@ mod tests {
 
     #[test]
     fn mix_pick_is_weighted_and_deterministic() {
-        let mix = RequestMix { weights: [2, 1, 0] };
+        let mix = RequestMix { weights: [2, 1, 0, 0, 0] };
         let draw = |seed: u64| -> Vec<usize> {
             let mut rng = Prng::seed(seed);
             (0..300).map(|_| mix.pick(&mut rng)).collect()
@@ -818,9 +1004,9 @@ mod tests {
     }
 
     #[test]
-    fn routing_table_swaps_whole_variants() {
+    fn dispatch_table_swaps_whole_variants() {
         let base = (kernels::all_specs()[0].build_baseline)();
-        let table = RoutingTable::new(vec![Variant {
+        let table = DispatchTable::single(vec![Variant {
             epoch: 0,
             label: "baseline".to_string(),
             kernel: base.clone(),
@@ -828,9 +1014,12 @@ mod tests {
         }]);
         assert_eq!(table.len(), 1);
         assert!(!table.is_empty());
-        let v0 = table.read(0);
+        assert_eq!(table.scenarios(0), 1);
+        assert_eq!(table.scenario_name(0, 0), "global");
+        let v0 = table.read(0, 0);
         assert_eq!((v0.epoch, v0.label.as_str()), (0, "baseline"));
         table.publish(
+            0,
             0,
             Variant {
                 epoch: 1,
@@ -839,10 +1028,51 @@ mod tests {
                 speedup: 1.4,
             },
         );
-        let v1 = table.read(0);
+        let v1 = table.read(0, 0);
         assert_eq!((v1.epoch, v1.label.as_str()), (1, "online@g0"));
         // The old Arc a reader already held is untouched by the swap.
         assert_eq!(v0.epoch, 0);
+    }
+
+    #[test]
+    fn dispatch_lookup_picks_last_floor_not_exceeding_lead() {
+        let base = (kernels::all_specs()[0].build_baseline)();
+        let v = |label: &str| Variant {
+            epoch: 0,
+            label: label.to_string(),
+            kernel: base.clone(),
+            speedup: 1.0,
+        };
+        let table = DispatchTable::new(vec![vec![
+            ("decode", 0, v("small")),
+            ("prefill", 256, v("large")),
+        ]]);
+        assert_eq!(table.scenarios(0), 2);
+        for (lead, want_s, want_label) in [
+            (0, 0, "small"),
+            (255, 0, "small"),
+            (256, 1, "large"),
+            (1 << 20, 1, "large"),
+            (-1, 0, "small"), // below every floor still lands in bucket 0
+        ] {
+            let (s, var) = table.lookup(0, lead);
+            assert_eq!((s, var.label.as_str()), (want_s, want_label), "lead {lead}");
+        }
+    }
+
+    #[test]
+    fn single_bucket_lookup_ignores_lead() {
+        let base = (kernels::all_specs()[0].build_baseline)();
+        let table = DispatchTable::single(vec![Variant {
+            epoch: 3,
+            label: "optimized".to_string(),
+            kernel: base,
+            speedup: 2.0,
+        }]);
+        for lead in [0i64, 8, 256, 1 << 30] {
+            let (s, var) = table.lookup(0, lead);
+            assert_eq!((s, var.epoch), (0, 3), "lead {lead}");
+        }
     }
 
     #[test]

@@ -598,6 +598,74 @@ impl Store {
         );
     }
 
+    // ---- dispatch-table records ------------------------------------------
+
+    /// Persist the winning variant of one `(kernel, scenario)` dispatch
+    /// slot, keep-best: an existing record with an equal-or-better
+    /// speedup is left untouched, so repeated or killed-and-resumed
+    /// serve runs converge on the fastest known variant per slot.
+    pub fn save_dispatch(
+        &self,
+        kernel_name: &str,
+        scenario: &str,
+        khash: u64,
+        epoch: u64,
+        speedup: f64,
+    ) {
+        let key = record_key(&["dispatch", kernel_name, scenario]);
+        if let Some(existing) = self.peek_dispatch(key) {
+            if existing.speedup >= speedup {
+                return;
+            }
+        }
+        let payload = format!(
+            "kernel {} scenario {} khash {khash:016x} epoch {epoch} speedup {:016x}\n",
+            esc(kernel_name),
+            esc(scenario),
+            speedup.to_bits()
+        );
+        self.write_record(
+            &format!("disp-{key:016x}.rec"),
+            "dispatch",
+            key,
+            payload.as_bytes(),
+        );
+    }
+
+    /// Load the best recorded dispatch winner for a `(kernel, scenario)`
+    /// slot (hit/miss counted). Torn or corrupt records quarantine to
+    /// `*.corrupt` and read as absent, like every other record kind.
+    pub fn load_dispatch(
+        &self,
+        kernel_name: &str,
+        scenario: &str,
+    ) -> Option<DispatchSlot> {
+        let key = record_key(&["dispatch", kernel_name, scenario]);
+        match self.peek_dispatch(key) {
+            Some(d) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(d)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// [`Store::load_dispatch`] without ledger traffic — the keep-best
+    /// check in [`Store::save_dispatch`] uses it.
+    fn peek_dispatch(&self, key: u64) -> Option<DispatchSlot> {
+        let name = format!("disp-{key:016x}.rec");
+        let payload = self.read_record(&name, "dispatch")?;
+        let text = std::str::from_utf8(&payload).ok()?;
+        let decoded = decode_dispatch(text.trim_end());
+        if decoded.is_none() {
+            self.quarantine(&self.dir.join(&name));
+        }
+        decoded
+    }
+
     // ---- the search journal ---------------------------------------------
 
     fn journal_path(&self, runkey: u64) -> PathBuf {
@@ -779,6 +847,54 @@ fn decode_trajectory(text: &str) -> Option<(Vec<Move>, f64)> {
         moves
     };
     Some((moves, f64::from_bits(bits)))
+}
+
+/// One persisted dispatch-table slot: the winning variant of a
+/// `(kernel, scenario)` pair as last published by a serve run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchSlot {
+    pub kernel: String,
+    pub scenario: String,
+    /// [`kernel_hash`](crate::interp::kernel_hash) of the winning IR.
+    pub khash: u64,
+    /// Publish epoch the winner shipped under.
+    pub epoch: u64,
+    /// The optimizer's measured speedup claim for the slot's shapes.
+    pub speedup: f64,
+}
+
+fn decode_dispatch(text: &str) -> Option<DispatchSlot> {
+    let mut it = text.split(' ');
+    if it.next()? != "kernel" {
+        return None;
+    }
+    let kernel = unesc(it.next()?)?;
+    if it.next()? != "scenario" {
+        return None;
+    }
+    let scenario = unesc(it.next()?)?;
+    if it.next()? != "khash" {
+        return None;
+    }
+    let khash = u64::from_str_radix(it.next()?, 16).ok()?;
+    if it.next()? != "epoch" {
+        return None;
+    }
+    let epoch: u64 = it.next()?.parse().ok()?;
+    if it.next()? != "speedup" {
+        return None;
+    }
+    let bits = u64::from_str_radix(it.next()?, 16).ok()?;
+    if it.next().is_some() {
+        return None;
+    }
+    Some(DispatchSlot {
+        kernel,
+        scenario,
+        khash,
+        epoch,
+        speedup: f64::from_bits(bits),
+    })
 }
 
 #[cfg(test)]
@@ -964,6 +1080,36 @@ mod tests {
         let (moves, sp) = store.load_trajectory(3).unwrap();
         assert_eq!(moves, vec![Move::WarpShuffle]);
         assert_eq!(sp.to_bits(), 2.0f64.to_bits());
+    }
+
+    #[test]
+    fn dispatch_slot_round_trips_across_reopen_keep_best() {
+        let dir = scratch("dispatch");
+        let store = Store::open(&dir).unwrap();
+        assert_eq!(store.load_dispatch("softmax", "prefill"), None);
+        store.save_dispatch("softmax", "prefill", 0xABCD, 2, 1.8);
+        // A different scenario of the same kernel is a different slot.
+        store.save_dispatch("softmax", "decode", 0x1111, 1, 1.3);
+        let got = store.load_dispatch("softmax", "prefill").unwrap();
+        assert_eq!(
+            (got.kernel.as_str(), got.scenario.as_str(), got.khash, got.epoch),
+            ("softmax", "prefill", 0xABCD, 2)
+        );
+        assert_eq!(got.speedup.to_bits(), 1.8f64.to_bits());
+        // Keep-best: a slower publish never displaces the stored winner…
+        store.save_dispatch("softmax", "prefill", 0x2222, 3, 1.1);
+        assert_eq!(store.load_dispatch("softmax", "prefill").unwrap().khash, 0xABCD);
+        // …a faster one does.
+        store.save_dispatch("softmax", "prefill", 0x3333, 4, 2.4);
+        assert_eq!(store.load_dispatch("softmax", "prefill").unwrap().khash, 0x3333);
+        // Kill-and-resume: a fresh handle on the same directory sees the
+        // same table, bit-for-bit.
+        drop(store);
+        let reopened = Store::open(&dir).unwrap();
+        let back = reopened.load_dispatch("softmax", "prefill").unwrap();
+        assert_eq!((back.khash, back.epoch), (0x3333, 4));
+        assert_eq!(back.speedup.to_bits(), 2.4f64.to_bits());
+        assert_eq!(reopened.load_dispatch("softmax", "decode").unwrap().khash, 0x1111);
     }
 
     #[test]

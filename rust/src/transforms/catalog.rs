@@ -82,7 +82,16 @@ pub fn applicable_moves(kernel: &Kernel) -> Vec<Move> {
 /// upper-bound reference for the agents.
 pub fn optimized_reference(kernel: &Kernel) -> Kernel {
     let mut k = kernel.clone();
-    for m in [Move::Hoist, Move::WarpShuffle, Move::Vectorize, Move::FastMath] {
+    if let Ok(next) = apply(&k, Move::Hoist) {
+        k = next;
+    }
+    // Multi-reduction kernels (layernorm) carry one tree per statistic;
+    // apply the shuffle rewrite until no tree remains. Single-tree
+    // kernels take exactly one application, as before.
+    while let Ok(next) = apply(&k, Move::WarpShuffle) {
+        k = next;
+    }
+    for m in [Move::Vectorize, Move::FastMath] {
         if let Ok(next) = apply(&k, m) {
             k = next;
         }

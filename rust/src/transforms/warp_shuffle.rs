@@ -84,7 +84,11 @@ pub fn apply(kernel: &Kernel) -> Result<Kernel, NotApplicable> {
     // Symbolic warp count (blockDim.x >> 5) so a later block-size retune
     // keeps the guard and the `ws` extent consistent.
     let nwarps = ishr(bdim(), 5);
-    let ws = "ws";
+    // Multi-reduction kernels (layernorm: mean then variance) apply this
+    // move once per tree, so each application needs a fresh partial
+    // buffer — `ws`, then `ws2`, `ws3`, ...
+    let ws_name = fresh_partial_name(kernel);
+    let ws = ws_name.as_str();
     let mut replacement = vec![
         comment("intra-warp reduction in registers"),
         for_shr(
@@ -142,6 +146,22 @@ pub fn apply(kernel: &Kernel) -> Result<Kernel, NotApplicable> {
         len: ishr(bdim(), 5),
     });
     Ok(k)
+}
+
+/// First unused warp-partial buffer name: `ws`, else `ws2`, `ws3`, ...
+fn fresh_partial_name(kernel: &Kernel) -> String {
+    let taken = |n: &str| kernel.shared.iter().any(|s| s.name == n);
+    if !taken("ws") {
+        return "ws".to_string();
+    }
+    let mut i = 2usize;
+    loop {
+        let name = format!("ws{i}");
+        if !taken(&name) {
+            return name;
+        }
+        i += 1;
+    }
 }
 
 /// Which shared buffer a tree-reduction loop accumulates into.

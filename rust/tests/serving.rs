@@ -14,7 +14,7 @@ use astra::faults::{FaultPlan, FaultSite};
 use astra::interp::{CompileCache, WorkerBudget};
 use astra::kernels;
 use astra::pipeline::{
-    serve_concurrent, RequestMix, RoutingTable, ServeConfig,
+    serve_concurrent, DispatchTable, RequestMix, ServeConfig,
     ServeHarnessOptions, ServeReport, Variant,
 };
 
@@ -59,8 +59,8 @@ fn ledger(r: &ServeReport) -> (Vec<String>, Vec<String>, usize, u64, u64) {
             .iter()
             .map(|x| {
                 format!(
-                    "{}/{}/{}/{}/{}",
-                    x.step, x.client, x.class, x.epoch, x.fell_back
+                    "{}/{}/{}/{}/{}/{}",
+                    x.step, x.client, x.class, x.scenario, x.epoch, x.fell_back
                 )
             })
             .collect(),
@@ -68,8 +68,9 @@ fn ledger(r: &ServeReport) -> (Vec<String>, Vec<String>, usize, u64, u64) {
             .iter()
             .map(|s| {
                 format!(
-                    "{}/{}/{}/{}/{}/{}",
-                    s.step, s.class, s.label, s.published, s.epoch, s.note
+                    "{}/{}/{}/{}/{}/{}/{}",
+                    s.step, s.class, s.scenario, s.label, s.published, s.epoch,
+                    s.note
                 )
             })
             .collect(),
@@ -237,13 +238,13 @@ fn online_optimizer_hot_swaps_under_load_deterministically() {
 }
 
 #[test]
-fn routing_table_hot_swap_is_never_torn_under_readers() {
+fn dispatch_table_hot_swap_is_never_torn_under_readers() {
     // Hammer the epoch-style swap: one publisher walks epochs 1..=64
     // while four reader threads spin. Every reader must observe a
     // coherent Variant — the label always matches the epoch it rode in
     // with — and epochs must never run backwards.
     let base = (kernels::all_specs()[0].build_baseline)();
-    let table = RoutingTable::new(vec![Variant {
+    let table = DispatchTable::single(vec![Variant {
         epoch: 0,
         label: "v0".to_string(),
         kernel: base.clone(),
@@ -255,7 +256,7 @@ fn routing_table_hot_swap_is_never_torn_under_readers() {
             s.spawn(|| {
                 let mut prev = 0u64;
                 loop {
-                    let v = table.read(0);
+                    let v = table.read(0, 0);
                     assert_eq!(
                         v.label,
                         format!("v{}", v.epoch),
@@ -273,6 +274,7 @@ fn routing_table_hot_swap_is_never_torn_under_readers() {
             for e in 1..=LAST {
                 table.publish(
                     0,
+                    0,
                     Variant {
                         epoch: e,
                         label: format!("v{e}"),
@@ -283,7 +285,7 @@ fn routing_table_hot_swap_is_never_torn_under_readers() {
             }
         });
     });
-    let v = table.read(0);
+    let v = table.read(0, 0);
     assert_eq!((v.epoch, v.label.as_str()), (LAST, "v64"));
 }
 

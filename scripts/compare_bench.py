@@ -41,13 +41,20 @@ Schema v9 adds the artifact-store warm-start numbers:
 toward cold means the store stopped replaying) plus the informational
 `cold_optimize_ms` and `warm_store_hits`.
 
+Schema v10 adds the per-scenario dispatch numbers: a per-kernel
+`scenario_optimize_ms` dict (one greedy-run median per catalog scenario
+bucket) and a top-level `dispatch_hits` block (timed requests served
+per (kernel, scenario) slot in the split-dispatch serve run). Both are
+informational — bucket sets grow with the catalog and the hit counts
+describe the bench's request mix, not a regression axis.
+
 Older-schema files (v1 without `search_cps`/`beam_optimize_ms`, v2
 without the grid and cache fields, v3 without the zero-copy fields, v4
 without the adaptive fields, v5 without the chaos fields, v6 without
 the pipelined fields, v7 without the serving block, v8 without the
-warm-start fields) compare cleanly: absent metrics are simply skipped,
-so the first run after a schema bump never fails on the artifact from
-before the bump.
+warm-start fields, v9 without the scenario/dispatch fields) compare
+cleanly: absent metrics are simply skipped, so the first run after a
+schema bump never fails on the artifact from before the bump.
 
 Usage:
     python3 compare_bench.py <old.json> <new.json> [--max-regression 0.15]
@@ -203,6 +210,24 @@ def main() -> int:
             )
             print(f"{name:<24} {'k_histogram':<14} {rendered} info")
 
+        # v10 schema: per-scenario search medians, informational (a
+        # dict keyed by scenario name; buckets may appear or vanish as
+        # the catalog's scenario sets evolve, so no gating).
+        scen = cur.get("scenario_optimize_ms")
+        if isinstance(scen, dict):
+            prev_scen = prev.get("scenario_optimize_ms")
+            prev_scen = prev_scen if isinstance(prev_scen, dict) else {}
+            rendered = ", ".join(
+                f"{s}: {v:.1f}ms"
+                + (
+                    f" (was {prev_scen[s]:.1f})"
+                    if isinstance(prev_scen.get(s), (int, float))
+                    else ""
+                )
+                for s, v in sorted(scen.items())
+            )
+            print(f"{name:<24} {'scenario_ms':<14} {rendered} info")
+
     # v8 schema: concurrent-serving envelope, gated per routing variant.
     # A pre-v8 baseline has no "serving" block and skips cleanly.
     old_serving = old.get("serving", {})
@@ -217,6 +242,15 @@ def main() -> int:
             args.max_regression, failures,
         )
         compare_informational(label, prev, cur, SERVING_INFORMATIONAL)
+
+    # v10 schema: per-(kernel, scenario) dispatch hit counters from the
+    # split-dispatch serve run, informational. A pre-v10 baseline has no
+    # "dispatch_hits" block and skips cleanly.
+    for kernel, hits in sorted(new.get("dispatch_hits", {}).items()):
+        if not isinstance(hits, dict):
+            continue
+        rendered = ", ".join(f"{s}: {h}" for s, h in sorted(hits.items()))
+        print(f"{'dispatch/' + kernel:<24} {rendered} info")
 
     # v3 schema: cross-run shared-cache counters, informational.
     cross = new.get("cross_run_cache")

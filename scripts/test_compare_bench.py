@@ -13,12 +13,13 @@ per-variant serving pair since schema v8 (serve_p50_us
 lower-is-better, serve_tokens_per_s higher-is-better), and the
 artifact-store warm-start median since schema v9 (warm_optimize_ms) —
 below passes, missing previous-run file skips cleanly, older-schema
-(v1/v2/v3/v4/v5/v6/v7/v8) baselines compare without crashing against
-newer output, and the informational fields (grid_zerocopy_ms,
+(v1/v2/v3/v4/v5/v6/v7/v8/v9) baselines compare without crashing
+against newer output, and the informational fields (grid_zerocopy_ms,
 sliced_launches, the v5 adaptive-scheduler fields incl. the
 k_histogram dict, the v6 chaos-supervision fields, the v7
-speculation-ledger fields, the v8 serving tail/fallback/trip fields
-and the v9 cold/store-hit fields) are reported without gating.
+speculation-ledger fields, the v8 serving tail/fallback/trip fields,
+the v9 cold/store-hit fields and the v10 scenario_optimize_ms dict +
+dispatch_hits block) are reported without gating.
 """
 
 import json
@@ -68,7 +69,7 @@ def serving_block(**overrides):
 
 
 def bench_json(interpret_ms, schema="astra-hotpath-v8", cross=True,
-               sliced=None, serving=None, **extra):
+               sliced=None, serving=None, dispatch=None, **extra):
     doc = {
         "schema": schema,
         "kernels": {
@@ -87,6 +88,8 @@ def bench_json(interpret_ms, schema="astra-hotpath-v8", cross=True,
         doc["sliced_launches"] = sliced
     if serving is not None:
         doc["serving"] = serving
+    if dispatch is not None:
+        doc["dispatch_hits"] = dispatch
     return doc
 
 
@@ -565,6 +568,58 @@ class CompareBenchTest(unittest.TestCase):
                        beam_optimize_ms=300.0, serving=serving_block()),
         )
         self.assertEqual(self.run_main(old, dropped, 0.15), 1)
+
+    def test_older_v9_schema_baseline_is_graceful_for_v10(self):
+        # v9: no scenario_optimize_ms dict, no dispatch_hits block — the
+        # first v10 run must compare cleanly and still gate the search
+        # pair against the v9 baseline.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, schema="astra-hotpath-v9", search_cps=100.0,
+                       beam_optimize_ms=300.0, serving=serving_block(),
+                       warm_optimize_ms=50.0),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0, schema="astra-hotpath-v10", search_cps=101.0,
+                       beam_optimize_ms=299.0, serving=serving_block(),
+                       warm_optimize_ms=51.0,
+                       scenario_optimize_ms={"decode": 90.0,
+                                             "prefill": 160.0},
+                       dispatch={"silu_and_mul": {"decode": 80,
+                                                  "prefill": 40}}),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
+        dropped = self.write(
+            "dropped.json",
+            bench_json(1.0, schema="astra-hotpath-v10", search_cps=60.0,
+                       beam_optimize_ms=300.0, serving=serving_block(),
+                       warm_optimize_ms=51.0,
+                       scenario_optimize_ms={"decode": 90.0}),
+        )
+        self.assertEqual(self.run_main(old, dropped, 0.15), 1)
+
+    def test_scenario_and_dispatch_fields_are_informational_only(self):
+        # Wild swings in per-scenario medians and dispatch hit counts —
+        # including buckets appearing/vanishing between runs — must
+        # neither gate nor crash; they track catalog growth and the
+        # bench's request mix, not a regression axis.
+        old = self.write(
+            "old.json",
+            bench_json(1.0, scenario_optimize_ms={"decode": 50.0},
+                       dispatch={"silu_and_mul": {"decode": 120,
+                                                  "prefill": 0}}),
+        )
+        new = self.write(
+            "new.json",
+            bench_json(1.0,
+                       scenario_optimize_ms={"decode": 500.0,
+                                             "prefill": 900.0},
+                       dispatch={"silu_and_mul": {"decode": 0,
+                                                  "prefill": 120},
+                                 "softmax": {"decode": 60, "prefill": 60}}),
+        )
+        self.assertEqual(self.run_main(old, new, 0.15), 0)
 
     def test_older_v3_schema_baseline_is_graceful(self):
         # v3: grid_parallel fields present, zero-copy fields and
